@@ -1,0 +1,55 @@
+//! Quickstart: the two ways to run row-wise top-k.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Library call — `rowwise_topk` on a matrix (pure Rust, no
+//!    artifacts needed).
+//! 2. Service call — `TopKService` routes to the AOT-compiled Pallas
+//!    kernel through PJRT when `artifacts/` exists, with transparent
+//!    CPU fallback otherwise.
+
+use rtopk::config::ServeConfig;
+use rtopk::coordinator::TopKService;
+use rtopk::topk::verify::approx_metrics;
+use rtopk::topk::{rowwise_topk, Mode};
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. library call ----
+    let mut rng = Rng::seed_from(42);
+    let x = RowMatrix::random_normal(8, 16, &mut rng);
+    let res = rowwise_topk(&x, 4, Mode::EXACT);
+    println!("row 0          : {:?}", &x.row(0).iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>());
+    println!("top-4 values   : {:?}", res.row_values(0));
+    println!("top-4 indices  : {:?}", res.row_indices(0));
+
+    // early stopping: approximate but fast — check the quality
+    let big = RowMatrix::random_normal(4096, 256, &mut rng);
+    for it in [2, 4, 8] {
+        let es = rowwise_topk(&big, 32, Mode::EarlyStop { max_iter: it });
+        let m = approx_metrics(&big, &es);
+        println!("early-stop max_iter={it}: hit rate {:.1}%  E1 {:.2}%", m.hit * 100.0, m.e1 * 100.0);
+    }
+
+    // ---- 2. service call ----
+    let cfg = ServeConfig::default();
+    let svc = if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\nstarting service with PJRT artifacts...");
+        TopKService::start(&cfg)?
+    } else {
+        println!("\nartifacts/ missing -> CPU-only service (run `make artifacts` for PJRT)");
+        TopKService::cpu_only(&cfg)?
+    };
+    println!("compiled variants: {:?}", svc.variants());
+    let req = RowMatrix::random_normal(2000, 256, &mut rng);
+    let out = svc.submit(req, 32, Mode::EarlyStop { max_iter: 4 })?;
+    println!("service returned {} rows x k={}", out.rows, out.k);
+    let s = svc.stats();
+    println!(
+        "stats: {} requests, {} rows, p50 {:.0} us (pjrt batches {}, cpu batches {})",
+        s.requests, s.rows, s.p50_us, s.pjrt_batches, s.cpu_batches
+    );
+    svc.shutdown();
+    Ok(())
+}

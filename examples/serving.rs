@@ -1,0 +1,78 @@
+//! Serving demo: concurrent clients push row-wise top-k requests of
+//! mixed shapes through the TopKService; reports throughput and
+//! latency percentiles — the paper's "row-wise top-k as a service for
+//! GNN training" scenario under load.
+//!
+//!   cargo run --release --example serving
+//!   RTOPK_CLIENTS=8 RTOPK_REQS=40 cargo run --release --example serving
+
+use rtopk::config::ServeConfig;
+use rtopk::coordinator::TopKService;
+use rtopk::topk::types::Mode;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let clients: usize = std::env::var("RTOPK_CLIENTS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let reqs: usize = std::env::var("RTOPK_REQS")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(25);
+
+    let cfg = ServeConfig { workers: 2, ..Default::default() };
+    let svc = if std::path::Path::new("artifacts/manifest.json").exists() {
+        TopKService::start(&cfg)?
+    } else {
+        println!("(artifacts missing; CPU-only service)");
+        TopKService::cpu_only(&cfg)?
+    };
+    let svc = Arc::new(svc);
+    println!("service up; {clients} clients x {reqs} requests each");
+
+    let t0 = Instant::now();
+    let mut total_rows = 0usize;
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(1000 + c as u64);
+                let mut rows = 0usize;
+                for i in 0..reqs {
+                    // mixed workload: mostly the routed (256, 32) shape,
+                    // some odd shapes that exercise the CPU fallback
+                    let (n, m, k, mode) = if i % 5 == 4 {
+                        (200 + rng.index(200), 100, 10, Mode::EXACT)
+                    } else {
+                        (512 + rng.index(1024), 256, 32,
+                         Mode::EarlyStop { max_iter: 4 })
+                    };
+                    let x = RowMatrix::random_normal(n, m, &mut rng);
+                    rows += n;
+                    svc.submit(x, k, mode).expect("request failed");
+                }
+                rows
+            })
+        })
+        .collect();
+    for t in threads {
+        total_rows += t.join().unwrap();
+    }
+    let dt = t0.elapsed();
+    let s = svc.stats();
+    println!(
+        "\n{} requests / {total_rows} rows in {:.2}s -> {:.2} Mrows/s",
+        s.requests,
+        dt.as_secs_f64(),
+        total_rows as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "latency us: p50={:.0} p95={:.0} p99={:.0} max={:.0}",
+        s.p50_us, s.p95_us, s.p99_us, s.max_us
+    );
+    println!(
+        "batches: {} total ({} pjrt, {} cpu), errors {}",
+        s.batches, s.pjrt_batches, s.cpu_batches, s.errors
+    );
+    Ok(())
+}

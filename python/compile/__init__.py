@@ -1,0 +1,5 @@
+"""Build-time Python: L1 Pallas kernels + L2 JAX models + AOT lowering.
+
+Never imported on the request path — `make artifacts` runs this once and
+the Rust binary is self-contained afterwards.
+"""

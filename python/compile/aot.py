@@ -1,0 +1,239 @@
+"""AOT driver: lower every kernel/model variant to HLO text + manifest.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs (all under ``artifacts/``):
+
+  * ``<name>.hlo.txt``       one module per variant, lowered with
+                             ``return_tuple=True`` (Rust unwraps tuples)
+  * ``manifest.json``        every artifact's inputs/outputs (shape,
+                             dtype) plus domain metadata (k, mode,
+                             max_iter, dataset spec, param names...) —
+                             the Rust runtime is entirely manifest-driven.
+
+Variant sets:
+
+  * service top-k tiles: ``rtopk_<R>x<M>_k<K>_<mode>`` used by the Rust
+    TopKService (router picks the variant, batcher pads rows to R).
+  * train/eval steps: ``train_<tag>`` / ``eval_<tag>`` per ModelSpec.
+
+``ARTIFACT_SET=quick|default|full`` (env) controls how many variants are
+built; the Makefile re-runs this only when compile/ sources change.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import datasets, model
+from .kernels import rtopk
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct | jax.Array) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(name: str, fn, example_args, meta: dict, out_dir: str,
+                manifest: dict) -> None:
+    """Lower ``fn(*example_args)`` and append a manifest entry."""
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *example_args)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    manifest["artifacts"][name] = {
+        "path": path,
+        "inputs": [_spec_json(a) for a in example_args],
+        "outputs": [_spec_json(a) for a in out_avals],
+        "meta": meta,
+    }
+    print(f"  lowered {name:48s} ({len(text)/1e3:8.1f} kB, "
+          f"{time.time()-t0:5.1f}s)")
+
+
+# ---------------------------------------------------------------------------
+# Service top-k tiles
+# ---------------------------------------------------------------------------
+
+# (rows-per-tile, M, k) tiles the TopKService routes to. R=1024 amortizes
+# PJRT dispatch; the batcher pads the tail tile.
+QUICK_TILES = [(1024, 256, 32)]
+DEFAULT_TILES = [
+    (1024, 256, 16),
+    (1024, 256, 32),
+    (1024, 256, 64),
+    (1024, 512, 32),
+    (1024, 768, 32),
+]
+# modes per tile: exact (paper's eps=1e-16 "no early stopping") + es4/es8
+SERVICE_MODES = [("exact", 0), ("es", 4), ("es", 8)]
+
+
+def service_variants(tiles):
+    for (r, m, k) in tiles:
+        for kind, it in SERVICE_MODES:
+            mode = "exact" if kind == "exact" else "early_stop"
+            tag = "exact" if kind == "exact" else f"es{it}"
+            name = f"rtopk_{r}x{m}_k{k}_{tag}"
+
+            def fn(x, *, _m=mode, _it=it, _k=k):
+                return rtopk(x, _k, mode=_m, max_iter=_it,
+                             eps_rel=1e-16, interpret=True)
+
+            example = [jax.ShapeDtypeStruct((r, m), jnp.float32)]
+            meta = {
+                "kind": "rtopk_tile",
+                "rows": r,
+                "m": m,
+                "k": k,
+                "mode": mode,
+                "max_iter": it,
+                "eps_rel": 1e-16,
+            }
+            yield name, fn, example, meta
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps
+# ---------------------------------------------------------------------------
+
+
+def model_specs(artifact_set: str) -> list[model.ModelSpec]:
+    """Which ModelSpecs to bake, per artifact set.
+
+    quick:   gcn on tiny-sim (tests / CI)
+    default: quick + all three models on flickr-sim (exact + es4) + gcn on
+             every dataset (es4) — covers the e2e example and Fig 5 subset.
+    full:    default + es2..es8 sweep for Fig 5's x-axis on flickr-sim
+             and products-sim, all models.
+    """
+    specs: list[model.ModelSpec] = []
+
+    def add(m, d, mode, it=4, impl="rtopk"):
+        specs.append(model.ModelSpec(model=m, dataset=d, topk_mode=mode,
+                                     max_iter=it, topk_impl=impl))
+
+    add("gcn", "tiny-sim", "exact")
+    add("gcn", "tiny-sim", "early_stop", 4)
+    add("gcn", "tiny-sim", "exact", impl="sort")
+    if artifact_set == "quick":
+        return specs
+    for m in model.MODELS:
+        add(m, "flickr-sim", "exact")
+        add(m, "flickr-sim", "early_stop", 4)
+        add(m, "flickr-sim", "exact", impl="sort")  # Fig 5 baseline
+    for d in ("yelp-sim", "reddit-sim", "products-sim"):
+        add("gcn", d, "exact")
+        add("gcn", d, "early_stop", 4)
+        add("gcn", d, "exact", impl="sort")
+    if artifact_set == "default":
+        return specs
+    for m in model.MODELS:
+        for d in ("flickr-sim", "products-sim"):
+            for it in (2, 3, 5, 6, 7, 8):
+                add(m, d, "early_stop", it)
+    for m in ("sage", "gin"):
+        for d in ("yelp-sim", "reddit-sim"):
+            add(m, d, "exact")
+            add(m, d, "early_stop", 4)
+    return specs
+
+
+def model_variants(artifact_set: str):
+    seen = set()
+    for spec in model_specs(artifact_set):
+        tag = spec.tag()
+        if tag in seen:
+            continue
+        seen.add(tag)
+        g = spec.graph
+        meta_common = {
+            "model": spec.model,
+            "dataset": spec.dataset,
+            "hidden": spec.hidden,
+            "k": spec.k,
+            "layers": spec.layers,
+            "topk_mode": spec.topk_mode,
+            "max_iter": spec.max_iter,
+            "lr": spec.lr,
+            "momentum": spec.momentum,
+            "num_nodes": g.num_nodes,
+            "num_edges": g.num_edges,
+            "feat_dim": g.feat_dim,
+            "num_classes": g.num_classes,
+            "param_names": [n for n, _ in model.param_shapes(spec)],
+            "param_shapes": [list(s) for _, s in model.param_shapes(spec)],
+        }
+        fn, example = model.make_train_fn(spec)
+        yield (f"train_{tag}", fn, example,
+               {"kind": "train_step", **meta_common})
+        fn, example = model.make_eval_fn(spec)
+        yield (f"eval_{tag}", fn, example,
+               {"kind": "eval_step", **meta_common})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--set",
+        default=os.environ.get("ARTIFACT_SET", "default"),
+        choices=("quick", "default", "full"),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {
+        "version": 1,
+        "artifact_set": args.set,
+        "datasets": {
+            s.name: {
+                "num_nodes": s.num_nodes,
+                "num_edges": s.num_edges,
+                "avg_degree": s.avg_degree,
+                "feat_dim": s.feat_dim,
+                "num_classes": s.num_classes,
+            }
+            for s in datasets.SPECS.values()
+        },
+        "artifacts": {},
+    }
+    tiles = QUICK_TILES if args.set == "quick" else DEFAULT_TILES
+    t0 = time.time()
+    for name, fn, example, meta in service_variants(tiles):
+        lower_entry(name, fn, example, meta, args.out, manifest)
+    for name, fn, example, meta in model_variants(args.set):
+        lower_entry(name, fn, example, meta, args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts "
+          f"in {time.time()-t0:.1f}s -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

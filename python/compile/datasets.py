@@ -1,0 +1,72 @@
+"""Shape specifications for the simulated graph datasets.
+
+The paper evaluates MaxK-GNN on Flickr, Yelp, Reddit and Ogbn-products
+(89k - 2.4M nodes). Those datasets and the A6000 testbed are not
+available here, so each is replaced by a *-sim dataset: a synthetic
+SBM-style labeled graph whose (nodes, avg-degree, feature-dim, classes)
+are scaled to this single-core testbed while keeping the ratios that
+drive the experiments (top-k time share, accuracy stability under
+approximate top-k). See DESIGN.md §6.
+
+Only the *shapes* defined here are baked into the AOT artifacts; the
+actual graphs are generated at runtime by the Rust `graph` module
+(`rust/src/graph/datasets.rs` mirrors these specs exactly — keep the two
+files in sync, both cite this table).
+
+| name          | stands for    | nodes  | avg deg | feat | classes |
+|---------------|---------------|--------|---------|------|---------|
+| flickr-sim    | Flickr        |  2048  |   10    | 128  |  7      |
+| yelp-sim      | Yelp          |  3072  |   16    | 128  | 16      |
+| reddit-sim    | Reddit        |  4096  |   32    | 128  | 16      |
+| products-sim  | Ogbn-products |  5120  |   16    | 100  | 24      |
+| tiny-sim      | (unit tests)  |   256  |    8    |  32  |  4      |
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GraphSpec:
+    """Static shapes of one simulated dataset (AOT contract with Rust)."""
+
+    name: str
+    num_nodes: int
+    avg_degree: int
+    feat_dim: int
+    num_classes: int
+
+    @property
+    def num_edges(self) -> int:
+        """Padded edge count (exact multiple of nodes; pad edges carry w=0)."""
+        return self.num_nodes * self.avg_degree
+
+
+SPECS: dict[str, GraphSpec] = {
+    s.name: s
+    for s in [
+        GraphSpec("tiny-sim", 256, 8, 32, 4),
+        GraphSpec("flickr-sim", 2048, 10, 128, 7),
+        GraphSpec("yelp-sim", 3072, 16, 128, 16),
+        GraphSpec("reddit-sim", 4096, 32, 128, 16),
+        GraphSpec("products-sim", 5120, 16, 100, 24),
+    ]
+}
+
+# Fig. 5 setting: hidden dim M = 256, k = 32, 3 hidden layers.
+HIDDEN_DIM = 256
+TOPK_K = 32
+NUM_LAYERS = 3
+
+
+def get(name: str) -> GraphSpec:
+    try:
+        return SPECS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown dataset {name!r}; known: {sorted(SPECS)}"
+        ) from None
+
+
+__all__ = ["GraphSpec", "SPECS", "get", "HIDDEN_DIM", "TOPK_K", "NUM_LAYERS"]

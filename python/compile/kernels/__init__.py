@@ -1,0 +1,6 @@
+"""L1 Pallas kernels for RTop-K + pure-jnp reference oracles."""
+
+from . import ref
+from .rtopk import maxk, pick_block_rows, rtopk, rtopk_mask
+
+__all__ = ["ref", "rtopk", "rtopk_mask", "maxk", "pick_block_rows"]

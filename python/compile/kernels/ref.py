@@ -1,0 +1,290 @@
+"""Pure-jnp reference oracles for the RTop-K kernels.
+
+This module is the single source of truth for the *semantics* of the
+binary-search row-wise top-k (Algorithm 1 / Algorithm 2 of the paper).
+The Pallas kernel (`rtopk.py`) and the Rust implementation
+(`rust/src/topk/binary_search.rs`) must match these functions decision-
+for-decision in f32 arithmetic:
+
+  * the bracket update uses ``thres = 0.5 * (lo + hi)`` in float32,
+  * the count predicate is ``v >= thres``,
+  * exact mode (Algorithm 1): while ``hi - lo > eps`` with
+    ``eps = eps_rel * max(v)``, break when ``cnt == k``; selection takes
+    the first-k-by-index elements ``>= T1`` and, if fewer than k,
+    supplements with the first elements in ``[T2, T1)``, where
+    ``(T1, T2) = (thres, thres)`` on a ``cnt == k`` exit and
+    ``(hi, lo)`` on a bracket exit (see exact_selection_thresholds),
+  * early-stop mode (Algorithm 2): exactly ``max_iter`` iterations with
+    ``cnt < k -> hi = thres`` else ``lo = thres``; selection takes the
+    first k elements ``>= lo`` (the final min), one pass.
+
+Both selections are expressed here through one unified two-mask ranking,
+which is exactly what the kernel implements (see `rtopk.py`):
+
+  rank(j) = cumsum(v >= thres)[j]                  if v[j] >= thres
+          = cnt1 + cumsum(lo <= v < thres)[j]      otherwise
+  selected(j) = rank(j) <= k
+
+For early stop we pass ``thres = lo`` so the second mask is empty.
+
+Everything here is plain jax.numpy on full arrays (no pallas), so it
+runs anywhere and is independently testable against ``jax.lax.top_k``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Iteration cap for exact mode. The paper's Table 5 shows exits beyond 24
+# iterations are vanishingly rare even for M=8192, eps=0; 64 is a safe cap
+# for float32 brackets (the bracket is halved each step, so 64 halvings
+# exhaust f32 resolution from any initial range).
+EXACT_ITER_CAP = 64
+
+
+class SearchState(NamedTuple):
+    """Final state of the binary-search phase for a batch of rows."""
+
+    lo: jax.Array  # (N,) final lower bracket ("min" in the paper)
+    hi: jax.Array  # (N,) final upper bracket ("max" in the paper)
+    thres: jax.Array  # (N,) last threshold evaluated
+    cnt: jax.Array  # (N,) count of v >= thres at the last evaluation
+    iters: jax.Array  # (N,) number of loop iterations executed (int32)
+
+
+def search_exact(x: jax.Array, k: int, eps_rel: float,
+                 iter_cap: int = EXACT_ITER_CAP) -> SearchState:
+    """Algorithm 1's search loop, vectorized over rows.
+
+    Per row: ``eps = eps_rel * max(v)``; loop while ``hi - lo > eps``,
+    computing ``thres = (lo+hi)/2`` and ``cnt = |{v >= thres}|``; narrow
+    the bracket toward cnt == k and stop early when it hits.
+
+    Rows converge independently (a converged row's state is frozen), which
+    mirrors the per-warp divergent exits of the CUDA kernel.
+    """
+    xf = x.astype(jnp.float32)
+    n, m = xf.shape
+    lo0 = jnp.min(xf, axis=1)
+    hi0 = jnp.max(xf, axis=1)
+    eps = jnp.float32(eps_rel) * hi0  # paper line 3: eps = eps' * max
+    kf = jnp.int32(k)
+
+    def body(_, st):
+        lo, hi, thres, cnt, iters = st
+        active = jnp.logical_and(hi - lo > eps, cnt != kf)
+        t_new = jnp.where(active, jnp.float32(0.5) * (lo + hi), thres)
+        c_new = jnp.where(
+            active,
+            jnp.sum((xf >= t_new[:, None]).astype(jnp.int32), axis=1),
+            cnt,
+        )
+        hi_new = jnp.where(jnp.logical_and(active, c_new < kf), t_new, hi)
+        lo_new = jnp.where(jnp.logical_and(active, c_new > kf), t_new, lo)
+        it_new = iters + active.astype(jnp.int32)
+        return lo_new, hi_new, t_new, c_new, it_new
+
+    # thres starts at lo (count at lo is M by definition); if the loop never
+    # runs (degenerate all-equal row) selection sees thres = lo and picks the
+    # first k elements, which is the only sensible answer for an all-tie row.
+    st0 = (
+        lo0,
+        hi0,
+        lo0,
+        jnp.full((n,), m, jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+    )
+    lo, hi, thres, cnt, iters = jax.lax.fori_loop(0, iter_cap, body, st0)
+    return SearchState(lo, hi, thres, cnt, iters)
+
+
+def search_early_stop(x: jax.Array, k: int, max_iter: int) -> SearchState:
+    """Algorithm 2's search loop: exactly ``max_iter`` iterations.
+
+    Update rule (paper lines 6-10): ``cnt < k -> hi = thres``, else
+    ``lo = thres`` (the >= k branch folds the == case into moving lo).
+    """
+    xf = x.astype(jnp.float32)
+    n, m = xf.shape
+    lo0 = jnp.min(xf, axis=1)
+    hi0 = jnp.max(xf, axis=1)
+    kf = jnp.int32(k)
+
+    def body(_, st):
+        lo, hi, _, _ = st
+        thres = jnp.float32(0.5) * (lo + hi)
+        cnt = jnp.sum((xf >= thres[:, None]).astype(jnp.int32), axis=1)
+        hi_new = jnp.where(cnt < kf, thres, hi)
+        lo_new = jnp.where(cnt >= kf, thres, lo)
+        return lo_new, hi_new, thres, cnt
+
+    st0 = (lo0, hi0, lo0, jnp.full((n,), m, jnp.int32))
+    lo, hi, thres, cnt = jax.lax.fori_loop(0, max_iter, body, st0)
+    return SearchState(lo, hi, thres, cnt,
+                       jnp.full((n,), max_iter, jnp.int32))
+
+
+def select(x: jax.Array, k: int, thres: jax.Array,
+           lo: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Unified two-mask selection (paper's Selecting Stage).
+
+    Primary mask: ``v >= thres`` (first-k by index).  Secondary mask:
+    ``lo <= v < thres`` supplements when the primary yields fewer than k.
+    Pass ``thres = lo`` for early-stop mode (secondary mask empty, one
+    pass over ``v >= min`` exactly as Algorithm 2 line 12).
+
+    Returns ``(values (N,k), indices (N,k) int32, mask (N,M) bool)``.
+    The invariant ``|{v >= lo}| >= k`` holds for both search modes (lo only
+    ever moves to a threshold whose count was >= k), so exactly k elements
+    are always selected.
+    """
+    xf = x.astype(jnp.float32)
+    n, m = xf.shape
+    t = thres[:, None]
+    l = lo[:, None]
+    m1 = xf >= t
+    m2 = jnp.logical_and(xf >= l, xf < t)
+    c1 = jnp.sum(m1.astype(jnp.int32), axis=1, keepdims=True)
+    r1 = jnp.cumsum(m1.astype(jnp.int32), axis=1)
+    r2 = c1 + jnp.cumsum(m2.astype(jnp.int32), axis=1)
+    big = jnp.int32(2 * m + 2)
+    rank = jnp.where(m1, r1, jnp.where(m2, r2, big))
+    sel = rank <= k
+
+    # Compact the <=k selected entries into dense (N, k) outputs with a
+    # one-hot contraction (sort-free, matches the kernel's MXU-friendly
+    # compaction; see DESIGN.md §5).
+    slot = jnp.where(sel, rank - 1, big)  # in [0, k) for selected
+    onehot = (slot[:, :, None] == jnp.arange(k, dtype=jnp.int32)).astype(
+        jnp.float32
+    )
+    vals = jnp.einsum("nm,nmk->nk", xf, onehot)
+    cols = jnp.arange(m, dtype=jnp.float32)[None, :]
+    idx = jnp.einsum("nm,nmk->nk", jnp.broadcast_to(cols, (n, m)), onehot)
+    return vals.astype(x.dtype), idx.astype(jnp.int32), sel
+
+
+def exact_selection_thresholds(st: SearchState, k: int):
+    """Selection thresholds for Algorithm 1's two exit paths.
+
+    * ``cnt == k`` exit: ``thres`` separates exactly the top-k — use it
+      for both masks.
+    * bracket exit (``hi - lo <= eps``): the last midpoint can land
+      exactly *on* a tie value, in which case ``{v >= thres}`` truncated
+      by index would return the wrong multiset. The borderline elements
+      are precisely those in ``[lo, hi)`` (the paper's "located between
+      min and thres"), so select the certain winners with ``hi`` and
+      supplement from ``[lo, hi)``. With a tiny eps the bracket is 1 ulp
+      wide, making this exact; with a loose eps it is the paper's
+      intended controlled approximation.
+    """
+    exact_exit = st.cnt == jnp.int32(k)
+    t1 = jnp.where(exact_exit, st.thres, st.hi)
+    t2 = jnp.where(exact_exit, st.thres, st.lo)
+    return t1, t2
+
+
+def rtopk_exact(x: jax.Array, k: int, eps_rel: float = 1e-16,
+                iter_cap: int = EXACT_ITER_CAP):
+    """Algorithm 1 end-to-end: search + two-mask selection."""
+    st = search_exact(x, k, eps_rel, iter_cap)
+    t1, t2 = exact_selection_thresholds(st, k)
+    return select(x, k, t1, t2)
+
+
+def rtopk_early_stop(x: jax.Array, k: int, max_iter: int):
+    """Algorithm 2 end-to-end: fixed-iteration search + one-pass selection."""
+    st = search_early_stop(x, k, max_iter)
+    return select(x, k, st.lo, st.lo)
+
+
+def rtopk_ref(x: jax.Array, k: int, *, mode: str = "exact",
+              eps_rel: float = 1e-16, max_iter: int = 8):
+    """Dispatch helper mirroring the Pallas kernel's signature."""
+    if mode == "exact":
+        return rtopk_exact(x, k, eps_rel)
+    if mode == "early_stop":
+        return rtopk_early_stop(x, k, max_iter)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Independent ground truth + metrics (used by tests and Table 2 analysis)
+# ---------------------------------------------------------------------------
+
+
+def lax_topk(x: jax.Array, k: int):
+    """The independent oracle: ``jax.lax.top_k`` (sorted descending)."""
+    return jax.lax.top_k(x.astype(jnp.float32), k)
+
+
+def maxk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Exact MaxK mask via top_k: True at the k largest entries per row.
+
+    Ties are broken by index (lowest index wins), matching lax.top_k.
+    Used by the L2 model as the straight-through reference nonlinearity.
+    """
+    _, idx = lax_topk(x, k)
+    n, m = x.shape
+    onehot = jax.nn.one_hot(idx, m, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=1) > 0
+
+
+def earlystop_metrics(x: jax.Array, k: int, max_iter: int):
+    """Table 2 statistics for one batch of rows.
+
+    Returns per-row arrays: E1 = |max_sel - max_opt| / |max_opt|,
+    E2 = |min_sel - min_opt| / |min_opt|, hit = |sel ∩ opt| / k, where
+    "opt" is the exact top-k set and "sel" the early-stopped selection.
+    """
+    vals, idx, _ = rtopk_early_stop(x, k, max_iter)
+    opt_vals, opt_idx = lax_topk(x, k)
+    sel_max = jnp.max(vals, axis=1)
+    sel_min = jnp.min(vals, axis=1)
+    opt_max = opt_vals[:, 0]
+    opt_min = opt_vals[:, -1]
+    e1 = jnp.abs(sel_max - opt_max) / jnp.abs(opt_max)
+    e2 = jnp.abs(sel_min - opt_min) / jnp.abs(opt_min)
+    n, m = x.shape
+    sel_mask = jnp.zeros((n, m), jnp.bool_)
+    sel_mask = sel_mask.at[jnp.arange(n)[:, None], idx].set(True)
+    opt_mask = jnp.zeros((n, m), jnp.bool_)
+    opt_mask = opt_mask.at[jnp.arange(n)[:, None], opt_idx].set(True)
+    hit = jnp.sum(jnp.logical_and(sel_mask, opt_mask), axis=1) / k
+    return e1, e2, hit
+
+
+# ---------------------------------------------------------------------------
+# SpMM reference (substrate for the L2 MaxK-GNN aggregation)
+# ---------------------------------------------------------------------------
+
+
+def spmm_ref(src: jax.Array, dst: jax.Array, w: jax.Array, x: jax.Array,
+             num_nodes: int) -> jax.Array:
+    """Edge-list SpMM: out[d] += w_e * x[s] for every edge e=(s,d).
+
+    Padded edges must carry w == 0 (and any valid src/dst), making them
+    no-ops. This is the jnp oracle for the aggregation op inside the L2
+    models and for the Rust `gnn::spmm` substrate.
+    """
+    gathered = x[src] * w[:, None]
+    return jax.ops.segment_sum(gathered, dst, num_segments=num_nodes)
+
+
+__all__ = [
+    "SearchState",
+    "search_exact",
+    "search_early_stop",
+    "select",
+    "rtopk_exact",
+    "rtopk_early_stop",
+    "rtopk_ref",
+    "lax_topk",
+    "maxk_mask",
+    "earlystop_metrics",
+    "spmm_ref",
+    "EXACT_ITER_CAP",
+]

@@ -1,0 +1,332 @@
+"""Layer-1 Pallas kernel: binary-search row-wise top-k (RTop-K).
+
+TPU adaptation of the paper's warp-per-row CUDA kernel (DESIGN.md §5):
+
+  * CUDA stages one row per warp in shared memory; we stage a *block* of
+    ``block_rows`` rows in VMEM via ``BlockSpec`` and let the VPU reduce
+    across the whole tile at once (min/max/count are ``axis=1``
+    reductions over an (R, M) tile).
+  * The warp's shuffle tree-reductions and ballot/popcnt prefix sums
+    become ``jnp`` reductions and ``cumsum`` over the lane dimension.
+  * The divergent per-warp loop exit becomes a fixed-trip ``fori_loop``
+    with per-row freezing (exact mode) or a hard ``max_iter`` trip count
+    (early-stop mode) — on SIMD hardware a frozen row costs nothing
+    extra, which is exactly why early stopping maps so well to TPU.
+  * The selection compaction (CUDA: ballot+popc then register scatter)
+    is a one-hot contraction ``einsum('rm,rmk->rk')`` feeding the MXU —
+    sort-free, branch-free, static-shape.
+
+The kernel must be lowered with ``interpret=True`` on this CPU testbed:
+real TPU lowering emits a Mosaic custom-call the CPU PJRT plugin cannot
+execute. Numerics are identical either way.
+
+VMEM budget (structural estimate, recorded in EXPERIMENTS.md §Perf):
+the live tile set is x (R*M f32), the one-hot (R*M*k f32 — the dominant
+term), outputs (R*k*2 + R*M). For the default service tile R=256, M=256,
+k=32 that is ~8.6 MB < 16 MB VMEM on a v4 core; ``pick_block_rows``
+shrinks R as M*k grows.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+Mode = Literal["exact", "early_stop"]
+
+# Structural VMEM budget for one grid step (bytes). Used by
+# pick_block_rows; deliberately below the 16MB/core of a TPUv4 to leave
+# headroom for double buffering of the input stream.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def pick_block_rows(m: int, k: int, budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Rows per tile so the live VMEM set fits the budget.
+
+    Dominant buffers per row: one-hot (M*k f32), input (M f32), mask
+    (M f32), outputs (2k f32). Mirrors the paper's occupancy rule
+    ``floor(8192 / M)`` warps per block, with VMEM in place of shared
+    memory.
+    """
+    bytes_per_row = 4 * (m * k + 2 * m + 2 * k)
+    r = max(1, budget // bytes_per_row)
+    # keep tiles sublane-aligned (8) when we can afford it
+    if r >= 8:
+        r = (r // 8) * 8
+    return int(r)
+
+
+def _search_exact_tile(xf, k, eps_rel, iter_cap):
+    """Algorithm 1 search over an (R, M) tile; returns selection
+    thresholds (t2, t1) — ``(thres, thres)`` on a cnt==k exit, ``(lo, hi)``
+    on a bracket exit (tie-safe; see kernels.ref.exact_selection_thresholds).
+    """
+    r, m = xf.shape
+    lo0 = jnp.min(xf, axis=1)
+    hi0 = jnp.max(xf, axis=1)
+    eps = jnp.float32(eps_rel) * hi0
+    kf = jnp.int32(k)
+
+    def body(_, st):
+        lo, hi, thres, cnt = st
+        active = jnp.logical_and(hi - lo > eps, cnt != kf)
+        t_new = jnp.where(active, jnp.float32(0.5) * (lo + hi), thres)
+        c_new = jnp.where(
+            active,
+            jnp.sum((xf >= t_new[:, None]).astype(jnp.int32), axis=1),
+            cnt,
+        )
+        hi_new = jnp.where(jnp.logical_and(active, c_new < kf), t_new, hi)
+        lo_new = jnp.where(jnp.logical_and(active, c_new > kf), t_new, lo)
+        return lo_new, hi_new, t_new, c_new
+
+    st0 = (lo0, hi0, lo0, jnp.full((r,), m, jnp.int32))
+    lo, hi, thres, cnt = jax.lax.fori_loop(0, iter_cap, body, st0)
+    exact_exit = cnt == kf
+    t1 = jnp.where(exact_exit, thres, hi)
+    t2 = jnp.where(exact_exit, thres, lo)
+    return t2, t1
+
+
+def _search_early_stop_tile(xf, k, max_iter):
+    """Algorithm 2 search over an (R, M) tile; returns final lo.
+
+    The fixed-trip loop is unrolled at trace time (max_iter <= 16 in
+    every paper configuration): straight-line HLO fuses into a handful
+    of row-tile passes, whereas a `while` op defeats the old XLA CPU
+    backend's fusion entirely (EXPERIMENTS.md §Perf L1-1).
+    """
+    lo = jnp.min(xf, axis=1)
+    hi = jnp.max(xf, axis=1)
+    kf = jnp.int32(k)
+    for _ in range(max_iter):
+        thres = jnp.float32(0.5) * (lo + hi)
+        cnt = jnp.sum((xf >= thres[:, None]).astype(jnp.int32), axis=1)
+        hi = jnp.where(cnt < kf, thres, hi)
+        lo = jnp.where(cnt >= kf, thres, lo)
+    return lo
+
+
+def _prefix_sum_rows(x: jax.Array) -> jax.Array:
+    """Inclusive per-row prefix sum via log-depth Hillis-Steele shifts.
+
+    `jnp.cumsum` lowers to a full-window `reduce-window` — O(M^2) work
+    per row on the XLA 0.5.1 CPU backend the Rust runtime uses. The
+    log2(M) shifted adds here are exact for the 0/1 integer masks being
+    ranked and lower to plain fusible slice/pad/add HLO
+    (EXPERIMENTS.md §Perf L1-2).
+    """
+    m = x.shape[1]
+    shift = 1
+    while shift < m:
+        x = x + jnp.pad(x[:, : m - shift], ((0, 0), (shift, 0)))
+        shift *= 2
+    return x
+
+
+def _select_tile(xf, k, thres, lo):
+    """Two-mask ranked selection + one-hot compaction over an (R, M) tile."""
+    r, m = xf.shape
+    t = thres[:, None]
+    l = lo[:, None]
+    m1 = xf >= t
+    m2 = jnp.logical_and(xf >= l, xf < t)
+    c1 = jnp.sum(m1.astype(jnp.int32), axis=1, keepdims=True)
+    r1 = _prefix_sum_rows(m1.astype(jnp.int32))
+    r2 = c1 + _prefix_sum_rows(m2.astype(jnp.int32))
+    big = jnp.int32(2 * m + 2)
+    rank = jnp.where(m1, r1, jnp.where(m2, r2, big))
+    sel = rank <= k
+    slot = jnp.where(sel, rank - 1, big)
+    onehot = (slot[:, :, None] == jnp.arange(k, dtype=jnp.int32)).astype(
+        jnp.float32
+    )
+    vals = jnp.einsum("rm,rmk->rk", xf, onehot)
+    cols = jnp.arange(m, dtype=jnp.float32)[None, :]
+    idx = jnp.einsum("rm,rmk->rk", jnp.broadcast_to(cols, (r, m)), onehot)
+    return vals, idx.astype(jnp.int32), sel
+
+
+def _rtopk_kernel(x_ref, vals_ref, idx_ref, mask_ref, *, k: int, mode: str,
+                  eps_rel: float, max_iter: int, iter_cap: int):
+    """Pallas kernel body for one (R, M) tile resident in VMEM."""
+    x = x_ref[...]
+    xf = x.astype(jnp.float32)
+    if mode == "exact":
+        lo, thres = _search_exact_tile(xf, k, eps_rel, iter_cap)
+    else:
+        lo = _search_early_stop_tile(xf, k, max_iter)
+        thres = lo
+    vals, idx, sel = _select_tile(xf, k, thres, lo)
+    vals_ref[...] = vals.astype(x.dtype)
+    idx_ref[...] = idx
+    mask_ref[...] = sel.astype(x.dtype)
+
+
+def rtopk(x: jax.Array, k: int, *, mode: Mode = "exact",
+          eps_rel: float = 1e-16, max_iter: int = 8,
+          iter_cap: int = ref.EXACT_ITER_CAP,
+          block_rows: int | None = None,
+          interpret: bool = True):
+    """Row-wise top-k of ``x`` (N, M): the paper's RTop-K as a Pallas call.
+
+    Args:
+      x: (N, M) float array (f32 or bf16; search runs in f32).
+      k: number of elements to select per row, 1 <= k <= M.
+      mode: ``"exact"`` (Algorithm 1, bracket precision ``eps_rel``) or
+        ``"early_stop"`` (Algorithm 2, hard ``max_iter`` iterations).
+      eps_rel: relative bracket precision for exact mode (paper's eps').
+      max_iter: early-stop iteration budget (paper sweeps 2..8).
+      iter_cap: static trip count bounding exact-mode convergence.
+      block_rows: rows per VMEM tile; default picked by VMEM budget.
+      interpret: must stay True on CPU (Mosaic custom-calls don't run
+        on the CPU PJRT plugin); flip for a real TPU lowering.
+
+    Returns:
+      (values (N, k), indices (N, k) int32, mask (N, M) in x.dtype) —
+      values/indices in ascending index order (unsorted by value, as the
+      paper specifies), mask with exactly k nonzeros per row.
+    """
+    n, m = x.shape
+    if not 1 <= k <= m:
+        raise ValueError(f"k={k} out of range for M={m}")
+    r = block_rows or min(pick_block_rows(m, k), n)
+    pad = (-n) % r
+    if pad:
+        # Padded rows are all-zero; they select their first k lanes and are
+        # sliced off below. Cheap relative to the kernel itself.
+        x = jnp.concatenate([x, jnp.zeros((pad, m), x.dtype)], axis=0)
+    grid = (x.shape[0] // r,)
+
+    kernel = functools.partial(
+        _rtopk_kernel, k=k, mode=mode, eps_rel=eps_rel, max_iter=max_iter,
+        iter_cap=iter_cap,
+    )
+    vals, idx, mask = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, m), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((r, k), lambda i: (i, 0)),
+            pl.BlockSpec((r, k), lambda i: (i, 0)),
+            pl.BlockSpec((r, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], k), x.dtype),
+            jax.ShapeDtypeStruct((x.shape[0], k), jnp.int32),
+            jax.ShapeDtypeStruct((x.shape[0], m), x.dtype),
+        ],
+        interpret=interpret,
+    )(x)
+    if pad:
+        vals, idx, mask = vals[:n], idx[:n], mask[:n]
+    return vals, idx, mask
+
+
+def _rtopk_mask_kernel(x_ref, mask_ref, *, k: int, mode: str, eps_rel: float,
+                       max_iter: int, iter_cap: int):
+    """Mask-only kernel body: search + ranked mask, no compaction.
+
+    The L2 MaxK nonlinearity only needs the selection mask (it multiplies
+    the activations by it), so the one-hot compaction — the dominant VMEM
+    and FLOP cost of the full kernel — is skipped entirely. This is the
+    variant that runs inside every training-step artifact.
+    """
+    x = x_ref[...]
+    xf = x.astype(jnp.float32)
+    if mode == "exact":
+        lo, thres = _search_exact_tile(xf, k, eps_rel, iter_cap)
+    else:
+        lo = _search_early_stop_tile(xf, k, max_iter)
+        thres = lo
+    r, m = xf.shape
+    t = thres[:, None]
+    l = lo[:, None]
+    m1 = xf >= t
+    m2 = jnp.logical_and(xf >= l, xf < t)
+    c1 = jnp.sum(m1.astype(jnp.int32), axis=1, keepdims=True)
+    r1 = _prefix_sum_rows(m1.astype(jnp.int32))
+    r2 = c1 + _prefix_sum_rows(m2.astype(jnp.int32))
+    big = jnp.int32(2 * m + 2)
+    rank = jnp.where(m1, r1, jnp.where(m2, r2, big))
+    mask_ref[...] = (rank <= k).astype(x.dtype)
+
+
+def rtopk_mask(x: jax.Array, k: int, *, mode: Mode = "exact",
+               eps_rel: float = 1e-16, max_iter: int = 8,
+               iter_cap: int = ref.EXACT_ITER_CAP,
+               block_rows: int | None = None,
+               interpret: bool = True) -> jax.Array:
+    """Mask-only RTop-K: (N, M) -> (N, M) mask with k nonzeros per row.
+
+    Cheaper than :func:`rtopk` (no one-hot compaction): VMEM per row is
+    ~3*M f32 instead of ~M*k, so much larger row tiles fit per grid step.
+    """
+    n, m = x.shape
+    if not 1 <= k <= m:
+        raise ValueError(f"k={k} out of range for M={m}")
+    # mask-only rows are ~3*M f32 each
+    budget_rows = max(1, VMEM_BUDGET_BYTES // (4 * 3 * m))
+    if budget_rows >= 8:
+        budget_rows = (budget_rows // 8) * 8
+    r = block_rows or min(budget_rows, n)
+    pad = (-n) % r
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, m), x.dtype)], axis=0)
+    grid = (x.shape[0] // r,)
+    kernel = functools.partial(
+        _rtopk_mask_kernel, k=k, mode=mode, eps_rel=eps_rel,
+        max_iter=max_iter, iter_cap=iter_cap,
+    )
+    mask = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, m), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((r, m), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((x.shape[0], m), x.dtype)],
+        interpret=interpret,
+    )(x)[0]
+    if pad:
+        mask = mask[:n]
+    return mask
+
+
+def maxk(x: jax.Array, k: int, *, mode: Mode = "early_stop",
+         max_iter: int = 8, eps_rel: float = 1e-16,
+         block_rows: int | None = None, interpret: bool = True):
+    """The MaxK nonlinearity: zero out everything but the row-wise top-k.
+
+    Straight-through gradient: d/dx (x * mask) with the mask treated as
+    constant, exactly like ReLU's subgradient — this is what MaxK-GNN
+    trains with. Implemented with ``custom_vjp`` so ``jax.grad`` through
+    a Pallas call is well-defined and cheap (the mask is the residual).
+    """
+
+    @jax.custom_vjp
+    def _maxk(x_):
+        mask = rtopk_mask(x_, k, mode=mode, eps_rel=eps_rel,
+                          max_iter=max_iter, block_rows=block_rows,
+                          interpret=interpret)
+        return x_ * mask
+
+    def fwd(x_):
+        mask = rtopk_mask(x_, k, mode=mode, eps_rel=eps_rel,
+                          max_iter=max_iter, block_rows=block_rows,
+                          interpret=interpret)
+        return x_ * mask, mask
+
+    def bwd(mask, g):
+        return (g * mask,)
+
+    _maxk.defvjp(fwd, bwd)
+    return _maxk(x)
+
+
+__all__ = ["rtopk", "rtopk_mask", "maxk", "pick_block_rows",
+           "VMEM_BUDGET_BYTES"]

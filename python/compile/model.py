@@ -1,0 +1,363 @@
+"""Layer-2 JAX models: MaxK-GNN (GCN / GraphSAGE / GIN).
+
+The paper's Fig. 1 workflow per hidden layer:
+
+    linear  ->  row-wise top-k (MaxK nonlinearity, the L1 kernel)
+            ->  sparse aggregation (SpMM with the top-k-compressed rhs)
+
+Here the aggregation is an edge-list ``segment_sum`` over a padded edge
+list (static shapes for AOT; padded edges carry weight 0), and the MaxK
+nonlinearity is :func:`compile.kernels.maxk` — the Pallas kernel with a
+straight-through gradient — so ``jax.grad`` differentiates the whole
+step and one fused HLO module contains forward + backward + optimizer.
+
+Everything is shaped by ``ModelSpec`` and flattened into a fixed-order
+list of f32 arrays; the Rust runtime round-trips that list through PJRT
+buffer-by-buffer (see artifacts/manifest.json and rust/src/runtime/).
+
+Optimizer: SGD with momentum (lr, mu baked into the artifact). This
+keeps the round-tripped state at one extra array per parameter and is
+sufficient for the synthetic tasks to converge in a few hundred steps.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import datasets
+from .kernels import maxk
+
+MODELS = ("gcn", "sage", "gin")
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """Static configuration of one MaxK-GNN variant (AOT contract)."""
+
+    model: str  # "gcn" | "sage" | "gin"
+    dataset: str  # key into datasets.SPECS
+    hidden: int = datasets.HIDDEN_DIM
+    k: int = datasets.TOPK_K
+    layers: int = datasets.NUM_LAYERS
+    # top-k mode baked into the artifact: "exact" or "early_stop"
+    topk_mode: str = "early_stop"
+    max_iter: int = 4
+    eps_rel: float = 1e-16
+    lr: float = 0.01
+    momentum: float = 0.9
+    # set False to replace MaxK by plain ReLU (ablation baseline)
+    use_maxk: bool = True
+    # "rtopk" = the paper's Pallas kernel; "sort" = lax.top_k (XLA's
+    # sort-based selection — the torch.topk stand-in Fig 5 compares
+    # against)
+    topk_impl: str = "rtopk"
+
+    def __post_init__(self):
+        if self.model not in MODELS:
+            raise ValueError(f"unknown model {self.model!r}")
+        if self.topk_impl not in ("rtopk", "sort"):
+            raise ValueError(f"unknown topk_impl {self.topk_impl!r}")
+        datasets.get(self.dataset)  # validate
+
+    @property
+    def graph(self) -> datasets.GraphSpec:
+        return datasets.get(self.dataset)
+
+    def tag(self) -> str:
+        """Stable artifact name component."""
+        mode = (
+            f"es{self.max_iter}" if self.topk_mode == "early_stop" else "exact"
+        )
+        if self.topk_impl == "sort":
+            mode = "sortk"
+        if not self.use_maxk:
+            mode = "relu"
+        return f"{self.model}_{self.dataset}_h{self.hidden}_k{self.k}_{mode}"
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key, fan_in, fan_out):
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out)).astype(jnp.float32)
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+
+def param_shapes(spec: ModelSpec) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the flat-params ABI shared with Rust.
+
+    GCN   layer: W (in, hidden)
+    SAGE  layer: W_self (in, hidden), W_neigh (in, hidden)
+    GIN   layer: W (in, hidden), W_mlp (hidden, hidden)
+    head: W_out (hidden, classes), b_out (classes,)
+    """
+    g = spec.graph
+    shapes: list[tuple[str, tuple[int, ...]]] = []
+    dim_in = g.feat_dim
+    for layer in range(spec.layers):
+        if spec.model == "gcn":
+            shapes.append((f"l{layer}.w", (dim_in, spec.hidden)))
+        elif spec.model == "sage":
+            shapes.append((f"l{layer}.w_self", (dim_in, spec.hidden)))
+            shapes.append((f"l{layer}.w_neigh", (dim_in, spec.hidden)))
+        else:  # gin
+            shapes.append((f"l{layer}.w", (dim_in, spec.hidden)))
+            shapes.append((f"l{layer}.w_mlp", (spec.hidden, spec.hidden)))
+        shapes.append((f"l{layer}.b", (spec.hidden,)))
+        dim_in = spec.hidden
+    shapes.append(("head.w", (spec.hidden, g.num_classes)))
+    shapes.append(("head.b", (g.num_classes,)))
+    return shapes
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> list[jax.Array]:
+    """Glorot-initialized flat parameter list in `param_shapes` order."""
+    shapes = param_shapes(spec)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    out = []
+    for key, (name, shape) in zip(keys, shapes):
+        if len(shape) == 2:
+            out.append(_glorot(key, *shape))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return out
+
+
+def init_momentum(spec: ModelSpec) -> list[jax.Array]:
+    return [jnp.zeros(s, jnp.float32) for _, s in param_shapes(spec)]
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _aggregate(src, dst, w, x, num_nodes):
+    """Weighted edge-list SpMM (see kernels.ref.spmm_ref)."""
+    return jax.ops.segment_sum(x[src] * w[:, None], dst,
+                               num_segments=num_nodes)
+
+
+def _sort_topk_mask(z: jax.Array, k: int) -> jax.Array:
+    """Top-k mask via a full row sort — the generic sort-based selection
+    baseline. Deliberately built from the classic HLO `sort` op (not
+    `lax.top_k`, whose TopK custom-op text the runtime's xla_extension
+    0.5.1 parser cannot read). Ties break by index, matching lax.top_k.
+    """
+    n, m = z.shape
+    idx = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None, :], (n, m))
+    # sort by descending value (ascending -z), carrying the column index
+    _, si = jax.lax.sort((-z, idx), num_keys=1)
+    top = si[:, :k]  # (n, k) winning columns
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+    mask = jnp.zeros((n, m), z.dtype)
+    return mask.at[rows, top].set(1.0)
+
+
+def _maxk_sort(z: jax.Array, k: int) -> jax.Array:
+    """Sort-based MaxK — the torch.topk stand-in Fig 5's training
+    speed-up is measured against. Same straight-through gradient as the
+    Pallas path."""
+
+    @jax.custom_vjp
+    def _m(z_):
+        return z_ * _sort_topk_mask(z_, k)
+
+    def fwd(z_):
+        mask = _sort_topk_mask(z_, k)
+        return z_ * mask, mask
+
+    def bwd(mask, g):
+        return (g * mask,)
+
+    _m.defvjp(fwd, bwd)
+    return _m(z)
+
+
+def _nonlin(spec: ModelSpec, z: jax.Array) -> jax.Array:
+    """MaxK (the paper's nonlinearity) or ReLU for the ablation baseline."""
+    if not spec.use_maxk:
+        return jax.nn.relu(z)
+    if spec.topk_impl == "sort":
+        return _maxk_sort(z, spec.k)
+    return maxk(
+        z,
+        spec.k,
+        mode=spec.topk_mode,  # type: ignore[arg-type]
+        max_iter=spec.max_iter,
+        eps_rel=spec.eps_rel,
+    )
+
+
+def forward(spec: ModelSpec, params: list[jax.Array], src, dst, w,
+            feats) -> jax.Array:
+    """Logits (N, C) for one MaxK-GNN variant.
+
+    Edge weights ``w`` carry the aggregation semantics the Rust side
+    generated: GCN uses symmetric-norm weights, SAGE mean weights
+    (1/deg_dst), GIN unit weights — so one forward body serves all three
+    with their canonical aggregators.
+    """
+    g = spec.graph
+    h = feats
+    i = 0
+    for layer in range(spec.layers):
+        if spec.model == "gcn":
+            wl = params[i]; i += 1
+            b = params[i]; i += 1
+            z = h @ wl + b
+            z = _nonlin(spec, z)
+            h = _aggregate(src, dst, w, z, g.num_nodes)
+        elif spec.model == "sage":
+            w_self = params[i]; i += 1
+            w_neigh = params[i]; i += 1
+            b = params[i]; i += 1
+            z = _nonlin(spec, h @ w_self + b)
+            agg = _aggregate(src, dst, w, h @ w_neigh, g.num_nodes)
+            h = z + agg
+        else:  # gin: (1 + eps) * z + sum-agg(z), then 1-layer MLP
+            wl = params[i]; i += 1
+            w_mlp = params[i]; i += 1
+            b = params[i]; i += 1
+            z = _nonlin(spec, h @ wl + b)
+            agg = _aggregate(src, dst, w, z, g.num_nodes)
+            h = jax.nn.relu((1.0 + 0.1) * z + agg) @ w_mlp
+    w_out, b_out = params[i], params[i + 1]
+    return h @ w_out + b_out
+
+
+def loss_and_acc(spec: ModelSpec, params, src, dst, w, feats, labels,
+                 mask):
+    """Masked softmax cross-entropy + accuracy over ``mask`` nodes."""
+    logits = forward(spec, params, src, dst, w, feats)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    correct = (jnp.argmax(logits, axis=1) == labels).astype(jnp.float32)
+    acc = jnp.sum(correct * mask) / denom
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the functions that get AOT-lowered)
+# ---------------------------------------------------------------------------
+
+
+def train_step(spec: ModelSpec, params: list[jax.Array],
+               momentum: list[jax.Array], src, dst, w, feats, labels,
+               train_mask):
+    """One SGD-with-momentum step; returns (params', momentum', loss, acc).
+
+    This is the request-path unit: Rust feeds the previous step's output
+    buffers straight back in (device-resident round-trip, no host copies
+    besides the loss/acc scalars it logs).
+    """
+
+    def loss_fn(ps):
+        return loss_and_acc(spec, ps, src, dst, w, feats, labels,
+                            train_mask)
+
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    mu = jnp.float32(spec.momentum)
+    lr = jnp.float32(spec.lr)
+    new_m = [mu * m + g for m, g in zip(momentum, grads)]
+    new_p = [p - lr * m for p, m in zip(params, new_m)]
+    return new_p, new_m, loss, acc
+
+
+def eval_step(spec: ModelSpec, params, src, dst, w, feats, labels,
+              val_mask, test_mask):
+    """Returns (val_loss, val_acc, test_loss, test_acc)."""
+    logits = forward(spec, params, src, dst, w, feats)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    correct = (jnp.argmax(logits, axis=1) == labels).astype(jnp.float32)
+
+    def masked(msk):
+        d = jnp.maximum(jnp.sum(msk), 1.0)
+        return jnp.sum(nll * msk) / d, jnp.sum(correct * msk) / d
+
+    vl, va = masked(val_mask)
+    tl, ta = masked(test_mask)
+    return vl, va, tl, ta
+
+
+def graph_input_specs(spec: ModelSpec):
+    """ShapeDtypeStructs of the graph inputs, in ABI order."""
+    g = spec.graph
+    e = g.num_edges
+    return dict(
+        src=jax.ShapeDtypeStruct((e,), jnp.int32),
+        dst=jax.ShapeDtypeStruct((e,), jnp.int32),
+        w=jax.ShapeDtypeStruct((e,), jnp.float32),
+        feats=jax.ShapeDtypeStruct((g.num_nodes, g.feat_dim), jnp.float32),
+        labels=jax.ShapeDtypeStruct((g.num_nodes,), jnp.int32),
+        mask=jax.ShapeDtypeStruct((g.num_nodes,), jnp.float32),
+    )
+
+
+def make_train_fn(spec: ModelSpec) -> tuple[Callable, list]:
+    """(flat_fn, example_args) for AOT lowering of the train step.
+
+    Flat signature: (p_0..p_P-1, m_0..m_P-1, src, dst, w, feats, labels,
+    train_mask) -> (p'_0..p'_P-1, m'_0..m'_P-1, loss, acc).
+    """
+    shapes = param_shapes(spec)
+    n = len(shapes)
+    gi = graph_input_specs(spec)
+
+    def flat(*args):
+        params = list(args[:n])
+        mom = list(args[n:2 * n])
+        src, dst, w, feats, labels, train_mask = args[2 * n:]
+        new_p, new_m, loss, acc = train_step(spec, params, mom, src, dst,
+                                             w, feats, labels, train_mask)
+        return tuple(new_p) + tuple(new_m) + (loss, acc)
+
+    p_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    example = (p_specs + p_specs
+               + [gi["src"], gi["dst"], gi["w"], gi["feats"], gi["labels"],
+                  gi["mask"]])
+    return flat, example
+
+
+def make_eval_fn(spec: ModelSpec) -> tuple[Callable, list]:
+    """(flat_fn, example_args) for AOT lowering of the eval step."""
+    shapes = param_shapes(spec)
+    n = len(shapes)
+    gi = graph_input_specs(spec)
+
+    def flat(*args):
+        params = list(args[:n])
+        src, dst, w, feats, labels, val_mask, test_mask = args[n:]
+        return eval_step(spec, params, src, dst, w, feats, labels,
+                         val_mask, test_mask)
+
+    p_specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in shapes]
+    example = (p_specs + [gi["src"], gi["dst"], gi["w"], gi["feats"],
+                          gi["labels"], gi["mask"], gi["mask"]])
+    return flat, example
+
+
+__all__ = [
+    "MODELS",
+    "ModelSpec",
+    "param_shapes",
+    "init_params",
+    "init_momentum",
+    "forward",
+    "loss_and_acc",
+    "train_step",
+    "eval_step",
+    "make_train_fn",
+    "make_eval_fn",
+    "graph_input_specs",
+]

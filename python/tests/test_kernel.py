@@ -1,0 +1,284 @@
+"""L1 correctness: Pallas RTop-K kernel vs the pure-jnp oracle.
+
+Three rings of defense:
+
+  1. the reference itself is validated against ``jax.lax.top_k``
+     (independent implementation) — exact mode must return the exact
+     top-k multiset;
+  2. the Pallas kernel must match the reference *bit-for-bit* (same f32
+     bracket arithmetic, same selection ranking) in both modes;
+  3. hypothesis sweeps shapes/dtypes/k/max_iter/block_rows and
+     distributions, checking the structural invariants that must hold
+     for any input (exactly k selected, indices valid and strictly
+     increasing, values gathered from x, mask consistent).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, rtopk, rtopk_mask, maxk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def normal_rows(seed: int, n: int, m: int, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, m)).astype(dtype)
+
+
+def check_invariants(x, k, vals, idx, mask):
+    """Structural invariants independent of search mode."""
+    n, m = x.shape
+    vals = np.asarray(vals)
+    idx = np.asarray(idx)
+    mask = np.asarray(mask)
+    # mask has exactly k nonzeros per row
+    np.testing.assert_array_equal((mask != 0).sum(axis=1), k)
+    # indices valid and unique per row (selection never duplicates).
+    # NOTE: indices are *not* globally sorted — the two-pass selection
+    # emits threshold survivors first (by index), then borderline
+    # supplements (by index), exactly like the paper's selecting stage.
+    assert idx.min() >= 0 and idx.max() < m
+    for r in range(n):
+        assert len(np.unique(idx[r])) == k
+    # values are gathered from x at idx
+    gathered = np.asarray(x)[np.arange(n)[:, None], idx]
+    np.testing.assert_array_equal(vals, gathered.astype(vals.dtype))
+    # mask marks exactly the selected indices
+    sel_from_idx = np.zeros((n, m), bool)
+    sel_from_idx[np.arange(n)[:, None], idx] = True
+    np.testing.assert_array_equal(mask != 0, sel_from_idx)
+
+
+# ---------------------------------------------------------------------------
+# Ring 1: reference vs lax.top_k
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,k", [(7, 32, 4), (32, 256, 16), (5, 64, 64),
+                                   (16, 100, 1), (3, 8, 7)])
+def test_ref_exact_matches_lax_topk(n, m, k):
+    x = normal_rows(42 + n, n, m)
+    vals, idx, mask = ref.rtopk_exact(jnp.asarray(x), k)
+    opt_vals, _ = ref.lax_topk(jnp.asarray(x), k)
+    # same multiset of values (our order is by index, lax's by value)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(vals), axis=1),
+        np.sort(np.asarray(opt_vals), axis=1),
+        rtol=0, atol=0,
+    )
+    check_invariants(x, k, vals, idx, mask)
+
+
+def test_ref_exact_with_ties():
+    # many duplicates around the borderline — the paper's corner case
+    x = np.array(
+        [[1.0] * 8 + [2.0] * 8, [3.0] * 16, [0.0] * 15 + [1.0]],
+        np.float32,
+    )
+    for k in (1, 4, 8, 12, 16):
+        vals, idx, mask = ref.rtopk_exact(jnp.asarray(x), k)
+        opt_vals, _ = ref.lax_topk(jnp.asarray(x), k)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(vals), axis=1),
+            np.sort(np.asarray(opt_vals), axis=1),
+        )
+        check_invariants(x, k, vals, idx, mask)
+
+
+def test_ref_early_stop_invariants_and_hit():
+    x = normal_rows(7, 64, 128)
+    for it in (2, 3, 5, 8):
+        vals, idx, mask = ref.rtopk_early_stop(jnp.asarray(x), 16, it)
+        check_invariants(x, 16, vals, idx, mask)
+        e1, e2, hit = ref.earlystop_metrics(jnp.asarray(x), 16, it)
+        assert float(jnp.mean(hit)) > 0.2
+
+
+def test_ref_early_stop_hit_rate_improves_with_iters():
+    x = normal_rows(11, 256, 256)
+    hits = []
+    for it in (2, 4, 6, 8):
+        _, _, hit = ref.earlystop_metrics(jnp.asarray(x), 32, it)
+        hits.append(float(jnp.mean(hit)))
+    assert hits == sorted(hits), f"hit rate not monotone: {hits}"
+    assert hits[-1] > 0.85  # paper Table 2: 90.19% at max_iter=8, k=32
+
+
+# ---------------------------------------------------------------------------
+# Ring 2: kernel vs reference, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,k", [(16, 64, 8), (33, 256, 32), (8, 128, 128),
+                                   (100, 96, 1), (5, 512, 96)])
+def test_kernel_exact_matches_ref(n, m, k):
+    x = normal_rows(1000 + n, n, m)
+    rv, ri, rm = ref.rtopk_exact(jnp.asarray(x), k)
+    kv, ki, km = rtopk(jnp.asarray(x), k, mode="exact")
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(km) != 0, np.asarray(rm))
+
+
+@pytest.mark.parametrize("max_iter", [1, 2, 4, 8, 13])
+def test_kernel_early_stop_matches_ref(max_iter):
+    x = normal_rows(max_iter, 24, 192)
+    k = 24
+    rv, ri, rm = ref.rtopk_early_stop(jnp.asarray(x), k, max_iter)
+    kv, ki, km = rtopk(jnp.asarray(x), k, mode="early_stop",
+                       max_iter=max_iter)
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(km) != 0, np.asarray(rm))
+
+
+@pytest.mark.parametrize("block_rows", [1, 3, 8, 64])
+def test_kernel_tiling_invariance(block_rows):
+    """Grid decomposition must not change results (rows are independent)."""
+    x = normal_rows(99, 50, 64)
+    base = rtopk(jnp.asarray(x), 8, mode="exact", block_rows=50)
+    tiled = rtopk(jnp.asarray(x), 8, mode="exact", block_rows=block_rows)
+    for a, b in zip(base, tiled):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_eps_precision_modes():
+    """Larger eps_rel exits earlier but still returns exactly k."""
+    x = normal_rows(5, 32, 256)
+    for eps in (0.0, 1e-16, 1e-8, 1e-4, 1e-2):
+        vals, idx, mask = rtopk(jnp.asarray(x), 32, mode="exact",
+                                eps_rel=eps)
+        check_invariants(x, 32, vals, idx, mask)
+
+
+def test_mask_kernel_matches_full_kernel():
+    x = normal_rows(21, 40, 160)
+    for mode, kw in (("exact", {}), ("early_stop", {"max_iter": 3})):
+        m1 = rtopk_mask(jnp.asarray(x), 20, mode=mode, **kw)
+        _, _, m2 = rtopk(jnp.asarray(x), 20, mode=mode, **kw)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+def test_kernel_bf16_input():
+    x = normal_rows(3, 8, 64).astype(jnp.bfloat16)
+    vals, idx, mask = rtopk(x, 8, mode="exact")
+    assert vals.dtype == jnp.bfloat16
+    check_invariants(np.asarray(x, np.float32), 8,
+                     np.asarray(vals, np.float32), idx, mask)
+
+
+def test_kernel_k_equals_m():
+    x = normal_rows(4, 6, 32)
+    vals, idx, mask = rtopk(jnp.asarray(x), 32, mode="exact")
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.tile(np.arange(32), (6, 1)))
+    np.testing.assert_array_equal(np.asarray(vals), x)
+
+
+def test_kernel_rejects_bad_k():
+    x = jnp.zeros((2, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        rtopk(x, 0)
+    with pytest.raises(ValueError):
+        rtopk(x, 9)
+
+
+# ---------------------------------------------------------------------------
+# Ring 3: hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    m=st.sampled_from([8, 32, 100, 256]),
+    kfrac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    dist=st.sampled_from(["normal", "uniform", "lognormal", "negated",
+                          "quantized"]),
+)
+def test_prop_exact_equals_lax_topk(n, m, kfrac, seed, dist):
+    k = max(1, min(m, int(round(kfrac * m))))
+    rng = np.random.default_rng(seed)
+    if dist == "normal":
+        x = rng.standard_normal((n, m))
+    elif dist == "uniform":
+        x = rng.random((n, m)) * 10 - 5
+    elif dist == "lognormal":
+        x = rng.lognormal(size=(n, m))
+    elif dist == "negated":
+        x = -np.abs(rng.standard_normal((n, m)))
+    else:  # heavy ties
+        x = np.round(rng.standard_normal((n, m)) * 2) / 2
+    x = x.astype(np.float32)
+    vals, idx, mask = rtopk(jnp.asarray(x), k, mode="exact")
+    check_invariants(x, k, vals, idx, mask)
+    opt_vals, _ = ref.lax_topk(jnp.asarray(x), k)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(vals), axis=1),
+        np.sort(np.asarray(opt_vals), axis=1),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 24),
+    m=st.sampled_from([16, 64, 256]),
+    kfrac=st.floats(0.05, 1.0),
+    max_iter=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_early_stop_invariants(n, m, kfrac, max_iter, seed):
+    k = max(1, min(m, int(round(kfrac * m))))
+    x = np.random.default_rng(seed).standard_normal((n, m)).astype(np.float32)
+    vals, idx, mask = rtopk(jnp.asarray(x), k, mode="early_stop",
+                            max_iter=max_iter)
+    check_invariants(x, k, vals, idx, mask)
+    # kernel == reference, decision-for-decision
+    rv, ri, _ = ref.rtopk_early_stop(jnp.asarray(x), k, max_iter)
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ri))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 16),
+    m=st.sampled_from([32, 128]),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_maxk_gradient_support(n, m, k, seed):
+    """grad(maxk) is supported exactly on the selection mask."""
+    x = np.random.default_rng(seed).standard_normal((n, m)).astype(np.float32)
+
+    def loss(xx):
+        return jnp.sum(maxk(xx, k, mode="exact") ** 2)
+
+    g = np.asarray(jax.grad(loss)(jnp.asarray(x)))
+    _, _, mask = rtopk(jnp.asarray(x), k, mode="exact")
+    mask = np.asarray(mask) != 0
+    # grad is 2*x on selected entries, 0 elsewhere
+    np.testing.assert_allclose(g[mask], 2 * x[mask], rtol=1e-6)
+    assert (g[~mask] == 0).all()
+
+
+def test_spmm_ref_padded_edges_are_noops():
+    rng = np.random.default_rng(3)
+    n, e, f = 10, 24, 5
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    w[-6:] = 0.0  # padded tail
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    full = ref.spmm_ref(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                        jnp.asarray(x), n)
+    trimmed = ref.spmm_ref(jnp.asarray(src[:-6]), jnp.asarray(dst[:-6]),
+                           jnp.asarray(w[:-6]), jnp.asarray(x), n)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(trimmed),
+                               rtol=1e-6)

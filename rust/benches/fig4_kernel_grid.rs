@@ -1,0 +1,88 @@
+//! Figure 4: kernel execution time over the (N, M, k) grid for RTop-K
+//! with max_iter in 2..8 and no early stopping, vs the RadixSelect
+//! baseline. Two views:
+//!
+//!  1. measured wall time of the CPU engine (this testbed's ground
+//!     truth), and
+//!  2. the A6000 warp-simulator estimate (`simt`), which reproduces the
+//!     paper's GPU-scale numbers from the algorithms' instruction
+//!     streams.
+//!
+//! RTOPK_FULL=1 extends N to 2^20 (needs ~3 GB for M=768).
+
+use rtopk::bench::{time_algo, workload, Table};
+use rtopk::simt::{kernel_time_ms, simulate_radix_row, simulate_rtopk_row, CostModel};
+use rtopk::stats::expected_iterations;
+use rtopk::topk::rowwise::RowAlgo;
+use rtopk::topk::types::Mode;
+
+fn main() {
+    let quick = std::env::var("RTOPK_QUICK").is_ok();
+    let full = std::env::var("RTOPK_FULL").is_ok();
+    let ns: Vec<usize> = if full {
+        vec![1 << 14, 1 << 16, 1 << 18, 1 << 20]
+    } else if quick {
+        vec![1 << 12, 1 << 14]
+    } else {
+        vec![1 << 14]
+    };
+    let ms = [256usize, 512, 768];
+    let ks = [16usize, 32, 64, 96, 128];
+    let iters = [2u32, 4, 8];
+
+    // ---- view 1: measured wall time ----
+    for &n in &ns {
+        for &m in &ms {
+            let mut t = Table::new(
+                &format!("Fig 4 (measured, CPU engine): N=2^{} M={m} — time ms",
+                         n.trailing_zeros()),
+                &["k", "radix", "es2", "es4", "es8", "no-ES", "speedup(no-ES)"],
+            );
+            for &k in &ks {
+                let x = workload(n, m, 0xF16 + (n + m + k) as u64);
+                let base = time_algo(&x, k, RowAlgo::Radix).median_ms();
+                let mut cells = vec![k.to_string(), format!("{base:.2}")];
+                let mut noes = 0.0;
+                for &it in &iters {
+                    let v = time_algo(&x, k, RowAlgo::RTopK(Mode::EarlyStop { max_iter: it }))
+                        .median_ms();
+                    cells.push(format!("{v:.2}"));
+                }
+                let v = time_algo(&x, k, RowAlgo::RTopK(Mode::EXACT)).median_ms();
+                noes = v;
+                cells.push(format!("{v:.2}"));
+                cells.push(format!("{:.2}x", base / noes));
+                t.row(cells);
+            }
+            t.print();
+        }
+    }
+
+    // ---- view 2: A6000 simulator estimate ----
+    let c = CostModel::A6000;
+    for &m in &ms {
+        let mut t = Table::new(
+            &format!("Fig 4 (A6000 simulator): M={m}, N=2^20 — estimated kernel ms"),
+            &["k", "torch.topk", "es2", "es4", "es8", "no-ES", "speedup(no-ES)"],
+        );
+        let n = 1 << 20;
+        for &k in &ks {
+            let radix = simulate_radix_row(m, k, &c);
+            let tr = kernel_time_ms(n, &radix, CostModel::A6000_SMS, CostModel::A6000_CLOCK_GHZ);
+            let mut cells = vec![k.to_string(), format!("{tr:.3}")];
+            let mut t_noes = 0.0;
+            for &it in &[2u32, 4, 8] {
+                let est = simulate_rtopk_row(m, k, it as f64, &c);
+                cells.push(format!("{:.3}", kernel_time_ms(n, &est, CostModel::A6000_SMS, CostModel::A6000_CLOCK_GHZ)));
+            }
+            let e_iters = expected_iterations(m, k.min(m - 1));
+            let est = simulate_rtopk_row(m, k, e_iters, &c);
+            t_noes = kernel_time_ms(n, &est, CostModel::A6000_SMS, CostModel::A6000_CLOCK_GHZ);
+            cells.push(format!("{t_noes:.3}"));
+            cells.push(format!("{:.2}x", tr / t_noes));
+            t.row(cells);
+        }
+        t.print();
+    }
+    println!("\npaper (Fig 4): avg no-ES speedup 8.88x at M=256, 7.27x at M=512, 5.72x at M=768");
+}

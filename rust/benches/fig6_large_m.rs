@@ -1,0 +1,53 @@
+//! Figure 6 (Appendix B): RTop-K speed-up vs RadixSelect as the vector
+//! size M grows to 8192 — the crossover analysis. Averaged over
+//! k in {64, 128, 256, 512} with k < M, N = 65536 (paper's setting;
+//! reduced when RTOPK_QUICK=1).
+//!
+//! Both views printed: measured CPU wall time and the A6000 simulator
+//! (the simulator exhibits the paper's crossover where torch.topk's
+//! block-per-row amortization catches up).
+
+use rtopk::bench::{time_algo, workload, Table};
+use rtopk::simt::{kernel_time_ms, simulate_radix_row, simulate_rtopk_row, CostModel};
+use rtopk::stats::expected_iterations;
+use rtopk::topk::rowwise::RowAlgo;
+use rtopk::topk::types::Mode;
+
+fn main() {
+    let quick = std::env::var("RTOPK_QUICK").is_ok();
+    let n = if quick { 1 << 12 } else { 1 << 14 };
+    let ms = [256usize, 512, 1024, 2048, 3072, 4096, 6144, 8192];
+    let ks = [64usize, 128, 256, 512];
+
+    let mut t = Table::new(
+        &format!("Fig 6: no-ES speed-up vs RadixSelect by M (N={n}, k avg over {ks:?}, k<M)"),
+        &["M", "measured CPU", "A6000 simulator"],
+    );
+    let c = CostModel::A6000;
+    for &m in &ms {
+        let valid: Vec<usize> = ks.iter().cloned().filter(|&k| k < m).collect();
+        let mut cpu_acc = 0.0;
+        let mut sim_acc = 0.0;
+        for &k in &valid {
+            let x = workload(n, m, 0xF160 + (m + k) as u64);
+            let base = time_algo(&x, k, RowAlgo::Radix).median_us();
+            let ours = time_algo(&x, k, RowAlgo::RTopK(Mode::EXACT)).median_us();
+            cpu_acc += base / ours;
+
+            let e_it = expected_iterations(m, k);
+            let sim_r = kernel_time_ms(n, &simulate_rtopk_row(m, k, e_it, &c),
+                                       CostModel::A6000_SMS, CostModel::A6000_CLOCK_GHZ);
+            let sim_b = kernel_time_ms(n, &simulate_radix_row(m, k, &c),
+                                       CostModel::A6000_SMS, CostModel::A6000_CLOCK_GHZ);
+            sim_acc += sim_b / sim_r;
+        }
+        t.row(vec![
+            m.to_string(),
+            format!("{:.2}x", cpu_acc / valid.len() as f64),
+            format!("{:.2}x", sim_acc / valid.len() as f64),
+        ]);
+    }
+    t.print();
+    println!("\npaper (Fig 6): 4.9-12.5x below M=1280; 2.3-4.9x to 3072; 1.1-2.3x to 6144;\n\
+              slower than PyTorch beyond ~6144.");
+}

@@ -1,0 +1,39 @@
+//! Table 1: cumulative percentage of exit iterations for Algorithm 1
+//! (eps = 1e-4, M = 256, k in {16, 32, 64, 96, 128}, 1e5 trials each).
+//!
+//!   cargo bench --bench table1_exit_iters          (paper-scale trials)
+//!   RTOPK_QUICK=1 cargo bench --bench table1_exit_iters   (1e4 trials)
+
+use rtopk::bench::{exit_iteration_histogram, Table};
+
+fn main() {
+    let quick = std::env::var("RTOPK_QUICK").is_ok();
+    let trials = if quick { 10_000 } else { 30_000 };
+    let m = 256;
+    let ks = [16usize, 32, 64, 96, 128];
+    let eps = 1e-4f32;
+
+    let hists: Vec<_> = ks
+        .iter()
+        .map(|&k| exit_iteration_histogram(m, k, eps, trials, 0x7AB1E1 + k as u64))
+        .collect();
+
+    let mut t = Table::new(
+        &format!("Table 1: cumulative % of exit iterations (eps=1e-4, M={m}, {trials} trials)"),
+        &["Iteration", "k=16", "k=32", "k=64", "k=96", "k=128"],
+    );
+    for it in 3..=16 {
+        let mut row = vec![it.to_string()];
+        for h in &hists {
+            row.push(format!("{:.2}%", h.cdf_at(it) * 100.0));
+        }
+        t.row(row);
+    }
+    let mut avg = vec!["Average Exit".to_string()];
+    for h in &hists {
+        avg.push(format!("{:.2}", h.mean()));
+    }
+    t.row(avg);
+    t.print();
+    println!("\npaper (Table 1) average exit: k=16: 7.60  k=32: 8.29  k=64: 8.95  k=96: 9.52  k=128: 9.60");
+}

@@ -1,0 +1,70 @@
+//! Table 4: share of MaxK-GNN training time spent on row-wise top-k,
+//! per model/dataset, plus baseline test accuracy.
+//!
+//! Timing side: the CPU GNN substrate executes one training step's
+//! operator stream (linear -> top-k -> compressed SpMM per layer, head,
+//! 2x-forward backward convention) with the *sort-based* top-k — the
+//! operator MaxK-GNN ships without RTop-K — and reports top-k's share.
+//! Accuracy side: the PJRT-trained exact-top-k model's test accuracy
+//! (requires `make artifacts`; skipped otherwise).
+
+use rtopk::bench::Table;
+use rtopk::coordinator::Trainer;
+use rtopk::gnn::profile::profile_train_step;
+use rtopk::graph::datasets;
+use rtopk::runtime::executor::Executor;
+use rtopk::topk::rowwise::RowAlgo;
+
+fn main() {
+    let quick = std::env::var("RTOPK_QUICK").is_ok();
+    let datasets_list = ["flickr-sim", "yelp-sim", "reddit-sim", "products-sim"];
+    let hidden = 256;
+    let k = 32;
+    let layers = 3;
+
+    let mut t = Table::new(
+        "Table 4: top-k share of training-step time (sort-based top-k, CPU substrate)",
+        &["Graph", "#Nodes", "linear ms", "topk ms", "spmm ms", "Top-k Prop %"],
+    );
+    for name in datasets_list {
+        let g = datasets::build(name, 42).unwrap();
+        let p = profile_train_step(&g, hidden, k, layers, RowAlgo::Sort);
+        t.row(vec![
+            name.to_string(),
+            g.num_nodes.to_string(),
+            format!("{:.1}", p.linear_s * 1e3),
+            format!("{:.1}", p.topk_s * 1e3),
+            format!("{:.1}", p.spmm_s * 1e3),
+            format!("{:.2}", p.topk_fraction() * 100.0),
+        ]);
+    }
+    t.print();
+    println!("\npaper (Table 4): Top-k Prop 11.6% (Reddit) .. 26.9% (Flickr)");
+
+    // accuracy column (PJRT training, exact top-k artifacts)
+    let have = std::path::Path::new("artifacts/manifest.json").exists();
+    if !have {
+        println!("\n(accuracy column skipped: run `make artifacts`)");
+        return;
+    }
+    let steps = if quick { 20 } else { 40 };
+    let exec = Executor::spawn("artifacts").unwrap();
+    let mut t = Table::new(
+        &format!("Table 4 (cont.): baseline GCN test accuracy after {steps} steps"),
+        &["Graph", "test acc %"],
+    );
+    for name in datasets_list {
+        let tag = format!("gcn_{name}_h256_k32_exact");
+        match Trainer::new(exec.handle(), &tag, 42) {
+            Ok(mut tr) => {
+                let out = tr.train(steps, 0, |_, _, _| {}).unwrap();
+                t.row(vec![
+                    name.to_string(),
+                    format!("{:.2}", out.final_test_acc * 100.0),
+                ]);
+            }
+            Err(_) => t.row(vec![name.to_string(), "n/a (artifact set)".into()]),
+        }
+    }
+    t.print();
+}

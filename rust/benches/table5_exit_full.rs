@@ -1,0 +1,62 @@
+//! Table 5: cumulative exit-iteration distribution of Algorithm 1 at
+//! eps = 0 across (M, k) pairs, with the Appendix-A analytic E(n)
+//! (Eq. 4) on the bottom rows — measurement vs theory.
+
+use rtopk::bench::{exit_iteration_histogram, Table};
+use rtopk::stats::expected_iterations;
+
+fn main() {
+    let quick = std::env::var("RTOPK_QUICK").is_ok();
+    let trials = if quick { 2_000 } else { 4_000 };
+    let cases: &[(usize, usize)] = &[
+        (256, 64), (256, 128),
+        (1024, 64), (1024, 128), (1024, 256), (1024, 512),
+        (4096, 64), (4096, 128), (4096, 256), (4096, 512),
+        (8192, 64), (8192, 128), (8192, 256), (8192, 512),
+    ];
+    // paper's measured Avg / E(n) rows for comparison
+    let paper_avg = [8.72, 9.0, 9.53, 10.31, 10.87, 11.24, 10.07, 10.95,
+                     11.73, 12.46, 10.3, 11.14, 12.02, 12.8];
+    let paper_en = [9.08, 9.41, 9.87, 10.62, 11.24, 11.57, 10.36, 11.2,
+                    12.0, 12.75, 10.54, 11.41, 12.26, 13.06];
+
+    let mut header = vec!["Iters".to_string()];
+    for (m, k) in cases {
+        header.push(format!("{m}/{k}"));
+    }
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Table 5: cumulative exit % (eps=0, {trials} trials per case)"),
+        &hrefs,
+    );
+    let hists: Vec<_> = cases
+        .iter()
+        .map(|&(m, k)| exit_iteration_histogram(m, k, 0.0, trials, (m * 31 + k) as u64))
+        .collect();
+    for it in (4..=24).step_by(2) {
+        let mut row = vec![it.to_string()];
+        for h in &hists {
+            row.push(format!("{:.1}", h.cdf_at(it) * 100.0));
+        }
+        t.row(row);
+    }
+    let mut avg = vec!["Avg".to_string()];
+    for h in &hists {
+        avg.push(format!("{:.2}", h.mean()));
+    }
+    t.row(avg);
+    let mut en = vec!["E(n)".to_string()];
+    for &(m, k) in cases {
+        en.push(format!("{:.2}", expected_iterations(m, k)));
+    }
+    t.row(en);
+    let mut pa = vec!["paperAvg".to_string()];
+    pa.extend(paper_avg.iter().map(|v| format!("{v:.2}")));
+    t.row(pa);
+    let mut pe = vec!["paperE(n)".to_string()];
+    pe.extend(paper_en.iter().map(|v| format!("{v:.2}")));
+    t.row(pe);
+    t.print();
+    println!("\nE(n) slightly exceeds the measured average (the paper observes the same:\n\
+              the D ~ 2 sigma sqrt(2 ln M) initial-bracket estimate overshoots at finite M).");
+}

@@ -1,0 +1,163 @@
+//! Bench harness helpers shared by `rust/benches/*` (criterion is not in
+//! the vendored crate set; each bench is a `harness = false` binary that
+//! prints the corresponding paper table/figure).
+
+use crate::stats::summary::IntHistogram;
+use crate::topk::binary_search::{search_early_stop, search_exact};
+use crate::topk::rowwise::{rowwise_topk_with, RowAlgo};
+use crate::topk::types::Mode;
+use crate::util::matrix::RowMatrix;
+use crate::util::rng::Rng;
+use crate::util::timer::{time_adaptive, Timing};
+use std::time::Duration;
+
+/// Standard workload: N x M i.i.d. standard-normal rows (the paper's
+/// evaluation distribution throughout).
+pub fn workload(n: usize, m: usize, seed: u64) -> RowMatrix {
+    let mut rng = Rng::seed_from(seed);
+    RowMatrix::random_normal(n, m, &mut rng)
+}
+
+/// Time one row-wise top-k configuration on a workload.
+pub fn time_algo(x: &RowMatrix, k: usize, algo: RowAlgo) -> Timing {
+    time_adaptive(3, Duration::from_millis(300), || {
+        std::hint::black_box(rowwise_topk_with(x, k, algo));
+    })
+}
+
+/// Exit-iteration histogram for Algorithm 1 over `trials` fresh rows
+/// (Tables 1 and 5). Returns the histogram of `iters` at exit.
+pub fn exit_iteration_histogram(m: usize, k: usize, eps_rel: f32,
+                                trials: usize, seed: u64) -> IntHistogram {
+    let mut rng = Rng::seed_from(seed);
+    let mut h = IntHistogram::new();
+    let mut row = vec![0f32; m];
+    for _ in 0..trials {
+        rng.fill_normal(&mut row);
+        let s = search_exact(&row, k, eps_rel, 64);
+        h.record(s.iters as usize);
+    }
+    h
+}
+
+/// Markdown-ish table printer: header + aligned rows.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Early-stop trailer used by several benches: average exit iterations
+/// under Algorithm 2 is exactly max_iter (hard bound) — helper asserts
+/// the invariant in debug harnesses.
+pub fn early_stop_iters(m: usize, k: usize, max_iter: u32, seed: u64) -> u32 {
+    let mut rng = Rng::seed_from(seed);
+    let mut row = vec![0f32; m];
+    rng.fill_normal(&mut row);
+    search_early_stop(&row, k, max_iter).iters
+}
+
+/// Parse a mode string ("exact", "eps1e-4", "es4") for bench CLIs.
+pub fn parse_mode(s: &str) -> Result<Mode, String> {
+    if s == "exact" {
+        return Ok(Mode::EXACT);
+    }
+    if let Some(it) = s.strip_prefix("es") {
+        let max_iter: u32 = it.parse().map_err(|_| format!("bad mode {s:?}"))?;
+        return Ok(Mode::EarlyStop { max_iter });
+    }
+    if let Some(eps) = s.strip_prefix("eps") {
+        let eps_rel: f32 = eps.parse().map_err(|_| format!("bad mode {s:?}"))?;
+        return Ok(Mode::Exact { eps_rel });
+    }
+    Err(format!("unknown mode {s:?} (expected exact | es<N> | eps<X>)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic() {
+        assert_eq!(workload(4, 8, 1).data, workload(4, 8, 1).data);
+        assert_ne!(workload(4, 8, 1).data, workload(4, 8, 2).data);
+    }
+
+    #[test]
+    fn histogram_mean_matches_en_model_ballpark() {
+        // Table 5: M=256, k=64, eps=0 -> avg 8.72 (paper), E(n)=9.08
+        let h = exit_iteration_histogram(256, 64, 0.0, 2000, 7);
+        let avg = h.mean();
+        assert!((7.8..9.8).contains(&avg), "avg {avg}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("## T"));
+        assert!(r.contains("| 1 |"));
+    }
+
+    #[test]
+    fn parse_modes() {
+        assert_eq!(parse_mode("exact").unwrap(), Mode::EXACT);
+        assert_eq!(parse_mode("es4").unwrap(), Mode::EarlyStop { max_iter: 4 });
+        assert!(matches!(parse_mode("eps1e-4").unwrap(), Mode::Exact { .. }));
+        assert!(parse_mode("wat").is_err());
+    }
+
+    #[test]
+    fn early_stop_iteration_bound() {
+        assert_eq!(early_stop_iters(64, 8, 5, 3), 5);
+    }
+}

@@ -1,0 +1,247 @@
+//! Declarative CLI argument parser (clap is not in the vendored crate
+//! set). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, defaults, and generated help text.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Clone, Debug)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_switch: bool,
+}
+
+/// A parsed argument set.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value {v:?} for --{name}")),
+        }
+    }
+
+    /// Parsed value or the declared default (panics if neither exists —
+    /// a spec bug, not a user error).
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        let v = self
+            .values
+            .get(name)
+            .ok_or_else(|| format!("missing required --{name}"))?;
+        v.parse::<T>()
+            .map_err(|_| format!("invalid value {v:?} for --{name}"))
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// A subcommand spec.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.opts.push(Opt {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_switch: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_switch: true });
+        self
+    }
+
+    /// Parse this command's arguments (after the subcommand token).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                args.values.insert(o.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name} for '{}'", self.name))?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    args.switches.push(name.to_string());
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    args.values.insert(name.to_string(), val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn help(&self) -> String {
+        let mut s = format!("  {:12} {}\n", self.name, self.about);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_switch) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("      --{:18} {}{}\n", o.name, o.help, d));
+        }
+        s
+    }
+}
+
+/// Top-level dispatcher.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [options]\n\nCOMMANDS:\n",
+                            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&c.help());
+        }
+        s
+    }
+
+    /// Split argv into (command, its args). Returns Err(help) on
+    /// missing/unknown commands and for -h/--help.
+    pub fn dispatch<'a>(&'a self, argv: &[String])
+        -> Result<(&'a Command, Args), String> {
+        let Some(cmd_name) = argv.first() else {
+            return Err(self.help());
+        };
+        if cmd_name == "-h" || cmd_name == "--help" || cmd_name == "help" {
+            return Err(self.help());
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command {cmd_name:?}\n\n{}", self.help()))?;
+        let rest = &argv[1..];
+        if rest.iter().any(|a| a == "-h" || a == "--help") {
+            return Err(cmd.help());
+        }
+        let args = cmd.parse(rest)?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("topk", "run top-k")
+            .opt("rows", "1024", "row count")
+            .opt("mode", "exact", "search mode")
+            .opt_req("k", "k value")
+            .switch("verbose", "print more")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&sv(&["--k", "32", "--rows=2048"])).unwrap();
+        assert_eq!(a.req::<usize>("rows").unwrap(), 2048);
+        assert_eq!(a.req::<usize>("k").unwrap(), 32);
+        assert_eq!(a.get("mode"), Some("exact"));
+        assert!(!a.switch("verbose"));
+    }
+
+    #[test]
+    fn switches_and_positional() {
+        let a = cmd().parse(&sv(&["--verbose", "--k=1", "file.txt"])).unwrap();
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["file.txt"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&sv(&["--nope", "1"])).is_err());
+        assert!(cmd().parse(&sv(&["--rows"])).is_err());
+        assert!(cmd().parse(&sv(&["--verbose=1"])).is_err());
+        let a = cmd().parse(&sv(&[])).unwrap();
+        assert!(a.req::<usize>("k").is_err()); // required missing
+        let b = cmd().parse(&sv(&["--k", "abc"])).unwrap();
+        assert!(b.req::<usize>("k").is_err()); // unparseable
+    }
+
+    #[test]
+    fn app_dispatch() {
+        let app = App {
+            name: "rtopk",
+            about: "test",
+            commands: vec![cmd()],
+        };
+        let (c, a) = app.dispatch(&sv(&["topk", "--k", "4"])).unwrap();
+        assert_eq!(c.name, "topk");
+        assert_eq!(a.req::<usize>("k").unwrap(), 4);
+        assert!(app.dispatch(&sv(&["bogus"])).is_err());
+        assert!(app.dispatch(&sv(&[])).is_err());
+        assert!(app.dispatch(&sv(&["topk", "--help"])).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Run configuration: typed configs for the service and trainer plus a
+//! TOML-subset parser so deployments can keep settings in files
+//! (`rtopk serve --config serve.toml`). Supports tables, strings,
+//! integers, floats, booleans, and comments — the subset the configs
+//! need (serde/toml are not in the vendored crate set).
+
+use std::collections::BTreeMap;
+
+/// Parsed config: flat `section.key -> raw string` map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            entries.insert(key, val);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {path:?}: {e}"))?;
+        Config::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.entries.get(key) {
+            Some(v) => v.parse().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    let mut quote = ' ';
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' | '\'' if !in_str => {
+                in_str = true;
+                quote = c;
+            }
+            c if in_str && c == quote => in_str = false,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Service deployment settings (defaults match the benched setup).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// artifacts directory holding manifest.json
+    pub artifacts_dir: String,
+    /// max rows buffered before a batch is forced out
+    pub max_batch_rows: usize,
+    /// max microseconds a request may wait for batching
+    pub max_wait_us: u64,
+    /// worker threads executing batches
+    pub workers: usize,
+    /// queued-row limit before submissions block (backpressure)
+    pub queue_limit: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            max_batch_rows: 1024,
+            max_wait_us: 200,
+            workers: 2,
+            queue_limit: 1 << 16,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_config(c: &Config) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            artifacts_dir: c
+                .get("serve.artifacts_dir")
+                .unwrap_or(&d.artifacts_dir)
+                .to_string(),
+            max_batch_rows: c.get_or("serve.max_batch_rows", d.max_batch_rows),
+            max_wait_us: c.get_or("serve.max_wait_us", d.max_wait_us),
+            workers: c.get_or("serve.workers", d.workers),
+            queue_limit: c.get_or("serve.queue_limit", d.queue_limit),
+        }
+    }
+}
+
+/// Trainer settings.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub dataset: String,
+    /// "exact" or "es<N>"
+    pub topk_mode: String,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "gcn".into(),
+            dataset: "flickr-sim".into(),
+            topk_mode: "es4".into(),
+            steps: 200,
+            eval_every: 20,
+            seed: 42,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_types_comments() {
+        let c = Config::parse(
+            r#"
+            # top comment
+            root_key = 7
+            [serve]
+            artifacts_dir = "art/x"  # trailing comment
+            max_batch_rows = 512
+            [train]
+            model = 'sage'
+            lr = 0.05
+            flag = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.get("root_key"), Some("7"));
+        assert_eq!(c.get("serve.artifacts_dir"), Some("art/x"));
+        assert_eq!(c.get_or("serve.max_batch_rows", 0usize), 512);
+        assert_eq!(c.get("train.model"), Some("sage"));
+        assert_eq!(c.get_or("train.lr", 0.0f64), 0.05);
+        assert_eq!(c.get_or("train.flag", false), true);
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_kept() {
+        let c = Config::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(c.get("name"), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn serve_config_from_file_text() {
+        let c = Config::parse("[serve]\nmax_batch_rows = 2048\nworkers = 4").unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.max_batch_rows, 2048);
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.max_wait_us, ServeConfig::default().max_wait_us);
+    }
+}

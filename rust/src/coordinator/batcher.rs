@@ -1,0 +1,269 @@
+//! Dynamic batcher: accumulate same-shape requests into row tiles, flush
+//! on tile-full or deadline, apply backpressure when the queue is deep.
+//!
+//! The paper's service scenario batches millions of small rows; here the
+//! unit of admission is a whole request (a matrix), and requests sharing
+//! (M, k, mode) are packed into one execution batch up to the tile's row
+//! budget. Rows never split across batches mid-request (simplifies
+//! result scatter; tiles are padded anyway).
+
+use crate::topk::types::Mode;
+use crate::util::matrix::RowMatrix;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted request plus its reply slot.
+pub struct Pending<T> {
+    pub matrix: RowMatrix,
+    pub k: usize,
+    pub mode: Mode,
+    pub enqueued: Instant,
+    pub reply: T,
+}
+
+/// A flushed batch: requests sharing (cols, k, mode).
+pub struct Batch<T> {
+    pub cols: usize,
+    pub k: usize,
+    pub mode: Mode,
+    pub items: Vec<Pending<T>>,
+    pub total_rows: usize,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// flush when a group reaches this many rows
+    pub max_rows: usize,
+    /// flush a group when its oldest member waited this long
+    pub max_wait: Duration,
+    /// admission blocks when this many rows are queued (backpressure)
+    pub queue_limit: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_rows: 1024,
+            max_wait: Duration::from_micros(200),
+            queue_limit: 1 << 16,
+        }
+    }
+}
+
+struct Inner<T> {
+    queue: VecDeque<Pending<T>>,
+    queued_rows: usize,
+    closed: bool,
+}
+
+/// MPMC batching queue (mutex + condvars; request threads push, worker
+/// threads pull ready batches).
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    inner: Mutex<Inner<T>>,
+    /// signaled when work arrives or the queue closes
+    work: Condvar,
+    /// signaled when rows drain (unblocks backpressured producers)
+    space: Condvar,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                queued_rows: 0,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Admit a request (blocks under backpressure). Returns false if the
+    /// batcher is closed.
+    pub fn submit(&self, matrix: RowMatrix, k: usize, mode: Mode, reply: T) -> bool {
+        let rows = matrix.rows;
+        let mut g = self.inner.lock().unwrap();
+        while !g.closed && g.queued_rows + rows > self.policy.queue_limit
+            && g.queued_rows > 0
+        {
+            g = self.space.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(Pending {
+            matrix,
+            k,
+            mode,
+            enqueued: Instant::now(),
+            reply,
+        });
+        g.queued_rows += rows;
+        drop(g);
+        self.work.notify_one();
+        true
+    }
+
+    /// Pull the next batch: groups the head request with every queued
+    /// request sharing its (cols, k, mode) up to the row budget. Blocks
+    /// until the head's deadline passes, the budget fills, or close.
+    /// Returns None when closed and drained.
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(head) = g.queue.front() {
+                let deadline = head.enqueued + self.policy.max_wait;
+                let key = (head.matrix.cols, head.k, head.mode);
+                // rows already queued for this group
+                let group_rows: usize = g
+                    .queue
+                    .iter()
+                    .filter(|p| (p.matrix.cols, p.k, p.mode) == key)
+                    .map(|p| p.matrix.rows)
+                    .sum();
+                let now = Instant::now();
+                if group_rows >= self.policy.max_rows || now >= deadline || g.closed {
+                    // flush: take every matching request up to the budget
+                    let mut items = Vec::new();
+                    let mut total_rows = 0usize;
+                    let mut rest = VecDeque::new();
+                    while let Some(p) = g.queue.pop_front() {
+                        let pkey = (p.matrix.cols, p.k, p.mode);
+                        if pkey == key && total_rows < self.policy.max_rows {
+                            total_rows += p.matrix.rows;
+                            items.push(p);
+                        } else {
+                            rest.push_back(p);
+                        }
+                    }
+                    g.queue = rest;
+                    g.queued_rows -= total_rows;
+                    drop(g);
+                    self.space.notify_all();
+                    return Some(Batch {
+                        cols: key.0,
+                        k: key.1,
+                        mode: key.2,
+                        items,
+                        total_rows,
+                    });
+                }
+                // wait for more work or the deadline
+                let (ng, _) = self
+                    .work
+                    .wait_timeout(g, deadline.saturating_duration_since(now))
+                    .unwrap();
+                g = ng;
+            } else if g.closed {
+                return None;
+            } else {
+                g = self.work.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Close the queue: producers are rejected, workers drain then stop.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.work.notify_all();
+        self.space.notify_all();
+    }
+
+    pub fn queued_rows(&self) -> usize {
+        self.inner.lock().unwrap().queued_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn mat(rows: usize, cols: usize) -> RowMatrix {
+        RowMatrix::zeros(rows, cols)
+    }
+
+    #[test]
+    fn groups_same_shape_requests() {
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 100,
+            max_wait: Duration::from_millis(5),
+            queue_limit: 1000,
+        });
+        assert!(b.submit(mat(40, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(mat(40, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(mat(40, 16), 2, Mode::EXACT, 2)); // different M
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.cols, 8);
+        assert_eq!(batch.items.len(), 2);
+        assert_eq!(batch.total_rows, 80);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.cols, 16);
+        assert_eq!(batch2.items[0].reply, 2);
+    }
+
+    #[test]
+    fn flushes_on_budget_without_waiting() {
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_secs(60), // deadline must not matter
+            queue_limit: 1000,
+        });
+        b.submit(mat(64, 8), 2, Mode::EXACT, 0);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert_eq!(batch.total_rows, 64);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 1_000_000,
+            max_wait: Duration::from_millis(10),
+            queue_limit: 1000,
+        });
+        b.submit(mat(5, 8), 2, Mode::EXACT, 9);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(8));
+        assert_eq!(batch.total_rows, 5);
+        assert_eq!(batch.items[0].reply, 9);
+    }
+
+    #[test]
+    fn close_drains_then_stops() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy::default()));
+        b.submit(mat(3, 4), 1, Mode::EXACT, 7);
+        b.close();
+        assert!(!b.submit(mat(1, 4), 1, Mode::EXACT, 8)); // rejected
+        let batch = b.next_batch().unwrap(); // drains the queued one
+        assert_eq!(batch.items.len(), 1);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drain() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy {
+            max_rows: 8,
+            max_wait: Duration::from_millis(1),
+            queue_limit: 10,
+        }));
+        b.submit(mat(10, 4), 1, Mode::EXACT, 0); // fills the queue
+        let b2 = b.clone();
+        let producer = std::thread::spawn(move || {
+            // blocks until the worker drains, then succeeds
+            b2.submit(mat(10, 4), 1, Mode::EXACT, 1)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!producer.is_finished(), "submit should be backpressured");
+        let _ = b.next_batch().unwrap(); // drain
+        assert!(producer.join().unwrap());
+        b.close();
+    }
+}

@@ -1,0 +1,120 @@
+//! Service metrics: lock-free counters + a mutex-guarded latency
+//! reservoir with percentile snapshots.
+
+use crate::stats::summary::percentile;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics hub (cheap to clone via Arc by the owner).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+    pub batches: AtomicU64,
+    pub pjrt_batches: AtomicU64,
+    pub cpu_batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// request latencies in microseconds (bounded reservoir)
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub pjrt_batches: u64,
+    pub cpu_batches: u64,
+    pub errors: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+const RESERVOIR: usize = 1 << 16;
+
+impl Metrics {
+    pub fn record_request(&self, rows: usize, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        let mut l = self.latencies_us.lock().unwrap();
+        if l.len() >= RESERVOIR {
+            // overwrite pseudo-randomly to stay bounded
+            let slot = (latency.as_nanos() as usize) % RESERVOIR;
+            l[slot] = latency.as_micros() as u64;
+        } else {
+            l.push(latency.as_micros() as u64);
+        }
+    }
+
+    pub fn record_batch(&self, via_pjrt: bool) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        if via_pjrt {
+            self.pjrt_batches.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.cpu_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat: Vec<f64> = self
+            .latencies_us
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&v| v as f64)
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, p) };
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
+            cpu_batches: self.cpu_batches.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            p50_us: pick(50.0),
+            p95_us: pick(95.0),
+            p99_us: pick(99.0),
+            max_us: lat.last().copied().unwrap_or(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_percentiles() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_request(10, Duration::from_micros(i));
+        }
+        m.record_batch(true);
+        m.record_batch(false);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.rows, 1000);
+        assert_eq!(s.pjrt_batches, 1);
+        assert_eq!(s.cpu_batches, 1);
+        assert!((s.p50_us - 50.5).abs() < 1.0);
+        assert!(s.p99_us >= 99.0 && s.max_us == 100.0);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded() {
+        let m = Metrics::default();
+        for i in 0..(RESERVOIR + 100) as u64 {
+            m.record_request(1, Duration::from_micros(i % 500));
+        }
+        assert!(m.latencies_us.lock().unwrap().len() <= RESERVOIR);
+    }
+}

@@ -1,0 +1,33 @@
+//! The L3 coordinator: a row-wise top-k *service* and the MaxK-GNN
+//! training orchestrator, built on the PJRT runtime.
+//!
+//! Serving path (quickstart -> production):
+//!
+//! ```text
+//!   client threads ──submit()──▶ Batcher (deadline + backpressure)
+//!                                  │ tiles of R rows, same (M, k, mode)
+//!                                  ▼
+//!                              Scheduler workers
+//!                                  │ route: PJRT tile artifact (Router)
+//!                                  │        or CPU fallback engine
+//!                                  ▼
+//!                              Executor thread (owns PJRT)
+//! ```
+//!
+//! The router picks the compiled tile variant for a request's
+//! (M, k, mode); requests with no matching artifact run on the in-crate
+//! CPU engine (`topk::rowwise`) so the service always answers. The
+//! trainer drives the AOT train/eval step artifacts with device-resident
+//! parameter round-trips.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod service;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use router::{Route, Router};
+pub use service::{ServiceStats, TopKRequest, TopKService};
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,145 @@
+//! Router: map a request's (M, k, mode) to an execution route — a
+//! compiled PJRT tile artifact when one exists, else the CPU engine.
+//!
+//! Routing is built once from the manifest at startup; lookup on the
+//! hot path is a BTreeMap probe (the variant table is tiny).
+
+use crate::runtime::manifest::Manifest;
+use crate::topk::types::Mode;
+use std::collections::BTreeMap;
+
+/// How a batch should execute.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Route {
+    /// Run the named tile artifact; batches are padded to `rows`.
+    Pjrt { artifact: String, rows: usize },
+    /// No matching artifact — run the in-crate CPU engine.
+    Cpu,
+}
+
+/// Mode key used for routing (exact eps is collapsed: every exact tile
+/// is lowered at eps=1e-16, the paper's no-early-stop setting).
+fn mode_key(mode: Mode) -> String {
+    match mode {
+        Mode::Exact { .. } => "exact".into(),
+        Mode::EarlyStop { max_iter } => format!("es{max_iter}"),
+    }
+}
+
+/// The routing table.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    /// (m, k, mode_key) -> (artifact name, tile rows)
+    table: BTreeMap<(usize, usize, String), (String, usize)>,
+}
+
+impl Router {
+    /// Build from the manifest's `rtopk_tile` artifacts.
+    pub fn from_manifest(m: &Manifest) -> Router {
+        let mut table = BTreeMap::new();
+        for a in m.of_kind("rtopk_tile") {
+            let (Some(rows), Some(mm), Some(k)) = (
+                a.meta_usize("rows"),
+                a.meta_usize("m"),
+                a.meta_usize("k"),
+            ) else {
+                continue;
+            };
+            let mode = match a.meta_str("mode") {
+                Some("exact") => "exact".to_string(),
+                Some("early_stop") => {
+                    format!("es{}", a.meta_usize("max_iter").unwrap_or(0))
+                }
+                _ => continue,
+            };
+            table.insert((mm, k, mode), (a.name.clone(), rows));
+        }
+        Router { table }
+    }
+
+    /// Route one request shape.
+    pub fn route(&self, m: usize, k: usize, mode: Mode) -> Route {
+        match self.table.get(&(m, k, mode_key(mode))) {
+            Some((artifact, rows)) => Route::Pjrt {
+                artifact: artifact.clone(),
+                rows: *rows,
+            },
+            None => Route::Cpu,
+        }
+    }
+
+    /// All (m, k, mode) combinations with compiled tiles.
+    pub fn variants(&self) -> Vec<(usize, usize, String)> {
+        self.table.keys().cloned().collect()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.table.values().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "version": 1, "artifact_set": "t",
+          "artifacts": {
+            "rtopk_1024x256_k32_exact": {
+              "path": "a.hlo.txt",
+              "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+              "outputs": [{"shape": [1024, 32], "dtype": "float32"}],
+              "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256,
+                        "k": 32, "mode": "exact", "max_iter": 0}
+            },
+            "rtopk_1024x256_k32_es4": {
+              "path": "b.hlo.txt",
+              "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+              "outputs": [{"shape": [1024, 32], "dtype": "float32"}],
+              "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256,
+                        "k": 32, "mode": "early_stop", "max_iter": 4}
+            },
+            "train_x": {
+              "path": "c.hlo.txt", "inputs": [], "outputs": [],
+              "meta": {"kind": "train_step"}
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_to_matching_tile() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(
+            r.route(256, 32, Mode::EXACT),
+            Route::Pjrt { artifact: "rtopk_1024x256_k32_exact".into(), rows: 1024 }
+        );
+        assert_eq!(
+            r.route(256, 32, Mode::EarlyStop { max_iter: 4 }),
+            Route::Pjrt { artifact: "rtopk_1024x256_k32_es4".into(), rows: 1024 }
+        );
+    }
+
+    #[test]
+    fn falls_back_to_cpu() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.route(512, 32, Mode::EXACT), Route::Cpu);
+        assert_eq!(r.route(256, 16, Mode::EXACT), Route::Cpu);
+        assert_eq!(r.route(256, 32, Mode::EarlyStop { max_iter: 7 }), Route::Cpu);
+    }
+
+    #[test]
+    fn ignores_non_tile_artifacts() {
+        let r = Router::from_manifest(&manifest());
+        assert_eq!(r.variants().len(), 2);
+    }
+}

@@ -1,0 +1,201 @@
+//! Scheduler: worker threads that pull batches from the batcher,
+//! execute them (PJRT tile artifact via the router, or the CPU engine),
+//! and scatter per-request results back to reply channels.
+
+use crate::coordinator::batcher::{Batch, Batcher};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{Route, Router};
+use crate::runtime::executor::ExecutorHandle;
+use crate::runtime::tensor::HostTensor;
+use crate::topk::rowwise::rowwise_topk;
+use crate::topk::types::TopKResult;
+use crate::util::matrix::RowMatrix;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Reply slot carried through the batcher.
+pub type Reply = mpsc::Sender<Result<TopKResult>>;
+
+/// Spawn `workers` scheduler threads; they exit when the batcher closes.
+pub fn spawn_workers(
+    workers: usize,
+    batcher: Arc<Batcher<Reply>>,
+    router: Arc<Router>,
+    executor: Option<ExecutorHandle>,
+    metrics: Arc<Metrics>,
+) -> Vec<JoinHandle<()>> {
+    (0..workers.max(1))
+        .map(|i| {
+            let batcher = batcher.clone();
+            let router = router.clone();
+            let executor = executor.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name(format!("topk-worker-{i}"))
+                .spawn(move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        run_batch(batch, &router, executor.as_ref(), &metrics);
+                    }
+                })
+                .expect("spawn worker")
+        })
+        .collect()
+}
+
+/// Execute one batch and deliver per-request results.
+pub fn run_batch(
+    batch: Batch<Reply>,
+    router: &Router,
+    executor: Option<&ExecutorHandle>,
+    metrics: &Metrics,
+) {
+    let route = router.route(batch.cols, batch.k, batch.mode);
+    let outcome: Result<Vec<TopKResult>> = match (&route, executor) {
+        (Route::Pjrt { artifact, rows }, Some(exec)) => {
+            metrics.record_batch(true);
+            run_batch_pjrt(&batch, artifact, *rows, exec)
+        }
+        _ => {
+            metrics.record_batch(false);
+            Ok(run_batch_cpu(&batch))
+        }
+    };
+    match outcome {
+        Ok(results) => {
+            for (item, res) in batch.items.into_iter().zip(results) {
+                let latency = item.enqueued.elapsed();
+                metrics.record_request(item.matrix.rows, latency);
+                let _ = item.reply.send(Ok(res));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            let msg = format!("{e:#}");
+            for item in batch.items {
+                let _ = item.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+/// Concatenate the batch's rows, pad to the tile size, run the artifact
+/// (multiple tiles if the batch exceeds one), then scatter rows back.
+fn run_batch_pjrt(
+    batch: &Batch<Reply>,
+    artifact: &str,
+    tile_rows: usize,
+    exec: &ExecutorHandle,
+) -> Result<Vec<TopKResult>> {
+    let cols = batch.cols;
+    let k = batch.k;
+    let total = batch.total_rows;
+    // gather all rows into one contiguous buffer
+    let mut all = Vec::with_capacity(total * cols);
+    for item in &batch.items {
+        all.extend_from_slice(&item.matrix.data);
+    }
+    // run tile by tile
+    let mut values = vec![0f32; total * k];
+    let mut indices = vec![0u32; total * k];
+    let mut done = 0usize;
+    while done < total {
+        let take = tile_rows.min(total - done);
+        let mut tile = vec![0f32; tile_rows * cols];
+        tile[..take * cols]
+            .copy_from_slice(&all[done * cols..(done + take) * cols]);
+        let outs = exec.execute(
+            artifact,
+            vec![HostTensor::f32(tile, &[tile_rows, cols])],
+        )?;
+        // outputs: values (R,k) f32, indices (R,k) s32, mask (R,M) f32
+        let v = outs[0].as_f32()?;
+        let i = outs[1].as_i32()?;
+        values[done * k..(done + take) * k]
+            .copy_from_slice(&v[..take * k]);
+        for (dst, &src) in indices[done * k..(done + take) * k]
+            .iter_mut()
+            .zip(&i[..take * k])
+        {
+            *dst = src as u32;
+        }
+        done += take;
+    }
+    // scatter back per request
+    let mut results = Vec::with_capacity(batch.items.len());
+    let mut offset = 0usize;
+    for item in &batch.items {
+        let r = item.matrix.rows;
+        results.push(TopKResult {
+            rows: r,
+            k,
+            values: values[offset * k..(offset + r) * k].to_vec(),
+            indices: indices[offset * k..(offset + r) * k].to_vec(),
+        });
+        offset += r;
+    }
+    Ok(results)
+}
+
+/// CPU fallback: run each request through the in-crate engine.
+fn run_batch_cpu(batch: &Batch<Reply>) -> Vec<TopKResult> {
+    batch
+        .items
+        .iter()
+        .map(|item| rowwise_topk(&item.matrix, batch.k, batch.mode))
+        .collect()
+}
+
+/// Pad-free helper used by tests and the service's synchronous path.
+pub fn run_direct_cpu(matrix: &RowMatrix, k: usize,
+                      mode: crate::topk::types::Mode) -> TopKResult {
+    rowwise_topk(matrix, k, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::topk::types::Mode;
+    use crate::topk::verify::is_exact;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    #[test]
+    fn cpu_pipeline_end_to_end() {
+        let batcher: Arc<Batcher<Reply>> = Arc::new(Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_millis(2),
+            queue_limit: 4096,
+        }));
+        let router = Arc::new(Router::default()); // empty -> CPU route
+        let metrics = Arc::new(Metrics::default());
+        let workers = spawn_workers(2, batcher.clone(), router, None, metrics.clone());
+
+        let mut rng = Rng::seed_from(21);
+        let mut rxs = Vec::new();
+        let mut mats = Vec::new();
+        for _ in 0..6 {
+            let x = RowMatrix::random_normal(20, 32, &mut rng);
+            let (tx, rx) = mpsc::channel();
+            assert!(batcher.submit(x.clone(), 4, Mode::EXACT, tx));
+            rxs.push(rx);
+            mats.push(x);
+        }
+        for (rx, x) in rxs.into_iter().zip(&mats) {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.rows, 20);
+            assert!(is_exact(x, &res));
+        }
+        batcher.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.rows, 120);
+        assert!(s.batches >= 1);
+        assert_eq!(s.errors, 0);
+    }
+}

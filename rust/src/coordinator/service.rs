@@ -1,0 +1,197 @@
+//! TopKService — the public serving API: batcher + scheduler + router +
+//! PJRT executor wired together behind `submit`/`submit_async`.
+
+use crate::config::ServeConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::{spawn_workers, Reply};
+use crate::runtime::executor::{Executor, ExecutorHandle};
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use anyhow::{anyhow, Result};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A pending asynchronous request.
+pub struct TopKRequest {
+    rx: mpsc::Receiver<Result<TopKResult>>,
+}
+
+impl TopKRequest {
+    /// Block for the result.
+    pub fn wait(self) -> Result<TopKResult> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped the request"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<TopKResult>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Service-level statistics snapshot.
+pub type ServiceStats = MetricsSnapshot;
+
+/// The row-wise top-k service.
+pub struct TopKService {
+    batcher: Arc<Batcher<Reply>>,
+    metrics: Arc<Metrics>,
+    router: Arc<Router>,
+    workers: Vec<JoinHandle<()>>,
+    /// keeps the executor thread alive for the service's lifetime
+    _executor: Option<Executor>,
+}
+
+impl TopKService {
+    /// Start a service backed by AOT artifacts. Fails if the artifacts
+    /// directory is unreadable; use [`TopKService::cpu_only`] when
+    /// artifacts are unavailable (tests, pure-CPU deployments).
+    pub fn start(cfg: &ServeConfig) -> Result<TopKService> {
+        let executor = Executor::spawn(&cfg.artifacts_dir)?;
+        let handle = executor.handle();
+        let router = Arc::new(Router::from_manifest(handle.manifest()));
+        // warm the compile cache so first requests do not pay compilation
+        let names = router.artifact_names();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        handle.precompile(&refs)?;
+        Self::build(cfg, router, Some(executor), Some(handle))
+    }
+
+    /// Start without PJRT (every request runs on the CPU engine).
+    pub fn cpu_only(cfg: &ServeConfig) -> Result<TopKService> {
+        Self::build(cfg, Arc::new(Router::default()), None, None)
+    }
+
+    fn build(
+        cfg: &ServeConfig,
+        router: Arc<Router>,
+        executor: Option<Executor>,
+        handle: Option<ExecutorHandle>,
+    ) -> Result<TopKService> {
+        let batcher = Arc::new(Batcher::new(BatchPolicy {
+            max_rows: cfg.max_batch_rows,
+            max_wait: Duration::from_micros(cfg.max_wait_us),
+            queue_limit: cfg.queue_limit,
+        }));
+        let metrics = Arc::new(Metrics::default());
+        let workers = spawn_workers(
+            cfg.workers,
+            batcher.clone(),
+            router.clone(),
+            handle,
+            metrics.clone(),
+        );
+        Ok(TopKService { batcher, metrics, router, workers, _executor: executor })
+    }
+
+    /// Submit a request; returns a handle to wait on.
+    pub fn submit_async(&self, matrix: RowMatrix, k: usize, mode: Mode)
+        -> Result<TopKRequest> {
+        if k == 0 || k > matrix.cols {
+            return Err(anyhow!("k={} out of range for M={}", k, matrix.cols));
+        }
+        let (tx, rx) = mpsc::channel();
+        if !self.batcher.submit(matrix, k, mode, tx) {
+            return Err(anyhow!("service is shut down"));
+        }
+        Ok(TopKRequest { rx })
+    }
+
+    /// Submit and wait.
+    pub fn submit(&self, matrix: RowMatrix, k: usize, mode: Mode) -> Result<TopKResult> {
+        self.submit_async(matrix, k, mode)?.wait()
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.metrics.snapshot()
+    }
+
+    /// Compiled tile variants available for PJRT routing.
+    pub fn variants(&self) -> Vec<(usize, usize, String)> {
+        self.router.variants()
+    }
+
+    /// Graceful shutdown: drain the queue, stop workers.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for TopKService {
+    fn drop(&mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::verify::is_exact;
+    use crate::util::rng::Rng;
+
+    fn cpu_service(workers: usize) -> TopKService {
+        TopKService::cpu_only(&ServeConfig {
+            workers,
+            max_wait_us: 100,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_sync_exact() {
+        let svc = cpu_service(2);
+        let mut rng = Rng::seed_from(31);
+        let x = RowMatrix::random_normal(50, 64, &mut rng);
+        let res = svc.submit(x.clone(), 8, Mode::EXACT).unwrap();
+        assert!(is_exact(&x, &res));
+        assert_eq!(svc.stats().requests, 1);
+    }
+
+    #[test]
+    fn submit_many_async() {
+        let svc = cpu_service(2);
+        let mut rng = Rng::seed_from(32);
+        let reqs: Vec<(RowMatrix, TopKRequest)> = (0..8)
+            .map(|_| {
+                let x = RowMatrix::random_normal(16, 32, &mut rng);
+                let r = svc.submit_async(x.clone(), 4, Mode::EXACT).unwrap();
+                (x, r)
+            })
+            .collect();
+        for (x, r) in reqs {
+            let res = r.wait().unwrap();
+            assert!(is_exact(&x, &res));
+        }
+        let s = svc.stats();
+        assert_eq!(s.requests, 8);
+        assert!(s.p50_us > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let svc = cpu_service(1);
+        let x = RowMatrix::zeros(2, 4);
+        assert!(svc.submit_async(x.clone(), 0, Mode::EXACT).is_err());
+        assert!(svc.submit_async(x, 5, Mode::EXACT).is_err());
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let svc = cpu_service(1);
+        let batcher = svc.batcher.clone();
+        svc.shutdown();
+        assert!(!batcher.submit(RowMatrix::zeros(1, 4), 1, Mode::EXACT,
+                                mpsc::channel().0));
+    }
+}

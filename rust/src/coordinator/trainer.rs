@@ -1,0 +1,211 @@
+//! Trainer: drives the AOT train/eval step artifacts end-to-end —
+//! generates the dataset, initializes parameters, loops steps with
+//! parameter round-trips, evaluates, and reports timing + accuracy
+//! (the engine behind `rtopk train`, `examples/gnn_training.rs` and the
+//! Fig. 5 bench).
+
+use crate::coordinator::metrics::Metrics;
+use crate::graph::datasets::{self, GraphData};
+use crate::runtime::executor::ExecutorHandle;
+use crate::runtime::manifest::ArtifactInfo;
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::time::{Duration, Instant};
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub train_accs: Vec<f32>,
+    pub final_val_acc: f32,
+    pub final_test_acc: f32,
+    pub wall: Duration,
+    pub per_step: Duration,
+}
+
+/// Training orchestrator over one (model, dataset, topk-mode) artifact
+/// pair. Parameter and optimizer state stay in host tensors between
+/// steps (the CPU PJRT client keeps buffers host-side anyway; on an
+/// accelerator these would be donated device buffers).
+pub struct Trainer {
+    exec: ExecutorHandle,
+    train_name: String,
+    eval_name: String,
+    n_params: usize,
+    graph: GraphData,
+    params: Vec<HostTensor>,
+    momentum: Vec<HostTensor>,
+    pub metrics: Metrics,
+}
+
+impl Trainer {
+    /// Build a trainer for artifact tag `tag` (e.g.
+    /// "gcn_flickr-sim_h256_k32_es4"); expects `train_<tag>` and
+    /// `eval_<tag>` in the manifest.
+    pub fn new(exec: ExecutorHandle, tag: &str, seed: u64) -> Result<Trainer> {
+        let train_name = format!("train_{tag}");
+        let eval_name = format!("eval_{tag}");
+        let info = exec.manifest().get(&train_name)?.clone();
+        exec.manifest().get(&eval_name)?;
+        let dataset = info
+            .meta_str("dataset")
+            .ok_or_else(|| anyhow!("{train_name}: meta missing dataset"))?
+            .to_string();
+        let param_shapes = param_shapes_from_meta(&info)?;
+        let n_params = param_shapes.len();
+        // ABI: 2P + 6 inputs
+        if info.inputs.len() != 2 * n_params + 6 {
+            bail!(
+                "{train_name}: manifest ABI mismatch ({} inputs, {} params)",
+                info.inputs.len(),
+                n_params
+            );
+        }
+        let graph = datasets::build(&dataset, seed)
+            .ok_or_else(|| anyhow!("unknown dataset {dataset:?}"))?;
+        let mut rng = Rng::seed_from(seed ^ 0x5EED);
+        let params = init_params(&param_shapes, &mut rng);
+        let momentum = param_shapes
+            .iter()
+            .map(|s| HostTensor::f32(vec![0.0; s.iter().product::<usize>().max(1)], s))
+            .collect();
+        Ok(Trainer {
+            exec,
+            train_name,
+            eval_name,
+            n_params,
+            graph,
+            params,
+            momentum,
+            metrics: Metrics::default(),
+        })
+    }
+
+    pub fn graph(&self) -> &GraphData {
+        &self.graph
+    }
+
+    fn graph_inputs(&self, mask: &[f32]) -> Vec<HostTensor> {
+        let g = &self.graph;
+        vec![
+            HostTensor::i32(g.src_i32(), &[g.src.len()]),
+            HostTensor::i32(g.dst_i32(), &[g.dst.len()]),
+            HostTensor::f32(g.weights.clone(), &[g.weights.len()]),
+            HostTensor::f32(g.feats.clone(), &[g.num_nodes, g.feat_dim]),
+            HostTensor::i32(g.labels_i32(), &[g.num_nodes]),
+            HostTensor::f32(mask.to_vec(), &[g.num_nodes]),
+        ]
+    }
+
+    /// One optimizer step; returns (loss, train-batch accuracy).
+    pub fn step(&mut self) -> Result<(f32, f32)> {
+        let mut inputs = Vec::with_capacity(2 * self.n_params + 6);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.momentum.iter().cloned());
+        inputs.extend(self.graph_inputs(&self.graph.train_mask.clone()));
+        let t0 = Instant::now();
+        let mut out = self.exec.execute(&self.train_name, inputs)?;
+        self.metrics.record_request(self.graph.num_nodes, t0.elapsed());
+        if out.len() != 2 * self.n_params + 2 {
+            bail!("{}: unexpected output arity {}", self.train_name, out.len());
+        }
+        let acc = out.pop().unwrap().into_f32()?[0];
+        let loss = out.pop().unwrap().into_f32()?[0];
+        let momentum = out.split_off(self.n_params);
+        self.params = out;
+        self.momentum = momentum;
+        Ok((loss, acc))
+    }
+
+    /// Evaluate: (val_loss, val_acc, test_loss, test_acc).
+    pub fn evaluate(&self) -> Result<(f32, f32, f32, f32)> {
+        let g = &self.graph;
+        let mut inputs = Vec::with_capacity(self.n_params + 7);
+        inputs.extend(self.params.iter().cloned());
+        inputs.push(HostTensor::i32(g.src_i32(), &[g.src.len()]));
+        inputs.push(HostTensor::i32(g.dst_i32(), &[g.dst.len()]));
+        inputs.push(HostTensor::f32(g.weights.clone(), &[g.weights.len()]));
+        inputs.push(HostTensor::f32(g.feats.clone(), &[g.num_nodes, g.feat_dim]));
+        inputs.push(HostTensor::i32(g.labels_i32(), &[g.num_nodes]));
+        inputs.push(HostTensor::f32(g.val_mask.clone(), &[g.num_nodes]));
+        inputs.push(HostTensor::f32(g.test_mask.clone(), &[g.num_nodes]));
+        let out = self.exec.execute(&self.eval_name, inputs)?;
+        Ok((
+            out[0].as_f32()?[0],
+            out[1].as_f32()?[0],
+            out[2].as_f32()?[0],
+            out[3].as_f32()?[0],
+        ))
+    }
+
+    /// Run a full training loop with periodic logging via `log`.
+    pub fn train(&mut self, steps: usize, eval_every: usize,
+                 mut log: impl FnMut(usize, f32, f32)) -> Result<TrainOutcome> {
+        let t0 = Instant::now();
+        let mut losses = Vec::with_capacity(steps);
+        let mut accs = Vec::with_capacity(steps);
+        for s in 0..steps {
+            let (loss, acc) = self.step()?;
+            if !loss.is_finite() {
+                bail!("loss diverged at step {s}");
+            }
+            losses.push(loss);
+            accs.push(acc);
+            if eval_every > 0 && (s + 1) % eval_every == 0 {
+                log(s + 1, loss, acc);
+            }
+        }
+        let (_, val_acc, _, test_acc) = self.evaluate()?;
+        let wall = t0.elapsed();
+        Ok(TrainOutcome {
+            steps,
+            per_step: wall / steps.max(1) as u32,
+            losses,
+            train_accs: accs,
+            final_val_acc: val_acc,
+            final_test_acc: test_acc,
+            wall,
+        })
+    }
+}
+
+/// Glorot-normal initialization matching the L2 model's scheme
+/// (matrices ~ N(0, 2/(fan_in+fan_out)); vectors zero).
+fn init_params(shapes: &[Vec<usize>], rng: &mut Rng) -> Vec<HostTensor> {
+    shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product::<usize>().max(1);
+            let data = if s.len() == 2 {
+                let scale = (2.0 / (s[0] + s[1]) as f64).sqrt() as f32;
+                (0..n).map(|_| rng.normal_f32() * scale).collect()
+            } else {
+                vec![0.0; n]
+            };
+            HostTensor::f32(data, s)
+        })
+        .collect()
+}
+
+fn param_shapes_from_meta(info: &ArtifactInfo) -> Result<Vec<Vec<usize>>> {
+    use crate::util::json::Value;
+    let shapes = info
+        .meta
+        .get("param_shapes")
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("{}: meta missing param_shapes", info.name))?;
+    shapes
+        .iter()
+        .map(|s| {
+            s.as_array()
+                .ok_or_else(|| anyhow!("bad param shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+// Integration-tested in rust/tests/trainer.rs against real artifacts.

@@ -1,0 +1,127 @@
+//! MaxK-compressed feature rows + the compressed SpMM — the MaxK-GNN
+//! trick (paper Fig. 1): after row-wise top-k, each feature row has
+//! exactly k nonzeros, so the aggregation SpMM touches k instead of M
+//! columns per gathered row. This is where the paper's end-to-end
+//! training speed-up comes from; RTop-K makes the *producer* of this
+//! format fast.
+
+use crate::graph::csr::CsrGraph;
+use crate::topk::types::TopKResult;
+use crate::util::matrix::RowMatrix;
+use crate::util::pool;
+
+/// Row-compressed matrix: row r holds exactly k (value, column) pairs.
+#[derive(Clone, Debug)]
+pub struct CompressedRows {
+    pub rows: usize,
+    pub cols: usize,
+    pub k: usize,
+    /// len rows*k
+    pub values: Vec<f32>,
+    /// len rows*k
+    pub indices: Vec<u32>,
+}
+
+impl CompressedRows {
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[f32], &[u32]) {
+        let k = self.k;
+        (&self.values[r * k..(r + 1) * k], &self.indices[r * k..(r + 1) * k])
+    }
+
+    /// Expand back to dense (testing / the ablation path).
+    pub fn to_dense(&self) -> RowMatrix {
+        let mut out = RowMatrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (vals, idx) = self.row(r);
+            for (v, &i) in vals.iter().zip(idx) {
+                out.set(r, i as usize, *v);
+            }
+        }
+        out
+    }
+}
+
+/// Wrap a top-k result as the compressed operand of the next SpMM.
+pub fn maxk_compress(res: &TopKResult, cols: usize) -> CompressedRows {
+    CompressedRows {
+        rows: res.rows,
+        cols,
+        k: res.k,
+        values: res.values.clone(),
+        indices: res.indices.clone(),
+    }
+}
+
+/// SpMM with a row-compressed right-hand side:
+/// out[d] += w * compressed_row(s) for each in-edge (s, w) of d.
+/// Inner loop is k-long instead of M-long — the MaxK-GNN speedup.
+pub fn spmm_compressed(g: &CsrGraph, x: &CompressedRows) -> RowMatrix {
+    assert_eq!(g.num_nodes, x.rows);
+    let m = x.cols;
+    let mut out = RowMatrix::zeros(g.num_nodes, m);
+    let optr = SendPtr(out.data.as_mut_ptr());
+    pool::parallel_ranges(g.num_nodes, 16, |start, end| {
+        for d in start..end {
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(optr.get().add(d * m), m)
+            };
+            let (srcs, ws) = g.in_edges(d);
+            for (&s, &w) in srcs.iter().zip(ws) {
+                let (vals, idx) = x.row(s as usize);
+                for (v, &i) in vals.iter().zip(idx) {
+                    orow[i as usize] += w * v;
+                }
+            }
+        }
+    });
+    out
+}
+
+struct SendPtr<T>(*mut T);
+impl<T> SendPtr<T> {
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::ops::spmm_csr;
+    use crate::graph::generate::{sbm_graph, SbmParams};
+    use crate::topk::{rowwise_topk, Mode};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn compressed_spmm_equals_dense_spmm_on_masked_input() {
+        let mut rng = Rng::seed_from(12);
+        let g = sbm_graph(&SbmParams::default(), 5).to_csr();
+        let x = RowMatrix::random_normal(g.num_nodes, 32, &mut rng);
+        let res = rowwise_topk(&x, 8, Mode::EXACT);
+        let comp = maxk_compress(&res, 32);
+        // dense reference: zero out everything not selected
+        let dense = comp.to_dense();
+        let want = spmm_csr(&g, &dense);
+        let got = spmm_compressed(&g, &comp);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn to_dense_has_k_nonzeros_per_row() {
+        let mut rng = Rng::seed_from(13);
+        let x = RowMatrix::random_normal(10, 16, &mut rng);
+        let res = rowwise_topk(&x, 4, Mode::EXACT);
+        let dense = maxk_compress(&res, 16).to_dense();
+        for r in 0..10 {
+            let nz = dense.row(r).iter().filter(|&&v| v != 0.0).count();
+            // top-k of a continuous distribution never selects exact zeros
+            assert_eq!(nz, 4);
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! CPU GNN compute substrate.
+//!
+//! Two jobs:
+//!
+//! 1. **Baseline compute path** — real SpMM / dense matmul / MaxK-SpMM
+//!    implementations that execute the MaxK-GNN forward pass without
+//!    XLA, validated against the PJRT path in integration tests.
+//! 2. **Table 4's timing decomposition** — measure what fraction of a
+//!    training step row-wise top-k accounts for, with the *sort-based*
+//!    top-k standing in for the pre-RTop-K operator (what MaxK-GNN
+//!    would use without the paper's kernel), exactly as the paper's
+//!    "Top-k Prop(%)" column is defined.
+
+pub mod compressed;
+pub mod ops;
+pub mod profile;
+
+pub use compressed::{maxk_compress, spmm_compressed, CompressedRows};
+pub use ops::{matmul, relu_inplace, spmm_csr};
+pub use profile::{profile_train_step, StepProfile};

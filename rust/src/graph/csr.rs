@@ -1,0 +1,89 @@
+//! Compressed-sparse-row graph storage (destination-indexed: `indptr[d]`
+//! ranges over the in-edges of node d, matching the aggregation
+//! direction of the GNN models).
+
+/// CSR adjacency with per-edge f32 weights.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    pub num_nodes: usize,
+    /// len = num_nodes + 1
+    pub indptr: Vec<u32>,
+    /// len = num_edges; source node of each in-edge
+    pub indices: Vec<u32>,
+    /// len = num_edges; aggregation weight of each in-edge
+    pub weights: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// Build from an edge list (src, dst, w), bucketing by destination.
+    pub fn from_edges(num_nodes: usize, src: &[u32], dst: &[u32],
+                      w: &[f32]) -> Self {
+        assert_eq!(src.len(), dst.len());
+        assert_eq!(src.len(), w.len());
+        let mut indptr = vec![0u32; num_nodes + 1];
+        for &d in dst {
+            indptr[d as usize + 1] += 1;
+        }
+        for i in 0..num_nodes {
+            indptr[i + 1] += indptr[i];
+        }
+        let ne = src.len();
+        let mut indices = vec![0u32; ne];
+        let mut weights = vec![0f32; ne];
+        let mut cursor = indptr.clone();
+        for e in 0..ne {
+            let d = dst[e] as usize;
+            let slot = cursor[d] as usize;
+            indices[slot] = src[e];
+            weights[slot] = w[e];
+            cursor[d] += 1;
+        }
+        CsrGraph { num_nodes, indptr, indices, weights }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// In-degree of node d.
+    pub fn degree(&self, d: usize) -> usize {
+        (self.indptr[d + 1] - self.indptr[d]) as usize
+    }
+
+    /// (sources, weights) of node d's in-edges.
+    pub fn in_edges(&self, d: usize) -> (&[u32], &[f32]) {
+        let a = self.indptr[d] as usize;
+        let b = self.indptr[d + 1] as usize;
+        (&self.indices[a..b], &self.weights[a..b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_from_edge_list() {
+        // edges: 0->1, 2->1, 1->0
+        let g = CsrGraph::from_edges(3, &[0, 2, 1], &[1, 1, 0],
+                                     &[0.5, 0.25, 1.0]);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(2), 0);
+        let (src, w) = g.in_edges(1);
+        let mut pairs: Vec<_> = src.iter().zip(w.iter()).collect();
+        pairs.sort_by_key(|(s, _)| **s);
+        assert_eq!(*pairs[0].0, 0);
+        assert_eq!(*pairs[0].1, 0.5);
+        assert_eq!(*pairs[1].0, 2);
+        assert_eq!(*pairs[1].1, 0.25);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(2, &[], &[], &[]);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.degree(0), 0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Synthetic labeled-graph generation (SBM-style).
+//!
+//! Mirrors `python/tests/test_model.py::make_sbm` structurally: labels
+//! uniform over classes, a fraction of edges intra-class (homophily),
+//! features = class centroid + unit noise. This gives the GNNs a
+//! learnable task whose difficulty tracks the homophily/noise knobs —
+//! the property Table 4 / Fig 5 need (accuracy responds to training and
+//! to top-k approximation, not to memorized real-world edges).
+
+use crate::graph::datasets::GraphData;
+use crate::util::rng::Rng;
+
+/// Generation knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SbmParams {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// probability an edge's source is drawn from the destination's class
+    pub homophily: f64,
+    /// centroid scale relative to unit feature noise
+    pub signal: f32,
+    /// train/val split points (train < val <= 1.0); test = remainder
+    pub train_frac: f64,
+    pub val_frac: f64,
+}
+
+impl Default for SbmParams {
+    fn default() -> Self {
+        SbmParams {
+            num_nodes: 256,
+            num_edges: 2048,
+            feat_dim: 32,
+            num_classes: 4,
+            homophily: 0.6,
+            signal: 1.5,
+            train_frac: 0.5,
+            val_frac: 0.2,
+        }
+    }
+}
+
+/// Generate a labeled SBM-style graph with features, normalized edge
+/// weights (symmetric GCN norm) and train/val/test masks.
+pub fn sbm_graph(p: &SbmParams, seed: u64) -> GraphData {
+    let mut rng = Rng::seed_from(seed);
+    let n = p.num_nodes;
+    let e = p.num_edges;
+    let c = p.num_classes;
+
+    // labels + class index
+    let labels: Vec<u32> = (0..n).map(|_| rng.index(c) as u32).collect();
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); c];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(i as u32);
+    }
+
+    // edges: destination uniform; source homophilous
+    let mut src = vec![0u32; e];
+    let mut dst = vec![0u32; e];
+    for i in 0..e {
+        let d = rng.index(n);
+        dst[i] = d as u32;
+        let class = labels[d] as usize;
+        src[i] = if rng.chance(p.homophily) && !by_class[class].is_empty() {
+            by_class[class][rng.index(by_class[class].len())]
+        } else {
+            rng.index(n) as u32
+        };
+    }
+
+    // symmetric GCN normalization: w = 1 / sqrt((deg_s+1)(deg_d+1))
+    let mut deg = vec![0u32; n];
+    for &d in &dst {
+        deg[d as usize] += 1;
+    }
+    let w: Vec<f32> = src
+        .iter()
+        .zip(&dst)
+        .map(|(&s, &d)| {
+            1.0 / (((deg[s as usize] + 1) * (deg[d as usize] + 1)) as f32)
+                .sqrt()
+        })
+        .collect();
+
+    // features: class centroid * signal + N(0,1) noise
+    let centroids: Vec<f32> = {
+        let mut v = vec![0f32; c * p.feat_dim];
+        rng.fill_normal(&mut v);
+        v
+    };
+    let mut feats = vec![0f32; n * p.feat_dim];
+    for i in 0..n {
+        let l = labels[i] as usize;
+        for j in 0..p.feat_dim {
+            feats[i * p.feat_dim + j] =
+                centroids[l * p.feat_dim + j] * p.signal + rng.normal_f32();
+        }
+    }
+
+    // masks
+    let mut train_mask = vec![0f32; n];
+    let mut val_mask = vec![0f32; n];
+    let mut test_mask = vec![0f32; n];
+    for i in 0..n {
+        let r = rng.uniform();
+        if r < p.train_frac {
+            train_mask[i] = 1.0;
+        } else if r < p.train_frac + p.val_frac {
+            val_mask[i] = 1.0;
+        } else {
+            test_mask[i] = 1.0;
+        }
+    }
+
+    GraphData {
+        num_nodes: n,
+        feat_dim: p.feat_dim,
+        num_classes: c,
+        src,
+        dst,
+        weights: w,
+        feats,
+        labels,
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let p = SbmParams::default();
+        let g = sbm_graph(&p, 1);
+        assert_eq!(g.src.len(), p.num_edges);
+        assert_eq!(g.feats.len(), p.num_nodes * p.feat_dim);
+        assert!(g.labels.iter().all(|&l| (l as usize) < p.num_classes));
+        assert!(g.src.iter().all(|&s| (s as usize) < p.num_nodes));
+        assert!(g.weights.iter().all(|&w| w > 0.0 && w <= 1.0));
+    }
+
+    #[test]
+    fn masks_partition_nodes() {
+        let g = sbm_graph(&SbmParams::default(), 2);
+        for i in 0..g.num_nodes {
+            let s = g.train_mask[i] + g.val_mask[i] + g.test_mask[i];
+            assert_eq!(s, 1.0, "node {i} in {s} masks");
+        }
+        let train: f32 = g.train_mask.iter().sum();
+        assert!(train > 0.3 * g.num_nodes as f32);
+    }
+
+    #[test]
+    fn homophily_is_realized() {
+        let p = SbmParams { homophily: 0.8, ..Default::default() };
+        let g = sbm_graph(&p, 3);
+        let intra = g
+            .src
+            .iter()
+            .zip(&g.dst)
+            .filter(|(&s, &d)| g.labels[s as usize] == g.labels[d as usize])
+            .count();
+        let frac = intra as f64 / g.src.len() as f64;
+        // 0.8 homophilous + 1/c of the random remainder
+        assert!(frac > 0.7, "intra-class fraction {frac}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = sbm_graph(&SbmParams::default(), 7);
+        let b = sbm_graph(&SbmParams::default(), 7);
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.feats, b.feats);
+        let c = sbm_graph(&SbmParams::default(), 8);
+        assert_ne!(a.src, c.src);
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph substrate: CSR storage, synthetic SBM-style labeled-graph
+//! generation, and the simulated dataset registry that stands in for
+//! Flickr / Yelp / Reddit / Ogbn-products (DESIGN.md §6).
+
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+
+pub use csr::CsrGraph;
+pub use datasets::{DatasetSpec, GraphData, ALL_DATASETS};
+pub use generate::sbm_graph;

@@ -1,0 +1,48 @@
+//! # RTop-K: row-wise top-k selection for neural-network acceleration
+//!
+//! Reproduction of *RTop-K: Ultra-Fast Row-Wise Top-K Selection for Neural
+//! Network Acceleration on GPUs* (ICLR 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the request-path coordinator: a row-wise
+//!   top-k service ([`coordinator`]), the PJRT runtime that executes the
+//!   AOT-compiled JAX artifacts ([`runtime`]), and every substrate the
+//!   paper's evaluation needs — the top-k algorithm zoo incl. the
+//!   RadixSelect baseline ([`topk`]), a warp-level GPU cost simulator
+//!   ([`simt`]), graph datasets ([`graph`]), and a CPU GNN compute
+//!   substrate ([`gnn`]).
+//! * **Layer 2** — JAX MaxK-GNN models, lowered once by
+//!   `python/compile/aot.py` into `artifacts/*.hlo.txt`.
+//! * **Layer 1** — the Pallas binary-search top-k kernel embedded in
+//!   those artifacts.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time
+//! only, and the binary in `rust/src/main.rs` is self-contained after it.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use rtopk::topk::{rowwise_topk, Mode};
+//! use rtopk::util::matrix::RowMatrix;
+//! use rtopk::util::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from(42);
+//! let x = RowMatrix::random_normal(1024, 256, &mut rng);
+//! let res = rowwise_topk(&x, 32, Mode::EarlyStop { max_iter: 4 });
+//! assert_eq!(res.indices.len(), 1024 * 32);
+//! ```
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! measured paper-vs-reproduction numbers.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod gnn;
+pub mod graph;
+pub mod runtime;
+pub mod simt;
+pub mod stats;
+pub mod topk;
+pub mod util;

@@ -1,0 +1,301 @@
+//! `rtopk` — leader binary: row-wise top-k service, MaxK-GNN trainer,
+//! and analysis subcommands, all driven by the AOT artifacts.
+
+use anyhow::{anyhow, Result};
+use rtopk::bench::{parse_mode, workload, Table};
+use rtopk::cli::{App, Args, Command};
+use rtopk::config::{Config, ServeConfig};
+use rtopk::coordinator::{Trainer, TopKService};
+use rtopk::runtime::executor::Executor;
+use rtopk::stats::expected_iterations;
+use rtopk::topk::verify::approx_metrics;
+use rtopk::topk::{rowwise_topk, Mode};
+use rtopk::util::rng::Rng;
+use rtopk::util::matrix::RowMatrix;
+use std::time::Instant;
+
+fn app() -> App {
+    App {
+        name: "rtopk",
+        about: "row-wise top-k selection service (RTop-K reproduction)",
+        commands: vec![
+            Command::new("topk", "run row-wise top-k on a random matrix")
+                .opt("rows", "65536", "number of rows N")
+                .opt("cols", "256", "row length M")
+                .opt("k", "32", "elements to select per row")
+                .opt("mode", "exact", "exact | es<N> | eps<X>")
+                .opt("seed", "42", "workload seed")
+                .switch("verify", "check against the exact oracle"),
+            Command::new("serve", "start the top-k service and run a demo load")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("config", "", "optional TOML config file")
+                .opt("requests", "64", "demo requests to issue")
+                .opt("rows", "1024", "rows per demo request")
+                .opt("cols", "256", "row length M")
+                .opt("k", "32", "k per row")
+                .opt("mode", "es4", "search mode")
+                .switch("cpu-only", "skip PJRT, use the CPU engine"),
+            Command::new("train", "train a MaxK-GNN via the AOT artifacts")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("model", "gcn", "gcn | sage | gin")
+                .opt("dataset", "flickr-sim", "dataset name")
+                .opt("mode", "es4", "topk mode baked in the artifact (exact | es<N>)")
+                .opt("steps", "200", "training steps")
+                .opt("eval-every", "20", "log cadence")
+                .opt("seed", "42", "dataset + init seed"),
+            Command::new("stats", "iteration statistics + E(n) model (Tables 1/5)")
+                .opt("cols", "256", "row length M")
+                .opt("k", "32", "k per row")
+                .opt("eps", "0.0001", "relative precision eps'")
+                .opt("trials", "10000", "repetitions"),
+            Command::new("analyze", "early-stop quality metrics (Table 2)")
+                .opt("cols", "256", "row length M")
+                .opt("k", "32", "k per row")
+                .opt("rows", "10000", "rows to sample")
+                .opt("iters", "2,3,4,5,6,7,8", "max_iter sweep"),
+            Command::new("info", "show manifest + routing table")
+                .opt("artifacts", "artifacts", "artifacts directory"),
+            Command::new("run", "execute one artifact with random inputs and time it")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt_req("name", "artifact name from the manifest")
+                .opt("reps", "5", "timed repetitions")
+                .opt("seed", "1", "input seed"),
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let app = app();
+    match app.dispatch(&argv) {
+        Err(help) => {
+            eprintln!("{help}");
+            std::process::exit(if argv.is_empty() { 0 } else { 2 });
+        }
+        Ok((cmd, args)) => {
+            let run = match cmd.name {
+                "topk" => cmd_topk(&args),
+                "serve" => cmd_serve(&args),
+                "train" => cmd_train(&args),
+                "stats" => cmd_stats(&args),
+                "analyze" => cmd_analyze(&args),
+                "info" => cmd_info(&args),
+                "run" => cmd_run(&args),
+                _ => unreachable!(),
+            };
+            if let Err(e) = run {
+                eprintln!("error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn cmd_topk(a: &Args) -> Result<()> {
+    let rows: usize = a.req("rows").map_err(anyhow::Error::msg)?;
+    let cols: usize = a.req("cols").map_err(anyhow::Error::msg)?;
+    let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
+    let seed: u64 = a.req("seed").map_err(anyhow::Error::msg)?;
+    let mode = parse_mode(a.get("mode").unwrap()).map_err(anyhow::Error::msg)?;
+    let x = workload(rows, cols, seed);
+    let t0 = Instant::now();
+    let res = rowwise_topk(&x, k, mode);
+    let dt = t0.elapsed();
+    println!(
+        "rtopk: N={rows} M={cols} k={k} mode={} -> {:.3} ms ({:.1} Mrows/s)",
+        mode.tag(),
+        dt.as_secs_f64() * 1e3,
+        rows as f64 / dt.as_secs_f64() / 1e6
+    );
+    if a.switch("verify") {
+        let m = approx_metrics(&x, &res);
+        println!(
+            "vs exact oracle: hit={:.2}% E1={:.3}% E2={:.3}%",
+            m.hit * 100.0,
+            m.e1 * 100.0,
+            m.e2 * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    if let Some(path) = a.get("config").filter(|s| !s.is_empty()) {
+        let c = Config::load(std::path::Path::new(path))
+            .map_err(anyhow::Error::msg)?;
+        cfg = ServeConfig::from_config(&c);
+    }
+    cfg.artifacts_dir = a.get("artifacts").unwrap().to_string();
+    let svc = if a.switch("cpu-only") {
+        TopKService::cpu_only(&cfg)?
+    } else {
+        TopKService::start(&cfg)?
+    };
+    println!("service up; compiled variants: {:?}", svc.variants());
+
+    let requests: usize = a.req("requests").map_err(anyhow::Error::msg)?;
+    let rows: usize = a.req("rows").map_err(anyhow::Error::msg)?;
+    let cols: usize = a.req("cols").map_err(anyhow::Error::msg)?;
+    let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
+    let mode = parse_mode(a.get("mode").unwrap()).map_err(anyhow::Error::msg)?;
+
+    let mut rng = Rng::seed_from(7);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..requests)
+        .map(|_| {
+            let x = RowMatrix::random_normal(rows, cols, &mut rng);
+            svc.submit_async(x, k, mode)
+        })
+        .collect::<Result<_>>()?;
+    for h in handles {
+        h.wait()?;
+    }
+    let dt = t0.elapsed();
+    let s = svc.stats();
+    println!(
+        "{requests} requests x {rows} rows in {:.1} ms -> {:.2} Mrows/s",
+        dt.as_secs_f64() * 1e3,
+        (requests * rows) as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!(
+        "latency us: p50={:.0} p95={:.0} p99={:.0} max={:.0}; \
+         batches={} (pjrt={}, cpu={})",
+        s.p50_us, s.p95_us, s.p99_us, s.max_us, s.batches, s.pjrt_batches,
+        s.cpu_batches
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_train(a: &Args) -> Result<()> {
+    let artifacts = a.get("artifacts").unwrap();
+    let model = a.get("model").unwrap();
+    let dataset = a.get("dataset").unwrap();
+    let mode = a.get("mode").unwrap();
+    let steps: usize = a.req("steps").map_err(anyhow::Error::msg)?;
+    let eval_every: usize = a.req("eval-every").map_err(anyhow::Error::msg)?;
+    let seed: u64 = a.req("seed").map_err(anyhow::Error::msg)?;
+
+    let exec = Executor::spawn(artifacts)?;
+    let tag = format!("{model}_{dataset}_h256_k32_{mode}");
+    let mut trainer = Trainer::new(exec.handle(), &tag, seed)?;
+    println!("training {tag}: {} nodes, {} edges",
+             trainer.graph().num_nodes, trainer.graph().src.len());
+    let out = trainer.train(steps, eval_every, |s, loss, acc| {
+        println!("  step {s:5}  loss {loss:.4}  train-acc {acc:.3}");
+    })?;
+    println!(
+        "done in {:.1}s ({:.1} ms/step); val acc {:.3}, test acc {:.3}",
+        out.wall.as_secs_f64(),
+        out.per_step.as_secs_f64() * 1e3,
+        out.final_val_acc,
+        out.final_test_acc
+    );
+    Ok(())
+}
+
+fn cmd_stats(a: &Args) -> Result<()> {
+    let m: usize = a.req("cols").map_err(anyhow::Error::msg)?;
+    let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
+    let eps: f32 = a.req("eps").map_err(anyhow::Error::msg)?;
+    let trials: usize = a.req("trials").map_err(anyhow::Error::msg)?;
+    let h = rtopk::bench::exit_iteration_histogram(m, k, eps, trials, 1234);
+    let mut t = Table::new(
+        &format!("exit iterations: M={m} k={k} eps={eps} ({trials} trials)"),
+        &["iteration", "cumulative %"],
+    );
+    for it in 1..=h.max_value() {
+        t.row(vec![it.to_string(), format!("{:.2}", h.cdf_at(it) * 100.0)]);
+    }
+    t.print();
+    println!("measured average exit: {:.2}", h.mean());
+    if k < m {
+        println!("analytic E(n) (Eq. 4):  {:.2}", expected_iterations(m, k));
+    }
+    Ok(())
+}
+
+fn cmd_analyze(a: &Args) -> Result<()> {
+    let m: usize = a.req("cols").map_err(anyhow::Error::msg)?;
+    let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
+    let rows: usize = a.req("rows").map_err(anyhow::Error::msg)?;
+    let iters = a.get("iters").unwrap();
+    let x = workload(rows, m, 99);
+    let mut t = Table::new(
+        &format!("early-stop quality: M={m} k={k} over {rows} rows"),
+        &["max_iter", "E1 %", "E2 %", "Hit %"],
+    );
+    for it in iters.split(',') {
+        let it: u32 = it.trim().parse().map_err(|_| anyhow!("bad iters"))?;
+        let res = rowwise_topk(&x, k, Mode::EarlyStop { max_iter: it });
+        let mt = approx_metrics(&x, &res);
+        t.row(vec![
+            it.to_string(),
+            format!("{:.2}", mt.e1 * 100.0),
+            format!("{:.2}", mt.e2 * 100.0),
+            format!("{:.2}", mt.hit * 100.0),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_run(a: &Args) -> Result<()> {
+    use rtopk::runtime::tensor::HostTensor;
+    let dir = a.get("artifacts").unwrap();
+    let name = a.get("name").ok_or_else(|| anyhow!("--name required"))?;
+    let reps: usize = a.req("reps").map_err(anyhow::Error::msg)?;
+    let seed: u64 = a.req("seed").map_err(anyhow::Error::msg)?;
+    let exec = Executor::spawn(dir)?;
+    let h = exec.handle();
+    let info = h.manifest().get(name)?.clone();
+    let mut rng = Rng::seed_from(seed);
+    let inputs: Vec<HostTensor> = info
+        .inputs
+        .iter()
+        .map(|s| {
+            let n: usize = s.shape.iter().product::<usize>().max(1);
+            if s.dtype == "int32" {
+                HostTensor::i32(vec![0i32; n], &s.shape)
+            } else {
+                let mut d = vec![0f32; n];
+                rng.fill_normal(&mut d);
+                HostTensor::f32(d, &s.shape)
+            }
+        })
+        .collect();
+    // warmup (includes compile)
+    let t0 = Instant::now();
+    h.execute(name, inputs.clone())?;
+    println!("compile+first: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    let mut times = Vec::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        h.execute(name, inputs.clone())?;
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    times.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    println!("{name}: median {:.2} ms over {reps} reps (min {:.2})",
+             times[times.len() / 2], times[0]);
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    let dir = a.get("artifacts").unwrap();
+    let exec = Executor::spawn(dir)?;
+    let h = exec.handle();
+    println!("platform: {}", h.platform());
+    println!("artifact set: {}", h.manifest().artifact_set);
+    let mut t = Table::new("artifacts", &["name", "kind", "inputs", "outputs"]);
+    for (name, a) in &h.manifest().artifacts {
+        t.row(vec![
+            name.clone(),
+            a.kind().to_string(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! Executor: a dedicated thread owning the ArtifactStore, fronted by a
+//! cloneable channel handle. This is the device-stream abstraction the
+//! coordinator schedules onto (PJRT state is !Send, and a single-device
+//! deployment has exactly one execution stream anyway).
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::store::ArtifactStore;
+use crate::runtime::tensor::HostTensor;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::Sender<Result<Vec<HostTensor>>>,
+    },
+    Precompile {
+        names: Vec<String>,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the executor thread. Clone freely across threads.
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    manifest: Arc<Manifest>,
+    platform: String,
+}
+
+impl ExecutorHandle {
+    /// The manifest, available without crossing the channel.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Execute an artifact synchronously (blocks this thread, not the
+    /// executor's queue — requests are serialized on the device stream,
+    /// matching single-device semantics).
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+
+    /// Compile a set of artifacts ahead of serving.
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Precompile {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| anyhow!("executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
+    }
+}
+
+/// The executor thread owner. Dropping it shuts the thread down.
+pub struct Executor {
+    handle: ExecutorHandle,
+    join: Option<JoinHandle<()>>,
+    shutdown_tx: mpsc::Sender<Request>,
+}
+
+impl Executor {
+    /// Spawn the executor thread over an artifacts directory.
+    pub fn spawn(artifacts_dir: &str) -> Result<Executor> {
+        // Open the store on this thread first to surface errors eagerly,
+        // then hand it to the worker... PJRT state is !Send, so instead
+        // open it *on* the worker and report readiness through a channel.
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(Manifest, String)>>();
+        let (tx, rx) = mpsc::channel::<Request>();
+        let dir = artifacts_dir.to_string();
+        let join = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let store = match ArtifactStore::open(&dir) {
+                    Ok(s) => {
+                        let _ = ready_tx
+                            .send(Ok((s.manifest().clone(), s.platform())));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { name, inputs, reply } => {
+                            let _ = reply.send(store.execute(&name, &inputs));
+                        }
+                        Request::Precompile { names, reply } => {
+                            let refs: Vec<&str> =
+                                names.iter().map(|s| s.as_str()).collect();
+                            let _ = reply.send(store.precompile(&refs));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn pjrt-executor");
+        let (manifest, platform) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor died during startup"))??;
+        let handle = ExecutorHandle {
+            tx: Arc::new(Mutex::new(tx.clone())),
+            manifest: Arc::new(manifest),
+            platform,
+        };
+        Ok(Executor { handle, join: Some(join), shutdown_tx: tx })
+    }
+
+    pub fn handle(&self) -> ExecutorHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        let _ = self.shutdown_tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// Integration-tested in rust/tests/runtime.rs against real artifacts.

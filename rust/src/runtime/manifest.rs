@@ -1,0 +1,248 @@
+//! Typed view of `artifacts/manifest.json` (the AOT contract emitted by
+//! `python/compile/aot.py`). The Rust runtime is entirely
+//! manifest-driven: artifact names, file paths, I/O shapes/dtypes and
+//! domain metadata (k, mode, dataset spec, parameter names) all come
+//! from here, never from hard-coded assumptions.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    /// file name relative to the artifacts dir
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// raw metadata object (kind-specific fields)
+    pub meta: Value,
+}
+
+impl ArtifactInfo {
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").and_then(Value::as_str).unwrap_or("")
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(Value::as_usize)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(Value::as_str)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifact_set: String,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// dataset name -> (nodes, edges, feat_dim, classes)
+    pub datasets: BTreeMap<String, DatasetShape>,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetShape {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let version = v.get("version").and_then(Value::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v
+            .get("artifacts")
+            .and_then(Value::as_object)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    path: entry
+                        .get("path")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing path"))?
+                        .to_string(),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta: entry.get("meta").cloned().unwrap_or(Value::Null),
+                },
+            );
+        }
+        let mut datasets = BTreeMap::new();
+        if let Some(ds) = v.get("datasets").and_then(Value::as_object) {
+            for (name, d) in ds {
+                let g = |k: &str| {
+                    d.get(k)
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| anyhow!("dataset {name}: missing {k}"))
+                };
+                datasets.insert(
+                    name.clone(),
+                    DatasetShape {
+                        num_nodes: g("num_nodes")?,
+                        num_edges: g("num_edges")?,
+                        feat_dim: g("feat_dim")?,
+                        num_classes: g("num_classes")?,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            artifact_set: v
+                .get("artifact_set")
+                .and_then(Value::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            artifacts,
+            datasets,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!(
+                "artifact {name:?} not in manifest (set={}); available: {:?}",
+                self.artifact_set,
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            ))
+    }
+
+    /// All artifacts of a given kind ("rtopk_tile", "train_step", ...).
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactInfo> {
+        self.artifacts.values().filter(|a| a.kind() == kind).collect()
+    }
+
+    /// Cross-check the manifest's dataset shapes against the Rust-side
+    /// registry (`graph::datasets`) — the two tables must stay in sync.
+    pub fn validate_datasets(&self) -> Result<()> {
+        for (name, shape) in &self.datasets {
+            if let Some(spec) = crate::graph::datasets::spec(name) {
+                if spec.num_nodes != shape.num_nodes
+                    || spec.num_edges() != shape.num_edges
+                    || spec.feat_dim != shape.feat_dim
+                    || spec.num_classes != shape.num_classes
+                {
+                    bail!(
+                        "dataset {name:?} shape drift: python {shape:?} vs rust \
+                         ({}, {}, {}, {})",
+                        spec.num_nodes, spec.num_edges(), spec.feat_dim,
+                        spec.num_classes
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifact_set": "quick",
+      "datasets": {
+        "tiny-sim": {"num_nodes": 256, "num_edges": 2048, "avg_degree": 8,
+                      "feat_dim": 32, "num_classes": 4}
+      },
+      "artifacts": {
+        "rtopk_1024x256_k32_exact": {
+          "path": "rtopk_1024x256_k32_exact.hlo.txt",
+          "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+          "outputs": [{"shape": [1024, 32], "dtype": "float32"},
+                       {"shape": [1024, 32], "dtype": "int32"},
+                       {"shape": [1024, 256], "dtype": "float32"}],
+          "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256, "k": 32,
+                    "mode": "exact", "max_iter": 0}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact_set, "quick");
+        let a = m.get("rtopk_1024x256_k32_exact").unwrap();
+        assert_eq!(a.kind(), "rtopk_tile");
+        assert_eq!(a.inputs[0].shape, vec![1024, 256]);
+        assert_eq!(a.outputs[1].dtype, "int32");
+        assert_eq!(a.meta_usize("k"), Some(32));
+        assert_eq!(m.of_kind("rtopk_tile").len(), 1);
+        assert_eq!(m.of_kind("train_step").len(), 0);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn dataset_shapes_validate_against_registry() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        m.validate_datasets().unwrap();
+        assert_eq!(
+            m.datasets["tiny-sim"],
+            DatasetShape { num_nodes: 256, num_edges: 2048, feat_dim: 32, num_classes: 4 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 9, "artifacts": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes
+//! them on the request path.
+//!
+//! Threading model: the `xla` crate's `PjRtClient` is `Rc`-based
+//! (!Send), so all PJRT state lives on one **executor thread**
+//! ([`executor::Executor`]); the rest of the coordinator talks to it
+//! through an mpsc channel handle. This matches the deployment shape of
+//! a single-accelerator serving process (one device stream, many
+//! request threads).
+//!
+//! Interchange: HLO **text** (xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod executor;
+pub mod manifest;
+pub mod store;
+pub mod tensor;
+
+pub use executor::{Executor, ExecutorHandle};
+pub use manifest::{ArtifactInfo, Manifest, TensorSpec};
+pub use store::ArtifactStore;
+pub use tensor::HostTensor;

@@ -1,0 +1,133 @@
+//! ArtifactStore: owns the PJRT client and the compiled executables.
+//! Single-threaded by construction (`PjRtClient` is Rc-based); wrap in
+//! [`crate::runtime::executor::Executor`] for cross-thread access.
+
+use crate::runtime::manifest::{ArtifactInfo, Manifest};
+use crate::runtime::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Loads HLO-text artifacts, compiles them on the PJRT CPU client
+/// (lazily, cached), and executes them with host tensors.
+pub struct ArtifactStore {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactStore> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        manifest.validate_datasets()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(ArtifactStore { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.get(name)?;
+        let path = self.dir.join(&info.path);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Validate inputs against the manifest spec, execute, unpack the
+    /// output tuple into host tensors.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let info = self.manifest.get(name)?.clone();
+        self.check_inputs(&info, inputs)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))?;
+        let out: Vec<HostTensor> = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<_>>()?;
+        if out.len() != info.outputs.len() {
+            bail!(
+                "{name}: manifest declares {} outputs, got {}",
+                info.outputs.len(),
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    fn check_inputs(&self, info: &ArtifactInfo, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                info.name,
+                info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            let dims: Vec<usize> = t.dims().iter().map(|&d| d as usize).collect();
+            if dims != spec.shape {
+                bail!(
+                    "{} input {i}: shape {:?} != manifest {:?}",
+                    info.name, dims, spec.shape
+                );
+            }
+            if t.dtype_str() != spec.dtype {
+                bail!(
+                    "{} input {i}: dtype {} != manifest {}",
+                    info.name,
+                    t.dtype_str(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Warm the compile cache for a set of artifacts (startup hook).
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n).with_context(|| format!("precompile {n}"))?;
+        }
+        Ok(())
+    }
+}
+
+// Unit tests live in rust/tests/runtime.rs (integration) because they
+// need real artifacts built by `make artifacts`.

@@ -1,0 +1,156 @@
+//! Host-side tensors crossing the PJRT boundary.
+
+use anyhow::{bail, Result};
+
+/// A host tensor in the two dtypes the artifact ABI uses (f32, s32).
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> HostTensor {
+        let t = HostTensor::F32 {
+            data,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+        };
+        t.check();
+        t
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> HostTensor {
+        let t = HostTensor::I32 {
+            data,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+        };
+        t.check();
+        t
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32 { data: vec![v], dims: vec![] }
+    }
+
+    fn check(&self) {
+        let (len, dims) = match self {
+            HostTensor::F32 { data, dims } => (data.len(), dims),
+            HostTensor::I32 { data, dims } => (data.len(), dims),
+        };
+        let expect: i64 = dims.iter().product::<i64>().max(1);
+        assert_eq!(len as i64, if dims.is_empty() { 1 } else { expect },
+                   "tensor data/dims mismatch");
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            HostTensor::F32 { dims, .. } | HostTensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor, got {}", self.dtype_str()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor, got {}", self.dtype_str()),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    /// Build an xla Literal (reshaped to dims).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32 { data, dims } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    l.reshape(dims)?
+                }
+            }
+            HostTensor::I32 { data, dims } => {
+                let l = xla::Literal::vec1(data.as_slice());
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    l.reshape(dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Read back from an xla Literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::F32 {
+                data: lit.to_vec::<f32>()?,
+                dims,
+            }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 {
+                data: lit.to_vec::<i32>()?,
+                dims,
+            }),
+            other => bail!("unsupported artifact output dtype {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.dims(), &[2, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.dtype_str(), "float32");
+    }
+
+    #[test]
+    fn scalar() {
+        let t = HostTensor::scalar_f32(7.5);
+        assert!(t.dims().is_empty());
+        assert_eq!(t.as_f32().unwrap(), &[7.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(vec![1.0; 3], &[2, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+        let ti = HostTensor::i32(vec![7, 8], &[2]);
+        let back = HostTensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(ti, back);
+    }
+}

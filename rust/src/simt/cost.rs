@@ -1,0 +1,75 @@
+//! Cost model for warp-synchronous execution on an A6000-class SM.
+//!
+//! Numbers are per-warp issue costs in cycles, taken from public
+//! microbenchmark literature for Ampere (GA102): they matter only
+//! *relative to each other*, since every figure reports speed-up ratios.
+
+/// Per-operation cycle costs for one warp.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// one coalesced 128B global-memory transaction (32 lanes x f32),
+    /// amortized steady-state (latency hidden by occupancy)
+    pub gmem_txn: f64,
+    /// one shared-memory 32-lane access (bank-conflict-free)
+    pub smem_txn: f64,
+    /// one warp shuffle
+    pub shfl: f64,
+    /// one ballot + popc pair
+    pub ballot: f64,
+    /// one simple ALU/FP op (warp-wide)
+    pub alu: f64,
+    /// block-level barrier
+    pub sync: f64,
+}
+
+impl CostModel {
+    /// A6000 (Ampere GA102)-like steady-state issue costs.
+    pub const A6000: CostModel = CostModel {
+        gmem_txn: 8.0, // ~DRAM bandwidth-limited issue per warp txn
+        smem_txn: 2.0,
+        shfl: 2.0,
+        ballot: 3.0,
+        alu: 1.0,
+        sync: 20.0,
+    };
+
+    /// SM clock in GHz (A6000 boost ~1.8 GHz).
+    pub const A6000_CLOCK_GHZ: f64 = 1.8;
+    /// SM count on the A6000.
+    pub const A6000_SMS: usize = 84;
+    /// shared memory per block the paper assumes (8192 f32 elements).
+    pub const SMEM_F32_PER_BLOCK: usize = 8192;
+}
+
+/// Cycle totals per kernel stage (Fig. 3's decomposition).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageCycles {
+    pub load: f64,
+    pub search: f64,
+    pub select: f64,
+}
+
+impl StageCycles {
+    pub fn total(&self) -> f64 {
+        self.load + self.search + self.select
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a6000_costs_ordered_sanely() {
+        let c = CostModel::A6000;
+        assert!(c.alu < c.smem_txn);
+        assert!(c.smem_txn < c.gmem_txn);
+        assert!(c.sync > c.gmem_txn);
+    }
+
+    #[test]
+    fn stage_total() {
+        let s = StageCycles { load: 1.0, search: 2.0, select: 3.0 };
+        assert_eq!(s.total(), 6.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Warp-level GPU execution simulator.
+//!
+//! The paper's testbed is an NVIDIA A6000; this substrate models the
+//! kernel's three stages (Fig. 3: load -> search -> select) at the
+//! warp-instruction level with an A6000-like cost model, so Fig. 4/6/7's
+//! *kernel-time* comparisons can be reproduced as cycle estimates in
+//! addition to the CPU wall-clock benches. It also provides the
+//! structural VMEM/roofline estimates DESIGN.md §5 commits to for the
+//! TPU mapping.
+//!
+//! Fidelity statement: this is a cost model, not a cycle-accurate GPU.
+//! It charges each stage the *memory transactions and warp-synchronous
+//! instructions the algorithm provably performs* (coalesced 128B global
+//! loads, shared-memory reads, shuffle/ballot/popc ops, ALU ops) and
+//! derives kernel time from occupancy-limited wave counts — the same
+//! accounting the paper uses to argue its complexity (Appendix B).
+
+pub mod cost;
+pub mod kernels;
+pub mod occupancy;
+
+pub use cost::{CostModel, StageCycles};
+pub use kernels::{simulate_radix_row, simulate_rtopk_row, KernelEstimate};
+pub use occupancy::kernel_time_ms;

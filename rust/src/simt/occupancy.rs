@@ -1,0 +1,59 @@
+//! Occupancy model: from per-warp cycle estimates to kernel time.
+//!
+//! The paper's occupancy rule (Appendix B): one warp per row, and
+//! `floor(8192 / M)` warps per block so each block's rows fit shared
+//! memory. Kernel time = waves * per-warp cycles / clock, where a wave
+//! is `SMs * warps_per_sm` concurrent warps.
+
+use crate::simt::cost::CostModel;
+use crate::simt::kernels::KernelEstimate;
+
+/// Concurrent warps the device sustains for a given per-warp smem need.
+pub fn concurrent_warps(smem_f32_per_warp: usize, sms: usize) -> usize {
+    // warps per block limited by the paper's 8192-f32 shared budget
+    let per_block = (CostModel::SMEM_F32_PER_BLOCK / smem_f32_per_warp.max(1))
+        .clamp(1, 32);
+    // Ampere SM sustains up to 48 warps; assume 4 resident blocks/SM max
+    let per_sm = (per_block * 4).min(48);
+    sms * per_sm
+}
+
+/// Estimated kernel wall time in milliseconds for N rows.
+pub fn kernel_time_ms(n_rows: usize, est: &KernelEstimate, sms: usize,
+                      clock_ghz: f64) -> f64 {
+    let conc = concurrent_warps(est.smem_f32, sms) as f64;
+    let waves = (n_rows as f64 / conc).ceil();
+    let cycles = waves * est.stages.total();
+    cycles / (clock_ghz * 1e9) * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simt::kernels::simulate_rtopk_row;
+
+    #[test]
+    fn occupancy_shrinks_with_m() {
+        assert!(concurrent_warps(256, 84) > concurrent_warps(2048, 84));
+        assert_eq!(concurrent_warps(16_384, 84), 84 * 4);
+    }
+
+    #[test]
+    fn time_scales_with_rows() {
+        let est = simulate_rtopk_row(256, 32, 9.0, &CostModel::A6000);
+        let t1 = kernel_time_ms(1 << 14, &est, 84, 1.8);
+        let t2 = kernel_time_ms(1 << 20, &est, 84, 1.8);
+        assert!(t2 > 30.0 * t1, "t1={t1} t2={t2}");
+        assert!(t1 > 0.0);
+    }
+
+    #[test]
+    fn fig4_magnitude_sanity() {
+        // paper Fig 4: N=2^20, M=256 RTop-K kernel runs in ~0.1-1 ms.
+        let est = simulate_rtopk_row(256, 32, 9.6, &CostModel::A6000);
+        let t = kernel_time_ms(1 << 20, &est,
+                               CostModel::A6000_SMS,
+                               CostModel::A6000_CLOCK_GHZ);
+        assert!((0.02..20.0).contains(&t), "estimated {t} ms");
+    }
+}

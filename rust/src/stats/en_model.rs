@@ -1,0 +1,98 @@
+//! Appendix A: closed-form expected iteration count of Algorithm 1.
+//!
+//! For a length-M vector of i.i.d. N(mu, sigma^2) elements, the paper
+//! derives (Eq. 4):
+//!
+//! ```text
+//! E(n) ~= log2( 2 M sqrt(ln M / pi) )
+//!         - (1 / (2 ln 2)) * ( Phi^{-1}(1 - k/M) )^2
+//! ```
+//!
+//! independent of (mu, sigma). Table 5's bottom row compares this to
+//! measurement; `benches/table5_exit_full.rs` regenerates both sides.
+
+use crate::stats::normal::norm_ppf;
+
+/// Eq. 4: expected binary-search iterations for (M, k).
+pub fn expected_iterations(m: usize, k: usize) -> f64 {
+    assert!(k >= 1 && k < m, "model needs 1 <= k < M, got k={k} M={m}");
+    let mf = m as f64;
+    let kf = k as f64;
+    let lead = (2.0 * mf * (mf.ln() / std::f64::consts::PI).sqrt()).log2();
+    let z = norm_ppf(1.0 - kf / mf);
+    lead - z * z / (2.0 * std::f64::consts::LN_2)
+}
+
+/// Eq. 3: expected initial bracket width D ~ 2 sigma sqrt(2 ln M).
+pub fn expected_initial_bracket(m: usize, sigma: f64) -> f64 {
+    2.0 * sigma * (2.0 * (m as f64).ln()).sqrt()
+}
+
+/// Eq. 1: expected selection threshold for (M, k) under N(mu, sigma^2).
+pub fn expected_threshold(m: usize, k: usize, mu: f64, sigma: f64) -> f64 {
+    mu + sigma * norm_ppf(1.0 - k as f64 / m as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 5 bottom row: E(n) for selected (M, k).
+    #[test]
+    fn matches_paper_table5_values() {
+        // (M, k, E(n) from the paper)
+        let cases = [
+            (256, 64, 9.08),
+            (256, 128, 9.41),
+            (1024, 64, 9.87),
+            (1024, 128, 10.62),
+            (1024, 256, 11.24),
+            (1024, 512, 11.57),
+            (4096, 64, 10.36),
+            (4096, 512, 12.75),
+            (8192, 64, 10.54),
+            (8192, 512, 13.06),
+        ];
+        for (m, k, want) in cases {
+            let got = expected_iterations(m, k);
+            assert!(
+                (got - want).abs() < 0.02,
+                "E(n) for M={m} k={k}: got {got:.3}, paper {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_in_m_for_fixed_ratio() {
+        // larger M at the same k/M ratio needs more iterations
+        let a = expected_iterations(256, 64);
+        let b = expected_iterations(1024, 256);
+        let c = expected_iterations(8192, 2048);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn symmetric_k_term() {
+        // the Phi^{-1} correction vanishes at k = M/2 -> maximal E(n)
+        let mid = expected_iterations(1024, 512);
+        for &k in &[64usize, 128, 256, 960] {
+            assert!(expected_iterations(1024, k) <= mid + 1e-12);
+        }
+    }
+
+    #[test]
+    fn bracket_grows_slowly() {
+        let d1 = expected_initial_bracket(256, 1.0);
+        let d2 = expected_initial_bracket(8192, 1.0);
+        assert!(d1 < d2 && d2 < d1 * 1.5);
+    }
+
+    #[test]
+    fn threshold_location() {
+        // k = M/2 -> threshold at the mean (erfc-limited accuracy ~1e-7)
+        let t = expected_threshold(1000, 500, 3.0, 2.0);
+        assert!((t - 3.0).abs() < 1e-6);
+        // small k -> threshold in the upper tail
+        assert!(expected_threshold(1000, 10, 0.0, 1.0) > 2.0);
+    }
+}

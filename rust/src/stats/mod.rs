@@ -1,0 +1,11 @@
+//! Statistics substrate: normal-distribution special functions, the
+//! paper's Appendix-A expected-iteration model, and summary helpers
+//! used by every experiment harness.
+
+pub mod en_model;
+pub mod normal;
+pub mod summary;
+
+pub use en_model::expected_iterations;
+pub use normal::{norm_cdf, norm_pdf, norm_ppf};
+pub use summary::{percentile, Summary};

@@ -1,0 +1,546 @@
+//! Baseline top-k algorithms the paper compares against or surveys
+//! (§2.1/§2.3): RadixSelect (PyTorch's `torch.topk` underlying method),
+//! QuickSelect, heap select, bucket select, bitonic top-k, full sort.
+//!
+//! All implementations are faithful to the algorithms' structure (the
+//! point of the comparison is per-row *work*, not micro-tuning):
+//! RadixSelect does MSD 8-bit digit passes over order-preserving u32
+//! keys and — like `torch.topk` — returns its k results **sorted**;
+//! RTop-K's results are unsorted, which is part of the paper's argument.
+
+/// Reusable per-thread scratch buffers (allocation-free hot loop).
+pub struct Scratch {
+    pub keys: Vec<u32>,
+    pub tmp_idx: Vec<u32>,
+    pub pairs: Vec<(f32, u32)>,
+    pub hist: [usize; 256],
+}
+
+impl Scratch {
+    pub fn new(m: usize, _k: usize) -> Self {
+        Scratch {
+            keys: Vec::with_capacity(m),
+            tmp_idx: Vec::with_capacity(m),
+            pairs: Vec::with_capacity(m.next_power_of_two()),
+            hist: [0; 256],
+        }
+    }
+}
+
+/// A single-row top-k algorithm. Implementations may order their output
+/// arbitrarily (RadixSelect/Sort return sorted-descending like PyTorch).
+pub trait RowSelector {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], scratch: &mut Scratch);
+}
+
+/// Order-preserving map f32 -> u32: flip all bits of negatives, flip the
+/// sign bit of non-negatives. After the map, unsigned comparison agrees
+/// with the float's total order (the standard radix-select trick; this
+/// is exactly what PyTorch's CUDA radix select does).
+#[inline]
+pub fn f32_to_ordered_u32(x: f32) -> u32 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of `f32_to_ordered_u32`.
+#[inline]
+pub fn ordered_u32_to_f32(u: u32) -> f32 {
+    let b = if u & 0x8000_0000 != 0 {
+        u ^ 0x8000_0000
+    } else {
+        !u
+    };
+    f32::from_bits(b)
+}
+
+// ---------------------------------------------------------------------------
+// RadixSelect — the PyTorch baseline
+// ---------------------------------------------------------------------------
+
+/// MSD radix select over 8-bit digits: 4 histogram passes narrow the
+/// k-th largest key's digit prefix; a final pass collects everything
+/// above the threshold plus enough ties; results are sorted descending
+/// (PyTorch's contract).
+pub struct RadixSelect;
+
+impl RowSelector for RadixSelect {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], scratch: &mut Scratch) {
+        let m = row.len();
+        debug_assert!(k >= 1 && k <= m);
+        // build ordered keys
+        scratch.keys.clear();
+        scratch.keys.extend(row.iter().map(|&v| f32_to_ordered_u32(v)));
+        let keys = &scratch.keys;
+
+        // find the k-th largest key digit by digit (MSD first)
+        let mut prefix: u32 = 0;
+        let mut prefix_mask: u32 = 0;
+        let mut remaining = k;
+        for pass in 0..4 {
+            let shift = 24 - 8 * pass;
+            let hist = &mut scratch.hist;
+            hist.fill(0);
+            for &key in keys {
+                if key & prefix_mask == prefix {
+                    hist[((key >> shift) & 0xFF) as usize] += 1;
+                }
+            }
+            // walk digits from high to low until `remaining` is covered
+            let mut digit = 255usize;
+            loop {
+                let c = hist[digit];
+                if c >= remaining {
+                    break;
+                }
+                remaining -= c;
+                if digit == 0 {
+                    break;
+                }
+                digit -= 1;
+            }
+            prefix |= (digit as u32) << shift;
+            prefix_mask |= 0xFFu32 << shift;
+        }
+        let kth_key = prefix; // full 32-bit key of the k-th largest element
+
+        // collect: everything strictly above kth_key, then ties == kth_key
+        let mut w = 0usize;
+        for (j, &key) in keys.iter().enumerate() {
+            if key > kth_key {
+                vals[w] = row[j];
+                idx[w] = j as u32;
+                w += 1;
+            }
+        }
+        for (j, &key) in keys.iter().enumerate() {
+            if w == k {
+                break;
+            }
+            if key == kth_key {
+                vals[w] = row[j];
+                idx[w] = j as u32;
+                w += 1;
+            }
+        }
+        debug_assert_eq!(w, k);
+        // PyTorch returns sorted results — include the sort in the
+        // baseline's work, as the paper's comparison does.
+        sort_outputs_desc(vals, idx, k);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuickSelect
+// ---------------------------------------------------------------------------
+
+/// Hoare-partition quickselect on (value, index) pairs: partitions until
+/// the k largest occupy the front, then collects (unsorted).
+pub struct QuickSelect;
+
+impl RowSelector for QuickSelect {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], scratch: &mut Scratch) {
+        let m = row.len();
+        scratch.pairs.clear();
+        scratch
+            .pairs
+            .extend(row.iter().enumerate().map(|(j, &v)| (v, j as u32)));
+        let pairs = &mut scratch.pairs[..m];
+        // iterative quickselect for the k-th position in descending order
+        let (mut lo, mut hi) = (0usize, m);
+        let mut state = 0x9E3779B97F4A7C15u64 ^ (m as u64);
+        while hi - lo > 1 {
+            // median-of-3-ish pivot with a cheap xorshift to defeat
+            // adversarial layouts
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let p = lo + (state as usize) % (hi - lo);
+            let pivot = pairs[p].0;
+            // 3-way partition descending: [> pivot | == pivot | < pivot]
+            let (mut i, mut j, mut n) = (lo, lo, hi);
+            while j < n {
+                if pairs[j].0 > pivot {
+                    pairs.swap(i, j);
+                    i += 1;
+                    j += 1;
+                } else if pairs[j].0 < pivot {
+                    n -= 1;
+                    pairs.swap(j, n);
+                } else {
+                    j += 1;
+                }
+            }
+            if k <= i {
+                hi = i;
+            } else if k <= j {
+                break; // k-th position falls inside the == pivot run
+            } else {
+                lo = j;
+            }
+        }
+        for (w, p) in pairs[..k].iter().enumerate() {
+            vals[w] = p.0;
+            idx[w] = p.1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heap select
+// ---------------------------------------------------------------------------
+
+/// Streaming size-k min-heap: the classic CPU method (§2.1 notes it
+/// parallelizes poorly on GPUs; included for completeness).
+pub struct HeapSelect;
+
+impl RowSelector for HeapSelect {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], _scratch: &mut Scratch) {
+        // (value, index) min-heap laid out in the output buffers
+        let mut size = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if size < k {
+                vals[size] = v;
+                idx[size] = j as u32;
+                size += 1;
+                if size == k {
+                    // heapify
+                    for i in (0..k / 2).rev() {
+                        sift_down(vals, idx, i, k);
+                    }
+                }
+            } else if v > vals[0] {
+                vals[0] = v;
+                idx[0] = j as u32;
+                sift_down(vals, idx, 0, k);
+            }
+        }
+        debug_assert_eq!(size, k);
+    }
+}
+
+#[inline]
+fn sift_down(vals: &mut [f32], idx: &mut [u32], mut i: usize, n: usize) {
+    loop {
+        let l = 2 * i + 1;
+        let r = l + 1;
+        let mut smallest = i;
+        if l < n && vals[l] < vals[smallest] {
+            smallest = l;
+        }
+        if r < n && vals[r] < vals[smallest] {
+            smallest = r;
+        }
+        if smallest == i {
+            return;
+        }
+        vals.swap(i, smallest);
+        idx.swap(i, smallest);
+        i = smallest;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bucket select
+// ---------------------------------------------------------------------------
+
+/// Single-level bucket select: 256 equal-width buckets over [min, max],
+/// histogram pass finds the threshold bucket, collect pass emits
+/// everything above it and supplements from inside it (recursing once
+/// into the threshold bucket when it is badly skewed).
+pub struct BucketSelect;
+
+impl RowSelector for BucketSelect {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], scratch: &mut Scratch) {
+        let m = row.len();
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if lo == hi {
+            for w in 0..k {
+                vals[w] = row[w];
+                idx[w] = w as u32;
+            }
+            return;
+        }
+        let nb = 256usize;
+        let scale = nb as f32 / (hi - lo);
+        let hist = &mut scratch.hist;
+        hist.fill(0);
+        let bucket_of = |v: f32| -> usize {
+            (((v - lo) * scale) as usize).min(nb - 1)
+        };
+        for &v in row {
+            hist[bucket_of(v)] += 1;
+        }
+        // highest buckets cover k
+        let mut remaining = k;
+        let mut b = nb - 1;
+        loop {
+            if hist[b] >= remaining {
+                break;
+            }
+            remaining -= hist[b];
+            if b == 0 {
+                break;
+            }
+            b -= 1;
+        }
+        // collect everything above bucket b, then the first `remaining`
+        // elements of bucket b (value-threshold semantics like RTop-K's
+        // borderline pass)
+        let mut w = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if bucket_of(v) > b {
+                vals[w] = v;
+                idx[w] = j as u32;
+                w += 1;
+            }
+        }
+        if w < k {
+            // order the threshold bucket's members to take the true top
+            // `remaining` (one small sort — bucket population ~ m/nb)
+            scratch.pairs.clear();
+            for (j, &v) in row.iter().enumerate() {
+                if bucket_of(v) == b {
+                    scratch.pairs.push((v, j as u32));
+                }
+            }
+            scratch
+                .pairs
+                .sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            for p in scratch.pairs.iter().take(k - w) {
+                vals[w] = p.0;
+                idx[w] = p.1;
+                w += 1;
+            }
+        }
+        debug_assert_eq!(w, k);
+        let _ = m;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitonic top-k
+// ---------------------------------------------------------------------------
+
+/// Bitonic top-k: pad to a power of two with -inf, run the full bitonic
+/// sorting network, take the first k (Shanbhag et al. run partial
+/// networks; the full network is the canonical upper bound and keeps
+/// the implementation honest).
+pub struct BitonicSelect;
+
+impl RowSelector for BitonicSelect {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], scratch: &mut Scratch) {
+        let m = row.len();
+        let n = m.next_power_of_two();
+        scratch.pairs.clear();
+        scratch
+            .pairs
+            .extend(row.iter().enumerate().map(|(j, &v)| (v, j as u32)));
+        scratch
+            .pairs
+            .resize(n, (f32::NEG_INFINITY, u32::MAX));
+        let a = &mut scratch.pairs[..n];
+        // bitonic sort, descending
+        let mut size = 2;
+        while size <= n {
+            let mut stride = size / 2;
+            while stride > 0 {
+                for i in 0..n {
+                    let partner = i ^ stride;
+                    if partner > i {
+                        let up = (i & size) == 0; // descending overall
+                        let swap = if up {
+                            a[i].0 < a[partner].0
+                        } else {
+                            a[i].0 > a[partner].0
+                        };
+                        if swap {
+                            a.swap(i, partner);
+                        }
+                    }
+                }
+                stride /= 2;
+            }
+            size *= 2;
+        }
+        for w in 0..k {
+            vals[w] = a[w].0;
+            idx[w] = a[w].1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full sort
+// ---------------------------------------------------------------------------
+
+/// Sort the whole row descending, take k — the simplest correct method
+/// and the upper bound every select algorithm must beat.
+pub struct SortSelect;
+
+impl RowSelector for SortSelect {
+    fn select_row(&self, row: &[f32], k: usize, vals: &mut [f32],
+                  idx: &mut [u32], scratch: &mut Scratch) {
+        scratch.pairs.clear();
+        scratch
+            .pairs
+            .extend(row.iter().enumerate().map(|(j, &v)| (v, j as u32)));
+        let pairs = &mut scratch.pairs;
+        pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for w in 0..k {
+            vals[w] = pairs[w].0;
+            idx[w] = pairs[w].1;
+        }
+    }
+}
+
+/// Sort (value, index) output buffers descending by value (PyTorch's
+/// output contract for RadixSelect/Sort baselines).
+fn sort_outputs_desc(vals: &mut [f32], idx: &mut [u32], k: usize) {
+    // small-k insertion sort: k <= 128 in every experiment
+    for i in 1..k {
+        let (v, ix) = (vals[i], idx[i]);
+        let mut j = i;
+        while j > 0 && vals[j - 1] < v {
+            vals[j] = vals[j - 1];
+            idx[j] = idx[j - 1];
+            j -= 1;
+        }
+        vals[j] = v;
+        idx[j] = ix;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gens};
+
+    #[test]
+    fn ordered_u32_preserves_order() {
+        let xs = [-1e30f32, -2.5, -0.0, 0.0, 1e-20, 3.5, 1e30];
+        for w in xs.windows(2) {
+            assert!(
+                f32_to_ordered_u32(w[0]) <= f32_to_ordered_u32(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        for &x in &xs {
+            assert_eq!(ordered_u32_to_f32(f32_to_ordered_u32(x)).to_bits(), x.to_bits());
+        }
+    }
+
+    fn oracle(row: &[f32], k: usize) -> Vec<f32> {
+        let mut v = row.to_vec();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v.truncate(k);
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    fn check_selector<S: RowSelector>(s: &S, name: &str) {
+        forall(
+            name,
+            0xABCD,
+            200,
+            |rng| {
+                let (m, k) = gens::m_and_k(rng, 96);
+                (gens::any_row(rng, m), k)
+            },
+            |(row, k)| {
+                let mut vals = vec![0.0f32; *k];
+                let mut idx = vec![0u32; *k];
+                let mut scratch = Scratch::new(row.len(), *k);
+                s.select_row(row, *k, &mut vals, &mut idx, &mut scratch);
+                // gathered + unique
+                for (v, &i) in vals.iter().zip(&idx) {
+                    if (i as usize) >= row.len() || *v != row[i as usize] {
+                        return Err(format!("bad gather v={v} i={i}"));
+                    }
+                }
+                let mut u = idx.clone();
+                u.sort_unstable();
+                u.dedup();
+                if u.len() != *k {
+                    return Err("duplicate indices".into());
+                }
+                let mut got = vals.clone();
+                got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let want = oracle(row, *k);
+                if got != want {
+                    return Err(format!("multiset:\n got {got:?}\nwant {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn radix_property() {
+        check_selector(&RadixSelect, "radix == oracle");
+    }
+
+    #[test]
+    fn quickselect_property() {
+        check_selector(&QuickSelect, "quickselect == oracle");
+    }
+
+    #[test]
+    fn heap_property() {
+        check_selector(&HeapSelect, "heap == oracle");
+    }
+
+    #[test]
+    fn bucket_property() {
+        check_selector(&BucketSelect, "bucket == oracle");
+    }
+
+    #[test]
+    fn bitonic_property() {
+        check_selector(&BitonicSelect, "bitonic == oracle");
+    }
+
+    #[test]
+    fn sort_property() {
+        check_selector(&SortSelect, "sort == oracle");
+    }
+
+    #[test]
+    fn radix_output_is_sorted_descending() {
+        let row = [5.0f32, 1.0, 9.0, 3.0, 7.0, 2.0];
+        let mut vals = vec![0.0; 4];
+        let mut idx = vec![0u32; 4];
+        let mut s = Scratch::new(6, 4);
+        RadixSelect.select_row(&row, 4, &mut vals, &mut idx, &mut s);
+        assert_eq!(vals, vec![9.0, 7.0, 5.0, 3.0]);
+        assert_eq!(idx, vec![2, 4, 0, 3]);
+    }
+
+    #[test]
+    fn heap_handles_k_equals_m() {
+        let row = [2.0f32, 1.0, 3.0];
+        let mut vals = vec![0.0; 3];
+        let mut idx = vec![0u32; 3];
+        let mut s = Scratch::new(3, 3);
+        HeapSelect.select_row(&row, 3, &mut vals, &mut idx, &mut s);
+        let mut got = vals.clone();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, vec![1.0, 2.0, 3.0]);
+    }
+}

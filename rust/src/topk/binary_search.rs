@@ -1,0 +1,368 @@
+//! The paper's contribution: binary-search top-k over one row.
+//!
+//! Semantics are pinned by `python/compile/kernels/ref.py` — this file,
+//! the Pallas kernel and the jnp oracle must agree decision-for-decision
+//! in f32 arithmetic:
+//!
+//! * bracket midpoint: `thres = 0.5 * (lo + hi)` in f32,
+//! * count predicate: `v >= thres`,
+//! * exact mode (Algorithm 1): loop while `hi - lo > eps_rel * max(v)`
+//!   and `cnt != k`; selection thresholds are `(thres, thres)` on a
+//!   `cnt == k` exit and `(hi, lo)` on a bracket exit (tie-safe — the
+//!   last midpoint can land exactly on a tie value),
+//! * early-stop mode (Algorithm 2): exactly `max_iter` iterations,
+//!   `cnt < k -> hi = thres` else `lo = thres`; selection at the final
+//!   `lo` ("min" in the paper), one pass.
+//!
+//! Selection is the unified two-mask ranking: first-k-by-index elements
+//! `>= t1`, supplemented by first elements in `[t2, t1)`. The invariant
+//! `|{v >= t2}| >= k` holds in both modes (t2 only ever moves to a
+//! threshold whose count was >= k), so exactly k elements always emerge.
+
+use crate::topk::types::Mode;
+
+/// Final state of the search phase for one row.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOut {
+    /// primary selection threshold (t1)
+    pub t1: f32,
+    /// secondary/supplement threshold (t2 <= t1)
+    pub t2: f32,
+    /// loop iterations executed (Tables 1 and 5 histogram this)
+    pub iters: u32,
+}
+
+/// Algorithm 1's search loop. `iter_cap` bounds convergence (64 halvings
+/// exhaust f32 resolution from any initial bracket).
+pub fn search_exact(row: &[f32], k: usize, eps_rel: f32, iter_cap: u32) -> SearchOut {
+    debug_assert!(k >= 1 && k <= row.len());
+    let (mut lo, mut hi) = min_max(row);
+    let eps = eps_rel * hi; // paper line 3: eps = eps' * max
+    let mut thres = lo;
+    let mut cnt = row.len();
+    let mut iters = 0u32;
+    while iters < iter_cap && hi - lo > eps && cnt != k {
+        thres = 0.5 * (lo + hi);
+        cnt = count_ge(row, thres);
+        if cnt < k {
+            hi = thres;
+        } else if cnt > k {
+            lo = thres;
+        }
+        iters += 1;
+    }
+    if cnt == k {
+        SearchOut { t1: thres, t2: thres, iters }
+    } else {
+        SearchOut { t1: hi, t2: lo, iters }
+    }
+}
+
+/// Algorithm 2's search loop: exactly `max_iter` iterations, one-pass
+/// selection threshold = final lo.
+pub fn search_early_stop(row: &[f32], k: usize, max_iter: u32) -> SearchOut {
+    debug_assert!(k >= 1 && k <= row.len());
+    let (mut lo, mut hi) = min_max(row);
+    for _ in 0..max_iter {
+        let thres = 0.5 * (lo + hi);
+        let cnt = count_ge(row, thres);
+        if cnt < k {
+            hi = thres;
+        } else {
+            lo = thres;
+        }
+    }
+    SearchOut { t1: lo, t2: lo, iters: max_iter }
+}
+
+/// Count of elements >= t — the hot inner loop. Eight independent i32
+/// accumulators over fixed-width chunks give the autovectorizer a
+/// straight-line SIMD reduction (a single sequential `cnt +=` chain
+/// defeats it); see EXPERIMENTS.md §Perf L3-1.
+#[inline]
+pub fn count_ge(row: &[f32], t: f32) -> usize {
+    let mut acc = [0i32; 8];
+    let chunks = row.chunks_exact(8);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for i in 0..8 {
+            acc[i] += (c[i] >= t) as i32;
+        }
+    }
+    let mut cnt: i32 = acc.iter().sum();
+    for &v in rem {
+        cnt += (v >= t) as i32;
+    }
+    cnt as usize
+}
+
+/// Row min/max in one pass, SIMD-friendly (branchless f32 select; rows
+/// are finite by construction — NaN inputs are documented unsupported).
+#[inline]
+pub fn min_max(row: &[f32]) -> (f32, f32) {
+    let mut lo = [f32::INFINITY; 8];
+    let mut hi = [f32::NEG_INFINITY; 8];
+    let chunks = row.chunks_exact(8);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for i in 0..8 {
+            lo[i] = if c[i] < lo[i] { c[i] } else { lo[i] };
+            hi[i] = if c[i] > hi[i] { c[i] } else { hi[i] };
+        }
+    }
+    let (mut l, mut h) = (lo[0], hi[0]);
+    for i in 1..8 {
+        l = if lo[i] < l { lo[i] } else { l };
+        h = if hi[i] > h { hi[i] } else { h };
+    }
+    for &v in rem {
+        l = if v < l { v } else { l };
+        h = if v > h { v } else { h };
+    }
+    (l, h)
+}
+
+/// The paper's selecting stage: write the first k elements `>= t1` (by
+/// index), then supplement with the first elements in `[t2, t1)`.
+/// Two passes over the row, no writes besides the k outputs.
+pub fn select_row(
+    row: &[f32],
+    k: usize,
+    s: SearchOut,
+    vals: &mut [f32],
+    idx: &mut [u32],
+) {
+    debug_assert_eq!(vals.len(), k);
+    debug_assert_eq!(idx.len(), k);
+    let mut w = 0usize;
+    // pass 1: threshold survivors
+    for (j, &v) in row.iter().enumerate() {
+        if v >= s.t1 {
+            vals[w] = v;
+            idx[w] = j as u32;
+            w += 1;
+            if w == k {
+                return;
+            }
+        }
+    }
+    // pass 2: borderline supplements in [t2, t1)
+    for (j, &v) in row.iter().enumerate() {
+        if v >= s.t2 && v < s.t1 {
+            vals[w] = v;
+            idx[w] = j as u32;
+            w += 1;
+            if w == k {
+                return;
+            }
+        }
+    }
+    debug_assert_eq!(w, k, "selection invariant violated");
+}
+
+/// One row end-to-end: search (per `mode`) + selection.
+/// Returns the search output (for iteration statistics).
+pub fn rtopk_row(
+    row: &[f32],
+    k: usize,
+    mode: Mode,
+    vals: &mut [f32],
+    idx: &mut [u32],
+) -> SearchOut {
+    let s = match mode {
+        Mode::Exact { eps_rel } => search_exact(row, k, eps_rel, 64),
+        Mode::EarlyStop { max_iter } => search_early_stop(row, k, max_iter),
+    };
+    select_row(row, k, s, vals, idx);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gens};
+    use crate::util::rng::Rng;
+
+    fn exact_topk_sorted(row: &[f32], k: usize) -> Vec<f32> {
+        let mut v = row.to_vec();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v.truncate(k);
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    fn run(row: &[f32], k: usize, mode: Mode) -> (Vec<f32>, Vec<u32>) {
+        let mut vals = vec![0.0; k];
+        let mut idx = vec![0u32; k];
+        rtopk_row(row, k, mode, &mut vals, &mut idx);
+        (vals, idx)
+    }
+
+    #[test]
+    fn exact_small_known() {
+        let row = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let (mut vals, idx) = run(&row, 3, Mode::EXACT);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, vec![5.0, 6.0, 9.0]);
+        let mut srt = idx.clone();
+        srt.sort_unstable();
+        assert_eq!(srt, vec![4, 5, 7]);
+    }
+
+    #[test]
+    fn exact_with_ties_at_borderline() {
+        // 8 ones then 8 twos, k=12 -> all twos + four ones (the tie case
+        // that broke the naive final-thres selection; see ref.py)
+        let row: Vec<f32> = std::iter::repeat(1.0f32)
+            .take(8)
+            .chain(std::iter::repeat(2.0).take(8))
+            .collect();
+        let (mut vals, _) = run(&row, 12, Mode::EXACT);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, exact_topk_sorted(&row, 12));
+    }
+
+    #[test]
+    fn all_equal_row() {
+        let row = vec![2.5f32; 16];
+        let (vals, idx) = run(&row, 5, Mode::EXACT);
+        assert_eq!(vals, vec![2.5; 5]);
+        assert_eq!(idx, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn k_equals_m() {
+        let row = [1.0f32, -2.0, 3.0];
+        let (vals, idx) = run(&row, 3, Mode::EXACT);
+        assert_eq!(vals, vec![1.0, -2.0, 3.0]);
+        assert_eq!(idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let row = [0.5f32, 7.25, -1.0, 7.0];
+        let (vals, idx) = run(&row, 1, Mode::EXACT);
+        assert_eq!(vals, vec![7.25]);
+        assert_eq!(idx, vec![1]);
+    }
+
+    #[test]
+    fn negative_values_only() {
+        let row = [-5.0f32, -1.0, -3.0, -2.0];
+        let (mut vals, _) = run(&row, 2, Mode::EXACT);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, vec![-2.0, -1.0]);
+    }
+
+    #[test]
+    fn early_stop_selects_k_and_is_reasonable() {
+        let mut rng = Rng::seed_from(1);
+        let row: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        for it in [1u32, 2, 4, 8, 16] {
+            let (vals, idx) = run(&row, 32, Mode::EarlyStop { max_iter: it });
+            assert_eq!(vals.len(), 32);
+            // indices unique
+            let mut u = idx.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 32, "duplicate indices at max_iter={it}");
+            // values gathered correctly
+            for (v, &i) in vals.iter().zip(&idx) {
+                assert_eq!(*v, row[i as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn early_stop_converges_to_exact() {
+        let mut rng = Rng::seed_from(2);
+        let row: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let exact = exact_topk_sorted(&row, 32);
+        let (mut vals, _) = run(&row, 32, Mode::EarlyStop { max_iter: 30 });
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(vals, exact);
+    }
+
+    #[test]
+    fn iteration_count_matches_paper_ballpark() {
+        // Table 1: average exit iteration for M=256, k=64 is ~8.95 at
+        // eps=1e-4 (paper) — allow generous slack for RNG differences.
+        let mut rng = Rng::seed_from(3);
+        let mut total = 0u64;
+        let n = 2000;
+        for _ in 0..n {
+            let row: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+            let s = search_exact(&row, 64, 1e-4, 64);
+            total += s.iters as u64;
+        }
+        let avg = total as f64 / n as f64;
+        assert!(
+            (7.5..10.5).contains(&avg),
+            "avg exit iteration {avg}, paper ~8.95"
+        );
+    }
+
+    #[test]
+    fn property_exact_matches_sort_oracle() {
+        forall(
+            "rtopk_exact == sort_topk",
+            0xC0FFEE,
+            300,
+            |rng| {
+                let (m, k) = gens::m_and_k(rng, 128);
+                (gens::any_row(rng, m), k)
+            },
+            |(row, k)| {
+                let (mut vals, idx) = run(row, *k, Mode::EXACT);
+                // gathered
+                for (v, &i) in vals.iter().zip(&idx) {
+                    if *v != row[i as usize] {
+                        return Err(format!("vals[{i}] not gathered"));
+                    }
+                }
+                // unique indices
+                let mut u = idx.clone();
+                u.sort_unstable();
+                u.dedup();
+                if u.len() != *k {
+                    return Err("duplicate indices".into());
+                }
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let want = exact_topk_sorted(row, *k);
+                if vals != want {
+                    return Err(format!("multiset mismatch:\n got {vals:?}\nwant {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_early_stop_invariants() {
+        forall(
+            "early_stop invariants",
+            0xBEEF,
+            200,
+            |rng| {
+                let (m, k) = gens::m_and_k(rng, 128);
+                let it = 1 + rng.index(12) as u32;
+                (gens::any_row(rng, m), k, it)
+            },
+            |(row, k, it)| {
+                let (vals, idx) = run(row, *k, Mode::EarlyStop { max_iter: *it });
+                let mut u = idx.clone();
+                u.sort_unstable();
+                u.dedup();
+                if u.len() != *k {
+                    return Err("duplicate indices".into());
+                }
+                for (v, i) in vals.iter().zip(idx) {
+                    if *v != row[i as usize] {
+                        return Err("not gathered".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Core library: row-wise top-k selection.
+//!
+//! * [`binary_search`] — the paper's contribution (Algorithm 1 exact /
+//!   Algorithm 2 early-stopping), single-row primitives that mirror the
+//!   Pallas kernel and the pure-jnp oracle decision-for-decision.
+//! * [`rowwise`] — the batched driver that applies any row selector to
+//!   an (N, M) matrix in parallel (the "kernel launch" equivalent).
+//! * [`baselines`] — the algorithms the paper compares against or
+//!   discusses: RadixSelect (PyTorch's `torch.topk` underlying method),
+//!   QuickSelect, heap, bucket select, bitonic top-k, and full sort.
+//! * [`verify`] — oracle comparisons: exact-set equality, hit rate and
+//!   relative-error metrics (Table 2's E1/E2/Hit).
+
+pub mod baselines;
+pub mod binary_search;
+pub mod rowwise;
+pub mod types;
+pub mod verify;
+
+pub use binary_search::{rtopk_row, search_early_stop, search_exact, select_row, SearchOut};
+pub use rowwise::{rowwise_topk, rowwise_topk_with, RowAlgo};
+pub use types::{Mode, TopKResult};

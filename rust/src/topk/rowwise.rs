@@ -1,0 +1,199 @@
+//! Batched row-wise driver: apply a per-row selector to all N rows of a
+//! matrix in parallel — the CPU analogue of the paper's one-warp-per-row
+//! kernel launch.
+
+use crate::topk::baselines::{self, RowSelector};
+use crate::topk::binary_search::rtopk_row;
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use crate::util::pool;
+
+/// Which row algorithm to run — RTop-K or one of the baselines.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RowAlgo {
+    /// the paper's binary-search selection (exact or early-stop)
+    RTopK(Mode),
+    /// per-row RadixSelect with sorted output — faithful stand-in for
+    /// PyTorch's `torch.topk` (the paper's baseline)
+    Radix,
+    /// Hoare-partition quickselect
+    QuickSelect,
+    /// size-k min-heap streaming
+    Heap,
+    /// bucket select (Yang et al. 2024 style, single refinement level)
+    Bucket,
+    /// bitonic top-k (Shanbhag et al. 2018 style, power-of-two network)
+    Bitonic,
+    /// full sort then take k — the naive upper baseline
+    Sort,
+}
+
+impl RowAlgo {
+    pub fn name(&self) -> String {
+        match self {
+            RowAlgo::RTopK(m) => format!("rtopk_{}", m.tag()),
+            RowAlgo::Radix => "radix".into(),
+            RowAlgo::QuickSelect => "quickselect".into(),
+            RowAlgo::Heap => "heap".into(),
+            RowAlgo::Bucket => "bucket".into(),
+            RowAlgo::Bitonic => "bitonic".into(),
+            RowAlgo::Sort => "sort".into(),
+        }
+    }
+
+    /// All comparison algorithms (for the bench sweeps).
+    pub fn all_baselines() -> Vec<RowAlgo> {
+        vec![
+            RowAlgo::Radix,
+            RowAlgo::QuickSelect,
+            RowAlgo::Heap,
+            RowAlgo::Bucket,
+            RowAlgo::Bitonic,
+            RowAlgo::Sort,
+        ]
+    }
+}
+
+/// Row-wise RTop-K over a matrix (the library's main entry point).
+pub fn rowwise_topk(x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
+    rowwise_topk_with(x, k, RowAlgo::RTopK(mode))
+}
+
+/// Row-wise top-k with any algorithm. Rows are distributed over worker
+/// threads in dynamic chunks (exact-mode rows converge at different
+/// iteration counts, so dynamic scheduling avoids stragglers — the CPU
+/// analogue of the paper's observation that divergent warp exits do not
+/// hurt overall kernel time).
+pub fn rowwise_topk_with(x: &RowMatrix, k: usize, algo: RowAlgo) -> TopKResult {
+    assert!(k >= 1 && k <= x.cols, "k={} out of range for M={}", k, x.cols);
+    let mut out = TopKResult::zeros(x.rows, k);
+    // Split the output into disjoint per-row slices up front so worker
+    // threads can write without locks.
+    let kcap = k;
+    let vals_ptr = SendPtr(out.values.as_mut_ptr());
+    let idx_ptr = SendPtr(out.indices.as_mut_ptr());
+    pool::parallel_dynamic(x.rows, row_grain(x.cols), |start, end| {
+        // scratch reused across this chunk's rows
+        let mut scratch = baselines::Scratch::new(x.cols, kcap);
+        for r in start..end {
+            let row = x.row(r);
+            // SAFETY: each row index r is visited exactly once across all
+            // chunks (parallel_dynamic partitions 0..rows), and the k-slot
+            // windows [r*k, (r+1)*k) are disjoint per row.
+            let (vals, idx) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(vals_ptr.get().add(r * kcap), kcap),
+                    std::slice::from_raw_parts_mut(idx_ptr.get().add(r * kcap), kcap),
+                )
+            };
+            run_row(row, kcap, algo, vals, idx, &mut scratch);
+        }
+    });
+    out
+}
+
+/// Dispatch one row through the chosen algorithm.
+pub fn run_row(
+    row: &[f32],
+    k: usize,
+    algo: RowAlgo,
+    vals: &mut [f32],
+    idx: &mut [u32],
+    scratch: &mut baselines::Scratch,
+) {
+    match algo {
+        RowAlgo::RTopK(mode) => {
+            rtopk_row(row, k, mode, vals, idx);
+        }
+        RowAlgo::Radix => baselines::RadixSelect.select_row(row, k, vals, idx, scratch),
+        RowAlgo::QuickSelect => baselines::QuickSelect.select_row(row, k, vals, idx, scratch),
+        RowAlgo::Heap => baselines::HeapSelect.select_row(row, k, vals, idx, scratch),
+        RowAlgo::Bucket => baselines::BucketSelect.select_row(row, k, vals, idx, scratch),
+        RowAlgo::Bitonic => baselines::BitonicSelect.select_row(row, k, vals, idx, scratch),
+        RowAlgo::Sort => baselines::SortSelect.select_row(row, k, vals, idx, scratch),
+    }
+}
+
+/// Rows per dynamic work unit: keep units ~64kB of input so scheduling
+/// overhead stays negligible at any M.
+fn row_grain(m: usize) -> usize {
+    (16_384 / m.max(1)).clamp(1, 256)
+}
+
+/// Raw pointer wrapper that asserts Send/Sync (disjoint writes per row
+/// are guaranteed by the scheduler's partitioning). Accessed through a
+/// method so edition-2021 closures capture the wrapper, not the field.
+struct SendPtr<T>(*mut T);
+impl<T> SendPtr<T> {
+    #[inline]
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sorted_topk(row: &[f32], k: usize) -> Vec<f32> {
+        let mut v = row.to_vec();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v.truncate(k);
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    #[test]
+    fn all_algorithms_agree_with_oracle() {
+        let mut rng = Rng::seed_from(4);
+        let x = RowMatrix::random_normal(37, 100, &mut rng);
+        let k = 13;
+        let mut algos = vec![RowAlgo::RTopK(Mode::EXACT)];
+        algos.extend(RowAlgo::all_baselines());
+        for algo in algos {
+            let res = rowwise_topk_with(&x, k, algo);
+            for r in 0..x.rows {
+                let mut got = res.row_values(r).to_vec();
+                got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let want = sorted_topk(x.row(r), k);
+                assert_eq!(got, want, "algo {} row {r}", algo.name());
+                // indices gather the values
+                for (v, &i) in res.row_values(r).iter().zip(res.row_indices(r)) {
+                    assert_eq!(*v, x.get(r, i as usize), "algo {}", algo.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::seed_from(5);
+        let x = RowMatrix::random_normal(300, 64, &mut rng);
+        let par = rowwise_topk(&x, 8, Mode::EXACT);
+        // serial reference
+        let mut ser = TopKResult::zeros(x.rows, 8);
+        for r in 0..x.rows {
+            let (v, i) = ser.row_mut(r);
+            rtopk_row(x.row(r), 8, Mode::EXACT, v, i);
+        }
+        assert_eq!(par.values, ser.values);
+        assert_eq!(par.indices, ser.indices);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_bad_k() {
+        let x = RowMatrix::zeros(2, 4);
+        rowwise_topk(&x, 5, Mode::EXACT);
+    }
+
+    #[test]
+    fn row_grain_bounds() {
+        assert_eq!(row_grain(1), 256);
+        assert!(row_grain(256) >= 1);
+        assert_eq!(row_grain(100_000), 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Shared types for row-wise top-k.
+
+/// Search mode — the paper's two algorithms.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mode {
+    /// Algorithm 1: iterate until the bracket closes below
+    /// `eps_rel * max(row)` or the count hits k exactly.
+    /// `eps_rel = 1e-16` is the paper's "no early stopping" setting
+    /// (below f32 resolution, so effectively exact).
+    Exact { eps_rel: f32 },
+    /// Algorithm 2: hard iteration budget, one-pass selection at the
+    /// final lower bracket. Approximate; paper sweeps max_iter in 2..8.
+    EarlyStop { max_iter: u32 },
+}
+
+impl Mode {
+    /// The paper's default exact setting (eps = 1e-16).
+    pub const EXACT: Mode = Mode::Exact { eps_rel: 1e-16 };
+
+    pub fn tag(&self) -> String {
+        match self {
+            Mode::Exact { eps_rel } if *eps_rel <= 1e-15 => "exact".into(),
+            Mode::Exact { eps_rel } => format!("exact_eps{eps_rel:.0e}"),
+            Mode::EarlyStop { max_iter } => format!("es{max_iter}"),
+        }
+    }
+}
+
+/// Dense row-major result of a batched top-k: row r's selection lives in
+/// `values[r*k..(r+1)*k]` / `indices[r*k..(r+1)*k]`.
+///
+/// Values are **unsorted** (selection order: threshold survivors by
+/// index, then borderline supplements by index) exactly as the paper
+/// specifies — neural-network consumers never need sorted output.
+#[derive(Clone, Debug)]
+pub struct TopKResult {
+    pub rows: usize,
+    pub k: usize,
+    pub values: Vec<f32>,
+    pub indices: Vec<u32>,
+}
+
+impl TopKResult {
+    pub fn zeros(rows: usize, k: usize) -> Self {
+        TopKResult {
+            rows,
+            k,
+            values: vec![0.0; rows * k],
+            indices: vec![0; rows * k],
+        }
+    }
+
+    #[inline]
+    pub fn row_values(&self, r: usize) -> &[f32] {
+        &self.values[r * self.k..(r + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[r * self.k..(r + 1) * self.k]
+    }
+
+    /// Mutable (values, indices) slices for one row — handed to row
+    /// selectors by the batched driver.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> (&mut [f32], &mut [u32]) {
+        let k = self.k;
+        (
+            &mut self.values[r * k..(r + 1) * k],
+            &mut self.indices[r * k..(r + 1) * k],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_tags() {
+        assert_eq!(Mode::EXACT.tag(), "exact");
+        assert_eq!(Mode::EarlyStop { max_iter: 4 }.tag(), "es4");
+        assert_eq!(Mode::Exact { eps_rel: 1e-4 }.tag(), "exact_eps1e-4");
+    }
+
+    #[test]
+    fn result_row_access() {
+        let mut r = TopKResult::zeros(3, 2);
+        {
+            let (v, i) = r.row_mut(1);
+            v.copy_from_slice(&[5.0, 6.0]);
+            i.copy_from_slice(&[7, 8]);
+        }
+        assert_eq!(r.row_values(1), &[5.0, 6.0]);
+        assert_eq!(r.row_indices(1), &[7, 8]);
+        assert_eq!(r.row_values(0), &[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,147 @@
+//! Oracle comparison utilities: exact-set checks and the paper's
+//! approximation metrics (Table 2's E1 / E2 / Hit).
+
+use crate::topk::types::TopKResult;
+use crate::util::matrix::RowMatrix;
+
+/// Per-row approximation metrics of a (possibly approximate) selection
+/// against the exact top-k of the same row.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ApproxMetrics {
+    /// |max(sel) - max(opt)| / |max(opt)|   (paper's E1)
+    pub e1: f64,
+    /// |min(sel) - min(opt)| / |min(opt)|   (paper's E2)
+    pub e2: f64,
+    /// |sel ∩ opt| / k                      (paper's Hit)
+    pub hit: f64,
+}
+
+/// Exact top-k values of one row, sorted descending (the oracle).
+pub fn exact_topk_desc(row: &[f32], k: usize) -> Vec<(f32, u32)> {
+    let mut pairs: Vec<(f32, u32)> =
+        row.iter().enumerate().map(|(j, &v)| (v, j as u32)).collect();
+    pairs.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+    });
+    pairs.truncate(k);
+    pairs
+}
+
+/// True iff the selection's value multiset equals the exact top-k
+/// multiset for every row.
+pub fn is_exact(x: &RowMatrix, res: &TopKResult) -> bool {
+    for r in 0..x.rows {
+        let mut got: Vec<f32> = res.row_values(r).to_vec();
+        got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let want: Vec<f32> =
+            exact_topk_desc(x.row(r), res.k).iter().map(|p| p.0).collect();
+        if got != want {
+            return false;
+        }
+    }
+    true
+}
+
+/// Table-2 metrics for one row's selection.
+pub fn approx_metrics_row(row: &[f32], values: &[f32], indices: &[u32])
+    -> ApproxMetrics {
+    let k = values.len();
+    let opt = exact_topk_desc(row, k);
+    let opt_max = opt[0].0 as f64;
+    let opt_min = opt[k - 1].0 as f64;
+    let sel_max = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let sel_min = values.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let e1 = ((sel_max - opt_max).abs()) / opt_max.abs().max(f64::MIN_POSITIVE);
+    let e2 = ((sel_min - opt_min).abs()) / opt_min.abs().max(f64::MIN_POSITIVE);
+    // hit rate by index-set overlap
+    let mut opt_idx: Vec<u32> = opt.iter().map(|p| p.1).collect();
+    opt_idx.sort_unstable();
+    let mut hits = 0usize;
+    for &i in indices {
+        if opt_idx.binary_search(&i).is_ok() {
+            hits += 1;
+        }
+    }
+    ApproxMetrics { e1, e2, hit: hits as f64 / k as f64 }
+}
+
+/// Average Table-2 metrics over all rows of a batched result.
+pub fn approx_metrics(x: &RowMatrix, res: &TopKResult) -> ApproxMetrics {
+    let mut acc = ApproxMetrics::default();
+    for r in 0..x.rows {
+        let m = approx_metrics_row(x.row(r), res.row_values(r), res.row_indices(r));
+        acc.e1 += m.e1;
+        acc.e2 += m.e2;
+        acc.hit += m.hit;
+    }
+    let n = x.rows as f64;
+    ApproxMetrics { e1: acc.e1 / n, e2: acc.e2 / n, hit: acc.hit / n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::{rowwise_topk, Mode};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_mode_is_exact() {
+        let mut rng = Rng::seed_from(8);
+        let x = RowMatrix::random_normal(64, 128, &mut rng);
+        let res = rowwise_topk(&x, 16, Mode::EXACT);
+        assert!(is_exact(&x, &res));
+        let m = approx_metrics(&x, &res);
+        assert!(m.e1 < 1e-12 && m.e2 < 1e-12);
+        assert!((m.hit - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_stop_metrics_in_paper_ballpark() {
+        // Table 2, k=32, M=256: paper reports hit = 83.19% at max_iter=5
+        // and 90.19% at 8; our implementation measures ~87.8% and ~98.3%
+        // (same shape, tighter tail — after i iterations the residual
+        // bracket holds ~M*D*phi/2^i ≈ 1.4 borderline candidates at i=8,
+        // bounding misses well below the paper's 10%; see EXPERIMENTS.md
+        // §Table2 for the discrepancy note). Assert the structural claims.
+        let mut rng = Rng::seed_from(9);
+        let x = RowMatrix::random_normal(2000, 256, &mut rng);
+        let m2 = approx_metrics(&x, &rowwise_topk(&x, 32, Mode::EarlyStop { max_iter: 2 }));
+        let m5 = approx_metrics(&x, &rowwise_topk(&x, 32, Mode::EarlyStop { max_iter: 5 }));
+        let m8 = approx_metrics(&x, &rowwise_topk(&x, 32, Mode::EarlyStop { max_iter: 8 }));
+        assert!(m2.hit < 0.6, "hit@2 = {}", m2.hit);
+        assert!((0.80..0.95).contains(&m5.hit), "hit@5 = {}", m5.hit);
+        assert!((0.94..1.0).contains(&m8.hit), "hit@8 = {}", m8.hit);
+        assert!(m2.hit < m5.hit && m5.hit < m8.hit);
+        assert!(m5.e1 < 0.05 && m8.e1 < m5.e1 + 1e-9);
+    }
+
+    #[test]
+    fn hit_rate_counts_overlap() {
+        let row = [4.0f32, 3.0, 2.0, 1.0];
+        // pretend selection picked indices 0 and 2 for k=2 (true top-2 is 0,1)
+        let m = approx_metrics_row(&row, &[4.0, 2.0], &[0, 2]);
+        assert!((m.hit - 0.5).abs() < 1e-12);
+        assert!(m.e1 < 1e-12); // max matches
+        assert!((m.e2 - (3.0 - 2.0) / 3.0).abs() < 1e-9);
+    }
+}
+
+#[cfg(test)]
+mod curve_probe {
+    use super::*;
+    use crate::topk::{rowwise_topk, Mode};
+    use crate::util::rng::Rng;
+
+    #[test]
+    #[ignore] // probe: run with --ignored to print the Table-2 curve
+    fn print_hit_curve() {
+        let mut rng = Rng::seed_from(10);
+        let x = RowMatrix::random_normal(5000, 256, &mut rng);
+        for k in [16usize, 32, 64, 128] {
+            for it in [2u32, 3, 4, 5, 6, 7, 8] {
+                let m = approx_metrics(&x, &rowwise_topk(&x, k, Mode::EarlyStop { max_iter: it }));
+                println!("k={k:3} it={it} E1={:.2}% E2={:.2}% hit={:.2}%", m.e1*100.0, m.e2*100.0, m.hit*100.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Dense row-major f32 matrix storage — the unit of work for row-wise
+//! top-k (N rows of length M) and the host-side mirror of PJRT buffers.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RowMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl RowMatrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        RowMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize,
+                   mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        RowMatrix { rows, cols, data }
+    }
+
+    /// Wrap an existing buffer (len must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        RowMatrix { rows, cols, data }
+    }
+
+    /// i.i.d. standard-normal entries — the paper's evaluation
+    /// distribution for every kernel table/figure.
+    pub fn random_normal(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let mut m = RowMatrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Split rows into contiguous chunks of at most `chunk` rows
+    /// (the batcher's tiling primitive).
+    pub fn row_chunks(&self, chunk: usize) -> impl Iterator<Item = (usize, &[f32])> {
+        let cols = self.cols;
+        self.data
+            .chunks(chunk * cols)
+            .enumerate()
+            .map(move |(i, d)| (i * chunk, d))
+    }
+
+    /// Copy rows [start, start+len) into a new matrix, zero-padding to
+    /// `len` rows if the source ends early (service tile padding).
+    pub fn slice_rows_padded(&self, start: usize, len: usize) -> RowMatrix {
+        let mut out = RowMatrix::zeros(len, self.cols);
+        let avail = self.rows.saturating_sub(start).min(len);
+        let src = &self.data[start * self.cols..(start + avail) * self.cols];
+        out.data[..src.len()].copy_from_slice(src);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_accessors() {
+        let m = RowMatrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.get(2, 3), 23.0);
+    }
+
+    #[test]
+    fn chunks_cover_all_rows() {
+        let m = RowMatrix::from_fn(10, 2, |r, _| r as f32);
+        let total: usize = m.row_chunks(3).map(|(_, d)| d.len() / 2).sum();
+        assert_eq!(total, 10);
+        let starts: Vec<usize> = m.row_chunks(3).map(|(s, _)| s).collect();
+        assert_eq!(starts, vec![0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn slice_rows_padded_pads_with_zeros() {
+        let m = RowMatrix::from_fn(3, 2, |r, c| (r + c) as f32 + 1.0);
+        let s = m.slice_rows_padded(2, 4);
+        assert_eq!(s.rows, 4);
+        assert_eq!(s.row(0), m.row(2));
+        assert!(s.row(1).iter().all(|&v| v == 0.0));
+        assert!(s.row(3).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer/shape mismatch")]
+    fn from_vec_checks_len() {
+        RowMatrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,9 @@
+//! General-purpose substrates (offline build: no crates.io, so these are
+//! implemented in-tree — see DESIGN.md §2 "Offline-build note").
+
+pub mod json;
+pub mod matrix;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,156 @@
+//! Scoped data-parallel helpers over std threads.
+//!
+//! Substrate note: rayon/tokio are not in the vendored crate set. The
+//! coordinator's workloads are embarrassingly parallel over row ranges,
+//! so a scoped fork-join over `std::thread` covers everything we need
+//! with zero unsafe code and no long-lived pool state.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `RTOPK_THREADS` env override, else
+/// `std::thread::available_parallelism()`.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("RTOPK_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on up to
+/// `num_threads()` scoped threads. `f` runs inline when a single thread
+/// suffices (no spawn overhead on 1-core testbeds).
+pub fn parallel_ranges<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(start, end));
+        }
+    });
+}
+
+/// Map `0..n` through `f` into a pre-allocated output vector, in
+/// parallel chunks. `f(i, &mut out[i])` must touch only its own slot —
+/// enforced by handing each thread a disjoint sub-slice.
+pub fn parallel_fill<T, F>(out: &mut [T], min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(min_chunk.max(1))).max(1);
+    if threads == 1 {
+        for (i, v) in out.iter_mut().enumerate() {
+            f(i, v);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, sub) in out.chunks_mut(chunk).enumerate() {
+            let fr = &f;
+            s.spawn(move || {
+                for (j, v) in sub.iter_mut().enumerate() {
+                    fr(t * chunk + j, v);
+                }
+            });
+        }
+    });
+}
+
+/// Work-stealing-lite dynamic scheduler: threads pull indices from a
+/// shared atomic counter. Better than static chunking when per-item cost
+/// varies (e.g. exact-mode rows converge at different iterations).
+pub fn parallel_dynamic<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n.div_ceil(grain.max(1))).max(1);
+    if threads == 1 {
+        f(0, n);
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let fr = &f;
+            s.spawn(move || loop {
+                let start = next.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                fr(start, (start + grain).min(n));
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn ranges_cover_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..101).map(|_| AtomicU64::new(0)).collect();
+        parallel_ranges(101, 1, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_exactly_once() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_dynamic(97, 8, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn fill_writes_every_slot() {
+        let mut out = vec![0usize; 57];
+        parallel_fill(&mut out, 4, |i, v| *v = i * 2);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        parallel_ranges(0, 1, |_, _| panic!("should not run"));
+        parallel_dynamic(0, 1, |_, _| panic!("should not run"));
+    }
+}

@@ -1,0 +1,89 @@
+//! Timing helpers for the bench harness: warmup + repetition loops with
+//! median/mean extraction (criterion is not in the vendored crate set).
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed repetition loop.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// per-iteration wall times, sorted ascending
+    pub samples: Vec<Duration>,
+}
+
+impl Timing {
+    pub fn median(&self) -> Duration {
+        self.samples[self.samples.len() / 2]
+    }
+    pub fn min(&self) -> Duration {
+        self.samples[0]
+    }
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len() as u32
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median().as_secs_f64() * 1e3
+    }
+    pub fn median_us(&self) -> f64 {
+        self.median().as_secs_f64() * 1e6
+    }
+}
+
+/// Time `f` for `reps` iterations after `warmup` unrecorded runs.
+/// The closure should do one full unit of work per call; use
+/// `std::hint::black_box` inside it to keep results alive.
+pub fn time_reps(warmup: usize, reps: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    Timing { samples }
+}
+
+/// Adaptive timing: run at least `min_reps` and until `min_total` has
+/// elapsed (bounds noise on fast kernels without wasting time on slow
+/// ones). Always includes one warmup call.
+pub fn time_adaptive(min_reps: usize, min_total: Duration,
+                     mut f: impl FnMut()) -> Timing {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_reps || start.elapsed() < min_total {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort_unstable();
+    Timing { samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_requested_samples() {
+        let t = time_reps(1, 5, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.min() <= t.median());
+    }
+
+    #[test]
+    fn adaptive_meets_minimums() {
+        let t = time_adaptive(3, Duration::from_millis(1), || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        assert!(t.samples.len() >= 3);
+    }
+}

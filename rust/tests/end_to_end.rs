@@ -1,0 +1,53 @@
+//! End-to-end smoke: all three layers composed — graph generation (L3
+//! substrate) -> AOT train step (L2 model + L1 kernel) -> coordinator
+//! training loop -> the served top-k of trained activations. This is
+//! the test-suite twin of `examples/gnn_training.rs`.
+
+use rtopk::config::ServeConfig;
+use rtopk::coordinator::{TopKService, Trainer};
+use rtopk::runtime::executor::Executor;
+use rtopk::topk::types::Mode;
+use rtopk::topk::verify::is_exact;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    std::env::var("RTOPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+#[test]
+fn train_then_serve_composes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // phase 1: train a tiny MaxK-GNN through PJRT
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let mut trainer =
+        Trainer::new(exec.handle(), "gcn_tiny-sim_h256_k32_es4", 11).unwrap();
+    let out = trainer.train(25, 0, |_, _, _| {}).unwrap();
+    assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
+    drop(exec);
+
+    // phase 2: serve top-k requests (PJRT tiles + CPU fallback mixed)
+    let svc = TopKService::start(&ServeConfig {
+        artifacts_dir: artifacts_dir(),
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(3);
+    let routed = RowMatrix::random_normal(600, 256, &mut rng);
+    let fallback = RowMatrix::random_normal(60, 80, &mut rng);
+    let r1 = svc.submit_async(routed.clone(), 32, Mode::EXACT).unwrap();
+    let r2 = svc.submit_async(fallback.clone(), 8, Mode::EXACT).unwrap();
+    assert!(is_exact(&routed, &r1.wait().unwrap()));
+    assert!(is_exact(&fallback, &r2.wait().unwrap()));
+    let s = svc.stats();
+    assert_eq!(s.requests, 2);
+    assert!(s.pjrt_batches >= 1 && s.cpu_batches >= 1);
+}

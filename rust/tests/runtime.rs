@@ -1,0 +1,145 @@
+//! Integration: PJRT runtime against real artifacts.
+//!
+//! Requires `make artifacts` (the repo's default set). The key test is
+//! the cross-language numeric check: the AOT-compiled Pallas kernel,
+//! executed from Rust through PJRT, must agree decision-for-decision
+//! with the in-crate Rust implementation of the same algorithm — the
+//! two sides share only the semantics spec (kernels/ref.py docstring).
+
+use rtopk::runtime::executor::Executor;
+use rtopk::runtime::manifest::Manifest;
+use rtopk::runtime::tensor::HostTensor;
+use rtopk::topk::binary_search::rtopk_row;
+use rtopk::topk::types::Mode;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    std::env::var("RTOPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load(std::path::Path::new(&artifacts_dir())).unwrap();
+    assert!(!m.of_kind("rtopk_tile").is_empty());
+    assert!(!m.of_kind("train_step").is_empty());
+    m.validate_datasets().unwrap();
+}
+
+#[test]
+fn executor_spawns_and_reports_platform() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let h = exec.handle();
+    assert!(h.platform().to_lowercase().contains("cpu"));
+    assert!(h.manifest().artifacts.len() >= 5);
+}
+
+/// The paper-critical equivalence: AOT Pallas kernel == Rust engine.
+#[test]
+fn pjrt_rtopk_tile_matches_rust_engine() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let h = exec.handle();
+
+    for (name, mode) in [
+        ("rtopk_1024x256_k32_exact", Mode::Exact { eps_rel: 1e-16 }),
+        ("rtopk_1024x256_k32_es4", Mode::EarlyStop { max_iter: 4 }),
+        ("rtopk_1024x256_k32_es8", Mode::EarlyStop { max_iter: 8 }),
+    ] {
+        let info = h.manifest().get(name).unwrap();
+        let rows = info.meta_usize("rows").unwrap();
+        let m = info.meta_usize("m").unwrap();
+        let k = info.meta_usize("k").unwrap();
+
+        let mut rng = Rng::seed_from(777);
+        let x = RowMatrix::random_normal(rows, m, &mut rng);
+        let outs = h
+            .execute(name, vec![HostTensor::f32(x.data.clone(), &[rows, m])])
+            .unwrap();
+        let vals = outs[0].as_f32().unwrap();
+        let idx = outs[1].as_i32().unwrap();
+        let mask = outs[2].as_f32().unwrap();
+
+        let mut rvals = vec![0f32; k];
+        let mut ridx = vec![0u32; k];
+        for r in 0..rows {
+            rtopk_row(x.row(r), k, mode, &mut rvals, &mut ridx);
+            assert_eq!(
+                &vals[r * k..(r + 1) * k],
+                &rvals[..],
+                "{name}: values differ at row {r}"
+            );
+            let got: Vec<u32> =
+                idx[r * k..(r + 1) * k].iter().map(|&v| v as u32).collect();
+            assert_eq!(got, ridx, "{name}: indices differ at row {r}");
+            // mask has exactly k nonzeros and marks the selected columns
+            let mrow = &mask[r * m..(r + 1) * m];
+            assert_eq!(
+                mrow.iter().filter(|&&v| v != 0.0).count(),
+                k,
+                "{name}: mask nonzeros at row {r}"
+            );
+            for &i in &ridx {
+                assert!(mrow[i as usize] != 0.0, "{name}: mask misses idx {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn execute_rejects_shape_mismatch() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let h = exec.handle();
+    let err = h
+        .execute(
+            "rtopk_1024x256_k32_exact",
+            vec![HostTensor::f32(vec![0.0; 10 * 256], &[10, 256])],
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "got: {err:#}");
+}
+
+#[test]
+fn execute_rejects_unknown_artifact() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    assert!(exec.handle().execute("nope", vec![]).is_err());
+}
+
+#[test]
+fn precompile_then_execute_is_consistent() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let h = exec.handle();
+    h.precompile(&["rtopk_1024x256_k32_es4"]).unwrap();
+    let x = HostTensor::f32(vec![1.0; 1024 * 256], &[1024, 256]);
+    let a = h.execute("rtopk_1024x256_k32_es4", vec![x.clone()]).unwrap();
+    let b = h.execute("rtopk_1024x256_k32_es4", vec![x]).unwrap();
+    assert_eq!(a[0], b[0]);
+    assert_eq!(a[1], b[1]);
+}

@@ -1,0 +1,115 @@
+//! Integration: TopKService over the PJRT route (real artifacts) and
+//! the CPU route, checking they agree and the coordinator behaves under
+//! concurrent load.
+
+use rtopk::config::ServeConfig;
+use rtopk::coordinator::TopKService;
+use rtopk::topk::types::Mode;
+use rtopk::topk::verify::{approx_metrics, is_exact};
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::sync::Arc;
+
+fn artifacts_dir() -> String {
+    std::env::var("RTOPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+fn pjrt_service() -> TopKService {
+    TopKService::start(&ServeConfig {
+        artifacts_dir: artifacts_dir(),
+        workers: 2,
+        max_wait_us: 100,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn pjrt_route_serves_exact_topk() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = pjrt_service();
+    // (256, 32, exact) has a compiled tile in the default set
+    assert!(svc
+        .variants()
+        .contains(&(256usize, 32usize, "exact".to_string())));
+    let mut rng = Rng::seed_from(41);
+    let x = RowMatrix::random_normal(1500, 256, &mut rng); // > 1 tile
+    let res = svc.submit(x.clone(), 32, Mode::EXACT).unwrap();
+    assert_eq!(res.rows, 1500);
+    assert!(is_exact(&x, &res), "PJRT route returned non-exact top-k");
+    let s = svc.stats();
+    assert!(s.pjrt_batches >= 1, "expected the PJRT route, stats: {s:?}");
+}
+
+#[test]
+fn pjrt_and_cpu_routes_agree_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = pjrt_service();
+    let mut rng = Rng::seed_from(43);
+    let x = RowMatrix::random_normal(700, 256, &mut rng);
+    // es4 goes through PJRT (compiled tile), the same shape through the
+    // CPU engine must produce identical approximate selections — the
+    // cross-language bit-equality guarantee, end to end through the
+    // whole coordinator.
+    let pjrt = svc.submit(x.clone(), 32, Mode::EarlyStop { max_iter: 4 }).unwrap();
+    let cpu =
+        rtopk::topk::rowwise_topk(&x, 32, Mode::EarlyStop { max_iter: 4 });
+    assert_eq!(pjrt.values, cpu.values);
+    assert_eq!(pjrt.indices, cpu.indices);
+}
+
+#[test]
+fn unrouted_shapes_fall_back_to_cpu() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = pjrt_service();
+    let mut rng = Rng::seed_from(44);
+    let x = RowMatrix::random_normal(64, 100, &mut rng); // M=100: no tile
+    let res = svc.submit(x.clone(), 10, Mode::EXACT).unwrap();
+    assert!(is_exact(&x, &res));
+    assert!(svc.stats().cpu_batches >= 1);
+}
+
+#[test]
+fn concurrent_clients_under_load() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let svc = Arc::new(pjrt_service());
+    let threads: Vec<_> = (0..4)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(100 + t);
+                for _ in 0..5 {
+                    let x = RowMatrix::random_normal(300, 256, &mut rng);
+                    let res = svc
+                        .submit(x.clone(), 32, Mode::EarlyStop { max_iter: 8 })
+                        .unwrap();
+                    let m = approx_metrics(&x, &res);
+                    assert!(m.hit > 0.9, "hit {}", m.hit);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let s = svc.stats();
+    assert_eq!(s.requests, 20);
+    assert_eq!(s.rows, 20 * 300);
+    assert_eq!(s.errors, 0);
+}

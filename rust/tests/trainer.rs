@@ -1,0 +1,78 @@
+//! Integration: MaxK-GNN training through the AOT train/eval artifacts.
+
+use rtopk::coordinator::Trainer;
+use rtopk::runtime::executor::Executor;
+
+fn artifacts_dir() -> String {
+    std::env::var("RTOPK_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
+}
+
+#[test]
+fn tiny_training_loss_decreases() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let mut t = Trainer::new(exec.handle(), "gcn_tiny-sim_h256_k32_es4", 7)
+        .unwrap();
+    let out = t.train(80, 0, |_, _, _| {}).unwrap();
+    let first5: f32 = out.losses[..5].iter().sum::<f32>() / 5.0;
+    let last5: f32 = out.losses[out.losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last5 < first5 * 0.9,
+        "loss did not decrease: {first5} -> {last5}"
+    );
+    // better than chance on 4 classes
+    assert!(out.final_test_acc > 0.3, "test acc {}", out.final_test_acc);
+}
+
+#[test]
+fn early_stop_training_tracks_exact() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let mut accs = Vec::new();
+    for tag in ["gcn_tiny-sim_h256_k32_exact", "gcn_tiny-sim_h256_k32_es4"] {
+        let mut t = Trainer::new(exec.handle(), tag, 7).unwrap();
+        let out = t.train(40, 0, |_, _, _| {}).unwrap();
+        accs.push(out.final_test_acc);
+    }
+    // Fig 5's claim: early stopping does not change accuracy materially
+    assert!(
+        (accs[0] - accs[1]).abs() < 0.15,
+        "exact {} vs es4 {}",
+        accs[0],
+        accs[1]
+    );
+}
+
+#[test]
+fn trainer_rejects_unknown_tag() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    assert!(Trainer::new(exec.handle(), "nope_nothing", 1).is_err());
+}
+
+#[test]
+fn evaluate_returns_probabilistic_range() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let exec = Executor::spawn(&artifacts_dir()).unwrap();
+    let t = Trainer::new(exec.handle(), "gcn_tiny-sim_h256_k32_es4", 9).unwrap();
+    let (vl, va, tl, ta) = t.evaluate().unwrap();
+    assert!(vl.is_finite() && tl.is_finite());
+    assert!((0.0..=1.0).contains(&va));
+    assert!((0.0..=1.0).contains(&ta));
+}
