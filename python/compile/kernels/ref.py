@@ -9,7 +9,12 @@ for-decision in f32 arithmetic:
   * the bracket update uses ``thres = 0.5 * (lo + hi)`` in float32,
   * the count predicate is ``v >= thres``,
   * exact mode (Algorithm 1): while ``hi - lo > eps`` with
-    ``eps = eps_rel * max(v)``, break when ``cnt == k``; selection takes
+    ``eps = eps_rel * max(v)`` when ``max(v) > 0`` (the paper's line 3,
+    verbatim on its assumed positive-activation domain) and
+    ``eps = eps_rel * max(|max(v)|, |min(v)|)`` otherwise — the paper's
+    formula goes negative/zero for non-positive maxima and would
+    disable the bracket-width exit; break when ``cnt == k``; selection
+    takes
     the first-k-by-index elements ``>= T1`` and, if fewer than k,
     supplements with the first elements in ``[T2, T1)``, where
     ``(T1, T2) = (thres, thres)`` on a ``cnt == k`` exit and
@@ -59,9 +64,11 @@ def search_exact(x: jax.Array, k: int, eps_rel: float,
                  iter_cap: int = EXACT_ITER_CAP) -> SearchState:
     """Algorithm 1's search loop, vectorized over rows.
 
-    Per row: ``eps = eps_rel * max(v)``; loop while ``hi - lo > eps``,
-    computing ``thres = (lo+hi)/2`` and ``cnt = |{v >= thres}|``; narrow
-    the bracket toward cnt == k and stop early when it hits.
+    Per row: ``eps = eps_rel * max(v)`` when the max is positive, else
+    ``eps_rel * max(|max(v)|, |min(v)|)`` (non-negative for any row;
+    see the module docstring); loop while ``hi - lo > eps``, computing
+    ``thres = (lo+hi)/2`` and ``cnt = |{v >= thres}|``; narrow the
+    bracket toward cnt == k and stop early when it hits.
 
     Rows converge independently (a converged row's state is frozen), which
     mirrors the per-warp divergent exits of the CUDA kernel.
@@ -70,7 +77,12 @@ def search_exact(x: jax.Array, k: int, eps_rel: float,
     n, m = xf.shape
     lo0 = jnp.min(xf, axis=1)
     hi0 = jnp.max(xf, axis=1)
-    eps = jnp.float32(eps_rel) * hi0  # paper line 3: eps = eps' * max
+    # paper line 3 (eps' * max) verbatim where it is well-defined; for
+    # non-positive maxima it would be negative/zero and the width exit
+    # could never fire, so fall back to the bracket magnitude there.
+    eps = jnp.float32(eps_rel) * jnp.where(
+        hi0 > 0, hi0, jnp.maximum(jnp.abs(hi0), jnp.abs(lo0))
+    )
     kf = jnp.int32(k)
 
     def body(_, st):

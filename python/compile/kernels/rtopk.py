@@ -70,7 +70,12 @@ def _search_exact_tile(xf, k, eps_rel, iter_cap):
     r, m = xf.shape
     lo0 = jnp.min(xf, axis=1)
     hi0 = jnp.max(xf, axis=1)
-    eps = jnp.float32(eps_rel) * hi0
+    # paper eps' * max where well-defined, bracket magnitude when the
+    # max is non-positive (matches kernels.ref decision-for-decision:
+    # the paper's formula disables the width exit for such rows)
+    eps = jnp.float32(eps_rel) * jnp.where(
+        hi0 > 0, hi0, jnp.maximum(jnp.abs(hi0), jnp.abs(lo0))
+    )
     kf = jnp.int32(k)
 
     def body(_, st):

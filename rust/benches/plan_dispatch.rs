@@ -1,0 +1,133 @@
+//! Planner dispatch sweep over the Fig. 4 grid (M in {256, 512, 768},
+//! k in {16, 32, 64, 96, 128}, exact mode): auto-dispatch
+//! (`rowwise_topk_auto` through a calibrated planner) versus every
+//! fixed algorithm the planner could have chosen.
+//!
+//! Acceptance: auto throughput >= 0.95x the best fixed algorithm at
+//! every grid point, and > 1.1x the worst. Results are emitted as a
+//! JSON document (last line of output) for machine checking:
+//!
+//!   cargo bench --bench plan_dispatch              (N = 2^13)
+//!   RTOPK_QUICK=1 cargo bench --bench plan_dispatch (N = 2^11)
+
+use rtopk::bench::{workload, Table};
+use rtopk::plan::{candidates, Planner, PlannerConfig};
+use rtopk::topk::rowwise::rowwise_topk_with;
+use rtopk::topk::types::Mode;
+use rtopk::util::json::{self, Value};
+use rtopk::util::timer::time_adaptive;
+use std::time::Duration;
+
+fn median_secs(f: impl FnMut()) -> f64 {
+    time_adaptive(3, Duration::from_millis(120), f).median().as_secs_f64()
+}
+
+fn main() {
+    let quick = std::env::var("RTOPK_QUICK").is_ok();
+    let n = if quick { 1 << 11 } else { 1 << 13 };
+    let ms = [256usize, 512, 768];
+    let ks = [16usize, 32, 64, 96, 128];
+    let mode = Mode::EXACT;
+
+    let planner = Planner::new(PlannerConfig {
+        calib_rows: if quick { 64 } else { 192 },
+        ..PlannerConfig::default()
+    });
+
+    let mut t = Table::new(
+        &format!("plan dispatch vs fixed algorithms (N={n}, exact) — Mrows/s"),
+        &["M", "k", "auto (algo)", "auto", "best fixed", "worst fixed",
+          "auto/best", "auto/worst"],
+    );
+    let mut points = Vec::new();
+    let mut min_vs_best = f64::INFINITY;
+    let mut min_vs_worst = f64::INFINITY;
+
+    for &m in &ms {
+        for &k in &ks {
+            let x = workload(n, m, 0x9_1A_4 + (m * 131 + k) as u64);
+            // decide (and calibrate) outside the timed region: the plan
+            // is a one-time per-shape cost in production too
+            let plan = planner.plan(m, k, mode);
+
+            let auto_s = median_secs(|| {
+                std::hint::black_box(planner.run(&x, k, mode));
+            });
+
+            let mut fixed: Vec<(String, f64)> = Vec::new();
+            for algo in candidates(m, k, mode) {
+                let s = median_secs(|| {
+                    std::hint::black_box(rowwise_topk_with(&x, k, algo));
+                });
+                fixed.push((algo.name(), s));
+            }
+            let (best_name, best_s) = fixed
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .cloned()
+                .unwrap();
+            let (worst_name, worst_s) = fixed
+                .iter()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .cloned()
+                .unwrap();
+
+            let mrows = |s: f64| n as f64 / s / 1e6;
+            let vs_best = best_s / auto_s; // >= 0.95 wanted
+            let vs_worst = worst_s / auto_s; // > 1.1 wanted
+            min_vs_best = min_vs_best.min(vs_best);
+            min_vs_worst = min_vs_worst.min(vs_worst);
+
+            t.row(vec![
+                m.to_string(),
+                k.to_string(),
+                plan.algo.name(),
+                format!("{:.1}", mrows(auto_s)),
+                format!("{:.1} ({best_name})", mrows(best_s)),
+                format!("{:.1} ({worst_name})", mrows(worst_s)),
+                format!("{vs_best:.3}"),
+                format!("{vs_worst:.2}"),
+            ]);
+            points.push(json::obj(vec![
+                ("cols", json::num(m as f64)),
+                ("k", json::num(k as f64)),
+                ("auto_algo", json::s(&plan.algo.name())),
+                ("auto_mrows_per_s", json::num(mrows(auto_s))),
+                ("best_fixed_algo", json::s(&best_name)),
+                ("best_fixed_mrows_per_s", json::num(mrows(best_s))),
+                ("worst_fixed_algo", json::s(&worst_name)),
+                ("worst_fixed_mrows_per_s", json::num(mrows(worst_s))),
+                ("auto_vs_best", json::num(vs_best)),
+                ("auto_vs_worst", json::num(vs_worst)),
+            ]));
+        }
+    }
+    t.print();
+
+    let pass = min_vs_best >= 0.95 && min_vs_worst > 1.1;
+    println!(
+        "\nmin auto/best = {min_vs_best:.3} (want >= 0.95), \
+         min auto/worst = {min_vs_worst:.2} (want > 1.1) -> {}",
+        if pass { "PASS" } else { "FAIL" }
+    );
+    let doc: Value = json::obj(vec![
+        ("bench", json::s("plan_dispatch")),
+        ("n_rows", json::num(n as f64)),
+        ("mode", json::s("exact")),
+        ("grid", json::arr(points)),
+        (
+            "summary",
+            json::obj(vec![
+                ("min_auto_vs_best", json::num(min_vs_best)),
+                ("min_auto_vs_worst", json::num(min_vs_worst)),
+                ("pass", Value::Bool(pass)),
+            ]),
+        ),
+    ]);
+    println!("{}", doc.to_string());
+    if !pass {
+        // make the acceptance gate scriptable: a regression must be a
+        // nonzero exit, not just a FAIL line in the text
+        std::process::exit(1);
+    }
+}

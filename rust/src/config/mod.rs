@@ -88,6 +88,57 @@ fn strip_comment(line: &str) -> &str {
     line
 }
 
+/// Adaptive-planner knobs (the `[plan]` section). Untyped here —
+/// `plan::PlannerConfig::from_plan_config` validates and parses (this
+/// module stays plain data with no dependency on the topk layer).
+///
+/// * `force_algo` — pin one algorithm (`rtopk`, `radix`, `quickselect`,
+///   `heap`, `bucket`, `bitonic`, `sort`); empty/absent = adaptive.
+///   Pins are honored only when they cannot change result semantics.
+/// * `calib_rows` — microbenchmark probe rows per candidate; 0 runs on
+///   the cost-model prior alone.
+/// * `calib_reps` — best-of repetitions per probe.
+/// * `cache_path` — JSON file persisting plans across restarts.
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    pub force_algo: Option<String>,
+    pub calib_rows: usize,
+    pub calib_reps: usize,
+    pub cache_path: Option<String>,
+}
+
+/// Hand-written (not derived): a derived Default would zero
+/// `calib_rows` and silently switch the planner to cost-model-only
+/// mode for anyone using `..Default::default()`.
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            force_algo: None,
+            calib_rows: 192,
+            calib_reps: 3,
+            cache_path: None,
+        }
+    }
+}
+
+impl PlanConfig {
+    pub fn from_config(c: &Config) -> PlanConfig {
+        let d = PlanConfig::default();
+        PlanConfig {
+            force_algo: c
+                .get("plan.force_algo")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
+            calib_rows: c.get_or("plan.calib_rows", d.calib_rows),
+            calib_reps: c.get_or("plan.calib_reps", d.calib_reps),
+            cache_path: c
+                .get("plan.cache_path")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
+        }
+    }
+}
+
 /// Service deployment settings (defaults match the benched setup).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -101,6 +152,8 @@ pub struct ServeConfig {
     pub workers: usize,
     /// queued-row limit before submissions block (backpressure)
     pub queue_limit: usize,
+    /// adaptive-planner knobs for the CPU engine route
+    pub plan: PlanConfig,
 }
 
 impl Default for ServeConfig {
@@ -111,6 +164,7 @@ impl Default for ServeConfig {
             max_wait_us: 200,
             workers: 2,
             queue_limit: 1 << 16,
+            plan: PlanConfig::default(),
         }
     }
 }
@@ -127,6 +181,7 @@ impl ServeConfig {
             max_wait_us: c.get_or("serve.max_wait_us", d.max_wait_us),
             workers: c.get_or("serve.workers", d.workers),
             queue_limit: c.get_or("serve.queue_limit", d.queue_limit),
+            plan: PlanConfig::from_config(c),
         }
     }
 }
@@ -205,5 +260,23 @@ mod tests {
         assert_eq!(s.max_batch_rows, 2048);
         assert_eq!(s.workers, 4);
         assert_eq!(s.max_wait_us, ServeConfig::default().max_wait_us);
+        assert_eq!(s.plan.calib_rows, PlanConfig::default().calib_rows);
+    }
+
+    #[test]
+    fn plan_config_section_parses() {
+        let c = Config::parse(
+            "[plan]\nforce_algo = \"radix\"\ncalib_rows = 64\n\
+             cache_path = \"plans.json\"",
+        )
+        .unwrap();
+        let p = PlanConfig::from_config(&c);
+        assert_eq!(p.force_algo.as_deref(), Some("radix"));
+        assert_eq!(p.calib_rows, 64);
+        assert_eq!(p.calib_reps, PlanConfig::default().calib_reps);
+        assert_eq!(p.cache_path.as_deref(), Some("plans.json"));
+        // empty string means unset
+        let c2 = Config::parse("[plan]\nforce_algo = \"\"").unwrap();
+        assert!(PlanConfig::from_config(&c2).force_algo.is_none());
     }
 }

@@ -128,18 +128,34 @@ impl<T> Batcher<T> {
                     .sum();
                 let now = Instant::now();
                 if group_rows >= self.policy.max_rows || now >= deadline || g.closed {
-                    // flush: take every matching request up to the budget
+                    // Flush: take matching requests while they fit the
+                    // tile budget. The budget check must include the
+                    // candidate's own rows — checking `total_rows <
+                    // max_rows` *before* adding (the old behavior) let
+                    // one large request blow the budget arbitrarily.
+                    // The head is always admitted even when it alone
+                    // exceeds the budget (oversized requests get a
+                    // dedicated batch; they must still be served), and
+                    // the first same-key request that does not fit
+                    // closes the budget — admitting later smaller ones
+                    // would serve them ahead of it (FIFO per shape).
                     let mut items = Vec::new();
                     let mut total_rows = 0usize;
                     let mut rest = VecDeque::new();
+                    let mut budget_open = true;
                     while let Some(p) = g.queue.pop_front() {
                         let pkey = (p.matrix.cols, p.k, p.mode);
-                        if pkey == key && total_rows < self.policy.max_rows {
-                            total_rows += p.matrix.rows;
-                            items.push(p);
-                        } else {
-                            rest.push_back(p);
+                        if pkey == key && budget_open {
+                            let fits = total_rows + p.matrix.rows
+                                <= self.policy.max_rows;
+                            if items.is_empty() || fits {
+                                total_rows += p.matrix.rows;
+                                items.push(p);
+                                continue;
+                            }
+                            budget_open = false;
                         }
+                        rest.push_back(p);
                     }
                     g.queue = rest;
                     g.queued_rows -= total_rows;
@@ -245,6 +261,156 @@ mod tests {
         let batch = b.next_batch().unwrap(); // drains the queued one
         assert_eq!(batch.items.len(), 1);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn budget_not_exceeded_by_second_request() {
+        // Regression: the pre-add budget check admitted any request
+        // while total_rows < max_rows, so 60 + 60 rows flushed as one
+        // 120-row batch against a 100-row budget.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 100,
+            max_wait: Duration::from_millis(5),
+            queue_limit: 1000,
+        });
+        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 1));
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.total_rows, 60, "budget exceeded");
+        assert_eq!(first.items[0].reply, 0);
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.total_rows, 60);
+        assert_eq!(second.items[0].reply, 1);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn budget_overflow_preserves_fifo_within_key() {
+        // [A(60), B(60), C(10)] same key, budget 100: C must not be
+        // served ahead of B just because it fits next to A.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 100,
+            max_wait: Duration::from_millis(5),
+            queue_limit: 1000,
+        });
+        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(mat(10, 8), 2, Mode::EXACT, 2));
+        let first = b.next_batch().unwrap();
+        assert_eq!(
+            first.items.iter().map(|p| p.reply).collect::<Vec<_>>(),
+            vec![0],
+            "budget closes at the first non-fitting same-key request"
+        );
+        let second = b.next_batch().unwrap();
+        assert_eq!(
+            second.items.iter().map(|p| p.reply).collect::<Vec<_>>(),
+            vec![1, 2],
+            "B and C flush together, in order"
+        );
+    }
+
+    #[test]
+    fn oversized_head_gets_dedicated_batch() {
+        // A request larger than max_rows must still be served — alone —
+        // and must not drag same-key followers over the budget with it.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_millis(5),
+            queue_limit: 10_000,
+        });
+        assert!(b.submit(mat(500, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(mat(10, 8), 2, Mode::EXACT, 1));
+        let big = b.next_batch().unwrap();
+        assert_eq!(big.total_rows, 500);
+        assert_eq!(big.items.len(), 1, "oversized request must batch alone");
+        let small = b.next_batch().unwrap();
+        assert_eq!(small.total_rows, 10);
+        assert_eq!(small.items[0].reply, 1);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn stress_multi_producer_no_loss_duplication_or_leak() {
+        // 4 producers x 60 requests of mixed sizes/keys against 2
+        // consumers, with a queue limit small enough to exercise
+        // backpressure. Every reply token must come back exactly once,
+        // every batch must respect the key grouping and the row budget
+        // (unless it is a dedicated oversized batch), and queued_rows
+        // must return to 0 (no double-counting).
+        const PRODUCERS: usize = 4;
+        const PER_PRODUCER: usize = 60;
+        let policy = BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_micros(200),
+            queue_limit: 256,
+        };
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(policy));
+        let seen = Arc::new(std::sync::Mutex::new(Vec::<usize>::new()));
+
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                let seen = seen.clone();
+                std::thread::spawn(move || {
+                    while let Some(batch) = b.next_batch() {
+                        let rows: usize =
+                            batch.items.iter().map(|p| p.matrix.rows).sum();
+                        assert_eq!(rows, batch.total_rows, "row accounting");
+                        if batch.items.len() > 1 {
+                            assert!(
+                                batch.total_rows <= 64,
+                                "multi-request batch over budget: {}",
+                                batch.total_rows
+                            );
+                        }
+                        for p in &batch.items {
+                            assert_eq!(p.matrix.cols, batch.cols);
+                            assert_eq!(p.k, batch.k);
+                            assert_eq!(p.mode, batch.mode);
+                        }
+                        let mut g = seen.lock().unwrap();
+                        g.extend(batch.items.iter().map(|p| p.reply));
+                    }
+                })
+            })
+            .collect();
+
+        let producers: Vec<_> = (0..PRODUCERS)
+            .map(|t| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        // sizes 1..=20 plus an occasional oversized 100;
+                        // two cols keys to exercise grouping
+                        let rows = if i % 17 == 0 { 100 } else { 1 + (i * 7) % 20 };
+                        let cols = if i % 3 == 0 { 16 } else { 8 };
+                        assert!(b.submit(
+                            mat(rows, cols),
+                            2,
+                            Mode::EXACT,
+                            t * 1000 + i
+                        ));
+                    }
+                })
+            })
+            .collect();
+
+        for p in producers {
+            p.join().unwrap();
+        }
+        b.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        let mut want: Vec<usize> = (0..PRODUCERS)
+            .flat_map(|t| (0..PER_PRODUCER).map(move |i| t * 1000 + i))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "requests lost or duplicated");
+        assert_eq!(b.queued_rows(), 0, "queued_rows leaked");
     }
 
     #[test]

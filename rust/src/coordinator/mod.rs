@@ -16,9 +16,12 @@
 //!
 //! The router picks the compiled tile variant for a request's
 //! (M, k, mode); requests with no matching artifact run on the in-crate
-//! CPU engine (`topk::rowwise`) so the service always answers. The
-//! trainer drives the AOT train/eval step artifacts with device-resident
-//! parameter round-trips.
+//! CPU engine so the service always answers. CPU batches go through the
+//! adaptive execution planner (`crate::plan`): the fastest row
+//! algorithm and work-unit grain per shape, decided once (cost-model
+//! prior + microbenchmark calibration) and cached. The trainer drives
+//! the AOT train/eval step artifacts with device-resident parameter
+//! round-trips.
 
 pub mod batcher;
 pub mod metrics;

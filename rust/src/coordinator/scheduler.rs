@@ -5,9 +5,10 @@
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{Route, Router};
+use crate::plan::Planner;
 use crate::runtime::executor::ExecutorHandle;
 use crate::runtime::tensor::HostTensor;
-use crate::topk::rowwise::rowwise_topk;
+use crate::topk::rowwise::{rowwise_topk, rowwise_topk_grained};
 use crate::topk::types::TopKResult;
 use crate::util::matrix::RowMatrix;
 use anyhow::{anyhow, Result};
@@ -19,12 +20,16 @@ use std::thread::JoinHandle;
 pub type Reply = mpsc::Sender<Result<TopKResult>>;
 
 /// Spawn `workers` scheduler threads; they exit when the batcher closes.
+/// CPU-route batches execute through the shared adaptive `planner`
+/// (plans are cached per shape, so workers agree after the first batch
+/// of a shape).
 pub fn spawn_workers(
     workers: usize,
     batcher: Arc<Batcher<Reply>>,
     router: Arc<Router>,
     executor: Option<ExecutorHandle>,
     metrics: Arc<Metrics>,
+    planner: Arc<Planner>,
 ) -> Vec<JoinHandle<()>> {
     (0..workers.max(1))
         .map(|i| {
@@ -32,11 +37,18 @@ pub fn spawn_workers(
             let router = router.clone();
             let executor = executor.clone();
             let metrics = metrics.clone();
+            let planner = planner.clone();
             std::thread::Builder::new()
                 .name(format!("topk-worker-{i}"))
                 .spawn(move || {
                     while let Some(batch) = batcher.next_batch() {
-                        run_batch(batch, &router, executor.as_ref(), &metrics);
+                        run_batch(
+                            batch,
+                            &router,
+                            executor.as_ref(),
+                            &metrics,
+                            &planner,
+                        );
                     }
                 })
                 .expect("spawn worker")
@@ -50,6 +62,7 @@ pub fn run_batch(
     router: &Router,
     executor: Option<&ExecutorHandle>,
     metrics: &Metrics,
+    planner: &Planner,
 ) {
     let route = router.route(batch.cols, batch.k, batch.mode);
     let outcome: Result<Vec<TopKResult>> = match (&route, executor) {
@@ -59,7 +72,7 @@ pub fn run_batch(
         }
         _ => {
             metrics.record_batch(false);
-            Ok(run_batch_cpu(&batch))
+            Ok(run_batch_cpu(&batch, planner))
         }
     };
     match outcome {
@@ -138,12 +151,19 @@ fn run_batch_pjrt(
     Ok(results)
 }
 
-/// CPU fallback: run each request through the in-crate engine.
-fn run_batch_cpu(batch: &Batch<Reply>) -> Vec<TopKResult> {
+/// CPU route: run the batch through the planner-selected engine. All
+/// items share (cols, k, mode) by construction, so the plan is
+/// resolved once per batch, not per item (one cached plan per shape —
+/// cost-model prior plus one-time microbenchmark calibration; see
+/// `crate::plan`).
+fn run_batch_cpu(batch: &Batch<Reply>, planner: &Planner) -> Vec<TopKResult> {
+    let plan = planner.plan(batch.cols, batch.k, batch.mode);
     batch
         .items
         .iter()
-        .map(|item| rowwise_topk(&item.matrix, batch.k, batch.mode))
+        .map(|item| {
+            rowwise_topk_grained(&item.matrix, batch.k, plan.algo, plan.grain)
+        })
         .collect()
 }
 
@@ -171,7 +191,9 @@ mod tests {
         }));
         let router = Arc::new(Router::default()); // empty -> CPU route
         let metrics = Arc::new(Metrics::default());
-        let workers = spawn_workers(2, batcher.clone(), router, None, metrics.clone());
+        let planner = Arc::new(Planner::default());
+        let workers =
+            spawn_workers(2, batcher.clone(), router, None, metrics.clone(), planner);
 
         let mut rng = Rng::seed_from(21);
         let mut rxs = Vec::new();

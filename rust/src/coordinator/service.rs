@@ -6,6 +6,7 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{spawn_workers, Reply};
+use crate::plan::{Planner, PlannerConfig};
 use crate::runtime::executor::{Executor, ExecutorHandle};
 use crate::topk::types::{Mode, TopKResult};
 use crate::util::matrix::RowMatrix;
@@ -41,6 +42,7 @@ pub struct TopKService {
     batcher: Arc<Batcher<Reply>>,
     metrics: Arc<Metrics>,
     router: Arc<Router>,
+    planner: Arc<Planner>,
     workers: Vec<JoinHandle<()>>,
     /// keeps the executor thread alive for the service's lifetime
     _executor: Option<Executor>,
@@ -78,14 +80,26 @@ impl TopKService {
             queue_limit: cfg.queue_limit,
         }));
         let metrics = Arc::new(Metrics::default());
+        let planner = Arc::new(Planner::new(
+            PlannerConfig::from_plan_config(&cfg.plan)
+                .map_err(anyhow::Error::msg)?,
+        ));
         let workers = spawn_workers(
             cfg.workers,
             batcher.clone(),
             router.clone(),
             handle,
             metrics.clone(),
+            planner.clone(),
         );
-        Ok(TopKService { batcher, metrics, router, workers, _executor: executor })
+        Ok(TopKService {
+            batcher,
+            metrics,
+            router,
+            planner,
+            workers,
+            _executor: executor,
+        })
     }
 
     /// Submit a request; returns a handle to wait on.
@@ -115,11 +129,20 @@ impl TopKService {
         self.router.variants()
     }
 
-    /// Graceful shutdown: drain the queue, stop workers.
+    /// The shared adaptive planner (cached plans per batch shape).
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// Graceful shutdown: drain the queue, stop workers, persist the
+    /// plan cache (when `plan.cache_path` is configured).
     pub fn shutdown(mut self) {
         self.batcher.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        if let Err(e) = self.planner.save() {
+            eprintln!("planner: failed to persist plan cache: {e}");
         }
     }
 }
@@ -184,6 +207,51 @@ mod tests {
         let x = RowMatrix::zeros(2, 4);
         assert!(svc.submit_async(x.clone(), 0, Mode::EXACT).is_err());
         assert!(svc.submit_async(x, 5, Mode::EXACT).is_err());
+    }
+
+    #[test]
+    fn served_batches_populate_the_plan_cache() {
+        let svc = cpu_service(2);
+        let mut rng = Rng::seed_from(34);
+        let a = RowMatrix::random_normal(30, 48, &mut rng);
+        let b = RowMatrix::random_normal(30, 96, &mut rng);
+        assert!(is_exact(&a, &svc.submit(a.clone(), 6, Mode::EXACT).unwrap()));
+        assert!(is_exact(&b, &svc.submit(b.clone(), 6, Mode::EXACT).unwrap()));
+        assert_eq!(svc.planner().cache().len(), 2, "one plan per shape");
+    }
+
+    #[test]
+    fn force_algo_knob_reaches_the_planner() {
+        use crate::config::PlanConfig;
+        use crate::topk::rowwise::RowAlgo;
+        let svc = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 50,
+            plan: PlanConfig {
+                force_algo: Some("heap".into()),
+                ..PlanConfig::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(35);
+        let x = RowMatrix::random_normal(40, 48, &mut rng);
+        let res = svc.submit(x.clone(), 6, Mode::EXACT).unwrap();
+        assert!(is_exact(&x, &res));
+        assert_eq!(svc.planner().plan(48, 6, Mode::EXACT).algo, RowAlgo::Heap);
+    }
+
+    #[test]
+    fn bad_force_algo_fails_startup() {
+        use crate::config::PlanConfig;
+        let err = TopKService::cpu_only(&ServeConfig {
+            plan: PlanConfig {
+                force_algo: Some("warp9".into()),
+                ..PlanConfig::default()
+            },
+            ..Default::default()
+        });
+        assert!(err.is_err());
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub mod config;
 pub mod coordinator;
 pub mod gnn;
 pub mod graph;
+pub mod plan;
 pub mod runtime;
 pub mod simt;
 pub mod stats;

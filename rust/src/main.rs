@@ -6,10 +6,12 @@ use rtopk::bench::{parse_mode, workload, Table};
 use rtopk::cli::{App, Args, Command};
 use rtopk::config::{Config, ServeConfig};
 use rtopk::coordinator::{Trainer, TopKService};
+use rtopk::plan::{model, Planner, PlannerConfig};
 use rtopk::runtime::executor::Executor;
 use rtopk::stats::expected_iterations;
 use rtopk::topk::verify::approx_metrics;
 use rtopk::topk::{rowwise_topk, Mode};
+use rtopk::util::json;
 use rtopk::util::rng::Rng;
 use rtopk::util::matrix::RowMatrix;
 use std::time::Instant;
@@ -43,6 +45,15 @@ fn app() -> App {
                 .opt("steps", "200", "training steps")
                 .opt("eval-every", "20", "log cadence")
                 .opt("seed", "42", "dataset + init seed"),
+            Command::new("plan", "show the adaptive planner's choice per (M, k)")
+                .opt("cols", "256,512,768", "comma-separated row lengths M")
+                .opt("k", "16,32,64,96,128", "comma-separated k values")
+                .opt("mode", "exact", "exact | es<N> | eps<X>")
+                .opt("calib-rows", "192",
+                     "microbenchmark rows per candidate (0 = cost model only)")
+                .opt("force", "", "pin one algorithm (expert; empty = adaptive)")
+                .opt("cache", "", "plan-cache JSON path (loaded and saved)")
+                .switch("json", "emit the plan grid as JSON"),
             Command::new("stats", "iteration statistics + E(n) model (Tables 1/5)")
                 .opt("cols", "256", "row length M")
                 .opt("k", "32", "k per row")
@@ -77,6 +88,7 @@ fn main() {
                 "topk" => cmd_topk(&args),
                 "serve" => cmd_serve(&args),
                 "train" => cmd_train(&args),
+                "plan" => cmd_plan(&args),
                 "stats" => cmd_stats(&args),
                 "analyze" => cmd_analyze(&args),
                 "info" => cmd_info(&args),
@@ -192,6 +204,74 @@ fn cmd_train(a: &Args) -> Result<()> {
         out.final_val_acc,
         out.final_test_acc
     );
+    Ok(())
+}
+
+fn cmd_plan(a: &Args) -> Result<()> {
+    fn parse_list(s: &str, what: &str) -> Result<Vec<usize>> {
+        s.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("bad {what} entry {t:?}"))
+            })
+            .collect()
+    }
+    let cols = parse_list(a.get("cols").unwrap(), "cols")?;
+    let ks = parse_list(a.get("k").unwrap(), "k")?;
+    let mode = parse_mode(a.get("mode").unwrap()).map_err(anyhow::Error::msg)?;
+    let calib_rows: usize = a.req("calib-rows").map_err(anyhow::Error::msg)?;
+    let force = a.get("force").filter(|s| !s.is_empty());
+    let cache = a.get("cache").filter(|s| !s.is_empty()).map(String::from);
+
+    let cfg = PlannerConfig {
+        force: match force {
+            Some(f) => Some(rtopk::plan::parse_force(f).map_err(anyhow::Error::msg)?),
+            None => None,
+        },
+        calib_rows,
+        cache_path: cache.map(std::path::PathBuf::from),
+        ..PlannerConfig::default()
+    };
+    let planner = Planner::new(cfg);
+
+    let mut t = Table::new(
+        &format!("adaptive plans (mode={})", mode.tag()),
+        &["M", "k", "algorithm", "grain", "source", "prior (cyc/row)"],
+    );
+    let mut grid = Vec::new();
+    for &m in &cols {
+        for &k in &ks {
+            if k > m {
+                continue;
+            }
+            let plan = planner.plan(m, k, mode);
+            let prior = model::prior_cost(plan.algo, m, k);
+            t.row(vec![
+                m.to_string(),
+                k.to_string(),
+                plan.algo.name(),
+                plan.grain.to_string(),
+                plan.source.name().to_string(),
+                format!("{prior:.0}"),
+            ]);
+            grid.push(json::obj(vec![
+                ("cols", json::num(m as f64)),
+                ("k", json::num(k as f64)),
+                ("mode", json::s(&mode.tag())),
+                ("algo", json::s(&plan.algo.name())),
+                ("grain", json::num(plan.grain as f64)),
+                ("source", json::s(plan.source.name())),
+                ("prior_cycles", json::num(prior)),
+            ]));
+        }
+    }
+    if a.switch("json") {
+        println!("{}", json::obj(vec![("plans", json::arr(grid))]).to_string());
+    } else {
+        t.print();
+    }
+    planner.save().map_err(anyhow::Error::msg)?;
     Ok(())
 }
 

@@ -1,0 +1,319 @@
+//! Shape-keyed plan cache with optional JSON persistence.
+//!
+//! Keys are `(cols, k, mode-tag)` — the same shape key the batcher
+//! groups on — so one calibration serves every batch of that shape for
+//! the process lifetime, and (when a `cache_path` is configured) across
+//! restarts. The on-disk format is a plain JSON document written with
+//! the in-tree writer (`util::json`):
+//!
+//! ```json
+//! {"version": 1, "plans": [
+//!   {"cols": 256, "k": 32, "mode": "exact",
+//!    "algo": "rtopk_exact", "grain": 64}
+//! ]}
+//! ```
+
+use crate::plan::{Plan, PlanSource};
+use crate::topk::rowwise::RowAlgo;
+use crate::topk::types::Mode;
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::RwLock;
+
+type Key = (usize, usize, String);
+
+/// Concurrent plan cache (read-mostly; one write per new shape).
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    inner: RwLock<BTreeMap<Key, Plan>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    pub fn get(&self, cols: usize, k: usize, mode_tag: &str) -> Option<Plan> {
+        self.inner
+            .read()
+            .unwrap()
+            .get(&(cols, k, mode_tag.to_string()))
+            .copied()
+    }
+
+    pub fn insert(&self, cols: usize, k: usize, mode_tag: &str, plan: Plan) {
+        self.inner
+            .write()
+            .unwrap()
+            .insert((cols, k, mode_tag.to_string()), plan);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every cached entry (for reporting / persistence).
+    pub fn snapshot(&self) -> Vec<(usize, usize, String, Plan)> {
+        self.inner
+            .read()
+            .unwrap()
+            .iter()
+            .map(|((c, k, m), p)| (*c, *k, m.clone(), *p))
+            .collect()
+    }
+
+    /// Serialize to the JSON document format. Forced plans are
+    /// deliberately dropped: they record an operator pin, not a
+    /// measurement, and persisting them would keep the pinned
+    /// algorithm alive after the pin is removed from the config.
+    pub fn to_json(&self) -> String {
+        let plans: Vec<Value> = self
+            .snapshot()
+            .into_iter()
+            .filter(|(_, _, _, plan)| plan.source != PlanSource::Forced)
+            .map(|(cols, k, mode, plan)| {
+                json::obj(vec![
+                    ("cols", json::num(cols as f64)),
+                    ("k", json::num(k as f64)),
+                    ("mode", json::s(&mode)),
+                    ("algo", json::s(&plan.algo.name())),
+                    ("grain", json::num(plan.grain as f64)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("version", json::num(1.0)),
+            ("plans", json::arr(plans)),
+        ])
+        .to_string()
+    }
+
+    /// Persist to a file (best-effort caller decides how to surface).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| format!("write plan cache {path:?}: {e}"))
+    }
+
+    /// Merge entries from a JSON document into this cache. All-or-
+    /// nothing: a document that fails to parse anywhere leaves the
+    /// cache untouched (a caller that logs "ignoring bad cache" must
+    /// actually have ignored all of it).
+    pub fn load_json(&self, text: &str) -> Result<usize, String> {
+        let v = json::parse(text)?;
+        let version = v.get("version").and_then(Value::as_usize).unwrap_or(0);
+        if version != 1 {
+            return Err(format!("unsupported plan-cache version {version}"));
+        }
+        let plans = v
+            .get("plans")
+            .and_then(Value::as_array)
+            .ok_or("plan cache missing plans array")?;
+        let mut parsed: Vec<(usize, usize, String, Plan)> = Vec::new();
+        for p in plans {
+            let cols = p.get("cols").and_then(Value::as_usize).ok_or("bad cols")?;
+            let k = p.get("k").and_then(Value::as_usize).ok_or("bad k")?;
+            let mode = p.get("mode").and_then(Value::as_str).ok_or("bad mode")?;
+            let algo_name =
+                p.get("algo").and_then(Value::as_str).ok_or("bad algo")?;
+            let grain =
+                p.get("grain").and_then(Value::as_usize).unwrap_or(0).max(1);
+            let algo = parse_algo(algo_name)?;
+            // an approximate mode key (early-stop / loose eps) must map
+            // to the paper's kernel — any other algorithm would change
+            // the output contract, not just the speed
+            let key_mode = parse_mode_tag(mode)?;
+            if !crate::plan::is_exact_semantics(key_mode)
+                && !matches!(algo, RowAlgo::RTopK(_))
+            {
+                return Err(format!(
+                    "plan for approximate mode {mode:?} must use the rtopk \
+                     kernel, got {algo_name:?}"
+                ));
+            }
+            parsed.push((
+                cols,
+                k,
+                mode.to_string(),
+                Plan { algo, grain, source: PlanSource::Cached },
+            ));
+        }
+        let n = parsed.len();
+        for (cols, k, mode, plan) in parsed {
+            self.insert(cols, k, &mode, plan);
+        }
+        Ok(n)
+    }
+
+    /// Load from a file path.
+    pub fn load(&self, path: &Path) -> Result<usize, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read plan cache {path:?}: {e}"))?;
+        self.load_json(&text)
+    }
+}
+
+/// Parse a serialized [`RowAlgo`] name (the inverse of
+/// `RowAlgo::name()`): `rtopk_<mode-tag>` or a fixed-algorithm name.
+pub fn parse_algo(name: &str) -> Result<RowAlgo, String> {
+    match name {
+        "radix" => Ok(RowAlgo::Radix),
+        "quickselect" => Ok(RowAlgo::QuickSelect),
+        "heap" => Ok(RowAlgo::Heap),
+        "bucket" => Ok(RowAlgo::Bucket),
+        "bitonic" => Ok(RowAlgo::Bitonic),
+        "sort" => Ok(RowAlgo::Sort),
+        _ => {
+            let tag = name
+                .strip_prefix("rtopk_")
+                .ok_or_else(|| format!("unknown algorithm {name:?}"))?;
+            Ok(RowAlgo::RTopK(parse_mode_tag(tag)?))
+        }
+    }
+}
+
+/// Parse a `Mode::tag()` string back into a [`Mode`].
+pub fn parse_mode_tag(tag: &str) -> Result<Mode, String> {
+    if tag == "exact" {
+        return Ok(Mode::EXACT);
+    }
+    if let Some(eps) = tag.strip_prefix("exact_eps") {
+        let eps_rel: f32 =
+            eps.parse().map_err(|_| format!("bad mode tag {tag:?}"))?;
+        return Ok(Mode::Exact { eps_rel });
+    }
+    if let Some(it) = tag.strip_prefix("es") {
+        let max_iter: u32 =
+            it.parse().map_err(|_| format!("bad mode tag {tag:?}"))?;
+        return Ok(Mode::EarlyStop { max_iter });
+    }
+    Err(format!("unknown mode tag {tag:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(algo: RowAlgo, grain: usize) -> Plan {
+        Plan { algo, grain, source: PlanSource::Calibrated }
+    }
+
+    #[test]
+    fn insert_get_snapshot() {
+        let c = PlanCache::new();
+        assert!(c.is_empty());
+        c.insert(256, 32, "exact", plan(RowAlgo::Radix, 64));
+        assert_eq!(c.len(), 1);
+        let p = c.get(256, 32, "exact").unwrap();
+        assert_eq!(p.algo, RowAlgo::Radix);
+        assert_eq!(p.grain, 64);
+        assert!(c.get(256, 32, "es4").is_none());
+        assert_eq!(c.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = PlanCache::new();
+        c.insert(256, 32, "exact", plan(RowAlgo::RTopK(Mode::EXACT), 64));
+        c.insert(512, 16, "es4", plan(RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 }), 32));
+        c.insert(768, 128, "exact", plan(RowAlgo::Bucket, 21));
+        let text = c.to_json();
+        let d = PlanCache::new();
+        assert_eq!(d.load_json(&text).unwrap(), 3);
+        for (cols, k, mode, p) in c.snapshot() {
+            let q = d.get(cols, k, &mode).unwrap();
+            assert_eq!(q.algo, p.algo);
+            assert_eq!(q.grain, p.grain);
+            assert_eq!(q.source, PlanSource::Cached);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let c = PlanCache::new();
+        c.insert(100, 10, "exact", plan(RowAlgo::QuickSelect, 8));
+        let path = std::env::temp_dir().join("rtopk_plan_cache_test.json");
+        c.save(&path).unwrap();
+        let d = PlanCache::new();
+        assert_eq!(d.load(&path).unwrap(), 1);
+        assert_eq!(d.get(100, 10, "exact").unwrap().algo, RowAlgo::QuickSelect);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn parse_algo_names() {
+        assert_eq!(parse_algo("radix").unwrap(), RowAlgo::Radix);
+        assert_eq!(
+            parse_algo("rtopk_exact").unwrap(),
+            RowAlgo::RTopK(Mode::EXACT)
+        );
+        assert_eq!(
+            parse_algo("rtopk_es4").unwrap(),
+            RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 })
+        );
+        assert!(matches!(
+            parse_algo("rtopk_exact_eps1e-4").unwrap(),
+            RowAlgo::RTopK(Mode::Exact { .. })
+        ));
+        assert!(parse_algo("nope").is_err());
+        assert!(parse_algo("rtopk_wat").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        let c = PlanCache::new();
+        assert!(c.load_json("{}").is_err());
+        assert!(c.load_json(r#"{"version": 2, "plans": []}"#).is_err());
+        assert!(c
+            .load_json(r#"{"version": 1, "plans": [{"cols": 1}]}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn forced_plans_are_not_persisted() {
+        let c = PlanCache::new();
+        c.insert(256, 32, "exact", plan(RowAlgo::RTopK(Mode::EXACT), 64));
+        c.insert(
+            512,
+            32,
+            "exact",
+            Plan { algo: RowAlgo::Sort, grain: 64, source: PlanSource::Forced },
+        );
+        let d = PlanCache::new();
+        assert_eq!(d.load_json(&c.to_json()).unwrap(), 1);
+        assert!(d.get(512, 32, "exact").is_none(), "pin leaked to disk");
+    }
+
+    #[test]
+    fn approximate_mode_keys_require_the_rtopk_kernel() {
+        let c = PlanCache::new();
+        let doc = r#"{"version": 1, "plans": [
+          {"cols": 256, "k": 32, "mode": "es4", "algo": "heap", "grain": 8}
+        ]}"#;
+        let err = c.load_json(doc).unwrap_err();
+        assert!(err.contains("rtopk"), "got: {err}");
+        assert!(c.is_empty());
+        // the same algo under an exact key is fine
+        let ok = r#"{"version": 1, "plans": [
+          {"cols": 256, "k": 32, "mode": "exact", "algo": "heap", "grain": 8}
+        ]}"#;
+        assert_eq!(c.load_json(ok).unwrap(), 1);
+    }
+
+    #[test]
+    fn bad_document_is_all_or_nothing() {
+        // a valid entry followed by a broken one must not leave the
+        // valid prefix merged in
+        let c = PlanCache::new();
+        let doc = r#"{"version": 1, "plans": [
+          {"cols": 256, "k": 32, "mode": "exact", "algo": "radix", "grain": 8},
+          {"cols": 512, "k": 16, "mode": "exact", "algo": "not_an_algo"}
+        ]}"#;
+        assert!(c.load_json(doc).is_err());
+        assert!(c.is_empty(), "partial merge from a rejected document");
+    }
+}

@@ -1,0 +1,151 @@
+//! On-host microbenchmark calibration for the adaptive planner.
+//!
+//! The `simt` prior ranks candidates from GPU-style instruction
+//! accounting; the host actually executing the batch has different
+//! constants (SIMD widths, cache sizes, allocator behavior). A one-time
+//! probe per shape measures every candidate on a small synthetic
+//! workload — the paper's evaluation distribution (i.i.d. standard
+//! normal), deterministic per shape — and the measured winner becomes
+//! the cached plan.
+//!
+//! Budget: `rows` bounds the probe matrix (rows x M f32) and `reps`
+//! the timed repetitions per candidate; with the default 192 x 3 a full
+//! 7-candidate calibration at M=768 touches ~3M elements — well under a
+//! millisecond of one-time work per shape, amortized over every batch
+//! the service ever runs at that shape.
+
+use crate::topk::rowwise::{rowwise_topk_grained, RowAlgo};
+use crate::util::matrix::RowMatrix;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// One candidate's measured time.
+#[derive(Clone, Copy, Debug)]
+pub struct Probe {
+    pub algo: RowAlgo,
+    /// best-of-reps wall seconds for the whole probe matrix
+    pub secs: f64,
+}
+
+/// Deterministic probe workload for a shape (seeded by the shape
+/// itself, so two planners calibrating the same shape agree).
+pub fn probe_workload(rows: usize, m: usize) -> RowMatrix {
+    let seed = 0xCA11B ^ ((m as u64) << 20) ^ rows as u64;
+    let mut rng = Rng::seed_from(seed);
+    RowMatrix::random_normal(rows.max(1), m, &mut rng)
+}
+
+/// Best-of-`reps` wall time of one candidate on `x` (one warmup run).
+pub fn time_candidate(
+    x: &RowMatrix,
+    k: usize,
+    algo: RowAlgo,
+    grain: usize,
+    reps: usize,
+) -> f64 {
+    std::hint::black_box(rowwise_topk_grained(x, k, algo, grain));
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(rowwise_topk_grained(x, k, algo, grain));
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+    }
+    best
+}
+
+/// Measure every candidate on an existing probe matrix; returns probes
+/// sorted fastest-first.
+pub fn microbench_on(
+    x: &RowMatrix,
+    k: usize,
+    candidates: &[RowAlgo],
+    reps: usize,
+    grain: usize,
+) -> Vec<Probe> {
+    let mut probes: Vec<Probe> = candidates
+        .iter()
+        .map(|&algo| Probe { algo, secs: time_candidate(x, k, algo, grain, reps) })
+        .collect();
+    probes.sort_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap());
+    probes
+}
+
+/// Convenience wrapper: generate the shape's probe workload and race
+/// the candidates on it.
+pub fn microbench(
+    m: usize,
+    k: usize,
+    candidates: &[RowAlgo],
+    rows: usize,
+    reps: usize,
+    grain: usize,
+) -> Vec<Probe> {
+    microbench_on(&probe_workload(rows, m), k, candidates, reps, grain)
+}
+
+/// Pick the fastest grain for the winning algorithm from a small
+/// neighborhood of the default (half / double), reusing the probe
+/// matrix and the base grain's already-measured time so nothing is
+/// timed twice.
+pub fn pick_grain(
+    x: &RowMatrix,
+    k: usize,
+    algo: RowAlgo,
+    reps: usize,
+    base_grain: usize,
+    base_secs: f64,
+) -> usize {
+    let g = base_grain.max(1);
+    let mut best = (g, base_secs);
+    for grain in [g / 2, (g * 2).min(1024)] {
+        if grain < 1 || grain == g {
+            continue;
+        }
+        let t = time_candidate(x, k, algo, grain, reps);
+        if t < best.1 {
+            best = (grain, t);
+        }
+    }
+    best.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::types::Mode;
+
+    #[test]
+    fn workload_is_deterministic_per_shape() {
+        assert_eq!(probe_workload(16, 32).data, probe_workload(16, 32).data);
+        assert_ne!(probe_workload(16, 32).data, probe_workload(16, 64).data);
+    }
+
+    #[test]
+    fn microbench_covers_all_candidates_sorted() {
+        let cands = [
+            RowAlgo::RTopK(Mode::EXACT),
+            RowAlgo::Heap,
+            RowAlgo::Sort,
+        ];
+        let probes = microbench(64, 8, &cands, 32, 1, 16);
+        assert_eq!(probes.len(), 3);
+        assert!(probes.windows(2).all(|w| w[0].secs <= w[1].secs));
+        assert!(probes.iter().all(|p| p.secs.is_finite() && p.secs >= 0.0));
+    }
+
+    #[test]
+    fn grain_calibration_returns_positive_neighbor() {
+        let x = probe_workload(32, 64);
+        let base = time_candidate(&x, 8, RowAlgo::Heap, 64, 1);
+        let g = pick_grain(&x, 8, RowAlgo::Heap, 1, 64, base);
+        assert!(g == 32 || g == 64 || g == 128, "unexpected grain {g}");
+        // grain 1 has no valid half-neighbor; result stays >= 1
+        assert!(pick_grain(&x, 8, RowAlgo::Heap, 1, 1, base) >= 1);
+        // an infinitely-slow base time always yields a neighbor
+        let fast = pick_grain(&x, 8, RowAlgo::Heap, 1, 64, f64::INFINITY);
+        assert!(fast == 32 || fast == 128);
+    }
+}

@@ -1,0 +1,545 @@
+//! Adaptive execution planner: pick the fastest row-wise top-k
+//! algorithm and work-unit grain per batch shape.
+//!
+//! RadiK-style size dispatch and the regime analysis in "Approximate
+//! Top-k for Increased Parallelism" both observe that the best top-k
+//! algorithm depends on the shape; this crate already carries six
+//! baselines, the paper's kernel, and a SIMT cost model — the planner
+//! is the seam that turns those parts into one self-tuning engine, and
+//! the seam every future backend (threaded CPU today, GPU tiles next)
+//! plugs into.
+//!
+//! Decision pipeline for a `(cols, k, mode)` key:
+//!
+//! 1. **Force override** (`PlannerConfig::force`): an operator pin,
+//!    honored only when it cannot change result semantics (see
+//!    [`ForceAlgo`]).
+//! 2. **Plan cache** ([`cache::PlanCache`]): one decision per shape for
+//!    the process lifetime; optionally persisted to JSON and reloaded
+//!    at startup.
+//! 3. **Cost-model prior** ([`model`]): the `simt` instruction-stream
+//!    estimates rank the candidates.
+//! 4. **Microbenchmark calibration** ([`calibrate`]): when the budget
+//!    allows (`calib_rows > 0`), every candidate is timed on a small
+//!    deterministic workload and the measured winner overrides the
+//!    prior; the winner's grain is then calibrated around the default.
+//!
+//! ## Correctness contract
+//!
+//! Candidate substitution never changes result *semantics*:
+//!
+//! * Exact requests (`Mode::Exact` with `eps_rel <= 1e-15`, the paper's
+//!   no-early-stop setting) may run any algorithm in the zoo — they all
+//!   return the exact top-k multiset (order differs; order is
+//!   unspecified by the API, as the paper's consumers never sort).
+//! * Approximate requests (early-stop, or a loose exact eps) are
+//!   defined *by the paper's algorithm*, so the planner only tunes the
+//!   grain and always executes `RowAlgo::RTopK(mode)`.
+//!
+//! ## Knobs (config `[plan]` section / `rtopk plan` flags)
+//!
+//! * `force_algo` — pin one algorithm (`rtopk`, `radix`, `quickselect`,
+//!   `heap`, `bucket`, `bitonic`, `sort`); empty = adaptive.
+//! * `calib_rows` — probe-matrix rows per candidate; `0` disables
+//!   microbenchmarks (cost-model-only decisions).
+//! * `calib_reps` — timed repetitions per probe (best-of).
+//! * `cache_path` — JSON file for plan persistence across restarts.
+
+pub mod cache;
+pub mod calibrate;
+pub mod model;
+
+use crate::topk::rowwise::{default_grain, rowwise_topk_grained, RowAlgo};
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+pub use cache::{parse_algo, parse_mode_tag, PlanCache};
+
+/// Where a plan came from (reporting / cache hygiene).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanSource {
+    /// operator pin via `force_algo`
+    Forced,
+    /// loaded from the cache (this process or a persisted file)
+    Cached,
+    /// cost-model prior only (calibration disabled)
+    Model,
+    /// microbenchmark-calibrated
+    Calibrated,
+}
+
+impl PlanSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlanSource::Forced => "forced",
+            PlanSource::Cached => "cached",
+            PlanSource::Model => "model",
+            PlanSource::Calibrated => "calibrated",
+        }
+    }
+}
+
+/// One execution decision for a shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Plan {
+    pub algo: RowAlgo,
+    /// rows per dynamic work unit
+    pub grain: usize,
+    pub source: PlanSource,
+}
+
+/// A forced algorithm choice. `RTopK` means "the paper's kernel at the
+/// request's own mode"; `Fixed` pins a baseline, which is only honored
+/// for exact-semantics requests (an approximate request silently keeps
+/// `RTopK(mode)` — substituting an exact baseline would *change* the
+/// output contract, not just the speed).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ForceAlgo {
+    RTopK,
+    Fixed(RowAlgo),
+}
+
+/// Parse a `force_algo` knob value.
+pub fn parse_force(s: &str) -> Result<ForceAlgo, String> {
+    match s {
+        "rtopk" => Ok(ForceAlgo::RTopK),
+        "radix" => Ok(ForceAlgo::Fixed(RowAlgo::Radix)),
+        "quickselect" => Ok(ForceAlgo::Fixed(RowAlgo::QuickSelect)),
+        "heap" => Ok(ForceAlgo::Fixed(RowAlgo::Heap)),
+        "bucket" => Ok(ForceAlgo::Fixed(RowAlgo::Bucket)),
+        "bitonic" => Ok(ForceAlgo::Fixed(RowAlgo::Bitonic)),
+        "sort" => Ok(ForceAlgo::Fixed(RowAlgo::Sort)),
+        other => Err(format!(
+            "unknown force_algo {other:?} (expected rtopk | radix | \
+             quickselect | heap | bucket | bitonic | sort)"
+        )),
+    }
+}
+
+/// Planner knobs (typed form of the config `[plan]` section).
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    pub force: Option<ForceAlgo>,
+    /// probe rows per candidate; 0 = cost-model only
+    pub calib_rows: usize,
+    /// best-of repetitions per probe
+    pub calib_reps: usize,
+    /// JSON persistence path for the plan cache
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            force: None,
+            calib_rows: 192,
+            calib_reps: 3,
+            cache_path: None,
+        }
+    }
+}
+
+impl PlannerConfig {
+    /// Build from the untyped config section; rejects bad knob values.
+    pub fn from_plan_config(c: &crate::config::PlanConfig) -> Result<PlannerConfig, String> {
+        let force = match c.force_algo.as_deref() {
+            None | Some("") => None,
+            Some(s) => Some(parse_force(s)?),
+        };
+        Ok(PlannerConfig {
+            force,
+            calib_rows: c.calib_rows,
+            calib_reps: c.calib_reps.max(1),
+            cache_path: c.cache_path.as_ref().map(PathBuf::from),
+        })
+    }
+}
+
+/// True when this mode's results are the exact top-k multiset (so any
+/// exact algorithm may substitute).
+pub fn is_exact_semantics(mode: Mode) -> bool {
+    matches!(mode, Mode::Exact { eps_rel } if eps_rel <= 1e-15)
+}
+
+/// Cache key for a mode. `Mode::tag()` is a display label that rounds
+/// eps to one significant digit; here loose-eps exact modes keep nine
+/// significant digits (a lossless f32 round-trip) so two requests with
+/// different eps settings never collide on one cached plan.
+pub fn mode_key(mode: Mode) -> String {
+    match mode {
+        Mode::Exact { eps_rel } if eps_rel <= 1e-15 => "exact".into(),
+        Mode::Exact { eps_rel } => format!("exact_eps{eps_rel:.9e}"),
+        Mode::EarlyStop { max_iter } => format!("es{max_iter}"),
+    }
+}
+
+/// The algorithms the planner may choose for a shape.
+pub fn candidates(m: usize, k: usize, mode: Mode) -> Vec<RowAlgo> {
+    let _ = (m, k);
+    if is_exact_semantics(mode) {
+        let mut v = vec![RowAlgo::RTopK(mode)];
+        v.extend(RowAlgo::all_baselines());
+        v
+    } else {
+        // approximate semantics are defined by the paper's kernel
+        vec![RowAlgo::RTopK(mode)]
+    }
+}
+
+/// The adaptive planner: decision pipeline + shared plan cache.
+pub struct Planner {
+    cfg: PlannerConfig,
+    cache: PlanCache,
+    /// Plans decided under a `force_algo` pin. Kept apart from the
+    /// adaptive cache so a pinned run neither trusts nor overwrites
+    /// (and at save() time never erases) persisted calibration — the
+    /// pin is session state, the adaptive cache is measurement.
+    forced_cache: PlanCache,
+    /// Single-flight guard for cache misses: without it, concurrent
+    /// workers first touching a shape would calibrate simultaneously,
+    /// timing each other's CPU contention and caching whichever noisy
+    /// result landed last.
+    decide_lock: Mutex<()>,
+}
+
+impl Default for Planner {
+    fn default() -> Self {
+        Planner::new(PlannerConfig::default())
+    }
+}
+
+impl Planner {
+    /// Build a planner; loads the persisted cache if the configured
+    /// path exists (a missing file is not an error — first run).
+    pub fn new(cfg: PlannerConfig) -> Planner {
+        let cache = PlanCache::new();
+        if let Some(path) = &cfg.cache_path {
+            if path.exists() {
+                if let Err(e) = cache.load(path) {
+                    eprintln!("planner: ignoring bad plan cache: {e}");
+                }
+            }
+        }
+        Planner {
+            cfg,
+            cache,
+            forced_cache: PlanCache::new(),
+            decide_lock: Mutex::new(()),
+        }
+    }
+
+    pub fn config(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    pub fn cache(&self) -> &PlanCache {
+        &self.cache
+    }
+
+    /// The forced algorithm for a request mode, if a pin is configured.
+    fn forced_algo(&self, mode: Mode) -> Option<RowAlgo> {
+        self.cfg.force.map(|force| match force {
+            ForceAlgo::RTopK => RowAlgo::RTopK(mode),
+            ForceAlgo::Fixed(a) if is_exact_semantics(mode) => a,
+            // approximate request: the pin cannot change semantics,
+            // keep the paper's kernel at the requested mode
+            ForceAlgo::Fixed(_) => RowAlgo::RTopK(mode),
+        })
+    }
+
+    /// Normalize a cached adaptive plan for this request: the cached
+    /// algo may carry a lossily-serialized RTopK mode (JSON stores the
+    /// display tag) — the request's own mode is authoritative.
+    fn recall(mut p: Plan, mode: Mode) -> Plan {
+        if let RowAlgo::RTopK(_) = p.algo {
+            p.algo = RowAlgo::RTopK(mode);
+        }
+        p
+    }
+
+    /// Decide (or recall) the plan for a shape.
+    pub fn plan(&self, cols: usize, k: usize, mode: Mode) -> Plan {
+        let base_grain = default_grain(cols);
+        let key = mode_key(mode);
+        if let Some(algo) = self.forced_algo(mode) {
+            // Pinned: the pin fixes the algorithm, not the tuning — the
+            // grain is still calibrated (once, in the session-local
+            // forced cache; the persisted adaptive cache is left alone).
+            if let Some(p) = self.forced_cache.get(cols, k, &key) {
+                return p;
+            }
+            let _guard = self.decide_lock.lock().unwrap();
+            if let Some(p) = self.forced_cache.get(cols, k, &key) {
+                return p;
+            }
+            let grain = if self.cfg.calib_rows == 0 {
+                base_grain
+            } else {
+                let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
+                let secs = calibrate::time_candidate(
+                    &x,
+                    k,
+                    algo,
+                    base_grain,
+                    self.cfg.calib_reps,
+                );
+                calibrate::pick_grain(
+                    &x,
+                    k,
+                    algo,
+                    self.cfg.calib_reps,
+                    base_grain,
+                    secs,
+                )
+            };
+            let plan = Plan { algo, grain, source: PlanSource::Forced };
+            self.forced_cache.insert(cols, k, &key, plan);
+            return plan;
+        }
+        if let Some(p) = self.cache.get(cols, k, &key) {
+            return Self::recall(p, mode);
+        }
+        // Single-flight: serialize first-touch calibration so probe
+        // timings are not contended, then re-check the cache (another
+        // worker may have decided while we waited for the lock).
+        let _guard = self.decide_lock.lock().unwrap();
+        if let Some(p) = self.cache.get(cols, k, &key) {
+            return Self::recall(p, mode);
+        }
+        let plan = self.decide(cols, k, mode, base_grain);
+        self.cache.insert(cols, k, &key, plan);
+        plan
+    }
+
+    fn decide(&self, cols: usize, k: usize, mode: Mode, base_grain: usize) -> Plan {
+        let cands = candidates(cols, k, mode);
+        if self.cfg.calib_rows == 0 {
+            // model-only: take the prior's pick at the default grain
+            let ranked = model::rank(&cands, cols, k);
+            return Plan {
+                algo: ranked[0].0,
+                grain: base_grain,
+                source: PlanSource::Model,
+            };
+        }
+        // one probe workload serves both the algorithm race and the
+        // grain neighborhood
+        let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
+        let (algo, base_secs) = if cands.len() == 1 {
+            // nothing to race, but the grain is still worth measuring
+            let secs = calibrate::time_candidate(
+                &x,
+                k,
+                cands[0],
+                base_grain,
+                self.cfg.calib_reps,
+            );
+            (cands[0], secs)
+        } else {
+            let probes = calibrate::microbench_on(
+                &x,
+                k,
+                &cands,
+                self.cfg.calib_reps,
+                base_grain,
+            );
+            (probes[0].algo, probes[0].secs)
+        };
+        let grain = calibrate::pick_grain(
+            &x,
+            k,
+            algo,
+            self.cfg.calib_reps,
+            base_grain,
+            base_secs,
+        );
+        Plan { algo, grain, source: PlanSource::Calibrated }
+    }
+
+    /// Plan + execute one matrix.
+    pub fn run(&self, x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
+        let plan = self.plan(x.cols, k, mode);
+        rowwise_topk_grained(x, k, plan.algo, plan.grain)
+    }
+
+    /// Persist the cache if a path is configured (no-op otherwise).
+    pub fn save(&self) -> Result<(), String> {
+        match &self.cfg.cache_path {
+            Some(path) => self.cache.save(path),
+            None => Ok(()),
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Planner> = OnceLock::new();
+
+/// The process-wide planner behind
+/// [`crate::topk::rowwise::rowwise_topk_auto`] (default knobs, no
+/// persistence). Services build their own [`Planner`] from
+/// `ServeConfig` instead.
+pub fn global() -> &'static Planner {
+    GLOBAL.get_or_init(|| Planner::new(PlannerConfig::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::rowwise::rowwise_topk_with;
+    use crate::util::rng::Rng;
+
+    fn quick_planner() -> Planner {
+        Planner::new(PlannerConfig {
+            calib_rows: 32,
+            calib_reps: 1,
+            ..PlannerConfig::default()
+        })
+    }
+
+    #[test]
+    fn exact_candidates_cover_zoo_approximate_pin_kernel() {
+        assert_eq!(candidates(256, 32, Mode::EXACT).len(), 7);
+        let es = candidates(256, 32, Mode::EarlyStop { max_iter: 4 });
+        assert_eq!(es, vec![RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 })]);
+        // a loose exact eps is approximate too
+        let loose = candidates(256, 32, Mode::Exact { eps_rel: 1e-4 });
+        assert_eq!(loose.len(), 1);
+    }
+
+    #[test]
+    fn plan_is_cached_per_shape() {
+        let p = quick_planner();
+        let a = p.plan(128, 16, Mode::EXACT);
+        let b = p.plan(128, 16, Mode::EXACT);
+        assert_eq!(a.algo, b.algo);
+        assert_eq!(b.source, PlanSource::Cached);
+        assert_eq!(p.cache().len(), 1);
+        p.plan(128, 16, Mode::EarlyStop { max_iter: 4 });
+        assert_eq!(p.cache().len(), 2);
+    }
+
+    #[test]
+    fn early_stop_plans_keep_the_papers_kernel() {
+        let p = quick_planner();
+        let mode = Mode::EarlyStop { max_iter: 4 };
+        let plan = p.plan(256, 32, mode);
+        assert_eq!(plan.algo, RowAlgo::RTopK(mode));
+        // single-candidate shapes still get their grain measured
+        assert_eq!(plan.source, PlanSource::Calibrated);
+    }
+
+    #[test]
+    fn distinct_loose_eps_modes_do_not_collide() {
+        // Mode::tag() rounds eps to one digit; the cache key must not,
+        // or two different eps settings share one plan and execute at
+        // the wrong bracket precision.
+        let p = quick_planner();
+        let a = Mode::Exact { eps_rel: 1.04e-4 };
+        let b = Mode::Exact { eps_rel: 1.4e-4 };
+        assert_eq!(a.tag(), b.tag(), "premise: display tags collide");
+        assert_ne!(mode_key(a), mode_key(b), "cache keys must not");
+        let pa = p.plan(64, 8, a);
+        let pb = p.plan(64, 8, b);
+        assert_eq!(p.cache().len(), 2);
+        assert_eq!(pa.algo, RowAlgo::RTopK(a));
+        assert_eq!(pb.algo, RowAlgo::RTopK(b));
+        // cache hits re-stamp the *requested* mode onto RTopK plans
+        assert_eq!(p.plan(64, 8, a).algo, RowAlgo::RTopK(a));
+    }
+
+    #[test]
+    fn forced_algo_is_honored_only_when_semantics_allow() {
+        let p = Planner::new(PlannerConfig {
+            force: Some(ForceAlgo::Fixed(RowAlgo::Heap)),
+            calib_rows: 32,
+            calib_reps: 1,
+            ..PlannerConfig::default()
+        });
+        let first = p.plan(64, 8, Mode::EXACT);
+        assert_eq!(first.algo, RowAlgo::Heap);
+        assert_eq!(first.source, PlanSource::Forced);
+        assert!(first.grain >= 1, "forced plans still calibrate a grain");
+        let es = Mode::EarlyStop { max_iter: 2 };
+        assert_eq!(p.plan(64, 8, es).algo, RowAlgo::RTopK(es));
+        // recalls (now cached) keep the pin
+        assert_eq!(p.plan(64, 8, Mode::EXACT).algo, RowAlgo::Heap);
+        // a stale adaptive decision (e.g. loaded from a pre-pin cache
+        // file) is neither trusted nor overwritten by the pinned run —
+        // it survives for the day the pin is removed
+        p.cache().insert(
+            96,
+            8,
+            "exact",
+            Plan { algo: RowAlgo::Radix, grain: 4, source: PlanSource::Cached },
+        );
+        assert_eq!(p.plan(96, 8, Mode::EXACT).algo, RowAlgo::Heap);
+        assert_eq!(
+            p.cache().get(96, 8, "exact").unwrap().algo,
+            RowAlgo::Radix,
+            "pinned run must not erase persisted calibration"
+        );
+    }
+
+    #[test]
+    fn model_only_mode_skips_calibration() {
+        let p = Planner::new(PlannerConfig {
+            calib_rows: 0,
+            ..PlannerConfig::default()
+        });
+        let plan = p.plan(256, 32, Mode::EXACT);
+        assert_eq!(plan.source, PlanSource::Model);
+        // the prior must not pick the provably-expensive tail (the
+        // exact winner between rtopk and the cheap two-pass baselines
+        // is the calibrator's call, not the prior's)
+        assert_ne!(plan.algo, RowAlgo::Sort);
+        assert_ne!(plan.algo, RowAlgo::Bitonic);
+    }
+
+    #[test]
+    fn run_matches_fixed_algo_oracle() {
+        let p = quick_planner();
+        let mut rng = Rng::seed_from(0x9A7);
+        for &(m, k) in &[(64usize, 8usize), (100, 13), (256, 32)] {
+            for mode in [Mode::EXACT, Mode::EarlyStop { max_iter: 4 }] {
+                let x = RowMatrix::random_normal(50, m, &mut rng);
+                let auto = p.run(&x, k, mode);
+                let plan = p.plan(m, k, mode);
+                let oracle = rowwise_topk_with(&x, k, plan.algo);
+                assert_eq!(auto.values, oracle.values, "M={m} k={k}");
+                assert_eq!(auto.indices, oracle.indices, "M={m} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_force_names() {
+        assert_eq!(parse_force("rtopk").unwrap(), ForceAlgo::RTopK);
+        assert_eq!(
+            parse_force("bucket").unwrap(),
+            ForceAlgo::Fixed(RowAlgo::Bucket)
+        );
+        assert!(parse_force("gpu").is_err());
+    }
+
+    #[test]
+    fn persistence_roundtrip_through_planner() {
+        let path = std::env::temp_dir().join("rtopk_planner_persist_test.json");
+        let _ = std::fs::remove_file(&path);
+        let cfg = PlannerConfig {
+            calib_rows: 32,
+            calib_reps: 1,
+            cache_path: Some(path.clone()),
+            ..PlannerConfig::default()
+        };
+        let p = Planner::new(cfg.clone());
+        let decided = p.plan(96, 12, Mode::EXACT);
+        p.save().unwrap();
+        let q = Planner::new(cfg);
+        let recalled = q.plan(96, 12, Mode::EXACT);
+        assert_eq!(recalled.algo, decided.algo);
+        assert_eq!(recalled.grain, decided.grain);
+        assert_eq!(recalled.source, PlanSource::Cached);
+        let _ = std::fs::remove_file(&path);
+    }
+}

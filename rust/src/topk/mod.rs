@@ -4,7 +4,10 @@
 //!   Algorithm 2 early-stopping), single-row primitives that mirror the
 //!   Pallas kernel and the pure-jnp oracle decision-for-decision.
 //! * [`rowwise`] — the batched driver that applies any row selector to
-//!   an (N, M) matrix in parallel (the "kernel launch" equivalent).
+//!   an (N, M) matrix in parallel (the "kernel launch" equivalent);
+//!   [`rowwise::rowwise_topk_auto`] routes through the adaptive
+//!   execution planner ([`crate::plan`]) instead of hardwiring one
+//!   algorithm.
 //! * [`baselines`] — the algorithms the paper compares against or
 //!   discusses: RadixSelect (PyTorch's `torch.topk` underlying method),
 //!   QuickSelect, heap, bucket select, bitonic top-k, and full sort.
@@ -18,5 +21,5 @@ pub mod types;
 pub mod verify;
 
 pub use binary_search::{rtopk_row, search_early_stop, search_exact, select_row, SearchOut};
-pub use rowwise::{rowwise_topk, rowwise_topk_with, RowAlgo};
+pub use rowwise::{rowwise_topk, rowwise_topk_auto, rowwise_topk_with, RowAlgo};
 pub use types::{Mode, TopKResult};

@@ -59,12 +59,34 @@ pub fn rowwise_topk(x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
     rowwise_topk_with(x, k, RowAlgo::RTopK(mode))
 }
 
-/// Row-wise top-k with any algorithm. Rows are distributed over worker
-/// threads in dynamic chunks (exact-mode rows converge at different
-/// iteration counts, so dynamic scheduling avoids stragglers — the CPU
-/// analogue of the paper's observation that divergent warp exits do not
-/// hurt overall kernel time).
+/// Planner-driven entry point: consults the adaptive execution planner
+/// ([`crate::plan`]) to pick the fastest algorithm and work-unit grain
+/// for this (M, k, mode) — cost-model prior plus one-time on-host
+/// microbenchmark calibration, cached per shape. Semantics match
+/// [`rowwise_topk`]: exact requests get an exact algorithm (any of the
+/// zoo), approximate requests always run the paper's kernel at their
+/// requested mode.
+pub fn rowwise_topk_auto(x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
+    crate::plan::global().run(x, k, mode)
+}
+
+/// Row-wise top-k with any algorithm at the default grain.
 pub fn rowwise_topk_with(x: &RowMatrix, k: usize, algo: RowAlgo) -> TopKResult {
+    rowwise_topk_grained(x, k, algo, default_grain(x.cols))
+}
+
+/// Row-wise top-k with any algorithm and an explicit rows-per-work-unit
+/// grain (the planner calibrates this). Rows are distributed over
+/// worker threads in dynamic chunks (exact-mode rows converge at
+/// different iteration counts, so dynamic scheduling avoids stragglers
+/// — the CPU analogue of the paper's observation that divergent warp
+/// exits do not hurt overall kernel time).
+pub fn rowwise_topk_grained(
+    x: &RowMatrix,
+    k: usize,
+    algo: RowAlgo,
+    grain: usize,
+) -> TopKResult {
     assert!(k >= 1 && k <= x.cols, "k={} out of range for M={}", k, x.cols);
     let mut out = TopKResult::zeros(x.rows, k);
     // Split the output into disjoint per-row slices up front so worker
@@ -72,7 +94,7 @@ pub fn rowwise_topk_with(x: &RowMatrix, k: usize, algo: RowAlgo) -> TopKResult {
     let kcap = k;
     let vals_ptr = SendPtr(out.values.as_mut_ptr());
     let idx_ptr = SendPtr(out.indices.as_mut_ptr());
-    pool::parallel_dynamic(x.rows, row_grain(x.cols), |start, end| {
+    pool::parallel_dynamic(x.rows, grain.max(1), |start, end| {
         // scratch reused across this chunk's rows
         let mut scratch = baselines::Scratch::new(x.cols, kcap);
         for r in start..end {
@@ -115,8 +137,9 @@ pub fn run_row(
 }
 
 /// Rows per dynamic work unit: keep units ~64kB of input so scheduling
-/// overhead stays negligible at any M.
-fn row_grain(m: usize) -> usize {
+/// overhead stays negligible at any M. This is the planner's starting
+/// point; calibration may scale it.
+pub fn default_grain(m: usize) -> usize {
     (16_384 / m.max(1)).clamp(1, 256)
 }
 
@@ -192,8 +215,20 @@ mod tests {
 
     #[test]
     fn row_grain_bounds() {
-        assert_eq!(row_grain(1), 256);
-        assert!(row_grain(256) >= 1);
-        assert_eq!(row_grain(100_000), 1);
+        assert_eq!(default_grain(1), 256);
+        assert!(default_grain(256) >= 1);
+        assert_eq!(default_grain(100_000), 1);
+    }
+
+    #[test]
+    fn grained_matches_default_grain() {
+        let mut rng = Rng::seed_from(6);
+        let x = RowMatrix::random_normal(100, 48, &mut rng);
+        let a = rowwise_topk_with(&x, 7, RowAlgo::Heap);
+        for grain in [1usize, 3, 64, 1000] {
+            let b = rowwise_topk_grained(&x, 7, RowAlgo::Heap, grain);
+            assert_eq!(a.values, b.values, "grain {grain}");
+            assert_eq!(a.indices, b.indices, "grain {grain}");
+        }
     }
 }

@@ -4,7 +4,11 @@
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Mode {
     /// Algorithm 1: iterate until the bracket closes below
-    /// `eps_rel * max(row)` or the count hits k exactly.
+    /// `eps_rel * max(row)` (the paper's line 3) or the count hits k
+    /// exactly. For rows whose max is non-positive — where the paper's
+    /// formula would be negative/zero and the width exit could never
+    /// fire — the scale falls back to `max(|max(row)|, |min(row)|)`;
+    /// see `topk::binary_search`.
     /// `eps_rel = 1e-16` is the paper's "no early stopping" setting
     /// (below f32 resolution, so effectively exact).
     Exact { eps_rel: f32 },

@@ -1,0 +1,122 @@
+//! Integration: adaptive planner parity and persistence.
+//!
+//! The core guarantee under test: for any shape, `Planner::run` (and
+//! therefore `rowwise_topk_auto`) returns *bit-identical* output to the
+//! fixed-algorithm oracle of whatever plan the grid chose — dispatch
+//! may change speed, never results — and exact-mode plans additionally
+//! match the sort oracle's multiset.
+
+use rtopk::plan::{candidates, Plan, Planner, PlannerConfig, PlanSource};
+use rtopk::topk::rowwise::{rowwise_topk_with, RowAlgo};
+use rtopk::topk::types::Mode;
+use rtopk::topk::verify::is_exact;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::prop::{forall, gens};
+use rtopk::util::rng::Rng;
+
+fn quick_planner() -> Planner {
+    Planner::new(PlannerConfig {
+        calib_rows: 32,
+        calib_reps: 1,
+        ..PlannerConfig::default()
+    })
+}
+
+#[test]
+fn auto_equals_fixed_algo_oracle_for_every_chosen_plan() {
+    let planner = quick_planner();
+    forall(
+        "auto == fixed-algo oracle",
+        0x9_1A_7,
+        120,
+        |rng| {
+            let (m, k) = gens::m_and_k(rng, 96);
+            let rows = 1 + rng.index(40);
+            let mode = if rng.chance(0.5) {
+                Mode::EXACT
+            } else {
+                Mode::EarlyStop { max_iter: 1 + rng.index(8) as u32 }
+            };
+            let x = RowMatrix::from_vec(
+                rows,
+                m,
+                (0..rows * m).map(|_| rng.normal_f32()).collect(),
+            );
+            (x, k, mode)
+        },
+        |(x, k, mode)| {
+            let planner = &planner;
+            let auto = planner.run(x, *k, *mode);
+            let plan = planner.plan(x.cols, *k, *mode);
+            let oracle = rowwise_topk_with(x, *k, plan.algo);
+            if auto.values != oracle.values || auto.indices != oracle.indices {
+                return Err(format!(
+                    "auto diverged from its own plan {:?}",
+                    plan.algo.name()
+                ));
+            }
+            if rtopk::plan::is_exact_semantics(*mode) && !is_exact(x, &auto) {
+                return Err("exact-mode plan returned non-exact top-k".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn every_candidate_the_grid_can_choose_is_exact() {
+    // The planner may pick any of these for an exact request; each one
+    // must satisfy the exact-multiset contract independently, so no
+    // calibration outcome can produce a wrong answer.
+    let mut rng = Rng::seed_from(0xA11);
+    for &(m, k) in &[(64usize, 8usize), (100, 25), (256, 32)] {
+        let x = RowMatrix::random_normal(40, m, &mut rng);
+        for algo in candidates(m, k, Mode::EXACT) {
+            let res = rowwise_topk_with(&x, k, algo);
+            assert!(is_exact(&x, &res), "algo {} at M={m} k={k}", algo.name());
+        }
+    }
+}
+
+#[test]
+fn approximate_requests_never_switch_algorithm() {
+    let planner = quick_planner();
+    for it in [1u32, 4, 8] {
+        let mode = Mode::EarlyStop { max_iter: it };
+        let plan = planner.plan(200, 20, mode);
+        assert_eq!(plan.algo, RowAlgo::RTopK(mode));
+    }
+    let loose = Mode::Exact { eps_rel: 1e-3 };
+    assert_eq!(planner.plan(200, 20, loose).algo, RowAlgo::RTopK(loose));
+}
+
+#[test]
+fn cache_roundtrips_through_disk() {
+    let path = std::env::temp_dir().join("rtopk_planner_integration_cache.json");
+    let _ = std::fs::remove_file(&path);
+    let cfg = PlannerConfig {
+        calib_rows: 32,
+        calib_reps: 1,
+        cache_path: Some(path.clone()),
+        ..PlannerConfig::default()
+    };
+    let first = Planner::new(cfg.clone());
+    let mut decided: Vec<(usize, usize, Plan)> = Vec::new();
+    for &(m, k) in &[(64usize, 8usize), (128, 32), (256, 64)] {
+        decided.push((m, k, first.plan(m, k, Mode::EXACT)));
+    }
+    first.save().unwrap();
+
+    let second = Planner::new(cfg);
+    for (m, k, plan) in decided {
+        let recalled = second.plan(m, k, Mode::EXACT);
+        assert_eq!(recalled.algo, plan.algo, "M={m} k={k}");
+        assert_eq!(recalled.grain, plan.grain, "M={m} k={k}");
+        assert_eq!(recalled.source, PlanSource::Cached);
+    }
+    // recalled plans still execute correctly
+    let mut rng = Rng::seed_from(0xD15C);
+    let x = RowMatrix::random_normal(30, 128, &mut rng);
+    assert!(is_exact(&x, &second.run(&x, 32, Mode::EXACT)));
+    let _ = std::fs::remove_file(&path);
+}

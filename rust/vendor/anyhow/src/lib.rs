@@ -1,0 +1,188 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The offline build cannot fetch crates.io, so this vendor crate
+//! implements exactly the surface `rtopk` uses: [`Error`], [`Result`],
+//! the [`anyhow!`] and [`bail!`] macros, [`Context`], and
+//! [`Error::msg`]. Semantics mirror upstream where it matters:
+//!
+//! * `Error` does **not** implement `std::error::Error` — that is what
+//!   makes the blanket `From<E: std::error::Error>` conversion (used by
+//!   `?`) coherent, the same trick upstream anyhow uses.
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole context chain joined with `": "`.
+
+use std::fmt;
+
+/// A string-backed error with a context chain. `msgs[0]` is the
+/// outermost (most recently attached) message.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msgs: vec![m.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        let mut msgs = Vec::with_capacity(self.msgs.len() + 1);
+        msgs.push(c.to_string());
+        msgs.extend(self.msgs);
+        Error { msgs }
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.msgs.join(": "))
+        } else {
+            f.write_str(&self.msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow's Debug prints the message plus its causes; the joined
+        // chain is the closest single-line equivalent.
+        f.write_str(&self.msgs.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Conversion into [`Error`] for the [`Context`] blanket impl. Covers
+/// both `Error` itself and any standard error type; coherent because
+/// `Error` does not implement `std::error::Error`.
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+impl<E> IntoError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+/// Attach context to a `Result`'s error.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into_error().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("missing"));
+    }
+
+    #[test]
+    fn context_on_std_and_shim_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e}"), "reading file");
+        assert!(format!("{e:#}").contains("missing"));
+
+        let r2: Result<()> = Err(anyhow!("deep"));
+        let e2 = r2.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step 3: deep");
+    }
+
+    #[test]
+    fn bail_returns_formatted() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+    }
+
+    #[test]
+    fn msg_accepts_string_and_str() {
+        let a = Error::msg("s");
+        let b = Error::msg(String::from("s"));
+        assert_eq!(format!("{a}"), format!("{b}"));
+    }
+}

@@ -1,0 +1,293 @@
+//! In-tree stub of the `xla` (PJRT) bindings.
+//!
+//! The container image carries no native XLA/PJRT libraries, so this
+//! crate provides the exact API surface `rtopk::runtime` uses with two
+//! fidelity levels:
+//!
+//! * **Functional**: [`Literal`] construction, reshape, dtype/shape
+//!   introspection and readback are fully implemented — the host-tensor
+//!   plumbing (`runtime::tensor`) behaves identically to the real
+//!   bindings and its unit tests exercise real behavior.
+//! * **Stubbed**: [`PjRtClient::compile`] and
+//!   [`PjRtLoadedExecutable::execute`] return a descriptive error.
+//!   `TopKService` integration tests skip when `artifacts/` is absent,
+//!   and the coordinator's CPU engine serves every request; a build
+//!   against the real bindings swaps this crate out via the workspace
+//!   manifest with no source changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type; implements `std::error::Error` so `?` converts it into
+/// the caller's `anyhow`-style error.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT is unavailable: rtopk was built with the in-tree \
+     xla stub (no native XLA libraries in this environment); the CPU engine \
+     serves all requests";
+
+/// Element types of the artifact ABI (plus common neighbors so dtype
+/// matches stay non-exhaustive-friendly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+/// Internal typed buffer. Public only because the [`NativeType`] trait
+/// mentions it; treat as an implementation detail.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+        }
+    }
+}
+
+/// Host-side literal: typed buffer + dims, or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+/// Element types the stub can carry natively.
+pub trait NativeType: Copy + Sized {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap_slice(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap_slice(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap_slice(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal {
+            data: T::wrap(v.to_vec()),
+            dims: vec![v.len() as i64],
+            tuple: None,
+        }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: vec![], tuple: None }
+    }
+
+    /// Tuple literal (what artifact executions return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { data: Data::F32(Vec::new()), dims: vec![], tuple: Some(parts) }
+    }
+
+    /// Same buffer under new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements do not fit {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), tuple: None })
+    }
+
+    /// Shape of a non-tuple literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("tuple literal has no array shape".into()));
+        }
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.data.ty() })
+    }
+
+    /// Typed readback.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap_slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error(format!("literal is {:?}, not the requested dtype", self.data.ty())))
+    }
+
+    /// Unpack a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple.ok_or_else(|| Error("literal is not a tuple".into()))
+    }
+}
+
+/// Shape + dtype view of an array literal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module (the stub only retains the text).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO-text artifact. Fails if the file is unreadable, so
+    /// missing-artifact errors still surface at the right layer.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| Error(format!("read {p:?}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle.
+#[derive(Clone, Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle. `cpu()` succeeds so manifest-only operations
+/// (routing tables, `rtopk info`) work; compilation is where the stub
+/// reports itself.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// Device buffer handle returned by executions.
+pub struct PjRtBuffer(#[allow(dead_code)] Literal);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.0.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let s = r.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_bad_reshape() {
+        let s = Literal::scalar(7i32);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        assert_eq!(s.array_shape().unwrap().ty(), ElementType::S32);
+        assert!(Literal::vec1(&[1.0f32; 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_unpacks() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        assert!(t.clone().array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::scalar(0i32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_compiles_to_stub_error() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.platform_name().contains("cpu"));
+        let err = c.compile(&XlaComputation).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
