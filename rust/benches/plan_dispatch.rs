@@ -7,8 +7,11 @@
 //! every grid point, and > 1.1x the worst. Results are emitted as a
 //! JSON document (last line of output) for machine checking:
 //!
-//!   cargo bench --bench plan_dispatch              (N = 2^13)
+//!   cargo bench --bench plan_dispatch               (N = 2^13)
 //!   RTOPK_QUICK=1 cargo bench --bench plan_dispatch (N = 2^11)
+//!   RTOPK_SMOKE=1 cargo bench --bench plan_dispatch (CI: tiny shapes,
+//!       schema check only — the perf gate is skipped because shared
+//!       runners are too noisy to enforce throughput ratios)
 
 use rtopk::bench::{workload, Table};
 use rtopk::plan::{candidates, Planner, PlannerConfig};
@@ -23,14 +26,21 @@ fn median_secs(f: impl FnMut()) -> f64 {
 }
 
 fn main() {
-    let quick = std::env::var("RTOPK_QUICK").is_ok();
-    let n = if quick { 1 << 11 } else { 1 << 13 };
-    let ms = [256usize, 512, 768];
-    let ks = [16usize, 32, 64, 96, 128];
+    let smoke = std::env::var("RTOPK_SMOKE").is_ok();
+    let quick = smoke || std::env::var("RTOPK_QUICK").is_ok();
+    let n = if smoke {
+        1 << 9
+    } else if quick {
+        1 << 11
+    } else {
+        1 << 13
+    };
+    let ms: Vec<usize> = if smoke { vec![64, 128] } else { vec![256, 512, 768] };
+    let ks: Vec<usize> = if smoke { vec![8, 16] } else { vec![16, 32, 64, 96, 128] };
     let mode = Mode::EXACT;
 
     let planner = Planner::new(PlannerConfig {
-        calib_rows: if quick { 64 } else { 192 },
+        calib_rows: if smoke { 32 } else if quick { 64 } else { 192 },
         ..PlannerConfig::default()
     });
 
@@ -91,6 +101,7 @@ fn main() {
             points.push(json::obj(vec![
                 ("cols", json::num(m as f64)),
                 ("k", json::num(k as f64)),
+                ("backend", json::s(&plan.backend)),
                 ("auto_algo", json::s(&plan.algo.name())),
                 ("auto_mrows_per_s", json::num(mrows(auto_s))),
                 ("best_fixed_algo", json::s(&best_name)),
@@ -108,12 +119,19 @@ fn main() {
     println!(
         "\nmin auto/best = {min_vs_best:.3} (want >= 0.95), \
          min auto/worst = {min_vs_worst:.2} (want > 1.1) -> {}",
-        if pass { "PASS" } else { "FAIL" }
+        if pass {
+            "PASS"
+        } else if smoke {
+            "FAIL (ignored: smoke mode checks schema, not speed)"
+        } else {
+            "FAIL"
+        }
     );
     let doc: Value = json::obj(vec![
         ("bench", json::s("plan_dispatch")),
         ("n_rows", json::num(n as f64)),
         ("mode", json::s("exact")),
+        ("smoke", Value::Bool(smoke)),
         ("grid", json::arr(points)),
         (
             "summary",
@@ -125,7 +143,7 @@ fn main() {
         ),
     ]);
     println!("{}", doc.to_string());
-    if !pass {
+    if !pass && !smoke {
         // make the acceptance gate scriptable: a regression must be a
         // nonzero exit, not just a FAIL line in the text
         std::process::exit(1);

@@ -1,0 +1,69 @@
+//! The in-crate CPU engine as an [`ExecBackend`]: every shape is
+//! supported, and the planner-calibrated `(algorithm, grain)` from the
+//! [`ExecSpec`] decides how each matrix runs.
+
+use crate::backend::{ExecBackend, ExecSpec, CPU_BACKEND_ID};
+use crate::topk::rowwise::{rowwise_topk_grained, RowAlgo};
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use anyhow::Result;
+
+/// The always-available fallback backend wrapping
+/// [`rowwise_topk_grained`] and the algorithm zoo.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuBackend;
+
+impl ExecBackend for CpuBackend {
+    fn id(&self) -> &str {
+        CPU_BACKEND_ID
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "in-crate CPU engine ({} algorithms + the paper's kernel)",
+            RowAlgo::all_baselines().len()
+        )
+    }
+
+    fn supports(&self, _cols: usize, _k: usize, _mode: Mode) -> bool {
+        true
+    }
+
+    fn execute(
+        &self,
+        spec: &ExecSpec,
+        mats: &[&RowMatrix],
+        k: usize,
+        _mode: Mode,
+    ) -> Result<Vec<TopKResult>> {
+        Ok(mats
+            .iter()
+            .map(|x| rowwise_topk_grained(x, k, spec.algo, spec.grain))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::verify::is_exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn executes_groups_with_the_spec_algorithm() {
+        let b = CpuBackend;
+        assert_eq!(b.id(), "cpu");
+        assert!(b.supports(123, 45, Mode::EXACT));
+        let mut rng = Rng::seed_from(77);
+        let x = RowMatrix::random_normal(20, 64, &mut rng);
+        let y = RowMatrix::random_normal(11, 64, &mut rng);
+        let spec = ExecSpec { algo: RowAlgo::Heap, grain: 4 };
+        let out = b.execute(&spec, &[&x, &y], 8, Mode::EXACT).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(is_exact(&x, &out[0]));
+        assert!(is_exact(&y, &out[1]));
+        let oracle = rowwise_topk_grained(&x, 8, RowAlgo::Heap, 4);
+        assert_eq!(out[0].values, oracle.values);
+        assert_eq!(out[0].indices, oracle.indices);
+    }
+}

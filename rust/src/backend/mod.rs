@@ -1,0 +1,118 @@
+//! Execution backends: the seam between the planner and the hardware.
+//!
+//! A backend is anything that can execute a row-wise top-k tile for a
+//! group of same-shape matrices: the in-crate CPU engine ([`cpu`]), the
+//! PJRT executor over AOT-compiled tile artifacts ([`pjrt`]), and — the
+//! point of the abstraction — any future accelerator (a real PJRT
+//! device, a native kernel) that implements [`ExecBackend`] and gets
+//! registered in a [`BackendRegistry`].
+//!
+//! The planner (`crate::plan`) owns the backend choice end to end: for
+//! each `(cols, k, mode)` shape it races every registered backend that
+//! [`ExecBackend::supports`] the shape with the same microbenchmark
+//! harness it uses for CPU algorithms, and caches the measured winner
+//! in the plan. Backends that cannot execute here (e.g. the PJRT stub
+//! build, or missing artifacts) fail their probe and are skipped
+//! cleanly — the CPU engine always answers. The scheduler then
+//! dispatches each batch through the plan's backend handle; there is no
+//! separate routing layer.
+//!
+//! Contract for implementors:
+//!
+//! * `execute` receives matrices sharing `(cols, k, mode)` (the
+//!   batcher's grouping invariant) and must return one result per
+//!   matrix, in order, with the exact semantics of the requested mode —
+//!   a backend may be faster, never different. Exactness is pinned by
+//!   `tests/runtime.rs` (PJRT tile vs Rust engine, bit for bit) and
+//!   `tests/backend.rs`.
+//! * `supports` must be cheap (hot-path guard) and stable for the
+//!   backend's lifetime; the planner caches decisions per shape.
+//! * Errors from `execute` are recoverable: the scheduler falls back to
+//!   the CPU backend, and the calibrator treats a failed probe as "this
+//!   candidate is unavailable here".
+
+pub mod cpu;
+pub mod pjrt;
+pub mod registry;
+
+pub use cpu::CpuBackend;
+pub use pjrt::{PjrtBackend, TileTable};
+pub use registry::BackendRegistry;
+
+use crate::topk::rowwise::RowAlgo;
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use anyhow::Result;
+
+/// Id of the always-present CPU backend (the guaranteed fallback).
+pub const CPU_BACKEND_ID: &str = "cpu";
+
+/// Id of the PJRT tile-artifact backend.
+pub const PJRT_BACKEND_ID: &str = "pjrt";
+
+/// The CPU-engine portion of a plan, threaded through `execute` so the
+/// CPU backend (and any backend that delegates to it) runs the
+/// planner-calibrated algorithm and work-unit grain. Accelerator
+/// backends with their own compiled kernels ignore it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecSpec {
+    pub algo: RowAlgo,
+    /// rows per dynamic work unit (CPU engine)
+    pub grain: usize,
+}
+
+impl ExecSpec {
+    /// Spec running the paper's kernel at the request mode with the
+    /// default grain — what a probe uses before any calibration exists.
+    pub fn baseline(cols: usize, mode: Mode) -> ExecSpec {
+        ExecSpec {
+            algo: RowAlgo::RTopK(mode),
+            grain: crate::topk::rowwise::default_grain(cols),
+        }
+    }
+}
+
+/// An execution backend the planner can select per shape.
+pub trait ExecBackend: Send + Sync {
+    /// Stable identifier ("cpu", "pjrt", ...) — the plan-cache key
+    /// dimension and the `[backend]` config vocabulary.
+    fn id(&self) -> &str;
+
+    /// Human-readable description for reports (`rtopk plan`, logs).
+    fn describe(&self) -> String;
+
+    /// Whether this backend can execute the shape at all.
+    fn supports(&self, cols: usize, k: usize, mode: Mode) -> bool;
+
+    /// Execute a same-shape group; one result per input matrix, in
+    /// order. `k` and `mode` are shared by every matrix in `mats`.
+    fn execute(
+        &self,
+        spec: &ExecSpec,
+        mats: &[&RowMatrix],
+        k: usize,
+        mode: Mode,
+    ) -> Result<Vec<TopKResult>>;
+
+    /// The batch size (rows) this backend naturally executes for a
+    /// shape — e.g. a compiled tile's row count. The calibrator probes
+    /// at this size and compares backends on *per-row* time, so a
+    /// backend that pads small batches to a fixed tile is not charged
+    /// for padding rows the CPU probe never computes. `None` = probe at
+    /// the calibrator's default workload size.
+    fn preferred_probe_rows(&self, _cols: usize, _k: usize, _mode: Mode) -> Option<usize> {
+        None
+    }
+
+    /// Compiled `(m, k, mode_key)` variants this backend carries, for
+    /// reporting. Backends without a variant table return nothing.
+    fn variants(&self) -> Vec<(usize, usize, String)> {
+        Vec::new()
+    }
+
+    /// Startup hook (e.g. warm a compile cache). Called once by the
+    /// service before serving.
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+}

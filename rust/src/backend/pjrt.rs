@@ -1,0 +1,271 @@
+//! PJRT tile-artifact backend: execute a batch through an AOT-compiled
+//! `rtopk_tile` artifact, padding row groups to the tile size.
+//!
+//! The variant table ([`TileTable`]) is built once from the manifest;
+//! `supports`/lookup on the hot path is a `BTreeMap` probe (the table
+//! is tiny). Row padding and multi-tile chunking — previously buried in
+//! the scheduler — live here, behind the [`ExecBackend`] seam.
+
+use crate::backend::{ExecBackend, ExecSpec, PJRT_BACKEND_ID};
+use crate::plan::{mode_key, tile_mode_key};
+use crate::runtime::executor::ExecutorHandle;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// Compiled tile variants: `(m, k, mode_key) -> (artifact name, rows)`.
+///
+/// Keys use the planner's [`mode_key`], so `exact` and every `es{N}`
+/// variant stay distinct, and a loose-eps exact request (an
+/// *approximate* contract, key `exact_eps…`) never silently matches an
+/// `exact` tile.
+#[derive(Clone, Debug, Default)]
+pub struct TileTable {
+    table: BTreeMap<(usize, usize, String), (String, usize)>,
+}
+
+impl TileTable {
+    /// Build from the manifest's `rtopk_tile` artifacts.
+    pub fn from_manifest(m: &Manifest) -> TileTable {
+        let mut table = BTreeMap::new();
+        for a in m.of_kind("rtopk_tile") {
+            let (Some(rows), Some(mm), Some(k)) = (
+                a.meta_usize("rows"),
+                a.meta_usize("m"),
+                a.meta_usize("k"),
+            ) else {
+                continue;
+            };
+            // index under the same mode_key requests look up with
+            // (tile_mode_key routes through plan::mode_key, so the two
+            // sides cannot drift apart)
+            let Some(mode) = a.meta_str("mode").and_then(|m| {
+                tile_mode_key(m, a.meta_usize("max_iter").unwrap_or(0))
+            }) else {
+                continue;
+            };
+            table.insert((mm, k, mode), (a.name.clone(), rows));
+        }
+        TileTable { table }
+    }
+
+    /// The tile artifact serving one request shape, if compiled.
+    pub fn lookup(&self, m: usize, k: usize, mode: Mode) -> Option<(&str, usize)> {
+        self.table
+            .get(&(m, k, mode_key(mode)))
+            .map(|(name, rows)| (name.as_str(), *rows))
+    }
+
+    /// All (m, k, mode_key) combinations with compiled tiles.
+    pub fn variants(&self) -> Vec<(usize, usize, String)> {
+        self.table.keys().cloned().collect()
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.table.values().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+}
+
+/// The PJRT executor as an [`ExecBackend`].
+pub struct PjrtBackend {
+    handle: ExecutorHandle,
+    tiles: TileTable,
+}
+
+impl PjrtBackend {
+    /// Wrap an executor handle; the variant table comes from its
+    /// manifest.
+    pub fn from_handle(handle: ExecutorHandle) -> PjrtBackend {
+        let tiles = TileTable::from_manifest(handle.manifest());
+        PjrtBackend { handle, tiles }
+    }
+
+    pub fn tiles(&self) -> &TileTable {
+        &self.tiles
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn id(&self) -> &str {
+        PJRT_BACKEND_ID
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "PJRT executor ({}, {} compiled tile variants)",
+            self.handle.platform(),
+            self.tiles.len()
+        )
+    }
+
+    fn supports(&self, cols: usize, k: usize, mode: Mode) -> bool {
+        self.tiles.lookup(cols, k, mode).is_some()
+    }
+
+    /// Probe at one full tile: execution always pads to `rows`, so a
+    /// smaller probe would charge this backend for padding rows the CPU
+    /// probe never computes (per-row rates would be incomparable).
+    fn preferred_probe_rows(&self, cols: usize, k: usize, mode: Mode) -> Option<usize> {
+        self.tiles.lookup(cols, k, mode).map(|(_, rows)| rows)
+    }
+
+    /// Concatenate the group's rows, pad to the tile size, run the
+    /// artifact (multiple tiles if the group exceeds one), then scatter
+    /// rows back per matrix. The `spec` is ignored — the tile carries
+    /// its own compiled kernel.
+    fn execute(
+        &self,
+        _spec: &ExecSpec,
+        mats: &[&RowMatrix],
+        k: usize,
+        mode: Mode,
+    ) -> Result<Vec<TopKResult>> {
+        let cols = mats.first().map(|m| m.cols).unwrap_or(0);
+        let (artifact, tile_rows) = self
+            .tiles
+            .lookup(cols, k, mode)
+            .map(|(name, rows)| (name.to_string(), rows))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no compiled tile for (M={cols}, k={k}, mode={})",
+                    mode_key(mode)
+                )
+            })?;
+        let total: usize = mats.iter().map(|m| m.rows).sum();
+        // gather all rows into one contiguous buffer
+        let mut all = Vec::with_capacity(total * cols);
+        for m in mats {
+            all.extend_from_slice(&m.data);
+        }
+        // run tile by tile
+        let mut values = vec![0f32; total * k];
+        let mut indices = vec![0u32; total * k];
+        let mut done = 0usize;
+        while done < total {
+            let take = tile_rows.min(total - done);
+            let mut tile = vec![0f32; tile_rows * cols];
+            tile[..take * cols]
+                .copy_from_slice(&all[done * cols..(done + take) * cols]);
+            let outs = self.handle.execute(
+                &artifact,
+                vec![HostTensor::f32(tile, &[tile_rows, cols])],
+            )?;
+            // outputs: values (R,k) f32, indices (R,k) s32, mask (R,M) f32
+            let v = outs[0].as_f32()?;
+            let i = outs[1].as_i32()?;
+            values[done * k..(done + take) * k]
+                .copy_from_slice(&v[..take * k]);
+            for (dst, &src) in indices[done * k..(done + take) * k]
+                .iter_mut()
+                .zip(&i[..take * k])
+            {
+                *dst = src as u32;
+            }
+            done += take;
+        }
+        // scatter back per matrix
+        let mut results = Vec::with_capacity(mats.len());
+        let mut offset = 0usize;
+        for m in mats {
+            let r = m.rows;
+            results.push(TopKResult {
+                rows: r,
+                k,
+                values: values[offset * k..(offset + r) * k].to_vec(),
+                indices: indices[offset * k..(offset + r) * k].to_vec(),
+            });
+            offset += r;
+        }
+        Ok(results)
+    }
+
+    fn variants(&self) -> Vec<(usize, usize, String)> {
+        self.tiles.variants()
+    }
+
+    /// Warm the compile cache so first requests do not pay compilation.
+    fn warmup(&self) -> Result<()> {
+        let names = self.tiles.artifact_names();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        self.handle.precompile(&refs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "version": 1, "artifact_set": "t",
+          "artifacts": {
+            "rtopk_1024x256_k32_exact": {
+              "path": "a.hlo.txt",
+              "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+              "outputs": [{"shape": [1024, 32], "dtype": "float32"}],
+              "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256,
+                        "k": 32, "mode": "exact", "max_iter": 0}
+            },
+            "rtopk_1024x256_k32_es4": {
+              "path": "b.hlo.txt",
+              "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+              "outputs": [{"shape": [1024, 32], "dtype": "float32"}],
+              "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256,
+                        "k": 32, "mode": "early_stop", "max_iter": 4}
+            },
+            "train_x": {
+              "path": "c.hlo.txt", "inputs": [], "outputs": [],
+              "meta": {"kind": "train_step"}
+            }
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tile_table_matches_compiled_shapes() {
+        let t = TileTable::from_manifest(&manifest());
+        assert_eq!(
+            t.lookup(256, 32, Mode::EXACT),
+            Some(("rtopk_1024x256_k32_exact", 1024))
+        );
+        assert_eq!(
+            t.lookup(256, 32, Mode::EarlyStop { max_iter: 4 }),
+            Some(("rtopk_1024x256_k32_es4", 1024))
+        );
+    }
+
+    #[test]
+    fn tile_table_misses_fall_through() {
+        let t = TileTable::from_manifest(&manifest());
+        assert!(t.lookup(512, 32, Mode::EXACT).is_none());
+        assert!(t.lookup(256, 16, Mode::EXACT).is_none());
+        assert!(t.lookup(256, 32, Mode::EarlyStop { max_iter: 7 }).is_none());
+        // a loose-eps exact request is an approximate contract — it must
+        // not silently match the exact tile
+        assert!(t.lookup(256, 32, Mode::Exact { eps_rel: 1e-4 }).is_none());
+    }
+
+    #[test]
+    fn ignores_non_tile_artifacts() {
+        let t = TileTable::from_manifest(&manifest());
+        assert_eq!(t.variants().len(), 2);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert_eq!(t.artifact_names().len(), 2);
+    }
+}

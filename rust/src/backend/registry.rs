@@ -1,0 +1,245 @@
+//! Backend registry: the set of [`ExecBackend`]s a deployment carries.
+//!
+//! The CPU engine is always registered (it is the guaranteed fallback
+//! and the calibration baseline); accelerator backends are added from
+//! the manifest subject to the `[backend]` config knobs (`enable`,
+//! `deny`). The planner races registered backends per shape; the
+//! scheduler resolves a plan's backend id through [`BackendRegistry::get`].
+
+use crate::backend::{CpuBackend, ExecBackend, PjrtBackend, CPU_BACKEND_ID};
+use crate::config::BackendConfig;
+use crate::runtime::executor::ExecutorHandle;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+/// Consecutive runtime failures after which a backend is quarantined
+/// for the rest of the process (the scheduler stops attempting it and
+/// runs its batches on the CPU engine directly). Bounds both the
+/// doubled per-batch work of try-then-fall-back and the failure log:
+/// at most this many lines per backend between successes.
+pub const QUARANTINE_AFTER: u32 = 3;
+
+/// Registered execution backends; the CPU backend is always present.
+///
+/// The registry also tracks per-backend runtime health (consecutive
+/// execute failures, reported by the scheduler): a backend that keeps
+/// failing after calibration — dead device, driver wedged — is
+/// quarantined instead of being retried and logged on every batch.
+/// Quarantine lasts until process restart; calibration-time probe
+/// failures are handled separately (the planner just never picks the
+/// backend).
+pub struct BackendRegistry {
+    backends: Vec<Arc<dyn ExecBackend>>,
+    /// consecutive-failure counter per backend, parallel to `backends`
+    failures: Vec<AtomicU32>,
+}
+
+impl Default for BackendRegistry {
+    fn default() -> Self {
+        BackendRegistry::cpu_only()
+    }
+}
+
+impl BackendRegistry {
+    /// Just the CPU engine (tests, pure-CPU deployments, the global
+    /// planner).
+    pub fn cpu_only() -> BackendRegistry {
+        BackendRegistry {
+            backends: vec![Arc::new(CpuBackend)],
+            failures: vec![AtomicU32::new(0)],
+        }
+    }
+
+    /// CPU engine plus the PJRT tile backend built from the executor's
+    /// manifest, honoring the `[backend]` knobs (`enable = false` or a
+    /// deny-listed id registers nothing extra).
+    pub fn with_manifest(cfg: &BackendConfig, handle: ExecutorHandle) -> BackendRegistry {
+        let mut r = BackendRegistry::cpu_only();
+        if cfg.enable {
+            let pjrt = PjrtBackend::from_handle(handle);
+            if !pjrt.tiles().is_empty() && !cfg.denies(pjrt.id()) {
+                r.register(Arc::new(pjrt));
+            }
+        }
+        r
+    }
+
+    /// Register a backend (latest id wins; the CPU backend cannot be
+    /// displaced — it is the fallback every layer assumes exists).
+    pub fn register(&mut self, backend: Arc<dyn ExecBackend>) {
+        if backend.id() == CPU_BACKEND_ID {
+            return;
+        }
+        if let Some(i) = self.backends.iter().position(|b| b.id() == backend.id()) {
+            self.backends.remove(i);
+            self.failures.remove(i);
+        }
+        self.backends.push(backend);
+        self.failures.push(AtomicU32::new(0));
+    }
+
+    pub fn get(&self, id: &str) -> Option<Arc<dyn ExecBackend>> {
+        self.backends.iter().find(|b| b.id() == id).cloned()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.backends.iter().any(|b| b.id() == id)
+    }
+
+    /// The CPU fallback backend (always registered).
+    pub fn cpu(&self) -> Arc<dyn ExecBackend> {
+        self.get(CPU_BACKEND_ID).expect("cpu backend is always registered")
+    }
+
+    /// Every backend, CPU first.
+    pub fn all(&self) -> &[Arc<dyn ExecBackend>] {
+        &self.backends
+    }
+
+    /// Non-CPU backends (the calibrator's extra candidates).
+    pub fn accelerators(&self) -> Vec<Arc<dyn ExecBackend>> {
+        self.backends
+            .iter()
+            .filter(|b| b.id() != CPU_BACKEND_ID)
+            .cloned()
+            .collect()
+    }
+
+    pub fn ids(&self) -> Vec<String> {
+        self.backends.iter().map(|b| b.id().to_string()).collect()
+    }
+
+    /// Union of compiled variants across accelerator backends.
+    pub fn variants(&self) -> Vec<(usize, usize, String)> {
+        let mut v: Vec<(usize, usize, String)> = self
+            .backends
+            .iter()
+            .flat_map(|b| b.variants())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Run every backend's startup hook (compile-cache warmup).
+    pub fn warmup(&self) -> Result<()> {
+        for b in &self.backends {
+            b.warmup()?;
+        }
+        Ok(())
+    }
+
+    fn failure_slot(&self, id: &str) -> Option<&AtomicU32> {
+        self.backends
+            .iter()
+            .position(|b| b.id() == id)
+            .map(|i| &self.failures[i])
+    }
+
+    /// Record one runtime execute failure; returns the consecutive
+    /// count (callers log only while it is <= [`QUARANTINE_AFTER`]).
+    pub fn note_failure(&self, id: &str) -> u32 {
+        self.failure_slot(id)
+            .map(|c| c.fetch_add(1, Ordering::Relaxed) + 1)
+            .unwrap_or(0)
+    }
+
+    /// Record a successful execution (resets the consecutive count).
+    pub fn note_success(&self, id: &str) {
+        if let Some(c) = self.failure_slot(id) {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether a backend has failed [`QUARANTINE_AFTER`] consecutive
+    /// times and should no longer be attempted (CPU never quarantines —
+    /// it is the fallback).
+    pub fn is_quarantined(&self, id: &str) -> bool {
+        id != CPU_BACKEND_ID
+            && self
+                .failure_slot(id)
+                .is_some_and(|c| c.load(Ordering::Relaxed) >= QUARANTINE_AFTER)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::ExecSpec;
+    use crate::topk::types::{Mode, TopKResult};
+    use crate::util::matrix::RowMatrix;
+
+    struct FakeBackend(&'static str);
+
+    impl ExecBackend for FakeBackend {
+        fn id(&self) -> &str {
+            self.0
+        }
+        fn describe(&self) -> String {
+            "fake".into()
+        }
+        fn supports(&self, cols: usize, _k: usize, _mode: Mode) -> bool {
+            cols == 256
+        }
+        fn execute(
+            &self,
+            _spec: &ExecSpec,
+            _mats: &[&RowMatrix],
+            _k: usize,
+            _mode: Mode,
+        ) -> Result<Vec<TopKResult>> {
+            Ok(Vec::new())
+        }
+        fn variants(&self) -> Vec<(usize, usize, String)> {
+            vec![(256, 32, "exact".into())]
+        }
+    }
+
+    #[test]
+    fn cpu_is_always_present_and_undisplaceable() {
+        let mut r = BackendRegistry::cpu_only();
+        assert!(r.contains(CPU_BACKEND_ID));
+        assert_eq!(r.all().len(), 1);
+        assert!(r.accelerators().is_empty());
+        // attempting to replace the cpu backend is a no-op
+        r.register(Arc::new(CpuBackend));
+        assert_eq!(r.all().len(), 1);
+        assert_eq!(r.cpu().id(), "cpu");
+    }
+
+    #[test]
+    fn register_get_and_latest_wins() {
+        let mut r = BackendRegistry::cpu_only();
+        r.register(Arc::new(FakeBackend("mock")));
+        assert!(r.contains("mock"));
+        assert_eq!(r.accelerators().len(), 1);
+        assert_eq!(r.ids(), vec!["cpu".to_string(), "mock".to_string()]);
+        assert_eq!(r.variants(), vec![(256, 32, "exact".to_string())]);
+        // same id re-registers in place
+        r.register(Arc::new(FakeBackend("mock")));
+        assert_eq!(r.all().len(), 2);
+        assert!(r.get("nope").is_none());
+    }
+
+    #[test]
+    fn quarantine_after_consecutive_failures_resets_on_success() {
+        let mut r = BackendRegistry::cpu_only();
+        r.register(Arc::new(FakeBackend("mock")));
+        assert!(!r.is_quarantined("mock"));
+        for i in 1..=QUARANTINE_AFTER {
+            assert_eq!(r.note_failure("mock"), i);
+        }
+        assert!(r.is_quarantined("mock"));
+        r.note_success("mock");
+        assert!(!r.is_quarantined("mock"), "success lifts the quarantine");
+        // the cpu fallback never quarantines, whatever is recorded
+        for _ in 0..QUARANTINE_AFTER + 2 {
+            r.note_failure(CPU_BACKEND_ID);
+        }
+        assert!(!r.is_quarantined(CPU_BACKEND_ID));
+        // unknown ids are inert
+        assert_eq!(r.note_failure("nope"), 0);
+        assert!(!r.is_quarantined("nope"));
+    }
+}

@@ -139,6 +139,57 @@ impl PlanConfig {
     }
 }
 
+/// Execution-backend knobs (the `[backend]` section). Untyped here —
+/// the service validates ids against the built registry at startup.
+///
+/// * `enable` — register accelerator backends from the manifest
+///   (default true); `false` runs everything on the CPU engine.
+/// * `force` — pin every shape the named backend supports to it
+///   (`cpu`, `pjrt`, ...); shapes it cannot serve still fall back to
+///   the CPU engine. Pins are session state: they bypass and never
+///   overwrite the persisted plan cache.
+/// * `deny` — comma-separated backend ids that must never register
+///   (e.g. `deny = "pjrt"` to quarantine a misbehaving accelerator).
+///   The CPU backend cannot be denied; it is the guaranteed fallback.
+#[derive(Clone, Debug)]
+pub struct BackendConfig {
+    pub enable: bool,
+    pub force: Option<String>,
+    pub deny: Vec<String>,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig { enable: true, force: None, deny: Vec::new() }
+    }
+}
+
+impl BackendConfig {
+    pub fn from_config(c: &Config) -> BackendConfig {
+        BackendConfig {
+            enable: c.get_or("backend.enable", true),
+            force: c
+                .get("backend.force")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string()),
+            deny: c
+                .get("backend.deny")
+                .map(|s| {
+                    s.split(',')
+                        .map(|t| t.trim().to_string())
+                        .filter(|t| !t.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default(),
+        }
+    }
+
+    /// Whether an id is deny-listed (the CPU fallback never is).
+    pub fn denies(&self, id: &str) -> bool {
+        id != "cpu" && self.deny.iter().any(|d| d == id)
+    }
+}
+
 /// Service deployment settings (defaults match the benched setup).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -154,6 +205,8 @@ pub struct ServeConfig {
     pub queue_limit: usize,
     /// adaptive-planner knobs for the CPU engine route
     pub plan: PlanConfig,
+    /// execution-backend registration / pinning knobs
+    pub backend: BackendConfig,
 }
 
 impl Default for ServeConfig {
@@ -165,6 +218,7 @@ impl Default for ServeConfig {
             workers: 2,
             queue_limit: 1 << 16,
             plan: PlanConfig::default(),
+            backend: BackendConfig::default(),
         }
     }
 }
@@ -182,6 +236,7 @@ impl ServeConfig {
             workers: c.get_or("serve.workers", d.workers),
             queue_limit: c.get_or("serve.queue_limit", d.queue_limit),
             plan: PlanConfig::from_config(c),
+            backend: BackendConfig::from_config(c),
         }
     }
 }
@@ -278,5 +333,28 @@ mod tests {
         // empty string means unset
         let c2 = Config::parse("[plan]\nforce_algo = \"\"").unwrap();
         assert!(PlanConfig::from_config(&c2).force_algo.is_none());
+    }
+
+    #[test]
+    fn backend_config_section_parses() {
+        let c = Config::parse(
+            "[backend]\nenable = false\nforce = \"pjrt\"\ndeny = \"pjrt, mock\"",
+        )
+        .unwrap();
+        let b = BackendConfig::from_config(&c);
+        assert!(!b.enable);
+        assert_eq!(b.force.as_deref(), Some("pjrt"));
+        assert_eq!(b.deny, vec!["pjrt".to_string(), "mock".to_string()]);
+        assert!(b.denies("pjrt"));
+        assert!(b.denies("mock"));
+        assert!(!b.denies("other"));
+        // the cpu fallback can never be denied
+        let c2 = Config::parse("[backend]\ndeny = \"cpu\"").unwrap();
+        assert!(!BackendConfig::from_config(&c2).denies("cpu"));
+        // defaults: enabled, no pin, empty deny list
+        let d = BackendConfig::from_config(&Config::default());
+        assert!(d.enable);
+        assert!(d.force.is_none());
+        assert!(d.deny.is_empty());
     }
 }

@@ -1,5 +1,6 @@
 //! The L3 coordinator: a row-wise top-k *service* and the MaxK-GNN
-//! training orchestrator, built on the PJRT runtime.
+//! training orchestrator, built on the PJRT runtime and the execution
+//! backends.
 //!
 //! Serving path (quickstart -> production):
 //!
@@ -8,29 +9,30 @@
 //!                                  │ tiles of R rows, same (M, k, mode)
 //!                                  ▼
 //!                              Scheduler workers
-//!                                  │ route: PJRT tile artifact (Router)
-//!                                  │        or CPU fallback engine
+//!                                  │ backend: the planner's measured
+//!                                  │ per-shape choice (crate::plan)
 //!                                  ▼
-//!                              Executor thread (owns PJRT)
+//!                              ExecBackend (crate::backend)
+//!                                  │ cpu:  in-crate engine
+//!                                  │ pjrt: Executor thread (owns PJRT)
 //! ```
 //!
-//! The router picks the compiled tile variant for a request's
-//! (M, k, mode); requests with no matching artifact run on the in-crate
-//! CPU engine so the service always answers. CPU batches go through the
-//! adaptive execution planner (`crate::plan`): the fastest row
-//! algorithm and work-unit grain per shape, decided once (cost-model
-//! prior + microbenchmark calibration) and cached. The trainer drives
-//! the AOT train/eval step artifacts with device-resident parameter
-//! round-trips.
+//! The adaptive execution planner (`crate::plan`) owns dispatch end to
+//! end: for each batch shape it picks the execution *backend* (a PJRT
+//! tile artifact when one is compiled **and measures faster**, the CPU
+//! engine otherwise) plus the CPU algorithm and work-unit grain —
+//! decided once per shape (cost-model prior + microbenchmark
+//! calibration, accelerator probes included) and cached. Backends that
+//! cannot execute here skip their probes cleanly, so the service always
+//! answers. The trainer drives the AOT train/eval step artifacts with
+//! device-resident parameter round-trips.
 
 pub mod batcher;
 pub mod metrics;
-pub mod router;
 pub mod scheduler;
 pub mod service;
 pub mod trainer;
 
 pub use metrics::Metrics;
-pub use router::{Route, Router};
 pub use service::{ServiceStats, TopKRequest, TopKService};
 pub use trainer::{TrainOutcome, Trainer};

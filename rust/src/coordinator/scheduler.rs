@@ -1,14 +1,18 @@
 //! Scheduler: worker threads that pull batches from the batcher,
-//! execute them (PJRT tile artifact via the router, or the CPU engine),
-//! and scatter per-request results back to reply channels.
+//! execute them through the planner-chosen execution backend, and
+//! scatter per-request results back to reply channels.
+//!
+//! There is no routing logic here: the planner owns the backend choice
+//! (`crate::plan`), the registry resolves the chosen id to a handle
+//! (`crate::backend`), and this module only dispatches and delivers.
+//! An accelerator backend that fails at execution time degrades to the
+//! CPU engine instead of failing the batch.
 
+use crate::backend::{registry::QUARANTINE_AFTER, BackendRegistry, CPU_BACKEND_ID};
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::router::{Route, Router};
 use crate::plan::Planner;
-use crate::runtime::executor::ExecutorHandle;
-use crate::runtime::tensor::HostTensor;
-use crate::topk::rowwise::{rowwise_topk, rowwise_topk_grained};
+use crate::topk::rowwise::rowwise_topk;
 use crate::topk::types::TopKResult;
 use crate::util::matrix::RowMatrix;
 use anyhow::{anyhow, Result};
@@ -20,35 +24,27 @@ use std::thread::JoinHandle;
 pub type Reply = mpsc::Sender<Result<TopKResult>>;
 
 /// Spawn `workers` scheduler threads; they exit when the batcher closes.
-/// CPU-route batches execute through the shared adaptive `planner`
-/// (plans are cached per shape, so workers agree after the first batch
-/// of a shape).
+/// Batches execute through the shared adaptive `planner` (plans are
+/// cached per shape, so workers agree after the first batch of a
+/// shape) against the backends in `backends`.
 pub fn spawn_workers(
     workers: usize,
     batcher: Arc<Batcher<Reply>>,
-    router: Arc<Router>,
-    executor: Option<ExecutorHandle>,
+    backends: Arc<BackendRegistry>,
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
 ) -> Vec<JoinHandle<()>> {
     (0..workers.max(1))
         .map(|i| {
             let batcher = batcher.clone();
-            let router = router.clone();
-            let executor = executor.clone();
+            let backends = backends.clone();
             let metrics = metrics.clone();
             let planner = planner.clone();
             std::thread::Builder::new()
                 .name(format!("topk-worker-{i}"))
                 .spawn(move || {
                     while let Some(batch) = batcher.next_batch() {
-                        run_batch(
-                            batch,
-                            &router,
-                            executor.as_ref(),
-                            &metrics,
-                            &planner,
-                        );
+                        run_batch(batch, &backends, &metrics, &planner);
                     }
                 })
                 .expect("spawn worker")
@@ -56,25 +52,61 @@ pub fn spawn_workers(
         .collect()
 }
 
-/// Execute one batch and deliver per-request results.
+/// Execute one batch through the plan's backend and deliver per-request
+/// results.
 pub fn run_batch(
     batch: Batch<Reply>,
-    router: &Router,
-    executor: Option<&ExecutorHandle>,
+    backends: &BackendRegistry,
     metrics: &Metrics,
     planner: &Planner,
 ) {
-    let route = router.route(batch.cols, batch.k, batch.mode);
-    let outcome: Result<Vec<TopKResult>> = match (&route, executor) {
-        (Route::Pjrt { artifact, rows }, Some(exec)) => {
-            metrics.record_batch(true);
-            run_batch_pjrt(&batch, artifact, *rows, exec)
+    let plan = planner.plan(batch.cols, batch.k, batch.mode);
+    // a plan can only name a registered backend, but resolve
+    // defensively; a backend that kept failing at runtime is
+    // quarantined — its batches run on the CPU engine directly instead
+    // of paying a doomed attempt (and a log line) per batch
+    let mut backend = backends
+        .get(&plan.backend)
+        .unwrap_or_else(|| backends.cpu());
+    if backends.is_quarantined(backend.id()) {
+        backend = backends.cpu();
+    }
+    let spec = plan.spec();
+    let mats: Vec<&RowMatrix> =
+        batch.items.iter().map(|item| &item.matrix).collect();
+    let mut via_accel = backend.id() != CPU_BACKEND_ID;
+    let mut outcome = backend.execute(&spec, &mats, batch.k, batch.mode);
+    if via_accel && outcome.is_err() {
+        // accelerator misbehaved at runtime: degrade to the CPU engine
+        // rather than failing every request in the batch. The failure
+        // log is bounded — at most QUARANTINE_AFTER lines per backend
+        // between successes — and a backend that keeps failing stops
+        // being attempted at all.
+        let msg = outcome
+            .as_ref()
+            .err()
+            .map(|e| format!("{e:#}"))
+            .unwrap_or_default();
+        let fails = backends.note_failure(backend.id());
+        if fails <= QUARANTINE_AFTER {
+            eprintln!(
+                "scheduler: backend {:?} failed ({msg}); batch falls back \
+                 to cpu{}",
+                backend.id(),
+                if fails == QUARANTINE_AFTER {
+                    " (quarantining backend until restart)"
+                } else {
+                    ""
+                }
+            );
         }
-        _ => {
-            metrics.record_batch(false);
-            Ok(run_batch_cpu(&batch, planner))
-        }
-    };
+        via_accel = false;
+        outcome = backends.cpu().execute(&spec, &mats, batch.k, batch.mode);
+    } else if via_accel {
+        backends.note_success(backend.id());
+    }
+    drop(mats);
+    metrics.record_batch(via_accel);
     match outcome {
         Ok(results) => {
             for (item, res) in batch.items.into_iter().zip(results) {
@@ -93,80 +125,6 @@ pub fn run_batch(
     }
 }
 
-/// Concatenate the batch's rows, pad to the tile size, run the artifact
-/// (multiple tiles if the batch exceeds one), then scatter rows back.
-fn run_batch_pjrt(
-    batch: &Batch<Reply>,
-    artifact: &str,
-    tile_rows: usize,
-    exec: &ExecutorHandle,
-) -> Result<Vec<TopKResult>> {
-    let cols = batch.cols;
-    let k = batch.k;
-    let total = batch.total_rows;
-    // gather all rows into one contiguous buffer
-    let mut all = Vec::with_capacity(total * cols);
-    for item in &batch.items {
-        all.extend_from_slice(&item.matrix.data);
-    }
-    // run tile by tile
-    let mut values = vec![0f32; total * k];
-    let mut indices = vec![0u32; total * k];
-    let mut done = 0usize;
-    while done < total {
-        let take = tile_rows.min(total - done);
-        let mut tile = vec![0f32; tile_rows * cols];
-        tile[..take * cols]
-            .copy_from_slice(&all[done * cols..(done + take) * cols]);
-        let outs = exec.execute(
-            artifact,
-            vec![HostTensor::f32(tile, &[tile_rows, cols])],
-        )?;
-        // outputs: values (R,k) f32, indices (R,k) s32, mask (R,M) f32
-        let v = outs[0].as_f32()?;
-        let i = outs[1].as_i32()?;
-        values[done * k..(done + take) * k]
-            .copy_from_slice(&v[..take * k]);
-        for (dst, &src) in indices[done * k..(done + take) * k]
-            .iter_mut()
-            .zip(&i[..take * k])
-        {
-            *dst = src as u32;
-        }
-        done += take;
-    }
-    // scatter back per request
-    let mut results = Vec::with_capacity(batch.items.len());
-    let mut offset = 0usize;
-    for item in &batch.items {
-        let r = item.matrix.rows;
-        results.push(TopKResult {
-            rows: r,
-            k,
-            values: values[offset * k..(offset + r) * k].to_vec(),
-            indices: indices[offset * k..(offset + r) * k].to_vec(),
-        });
-        offset += r;
-    }
-    Ok(results)
-}
-
-/// CPU route: run the batch through the planner-selected engine. All
-/// items share (cols, k, mode) by construction, so the plan is
-/// resolved once per batch, not per item (one cached plan per shape —
-/// cost-model prior plus one-time microbenchmark calibration; see
-/// `crate::plan`).
-fn run_batch_cpu(batch: &Batch<Reply>, planner: &Planner) -> Vec<TopKResult> {
-    let plan = planner.plan(batch.cols, batch.k, batch.mode);
-    batch
-        .items
-        .iter()
-        .map(|item| {
-            rowwise_topk_grained(&item.matrix, batch.k, plan.algo, plan.grain)
-        })
-        .collect()
-}
-
 /// Pad-free helper used by tests and the service's synchronous path.
 pub fn run_direct_cpu(matrix: &RowMatrix, k: usize,
                       mode: crate::topk::types::Mode) -> TopKResult {
@@ -176,6 +134,7 @@ pub fn run_direct_cpu(matrix: &RowMatrix, k: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::{ExecBackend, ExecSpec};
     use crate::coordinator::batcher::BatchPolicy;
     use crate::topk::types::Mode;
     use crate::topk::verify::is_exact;
@@ -189,11 +148,11 @@ mod tests {
             max_wait: Duration::from_millis(2),
             queue_limit: 4096,
         }));
-        let router = Arc::new(Router::default()); // empty -> CPU route
+        let backends = Arc::new(BackendRegistry::cpu_only());
         let metrics = Arc::new(Metrics::default());
         let planner = Arc::new(Planner::default());
         let workers =
-            spawn_workers(2, batcher.clone(), router, None, metrics.clone(), planner);
+            spawn_workers(2, batcher.clone(), backends, metrics.clone(), planner);
 
         let mut rng = Rng::seed_from(21);
         let mut rxs = Vec::new();
@@ -219,5 +178,89 @@ mod tests {
         assert_eq!(s.rows, 120);
         assert!(s.batches >= 1);
         assert_eq!(s.errors, 0);
+    }
+
+    #[test]
+    fn failing_accelerator_degrades_to_cpu_not_to_errors() {
+        use crate::plan::PlannerConfig;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Flaky {
+            attempts: AtomicUsize,
+        }
+        impl ExecBackend for Flaky {
+            fn id(&self) -> &str {
+                "flaky"
+            }
+            fn describe(&self) -> String {
+                "errors at execute".into()
+            }
+            fn supports(&self, _c: usize, _k: usize, _m: Mode) -> bool {
+                true
+            }
+            fn execute(
+                &self,
+                _spec: &ExecSpec,
+                _mats: &[&RowMatrix],
+                _k: usize,
+                _mode: Mode,
+            ) -> Result<Vec<TopKResult>> {
+                self.attempts.fetch_add(1, Ordering::SeqCst);
+                Err(anyhow!("device fell off the bus"))
+            }
+        }
+
+        let flaky = Arc::new(Flaky { attempts: AtomicUsize::new(0) });
+        let mut registry = BackendRegistry::cpu_only();
+        registry.register(flaky.clone());
+        let backends = Arc::new(registry);
+        // pin the batch to the flaky backend so the fallback path runs
+        let planner = Arc::new(crate::plan::Planner::with_backends(
+            PlannerConfig {
+                force_backend: Some("flaky".into()),
+                calib_rows: 0,
+                ..PlannerConfig::default()
+            },
+            backends.clone(),
+        ));
+        let metrics = Arc::new(Metrics::default());
+
+        let mut rng = Rng::seed_from(99);
+        let x = RowMatrix::random_normal(12, 32, &mut rng);
+        // run several batches: the first QUARANTINE_AFTER attempt the
+        // backend and fall back; after that the backend is quarantined
+        // and never even tried again
+        let total_batches = QUARANTINE_AFTER + 2;
+        for _ in 0..total_batches {
+            let (tx, rx) = mpsc::channel();
+            let batch = Batch {
+                cols: 32,
+                k: 4,
+                mode: Mode::EXACT,
+                total_rows: 12,
+                items: vec![crate::coordinator::batcher::Pending {
+                    matrix: x.clone(),
+                    k: 4,
+                    mode: Mode::EXACT,
+                    enqueued: std::time::Instant::now(),
+                    reply: tx,
+                }],
+            };
+            run_batch(batch, &backends, &metrics, &planner);
+            let res = rx.recv().unwrap().unwrap();
+            assert!(is_exact(&x, &res), "fallback result must stay exact");
+        }
+        assert_eq!(
+            flaky.attempts.load(Ordering::SeqCst) as u32,
+            QUARANTINE_AFTER,
+            "quarantined backend stops being attempted"
+        );
+        let s = metrics.snapshot();
+        assert_eq!(s.errors, 0, "fallback is not a client error");
+        assert_eq!(
+            s.cpu_batches,
+            total_batches as u64,
+            "every batch is accounted to the cpu engine"
+        );
     }
 }

@@ -1,13 +1,20 @@
-//! TopKService — the public serving API: batcher + scheduler + router +
-//! PJRT executor wired together behind `submit`/`submit_async`.
+//! TopKService — the public serving API: batcher + scheduler + backend
+//! registry + adaptive planner wired together behind
+//! `submit`/`submit_async`.
+//!
+//! The service builds a [`BackendRegistry`] (CPU engine always; the
+//! PJRT tile backend when artifacts are present and `[backend]` allows
+//! it) and hands it to the planner — which then owns the per-shape
+//! backend choice end to end. The scheduler dispatches every batch
+//! through the plan's backend handle; there is no separate router.
 
+use crate::backend::BackendRegistry;
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{spawn_workers, Reply};
 use crate::plan::{Planner, PlannerConfig};
-use crate::runtime::executor::{Executor, ExecutorHandle};
+use crate::runtime::executor::Executor;
 use crate::topk::types::{Mode, TopKResult};
 use crate::util::matrix::RowMatrix;
 use anyhow::{anyhow, Result};
@@ -41,7 +48,7 @@ pub type ServiceStats = MetricsSnapshot;
 pub struct TopKService {
     batcher: Arc<Batcher<Reply>>,
     metrics: Arc<Metrics>,
-    router: Arc<Router>,
+    backends: Arc<BackendRegistry>,
     planner: Arc<Planner>,
     workers: Vec<JoinHandle<()>>,
     /// keeps the executor thread alive for the service's lifetime
@@ -52,50 +59,63 @@ impl TopKService {
     /// Start a service backed by AOT artifacts. Fails if the artifacts
     /// directory is unreadable; use [`TopKService::cpu_only`] when
     /// artifacts are unavailable (tests, pure-CPU deployments).
+    /// `[backend] enable = false` short-circuits to a CPU-only service
+    /// without touching the artifacts dir at all — the knob's promise
+    /// is "everything runs on the CPU engine", not "artifacts must
+    /// still parse".
     pub fn start(cfg: &ServeConfig) -> Result<TopKService> {
+        if !cfg.backend.enable {
+            return Self::cpu_only(cfg);
+        }
         let executor = Executor::spawn(&cfg.artifacts_dir)?;
-        let handle = executor.handle();
-        let router = Arc::new(Router::from_manifest(handle.manifest()));
-        // warm the compile cache so first requests do not pay compilation
-        let names = router.artifact_names();
-        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
-        handle.precompile(&refs)?;
-        Self::build(cfg, router, Some(executor), Some(handle))
+        let registry =
+            BackendRegistry::with_manifest(&cfg.backend, executor.handle());
+        // warm compile caches so first requests do not pay compilation
+        registry.warmup()?;
+        Self::build(cfg, Arc::new(registry), Some(executor))
     }
 
     /// Start without PJRT (every request runs on the CPU engine).
     pub fn cpu_only(cfg: &ServeConfig) -> Result<TopKService> {
-        Self::build(cfg, Arc::new(Router::default()), None, None)
+        Self::build(cfg, Arc::new(BackendRegistry::cpu_only()), None)
     }
 
     fn build(
         cfg: &ServeConfig,
-        router: Arc<Router>,
+        backends: Arc<BackendRegistry>,
         executor: Option<Executor>,
-        handle: Option<ExecutorHandle>,
     ) -> Result<TopKService> {
+        if let Some(forced) = &cfg.backend.force {
+            if !backends.contains(forced) {
+                return Err(anyhow!(
+                    "backend.force={forced:?} is not a registered backend \
+                     (available: {:?})",
+                    backends.ids()
+                ));
+            }
+        }
         let batcher = Arc::new(Batcher::new(BatchPolicy {
             max_rows: cfg.max_batch_rows,
             max_wait: Duration::from_micros(cfg.max_wait_us),
             queue_limit: cfg.queue_limit,
         }));
         let metrics = Arc::new(Metrics::default());
-        let planner = Arc::new(Planner::new(
-            PlannerConfig::from_plan_config(&cfg.plan)
-                .map_err(anyhow::Error::msg)?,
-        ));
+        let mut planner_cfg = PlannerConfig::from_plan_config(&cfg.plan)
+            .map_err(anyhow::Error::msg)?;
+        planner_cfg.force_backend = cfg.backend.force.clone();
+        let planner =
+            Arc::new(Planner::with_backends(planner_cfg, backends.clone()));
         let workers = spawn_workers(
             cfg.workers,
             batcher.clone(),
-            router.clone(),
-            handle,
+            backends.clone(),
             metrics.clone(),
             planner.clone(),
         );
         Ok(TopKService {
             batcher,
             metrics,
-            router,
+            backends,
             planner,
             workers,
             _executor: executor,
@@ -124,9 +144,14 @@ impl TopKService {
         self.metrics.snapshot()
     }
 
-    /// Compiled tile variants available for PJRT routing.
+    /// Compiled tile variants available to accelerator backends.
     pub fn variants(&self) -> Vec<(usize, usize, String)> {
-        self.router.variants()
+        self.backends.variants()
+    }
+
+    /// The execution backends this service carries.
+    pub fn backends(&self) -> &BackendRegistry {
+        &self.backends
     }
 
     /// The shared adaptive planner (cached plans per batch shape).
@@ -210,6 +235,31 @@ mod tests {
     }
 
     #[test]
+    fn cpu_only_service_registers_just_the_cpu_backend() {
+        let svc = cpu_service(1);
+        assert_eq!(svc.backends().ids(), vec!["cpu".to_string()]);
+        assert!(svc.variants().is_empty());
+    }
+
+    #[test]
+    fn backend_disable_serves_cpu_only_without_artifacts() {
+        use crate::config::BackendConfig;
+        // enable = false must not require a readable artifacts dir
+        let svc = TopKService::start(&ServeConfig {
+            artifacts_dir: "/definitely/not/a/real/artifacts/dir".into(),
+            workers: 1,
+            max_wait_us: 50,
+            backend: BackendConfig { enable: false, ..BackendConfig::default() },
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(svc.backends().ids(), vec!["cpu".to_string()]);
+        let mut rng = Rng::seed_from(36);
+        let x = RowMatrix::random_normal(10, 32, &mut rng);
+        assert!(is_exact(&x, &svc.submit(x.clone(), 4, Mode::EXACT).unwrap()));
+    }
+
+    #[test]
     fn served_batches_populate_the_plan_cache() {
         let svc = cpu_service(2);
         let mut rng = Rng::seed_from(34);
@@ -252,6 +302,28 @@ mod tests {
             ..Default::default()
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_forced_backend_fails_startup() {
+        use crate::config::BackendConfig;
+        let err = TopKService::cpu_only(&ServeConfig {
+            backend: BackendConfig {
+                force: Some("warp9".into()),
+                ..BackendConfig::default()
+            },
+            ..Default::default()
+        });
+        assert!(err.is_err());
+        // pinning the always-present cpu backend is fine
+        let ok = TopKService::cpu_only(&ServeConfig {
+            backend: BackendConfig {
+                force: Some("cpu".into()),
+                ..BackendConfig::default()
+            },
+            ..Default::default()
+        });
+        assert!(ok.is_ok());
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //!
 //! * **Layer 3 (this crate)** — the request-path coordinator: a row-wise
 //!   top-k service ([`coordinator`]), the PJRT runtime that executes the
-//!   AOT-compiled JAX artifacts ([`runtime`]), and every substrate the
-//!   paper's evaluation needs — the top-k algorithm zoo incl. the
+//!   AOT-compiled JAX artifacts ([`runtime`]), the execution-backend
+//!   seam the planner selects through ([`backend`]), and every substrate
+//!   the paper's evaluation needs — the top-k algorithm zoo incl. the
 //!   RadixSelect baseline ([`topk`]), a warp-level GPU cost simulator
 //!   ([`simt`]), graph datasets ([`graph`]), and a CPU GNN compute
 //!   substrate ([`gnn`]).
@@ -35,6 +36,7 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! measured paper-vs-reproduction numbers.
 
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod config;

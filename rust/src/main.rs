@@ -2,9 +2,10 @@
 //! and analysis subcommands, all driven by the AOT artifacts.
 
 use anyhow::{anyhow, Result};
+use rtopk::backend::BackendRegistry;
 use rtopk::bench::{parse_mode, workload, Table};
 use rtopk::cli::{App, Args, Command};
-use rtopk::config::{Config, ServeConfig};
+use rtopk::config::{BackendConfig, Config, ServeConfig};
 use rtopk::coordinator::{Trainer, TopKService};
 use rtopk::plan::{model, Planner, PlannerConfig};
 use rtopk::runtime::executor::Executor;
@@ -14,6 +15,7 @@ use rtopk::topk::{rowwise_topk, Mode};
 use rtopk::util::json;
 use rtopk::util::rng::Rng;
 use rtopk::util::matrix::RowMatrix;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn app() -> App {
@@ -52,6 +54,10 @@ fn app() -> App {
                 .opt("calib-rows", "192",
                      "microbenchmark rows per candidate (0 = cost model only)")
                 .opt("force", "", "pin one algorithm (expert; empty = adaptive)")
+                .opt("backend", "", "pin one backend id (cpu | pjrt; empty = adaptive)")
+                .opt("artifacts", "",
+                     "artifacts dir registering accelerator backends \
+                      (empty = CPU engine only)")
                 .opt("cache", "", "plan-cache JSON path (loaded and saved)")
                 .switch("json", "emit the plan grid as JSON"),
             Command::new("stats", "iteration statistics + E(n) model (Tables 1/5)")
@@ -222,22 +228,53 @@ fn cmd_plan(a: &Args) -> Result<()> {
     let mode = parse_mode(a.get("mode").unwrap()).map_err(anyhow::Error::msg)?;
     let calib_rows: usize = a.req("calib-rows").map_err(anyhow::Error::msg)?;
     let force = a.get("force").filter(|s| !s.is_empty());
+    let backend_pin = a.get("backend").filter(|s| !s.is_empty()).map(String::from);
+    let artifacts = a.get("artifacts").filter(|s| !s.is_empty());
     let cache = a.get("cache").filter(|s| !s.is_empty()).map(String::from);
+
+    // register accelerator backends when an artifacts dir is given;
+    // probes skip cleanly if they cannot execute (stub PJRT build)
+    let mut _executor_keepalive = None;
+    let registry = match artifacts {
+        Some(dir) => match Executor::spawn(dir) {
+            Ok(exec) => {
+                let r = BackendRegistry::with_manifest(
+                    &BackendConfig::default(),
+                    exec.handle(),
+                );
+                _executor_keepalive = Some(exec);
+                Arc::new(r)
+            }
+            Err(e) => {
+                eprintln!(
+                    "note: accelerator backends unavailable ({e:#}); \
+                     planning against the CPU engine only"
+                );
+                Arc::new(BackendRegistry::cpu_only())
+            }
+        },
+        None => Arc::new(BackendRegistry::cpu_only()),
+    };
+    println!("backends:");
+    for b in registry.all() {
+        println!("  {:6} {}", b.id(), b.describe());
+    }
 
     let cfg = PlannerConfig {
         force: match force {
             Some(f) => Some(rtopk::plan::parse_force(f).map_err(anyhow::Error::msg)?),
             None => None,
         },
+        force_backend: backend_pin,
         calib_rows,
         cache_path: cache.map(std::path::PathBuf::from),
         ..PlannerConfig::default()
     };
-    let planner = Planner::new(cfg);
+    let planner = Planner::with_backends(cfg, registry);
 
     let mut t = Table::new(
         &format!("adaptive plans (mode={})", mode.tag()),
-        &["M", "k", "algorithm", "grain", "source", "prior (cyc/row)"],
+        &["M", "k", "backend", "algorithm", "grain", "source", "prior (cyc/row)"],
     );
     let mut grid = Vec::new();
     for &m in &cols {
@@ -250,6 +287,7 @@ fn cmd_plan(a: &Args) -> Result<()> {
             t.row(vec![
                 m.to_string(),
                 k.to_string(),
+                plan.backend.clone(),
                 plan.algo.name(),
                 plan.grain.to_string(),
                 plan.source.name().to_string(),
@@ -259,6 +297,7 @@ fn cmd_plan(a: &Args) -> Result<()> {
                 ("cols", json::num(m as f64)),
                 ("k", json::num(k as f64)),
                 ("mode", json::s(&mode.tag())),
+                ("backend", json::s(&plan.backend)),
                 ("algo", json::s(&plan.algo.name())),
                 ("grain", json::num(plan.grain as f64)),
                 ("source", json::s(plan.source.name())),
@@ -266,10 +305,64 @@ fn cmd_plan(a: &Args) -> Result<()> {
             ]));
         }
     }
+    // per-backend calibration: what each registered backend measured on
+    // each shape's probe workload (or why it was skipped)
+    let probes = planner.probe_log();
+    let mut calib = Vec::new();
+    let mut ct = Table::new(
+        "per-backend calibration",
+        &["M", "k", "mode", "backend", "probe", "chosen"],
+    );
+    for p in &probes {
+        // backends probe at their own natural batch size; per-row time
+        // is the comparable number
+        let probe = match p.secs {
+            Some(s) => format!(
+                "{:.3} ms / {} rows ({:.1} ns/row)",
+                s * 1e3,
+                p.rows,
+                s / p.rows.max(1) as f64 * 1e9
+            ),
+            None => "skipped (unavailable)".to_string(),
+        };
+        ct.row(vec![
+            p.cols.to_string(),
+            p.k.to_string(),
+            p.mode.clone(),
+            p.backend.clone(),
+            probe,
+            if p.chosen { "*".into() } else { String::new() },
+        ]);
+        calib.push(json::obj(vec![
+            ("cols", json::num(p.cols as f64)),
+            ("k", json::num(p.k as f64)),
+            ("mode", json::s(&p.mode)),
+            ("backend", json::s(&p.backend)),
+            (
+                "probe_secs",
+                match p.secs {
+                    Some(s) => json::num(s),
+                    None => rtopk::util::json::Value::Null,
+                },
+            ),
+            ("probe_rows", json::num(p.rows as f64)),
+            ("chosen", rtopk::util::json::Value::Bool(p.chosen)),
+        ]));
+    }
     if a.switch("json") {
-        println!("{}", json::obj(vec![("plans", json::arr(grid))]).to_string());
+        println!(
+            "{}",
+            json::obj(vec![
+                ("plans", json::arr(grid)),
+                ("calibration", json::arr(calib)),
+            ])
+            .to_string()
+        );
     } else {
         t.print();
+        if !probes.is_empty() {
+            ct.print();
+        }
     }
     planner.save().map_err(anyhow::Error::msg)?;
     Ok(())

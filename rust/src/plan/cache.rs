@@ -1,15 +1,27 @@
-//! Shape-keyed plan cache with optional JSON persistence.
+//! Shape-keyed plan cache with schema-versioned, host-fingerprinted
+//! JSON persistence.
 //!
 //! Keys are `(cols, k, mode-tag)` — the same shape key the batcher
 //! groups on — so one calibration serves every batch of that shape for
 //! the process lifetime, and (when a `cache_path` is configured) across
-//! restarts. The on-disk format is a plain JSON document written with
-//! the in-tree writer (`util::json`):
+//! restarts. Each entry additionally records the *backend id* the shape
+//! was calibrated to, so a persisted decision is a complete execution
+//! plan, not just a CPU-algorithm choice.
+//!
+//! Persisted plans are measurements of a particular machine, so the
+//! document carries a schema version and a host fingerprint
+//! (`available_parallelism` + the CPU model string). A cache written by
+//! another schema or another host is **rejected wholesale** at load —
+//! the planner logs it and re-calibrates instead of trusting timings
+//! that were measured elsewhere. The on-disk format (written with the
+//! in-tree `util::json`):
 //!
 //! ```json
-//! {"version": 1, "plans": [
-//!   {"cols": 256, "k": 32, "mode": "exact",
-//!    "algo": "rtopk_exact", "grain": 64}
+//! {"version": 2,
+//!  "host": {"parallelism": 8, "cpu_model": "..."},
+//!  "plans": [
+//!    {"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
+//!     "algo": "rtopk_exact", "grain": 64}
 //! ]}
 //! ```
 
@@ -20,6 +32,43 @@ use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::RwLock;
+
+/// Version of the persisted document. Bump whenever the schema or the
+/// meaning of a field changes; old caches are then re-calibrated, never
+/// reinterpreted. (v1 had no host fingerprint and no backend field.)
+pub const SCHEMA_VERSION: usize = 2;
+
+/// What makes one host's calibration untrustworthy on another.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostFingerprint {
+    /// `std::thread::available_parallelism` at calibration time
+    pub parallelism: usize,
+    /// CPU model string (`/proc/cpuinfo` on Linux; "unknown" elsewhere)
+    pub cpu_model: String,
+}
+
+impl HostFingerprint {
+    /// Fingerprint of the machine we are running on.
+    pub fn current() -> HostFingerprint {
+        let parallelism = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        HostFingerprint { parallelism, cpu_model: read_cpu_model() }
+    }
+}
+
+fn read_cpu_model() -> String {
+    if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in text.lines() {
+            if let Some((key, val)) = line.split_once(':') {
+                if key.trim() == "model name" {
+                    return val.trim().to_string();
+                }
+            }
+        }
+    }
+    "unknown".into()
+}
 
 type Key = (usize, usize, String);
 
@@ -39,7 +88,7 @@ impl PlanCache {
             .read()
             .unwrap()
             .get(&(cols, k, mode_tag.to_string()))
-            .copied()
+            .cloned()
     }
 
     pub fn insert(&self, cols: usize, k: usize, mode_tag: &str, plan: Plan) {
@@ -63,15 +112,16 @@ impl PlanCache {
             .read()
             .unwrap()
             .iter()
-            .map(|((c, k, m), p)| (*c, *k, m.clone(), *p))
+            .map(|((c, k, m), p)| (*c, *k, m.clone(), p.clone()))
             .collect()
     }
 
-    /// Serialize to the JSON document format. Forced plans are
-    /// deliberately dropped: they record an operator pin, not a
-    /// measurement, and persisting them would keep the pinned
-    /// algorithm alive after the pin is removed from the config.
-    pub fn to_json(&self) -> String {
+    /// Serialize to the JSON document format, stamped with a host
+    /// fingerprint. Forced plans are deliberately dropped: they record
+    /// an operator pin, not a measurement, and persisting them would
+    /// keep the pinned choice alive after the pin is removed from the
+    /// config.
+    pub fn to_json_for_host(&self, host: &HostFingerprint) -> String {
         let plans: Vec<Value> = self
             .snapshot()
             .into_iter()
@@ -81,16 +131,29 @@ impl PlanCache {
                     ("cols", json::num(cols as f64)),
                     ("k", json::num(k as f64)),
                     ("mode", json::s(&mode)),
+                    ("backend", json::s(&plan.backend)),
                     ("algo", json::s(&plan.algo.name())),
                     ("grain", json::num(plan.grain as f64)),
                 ])
             })
             .collect();
         json::obj(vec![
-            ("version", json::num(1.0)),
+            ("version", json::num(SCHEMA_VERSION as f64)),
+            (
+                "host",
+                json::obj(vec![
+                    ("parallelism", json::num(host.parallelism as f64)),
+                    ("cpu_model", json::s(&host.cpu_model)),
+                ]),
+            ),
             ("plans", json::arr(plans)),
         ])
         .to_string()
+    }
+
+    /// Serialize stamped with the current machine's fingerprint.
+    pub fn to_json(&self) -> String {
+        self.to_json_for_host(&HostFingerprint::current())
     }
 
     /// Persist to a file (best-effort caller decides how to surface).
@@ -99,15 +162,40 @@ impl PlanCache {
             .map_err(|e| format!("write plan cache {path:?}: {e}"))
     }
 
-    /// Merge entries from a JSON document into this cache. All-or-
-    /// nothing: a document that fails to parse anywhere leaves the
-    /// cache untouched (a caller that logs "ignoring bad cache" must
-    /// actually have ignored all of it).
-    pub fn load_json(&self, text: &str) -> Result<usize, String> {
+    /// Merge entries from a JSON document into this cache, trusting it
+    /// only if its schema version and host fingerprint match `host`.
+    /// All-or-nothing: a document that fails anywhere leaves the cache
+    /// untouched (a caller that logs "re-calibrating" must actually
+    /// have ignored all of it).
+    pub fn load_json_for_host(
+        &self,
+        text: &str,
+        host: &HostFingerprint,
+    ) -> Result<usize, String> {
         let v = json::parse(text)?;
         let version = v.get("version").and_then(Value::as_usize).unwrap_or(0);
-        if version != 1 {
-            return Err(format!("unsupported plan-cache version {version}"));
+        if version != SCHEMA_VERSION {
+            return Err(format!(
+                "plan-cache schema version {version} != {SCHEMA_VERSION} \
+                 (stale or foreign cache)"
+            ));
+        }
+        let h = v.get("host").ok_or("plan cache missing host fingerprint")?;
+        let parallelism = h
+            .get("parallelism")
+            .and_then(Value::as_usize)
+            .ok_or("bad host.parallelism")?;
+        let cpu_model = h
+            .get("cpu_model")
+            .and_then(Value::as_str)
+            .ok_or("bad host.cpu_model")?;
+        if parallelism != host.parallelism || cpu_model != host.cpu_model {
+            return Err(format!(
+                "plan cache was calibrated on another host \
+                 ({parallelism} threads, {cpu_model:?}) — this host is \
+                 ({} threads, {:?})",
+                host.parallelism, host.cpu_model
+            ));
         }
         let plans = v
             .get("plans")
@@ -118,6 +206,10 @@ impl PlanCache {
             let cols = p.get("cols").and_then(Value::as_usize).ok_or("bad cols")?;
             let k = p.get("k").and_then(Value::as_usize).ok_or("bad k")?;
             let mode = p.get("mode").and_then(Value::as_str).ok_or("bad mode")?;
+            let backend = p
+                .get("backend")
+                .and_then(Value::as_str)
+                .ok_or("bad backend")?;
             let algo_name =
                 p.get("algo").and_then(Value::as_str).ok_or("bad algo")?;
             let grain =
@@ -139,7 +231,12 @@ impl PlanCache {
                 cols,
                 k,
                 mode.to_string(),
-                Plan { algo, grain, source: PlanSource::Cached },
+                Plan {
+                    backend: backend.to_string(),
+                    algo,
+                    grain,
+                    source: PlanSource::Cached,
+                },
             ));
         }
         let n = parsed.len();
@@ -147,6 +244,11 @@ impl PlanCache {
             self.insert(cols, k, &mode, plan);
         }
         Ok(n)
+    }
+
+    /// Merge a document checked against the current machine.
+    pub fn load_json(&self, text: &str) -> Result<usize, String> {
+        self.load_json_for_host(text, &HostFingerprint::current())
     }
 
     /// Load from a file path.
@@ -199,7 +301,12 @@ mod tests {
     use super::*;
 
     fn plan(algo: RowAlgo, grain: usize) -> Plan {
-        Plan { algo, grain, source: PlanSource::Calibrated }
+        Plan {
+            backend: "cpu".into(),
+            algo,
+            grain,
+            source: PlanSource::Calibrated,
+        }
     }
 
     #[test]
@@ -211,16 +318,27 @@ mod tests {
         let p = c.get(256, 32, "exact").unwrap();
         assert_eq!(p.algo, RowAlgo::Radix);
         assert_eq!(p.grain, 64);
+        assert_eq!(p.backend, "cpu");
         assert!(c.get(256, 32, "es4").is_none());
         assert_eq!(c.snapshot().len(), 1);
     }
 
     #[test]
-    fn json_roundtrip() {
+    fn json_roundtrip_preserves_backend_ids() {
         let c = PlanCache::new();
         c.insert(256, 32, "exact", plan(RowAlgo::RTopK(Mode::EXACT), 64));
         c.insert(512, 16, "es4", plan(RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 }), 32));
-        c.insert(768, 128, "exact", plan(RowAlgo::Bucket, 21));
+        c.insert(
+            768,
+            128,
+            "exact",
+            Plan {
+                backend: "pjrt".into(),
+                algo: RowAlgo::Bucket,
+                grain: 21,
+                source: PlanSource::Calibrated,
+            },
+        );
         let text = c.to_json();
         let d = PlanCache::new();
         assert_eq!(d.load_json(&text).unwrap(), 3);
@@ -228,6 +346,7 @@ mod tests {
             let q = d.get(cols, k, &mode).unwrap();
             assert_eq!(q.algo, p.algo);
             assert_eq!(q.grain, p.grain);
+            assert_eq!(q.backend, p.backend);
             assert_eq!(q.source, PlanSource::Cached);
         }
     }
@@ -267,10 +386,57 @@ mod tests {
     fn rejects_bad_documents() {
         let c = PlanCache::new();
         assert!(c.load_json("{}").is_err());
+        // v1 documents (no fingerprint, no backend) are stale by
+        // definition — recalibrate rather than reinterpret
+        assert!(c.load_json(r#"{"version": 1, "plans": []}"#).is_err());
+        assert!(c.load_json(r#"{"version": 3, "plans": []}"#).is_err());
+        // v2 without a host stamp
         assert!(c.load_json(r#"{"version": 2, "plans": []}"#).is_err());
-        assert!(c
-            .load_json(r#"{"version": 1, "plans": [{"cols": 1}]}"#)
-            .is_err());
+        // entry missing required fields
+        let host = HostFingerprint::current();
+        let doc = format!(
+            r#"{{"version": 2,
+                "host": {{"parallelism": {}, "cpu_model": {}}},
+                "plans": [{{"cols": 1}}]}}"#,
+            host.parallelism,
+            json::s(&host.cpu_model).to_string()
+        );
+        assert!(c.load_json(&doc).is_err());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn cache_from_another_host_is_recalibrated_not_trusted() {
+        let c = PlanCache::new();
+        c.insert(256, 32, "exact", plan(RowAlgo::Radix, 64));
+        let foreign = HostFingerprint {
+            parallelism: 31_337,
+            cpu_model: "Martian Quantum Core".into(),
+        };
+        let text = c.to_json_for_host(&foreign);
+        let d = PlanCache::new();
+        let err = d.load_json(&text).unwrap_err();
+        assert!(err.contains("another host"), "got: {err}");
+        assert!(d.is_empty(), "foreign cache must not merge");
+        // the same document checked against its own fingerprint loads
+        assert_eq!(d.load_json_for_host(&text, &foreign).unwrap(), 1);
+    }
+
+    #[test]
+    fn entries_without_a_backend_id_are_rejected() {
+        let host = HostFingerprint::current();
+        let doc = format!(
+            r#"{{"version": 2,
+                "host": {{"parallelism": {}, "cpu_model": {}}},
+                "plans": [{{"cols": 256, "k": 32, "mode": "exact",
+                            "algo": "radix", "grain": 8}}]}}"#,
+            host.parallelism,
+            json::s(&host.cpu_model).to_string()
+        );
+        let c = PlanCache::new();
+        let err = c.load_json(&doc).unwrap_err();
+        assert!(err.contains("backend"), "got: {err}");
+        assert!(c.is_empty());
     }
 
     #[test]
@@ -281,7 +447,12 @@ mod tests {
             512,
             32,
             "exact",
-            Plan { algo: RowAlgo::Sort, grain: 64, source: PlanSource::Forced },
+            Plan {
+                backend: "pjrt".into(),
+                algo: RowAlgo::Sort,
+                grain: 64,
+                source: PlanSource::Forced,
+            },
         );
         let d = PlanCache::new();
         assert_eq!(d.load_json(&c.to_json()).unwrap(), 1);
@@ -290,30 +461,51 @@ mod tests {
 
     #[test]
     fn approximate_mode_keys_require_the_rtopk_kernel() {
+        let host = HostFingerprint::current();
+        let host_json = format!(
+            r#""host": {{"parallelism": {}, "cpu_model": {}}}"#,
+            host.parallelism,
+            json::s(&host.cpu_model).to_string()
+        );
         let c = PlanCache::new();
-        let doc = r#"{"version": 1, "plans": [
-          {"cols": 256, "k": 32, "mode": "es4", "algo": "heap", "grain": 8}
-        ]}"#;
-        let err = c.load_json(doc).unwrap_err();
+        let doc = format!(
+            r#"{{"version": 2, {host_json}, "plans": [
+              {{"cols": 256, "k": 32, "mode": "es4", "backend": "cpu",
+                "algo": "heap", "grain": 8}}
+            ]}}"#
+        );
+        let err = c.load_json(&doc).unwrap_err();
         assert!(err.contains("rtopk"), "got: {err}");
         assert!(c.is_empty());
         // the same algo under an exact key is fine
-        let ok = r#"{"version": 1, "plans": [
-          {"cols": 256, "k": 32, "mode": "exact", "algo": "heap", "grain": 8}
-        ]}"#;
-        assert_eq!(c.load_json(ok).unwrap(), 1);
+        let ok = format!(
+            r#"{{"version": 2, {host_json}, "plans": [
+              {{"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
+                "algo": "heap", "grain": 8}}
+            ]}}"#
+        );
+        assert_eq!(c.load_json(&ok).unwrap(), 1);
     }
 
     #[test]
     fn bad_document_is_all_or_nothing() {
         // a valid entry followed by a broken one must not leave the
         // valid prefix merged in
+        let host = HostFingerprint::current();
+        let doc = format!(
+            r#"{{"version": 2,
+                "host": {{"parallelism": {}, "cpu_model": {}}},
+                "plans": [
+              {{"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
+                "algo": "radix", "grain": 8}},
+              {{"cols": 512, "k": 16, "mode": "exact", "backend": "cpu",
+                "algo": "not_an_algo"}}
+            ]}}"#,
+            host.parallelism,
+            json::s(&host.cpu_model).to_string()
+        );
         let c = PlanCache::new();
-        let doc = r#"{"version": 1, "plans": [
-          {"cols": 256, "k": 32, "mode": "exact", "algo": "radix", "grain": 8},
-          {"cols": 512, "k": 16, "mode": "exact", "algo": "not_an_algo"}
-        ]}"#;
-        assert!(c.load_json(doc).is_err());
+        assert!(c.load_json(&doc).is_err());
         assert!(c.is_empty(), "partial merge from a rejected document");
     }
 }

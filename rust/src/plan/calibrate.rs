@@ -14,7 +14,9 @@
 //! millisecond of one-time work per shape, amortized over every batch
 //! the service ever runs at that shape.
 
+use crate::backend::{ExecBackend, ExecSpec};
 use crate::topk::rowwise::{rowwise_topk_grained, RowAlgo};
+use crate::topk::types::Mode;
 use crate::util::matrix::RowMatrix;
 use crate::util::rng::Rng;
 use std::time::Instant;
@@ -89,15 +91,16 @@ pub fn microbench(
 /// Pick the fastest grain for the winning algorithm from a small
 /// neighborhood of the default (half / double), reusing the probe
 /// matrix and the base grain's already-measured time so nothing is
-/// timed twice.
-pub fn pick_grain(
+/// timed twice. Returns the winning `(grain, secs)` so callers racing
+/// backends can reuse the measurement.
+pub fn pick_grain_timed(
     x: &RowMatrix,
     k: usize,
     algo: RowAlgo,
     reps: usize,
     base_grain: usize,
     base_secs: f64,
-) -> usize {
+) -> (usize, f64) {
     let g = base_grain.max(1);
     let mut best = (g, base_secs);
     for grain in [g / 2, (g * 2).min(1024)] {
@@ -109,7 +112,73 @@ pub fn pick_grain(
             best = (grain, t);
         }
     }
-    best.0
+    best
+}
+
+/// [`pick_grain_timed`] without the timing (the original API).
+pub fn pick_grain(
+    x: &RowMatrix,
+    k: usize,
+    algo: RowAlgo,
+    reps: usize,
+    base_grain: usize,
+    base_secs: f64,
+) -> usize {
+    pick_grain_timed(x, k, algo, reps, base_grain, base_secs).0
+}
+
+/// Best-of-`reps` wall time of a registered backend, with the *same*
+/// warmup + best-of harness CPU algorithm candidates go through.
+/// Returns `(secs, rows)` — the measured time and the rows actually
+/// probed — so callers can compare backends on per-row rates.
+///
+/// The backend is probed at its [`ExecBackend::preferred_probe_rows`]
+/// (e.g. one full PJRT tile) when that differs from `x`: a tiled
+/// backend pads every execution to its tile size, so timing it on the
+/// small CPU probe matrix would charge it for padding rows the CPU
+/// candidates never compute, structurally biasing the race.
+///
+/// Returns `None` when the backend cannot execute here (stub PJRT
+/// build, missing artifacts, unsupported shape): the warmup run doubles
+/// as an availability check, mirroring how the integration tests skip
+/// without artifacts. A skipped probe simply removes the backend from
+/// this shape's race; it is never an error.
+pub fn time_backend(
+    backend: &dyn ExecBackend,
+    x: &RowMatrix,
+    k: usize,
+    mode: Mode,
+    reps: usize,
+) -> Option<(f64, usize)> {
+    if !backend.supports(x.cols, k, mode) {
+        return None;
+    }
+    let sized;
+    let probe: &RowMatrix = match backend.preferred_probe_rows(x.cols, k, mode) {
+        Some(rows) if rows != x.rows => {
+            sized = probe_workload(rows, x.cols);
+            &sized
+        }
+        _ => x,
+    };
+    let spec = ExecSpec::baseline(probe.cols, mode);
+    let mats = [probe];
+    // warmup (includes any compile); an error means "unavailable here"
+    if backend.execute(&spec, &mats, k, mode).is_err() {
+        return None;
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        if backend.execute(&spec, &mats, k, mode).is_err() {
+            return None;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < best {
+            best = dt;
+        }
+    }
+    Some((best, probe.rows))
 }
 
 #[cfg(test)]
@@ -134,6 +203,98 @@ mod tests {
         assert_eq!(probes.len(), 3);
         assert!(probes.windows(2).all(|w| w[0].secs <= w[1].secs));
         assert!(probes.iter().all(|p| p.secs.is_finite() && p.secs >= 0.0));
+    }
+
+    #[test]
+    fn backend_probe_uses_the_same_harness_and_skips_failures() {
+        use crate::backend::{CpuBackend, ExecBackend, ExecSpec};
+        use crate::util::matrix::RowMatrix;
+        let x = probe_workload(16, 32);
+        let (secs, rows) = time_backend(&CpuBackend, &x, 4, Mode::EXACT, 1)
+            .expect("cpu backend always probes");
+        assert!(secs.is_finite() && secs >= 0.0);
+        assert_eq!(rows, 16, "no probe-size preference -> probe x itself");
+
+        struct Tiled;
+        impl ExecBackend for Tiled {
+            fn id(&self) -> &str {
+                "tiled"
+            }
+            fn describe(&self) -> String {
+                "pads to a 64-row tile".into()
+            }
+            fn supports(&self, _c: usize, _k: usize, _m: Mode) -> bool {
+                true
+            }
+            fn preferred_probe_rows(
+                &self,
+                _c: usize,
+                _k: usize,
+                _m: Mode,
+            ) -> Option<usize> {
+                Some(64)
+            }
+            fn execute(
+                &self,
+                spec: &ExecSpec,
+                mats: &[&crate::util::matrix::RowMatrix],
+                k: usize,
+                _mode: Mode,
+            ) -> anyhow::Result<Vec<crate::topk::types::TopKResult>> {
+                Ok(mats
+                    .iter()
+                    .map(|x| rowwise_topk_grained(x, k, spec.algo, spec.grain))
+                    .collect())
+            }
+        }
+        let (_, rows) = time_backend(&Tiled, &x, 4, Mode::EXACT, 1).unwrap();
+        assert_eq!(rows, 64, "tiled backends are probed at their tile size");
+
+        struct Broken;
+        impl ExecBackend for Broken {
+            fn id(&self) -> &str {
+                "broken"
+            }
+            fn describe(&self) -> String {
+                "always errors".into()
+            }
+            fn supports(&self, _c: usize, _k: usize, _m: Mode) -> bool {
+                true
+            }
+            fn execute(
+                &self,
+                _spec: &ExecSpec,
+                _mats: &[&RowMatrix],
+                _k: usize,
+                _mode: Mode,
+            ) -> anyhow::Result<Vec<crate::topk::types::TopKResult>> {
+                Err(anyhow::anyhow!("unavailable"))
+            }
+        }
+        assert!(time_backend(&Broken, &x, 4, Mode::EXACT, 1).is_none());
+
+        struct Unsupporting;
+        impl ExecBackend for Unsupporting {
+            fn id(&self) -> &str {
+                "nope"
+            }
+            fn describe(&self) -> String {
+                "supports nothing".into()
+            }
+            fn supports(&self, _c: usize, _k: usize, _m: Mode) -> bool {
+                false
+            }
+            fn execute(
+                &self,
+                _spec: &ExecSpec,
+                _mats: &[&RowMatrix],
+                _k: usize,
+                _mode: Mode,
+            ) -> anyhow::Result<Vec<crate::topk::types::TopKResult>> {
+                panic!("must not execute an unsupported shape")
+            }
+        }
+        assert!(time_backend(&Unsupporting, &x, 4, Mode::EXACT, 1).is_none());
     }
 
     #[test]

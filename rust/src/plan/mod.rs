@@ -1,28 +1,47 @@
-//! Adaptive execution planner: pick the fastest row-wise top-k
-//! algorithm and work-unit grain per batch shape.
+//! Adaptive execution planner: pick the fastest execution backend,
+//! row-wise top-k algorithm, and work-unit grain per batch shape.
 //!
 //! RadiK-style size dispatch and the regime analysis in "Approximate
 //! Top-k for Increased Parallelism" both observe that the best top-k
 //! algorithm depends on the shape; this crate already carries six
-//! baselines, the paper's kernel, and a SIMT cost model — the planner
-//! is the seam that turns those parts into one self-tuning engine, and
-//! the seam every future backend (threaded CPU today, GPU tiles next)
-//! plugs into.
+//! baselines, the paper's kernel, a SIMT cost model, and a PJRT tile
+//! executor — the planner is the seam that turns those parts into one
+//! self-tuning engine. Execution backends (`crate::backend`) are just
+//! more candidates: the planner races every registered backend that
+//! supports a shape with the same microbenchmark harness it uses for
+//! CPU algorithms, so a compiled accelerator tile wins a shape only by
+//! *measuring* faster than the CPU engine — not by merely existing in
+//! the manifest.
 //!
 //! Decision pipeline for a `(cols, k, mode)` key:
 //!
-//! 1. **Force override** (`PlannerConfig::force`): an operator pin,
-//!    honored only when it cannot change result semantics (see
-//!    [`ForceAlgo`]).
+//! 1. **Force overrides** (`PlannerConfig::force`,
+//!    `PlannerConfig::force_backend`): operator pins, honored only when
+//!    they cannot change result semantics (see [`ForceAlgo`]; a pinned
+//!    backend that does not support a shape falls back to the CPU
+//!    engine). Pinned decisions live in a session-local cache and are
+//!    never persisted.
 //! 2. **Plan cache** ([`cache::PlanCache`]): one decision per shape for
-//!    the process lifetime; optionally persisted to JSON and reloaded
-//!    at startup.
+//!    the process lifetime; optionally persisted to JSON (schema-
+//!    versioned and host-fingerprinted — a cache from another host or
+//!    schema is re-calibrated instead of trusted) and reloaded at
+//!    startup. A cached plan naming a backend this process does not
+//!    have is re-decided, not trusted.
 //! 3. **Cost-model prior** ([`model`]): the `simt` instruction-stream
-//!    estimates rank the candidates.
+//!    estimates rank the CPU candidates; with calibration disabled the
+//!    backend prior is "a compiled tile exists" (the old manifest-only
+//!    router's rule).
 //! 4. **Microbenchmark calibration** ([`calibrate`]): when the budget
-//!    allows (`calib_rows > 0`), every candidate is timed on a small
-//!    deterministic workload and the measured winner overrides the
-//!    prior; the winner's grain is then calibrated around the default.
+//!    allows (`calib_rows > 0`), every CPU candidate is timed on a
+//!    small deterministic workload and the winner's grain is
+//!    calibrated; then every registered accelerator backend supporting
+//!    the shape is timed with the same harness
+//!    ([`calibrate::time_backend`]), each at its own natural batch
+//!    size (e.g. one full PJRT tile), and the fastest *per-row* rate
+//!    wins the shape — a tiled backend is not charged for padding rows
+//!    the CPU probe never computes. Backends that cannot execute here
+//!    (stub PJRT build, missing artifacts) fail their probe and are
+//!    skipped cleanly.
 //!
 //! ## Correctness contract
 //!
@@ -35,13 +54,18 @@
 //! * Approximate requests (early-stop, or a loose exact eps) are
 //!   defined *by the paper's algorithm*, so the planner only tunes the
 //!   grain and always executes `RowAlgo::RTopK(mode)`.
+//! * Backends carry the same contract (`tests/runtime.rs` pins the
+//!   PJRT tile bit-for-bit against the Rust engine), so switching
+//!   backends can change speed, never results.
 //!
-//! ## Knobs (config `[plan]` section / `rtopk plan` flags)
+//! ## Knobs (config `[plan]` / `[backend]` sections, `rtopk plan` flags)
 //!
 //! * `force_algo` — pin one algorithm (`rtopk`, `radix`, `quickselect`,
 //!   `heap`, `bucket`, `bitonic`, `sort`); empty = adaptive.
+//! * `backend.force` — pin one backend id (`cpu`, `pjrt`, ...); empty =
+//!   adaptive (measured) selection.
 //! * `calib_rows` — probe-matrix rows per candidate; `0` disables
-//!   microbenchmarks (cost-model-only decisions).
+//!   microbenchmarks (cost-model + manifest-prior decisions).
 //! * `calib_reps` — timed repetitions per probe (best-of).
 //! * `cache_path` — JSON file for plan persistence across restarts.
 
@@ -49,18 +73,19 @@ pub mod cache;
 pub mod calibrate;
 pub mod model;
 
+use crate::backend::{BackendRegistry, ExecSpec, CPU_BACKEND_ID};
 use crate::topk::rowwise::{default_grain, rowwise_topk_grained, RowAlgo};
 use crate::topk::types::{Mode, TopKResult};
 use crate::util::matrix::RowMatrix;
 use std::path::PathBuf;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
-pub use cache::{parse_algo, parse_mode_tag, PlanCache};
+pub use cache::{parse_algo, parse_mode_tag, HostFingerprint, PlanCache};
 
 /// Where a plan came from (reporting / cache hygiene).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanSource {
-    /// operator pin via `force_algo`
+    /// operator pin via `force_algo` / `backend.force`
     Forced,
     /// loaded from the cache (this process or a persisted file)
     Cached,
@@ -82,12 +107,45 @@ impl PlanSource {
 }
 
 /// One execution decision for a shape.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
+    /// execution backend id ([`CPU_BACKEND_ID`] = in-crate engine)
+    pub backend: String,
+    /// CPU-engine algorithm — what runs when `backend` is the CPU
+    /// engine, and the fallback if an accelerator backend fails
     pub algo: RowAlgo,
-    /// rows per dynamic work unit
+    /// rows per dynamic work unit (CPU engine)
     pub grain: usize,
     pub source: PlanSource,
+}
+
+impl Plan {
+    /// The CPU-engine portion handed to [`crate::backend::ExecBackend::execute`].
+    pub fn spec(&self) -> ExecSpec {
+        ExecSpec { algo: self.algo, grain: self.grain }
+    }
+}
+
+/// One backend measurement from a shape's calibration race (the
+/// `rtopk plan` CLI prints these). Backends race on *per-row* time
+/// (`secs / rows`): each is probed at its own natural batch size
+/// ([`crate::backend::ExecBackend::preferred_probe_rows`], e.g. one
+/// full PJRT tile), so absolute probe times are not directly
+/// comparable across backends but rates are.
+#[derive(Clone, Debug)]
+pub struct BackendProbe {
+    pub cols: usize,
+    pub k: usize,
+    /// the shape's mode key (see [`mode_key`])
+    pub mode: String,
+    pub backend: String,
+    /// best-of-reps probe seconds; `None` = the backend skipped this
+    /// shape (unavailable here — stub build, missing artifacts)
+    pub secs: Option<f64>,
+    /// rows the probe actually executed (0 when skipped)
+    pub rows: usize,
+    /// whether this backend won the shape
+    pub chosen: bool,
 }
 
 /// A forced algorithm choice. `RTopK` means "the paper's kernel at the
@@ -118,10 +176,14 @@ pub fn parse_force(s: &str) -> Result<ForceAlgo, String> {
     }
 }
 
-/// Planner knobs (typed form of the config `[plan]` section).
+/// Planner knobs (typed form of the config `[plan]` section plus the
+/// `[backend]` pin).
 #[derive(Clone, Debug)]
 pub struct PlannerConfig {
     pub force: Option<ForceAlgo>,
+    /// pin every supporting shape to one backend id; `None` = measured
+    /// selection
+    pub force_backend: Option<String>,
     /// probe rows per candidate; 0 = cost-model only
     pub calib_rows: usize,
     /// best-of repetitions per probe
@@ -134,6 +196,7 @@ impl Default for PlannerConfig {
     fn default() -> Self {
         PlannerConfig {
             force: None,
+            force_backend: None,
             calib_rows: 192,
             calib_reps: 3,
             cache_path: None,
@@ -150,6 +213,7 @@ impl PlannerConfig {
         };
         Ok(PlannerConfig {
             force,
+            force_backend: None,
             calib_rows: c.calib_rows,
             calib_reps: c.calib_reps.max(1),
             cache_path: c.cache_path.as_ref().map(PathBuf::from),
@@ -163,15 +227,33 @@ pub fn is_exact_semantics(mode: Mode) -> bool {
     matches!(mode, Mode::Exact { eps_rel } if eps_rel <= 1e-15)
 }
 
-/// Cache key for a mode. `Mode::tag()` is a display label that rounds
-/// eps to one significant digit; here loose-eps exact modes keep nine
-/// significant digits (a lossless f32 round-trip) so two requests with
-/// different eps settings never collide on one cached plan.
+/// Cache key for a mode — also the key backends match tiles against.
+/// `Mode::tag()` is a display label that rounds eps to one significant
+/// digit; here loose-eps exact modes keep nine significant digits (a
+/// lossless f32 round-trip) so two requests with different eps settings
+/// never collide on one cached plan, and every `es{N}` stays distinct
+/// from `exact` and from every other `es{M}`.
 pub fn mode_key(mode: Mode) -> String {
     match mode {
         Mode::Exact { eps_rel } if eps_rel <= 1e-15 => "exact".into(),
         Mode::Exact { eps_rel } => format!("exact_eps{eps_rel:.9e}"),
         Mode::EarlyStop { max_iter } => format!("es{max_iter}"),
+    }
+}
+
+/// The [`mode_key`] a compiled tile is indexed under, derived from its
+/// manifest metadata (`mode` / `max_iter` fields). Kept next to
+/// [`mode_key`] so the key a tile table is *built* with and the key a
+/// request *looks up* with can never drift apart — both sides go
+/// through `mode_key`. Returns `None` for metadata naming no known
+/// mode (the tile is skipped, matching the manifest-driven contract).
+pub fn tile_mode_key(meta_mode: &str, max_iter: usize) -> Option<String> {
+    match meta_mode {
+        "exact" => Some(mode_key(Mode::EXACT)),
+        "early_stop" => {
+            Some(mode_key(Mode::EarlyStop { max_iter: max_iter as u32 }))
+        }
+        _ => None,
     }
 }
 
@@ -188,20 +270,25 @@ pub fn candidates(m: usize, k: usize, mode: Mode) -> Vec<RowAlgo> {
     }
 }
 
-/// The adaptive planner: decision pipeline + shared plan cache.
+/// The adaptive planner: decision pipeline + shared plan cache +
+/// backend registry.
 pub struct Planner {
     cfg: PlannerConfig,
+    backends: Arc<BackendRegistry>,
     cache: PlanCache,
-    /// Plans decided under a `force_algo` pin. Kept apart from the
-    /// adaptive cache so a pinned run neither trusts nor overwrites
-    /// (and at save() time never erases) persisted calibration — the
-    /// pin is session state, the adaptive cache is measurement.
+    /// Plans decided under a `force_algo` / `backend.force` pin. Kept
+    /// apart from the adaptive cache so a pinned run neither trusts nor
+    /// overwrites (and at save() time never erases) persisted
+    /// calibration — the pin is session state, the adaptive cache is
+    /// measurement.
     forced_cache: PlanCache,
     /// Single-flight guard for cache misses: without it, concurrent
     /// workers first touching a shape would calibrate simultaneously,
     /// timing each other's CPU contention and caching whichever noisy
     /// result landed last.
     decide_lock: Mutex<()>,
+    /// Per-shape backend measurements (reporting; `rtopk plan`).
+    probe_log: Mutex<Vec<BackendProbe>>,
 }
 
 impl Default for Planner {
@@ -211,22 +298,31 @@ impl Default for Planner {
 }
 
 impl Planner {
-    /// Build a planner; loads the persisted cache if the configured
-    /// path exists (a missing file is not an error — first run).
+    /// Build a CPU-only planner; loads the persisted cache if the
+    /// configured path exists (a missing file is not an error — first
+    /// run).
     pub fn new(cfg: PlannerConfig) -> Planner {
+        Planner::with_backends(cfg, Arc::new(BackendRegistry::cpu_only()))
+    }
+
+    /// Build a planner over a backend registry — every registered
+    /// backend becomes a calibratable candidate.
+    pub fn with_backends(cfg: PlannerConfig, backends: Arc<BackendRegistry>) -> Planner {
         let cache = PlanCache::new();
         if let Some(path) = &cfg.cache_path {
             if path.exists() {
                 if let Err(e) = cache.load(path) {
-                    eprintln!("planner: ignoring bad plan cache: {e}");
+                    eprintln!("planner: ignoring plan cache (re-calibrating): {e}");
                 }
             }
         }
         Planner {
             cfg,
+            backends,
             cache,
             forced_cache: PlanCache::new(),
             decide_lock: Mutex::new(()),
+            probe_log: Mutex::new(Vec::new()),
         }
     }
 
@@ -236,6 +332,15 @@ impl Planner {
 
     pub fn cache(&self) -> &PlanCache {
         &self.cache
+    }
+
+    pub fn backends(&self) -> &BackendRegistry {
+        &self.backends
+    }
+
+    /// Snapshot of every backend probe recorded so far.
+    pub fn probe_log(&self) -> Vec<BackendProbe> {
+        self.probe_log.lock().unwrap().clone()
     }
 
     /// The forced algorithm for a request mode, if a pin is configured.
@@ -249,24 +354,37 @@ impl Planner {
         })
     }
 
-    /// Normalize a cached adaptive plan for this request: the cached
-    /// algo may carry a lossily-serialized RTopK mode (JSON stores the
-    /// display tag) — the request's own mode is authoritative.
+    /// Normalize a cached adaptive plan for this request: stamp the
+    /// source (a recall is a recall, wherever the entry came from) and
+    /// re-stamp the RTopK mode — the cached algo may carry a lossily-
+    /// serialized mode (JSON stores the display tag); the request's own
+    /// mode is authoritative.
     fn recall(mut p: Plan, mode: Mode) -> Plan {
         if let RowAlgo::RTopK(_) = p.algo {
             p.algo = RowAlgo::RTopK(mode);
         }
+        p.source = PlanSource::Cached;
         p
+    }
+
+    /// A cached plan is only trusted if this process actually has its
+    /// backend *and* that backend still supports the shape (tiles can
+    /// disappear when artifacts are regenerated); otherwise the shape
+    /// is re-decided with what exists.
+    fn usable(&self, p: &Plan, cols: usize, k: usize, mode: Mode) -> bool {
+        self.backends
+            .get(&p.backend)
+            .is_some_and(|b| b.supports(cols, k, mode))
     }
 
     /// Decide (or recall) the plan for a shape.
     pub fn plan(&self, cols: usize, k: usize, mode: Mode) -> Plan {
         let base_grain = default_grain(cols);
         let key = mode_key(mode);
-        if let Some(algo) = self.forced_algo(mode) {
-            // Pinned: the pin fixes the algorithm, not the tuning — the
-            // grain is still calibrated (once, in the session-local
-            // forced cache; the persisted adaptive cache is left alone).
+        if self.cfg.force.is_some() || self.cfg.force_backend.is_some() {
+            // Pinned: the pin fixes the algorithm and/or backend, not
+            // the tuning — decided once into the session-local forced
+            // cache; the persisted adaptive cache is left alone.
             if let Some(p) = self.forced_cache.get(cols, k, &key) {
                 return p;
             }
@@ -274,63 +392,72 @@ impl Planner {
             if let Some(p) = self.forced_cache.get(cols, k, &key) {
                 return p;
             }
-            let grain = if self.cfg.calib_rows == 0 {
-                base_grain
-            } else {
-                let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
-                let secs = calibrate::time_candidate(
-                    &x,
-                    k,
-                    algo,
-                    base_grain,
-                    self.cfg.calib_reps,
-                );
-                calibrate::pick_grain(
-                    &x,
-                    k,
-                    algo,
-                    self.cfg.calib_reps,
-                    base_grain,
-                    secs,
-                )
-            };
-            let plan = Plan { algo, grain, source: PlanSource::Forced };
-            self.forced_cache.insert(cols, k, &key, plan);
+            let plan = self.decide_forced(cols, k, mode, base_grain);
+            self.forced_cache.insert(cols, k, &key, plan.clone());
             return plan;
         }
         if let Some(p) = self.cache.get(cols, k, &key) {
-            return Self::recall(p, mode);
+            if self.usable(&p, cols, k, mode) {
+                return Self::recall(p, mode);
+            }
         }
         // Single-flight: serialize first-touch calibration so probe
         // timings are not contended, then re-check the cache (another
         // worker may have decided while we waited for the lock).
         let _guard = self.decide_lock.lock().unwrap();
         if let Some(p) = self.cache.get(cols, k, &key) {
-            return Self::recall(p, mode);
+            if self.usable(&p, cols, k, mode) {
+                return Self::recall(p, mode);
+            }
         }
         let plan = self.decide(cols, k, mode, base_grain);
-        self.cache.insert(cols, k, &key, plan);
+        self.cache.insert(cols, k, &key, plan.clone());
         plan
     }
 
-    fn decide(&self, cols: usize, k: usize, mode: Mode, base_grain: usize) -> Plan {
-        let cands = candidates(cols, k, mode);
-        if self.cfg.calib_rows == 0 {
-            // model-only: take the prior's pick at the default grain
-            let ranked = model::rank(&cands, cols, k);
-            return Plan {
-                algo: ranked[0].0,
-                grain: base_grain,
-                source: PlanSource::Model,
-            };
+    /// Backend prior when nothing is measured (calibration disabled):
+    /// the first registered accelerator carrying a compiled variant for
+    /// the shape — the old manifest-only router's rule — else the CPU
+    /// engine.
+    fn prior_backend(&self, cols: usize, k: usize, mode: Mode) -> String {
+        self.backends
+            .accelerators()
+            .into_iter()
+            .find(|b| b.supports(cols, k, mode))
+            .map(|b| b.id().to_string())
+            .unwrap_or_else(|| CPU_BACKEND_ID.to_string())
+    }
+
+    /// Resolve a `backend.force` pin for a shape: the pinned backend if
+    /// it exists and supports the shape, else the CPU engine. `None`
+    /// when no pin is configured.
+    fn forced_backend_for(&self, cols: usize, k: usize, mode: Mode) -> Option<String> {
+        let id = self.cfg.force_backend.as_deref()?;
+        if id == CPU_BACKEND_ID {
+            return Some(CPU_BACKEND_ID.to_string());
         }
-        // one probe workload serves both the algorithm race and the
-        // grain neighborhood
-        let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
+        match self.backends.get(id) {
+            Some(b) if b.supports(cols, k, mode) => Some(id.to_string()),
+            // unknown or unsupporting pin: the shape still gets served
+            _ => Some(CPU_BACKEND_ID.to_string()),
+        }
+    }
+
+    /// Race the CPU candidates on a probe workload; returns the winning
+    /// `(algo, grain, secs)` with the grain neighborhood calibrated.
+    fn race_cpu_on(
+        &self,
+        x: &RowMatrix,
+        cols: usize,
+        k: usize,
+        mode: Mode,
+        base_grain: usize,
+    ) -> (RowAlgo, usize, f64) {
+        let cands = candidates(cols, k, mode);
         let (algo, base_secs) = if cands.len() == 1 {
             // nothing to race, but the grain is still worth measuring
             let secs = calibrate::time_candidate(
-                &x,
+                x,
                 k,
                 cands[0],
                 base_grain,
@@ -339,7 +466,7 @@ impl Planner {
             (cands[0], secs)
         } else {
             let probes = calibrate::microbench_on(
-                &x,
+                x,
                 k,
                 &cands,
                 self.cfg.calib_reps,
@@ -347,24 +474,157 @@ impl Planner {
             );
             (probes[0].algo, probes[0].secs)
         };
-        let grain = calibrate::pick_grain(
-            &x,
+        let (grain, secs) = calibrate::pick_grain_timed(
+            x,
             k,
             algo,
             self.cfg.calib_reps,
             base_grain,
             base_secs,
         );
-        Plan { algo, grain, source: PlanSource::Calibrated }
+        (algo, grain, secs)
     }
 
-    /// Plan + execute one matrix.
+    /// Race every registered accelerator backend that supports the
+    /// shape against the CPU engine's measured time. Each backend is
+    /// probed at its own natural batch size and the comparison is on
+    /// *per-row* time, so a tiled backend is not charged for padding
+    /// rows the CPU probe never computes. Probes that fail (backend
+    /// unavailable here) are skipped cleanly and logged as such.
+    fn race_backends_on(
+        &self,
+        x: &RowMatrix,
+        cols: usize,
+        k: usize,
+        mode: Mode,
+        cpu_secs: f64,
+    ) -> String {
+        let key = mode_key(mode);
+        let cpu_rows = x.rows.max(1);
+        let mut entries = vec![BackendProbe {
+            cols,
+            k,
+            mode: key.clone(),
+            backend: CPU_BACKEND_ID.to_string(),
+            secs: Some(cpu_secs),
+            rows: cpu_rows,
+            chosen: false,
+        }];
+        let mut best_id = CPU_BACKEND_ID.to_string();
+        let mut best_per_row = cpu_secs / cpu_rows as f64;
+        for b in self.backends.accelerators() {
+            if !b.supports(cols, k, mode) {
+                continue;
+            }
+            let probe =
+                calibrate::time_backend(b.as_ref(), x, k, mode, self.cfg.calib_reps);
+            if let Some((secs, rows)) = probe {
+                let per_row = secs / rows.max(1) as f64;
+                if per_row < best_per_row {
+                    best_id = b.id().to_string();
+                    best_per_row = per_row;
+                }
+            }
+            entries.push(BackendProbe {
+                cols,
+                k,
+                mode: key.clone(),
+                backend: b.id().to_string(),
+                secs: probe.map(|(s, _)| s),
+                rows: probe.map(|(_, r)| r).unwrap_or(0),
+                chosen: false,
+            });
+        }
+        for e in &mut entries {
+            e.chosen = e.backend == best_id;
+        }
+        self.probe_log.lock().unwrap().extend(entries);
+        best_id
+    }
+
+    fn decide(&self, cols: usize, k: usize, mode: Mode, base_grain: usize) -> Plan {
+        if self.cfg.calib_rows == 0 {
+            // model-only: the prior's pick at the default grain, and
+            // the manifest prior for the backend
+            let ranked = model::rank(&candidates(cols, k, mode), cols, k);
+            return Plan {
+                backend: self.prior_backend(cols, k, mode),
+                algo: ranked[0].0,
+                grain: base_grain,
+                source: PlanSource::Model,
+            };
+        }
+        // one probe workload serves the algorithm race, the grain
+        // neighborhood, and the backend race
+        let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
+        let (algo, grain, secs) = self.race_cpu_on(&x, cols, k, mode, base_grain);
+        let backend = self.race_backends_on(&x, cols, k, mode, secs);
+        Plan { backend, algo, grain, source: PlanSource::Calibrated }
+    }
+
+    /// Decide under an operator pin: the algorithm pin fixes the CPU
+    /// algorithm (grain still calibrated), the backend pin fixes the
+    /// backend for shapes it supports; whichever dimension is unpinned
+    /// is decided the normal way.
+    fn decide_forced(&self, cols: usize, k: usize, mode: Mode, base_grain: usize) -> Plan {
+        if self.cfg.calib_rows == 0 {
+            let algo = self.forced_algo(mode).unwrap_or_else(|| {
+                model::rank(&candidates(cols, k, mode), cols, k)[0].0
+            });
+            let backend = self
+                .forced_backend_for(cols, k, mode)
+                .unwrap_or_else(|| self.prior_backend(cols, k, mode));
+            return Plan { backend, algo, grain: base_grain, source: PlanSource::Forced };
+        }
+        let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
+        let (algo, grain, secs) = match self.forced_algo(mode) {
+            Some(algo) => {
+                let base_secs = calibrate::time_candidate(
+                    &x,
+                    k,
+                    algo,
+                    base_grain,
+                    self.cfg.calib_reps,
+                );
+                let (grain, secs) = calibrate::pick_grain_timed(
+                    &x,
+                    k,
+                    algo,
+                    self.cfg.calib_reps,
+                    base_grain,
+                    base_secs,
+                );
+                (algo, grain, secs)
+            }
+            None => self.race_cpu_on(&x, cols, k, mode, base_grain),
+        };
+        let backend = match self.forced_backend_for(cols, k, mode) {
+            Some(id) => id,
+            None => self.race_backends_on(&x, cols, k, mode, secs),
+        };
+        Plan { backend, algo, grain, source: PlanSource::Forced }
+    }
+
+    /// Plan + execute one matrix: through the plan's backend when it is
+    /// an accelerator (falling back to the CPU engine on error), else
+    /// directly on the CPU engine.
     pub fn run(&self, x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
         let plan = self.plan(x.cols, k, mode);
+        if plan.backend != CPU_BACKEND_ID {
+            if let Some(b) = self.backends.get(&plan.backend) {
+                if let Ok(mut v) = b.execute(&plan.spec(), &[x], k, mode) {
+                    if v.len() == 1 {
+                        return v.remove(0);
+                    }
+                }
+            }
+        }
         rowwise_topk_grained(x, k, plan.algo, plan.grain)
     }
 
     /// Persist the cache if a path is configured (no-op otherwise).
+    /// Only the adaptive cache is written: pinned (forced) decisions
+    /// never reach disk.
     pub fn save(&self) -> Result<(), String> {
         match &self.cfg.cache_path {
             Some(path) => self.cache.save(path),
@@ -376,8 +636,8 @@ impl Planner {
 static GLOBAL: OnceLock<Planner> = OnceLock::new();
 
 /// The process-wide planner behind
-/// [`crate::topk::rowwise::rowwise_topk_auto`] (default knobs, no
-/// persistence). Services build their own [`Planner`] from
+/// [`crate::topk::rowwise::rowwise_topk_auto`] (default knobs, CPU-only
+/// registry, no persistence). Services build their own [`Planner`] from
 /// `ServeConfig` instead.
 pub fn global() -> &'static Planner {
     GLOBAL.get_or_init(|| Planner::new(PlannerConfig::default()))
@@ -417,6 +677,21 @@ mod tests {
         assert_eq!(p.cache().len(), 1);
         p.plan(128, 16, Mode::EarlyStop { max_iter: 4 });
         assert_eq!(p.cache().len(), 2);
+    }
+
+    #[test]
+    fn cpu_only_planner_always_plans_the_cpu_backend() {
+        let p = quick_planner();
+        assert_eq!(p.plan(128, 16, Mode::EXACT).backend, CPU_BACKEND_ID);
+        assert_eq!(
+            p.plan(128, 16, Mode::EarlyStop { max_iter: 4 }).backend,
+            CPU_BACKEND_ID
+        );
+        // the race logged the cpu probe as chosen
+        let log = p.probe_log();
+        assert!(!log.is_empty());
+        assert!(log.iter().all(|e| e.backend == CPU_BACKEND_ID && e.chosen));
+        assert!(log.iter().all(|e| e.secs.is_some()));
     }
 
     #[test]
@@ -471,7 +746,12 @@ mod tests {
             96,
             8,
             "exact",
-            Plan { algo: RowAlgo::Radix, grain: 4, source: PlanSource::Cached },
+            Plan {
+                backend: CPU_BACKEND_ID.into(),
+                algo: RowAlgo::Radix,
+                grain: 4,
+                source: PlanSource::Cached,
+            },
         );
         assert_eq!(p.plan(96, 8, Mode::EXACT).algo, RowAlgo::Heap);
         assert_eq!(
@@ -489,11 +769,14 @@ mod tests {
         });
         let plan = p.plan(256, 32, Mode::EXACT);
         assert_eq!(plan.source, PlanSource::Model);
+        assert_eq!(plan.backend, CPU_BACKEND_ID, "no accelerators registered");
         // the prior must not pick the provably-expensive tail (the
         // exact winner between rtopk and the cheap two-pass baselines
         // is the calibrator's call, not the prior's)
         assert_ne!(plan.algo, RowAlgo::Sort);
         assert_ne!(plan.algo, RowAlgo::Bitonic);
+        // model-only decisions do not probe backends
+        assert!(p.probe_log().is_empty());
     }
 
     #[test]
@@ -539,7 +822,53 @@ mod tests {
         let recalled = q.plan(96, 12, Mode::EXACT);
         assert_eq!(recalled.algo, decided.algo);
         assert_eq!(recalled.grain, decided.grain);
+        assert_eq!(recalled.backend, decided.backend);
         assert_eq!(recalled.source, PlanSource::Cached);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cached_plan_for_a_missing_backend_is_rederived() {
+        let p = quick_planner();
+        // simulate a persisted plan naming a backend this process does
+        // not carry (e.g. a pjrt-calibrated cache reused in a CPU-only
+        // build)
+        p.cache().insert(
+            80,
+            8,
+            "exact",
+            Plan {
+                backend: "pjrt".into(),
+                algo: RowAlgo::RTopK(Mode::EXACT),
+                grain: 64,
+                source: PlanSource::Cached,
+            },
+        );
+        let plan = p.plan(80, 8, Mode::EXACT);
+        assert_eq!(plan.backend, CPU_BACKEND_ID);
+        assert_eq!(plan.source, PlanSource::Calibrated, "re-decided, not trusted");
+        // and the re-decision replaced the stale entry
+        assert_eq!(p.cache().get(80, 8, "exact").unwrap().backend, CPU_BACKEND_ID);
+    }
+
+    #[test]
+    fn forced_backend_pin_stays_in_the_session_cache() {
+        let p = Planner::new(PlannerConfig {
+            force_backend: Some(CPU_BACKEND_ID.to_string()),
+            calib_rows: 32,
+            calib_reps: 1,
+            ..PlannerConfig::default()
+        });
+        let plan = p.plan(64, 8, Mode::EXACT);
+        assert_eq!(plan.backend, CPU_BACKEND_ID);
+        assert_eq!(plan.source, PlanSource::Forced);
+        assert_eq!(p.cache().len(), 0, "pins must not touch the adaptive cache");
+        // an unknown pinned backend still serves (cpu fallback)
+        let q = Planner::new(PlannerConfig {
+            force_backend: Some("warp9".to_string()),
+            calib_rows: 0,
+            ..PlannerConfig::default()
+        });
+        assert_eq!(q.plan(64, 8, Mode::EXACT).backend, CPU_BACKEND_ID);
     }
 }

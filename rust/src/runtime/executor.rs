@@ -8,7 +8,7 @@ use crate::runtime::store::ArtifactStore;
 use crate::runtime::tensor::HostTensor;
 use anyhow::{anyhow, Result};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 enum Request {
@@ -24,10 +24,13 @@ enum Request {
     Shutdown,
 }
 
-/// Handle to the executor thread. Clone freely across threads.
+/// Handle to the executor thread. Clone freely across threads —
+/// `mpsc::Sender` is itself `Clone` and internally synchronized, so the
+/// handle stores it directly (a mutex around a sender would serialize
+/// nothing the channel does not already order).
 #[derive(Clone)]
 pub struct ExecutorHandle {
-    tx: Arc<Mutex<mpsc::Sender<Request>>>,
+    tx: mpsc::Sender<Request>,
     manifest: Arc<Manifest>,
     platform: String,
 }
@@ -48,8 +51,6 @@ impl ExecutorHandle {
     pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .lock()
-            .unwrap()
             .send(Request::Execute { name: name.to_string(), inputs, reply })
             .map_err(|_| anyhow!("executor thread is gone"))?;
         rx.recv().map_err(|_| anyhow!("executor dropped reply"))?
@@ -59,8 +60,6 @@ impl ExecutorHandle {
     pub fn precompile(&self, names: &[&str]) -> Result<()> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .lock()
-            .unwrap()
             .send(Request::Precompile {
                 names: names.iter().map(|s| s.to_string()).collect(),
                 reply,
@@ -119,7 +118,7 @@ impl Executor {
             .recv()
             .map_err(|_| anyhow!("executor died during startup"))??;
         let handle = ExecutorHandle {
-            tx: Arc::new(Mutex::new(tx.clone())),
+            tx: tx.clone(),
             manifest: Arc::new(manifest),
             platform,
         };

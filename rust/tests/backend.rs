@@ -1,0 +1,371 @@
+//! Integration: planner-owned backend selection.
+//!
+//! These tests run without real artifacts: a synthetic manifest (plus
+//! stub `.hlo.txt` files) is enough to build the PJRT backend's variant
+//! table and exercise registration, routing priors, probe skipping
+//! (the stub PJRT build always fails to execute — exactly the
+//! "no artifacts here" situation the calibrator must survive), and the
+//! forced-pin persistence rules.
+
+use rtopk::backend::{
+    BackendRegistry, ExecBackend, ExecSpec, TileTable, CPU_BACKEND_ID,
+    PJRT_BACKEND_ID,
+};
+use rtopk::config::BackendConfig;
+use rtopk::plan::{
+    mode_key, tile_mode_key, PlanCache, PlanSource, Planner, PlannerConfig,
+};
+use rtopk::runtime::executor::Executor;
+use rtopk::runtime::manifest::Manifest;
+use rtopk::topk::rowwise::rowwise_topk_grained;
+use rtopk::topk::types::{Mode, TopKResult};
+use rtopk::topk::verify::is_exact;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+const MANIFEST: &str = r#"{
+  "version": 1, "artifact_set": "synthetic",
+  "artifacts": {
+    "rtopk_1024x256_k32_exact": {
+      "path": "a.hlo.txt",
+      "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+      "outputs": [{"shape": [1024, 32], "dtype": "float32"},
+                   {"shape": [1024, 32], "dtype": "int32"},
+                   {"shape": [1024, 256], "dtype": "float32"}],
+      "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256, "k": 32,
+                "mode": "exact", "max_iter": 0}
+    },
+    "rtopk_1024x256_k32_es4": {
+      "path": "b.hlo.txt",
+      "inputs": [{"shape": [1024, 256], "dtype": "float32"}],
+      "outputs": [{"shape": [1024, 32], "dtype": "float32"},
+                   {"shape": [1024, 32], "dtype": "int32"},
+                   {"shape": [1024, 256], "dtype": "float32"}],
+      "meta": {"kind": "rtopk_tile", "rows": 1024, "m": 256, "k": 32,
+                "mode": "early_stop", "max_iter": 4}
+    },
+    "train_x": {
+      "path": "c.hlo.txt", "inputs": [], "outputs": [],
+      "meta": {"kind": "train_step"}
+    }
+  }
+}"#;
+
+/// Write a synthetic artifacts dir (manifest + stub HLO files) under a
+/// unique temp path; each test gets its own so parallel tests never
+/// collide.
+fn synth_artifacts(label: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("rtopk_backend_it_{label}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), MANIFEST).unwrap();
+    for f in ["a.hlo.txt", "b.hlo.txt", "c.hlo.txt"] {
+        std::fs::write(dir.join(f), "HloModule synthetic_stub").unwrap();
+    }
+    dir
+}
+
+fn synth_registry(label: &str) -> (Arc<BackendRegistry>, Executor) {
+    let dir = synth_artifacts(label);
+    let exec = Executor::spawn(dir.to_str().unwrap()).unwrap();
+    let registry = Arc::new(BackendRegistry::with_manifest(
+        &BackendConfig::default(),
+        exec.handle(),
+    ));
+    (registry, exec)
+}
+
+#[test]
+fn registry_routes_compiled_shapes_to_pjrt_and_falls_back_to_cpu() {
+    let (registry, _exec) = synth_registry("routing");
+    assert!(registry.contains(PJRT_BACKEND_ID));
+    assert_eq!(registry.variants().len(), 2, "train_x is not a tile");
+
+    // model-only planning (calib_rows = 0) uses the manifest prior —
+    // the old router's rule: a compiled tile wins its shape
+    let planner = Planner::with_backends(
+        PlannerConfig { calib_rows: 0, ..PlannerConfig::default() },
+        registry.clone(),
+    );
+    assert_eq!(planner.plan(256, 32, Mode::EXACT).backend, PJRT_BACKEND_ID);
+    assert_eq!(
+        planner.plan(256, 32, Mode::EarlyStop { max_iter: 4 }).backend,
+        PJRT_BACKEND_ID
+    );
+    // no tile -> CPU engine
+    assert_eq!(planner.plan(512, 32, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(planner.plan(256, 16, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(
+        planner.plan(256, 32, Mode::EarlyStop { max_iter: 7 }).backend,
+        CPU_BACKEND_ID
+    );
+    // a loose-eps exact request is approximate: it must not match the
+    // exact tile
+    assert_eq!(
+        planner.plan(256, 32, Mode::Exact { eps_rel: 1e-4 }).backend,
+        CPU_BACKEND_ID
+    );
+}
+
+#[test]
+fn deny_and_disable_keep_pjrt_out_of_the_registry() {
+    let dir = synth_artifacts("deny");
+    let exec = Executor::spawn(dir.to_str().unwrap()).unwrap();
+    let denied = BackendRegistry::with_manifest(
+        &BackendConfig { deny: vec!["pjrt".into()], ..BackendConfig::default() },
+        exec.handle(),
+    );
+    assert!(!denied.contains(PJRT_BACKEND_ID));
+    assert_eq!(denied.ids(), vec![CPU_BACKEND_ID.to_string()]);
+    let disabled = BackendRegistry::with_manifest(
+        &BackendConfig { enable: false, ..BackendConfig::default() },
+        exec.handle(),
+    );
+    assert!(!disabled.contains(PJRT_BACKEND_ID));
+}
+
+#[test]
+fn calibration_probes_skip_the_stub_pjrt_cleanly() {
+    let (registry, _exec) = synth_registry("probe");
+    // with calibration on, the pjrt probe *runs* — and fails, because
+    // this build carries the xla stub — so the measured winner is cpu
+    let planner = Planner::with_backends(
+        PlannerConfig { calib_rows: 32, calib_reps: 1, ..PlannerConfig::default() },
+        registry,
+    );
+    let plan = planner.plan(256, 32, Mode::EXACT);
+    assert_eq!(plan.source, PlanSource::Calibrated);
+    assert_eq!(plan.backend, CPU_BACKEND_ID, "failed probe must not win");
+
+    let log = planner.probe_log();
+    let pjrt: Vec<_> =
+        log.iter().filter(|p| p.backend == PJRT_BACKEND_ID).collect();
+    assert_eq!(pjrt.len(), 1, "pjrt was probed exactly once for the shape");
+    assert!(pjrt[0].secs.is_none(), "stub probe records as skipped");
+    assert!(!pjrt[0].chosen);
+    let cpu: Vec<_> =
+        log.iter().filter(|p| p.backend == CPU_BACKEND_ID).collect();
+    assert_eq!(cpu.len(), 1);
+    assert!(cpu[0].secs.is_some(), "cpu is measured with the same harness");
+    assert!(cpu[0].chosen);
+
+    // shapes pjrt does not support at all are not probed
+    planner.plan(512, 32, Mode::EXACT);
+    let log = planner.probe_log();
+    assert!(log
+        .iter()
+        .filter(|p| p.cols == 512)
+        .all(|p| p.backend == CPU_BACKEND_ID));
+}
+
+#[test]
+fn mode_key_keeps_exact_and_early_stop_variants_distinct() {
+    assert_eq!(mode_key(Mode::EXACT), "exact");
+    assert_eq!(mode_key(Mode::EarlyStop { max_iter: 4 }), "es4");
+    assert_ne!(
+        mode_key(Mode::EarlyStop { max_iter: 4 }),
+        mode_key(Mode::EarlyStop { max_iter: 8 })
+    );
+    assert_ne!(mode_key(Mode::Exact { eps_rel: 1e-4 }), "exact");
+    // tiles are indexed through the same key function requests look up
+    // with — manifest metadata round-trips through mode_key
+    assert_eq!(tile_mode_key("exact", 0).as_deref(), Some("exact"));
+    assert_eq!(tile_mode_key("early_stop", 4).as_deref(), Some("es4"));
+    assert_eq!(tile_mode_key("warp9", 0), None);
+
+    // the tile table inherits the distinction
+    let tiles = TileTable::from_manifest(&Manifest::parse(MANIFEST).unwrap());
+    assert_eq!(
+        tiles.lookup(256, 32, Mode::EXACT).map(|(n, _)| n),
+        Some("rtopk_1024x256_k32_exact")
+    );
+    assert_eq!(
+        tiles
+            .lookup(256, 32, Mode::EarlyStop { max_iter: 4 })
+            .map(|(n, _)| n),
+        Some("rtopk_1024x256_k32_es4")
+    );
+    assert!(tiles.lookup(256, 32, Mode::EarlyStop { max_iter: 8 }).is_none());
+    assert!(tiles.lookup(256, 32, Mode::Exact { eps_rel: 1e-4 }).is_none());
+}
+
+#[test]
+fn stale_cached_plan_for_a_vanished_tile_is_rederived_not_dispatched() {
+    // artifacts regenerated without a tile: the backend id is still
+    // registered, but the shape it was cached for no longer exists —
+    // trusting the plan would error (and eventually quarantine pjrt)
+    // on every batch of the shape
+    let (registry, _exec) = synth_registry("stale");
+    let planner = Planner::with_backends(
+        PlannerConfig { calib_rows: 0, ..PlannerConfig::default() },
+        registry,
+    );
+    planner.cache().insert(
+        512,
+        32,
+        "exact",
+        rtopk::plan::Plan {
+            backend: PJRT_BACKEND_ID.into(),
+            algo: rtopk::topk::rowwise::RowAlgo::RTopK(Mode::EXACT),
+            grain: 64,
+            source: PlanSource::Cached,
+        },
+    );
+    let plan = planner.plan(512, 32, Mode::EXACT);
+    assert_eq!(plan.backend, CPU_BACKEND_ID, "unsupported shape re-decided");
+    // a cached plan whose tile still exists is trusted as-is
+    planner.cache().insert(
+        256,
+        32,
+        "exact",
+        rtopk::plan::Plan {
+            backend: PJRT_BACKEND_ID.into(),
+            algo: rtopk::topk::rowwise::RowAlgo::RTopK(Mode::EXACT),
+            grain: 64,
+            source: PlanSource::Cached,
+        },
+    );
+    assert_eq!(planner.plan(256, 32, Mode::EXACT).backend, PJRT_BACKEND_ID);
+}
+
+#[test]
+fn forced_backend_pins_never_reach_the_persisted_cache() {
+    let (registry, _exec) = synth_registry("pin");
+    let path = std::env::temp_dir().join(format!(
+        "rtopk_backend_pin_cache_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let planner = Planner::with_backends(
+        PlannerConfig {
+            force_backend: Some(PJRT_BACKEND_ID.to_string()),
+            calib_rows: 0,
+            cache_path: Some(path.clone()),
+            ..PlannerConfig::default()
+        },
+        registry,
+    );
+    let pinned = planner.plan(256, 32, Mode::EXACT);
+    assert_eq!(pinned.backend, PJRT_BACKEND_ID);
+    assert_eq!(pinned.source, PlanSource::Forced);
+    // the pin resolves to cpu where pjrt has no tile — still forced,
+    // still session-only
+    assert_eq!(planner.plan(512, 32, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(planner.cache().len(), 0, "pins bypass the adaptive cache");
+    planner.save().unwrap();
+    let reloaded = PlanCache::new();
+    assert_eq!(
+        reloaded.load(&path).unwrap(),
+        0,
+        "a pinned session persists zero plans"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A correct, countable backend: results come from the CPU engine, but
+/// every group execution is tallied so tests can prove dispatch went
+/// through the backend handle.
+struct CountingBackend {
+    cols: usize,
+    calls: AtomicUsize,
+}
+
+impl ExecBackend for CountingBackend {
+    fn id(&self) -> &str {
+        "mock"
+    }
+    fn describe(&self) -> String {
+        "counting test backend".into()
+    }
+    fn supports(&self, cols: usize, _k: usize, _mode: Mode) -> bool {
+        cols == self.cols
+    }
+    fn execute(
+        &self,
+        spec: &ExecSpec,
+        mats: &[&RowMatrix],
+        k: usize,
+        _mode: Mode,
+    ) -> anyhow::Result<Vec<TopKResult>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        Ok(mats
+            .iter()
+            .map(|x| rowwise_topk_grained(x, k, spec.algo, spec.grain))
+            .collect())
+    }
+}
+
+#[test]
+fn custom_backends_are_measured_and_dispatched_like_any_other() {
+    let mock = Arc::new(CountingBackend { cols: 48, calls: AtomicUsize::new(0) });
+    let mut registry = BackendRegistry::cpu_only();
+    registry.register(mock.clone());
+    assert_eq!(registry.ids(), vec!["cpu".to_string(), "mock".to_string()]);
+    let registry = Arc::new(registry);
+
+    // adaptive: the mock is probed with the same harness as the CPU
+    // algorithms (whoever wins, the probe itself must be recorded)
+    let adaptive = Planner::with_backends(
+        PlannerConfig { calib_rows: 32, calib_reps: 1, ..PlannerConfig::default() },
+        registry.clone(),
+    );
+    adaptive.plan(48, 6, Mode::EXACT);
+    let probes = adaptive.probe_log();
+    let mock_probe = probes
+        .iter()
+        .find(|p| p.backend == "mock")
+        .expect("mock backend was probed");
+    assert!(mock_probe.secs.is_some(), "working backend measures cleanly");
+    assert!(adaptive.probe_log().iter().any(|p| p.chosen));
+
+    // pinned: execution demonstrably flows through the backend handle
+    let pinned = Planner::with_backends(
+        PlannerConfig {
+            force_backend: Some("mock".into()),
+            calib_rows: 0,
+            ..PlannerConfig::default()
+        },
+        registry,
+    );
+    let before = mock.calls.load(Ordering::SeqCst);
+    let mut rng = Rng::seed_from(7);
+    let x = RowMatrix::random_normal(25, 48, &mut rng);
+    let res = pinned.run(&x, 6, Mode::EXACT);
+    assert!(is_exact(&x, &res));
+    assert!(
+        mock.calls.load(Ordering::SeqCst) > before,
+        "run() dispatched through the pinned backend"
+    );
+    // shapes outside the mock's support run the CPU engine
+    assert_eq!(pinned.plan(64, 6, Mode::EXACT).backend, CPU_BACKEND_ID);
+}
+
+#[test]
+fn cached_plans_are_keyed_by_backend_and_survive_roundtrip() {
+    let path = std::env::temp_dir().join(format!(
+        "rtopk_backend_roundtrip_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let cfg = PlannerConfig {
+        calib_rows: 32,
+        calib_reps: 1,
+        cache_path: Some(path.clone()),
+        ..PlannerConfig::default()
+    };
+    let p = Planner::new(cfg.clone());
+    let decided = p.plan(96, 12, Mode::EXACT);
+    assert_eq!(decided.backend, CPU_BACKEND_ID);
+    p.save().unwrap();
+    // the persisted document records the backend id per entry
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.contains("\"backend\":\"cpu\""), "doc: {text}");
+    let q = Planner::new(cfg);
+    let recalled = q.plan(96, 12, Mode::EXACT);
+    assert_eq!(recalled.backend, decided.backend);
+    assert_eq!(recalled.algo, decided.algo);
+    assert_eq!(recalled.source, PlanSource::Cached);
+    let _ = std::fs::remove_file(&path);
+}

@@ -3,7 +3,7 @@
 //! training loop -> the served top-k of trained activations. This is
 //! the test-suite twin of `examples/gnn_training.rs`.
 
-use rtopk::config::ServeConfig;
+use rtopk::config::{BackendConfig, ServeConfig};
 use rtopk::coordinator::{TopKService, Trainer};
 use rtopk::runtime::executor::Executor;
 use rtopk::topk::types::Mode;
@@ -33,10 +33,17 @@ fn train_then_serve_composes() {
     assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
     drop(exec);
 
-    // phase 2: serve top-k requests (PJRT tiles + CPU fallback mixed)
+    // phase 2: serve top-k requests (PJRT tiles + CPU fallback mixed).
+    // The backend is pinned so the accelerator path is exercised
+    // deterministically; adaptive selection would use PJRT only where
+    // it measures faster than the CPU engine on this host.
     let svc = TopKService::start(&ServeConfig {
         artifacts_dir: artifacts_dir(),
         workers: 2,
+        backend: BackendConfig {
+            force: Some("pjrt".into()),
+            ..BackendConfig::default()
+        },
         ..Default::default()
     })
     .unwrap();

@@ -2,7 +2,7 @@
 //! the CPU route, checking they agree and the coordinator behaves under
 //! concurrent load.
 
-use rtopk::config::ServeConfig;
+use rtopk::config::{BackendConfig, ServeConfig};
 use rtopk::coordinator::TopKService;
 use rtopk::topk::types::Mode;
 use rtopk::topk::verify::{approx_metrics, is_exact};
@@ -18,11 +18,19 @@ fn have_artifacts() -> bool {
     std::path::Path::new(&artifacts_dir()).join("manifest.json").exists()
 }
 
+/// A service pinned to the PJRT backend so these tests exercise the
+/// accelerator path deterministically (adaptive selection would run
+/// PJRT only where it *measures* faster than the CPU engine on the
+/// test host). Shapes without a compiled tile still fall back to CPU.
 fn pjrt_service() -> TopKService {
     TopKService::start(&ServeConfig {
         artifacts_dir: artifacts_dir(),
         workers: 2,
         max_wait_us: 100,
+        backend: BackendConfig {
+            force: Some("pjrt".into()),
+            ..BackendConfig::default()
+        },
         ..Default::default()
     })
     .unwrap()
