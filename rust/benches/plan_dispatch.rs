@@ -1,20 +1,24 @@
 //! Planner dispatch sweep over the Fig. 4 grid (M in {256, 512, 768},
-//! k in {16, 32, 64, 96, 128}, exact mode): auto-dispatch
-//! (`rowwise_topk_auto` through a calibrated planner) versus every
-//! fixed algorithm the planner could have chosen.
+//! k in {16, 32, 64, 96, 128}, exact mode) crossed with a batch-rows
+//! sweep covering every planner row bucket: auto-dispatch
+//! (`rowwise_topk_auto` through a calibrated planner, which keys plans
+//! per row bucket) versus every fixed algorithm the planner could have
+//! chosen at that batch size.
 //!
 //! Acceptance: auto throughput >= 0.95x the best fixed algorithm at
 //! every grid point, and > 1.1x the worst. Results are emitted as a
-//! JSON document (last line of output) for machine checking:
+//! JSON document (last line of output) for machine checking; each grid
+//! point carries its `rows` and `rows_bucket`:
 //!
-//!   cargo bench --bench plan_dispatch               (N = 2^13)
-//!   RTOPK_QUICK=1 cargo bench --bench plan_dispatch (N = 2^11)
+//!   cargo bench --bench plan_dispatch               (rows sweep 64/512/4096)
+//!   RTOPK_QUICK=1 cargo bench --bench plan_dispatch (rows sweep 64/512)
 //!   RTOPK_SMOKE=1 cargo bench --bench plan_dispatch (CI: tiny shapes,
-//!       schema check only — the perf gate is skipped because shared
-//!       runners are too noisy to enforce throughput ratios)
+//!       rows sweep 32/256, schema check only — the perf gate is
+//!       skipped because shared runners are too noisy to enforce
+//!       throughput ratios)
 
 use rtopk::bench::{workload, Table};
-use rtopk::plan::{candidates, Planner, PlannerConfig};
+use rtopk::plan::{candidates, Planner, PlannerConfig, RowBucket};
 use rtopk::topk::rowwise::rowwise_topk_with;
 use rtopk::topk::types::Mode;
 use rtopk::util::json::{self, Value};
@@ -28,12 +32,13 @@ fn median_secs(f: impl FnMut()) -> f64 {
 fn main() {
     let smoke = std::env::var("RTOPK_SMOKE").is_ok();
     let quick = smoke || std::env::var("RTOPK_QUICK").is_ok();
-    let n = if smoke {
-        1 << 9
+    // batch sizes, one per planner row bucket where the budget allows
+    let rows_list: Vec<usize> = if smoke {
+        vec![32, 256]
     } else if quick {
-        1 << 11
+        vec![64, 512]
     } else {
-        1 << 13
+        vec![64, 512, 4096]
     };
     let ms: Vec<usize> = if smoke { vec![64, 128] } else { vec![256, 512, 768] };
     let ks: Vec<usize> = if smoke { vec![8, 16] } else { vec![16, 32, 64, 96, 128] };
@@ -45,72 +50,80 @@ fn main() {
     });
 
     let mut t = Table::new(
-        &format!("plan dispatch vs fixed algorithms (N={n}, exact) — Mrows/s"),
-        &["M", "k", "auto (algo)", "auto", "best fixed", "worst fixed",
-          "auto/best", "auto/worst"],
+        "plan dispatch vs fixed algorithms (exact) — Mrows/s",
+        &["rows", "bucket", "M", "k", "auto (algo)", "auto", "best fixed",
+          "worst fixed", "auto/best", "auto/worst"],
     );
     let mut points = Vec::new();
     let mut min_vs_best = f64::INFINITY;
     let mut min_vs_worst = f64::INFINITY;
 
-    for &m in &ms {
-        for &k in &ks {
-            let x = workload(n, m, 0x9_1A_4 + (m * 131 + k) as u64);
-            // decide (and calibrate) outside the timed region: the plan
-            // is a one-time per-shape cost in production too
-            let plan = planner.plan(m, k, mode);
+    for &n in &rows_list {
+        let bucket = RowBucket::of(n);
+        for &m in &ms {
+            for &k in &ks {
+                let x = workload(n, m, 0x9_1A_4 + (n * 31 + m * 131 + k) as u64);
+                // decide (and calibrate) outside the timed region: the
+                // plan is a one-time per-keyed-shape cost in production
+                // too
+                let plan = planner.plan(n, m, k, mode);
 
-            let auto_s = median_secs(|| {
-                std::hint::black_box(planner.run(&x, k, mode));
-            });
-
-            let mut fixed: Vec<(String, f64)> = Vec::new();
-            for algo in candidates(m, k, mode) {
-                let s = median_secs(|| {
-                    std::hint::black_box(rowwise_topk_with(&x, k, algo));
+                let auto_s = median_secs(|| {
+                    std::hint::black_box(planner.run(&x, k, mode));
                 });
-                fixed.push((algo.name(), s));
+
+                let mut fixed: Vec<(String, f64)> = Vec::new();
+                for algo in candidates(m, k, mode) {
+                    let s = median_secs(|| {
+                        std::hint::black_box(rowwise_topk_with(&x, k, algo));
+                    });
+                    fixed.push((algo.name(), s));
+                }
+                let (best_name, best_s) = fixed
+                    .iter()
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .cloned()
+                    .unwrap();
+                let (worst_name, worst_s) = fixed
+                    .iter()
+                    .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .cloned()
+                    .unwrap();
+
+                let mrows = |s: f64| n as f64 / s / 1e6;
+                let vs_best = best_s / auto_s; // >= 0.95 wanted
+                let vs_worst = worst_s / auto_s; // > 1.1 wanted
+                min_vs_best = min_vs_best.min(vs_best);
+                min_vs_worst = min_vs_worst.min(vs_worst);
+
+                t.row(vec![
+                    n.to_string(),
+                    bucket.name().to_string(),
+                    m.to_string(),
+                    k.to_string(),
+                    plan.algo.name(),
+                    format!("{:.1}", mrows(auto_s)),
+                    format!("{:.1} ({best_name})", mrows(best_s)),
+                    format!("{:.1} ({worst_name})", mrows(worst_s)),
+                    format!("{vs_best:.3}"),
+                    format!("{vs_worst:.2}"),
+                ]);
+                points.push(json::obj(vec![
+                    ("rows", json::num(n as f64)),
+                    ("rows_bucket", json::s(bucket.name())),
+                    ("cols", json::num(m as f64)),
+                    ("k", json::num(k as f64)),
+                    ("backend", json::s(&plan.backend)),
+                    ("auto_algo", json::s(&plan.algo.name())),
+                    ("auto_mrows_per_s", json::num(mrows(auto_s))),
+                    ("best_fixed_algo", json::s(&best_name)),
+                    ("best_fixed_mrows_per_s", json::num(mrows(best_s))),
+                    ("worst_fixed_algo", json::s(&worst_name)),
+                    ("worst_fixed_mrows_per_s", json::num(mrows(worst_s))),
+                    ("auto_vs_best", json::num(vs_best)),
+                    ("auto_vs_worst", json::num(vs_worst)),
+                ]));
             }
-            let (best_name, best_s) = fixed
-                .iter()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .cloned()
-                .unwrap();
-            let (worst_name, worst_s) = fixed
-                .iter()
-                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                .cloned()
-                .unwrap();
-
-            let mrows = |s: f64| n as f64 / s / 1e6;
-            let vs_best = best_s / auto_s; // >= 0.95 wanted
-            let vs_worst = worst_s / auto_s; // > 1.1 wanted
-            min_vs_best = min_vs_best.min(vs_best);
-            min_vs_worst = min_vs_worst.min(vs_worst);
-
-            t.row(vec![
-                m.to_string(),
-                k.to_string(),
-                plan.algo.name(),
-                format!("{:.1}", mrows(auto_s)),
-                format!("{:.1} ({best_name})", mrows(best_s)),
-                format!("{:.1} ({worst_name})", mrows(worst_s)),
-                format!("{vs_best:.3}"),
-                format!("{vs_worst:.2}"),
-            ]);
-            points.push(json::obj(vec![
-                ("cols", json::num(m as f64)),
-                ("k", json::num(k as f64)),
-                ("backend", json::s(&plan.backend)),
-                ("auto_algo", json::s(&plan.algo.name())),
-                ("auto_mrows_per_s", json::num(mrows(auto_s))),
-                ("best_fixed_algo", json::s(&best_name)),
-                ("best_fixed_mrows_per_s", json::num(mrows(best_s))),
-                ("worst_fixed_algo", json::s(&worst_name)),
-                ("worst_fixed_mrows_per_s", json::num(mrows(worst_s))),
-                ("auto_vs_best", json::num(vs_best)),
-                ("auto_vs_worst", json::num(vs_worst)),
-            ]));
         }
     }
     t.print();
@@ -129,7 +142,14 @@ fn main() {
     );
     let doc: Value = json::obj(vec![
         ("bench", json::s("plan_dispatch")),
-        ("n_rows", json::num(n as f64)),
+        (
+            "n_rows",
+            json::num(rows_list.iter().copied().max().unwrap_or(0) as f64),
+        ),
+        (
+            "rows_sweep",
+            json::arr(rows_list.iter().map(|&r| json::num(r as f64)).collect()),
+        ),
         ("mode", json::s("exact")),
         ("smoke", Value::Bool(smoke)),
         ("grid", json::arr(points)),

@@ -95,16 +95,34 @@ fn strip_comment(line: &str) -> &str {
 /// * `force_algo` — pin one algorithm (`rtopk`, `radix`, `quickselect`,
 ///   `heap`, `bucket`, `bitonic`, `sort`); empty/absent = adaptive.
 ///   Pins are honored only when they cannot change result semantics.
-/// * `calib_rows` — microbenchmark probe rows per candidate; 0 runs on
-///   the cost-model prior alone.
+/// * `calib_rows` — baseline microbenchmark probe rows per candidate;
+///   each row bucket scales its own representative probe from this.
+///   0 runs on the cost-model prior alone.
 /// * `calib_reps` — best-of repetitions per probe.
-/// * `cache_path` — JSON file persisting plans across restarts.
+/// * `cache_path` — JSON file persisting plans across restarts. Plans
+///   are keyed per row bucket and persisted as schema v3: each entry
+///   carries its `rows_bucket`, the raw probe timings behind the
+///   decision, and the race's runner-up; the document carries a host
+///   fingerprint and a `created_unix` stamp. Foreign-host, old-schema
+///   (v1/v2), or expired documents are rejected wholesale and
+///   re-calibrated.
+/// * `cache_ttl_secs` — persisted-cache expiry in seconds (default one
+///   week; 0 = never expires). Calibration is a measurement of a
+///   moment — hosts drift — so stale caches are re-measured.
+/// * `shadow_every` — online shadow re-probing cadence: every Nth
+///   dispatched batch is re-timed against the plan's recorded
+///   runner-up, and a winner whose measured edge inverts past the
+///   hysteresis margin is demoted in place. 0 (default) turns the
+///   mechanism off entirely — dispatch is then exactly the
+///   pre-shadow path.
 #[derive(Clone, Debug)]
 pub struct PlanConfig {
     pub force_algo: Option<String>,
     pub calib_rows: usize,
     pub calib_reps: usize,
     pub cache_path: Option<String>,
+    pub cache_ttl_secs: u64,
+    pub shadow_every: usize,
 }
 
 /// Hand-written (not derived): a derived Default would zero
@@ -117,6 +135,10 @@ impl Default for PlanConfig {
             calib_rows: 192,
             calib_reps: 3,
             cache_path: None,
+            // one week — keep in sync with plan::cache::DEFAULT_TTL_SECS
+            // (this module must stay free of plan-layer dependencies)
+            cache_ttl_secs: 7 * 24 * 3600,
+            shadow_every: 0,
         }
     }
 }
@@ -135,6 +157,8 @@ impl PlanConfig {
                 .get("plan.cache_path")
                 .filter(|s| !s.is_empty())
                 .map(|s| s.to_string()),
+            cache_ttl_secs: c.get_or("plan.cache_ttl_secs", d.cache_ttl_secs),
+            shadow_every: c.get_or("plan.shadow_every", d.shadow_every),
         }
     }
 }
@@ -203,6 +227,11 @@ pub struct ServeConfig {
     pub workers: usize,
     /// queued-row limit before submissions block (backpressure)
     pub queue_limit: usize,
+    /// reject non-finite (NaN/Inf) client matrices at submit with a
+    /// clear error instead of letting the kernels' branchless IEEE
+    /// compares silently corrupt the selection (default on; disable
+    /// only for callers that guarantee finite inputs themselves)
+    pub validate_inputs: bool,
     /// adaptive-planner knobs for the CPU engine route
     pub plan: PlanConfig,
     /// execution-backend registration / pinning knobs
@@ -217,6 +246,7 @@ impl Default for ServeConfig {
             max_wait_us: 200,
             workers: 2,
             queue_limit: 1 << 16,
+            validate_inputs: true,
             plan: PlanConfig::default(),
             backend: BackendConfig::default(),
         }
@@ -235,6 +265,7 @@ impl ServeConfig {
             max_wait_us: c.get_or("serve.max_wait_us", d.max_wait_us),
             workers: c.get_or("serve.workers", d.workers),
             queue_limit: c.get_or("serve.queue_limit", d.queue_limit),
+            validate_inputs: c.get_or("serve.validate_inputs", d.validate_inputs),
             plan: PlanConfig::from_config(c),
             backend: BackendConfig::from_config(c),
         }
@@ -322,7 +353,8 @@ mod tests {
     fn plan_config_section_parses() {
         let c = Config::parse(
             "[plan]\nforce_algo = \"radix\"\ncalib_rows = 64\n\
-             cache_path = \"plans.json\"",
+             cache_path = \"plans.json\"\ncache_ttl_secs = 3600\n\
+             shadow_every = 32",
         )
         .unwrap();
         let p = PlanConfig::from_config(&c);
@@ -330,9 +362,24 @@ mod tests {
         assert_eq!(p.calib_rows, 64);
         assert_eq!(p.calib_reps, PlanConfig::default().calib_reps);
         assert_eq!(p.cache_path.as_deref(), Some("plans.json"));
+        assert_eq!(p.cache_ttl_secs, 3600);
+        assert_eq!(p.shadow_every, 32);
         // empty string means unset
         let c2 = Config::parse("[plan]\nforce_algo = \"\"").unwrap();
         assert!(PlanConfig::from_config(&c2).force_algo.is_none());
+        // defaults: weekly cache ttl, shadow re-probing off
+        let d = PlanConfig::default();
+        assert_eq!(d.cache_ttl_secs, 7 * 24 * 3600);
+        assert_eq!(d.shadow_every, 0);
+    }
+
+    #[test]
+    fn serve_validate_inputs_knob_parses_and_defaults_on() {
+        assert!(ServeConfig::default().validate_inputs);
+        let c = Config::parse("[serve]\nvalidate_inputs = false").unwrap();
+        assert!(!ServeConfig::from_config(&c).validate_inputs);
+        let c2 = Config::parse("[serve]\nworkers = 2").unwrap();
+        assert!(ServeConfig::from_config(&c2).validate_inputs);
     }
 
     #[test]

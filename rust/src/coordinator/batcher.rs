@@ -6,10 +6,29 @@
 //! (M, k, mode) are packed into one execution batch up to the tile's row
 //! budget. Rows never split across batches mid-request (simplifies
 //! result scatter; tiles are padded anyway).
+//!
+//! Flush policy — no head-of-line blocking across keys:
+//!
+//! * A group that reaches the row budget is flushable *immediately*,
+//!   wherever it sits in the queue. (The old behavior only ever
+//!   examined the head request's group, so a budget-full group behind a
+//!   fresh head of a different key sat until the head's deadline — and
+//!   every idle worker blocked on that same deadline.)
+//! * Deadline flushes go oldest-first: the overall head is by
+//!   construction the request with the earliest deadline, so waiting on
+//!   the head's deadline is waiting on the earliest deadline of any
+//!   group.
+//! * Within a key, FIFO order is preserved (the budget closes at the
+//!   first same-key request that does not fit).
+//!
+//! Bookkeeping is O(1) per wake: per-key running row counts are
+//! maintained on submit/flush (`Inner::group_rows`), and keys that
+//! cross the budget are queued in `Inner::ready` — `next_batch` never
+//! rescans the queue to rediscover group sizes.
 
 use crate::topk::types::Mode;
 use crate::util::matrix::RowMatrix;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -52,9 +71,42 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Hashable form of a request's (cols, k, mode) grouping key. `Mode`
+/// carries an `f32`, so the float is keyed by its bit pattern — two
+/// requests group together iff their modes are bit-identical, exactly
+/// the equality `Mode: PartialEq` uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct GroupKey {
+    cols: usize,
+    k: usize,
+    mode: ModeBits,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum ModeBits {
+    Exact(u32),
+    EarlyStop(u32),
+}
+
+fn key_of<T>(p: &Pending<T>) -> GroupKey {
+    GroupKey {
+        cols: p.matrix.cols,
+        k: p.k,
+        mode: match p.mode {
+            Mode::Exact { eps_rel } => ModeBits::Exact(eps_rel.to_bits()),
+            Mode::EarlyStop { max_iter } => ModeBits::EarlyStop(max_iter),
+        },
+    }
+}
+
 struct Inner<T> {
     queue: VecDeque<Pending<T>>,
     queued_rows: usize,
+    /// running rows per (cols, k, mode) group — updated on submit and
+    /// flush, never recomputed by scanning the queue
+    group_rows: HashMap<GroupKey, usize>,
+    /// keys whose group crossed `max_rows`, in the order they did
+    ready: VecDeque<GroupKey>,
     closed: bool,
 }
 
@@ -76,6 +128,8 @@ impl<T> Batcher<T> {
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
                 queued_rows: 0,
+                group_rows: HashMap::new(),
+                ready: VecDeque::new(),
                 closed: false,
             }),
             work: Condvar::new(),
@@ -96,80 +150,55 @@ impl<T> Batcher<T> {
         if g.closed {
             return false;
         }
-        g.queue.push_back(Pending {
+        let pending = Pending {
             matrix,
             k,
             mode,
             enqueued: Instant::now(),
             reply,
-        });
+        };
+        let key = key_of(&pending);
+        g.queue.push_back(pending);
         g.queued_rows += rows;
+        let group = g.group_rows.entry(key).or_insert(0);
+        let was_ready = *group >= self.policy.max_rows;
+        *group += rows;
+        let now_ready = *group >= self.policy.max_rows;
+        if now_ready && !was_ready && !g.ready.contains(&key) {
+            g.ready.push_back(key);
+        }
         drop(g);
         self.work.notify_one();
         true
     }
 
-    /// Pull the next batch: groups the head request with every queued
-    /// request sharing its (cols, k, mode) up to the row budget. Blocks
-    /// until the head's deadline passes, the budget fills, or close.
-    /// Returns None when closed and drained.
+    /// Pull the next batch. Flush order: any group that reached the row
+    /// budget (wherever it is in the queue), else the head group once
+    /// its deadline passes — the head is the oldest request, so no
+    /// other group's deadline can be earlier. Blocks otherwise. Returns
+    /// None when closed and drained.
     pub fn next_batch(&self) -> Option<Batch<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
+            // budget-full groups flush immediately, independent of the
+            // head's deadline
+            while let Some(key) = g.ready.pop_front() {
+                // the entry may be stale (another worker drained the
+                // group past a deadline flush); re-check the live count
+                if g.group_rows.get(&key).copied().unwrap_or(0)
+                    >= self.policy.max_rows
+                {
+                    return Some(self.finish_flush(g, key));
+                }
+            }
             if let Some(head) = g.queue.front() {
                 let deadline = head.enqueued + self.policy.max_wait;
-                let key = (head.matrix.cols, head.k, head.mode);
-                // rows already queued for this group
-                let group_rows: usize = g
-                    .queue
-                    .iter()
-                    .filter(|p| (p.matrix.cols, p.k, p.mode) == key)
-                    .map(|p| p.matrix.rows)
-                    .sum();
+                let key = key_of(head);
                 let now = Instant::now();
-                if group_rows >= self.policy.max_rows || now >= deadline || g.closed {
-                    // Flush: take matching requests while they fit the
-                    // tile budget. The budget check must include the
-                    // candidate's own rows — checking `total_rows <
-                    // max_rows` *before* adding (the old behavior) let
-                    // one large request blow the budget arbitrarily.
-                    // The head is always admitted even when it alone
-                    // exceeds the budget (oversized requests get a
-                    // dedicated batch; they must still be served), and
-                    // the first same-key request that does not fit
-                    // closes the budget — admitting later smaller ones
-                    // would serve them ahead of it (FIFO per shape).
-                    let mut items = Vec::new();
-                    let mut total_rows = 0usize;
-                    let mut rest = VecDeque::new();
-                    let mut budget_open = true;
-                    while let Some(p) = g.queue.pop_front() {
-                        let pkey = (p.matrix.cols, p.k, p.mode);
-                        if pkey == key && budget_open {
-                            let fits = total_rows + p.matrix.rows
-                                <= self.policy.max_rows;
-                            if items.is_empty() || fits {
-                                total_rows += p.matrix.rows;
-                                items.push(p);
-                                continue;
-                            }
-                            budget_open = false;
-                        }
-                        rest.push_back(p);
-                    }
-                    g.queue = rest;
-                    g.queued_rows -= total_rows;
-                    drop(g);
-                    self.space.notify_all();
-                    return Some(Batch {
-                        cols: key.0,
-                        k: key.1,
-                        mode: key.2,
-                        items,
-                        total_rows,
-                    });
+                if g.closed || now >= deadline {
+                    return Some(self.finish_flush(g, key));
                 }
-                // wait for more work or the deadline
+                // wait for more work (a group may fill) or the deadline
                 let (ng, _) = self
                     .work
                     .wait_timeout(g, deadline.saturating_duration_since(now))
@@ -183,6 +212,81 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Flush `key` out of the locked queue, then release the lock and
+    /// wake the right parties: producers always (rows drained), and
+    /// another worker when flushable groups remain — a worker that was
+    /// already parked on the head's deadline would otherwise sleep
+    /// through a budget-full tile this flush left behind (or a second
+    /// key that crossed its budget while we held the lock).
+    fn finish_flush(
+        &self,
+        mut g: std::sync::MutexGuard<'_, Inner<T>>,
+        key: GroupKey,
+    ) -> Batch<T> {
+        let batch = self.flush_locked(&mut g, key);
+        let more_ready = !g.ready.is_empty();
+        drop(g);
+        self.space.notify_all();
+        if more_ready {
+            self.work.notify_one();
+        }
+        batch
+    }
+
+    /// Extract one batch for `key` from the queue (caller holds the
+    /// lock and guarantees the group is non-empty). Takes matching
+    /// requests while they fit the tile budget. The budget check
+    /// includes the candidate's own rows — checking `total_rows <
+    /// max_rows` *before* adding (the old behavior) let one large
+    /// request blow the budget arbitrarily. The group's first request
+    /// is always admitted even when it alone exceeds the budget
+    /// (oversized requests get a dedicated batch; they must still be
+    /// served), and the first same-key request that does not fit closes
+    /// the budget — admitting later smaller ones would serve them ahead
+    /// of it (FIFO per key).
+    fn flush_locked(&self, g: &mut Inner<T>, key: GroupKey) -> Batch<T> {
+        let mut items: Vec<Pending<T>> = Vec::new();
+        let mut total_rows = 0usize;
+        let mut rest = VecDeque::new();
+        let mut budget_open = true;
+        let mut meta: Option<(usize, usize, Mode)> = None;
+        while let Some(p) = g.queue.pop_front() {
+            if budget_open && key_of(&p) == key {
+                let fits = total_rows + p.matrix.rows <= self.policy.max_rows;
+                if items.is_empty() || fits {
+                    if meta.is_none() {
+                        meta = Some((p.matrix.cols, p.k, p.mode));
+                    }
+                    total_rows += p.matrix.rows;
+                    items.push(p);
+                    continue;
+                }
+                budget_open = false;
+            }
+            rest.push_back(p);
+        }
+        g.queue = rest;
+        g.queued_rows -= total_rows;
+        // tolerate a missing/zero entry: zero-row requests contribute
+        // nothing to the count, so their group's entry can already be
+        // gone while they still sit in the queue
+        let remaining = match g.group_rows.get_mut(&key) {
+            Some(e) => {
+                *e = e.saturating_sub(total_rows);
+                *e
+            }
+            None => 0,
+        };
+        if remaining == 0 {
+            g.group_rows.remove(&key);
+        } else if remaining >= self.policy.max_rows && !g.ready.contains(&key) {
+            // a budget-closing flush can leave another full tile behind
+            g.ready.push_back(key);
+        }
+        let (cols, k, mode) = meta.expect("flush_locked on an empty group");
+        Batch { cols, k, mode, items, total_rows }
+    }
+
     /// Close the queue: producers are rejected, workers drain then stop.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
@@ -192,6 +296,13 @@ impl<T> Batcher<T> {
 
     pub fn queued_rows(&self) -> usize {
         self.inner.lock().unwrap().queued_rows
+    }
+
+    /// Sum of the per-key running row counts — must always reconcile
+    /// with [`Batcher::queued_rows`] (and drain to 0 with the queue).
+    /// Exposed for invariant checks in tests and debugging.
+    pub fn group_rows_outstanding(&self) -> usize {
+        self.inner.lock().unwrap().group_rows.values().sum()
     }
 }
 
@@ -282,6 +393,7 @@ mod tests {
         assert_eq!(second.total_rows, 60);
         assert_eq!(second.items[0].reply, 1);
         assert_eq!(b.queued_rows(), 0);
+        assert_eq!(b.group_rows_outstanding(), 0);
     }
 
     #[test]
@@ -328,6 +440,119 @@ mod tests {
         assert_eq!(small.total_rows, 10);
         assert_eq!(small.items[0].reply, 1);
         assert_eq!(b.queued_rows(), 0);
+        assert_eq!(b.group_rows_outstanding(), 0);
+    }
+
+    #[test]
+    fn budget_full_group_behind_head_flushes_without_head_deadline() {
+        // Regression (head-of-line blocking): the head's group is far
+        // from its budget with a long deadline; a *different* key
+        // behind it reaches the budget. It must flush immediately —
+        // not when the head's deadline finally expires — and the head
+        // must keep waiting.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 10_000,
+        });
+        assert!(b.submit(mat(5, 8), 2, Mode::EXACT, 0)); // head, key A
+        assert!(b.submit(mat(64, 16), 2, Mode::EXACT, 1)); // key B: full
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "budget-full group waited on the head's deadline"
+        );
+        assert_eq!(batch.cols, 16, "the full group flushes, not the head");
+        assert_eq!(batch.total_rows, 64);
+        assert_eq!(b.queued_rows(), 5, "head keeps waiting for its own flush");
+        // the head still flushes on close/deadline
+        b.close();
+        let head = b.next_batch().unwrap();
+        assert_eq!(head.cols, 8);
+        assert_eq!(head.items[0].reply, 0);
+        assert_eq!(b.group_rows_outstanding(), 0);
+    }
+
+    #[test]
+    fn blocked_worker_wakes_for_a_late_arriving_full_group() {
+        // A worker already parked on the head's (long) deadline must
+        // wake and serve a different-key group the moment it fills.
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy {
+            max_rows: 32,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 10_000,
+        }));
+        b.submit(mat(4, 8), 2, Mode::EXACT, 0); // head, key A
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || b2.next_batch().unwrap());
+        std::thread::sleep(Duration::from_millis(30)); // worker parks
+        b.submit(mat(32, 16), 2, Mode::EXACT, 1); // key B fills
+        let batch = worker.join().unwrap();
+        assert_eq!(batch.cols, 16);
+        assert_eq!(b.queued_rows(), 4);
+        b.close();
+        assert_eq!(b.next_batch().unwrap().cols, 8);
+    }
+
+    #[test]
+    fn multi_tile_group_wakes_a_second_parked_worker() {
+        // Regression: a flush that leaves another full tile behind
+        // re-queues the key as ready but used to notify only producers
+        // — a second worker parked on the head's (long) deadline slept
+        // through the leftover tile. Both tiles must flush promptly.
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 10_000,
+        }));
+        b.submit(mat(4, 8), 2, Mode::EXACT, 0); // head, key A, far deadline
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || b.next_batch().unwrap())
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(30)); // both park
+        // key B arrives as two full tiles in one burst: the crossing
+        // submit wakes one worker; the flush must wake the other
+        b.submit(mat(60, 16), 2, Mode::EXACT, 1);
+        b.submit(mat(60, 16), 2, Mode::EXACT, 2);
+        b.submit(mat(60, 16), 2, Mode::EXACT, 3);
+        let t0 = Instant::now();
+        let mut cols: Vec<usize> =
+            workers.into_iter().map(|w| w.join().unwrap().cols).collect();
+        cols.sort_unstable();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "second tile waited on the head's deadline"
+        );
+        assert_eq!(cols, vec![16, 16], "both flushed tiles are key B");
+        assert_eq!(b.queued_rows(), 4 + 60, "head and the partial tile wait");
+        b.close();
+    }
+
+    #[test]
+    fn zero_row_requests_are_served_not_leaked() {
+        // A zero-row request contributes nothing to the running counts,
+        // so its group entry can vanish while it still queues (here:
+        // behind an oversized same-key request that flushes alone). It
+        // must still be served, and the counters must drain to zero.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_millis(2),
+            queue_limit: 1000,
+        });
+        assert!(b.submit(mat(100, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(mat(0, 8), 2, Mode::EXACT, 1));
+        let big = b.next_batch().unwrap();
+        assert_eq!(big.total_rows, 100);
+        assert_eq!(big.items.len(), 1);
+        let empty = b.next_batch().unwrap();
+        assert_eq!(empty.items[0].reply, 1);
+        assert_eq!(empty.total_rows, 0);
+        assert_eq!(b.queued_rows(), 0);
+        assert_eq!(b.group_rows_outstanding(), 0);
     }
 
     #[test]
@@ -336,8 +561,9 @@ mod tests {
         // consumers, with a queue limit small enough to exercise
         // backpressure. Every reply token must come back exactly once,
         // every batch must respect the key grouping and the row budget
-        // (unless it is a dedicated oversized batch), and queued_rows
-        // must return to 0 (no double-counting).
+        // (unless it is a dedicated oversized batch), and both row
+        // counters — queued_rows and the per-key running counts — must
+        // reconcile to 0 at drain (no double-counting).
         const PRODUCERS: usize = 4;
         const PER_PRODUCER: usize = 60;
         let policy = BatchPolicy {
@@ -411,6 +637,11 @@ mod tests {
         want.sort_unstable();
         assert_eq!(got, want, "requests lost or duplicated");
         assert_eq!(b.queued_rows(), 0, "queued_rows leaked");
+        assert_eq!(
+            b.group_rows_outstanding(),
+            0,
+            "per-key running counts leaked"
+        );
     }
 
     #[test]

@@ -1,7 +1,18 @@
 //! Service metrics: lock-free counters + a mutex-guarded latency
 //! reservoir with percentile snapshots.
+//!
+//! The reservoir uses counter-driven uniform sampling (Vitter's
+//! Algorithm R): once full, observation number `n` replaces a random
+//! slot with probability `RESERVOIR / n`, so the snapshot is a uniform
+//! sample of the whole stream. The previous scheme picked the
+//! overwrite slot from the latency value itself
+//! (`latency.as_nanos() % RESERVOIR`), which collapsed
+//! identical/quantized latencies into the same few slots — a bimodal
+//! stream would keep overwriting two slots while 65k stale entries
+//! skewed every percentile.
 
 use crate::stats::summary::percentile;
+use crate::util::rng::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -15,8 +26,25 @@ pub struct Metrics {
     pub pjrt_batches: AtomicU64,
     pub cpu_batches: AtomicU64,
     pub errors: AtomicU64,
-    /// request latencies in microseconds (bounded reservoir)
-    latencies_us: Mutex<Vec<u64>>,
+    /// request latencies in microseconds (bounded uniform reservoir)
+    latencies_us: Mutex<Reservoir>,
+}
+
+/// Bounded uniform sample of the latency stream.
+#[derive(Debug)]
+struct Reservoir {
+    samples: Vec<u64>,
+    /// observations offered so far (the Algorithm R counter)
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        // deterministic seed: sampling must be unpredictable *per
+        // slot*, not across runs — reproducible metrics are a feature
+        Reservoir { samples: Vec::new(), seen: 0, rng: Rng::seed_from(0x1A7E) }
+    }
 }
 
 /// Point-in-time view.
@@ -40,13 +68,19 @@ impl Metrics {
     pub fn record_request(&self, rows: usize, latency: Duration) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(rows as u64, Ordering::Relaxed);
-        let mut l = self.latencies_us.lock().unwrap();
-        if l.len() >= RESERVOIR {
-            // overwrite pseudo-randomly to stay bounded
-            let slot = (latency.as_nanos() as usize) % RESERVOIR;
-            l[slot] = latency.as_micros() as u64;
+        let us = latency.as_micros() as u64;
+        let mut r = self.latencies_us.lock().unwrap();
+        r.seen += 1;
+        if r.samples.len() < RESERVOIR {
+            r.samples.push(us);
         } else {
-            l.push(latency.as_micros() as u64);
+            // Algorithm R: keep this observation with probability
+            // RESERVOIR / seen, in a uniformly chosen slot
+            let seen = r.seen;
+            let j = r.rng.below(seen) as usize;
+            if j < RESERVOIR {
+                r.samples[j] = us;
+            }
         }
     }
 
@@ -68,6 +102,7 @@ impl Metrics {
             .latencies_us
             .lock()
             .unwrap()
+            .samples
             .iter()
             .map(|&v| v as f64)
             .collect();
@@ -115,6 +150,45 @@ mod tests {
         for i in 0..(RESERVOIR + 100) as u64 {
             m.record_request(1, Duration::from_micros(i % 500));
         }
-        assert!(m.latencies_us.lock().unwrap().len() <= RESERVOIR);
+        assert!(m.latencies_us.lock().unwrap().samples.len() <= RESERVOIR);
+    }
+
+    #[test]
+    fn reservoir_keeps_both_modes_of_a_bimodal_stream() {
+        // Regression: the value-keyed overwrite slot
+        // (`as_nanos() % RESERVOIR`) mapped each distinct latency to
+        // one fixed slot, so a long bimodal stream degenerated to two
+        // live slots and 65k stale ones. Uniform sampling must retain
+        // both modes in roughly their stream proportions.
+        let m = Metrics::default();
+        let total = 3 * RESERVOIR as u64;
+        for i in 0..total {
+            let us = if i % 2 == 0 { 100 } else { 10_000 };
+            m.record_request(1, Duration::from_micros(us));
+        }
+        let (lows, highs) = {
+            let r = m.latencies_us.lock().unwrap();
+            (
+                r.samples.iter().filter(|&&v| v == 100).count(),
+                r.samples.iter().filter(|&&v| v == 10_000).count(),
+            )
+        };
+        assert_eq!(lows + highs, RESERVOIR, "reservoir holds only stream values");
+        let frac = lows as f64 / RESERVOIR as f64;
+        assert!(
+            (0.45..=0.55).contains(&frac),
+            "sampled low-mode fraction {frac} should match the 50/50 stream"
+        );
+        let s = m.snapshot();
+        assert!(
+            s.p99_us > 9_999.0,
+            "slow mode must be visible in tail percentiles, p99 {}",
+            s.p99_us
+        );
+        assert!(
+            (100.0..=10_000.0).contains(&s.p50_us),
+            "p50 sits at the mode boundary, got {}",
+            s.p50_us
+        );
     }
 }

@@ -7,11 +7,23 @@
 //! (`crate::backend`), and this module only dispatches and delivers.
 //! An accelerator backend that fails at execution time degrades to the
 //! CPU engine instead of failing the batch.
+//!
+//! Shadow re-probing: when `[plan] shadow_every = N` is set (N > 0),
+//! every Nth dispatched batch is timed and then re-executed on the
+//! plan's recorded runner-up; the measured edge feeds the planner's
+//! per-shape EWMA (`Planner::record_shadow`), which demotes winners
+//! whose calibration-time edge has inverted (thermal drift, co-tenant
+//! contention, driver updates). The shadow result is discarded — only
+//! the winner's results are delivered — and a batch that had to fall
+//! back from a failing accelerator is never used as a shadow sample
+//! (its timing measures the failure, not the winner). `shadow_every =
+//! 0` skips all of this: the dispatch path is then exactly the
+//! pre-shadow code.
 
 use crate::backend::{registry::QUARANTINE_AFTER, BackendRegistry, CPU_BACKEND_ID};
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
-use crate::plan::Planner;
+use crate::plan::{Plan, Planner};
 use crate::topk::rowwise::rowwise_topk;
 use crate::topk::types::TopKResult;
 use crate::util::matrix::RowMatrix;
@@ -19,13 +31,14 @@ use anyhow::{anyhow, Result};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Reply slot carried through the batcher.
 pub type Reply = mpsc::Sender<Result<TopKResult>>;
 
 /// Spawn `workers` scheduler threads; they exit when the batcher closes.
 /// Batches execute through the shared adaptive `planner` (plans are
-/// cached per shape, so workers agree after the first batch of a
+/// cached per keyed shape, so workers agree after the first batch of a
 /// shape) against the backends in `backends`.
 pub fn spawn_workers(
     workers: usize,
@@ -52,6 +65,44 @@ pub fn spawn_workers(
         .collect()
 }
 
+/// Re-execute a shadowed batch on the plan's runner-up and feed the
+/// measured edge back to the planner. The shadow result is discarded;
+/// a runner-up that cannot execute (quarantined, vanished tile) simply
+/// yields no sample.
+fn shadow_reprobe(
+    batch: &Batch<Reply>,
+    mats: &[&RowMatrix],
+    winner_secs: f64,
+    backends: &BackendRegistry,
+    planner: &Planner,
+    plan: &Plan,
+) {
+    let Some(ru) = &plan.runner_up else { return };
+    let Some(rb) = backends.get(&ru.backend) else { return };
+    if backends.is_quarantined(rb.id()) {
+        return;
+    }
+    let spec = crate::backend::ExecSpec { algo: ru.algo, grain: ru.grain };
+    let t0 = Instant::now();
+    match rb.execute(&spec, mats, batch.k, batch.mode) {
+        Ok(res) => {
+            let runner_secs = t0.elapsed().as_secs_f64();
+            std::hint::black_box(res);
+            planner.record_shadow(
+                batch.total_rows,
+                batch.cols,
+                batch.k,
+                batch.mode,
+                winner_secs,
+                runner_secs,
+            );
+        }
+        // an unexecutable runner-up is a skipped probe, not an error —
+        // same contract as calibration-time probe failures
+        Err(_) => {}
+    }
+}
+
 /// Execute one batch through the plan's backend and deliver per-request
 /// results.
 pub fn run_batch(
@@ -60,7 +111,7 @@ pub fn run_batch(
     metrics: &Metrics,
     planner: &Planner,
 ) {
-    let plan = planner.plan(batch.cols, batch.k, batch.mode);
+    let plan = planner.plan(batch.total_rows, batch.cols, batch.k, batch.mode);
     // a plan can only name a registered backend, but resolve
     // defensively; a backend that kept failing at runtime is
     // quarantined — its batches run on the CPU engine directly instead
@@ -75,7 +126,21 @@ pub fn run_batch(
     let mats: Vec<&RowMatrix> =
         batch.items.iter().map(|item| &item.matrix).collect();
     let mut via_accel = backend.id() != CPU_BACKEND_ID;
+    // time the dispatch only when this batch is a shadow sample — and
+    // only when what executes really is the plan's winner: a dispatch
+    // that silently resolved a quarantined/unregistered backend to the
+    // CPU would otherwise feed record_shadow a CPU-vs-CPU timing and
+    // keep the stale winner's EWMA pinned at zero forever
+    let is_primary = backend.id() == plan.backend;
+    let shadow_t0 =
+        if is_primary && planner.shadow_due() && plan.runner_up.is_some() {
+            Some(Instant::now())
+        } else {
+            None
+        };
     let mut outcome = backend.execute(&spec, &mats, batch.k, batch.mode);
+    let winner_secs = shadow_t0.map(|t| t.elapsed().as_secs_f64());
+    let mut fell_back = false;
     if via_accel && outcome.is_err() {
         // accelerator misbehaved at runtime: degrade to the CPU engine
         // rather than failing every request in the batch. The failure
@@ -101,9 +166,18 @@ pub fn run_batch(
             );
         }
         via_accel = false;
+        fell_back = true;
         outcome = backends.cpu().execute(&spec, &mats, batch.k, batch.mode);
     } else if via_accel {
         backends.note_success(backend.id());
+    }
+    // the shadow run needs the live matrices, so it happens before the
+    // results scatter consumes the batch; a fallen-back batch is not a
+    // valid winner sample
+    if let Some(winner_secs) = winner_secs {
+        if !fell_back && outcome.is_ok() {
+            shadow_reprobe(&batch, &mats, winner_secs, backends, planner, &plan);
+        }
     }
     drop(mats);
     metrics.record_batch(via_accel);
@@ -136,10 +210,28 @@ mod tests {
     use super::*;
     use crate::backend::{ExecBackend, ExecSpec};
     use crate::coordinator::batcher::BatchPolicy;
+    use crate::plan::{PlannerConfig, SHADOW_MIN_SAMPLES};
+    use crate::topk::rowwise::rowwise_topk_grained;
     use crate::topk::types::Mode;
     use crate::topk::verify::is_exact;
     use crate::util::rng::Rng;
     use std::time::Duration;
+
+    fn one_item_batch(x: &RowMatrix, k: usize, mode: Mode, tx: Reply) -> Batch<Reply> {
+        Batch {
+            cols: x.cols,
+            k,
+            mode,
+            total_rows: x.rows,
+            items: vec![crate::coordinator::batcher::Pending {
+                matrix: x.clone(),
+                k,
+                mode,
+                enqueued: std::time::Instant::now(),
+                reply: tx,
+            }],
+        }
+    }
 
     #[test]
     fn cpu_pipeline_end_to_end() {
@@ -151,8 +243,13 @@ mod tests {
         let backends = Arc::new(BackendRegistry::cpu_only());
         let metrics = Arc::new(Metrics::default());
         let planner = Arc::new(Planner::default());
-        let workers =
-            spawn_workers(2, batcher.clone(), backends, metrics.clone(), planner);
+        let workers = spawn_workers(
+            2,
+            batcher.clone(),
+            backends,
+            metrics.clone(),
+            planner.clone(),
+        );
 
         let mut rng = Rng::seed_from(21);
         let mut rxs = Vec::new();
@@ -178,11 +275,13 @@ mod tests {
         assert_eq!(s.rows, 120);
         assert!(s.batches >= 1);
         assert_eq!(s.errors, 0);
+        // default config: shadow_every = 0 — dispatch must never have
+        // taken a shadow sample
+        assert_eq!(planner.shadow_observations(), 0);
     }
 
     #[test]
     fn failing_accelerator_degrades_to_cpu_not_to_errors() {
-        use crate::plan::PlannerConfig;
         use std::sync::atomic::{AtomicUsize, Ordering};
 
         struct Flaky {
@@ -233,19 +332,7 @@ mod tests {
         let total_batches = QUARANTINE_AFTER + 2;
         for _ in 0..total_batches {
             let (tx, rx) = mpsc::channel();
-            let batch = Batch {
-                cols: 32,
-                k: 4,
-                mode: Mode::EXACT,
-                total_rows: 12,
-                items: vec![crate::coordinator::batcher::Pending {
-                    matrix: x.clone(),
-                    k: 4,
-                    mode: Mode::EXACT,
-                    enqueued: std::time::Instant::now(),
-                    reply: tx,
-                }],
-            };
+            let batch = one_item_batch(&x, 4, Mode::EXACT, tx);
             run_batch(batch, &backends, &metrics, &planner);
             let res = rx.recv().unwrap().unwrap();
             assert!(is_exact(&x, &res), "fallback result must stay exact");
@@ -262,5 +349,172 @@ mod tests {
             total_batches as u64,
             "every batch is accounted to the cpu engine"
         );
+    }
+
+    #[test]
+    fn quarantined_winner_is_not_shadow_sampled() {
+        // Regression: dispatch that silently resolves a quarantined
+        // winner to the CPU must not take a shadow sample — timing the
+        // CPU against its own runner-up measures nothing and pins the
+        // stale winner's EWMA at zero.
+        struct Dead;
+        impl ExecBackend for Dead {
+            fn id(&self) -> &str {
+                "dead"
+            }
+            fn describe(&self) -> String {
+                "quarantined before the test starts".into()
+            }
+            fn supports(&self, _c: usize, _k: usize, _m: Mode) -> bool {
+                true
+            }
+            fn execute(
+                &self,
+                _spec: &ExecSpec,
+                _mats: &[&RowMatrix],
+                _k: usize,
+                _mode: Mode,
+            ) -> Result<Vec<TopKResult>> {
+                panic!("quarantined backend must not be executed")
+            }
+        }
+
+        let mut registry = BackendRegistry::cpu_only();
+        registry.register(Arc::new(Dead));
+        let backends = Arc::new(registry);
+        for _ in 0..QUARANTINE_AFTER {
+            backends.note_failure("dead");
+        }
+        assert!(backends.is_quarantined("dead"));
+        let planner = Arc::new(Planner::with_backends(
+            PlannerConfig {
+                calib_rows: 0,
+                shadow_every: 1,
+                ..PlannerConfig::default()
+            },
+            backends.clone(),
+        ));
+        let metrics = Arc::new(Metrics::default());
+        let mut rng = Rng::seed_from(0x52);
+        let x = RowMatrix::random_normal(10, 32, &mut rng);
+        // the model prior still names the (quarantined) accelerator
+        assert_eq!(planner.plan(10, 32, 4, Mode::EXACT).backend, "dead");
+        let (tx, rx) = mpsc::channel();
+        run_batch(
+            one_item_batch(&x, 4, Mode::EXACT, tx),
+            &backends,
+            &metrics,
+            &planner,
+        );
+        assert!(is_exact(&x, &rx.recv().unwrap().unwrap()));
+        assert_eq!(
+            planner.shadow_observations(),
+            0,
+            "cpu-vs-cpu shadow sample must not be recorded"
+        );
+        assert_eq!(metrics.snapshot().errors, 0);
+    }
+
+    #[test]
+    fn shadow_reprobing_demotes_a_slow_backend_to_cpu() {
+        // A backend that wins calibration but then turns slow (thermal
+        // throttle, contended device): shadow re-probing must measure
+        // the inversion on live batches and demote it to the CPU
+        // runner-up, after which dispatch goes straight to the CPU.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Sluggish {
+            calls: AtomicUsize,
+        }
+        impl ExecBackend for Sluggish {
+            fn id(&self) -> &str {
+                "sluggish"
+            }
+            fn describe(&self) -> String {
+                "correct but 2ms slow per batch".into()
+            }
+            fn supports(&self, _c: usize, _k: usize, _m: Mode) -> bool {
+                true
+            }
+            fn execute(
+                &self,
+                spec: &ExecSpec,
+                mats: &[&RowMatrix],
+                k: usize,
+                _mode: Mode,
+            ) -> Result<Vec<TopKResult>> {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(2));
+                Ok(mats
+                    .iter()
+                    .map(|x| rowwise_topk_grained(x, k, spec.algo, spec.grain))
+                    .collect())
+            }
+        }
+
+        let sluggish = Arc::new(Sluggish { calls: AtomicUsize::new(0) });
+        let mut registry = BackendRegistry::cpu_only();
+        registry.register(sluggish.clone());
+        let backends = Arc::new(registry);
+        let planner = Arc::new(Planner::with_backends(
+            PlannerConfig {
+                // model-only decision: the manifest prior picks the
+                // accelerator, with the CPU prior as runner-up — the
+                // exact "calibration went stale" shape
+                calib_rows: 0,
+                shadow_every: 1,
+                ..PlannerConfig::default()
+            },
+            backends.clone(),
+        ));
+        let metrics = Arc::new(Metrics::default());
+
+        let mut rng = Rng::seed_from(0x51);
+        let x = RowMatrix::random_normal(12, 32, &mut rng);
+        let first = planner.plan(12, 32, 4, Mode::EXACT);
+        assert_eq!(first.backend, "sluggish", "premise: prior picks the accel");
+        assert_eq!(first.runner_up.as_ref().unwrap().backend, CPU_BACKEND_ID);
+
+        // a 2ms sleep against a microsecond CPU batch is an edge of
+        // ~-1.0, far past the hysteresis margin, deterministically
+        for _ in 0..SHADOW_MIN_SAMPLES {
+            let (tx, rx) = mpsc::channel();
+            run_batch(
+                one_item_batch(&x, 4, Mode::EXACT, tx),
+                &backends,
+                &metrics,
+                &planner,
+            );
+            assert!(is_exact(&x, &rx.recv().unwrap().unwrap()));
+        }
+        assert!(
+            planner.shadow_observations() >= SHADOW_MIN_SAMPLES,
+            "every batch was shadow-sampled"
+        );
+        let demoted = planner.plan(12, 32, 4, Mode::EXACT);
+        assert_eq!(demoted.backend, CPU_BACKEND_ID, "stale winner demoted");
+        assert_eq!(
+            demoted.runner_up.as_ref().unwrap().backend,
+            "sluggish",
+            "old winner stays recorded as the comparator"
+        );
+
+        // demoted dispatch no longer touches the slow backend as the
+        // primary; it may still be shadow-probed, which is the point
+        let calls_before = sluggish.calls.load(Ordering::SeqCst);
+        let (tx, rx) = mpsc::channel();
+        run_batch(
+            one_item_batch(&x, 4, Mode::EXACT, tx),
+            &backends,
+            &metrics,
+            &planner,
+        );
+        assert!(is_exact(&x, &rx.recv().unwrap().unwrap()));
+        let s = metrics.snapshot();
+        assert!(s.cpu_batches >= 1, "post-demotion batch ran on the cpu");
+        assert_eq!(s.errors, 0);
+        // exactly one extra call: the shadow probe of the comparator,
+        // not the primary dispatch
+        assert_eq!(sluggish.calls.load(Ordering::SeqCst), calls_before + 1);
     }
 }

@@ -51,6 +51,9 @@ pub struct TopKService {
     backends: Arc<BackendRegistry>,
     planner: Arc<Planner>,
     workers: Vec<JoinHandle<()>>,
+    /// reject non-finite client matrices at submit (`[serve]
+    /// validate_inputs`, default on)
+    validate_inputs: bool,
     /// keeps the executor thread alive for the service's lifetime
     _executor: Option<Executor>,
 }
@@ -118,15 +121,36 @@ impl TopKService {
             backends,
             planner,
             workers,
+            validate_inputs: cfg.validate_inputs,
             _executor: executor,
         })
     }
 
     /// Submit a request; returns a handle to wait on.
+    ///
+    /// Validates `k` and — unless `[serve] validate_inputs = false` —
+    /// that the matrix is entirely finite: the top-k kernels use
+    /// branchless IEEE compares (`topk::binary_search`'s documented
+    /// input contract), so a NaN or infinity would silently corrupt
+    /// the selection rather than fail. The scan is one vectorizable
+    /// pass over data the service is about to read anyway.
     pub fn submit_async(&self, matrix: RowMatrix, k: usize, mode: Mode)
         -> Result<TopKRequest> {
         if k == 0 || k > matrix.cols {
             return Err(anyhow!("k={} out of range for M={}", k, matrix.cols));
+        }
+        if self.validate_inputs {
+            if let Some(i) = matrix.data.iter().position(|v| !v.is_finite()) {
+                let cols = matrix.cols.max(1);
+                return Err(anyhow!(
+                    "input matrix contains a non-finite value ({}) at row {} \
+                     col {}; the top-k kernels require finite inputs \
+                     (set `[serve] validate_inputs = false` to skip this scan)",
+                    matrix.data[i],
+                    i / cols,
+                    i % cols
+                ));
+            }
         }
         let (tx, rx) = mpsc::channel();
         if !self.batcher.submit(matrix, k, mode, tx) {
@@ -288,7 +312,47 @@ mod tests {
         let x = RowMatrix::random_normal(40, 48, &mut rng);
         let res = svc.submit(x.clone(), 6, Mode::EXACT).unwrap();
         assert!(is_exact(&x, &res));
-        assert_eq!(svc.planner().plan(48, 6, Mode::EXACT).algo, RowAlgo::Heap);
+        assert_eq!(
+            svc.planner().plan(40, 48, 6, Mode::EXACT).algo,
+            RowAlgo::Heap
+        );
+    }
+
+    #[test]
+    fn non_finite_inputs_are_rejected_at_the_boundary() {
+        let svc = cpu_service(1);
+        let mut x = RowMatrix::zeros(4, 8);
+        x.data[13] = f32::NAN;
+        let err = svc.submit_async(x, 4, Mode::EXACT).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("non-finite"), "got: {msg}");
+        assert!(msg.contains("row 1"), "position is reported, got: {msg}");
+        // infinities poison the bracket midpoint the same way
+        let mut y = RowMatrix::zeros(4, 8);
+        y.data[0] = f32::INFINITY;
+        assert!(svc.submit_async(y, 4, Mode::EXACT).is_err());
+        assert_eq!(svc.stats().requests, 0, "rejected before admission");
+        // the knob turns the scan off (expert escape hatch for callers
+        // that guarantee finiteness themselves): the NaN matrix is
+        // admitted and served. The algorithm is pinned to the paper's
+        // kernel because the scan is exactly what protects the
+        // baselines' comparison sorts from NaN — results for such a
+        // row are documented garbage either way.
+        use crate::config::PlanConfig;
+        let loose = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 50,
+            validate_inputs: false,
+            plan: PlanConfig {
+                force_algo: Some("rtopk".into()),
+                ..PlanConfig::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut z = RowMatrix::zeros(4, 8);
+        z.data[5] = f32::NAN;
+        assert!(loose.submit(z, 4, Mode::EXACT).is_ok());
     }
 
     #[test]

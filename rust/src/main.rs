@@ -7,7 +7,7 @@ use rtopk::bench::{parse_mode, workload, Table};
 use rtopk::cli::{App, Args, Command};
 use rtopk::config::{BackendConfig, Config, ServeConfig};
 use rtopk::coordinator::{Trainer, TopKService};
-use rtopk::plan::{model, Planner, PlannerConfig};
+use rtopk::plan::{model, Planner, PlannerConfig, RowBucket};
 use rtopk::runtime::executor::Executor;
 use rtopk::stats::expected_iterations;
 use rtopk::topk::verify::approx_metrics;
@@ -47,9 +47,12 @@ fn app() -> App {
                 .opt("steps", "200", "training steps")
                 .opt("eval-every", "20", "log cadence")
                 .opt("seed", "42", "dataset + init seed"),
-            Command::new("plan", "show the adaptive planner's choice per (M, k)")
+            Command::new("plan", "show the adaptive planner's choice per (rows, M, k)")
                 .opt("cols", "256,512,768", "comma-separated row lengths M")
                 .opt("k", "16,32,64,96,128", "comma-separated k values")
+                .opt("rows", "",
+                     "comma-separated batch row counts to plan for \
+                      (empty = each row bucket's representative count)")
                 .opt("mode", "exact", "exact | es<N> | eps<X>")
                 .opt("calib-rows", "192",
                      "microbenchmark rows per candidate (0 = cost model only)")
@@ -227,6 +230,16 @@ fn cmd_plan(a: &Args) -> Result<()> {
     let ks = parse_list(a.get("k").unwrap(), "k")?;
     let mode = parse_mode(a.get("mode").unwrap()).map_err(anyhow::Error::msg)?;
     let calib_rows: usize = a.req("calib-rows").map_err(anyhow::Error::msg)?;
+    // plans are keyed per row bucket: an explicit --rows list plans
+    // those batch sizes; the default covers one representative per
+    // bucket so the table shows every bucket's calibrated decision
+    let rows_list: Vec<usize> = match a.get("rows").filter(|s| !s.is_empty()) {
+        Some(s) => parse_list(s, "rows")?,
+        None => RowBucket::ALL
+            .iter()
+            .map(|b| b.representative_rows(calib_rows))
+            .collect(),
+    };
     let force = a.get("force").filter(|s| !s.is_empty());
     let backend_pin = a.get("backend").filter(|s| !s.is_empty()).map(String::from);
     let artifacts = a.get("artifacts").filter(|s| !s.is_empty());
@@ -274,35 +287,43 @@ fn cmd_plan(a: &Args) -> Result<()> {
 
     let mut t = Table::new(
         &format!("adaptive plans (mode={})", mode.tag()),
-        &["M", "k", "backend", "algorithm", "grain", "source", "prior (cyc/row)"],
+        &["rows", "bucket", "M", "k", "backend", "algorithm", "grain",
+          "source", "prior (cyc/row)"],
     );
     let mut grid = Vec::new();
-    for &m in &cols {
-        for &k in &ks {
-            if k > m {
-                continue;
+    for &r in &rows_list {
+        let bucket = RowBucket::of(r);
+        for &m in &cols {
+            for &k in &ks {
+                if k > m {
+                    continue;
+                }
+                let plan = planner.plan(r, m, k, mode);
+                let prior = model::prior_cost(plan.algo, m, k);
+                t.row(vec![
+                    r.to_string(),
+                    bucket.name().to_string(),
+                    m.to_string(),
+                    k.to_string(),
+                    plan.backend.clone(),
+                    plan.algo.name(),
+                    plan.grain.to_string(),
+                    plan.source.name().to_string(),
+                    format!("{prior:.0}"),
+                ]);
+                grid.push(json::obj(vec![
+                    ("rows", json::num(r as f64)),
+                    ("rows_bucket", json::s(bucket.name())),
+                    ("cols", json::num(m as f64)),
+                    ("k", json::num(k as f64)),
+                    ("mode", json::s(&mode.tag())),
+                    ("backend", json::s(&plan.backend)),
+                    ("algo", json::s(&plan.algo.name())),
+                    ("grain", json::num(plan.grain as f64)),
+                    ("source", json::s(plan.source.name())),
+                    ("prior_cycles", json::num(prior)),
+                ]));
             }
-            let plan = planner.plan(m, k, mode);
-            let prior = model::prior_cost(plan.algo, m, k);
-            t.row(vec![
-                m.to_string(),
-                k.to_string(),
-                plan.backend.clone(),
-                plan.algo.name(),
-                plan.grain.to_string(),
-                plan.source.name().to_string(),
-                format!("{prior:.0}"),
-            ]);
-            grid.push(json::obj(vec![
-                ("cols", json::num(m as f64)),
-                ("k", json::num(k as f64)),
-                ("mode", json::s(&mode.tag())),
-                ("backend", json::s(&plan.backend)),
-                ("algo", json::s(&plan.algo.name())),
-                ("grain", json::num(plan.grain as f64)),
-                ("source", json::s(plan.source.name())),
-                ("prior_cycles", json::num(prior)),
-            ]));
         }
     }
     // per-backend calibration: what each registered backend measured on
@@ -311,7 +332,7 @@ fn cmd_plan(a: &Args) -> Result<()> {
     let mut calib = Vec::new();
     let mut ct = Table::new(
         "per-backend calibration",
-        &["M", "k", "mode", "backend", "probe", "chosen"],
+        &["bucket", "M", "k", "mode", "backend", "probe", "chosen"],
     );
     for p in &probes {
         // backends probe at their own natural batch size; per-row time
@@ -326,6 +347,7 @@ fn cmd_plan(a: &Args) -> Result<()> {
             None => "skipped (unavailable)".to_string(),
         };
         ct.row(vec![
+            p.bucket.name().to_string(),
             p.cols.to_string(),
             p.k.to_string(),
             p.mode.clone(),
@@ -334,6 +356,7 @@ fn cmd_plan(a: &Args) -> Result<()> {
             if p.chosen { "*".into() } else { String::new() },
         ]);
         calib.push(json::obj(vec![
+            ("rows_bucket", json::s(p.bucket.name())),
             ("cols", json::num(p.cols as f64)),
             ("k", json::num(p.k as f64)),
             ("mode", json::s(&p.mode)),

@@ -1,42 +1,59 @@
-//! Shape-keyed plan cache with schema-versioned, host-fingerprinted
-//! JSON persistence.
+//! Shape-keyed plan cache with schema-versioned, host-fingerprinted,
+//! TTL-stamped JSON persistence.
 //!
-//! Keys are `(cols, k, mode-tag)` — the same shape key the batcher
-//! groups on — so one calibration serves every batch of that shape for
-//! the process lifetime, and (when a `cache_path` is configured) across
-//! restarts. Each entry additionally records the *backend id* the shape
-//! was calibrated to, so a persisted decision is a complete execution
-//! plan, not just a CPU-algorithm choice.
+//! Keys are `(rows-bucket, cols, k, mode-tag)` — the batcher's shape
+//! key plus the [`RowBucket`] batch-geometry dimension — so one
+//! calibration serves every batch of that keyed shape for the process
+//! lifetime, and (when a `cache_path` is configured) across restarts.
+//! Each entry additionally records the *backend id* the shape was
+//! calibrated to, the raw probe timings behind the decision, and the
+//! race's runner-up (the shadow re-probe comparator), so a persisted
+//! decision is a complete, auditable execution plan.
 //!
-//! Persisted plans are measurements of a particular machine, so the
-//! document carries a schema version and a host fingerprint
-//! (`available_parallelism` + the CPU model string). A cache written by
-//! another schema or another host is **rejected wholesale** at load —
-//! the planner logs it and re-calibrates instead of trusting timings
-//! that were measured elsewhere. The on-disk format (written with the
-//! in-tree `util::json`):
+//! Persisted plans are measurements of a particular machine at a
+//! particular time, so the document carries a schema version, a host
+//! fingerprint (`available_parallelism` + the CPU model string), and a
+//! creation timestamp checked against a TTL at load. A cache written by
+//! another schema or another host — or one older than the TTL — is
+//! **rejected wholesale** at load: the planner logs it and
+//! re-calibrates instead of trusting timings measured elsewhere (or
+//! elsewhen). v2 documents (no rows bucket, no raw timings, no
+//! timestamp) are rejected by the version check and re-calibrated. The
+//! on-disk format (written with the in-tree `util::json`):
 //!
 //! ```json
-//! {"version": 2,
+//! {"version": 3,
 //!  "host": {"parallelism": 8, "cpu_model": "..."},
+//!  "created_unix": 1753660800,
 //!  "plans": [
-//!    {"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
-//!     "algo": "rtopk_exact", "grain": 64}
+//!    {"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "exact",
+//!     "backend": "cpu", "algo": "rtopk_exact", "grain": 64,
+//!     "probes": [{"kind": "algo", "name": "rtopk_exact",
+//!                 "secs": 1.2e-5, "rows": 64}],
+//!     "runner_up": {"backend": "cpu", "algo": "heap", "grain": 64}}
 //! ]}
 //! ```
 
-use crate::plan::{Plan, PlanSource};
+use crate::plan::{Plan, PlanSource, ProbeKind, RawProbe, RowBucket, RunnerUp};
 use crate::topk::rowwise::RowAlgo;
 use crate::topk::types::Mode;
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::RwLock;
+use std::sync::{Mutex, RwLock};
+use std::time::{SystemTime, UNIX_EPOCH};
 
 /// Version of the persisted document. Bump whenever the schema or the
 /// meaning of a field changes; old caches are then re-calibrated, never
-/// reinterpreted. (v1 had no host fingerprint and no backend field.)
-pub const SCHEMA_VERSION: usize = 2;
+/// reinterpreted. (v1 had no host fingerprint and no backend field; v2
+/// had no rows bucket, no raw probe timings, and no TTL timestamp.)
+pub const SCHEMA_VERSION: usize = 3;
+
+/// Default persisted-cache TTL: one week. Calibration is cheap and
+/// hosts drift (thermal paste, firmware, co-tenants), so a stale cache
+/// is quietly re-measured rather than trusted forever. `0` disables
+/// expiry.
+pub const DEFAULT_TTL_SECS: u64 = 7 * 24 * 3600;
 
 /// What makes one host's calibration untrustworthy on another.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -70,12 +87,26 @@ fn read_cpu_model() -> String {
     "unknown".into()
 }
 
-type Key = (usize, usize, String);
+fn now_unix() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
 
-/// Concurrent plan cache (read-mostly; one write per new shape).
+type Key = (RowBucket, usize, usize, String);
+
+/// Concurrent plan cache (read-mostly; one write per new keyed shape).
 #[derive(Debug, Default)]
 pub struct PlanCache {
     inner: RwLock<BTreeMap<Key, Plan>>,
+    /// `created_unix` of the oldest document merged into this cache.
+    /// Preserved across load → save cycles so the TTL measures time
+    /// since *calibration*, not time since the last service restart —
+    /// re-stamping on every save would let a frequently-restarted
+    /// service keep stale measurements alive forever. `None` until a
+    /// document is loaded; a never-loaded cache saves with "now".
+    created: Mutex<Option<u64>>,
 }
 
 impl PlanCache {
@@ -83,19 +114,32 @@ impl PlanCache {
         PlanCache::default()
     }
 
-    pub fn get(&self, cols: usize, k: usize, mode_tag: &str) -> Option<Plan> {
+    pub fn get(
+        &self,
+        bucket: RowBucket,
+        cols: usize,
+        k: usize,
+        mode_tag: &str,
+    ) -> Option<Plan> {
         self.inner
             .read()
             .unwrap()
-            .get(&(cols, k, mode_tag.to_string()))
+            .get(&(bucket, cols, k, mode_tag.to_string()))
             .cloned()
     }
 
-    pub fn insert(&self, cols: usize, k: usize, mode_tag: &str, plan: Plan) {
+    pub fn insert(
+        &self,
+        bucket: RowBucket,
+        cols: usize,
+        k: usize,
+        mode_tag: &str,
+        plan: Plan,
+    ) {
         self.inner
             .write()
             .unwrap()
-            .insert((cols, k, mode_tag.to_string()), plan);
+            .insert((bucket, cols, k, mode_tag.to_string()), plan);
     }
 
     pub fn len(&self) -> usize {
@@ -107,33 +151,56 @@ impl PlanCache {
     }
 
     /// Snapshot of every cached entry (for reporting / persistence).
-    pub fn snapshot(&self) -> Vec<(usize, usize, String, Plan)> {
+    pub fn snapshot(&self) -> Vec<(RowBucket, usize, usize, String, Plan)> {
         self.inner
             .read()
             .unwrap()
             .iter()
-            .map(|((c, k, m), p)| (*c, *k, m.clone(), p.clone()))
+            .map(|((b, c, k, m), p)| (*b, *c, *k, m.clone(), p.clone()))
             .collect()
     }
 
     /// Serialize to the JSON document format, stamped with a host
-    /// fingerprint. Forced plans are deliberately dropped: they record
-    /// an operator pin, not a measurement, and persisting them would
-    /// keep the pinned choice alive after the pin is removed from the
-    /// config.
-    pub fn to_json_for_host(&self, host: &HostFingerprint) -> String {
+    /// fingerprint and a creation time. Forced plans are deliberately
+    /// dropped: they record an operator pin, not a measurement, and
+    /// persisting them would keep the pinned choice alive after the pin
+    /// is removed from the config.
+    pub fn to_json_for_host_at(&self, host: &HostFingerprint, created_unix: u64) -> String {
         let plans: Vec<Value> = self
             .snapshot()
             .into_iter()
-            .filter(|(_, _, _, plan)| plan.source != PlanSource::Forced)
-            .map(|(cols, k, mode, plan)| {
+            .filter(|(_, _, _, _, plan)| plan.source != PlanSource::Forced)
+            .map(|(bucket, cols, k, mode, plan)| {
+                let probes: Vec<Value> = plan
+                    .probes
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("kind", json::s(p.kind.name())),
+                            ("name", json::s(&p.name)),
+                            ("secs", json::num(p.secs)),
+                            ("rows", json::num(p.rows as f64)),
+                        ])
+                    })
+                    .collect();
+                let runner_up = match &plan.runner_up {
+                    Some(ru) => json::obj(vec![
+                        ("backend", json::s(&ru.backend)),
+                        ("algo", json::s(&ru.algo.name())),
+                        ("grain", json::num(ru.grain as f64)),
+                    ]),
+                    None => Value::Null,
+                };
                 json::obj(vec![
+                    ("rows_bucket", json::s(bucket.name())),
                     ("cols", json::num(cols as f64)),
                     ("k", json::num(k as f64)),
                     ("mode", json::s(&mode)),
                     ("backend", json::s(&plan.backend)),
                     ("algo", json::s(&plan.algo.name())),
                     ("grain", json::num(plan.grain as f64)),
+                    ("probes", json::arr(probes)),
+                    ("runner_up", runner_up),
                 ])
             })
             .collect();
@@ -146,9 +213,22 @@ impl PlanCache {
                     ("cpu_model", json::s(&host.cpu_model)),
                 ]),
             ),
+            ("created_unix", json::num(created_unix as f64)),
             ("plans", json::arr(plans)),
         ])
         .to_string()
+    }
+
+    /// The stamp a save should carry: the oldest merged document's
+    /// `created_unix` when entries were loaded from disk, else now.
+    fn persist_stamp(&self) -> u64 {
+        self.created.lock().unwrap().unwrap_or_else(now_unix)
+    }
+
+    /// Serialize stamped with a host fingerprint, preserving the
+    /// original calibration time of loaded entries (see `created`).
+    pub fn to_json_for_host(&self, host: &HostFingerprint) -> String {
+        self.to_json_for_host_at(host, self.persist_stamp())
     }
 
     /// Serialize stamped with the current machine's fingerprint.
@@ -163,14 +243,18 @@ impl PlanCache {
     }
 
     /// Merge entries from a JSON document into this cache, trusting it
-    /// only if its schema version and host fingerprint match `host`.
-    /// All-or-nothing: a document that fails anywhere leaves the cache
-    /// untouched (a caller that logs "re-calibrating" must actually
-    /// have ignored all of it).
-    pub fn load_json_for_host(
+    /// only if its schema version matches, its host fingerprint matches
+    /// `host`, and its creation stamp is within `ttl_secs` of
+    /// `now_unix` (`ttl_secs = 0` disables expiry). All-or-nothing: a
+    /// document that fails anywhere leaves the cache untouched (a
+    /// caller that logs "re-calibrating" must actually have ignored all
+    /// of it).
+    pub fn load_json_for_host_at(
         &self,
         text: &str,
         host: &HostFingerprint,
+        now_unix: u64,
+        ttl_secs: u64,
     ) -> Result<usize, String> {
         let v = json::parse(text)?;
         let version = v.get("version").and_then(Value::as_usize).unwrap_or(0);
@@ -197,12 +281,30 @@ impl PlanCache {
                 host.parallelism, host.cpu_model
             ));
         }
+        let created = v
+            .get("created_unix")
+            .and_then(Value::as_usize)
+            .ok_or("plan cache missing created_unix stamp")?
+            as u64;
+        if ttl_secs > 0 {
+            let age = now_unix.saturating_sub(created);
+            if age > ttl_secs {
+                return Err(format!(
+                    "plan cache expired (age {age}s > ttl {ttl_secs}s)"
+                ));
+            }
+        }
         let plans = v
             .get("plans")
             .and_then(Value::as_array)
             .ok_or("plan cache missing plans array")?;
-        let mut parsed: Vec<(usize, usize, String, Plan)> = Vec::new();
+        let mut parsed: Vec<(RowBucket, usize, usize, String, Plan)> = Vec::new();
         for p in plans {
+            let bucket = RowBucket::parse(
+                p.get("rows_bucket")
+                    .and_then(Value::as_str)
+                    .ok_or("bad rows_bucket")?,
+            )?;
             let cols = p.get("cols").and_then(Value::as_usize).ok_or("bad cols")?;
             let k = p.get("k").and_then(Value::as_usize).ok_or("bad k")?;
             let mode = p.get("mode").and_then(Value::as_str).ok_or("bad mode")?;
@@ -219,15 +321,70 @@ impl PlanCache {
             // to the paper's kernel — any other algorithm would change
             // the output contract, not just the speed
             let key_mode = parse_mode_tag(mode)?;
-            if !crate::plan::is_exact_semantics(key_mode)
-                && !matches!(algo, RowAlgo::RTopK(_))
-            {
+            let exact = crate::plan::is_exact_semantics(key_mode);
+            if !exact && !matches!(algo, RowAlgo::RTopK(_)) {
                 return Err(format!(
                     "plan for approximate mode {mode:?} must use the rtopk \
                      kernel, got {algo_name:?}"
                 ));
             }
+            let mut probes = Vec::new();
+            if let Some(arr) = p.get("probes").and_then(Value::as_array) {
+                for pr in arr {
+                    probes.push(RawProbe {
+                        kind: ProbeKind::parse(
+                            pr.get("kind")
+                                .and_then(Value::as_str)
+                                .ok_or("bad probe kind")?,
+                        )?,
+                        name: pr
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .ok_or("bad probe name")?
+                            .to_string(),
+                        secs: pr
+                            .get("secs")
+                            .and_then(Value::as_f64)
+                            .ok_or("bad probe secs")?,
+                        rows: pr
+                            .get("rows")
+                            .and_then(Value::as_usize)
+                            .unwrap_or(0)
+                            .max(1),
+                    });
+                }
+            }
+            let runner_up = match p.get("runner_up") {
+                None | Some(Value::Null) => None,
+                Some(ru) => {
+                    let ru_algo = parse_algo(
+                        ru.get("algo")
+                            .and_then(Value::as_str)
+                            .ok_or("bad runner_up.algo")?,
+                    )?;
+                    if !exact && !matches!(ru_algo, RowAlgo::RTopK(_)) {
+                        return Err(format!(
+                            "runner-up for approximate mode {mode:?} must \
+                             use the rtopk kernel"
+                        ));
+                    }
+                    Some(RunnerUp {
+                        backend: ru
+                            .get("backend")
+                            .and_then(Value::as_str)
+                            .ok_or("bad runner_up.backend")?
+                            .to_string(),
+                        algo: ru_algo,
+                        grain: ru
+                            .get("grain")
+                            .and_then(Value::as_usize)
+                            .unwrap_or(0)
+                            .max(1),
+                    })
+                }
+            };
             parsed.push((
+                bucket,
                 cols,
                 k,
                 mode.to_string(),
@@ -236,14 +393,32 @@ impl PlanCache {
                     algo,
                     grain,
                     source: PlanSource::Cached,
+                    probes,
+                    runner_up,
                 },
             ));
         }
         let n = parsed.len();
-        for (cols, k, mode, plan) in parsed {
-            self.insert(cols, k, &mode, plan);
+        for (bucket, cols, k, mode, plan) in parsed {
+            self.insert(bucket, cols, k, &mode, plan);
+        }
+        // remember the oldest merged stamp so a later save carries the
+        // calibration time forward instead of refreshing the TTL
+        {
+            let mut c = self.created.lock().unwrap();
+            *c = Some(c.map_or(created, |prev| prev.min(created)));
         }
         Ok(n)
+    }
+
+    /// Merge a document checked against `host` at the current time with
+    /// the default TTL.
+    pub fn load_json_for_host(
+        &self,
+        text: &str,
+        host: &HostFingerprint,
+    ) -> Result<usize, String> {
+        self.load_json_for_host_at(text, host, now_unix(), DEFAULT_TTL_SECS)
     }
 
     /// Merge a document checked against the current machine.
@@ -251,11 +426,21 @@ impl PlanCache {
         self.load_json_for_host(text, &HostFingerprint::current())
     }
 
-    /// Load from a file path.
-    pub fn load(&self, path: &Path) -> Result<usize, String> {
+    /// Load from a file path with an explicit TTL (`0` = no expiry).
+    pub fn load_with_ttl(&self, path: &Path, ttl_secs: u64) -> Result<usize, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read plan cache {path:?}: {e}"))?;
-        self.load_json(&text)
+        self.load_json_for_host_at(
+            &text,
+            &HostFingerprint::current(),
+            now_unix(),
+            ttl_secs,
+        )
+    }
+
+    /// Load from a file path with the default TTL.
+    pub fn load(&self, path: &Path) -> Result<usize, String> {
+        self.load_with_ttl(path, DEFAULT_TTL_SECS)
     }
 }
 
@@ -306,6 +491,36 @@ mod tests {
             algo,
             grain,
             source: PlanSource::Calibrated,
+            probes: Vec::new(),
+            runner_up: None,
+        }
+    }
+
+    fn rich_plan() -> Plan {
+        Plan {
+            backend: "cpu".into(),
+            algo: RowAlgo::RTopK(Mode::EXACT),
+            grain: 64,
+            source: PlanSource::Calibrated,
+            probes: vec![
+                RawProbe {
+                    kind: ProbeKind::Algo,
+                    name: "rtopk_exact".into(),
+                    secs: 1.25e-5,
+                    rows: 64,
+                },
+                RawProbe {
+                    kind: ProbeKind::Backend,
+                    name: "pjrt".into(),
+                    secs: 3.5e-4,
+                    rows: 1024,
+                },
+            ],
+            runner_up: Some(RunnerUp {
+                backend: "cpu".into(),
+                algo: RowAlgo::Heap,
+                grain: 32,
+            }),
         }
     }
 
@@ -313,22 +528,33 @@ mod tests {
     fn insert_get_snapshot() {
         let c = PlanCache::new();
         assert!(c.is_empty());
-        c.insert(256, 32, "exact", plan(RowAlgo::Radix, 64));
+        c.insert(RowBucket::Le1024, 256, 32, "exact", plan(RowAlgo::Radix, 64));
         assert_eq!(c.len(), 1);
-        let p = c.get(256, 32, "exact").unwrap();
+        let p = c.get(RowBucket::Le1024, 256, 32, "exact").unwrap();
         assert_eq!(p.algo, RowAlgo::Radix);
         assert_eq!(p.grain, 64);
         assert_eq!(p.backend, "cpu");
-        assert!(c.get(256, 32, "es4").is_none());
+        assert!(c.get(RowBucket::Le1024, 256, 32, "es4").is_none());
+        assert!(
+            c.get(RowBucket::Le64, 256, 32, "exact").is_none(),
+            "buckets are distinct key dimensions"
+        );
         assert_eq!(c.snapshot().len(), 1);
     }
 
     #[test]
-    fn json_roundtrip_preserves_backend_ids() {
+    fn json_roundtrip_preserves_backend_probes_and_runner_up() {
         let c = PlanCache::new();
-        c.insert(256, 32, "exact", plan(RowAlgo::RTopK(Mode::EXACT), 64));
-        c.insert(512, 16, "es4", plan(RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 }), 32));
+        c.insert(RowBucket::Le64, 256, 32, "exact", rich_plan());
         c.insert(
+            RowBucket::Le1024,
+            512,
+            16,
+            "es4",
+            plan(RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 }), 32),
+        );
+        c.insert(
+            RowBucket::Gt1024,
             768,
             128,
             "exact",
@@ -337,16 +563,20 @@ mod tests {
                 algo: RowAlgo::Bucket,
                 grain: 21,
                 source: PlanSource::Calibrated,
+                probes: Vec::new(),
+                runner_up: None,
             },
         );
         let text = c.to_json();
         let d = PlanCache::new();
         assert_eq!(d.load_json(&text).unwrap(), 3);
-        for (cols, k, mode, p) in c.snapshot() {
-            let q = d.get(cols, k, &mode).unwrap();
+        for (bucket, cols, k, mode, p) in c.snapshot() {
+            let q = d.get(bucket, cols, k, &mode).unwrap();
             assert_eq!(q.algo, p.algo);
             assert_eq!(q.grain, p.grain);
             assert_eq!(q.backend, p.backend);
+            assert_eq!(q.probes, p.probes);
+            assert_eq!(q.runner_up, p.runner_up);
             assert_eq!(q.source, PlanSource::Cached);
         }
     }
@@ -354,13 +584,74 @@ mod tests {
     #[test]
     fn file_roundtrip() {
         let c = PlanCache::new();
-        c.insert(100, 10, "exact", plan(RowAlgo::QuickSelect, 8));
+        c.insert(RowBucket::Le64, 100, 10, "exact", plan(RowAlgo::QuickSelect, 8));
         let path = std::env::temp_dir().join("rtopk_plan_cache_test.json");
         c.save(&path).unwrap();
         let d = PlanCache::new();
         assert_eq!(d.load(&path).unwrap(), 1);
-        assert_eq!(d.get(100, 10, "exact").unwrap().algo, RowAlgo::QuickSelect);
+        assert_eq!(
+            d.get(RowBucket::Le64, 100, 10, "exact").unwrap().algo,
+            RowAlgo::QuickSelect
+        );
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn ttl_expires_old_documents_wholesale() {
+        let host = HostFingerprint::current();
+        let c = PlanCache::new();
+        c.insert(RowBucket::Le64, 256, 32, "exact", plan(RowAlgo::Radix, 64));
+        let written_at = 1_000_000u64;
+        let text = c.to_json_for_host_at(&host, written_at);
+        let d = PlanCache::new();
+        // within the ttl: loads
+        assert_eq!(
+            d.load_json_for_host_at(&text, &host, written_at + 100, 3600)
+                .unwrap(),
+            1
+        );
+        // past the ttl: rejected wholesale
+        let e = PlanCache::new();
+        let err = e
+            .load_json_for_host_at(&text, &host, written_at + 7200, 3600)
+            .unwrap_err();
+        assert!(err.contains("expired"), "got: {err}");
+        assert!(e.is_empty());
+        // ttl = 0 disables expiry
+        assert_eq!(
+            e.load_json_for_host_at(&text, &host, written_at + 1_000_000_000, 0)
+                .unwrap(),
+            1
+        );
+    }
+
+    #[test]
+    fn save_preserves_the_original_calibration_stamp() {
+        // Regression: re-stamping created_unix at every save let a
+        // load→save cycle (any service restart) refresh the TTL
+        // forever; the stamp must keep recording calibration time.
+        let host = HostFingerprint::current();
+        let src = PlanCache::new();
+        src.insert(RowBucket::Le64, 256, 32, "exact", plan(RowAlgo::Radix, 64));
+        let t0 = 1_000_000u64;
+        let text = src.to_json_for_host_at(&host, t0);
+        let d = PlanCache::new();
+        assert_eq!(
+            d.load_json_for_host_at(&text, &host, t0 + 10, 3600).unwrap(),
+            1
+        );
+        // d re-saves much later: the document must still carry t0...
+        let resaved = d.to_json_for_host(&host);
+        let e = PlanCache::new();
+        let err = e
+            .load_json_for_host_at(&resaved, &host, t0 + 7200, 3600)
+            .unwrap_err();
+        assert!(err.contains("expired"), "ttl was refreshed by save: {err}");
+        // ...while a never-loaded cache stamps its own (fresh) time
+        let fresh = PlanCache::new();
+        fresh.insert(RowBucket::Le64, 64, 8, "exact", plan(RowAlgo::Heap, 8));
+        let f = PlanCache::new();
+        assert_eq!(f.load_json(&fresh.to_json()).unwrap(), 1);
     }
 
     #[test]
@@ -382,33 +673,61 @@ mod tests {
         assert!(parse_algo("rtopk_wat").is_err());
     }
 
+    /// `"host": {...}, "created_unix": N` fragment for hand-built docs.
+    fn host_json() -> String {
+        let host = HostFingerprint::current();
+        format!(
+            r#""host": {{"parallelism": {}, "cpu_model": {}}}, "created_unix": {}"#,
+            host.parallelism,
+            json::s(&host.cpu_model).to_string(),
+            super::now_unix()
+        )
+    }
+
     #[test]
     fn rejects_bad_documents() {
         let c = PlanCache::new();
         assert!(c.load_json("{}").is_err());
-        // v1 documents (no fingerprint, no backend) are stale by
-        // definition — recalibrate rather than reinterpret
+        // v1/v2 documents are stale by definition — recalibrate rather
+        // than reinterpret (v2 lacked buckets, probes, and the stamp)
         assert!(c.load_json(r#"{"version": 1, "plans": []}"#).is_err());
-        assert!(c.load_json(r#"{"version": 3, "plans": []}"#).is_err());
-        // v2 without a host stamp
         assert!(c.load_json(r#"{"version": 2, "plans": []}"#).is_err());
-        // entry missing required fields
+        assert!(c.load_json(r#"{"version": 4, "plans": []}"#).is_err());
+        // v3 without a host stamp
+        assert!(c.load_json(r#"{"version": 3, "plans": []}"#).is_err());
+        // v3 without a creation stamp
         let host = HostFingerprint::current();
-        let doc = format!(
-            r#"{{"version": 2,
+        let no_stamp = format!(
+            r#"{{"version": 3,
                 "host": {{"parallelism": {}, "cpu_model": {}}},
-                "plans": [{{"cols": 1}}]}}"#,
+                "plans": []}}"#,
             host.parallelism,
             json::s(&host.cpu_model).to_string()
         );
+        assert!(c.load_json(&no_stamp).unwrap_err().contains("created_unix"));
+        // entry missing required fields
+        let doc = format!(
+            r#"{{"version": 3, {}, "plans": [{{"cols": 1}}]}}"#,
+            host_json()
+        );
         assert!(c.load_json(&doc).is_err());
+        // entry without a rows bucket (the v3 key dimension)
+        let doc = format!(
+            r#"{{"version": 3, {}, "plans": [
+              {{"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
+                "algo": "radix", "grain": 8}}
+            ]}}"#,
+            host_json()
+        );
+        let err = c.load_json(&doc).unwrap_err();
+        assert!(err.contains("rows_bucket"), "got: {err}");
         assert!(c.is_empty());
     }
 
     #[test]
     fn cache_from_another_host_is_recalibrated_not_trusted() {
         let c = PlanCache::new();
-        c.insert(256, 32, "exact", plan(RowAlgo::Radix, 64));
+        c.insert(RowBucket::Le64, 256, 32, "exact", plan(RowAlgo::Radix, 64));
         let foreign = HostFingerprint {
             parallelism: 31_337,
             cpu_model: "Martian Quantum Core".into(),
@@ -424,14 +743,12 @@ mod tests {
 
     #[test]
     fn entries_without_a_backend_id_are_rejected() {
-        let host = HostFingerprint::current();
         let doc = format!(
-            r#"{{"version": 2,
-                "host": {{"parallelism": {}, "cpu_model": {}}},
-                "plans": [{{"cols": 256, "k": 32, "mode": "exact",
-                            "algo": "radix", "grain": 8}}]}}"#,
-            host.parallelism,
-            json::s(&host.cpu_model).to_string()
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le64", "cols": 256, "k": 32,
+                "mode": "exact", "algo": "radix", "grain": 8}}
+            ]}}"#,
+            host_json()
         );
         let c = PlanCache::new();
         let err = c.load_json(&doc).unwrap_err();
@@ -442,8 +759,15 @@ mod tests {
     #[test]
     fn forced_plans_are_not_persisted() {
         let c = PlanCache::new();
-        c.insert(256, 32, "exact", plan(RowAlgo::RTopK(Mode::EXACT), 64));
         c.insert(
+            RowBucket::Le64,
+            256,
+            32,
+            "exact",
+            plan(RowAlgo::RTopK(Mode::EXACT), 64),
+        );
+        c.insert(
+            RowBucket::Le64,
             512,
             32,
             "exact",
@@ -452,37 +776,52 @@ mod tests {
                 algo: RowAlgo::Sort,
                 grain: 64,
                 source: PlanSource::Forced,
+                probes: Vec::new(),
+                runner_up: None,
             },
         );
         let d = PlanCache::new();
         assert_eq!(d.load_json(&c.to_json()).unwrap(), 1);
-        assert!(d.get(512, 32, "exact").is_none(), "pin leaked to disk");
+        assert!(
+            d.get(RowBucket::Le64, 512, 32, "exact").is_none(),
+            "pin leaked to disk"
+        );
     }
 
     #[test]
     fn approximate_mode_keys_require_the_rtopk_kernel() {
-        let host = HostFingerprint::current();
-        let host_json = format!(
-            r#""host": {{"parallelism": {}, "cpu_model": {}}}"#,
-            host.parallelism,
-            json::s(&host.cpu_model).to_string()
-        );
         let c = PlanCache::new();
         let doc = format!(
-            r#"{{"version": 2, {host_json}, "plans": [
-              {{"cols": 256, "k": 32, "mode": "es4", "backend": "cpu",
-                "algo": "heap", "grain": 8}}
-            ]}}"#
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "es4",
+                "backend": "cpu", "algo": "heap", "grain": 8}}
+            ]}}"#,
+            host_json()
         );
         let err = c.load_json(&doc).unwrap_err();
         assert!(err.contains("rtopk"), "got: {err}");
         assert!(c.is_empty());
+        // a non-rtopk runner-up under an approximate key is just as
+        // wrong: a shadow demotion would then change semantics
+        let doc = format!(
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "es4",
+                "backend": "cpu", "algo": "rtopk_es4", "grain": 8,
+                "runner_up": {{"backend": "cpu", "algo": "heap",
+                               "grain": 8}}}}
+            ]}}"#,
+            host_json()
+        );
+        let err = c.load_json(&doc).unwrap_err();
+        assert!(err.contains("runner-up"), "got: {err}");
+        assert!(c.is_empty());
         // the same algo under an exact key is fine
         let ok = format!(
-            r#"{{"version": 2, {host_json}, "plans": [
-              {{"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
-                "algo": "heap", "grain": 8}}
-            ]}}"#
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "exact",
+                "backend": "cpu", "algo": "heap", "grain": 8}}
+            ]}}"#,
+            host_json()
         );
         assert_eq!(c.load_json(&ok).unwrap(), 1);
     }
@@ -491,18 +830,14 @@ mod tests {
     fn bad_document_is_all_or_nothing() {
         // a valid entry followed by a broken one must not leave the
         // valid prefix merged in
-        let host = HostFingerprint::current();
         let doc = format!(
-            r#"{{"version": 2,
-                "host": {{"parallelism": {}, "cpu_model": {}}},
-                "plans": [
-              {{"cols": 256, "k": 32, "mode": "exact", "backend": "cpu",
-                "algo": "radix", "grain": 8}},
-              {{"cols": 512, "k": 16, "mode": "exact", "backend": "cpu",
-                "algo": "not_an_algo"}}
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "exact",
+                "backend": "cpu", "algo": "radix", "grain": 8}},
+              {{"rows_bucket": "le64", "cols": 512, "k": 16, "mode": "exact",
+                "backend": "cpu", "algo": "not_an_algo"}}
             ]}}"#,
-            host.parallelism,
-            json::s(&host.cpu_model).to_string()
+            host_json()
         );
         let c = PlanCache::new();
         assert!(c.load_json(&doc).is_err());

@@ -12,7 +12,11 @@
 //! the timed repetitions per candidate; with the default 192 x 3 a full
 //! 7-candidate calibration at M=768 touches ~3M elements — well under a
 //! millisecond of one-time work per shape, amortized over every batch
-//! the service ever runs at that shape.
+//! the service ever runs at that shape. The planner sizes `rows` per
+//! [`crate::plan::RowBucket`] (`RowBucket::representative_rows`), so a
+//! small-batch bucket is probed at small-batch geometry — where
+//! per-batch setup costs dominate — and a bulk bucket at bulk geometry,
+//! instead of one fixed probe size speaking for both.
 
 use crate::backend::{ExecBackend, ExecSpec};
 use crate::topk::rowwise::{rowwise_topk_grained, RowAlgo};

@@ -13,7 +13,14 @@
 //! *measuring* faster than the CPU engine — not by merely existing in
 //! the manifest.
 //!
-//! Decision pipeline for a `(cols, k, mode)` key:
+//! Shapes are keyed by **batch row count** as well as `(cols, k, mode)`:
+//! row count dominates the setup-vs-throughput tradeoff at service
+//! batch sizes (a 16-row batch favors low-setup algorithms that a
+//! 4096-row batch would not), so plans carry a [`RowBucket`] dimension
+//! and each bucket is calibrated at a representative row count of its
+//! own instead of one fixed probe size.
+//!
+//! Decision pipeline for a `(rows-bucket, cols, k, mode)` key:
 //!
 //! 1. **Force overrides** (`PlannerConfig::force`,
 //!    `PlannerConfig::force_backend`): operator pins, honored only when
@@ -21,27 +28,37 @@
 //!    backend that does not support a shape falls back to the CPU
 //!    engine). Pinned decisions live in a session-local cache and are
 //!    never persisted.
-//! 2. **Plan cache** ([`cache::PlanCache`]): one decision per shape for
-//!    the process lifetime; optionally persisted to JSON (schema-
-//!    versioned and host-fingerprinted — a cache from another host or
-//!    schema is re-calibrated instead of trusted) and reloaded at
-//!    startup. A cached plan naming a backend this process does not
-//!    have is re-decided, not trusted.
+//! 2. **Plan cache** ([`cache::PlanCache`]): one decision per keyed
+//!    shape for the process lifetime; optionally persisted to JSON
+//!    (schema-versioned, host-fingerprinted, and TTL-stamped — a cache
+//!    from another host, another schema, or past its TTL is
+//!    re-calibrated instead of trusted) and reloaded at startup. A
+//!    cached plan naming a backend this process does not have is
+//!    re-decided, not trusted.
 //! 3. **Cost-model prior** ([`model`]): the `simt` instruction-stream
 //!    estimates rank the CPU candidates; with calibration disabled the
 //!    backend prior is "a compiled tile exists" (the old manifest-only
 //!    router's rule).
 //! 4. **Microbenchmark calibration** ([`calibrate`]): when the budget
 //!    allows (`calib_rows > 0`), every CPU candidate is timed on a
-//!    small deterministic workload and the winner's grain is
-//!    calibrated; then every registered accelerator backend supporting
-//!    the shape is timed with the same harness
-//!    ([`calibrate::time_backend`]), each at its own natural batch
-//!    size (e.g. one full PJRT tile), and the fastest *per-row* rate
-//!    wins the shape — a tiled backend is not charged for padding rows
-//!    the CPU probe never computes. Backends that cannot execute here
-//!    (stub PJRT build, missing artifacts) fail their probe and are
-//!    skipped cleanly.
+//!    small deterministic workload sized for the request's row bucket
+//!    and the winner's grain is calibrated; then every registered
+//!    accelerator backend supporting the shape is timed with the same
+//!    harness ([`calibrate::time_backend`]), each at its own natural
+//!    batch size (e.g. one full PJRT tile), and the fastest *per-row*
+//!    rate wins the shape. Backends that cannot execute here (stub
+//!    PJRT build, missing artifacts) fail their probe and are skipped
+//!    cleanly. The raw probe timings and the runner-up candidate are
+//!    recorded on the plan (and persisted), so the decision stays
+//!    auditable and online re-probing has a comparator.
+//! 5. **Shadow re-probing** (`shadow_every > 0`): calibration is a
+//!    one-time measurement, but the host drifts (thermal limits,
+//!    co-tenant contention, driver updates). Every Nth dispatched batch
+//!    the scheduler re-times the live batch against the plan's
+//!    runner-up and feeds the measured edge into an EWMA
+//!    ([`Planner::record_shadow`]); a winner whose edge inverts past a
+//!    hysteresis margin is demoted in place, with quarantine-style
+//!    bounded logging mirroring the backend degradation path.
 //!
 //! ## Correctness contract
 //!
@@ -56,7 +73,9 @@
 //!   grain and always executes `RowAlgo::RTopK(mode)`.
 //! * Backends carry the same contract (`tests/runtime.rs` pins the
 //!   PJRT tile bit-for-bit against the Rust engine), so switching
-//!   backends can change speed, never results.
+//!   backends can change speed, never results. Shadow demotion only
+//!   swaps between candidates of the same race, so it inherits the
+//!   guarantee.
 //!
 //! ## Knobs (config `[plan]` / `[backend]` sections, `rtopk plan` flags)
 //!
@@ -64,10 +83,15 @@
 //!   `heap`, `bucket`, `bitonic`, `sort`); empty = adaptive.
 //! * `backend.force` — pin one backend id (`cpu`, `pjrt`, ...); empty =
 //!   adaptive (measured) selection.
-//! * `calib_rows` — probe-matrix rows per candidate; `0` disables
-//!   microbenchmarks (cost-model + manifest-prior decisions).
+//! * `calib_rows` — baseline probe-matrix rows per candidate (each row
+//!   bucket scales its own representative probe from this); `0`
+//!   disables microbenchmarks (cost-model + manifest-prior decisions).
 //! * `calib_reps` — timed repetitions per probe (best-of).
 //! * `cache_path` — JSON file for plan persistence across restarts.
+//! * `cache_ttl_secs` — persisted-cache expiry; an older document is
+//!   re-calibrated wholesale (0 = never expires).
+//! * `shadow_every` — shadow re-probe every Nth dispatched batch
+//!   (0 = off; dispatch is then exactly the pre-shadow path).
 
 pub mod cache;
 pub mod calibrate;
@@ -77,10 +101,77 @@ use crate::backend::{BackendRegistry, ExecSpec, CPU_BACKEND_ID};
 use crate::topk::rowwise::{default_grain, rowwise_topk_grained, RowAlgo};
 use crate::topk::types::{Mode, TopKResult};
 use crate::util::matrix::RowMatrix;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 pub use cache::{parse_algo, parse_mode_tag, HostFingerprint, PlanCache};
+
+/// Batch row-count buckets — the rows dimension of a plan key. Three
+/// service-shaped regimes: interactive trickles (`<= 64` rows), the
+/// batcher's steady state (`<= 1024`, the default tile budget), and
+/// oversized/bulk requests (`> 1024`). Coarse on purpose: each bucket
+/// is one calibration, and winners move with orders of magnitude, not
+/// with ±10 rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RowBucket {
+    /// `rows <= 64`
+    Le64,
+    /// `64 < rows <= 1024`
+    Le1024,
+    /// `rows > 1024`
+    Gt1024,
+}
+
+impl RowBucket {
+    pub const ALL: [RowBucket; 3] =
+        [RowBucket::Le64, RowBucket::Le1024, RowBucket::Gt1024];
+
+    /// The bucket a batch of `rows` rows plans under.
+    pub fn of(rows: usize) -> RowBucket {
+        if rows <= 64 {
+            RowBucket::Le64
+        } else if rows <= 1024 {
+            RowBucket::Le1024
+        } else {
+            RowBucket::Gt1024
+        }
+    }
+
+    /// Stable serialized name (plan-cache schema v3, CLI output).
+    pub fn name(self) -> &'static str {
+        match self {
+            RowBucket::Le64 => "le64",
+            RowBucket::Le1024 => "le1024",
+            RowBucket::Gt1024 => "gt1024",
+        }
+    }
+
+    /// Inverse of [`RowBucket::name`].
+    pub fn parse(s: &str) -> Result<RowBucket, String> {
+        match s {
+            "le64" => Ok(RowBucket::Le64),
+            "le1024" => Ok(RowBucket::Le1024),
+            "gt1024" => Ok(RowBucket::Gt1024),
+            other => Err(format!(
+                "unknown rows bucket {other:?} (expected le64 | le1024 | gt1024)"
+            )),
+        }
+    }
+
+    /// Probe-matrix rows used to calibrate this bucket, scaled from the
+    /// `calib_rows` budget but clamped *into* the bucket so the probe
+    /// actually has the bucket's geometry (a 192-row probe says nothing
+    /// about per-batch setup costs at 16 rows, and vice versa).
+    pub fn representative_rows(self, calib_rows: usize) -> usize {
+        match self {
+            RowBucket::Le64 => calib_rows.clamp(1, 64),
+            RowBucket::Le1024 => calib_rows.clamp(96, 1024),
+            RowBucket::Gt1024 => (calib_rows.saturating_mul(8)).clamp(1280, 4096),
+        }
+    }
+}
 
 /// Where a plan came from (reporting / cache hygiene).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,6 +184,8 @@ pub enum PlanSource {
     Model,
     /// microbenchmark-calibrated
     Calibrated,
+    /// winner demoted by an online shadow re-probe
+    Shadow,
 }
 
 impl PlanSource {
@@ -102,8 +195,60 @@ impl PlanSource {
             PlanSource::Cached => "cached",
             PlanSource::Model => "model",
             PlanSource::Calibrated => "calibrated",
+            PlanSource::Shadow => "shadow",
         }
     }
+}
+
+/// What kind of candidate a raw probe timing measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbeKind {
+    /// a CPU-engine algorithm
+    Algo,
+    /// a registered accelerator backend
+    Backend,
+}
+
+impl ProbeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbeKind::Algo => "algo",
+            ProbeKind::Backend => "backend",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ProbeKind, String> {
+        match s {
+            "algo" => Ok(ProbeKind::Algo),
+            "backend" => Ok(ProbeKind::Backend),
+            other => Err(format!("unknown probe kind {other:?}")),
+        }
+    }
+}
+
+/// One raw calibration measurement, kept on the plan (and persisted in
+/// cache schema v3) so a cached decision stays auditable after the
+/// fact: `secs` over `rows` probe rows for the named candidate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RawProbe {
+    pub kind: ProbeKind,
+    /// algorithm name ([`RowAlgo::name`]) or backend id
+    pub name: String,
+    /// best-of-reps wall seconds for the candidate's probe matrix
+    pub secs: f64,
+    /// rows that probe executed (backends probe at their natural size)
+    pub rows: usize,
+}
+
+/// The second-fastest candidate of a shape's calibration race — the
+/// comparator shadow re-probing re-times live batches against. For a
+/// CPU candidate this is `(cpu, algo, grain)`; for an accelerator it is
+/// the backend id with the CPU fallback algorithm.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunnerUp {
+    pub backend: String,
+    pub algo: RowAlgo,
+    pub grain: usize,
 }
 
 /// One execution decision for a shape.
@@ -117,6 +262,12 @@ pub struct Plan {
     /// rows per dynamic work unit (CPU engine)
     pub grain: usize,
     pub source: PlanSource,
+    /// raw calibration timings behind this decision (empty for forced
+    /// and model-only plans)
+    pub probes: Vec<RawProbe>,
+    /// the race's runner-up, if the shape had more than one candidate —
+    /// `None` disables shadow re-probing for the shape
+    pub runner_up: Option<RunnerUp>,
 }
 
 impl Plan {
@@ -134,6 +285,8 @@ impl Plan {
 /// comparable across backends but rates are.
 #[derive(Clone, Debug)]
 pub struct BackendProbe {
+    /// the row bucket this race calibrated
+    pub bucket: RowBucket,
     pub cols: usize,
     pub k: usize,
     /// the shape's mode key (see [`mode_key`])
@@ -176,6 +329,20 @@ pub fn parse_force(s: &str) -> Result<ForceAlgo, String> {
     }
 }
 
+/// EWMA weight of each new shadow edge sample.
+pub const SHADOW_EWMA_ALPHA: f64 = 0.3;
+/// Hysteresis margin: the runner-up must measure at least this much
+/// faster (relative) on the EWMA before the winner is demoted.
+/// Symmetric by construction — after a demotion the roles swap, so
+/// flapping requires the *true* edge to oscillate across ±margin.
+pub const SHADOW_MARGIN: f64 = 0.15;
+/// Minimum shadow samples before a demotion can fire (one noisy batch
+/// must never flip a calibrated winner).
+pub const SHADOW_MIN_SAMPLES: u64 = 3;
+/// Bounded logging: at most this many demotion lines per shape
+/// (mirrors the backend-quarantine log bound).
+const SHADOW_LOG_MAX: u32 = 3;
+
 /// Planner knobs (typed form of the config `[plan]` section plus the
 /// `[backend]` pin).
 #[derive(Clone, Debug)]
@@ -184,12 +351,16 @@ pub struct PlannerConfig {
     /// pin every supporting shape to one backend id; `None` = measured
     /// selection
     pub force_backend: Option<String>,
-    /// probe rows per candidate; 0 = cost-model only
+    /// baseline probe rows per candidate; 0 = cost-model only
     pub calib_rows: usize,
     /// best-of repetitions per probe
     pub calib_reps: usize,
     /// JSON persistence path for the plan cache
     pub cache_path: Option<PathBuf>,
+    /// persisted-cache TTL in seconds (0 = never expires)
+    pub cache_ttl_secs: u64,
+    /// shadow re-probe every Nth dispatched batch (0 = off)
+    pub shadow_every: usize,
 }
 
 impl Default for PlannerConfig {
@@ -200,6 +371,8 @@ impl Default for PlannerConfig {
             calib_rows: 192,
             calib_reps: 3,
             cache_path: None,
+            cache_ttl_secs: cache::DEFAULT_TTL_SECS,
+            shadow_every: 0,
         }
     }
 }
@@ -217,6 +390,8 @@ impl PlannerConfig {
             calib_rows: c.calib_rows,
             calib_reps: c.calib_reps.max(1),
             cache_path: c.cache_path.as_ref().map(PathBuf::from),
+            cache_ttl_secs: c.cache_ttl_secs,
+            shadow_every: c.shadow_every,
         })
     }
 }
@@ -270,6 +445,19 @@ pub fn candidates(m: usize, k: usize, mode: Mode) -> Vec<RowAlgo> {
     }
 }
 
+/// Per-shape shadow re-probe state: the EWMA of the winner-vs-runner-up
+/// relative edge, plus the bounded-log counter.
+#[derive(Clone, Copy, Debug, Default)]
+struct ShadowState {
+    /// EWMA of `(runner_secs - winner_secs) / winner_secs`; negative
+    /// means the runner-up is measuring faster than the cached winner
+    ewma: f64,
+    samples: u64,
+    logged: u32,
+}
+
+type ShapeKey = (RowBucket, usize, usize, String);
+
 /// The adaptive planner: decision pipeline + shared plan cache +
 /// backend registry.
 pub struct Planner {
@@ -289,6 +477,12 @@ pub struct Planner {
     decide_lock: Mutex<()>,
     /// Per-shape backend measurements (reporting; `rtopk plan`).
     probe_log: Mutex<Vec<BackendProbe>>,
+    /// Dispatch counter behind [`Planner::shadow_due`].
+    shadow_ctr: AtomicU64,
+    /// Per-shape shadow EWMA state.
+    shadow: Mutex<BTreeMap<ShapeKey, ShadowState>>,
+    /// Total shadow measurements recorded (reporting / tests).
+    shadow_seen: AtomicU64,
 }
 
 impl Default for Planner {
@@ -311,7 +505,7 @@ impl Planner {
         let cache = PlanCache::new();
         if let Some(path) = &cfg.cache_path {
             if path.exists() {
-                if let Err(e) = cache.load(path) {
+                if let Err(e) = cache.load_with_ttl(path, cfg.cache_ttl_secs) {
                     eprintln!("planner: ignoring plan cache (re-calibrating): {e}");
                 }
             }
@@ -323,6 +517,9 @@ impl Planner {
             forced_cache: PlanCache::new(),
             decide_lock: Mutex::new(()),
             probe_log: Mutex::new(Vec::new()),
+            shadow_ctr: AtomicU64::new(0),
+            shadow: Mutex::new(BTreeMap::new()),
+            shadow_seen: AtomicU64::new(0),
         }
     }
 
@@ -358,10 +555,16 @@ impl Planner {
     /// source (a recall is a recall, wherever the entry came from) and
     /// re-stamp the RTopK mode — the cached algo may carry a lossily-
     /// serialized mode (JSON stores the display tag); the request's own
-    /// mode is authoritative.
+    /// mode is authoritative. The runner-up gets the same re-stamp so a
+    /// shadow demotion can never swap in a stale mode.
     fn recall(mut p: Plan, mode: Mode) -> Plan {
         if let RowAlgo::RTopK(_) = p.algo {
             p.algo = RowAlgo::RTopK(mode);
+        }
+        if let Some(ru) = &mut p.runner_up {
+            if let RowAlgo::RTopK(_) = ru.algo {
+                ru.algo = RowAlgo::RTopK(mode);
+            }
         }
         p.source = PlanSource::Cached;
         p
@@ -377,26 +580,28 @@ impl Planner {
             .is_some_and(|b| b.supports(cols, k, mode))
     }
 
-    /// Decide (or recall) the plan for a shape.
-    pub fn plan(&self, cols: usize, k: usize, mode: Mode) -> Plan {
+    /// Decide (or recall) the plan for a batch shape. `rows` is the
+    /// batch's row count; it selects the [`RowBucket`] key dimension.
+    pub fn plan(&self, rows: usize, cols: usize, k: usize, mode: Mode) -> Plan {
         let base_grain = default_grain(cols);
+        let bucket = RowBucket::of(rows);
         let key = mode_key(mode);
         if self.cfg.force.is_some() || self.cfg.force_backend.is_some() {
             // Pinned: the pin fixes the algorithm and/or backend, not
             // the tuning — decided once into the session-local forced
             // cache; the persisted adaptive cache is left alone.
-            if let Some(p) = self.forced_cache.get(cols, k, &key) {
+            if let Some(p) = self.forced_cache.get(bucket, cols, k, &key) {
                 return p;
             }
             let _guard = self.decide_lock.lock().unwrap();
-            if let Some(p) = self.forced_cache.get(cols, k, &key) {
+            if let Some(p) = self.forced_cache.get(bucket, cols, k, &key) {
                 return p;
             }
-            let plan = self.decide_forced(cols, k, mode, base_grain);
-            self.forced_cache.insert(cols, k, &key, plan.clone());
+            let plan = self.decide_forced(bucket, cols, k, mode, base_grain);
+            self.forced_cache.insert(bucket, cols, k, &key, plan.clone());
             return plan;
         }
-        if let Some(p) = self.cache.get(cols, k, &key) {
+        if let Some(p) = self.cache.get(bucket, cols, k, &key) {
             if self.usable(&p, cols, k, mode) {
                 return Self::recall(p, mode);
             }
@@ -405,13 +610,13 @@ impl Planner {
         // timings are not contended, then re-check the cache (another
         // worker may have decided while we waited for the lock).
         let _guard = self.decide_lock.lock().unwrap();
-        if let Some(p) = self.cache.get(cols, k, &key) {
+        if let Some(p) = self.cache.get(bucket, cols, k, &key) {
             if self.usable(&p, cols, k, mode) {
                 return Self::recall(p, mode);
             }
         }
-        let plan = self.decide(cols, k, mode, base_grain);
-        self.cache.insert(cols, k, &key, plan.clone());
+        let plan = self.decide(bucket, cols, k, mode, base_grain);
+        self.cache.insert(bucket, cols, k, &key, plan.clone());
         plan
     }
 
@@ -444,7 +649,9 @@ impl Planner {
     }
 
     /// Race the CPU candidates on a probe workload; returns the winning
-    /// `(algo, grain, secs)` with the grain neighborhood calibrated.
+    /// `(algo, grain, secs)` with the grain neighborhood calibrated,
+    /// plus every candidate's raw probe (fastest first, the winner's
+    /// entry carrying its grain-calibrated time).
     fn race_cpu_on(
         &self,
         x: &RowMatrix,
@@ -452,9 +659,9 @@ impl Planner {
         k: usize,
         mode: Mode,
         base_grain: usize,
-    ) -> (RowAlgo, usize, f64) {
+    ) -> (RowAlgo, usize, f64, Vec<calibrate::Probe>) {
         let cands = candidates(cols, k, mode);
-        let (algo, base_secs) = if cands.len() == 1 {
+        let (mut probes, algo, base_secs) = if cands.len() == 1 {
             // nothing to race, but the grain is still worth measuring
             let secs = calibrate::time_candidate(
                 x,
@@ -463,7 +670,7 @@ impl Planner {
                 base_grain,
                 self.cfg.calib_reps,
             );
-            (cands[0], secs)
+            (vec![calibrate::Probe { algo: cands[0], secs }], cands[0], secs)
         } else {
             let probes = calibrate::microbench_on(
                 x,
@@ -472,7 +679,8 @@ impl Planner {
                 self.cfg.calib_reps,
                 base_grain,
             );
-            (probes[0].algo, probes[0].secs)
+            let (algo, secs) = (probes[0].algo, probes[0].secs);
+            (probes, algo, secs)
         };
         let (grain, secs) = calibrate::pick_grain_timed(
             x,
@@ -482,7 +690,8 @@ impl Planner {
             base_grain,
             base_secs,
         );
-        (algo, grain, secs)
+        probes[0].secs = secs;
+        (algo, grain, secs, probes)
     }
 
     /// Race every registered accelerator backend that supports the
@@ -491,17 +700,21 @@ impl Planner {
     /// *per-row* time, so a tiled backend is not charged for padding
     /// rows the CPU probe never computes. Probes that fail (backend
     /// unavailable here) are skipped cleanly and logged as such.
+    /// Returns the winning backend id plus each successful accelerator
+    /// probe as `(id, secs, rows)`.
     fn race_backends_on(
         &self,
+        bucket: RowBucket,
         x: &RowMatrix,
         cols: usize,
         k: usize,
         mode: Mode,
         cpu_secs: f64,
-    ) -> String {
+    ) -> (String, Vec<(String, f64, usize)>) {
         let key = mode_key(mode);
         let cpu_rows = x.rows.max(1);
         let mut entries = vec![BackendProbe {
+            bucket,
             cols,
             k,
             mode: key.clone(),
@@ -510,6 +723,7 @@ impl Planner {
             rows: cpu_rows,
             chosen: false,
         }];
+        let mut accel = Vec::new();
         let mut best_id = CPU_BACKEND_ID.to_string();
         let mut best_per_row = cpu_secs / cpu_rows as f64;
         for b in self.backends.accelerators() {
@@ -524,8 +738,10 @@ impl Planner {
                     best_id = b.id().to_string();
                     best_per_row = per_row;
                 }
+                accel.push((b.id().to_string(), secs, rows));
             }
             entries.push(BackendProbe {
+                bucket,
                 cols,
                 k,
                 mode: key.clone(),
@@ -539,34 +755,129 @@ impl Planner {
             e.chosen = e.backend == best_id;
         }
         self.probe_log.lock().unwrap().extend(entries);
-        best_id
+        (best_id, accel)
     }
 
-    fn decide(&self, cols: usize, k: usize, mode: Mode, base_grain: usize) -> Plan {
+    fn decide(
+        &self,
+        bucket: RowBucket,
+        cols: usize,
+        k: usize,
+        mode: Mode,
+        base_grain: usize,
+    ) -> Plan {
         if self.cfg.calib_rows == 0 {
-            // model-only: the prior's pick at the default grain, and
-            // the manifest prior for the backend
+            // model-only: the prior's pick at the default grain, the
+            // manifest prior for the backend, and the prior's second
+            // pick as the shadow comparator (with no calibration,
+            // online measurement is the only correction signal)
             let ranked = model::rank(&candidates(cols, k, mode), cols, k);
+            let backend = self.prior_backend(cols, k, mode);
+            let runner_up = if backend != CPU_BACKEND_ID {
+                Some(RunnerUp {
+                    backend: CPU_BACKEND_ID.to_string(),
+                    algo: ranked[0].0,
+                    grain: base_grain,
+                })
+            } else {
+                ranked.get(1).map(|&(a, _)| RunnerUp {
+                    backend: CPU_BACKEND_ID.to_string(),
+                    algo: a,
+                    grain: base_grain,
+                })
+            };
             return Plan {
-                backend: self.prior_backend(cols, k, mode),
+                backend,
                 algo: ranked[0].0,
                 grain: base_grain,
                 source: PlanSource::Model,
+                probes: Vec::new(),
+                runner_up,
             };
         }
-        // one probe workload serves the algorithm race, the grain
-        // neighborhood, and the backend race
-        let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
-        let (algo, grain, secs) = self.race_cpu_on(&x, cols, k, mode, base_grain);
-        let backend = self.race_backends_on(&x, cols, k, mode, secs);
-        Plan { backend, algo, grain, source: PlanSource::Calibrated }
+        // one probe workload — sized for this row bucket — serves the
+        // algorithm race, the grain neighborhood, and the backend race
+        let rep_rows = bucket.representative_rows(self.cfg.calib_rows);
+        let x = calibrate::probe_workload(rep_rows, cols);
+        let (algo, grain, secs, cpu_probes) =
+            self.race_cpu_on(&x, cols, k, mode, base_grain);
+        let (backend, accel) =
+            self.race_backends_on(bucket, &x, cols, k, mode, secs);
+        let probe_rows = x.rows.max(1);
+        let mut probes: Vec<RawProbe> = cpu_probes
+            .iter()
+            .map(|p| RawProbe {
+                kind: ProbeKind::Algo,
+                name: p.algo.name(),
+                secs: p.secs,
+                rows: probe_rows,
+            })
+            .collect();
+        probes.extend(accel.iter().map(|(id, s, r)| RawProbe {
+            kind: ProbeKind::Backend,
+            name: id.clone(),
+            secs: *s,
+            rows: (*r).max(1),
+        }));
+        // unified per-row ranking across CPU algorithms and backends,
+        // to find the runner-up the shadow re-probe compares against
+        let mut ranked: Vec<(String, RowAlgo, usize, f64)> = vec![(
+            CPU_BACKEND_ID.to_string(),
+            algo,
+            grain,
+            secs / probe_rows as f64,
+        )];
+        for p in cpu_probes.iter().skip(1) {
+            ranked.push((
+                CPU_BACKEND_ID.to_string(),
+                p.algo,
+                base_grain,
+                p.secs / probe_rows as f64,
+            ));
+        }
+        for (id, s, r) in &accel {
+            // accelerators carry the CPU winner as their fallback algo
+            ranked.push((id.clone(), algo, grain, s / (*r).max(1) as f64));
+        }
+        ranked.sort_by(|a, b| a.3.partial_cmp(&b.3).unwrap());
+        let runner_up = ranked
+            .iter()
+            .find(|(b, a, _, _)| {
+                if backend != CPU_BACKEND_ID {
+                    b != &backend
+                } else {
+                    !(b == CPU_BACKEND_ID && *a == algo)
+                }
+            })
+            .map(|(b, a, g, _)| RunnerUp {
+                backend: b.clone(),
+                algo: *a,
+                grain: *g,
+            });
+        Plan {
+            backend,
+            algo,
+            grain,
+            source: PlanSource::Calibrated,
+            probes,
+            runner_up,
+        }
     }
 
     /// Decide under an operator pin: the algorithm pin fixes the CPU
     /// algorithm (grain still calibrated), the backend pin fixes the
     /// backend for shapes it supports; whichever dimension is unpinned
-    /// is decided the normal way.
-    fn decide_forced(&self, cols: usize, k: usize, mode: Mode, base_grain: usize) -> Plan {
+    /// is decided the normal way. Pinned plans never carry a runner-up:
+    /// a pin is an instruction, not a measurement, so shadow re-probing
+    /// must not second-guess it.
+    fn decide_forced(
+        &self,
+        bucket: RowBucket,
+        cols: usize,
+        k: usize,
+        mode: Mode,
+        base_grain: usize,
+    ) -> Plan {
         if self.cfg.calib_rows == 0 {
             let algo = self.forced_algo(mode).unwrap_or_else(|| {
                 model::rank(&candidates(cols, k, mode), cols, k)[0].0
@@ -574,9 +885,17 @@ impl Planner {
             let backend = self
                 .forced_backend_for(cols, k, mode)
                 .unwrap_or_else(|| self.prior_backend(cols, k, mode));
-            return Plan { backend, algo, grain: base_grain, source: PlanSource::Forced };
+            return Plan {
+                backend,
+                algo,
+                grain: base_grain,
+                source: PlanSource::Forced,
+                probes: Vec::new(),
+                runner_up: None,
+            };
         }
-        let x = calibrate::probe_workload(self.cfg.calib_rows, cols);
+        let rep_rows = bucket.representative_rows(self.cfg.calib_rows);
+        let x = calibrate::probe_workload(rep_rows, cols);
         let (algo, grain, secs) = match self.forced_algo(mode) {
             Some(algo) => {
                 let base_secs = calibrate::time_candidate(
@@ -596,20 +915,140 @@ impl Planner {
                 );
                 (algo, grain, secs)
             }
-            None => self.race_cpu_on(&x, cols, k, mode, base_grain),
+            None => {
+                let (algo, grain, secs, _) =
+                    self.race_cpu_on(&x, cols, k, mode, base_grain);
+                (algo, grain, secs)
+            }
         };
         let backend = match self.forced_backend_for(cols, k, mode) {
             Some(id) => id,
-            None => self.race_backends_on(&x, cols, k, mode, secs),
+            None => self.race_backends_on(bucket, &x, cols, k, mode, secs).0,
         };
-        Plan { backend, algo, grain, source: PlanSource::Forced }
+        Plan {
+            backend,
+            algo,
+            grain,
+            source: PlanSource::Forced,
+            probes: Vec::new(),
+            runner_up: None,
+        }
+    }
+
+    /// Counter-driven shadow gate: true on every `shadow_every`-th
+    /// call. With `shadow_every = 0` this returns false without
+    /// touching any state, so dispatch behaves exactly as it did before
+    /// shadow re-probing existed.
+    pub fn shadow_due(&self) -> bool {
+        let every = self.cfg.shadow_every;
+        if every == 0 {
+            return false;
+        }
+        let n = self.shadow_ctr.fetch_add(1, Ordering::Relaxed) + 1;
+        n % every as u64 == 0
+    }
+
+    /// Total shadow measurements recorded so far.
+    pub fn shadow_observations(&self) -> u64 {
+        self.shadow_seen.load(Ordering::Relaxed)
+    }
+
+    /// Feed one shadow measurement for a shape: the dispatched winner
+    /// took `winner_secs`, the plan's runner-up took `runner_secs` on
+    /// the *same* live batch. Updates the shape's EWMA edge; when the
+    /// edge inverts past [`SHADOW_MARGIN`] (with at least
+    /// [`SHADOW_MIN_SAMPLES`] samples) the cached winner is demoted —
+    /// the runner-up takes the plan, the old winner becomes the new
+    /// comparator, and the EWMA restarts so re-promotion needs fresh
+    /// evidence (hysteresis, not flapping). Returns whether a demotion
+    /// fired. No-op under operator pins and for shapes without a cached
+    /// adaptive plan or runner-up.
+    pub fn record_shadow(
+        &self,
+        rows: usize,
+        cols: usize,
+        k: usize,
+        mode: Mode,
+        winner_secs: f64,
+        runner_secs: f64,
+    ) -> bool {
+        if self.cfg.force.is_some() || self.cfg.force_backend.is_some() {
+            return false;
+        }
+        let bucket = RowBucket::of(rows);
+        let key = mode_key(mode);
+        let Some(plan) = self.cache.get(bucket, cols, k, &key) else {
+            return false;
+        };
+        let Some(ru) = plan.runner_up.clone() else {
+            return false;
+        };
+        if !(winner_secs.is_finite() && runner_secs.is_finite()) {
+            return false;
+        }
+        self.shadow_seen.fetch_add(1, Ordering::Relaxed);
+        let edge = (runner_secs - winner_secs) / winner_secs.max(1e-12);
+        let mut g = self.shadow.lock().unwrap();
+        let st = g.entry((bucket, cols, k, key.clone())).or_default();
+        st.ewma = if st.samples == 0 {
+            edge
+        } else {
+            SHADOW_EWMA_ALPHA * edge + (1.0 - SHADOW_EWMA_ALPHA) * st.ewma
+        };
+        st.samples += 1;
+        if st.samples < SHADOW_MIN_SAMPLES || st.ewma >= -SHADOW_MARGIN {
+            return false;
+        }
+        // Demote: the runner-up takes the plan; the displaced winner
+        // stays recorded as the comparator so the edge keeps being
+        // watched in the other direction. (A concurrent demotion by
+        // another worker between our cache read and this insert would
+        // be overwritten with the same content — both saw the same
+        // cached plan — so the race is benign.)
+        let old = RunnerUp {
+            backend: plan.backend.clone(),
+            algo: plan.algo,
+            grain: plan.grain,
+        };
+        let demoted = Plan {
+            backend: ru.backend.clone(),
+            algo: ru.algo,
+            grain: ru.grain,
+            source: PlanSource::Shadow,
+            probes: plan.probes.clone(),
+            runner_up: Some(old),
+        };
+        self.cache.insert(bucket, cols, k, &key, demoted);
+        let ewma = st.ewma;
+        st.ewma = 0.0;
+        st.samples = 0;
+        if st.logged < SHADOW_LOG_MAX {
+            st.logged += 1;
+            eprintln!(
+                "planner: shadow re-probe demoted {}/{} for (M={cols}, k={k}, \
+                 {key}, rows {}): runner-up {}/{} measured {:.0}% faster \
+                 (EWMA){}",
+                plan.backend,
+                plan.algo.name(),
+                bucket.name(),
+                ru.backend,
+                ru.algo.name(),
+                -ewma * 100.0,
+                if st.logged == SHADOW_LOG_MAX {
+                    " (further demotions for this shape unlogged)"
+                } else {
+                    ""
+                }
+            );
+        }
+        true
     }
 
     /// Plan + execute one matrix: through the plan's backend when it is
     /// an accelerator (falling back to the CPU engine on error), else
     /// directly on the CPU engine.
     pub fn run(&self, x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
-        let plan = self.plan(x.cols, k, mode);
+        let plan = self.plan(x.rows, x.cols, k, mode);
         if plan.backend != CPU_BACKEND_ID {
             if let Some(b) = self.backends.get(&plan.backend) {
                 if let Ok(mut v) = b.execute(&plan.spec(), &[x], k, mode) {
@@ -657,6 +1096,45 @@ mod tests {
         })
     }
 
+    fn bare_plan(algo: RowAlgo, grain: usize) -> Plan {
+        Plan {
+            backend: CPU_BACKEND_ID.into(),
+            algo,
+            grain,
+            source: PlanSource::Cached,
+            probes: Vec::new(),
+            runner_up: None,
+        }
+    }
+
+    #[test]
+    fn row_buckets_partition_and_roundtrip() {
+        assert_eq!(RowBucket::of(1), RowBucket::Le64);
+        assert_eq!(RowBucket::of(64), RowBucket::Le64);
+        assert_eq!(RowBucket::of(65), RowBucket::Le1024);
+        assert_eq!(RowBucket::of(1024), RowBucket::Le1024);
+        assert_eq!(RowBucket::of(1025), RowBucket::Gt1024);
+        for b in RowBucket::ALL {
+            assert_eq!(RowBucket::parse(b.name()).unwrap(), b);
+        }
+        assert!(RowBucket::parse("le9000").is_err());
+        // representative probes live inside their bucket
+        for calib in [0usize, 32, 192, 4096] {
+            assert_eq!(
+                RowBucket::of(RowBucket::Le64.representative_rows(calib)),
+                RowBucket::Le64
+            );
+            assert_eq!(
+                RowBucket::of(RowBucket::Le1024.representative_rows(calib)),
+                RowBucket::Le1024
+            );
+            assert_eq!(
+                RowBucket::of(RowBucket::Gt1024.representative_rows(calib)),
+                RowBucket::Gt1024
+            );
+        }
+    }
+
     #[test]
     fn exact_candidates_cover_zoo_approximate_pin_kernel() {
         assert_eq!(candidates(256, 32, Mode::EXACT).len(), 7);
@@ -668,23 +1146,74 @@ mod tests {
     }
 
     #[test]
-    fn plan_is_cached_per_shape() {
+    fn plan_is_cached_per_shape_and_bucket() {
         let p = quick_planner();
-        let a = p.plan(128, 16, Mode::EXACT);
-        let b = p.plan(128, 16, Mode::EXACT);
+        let a = p.plan(40, 128, 16, Mode::EXACT);
+        let b = p.plan(40, 128, 16, Mode::EXACT);
         assert_eq!(a.algo, b.algo);
         assert_eq!(b.source, PlanSource::Cached);
         assert_eq!(p.cache().len(), 1);
-        p.plan(128, 16, Mode::EarlyStop { max_iter: 4 });
+        // same bucket, different row count: still one entry
+        p.plan(10, 128, 16, Mode::EXACT);
+        assert_eq!(p.cache().len(), 1);
+        p.plan(40, 128, 16, Mode::EarlyStop { max_iter: 4 });
         assert_eq!(p.cache().len(), 2);
+        // a different bucket of the same (cols, k, mode) is its own plan
+        p.plan(500, 128, 16, Mode::EXACT);
+        assert_eq!(p.cache().len(), 3);
+    }
+
+    #[test]
+    fn buckets_calibrate_at_their_representative_rows() {
+        let p = quick_planner();
+        p.plan(8, 96, 8, Mode::EXACT); // Le64
+        p.plan(500, 96, 8, Mode::EXACT); // Le1024
+        let log = p.probe_log();
+        let rows_for = |bucket: RowBucket| {
+            log.iter()
+                .find(|e| e.bucket == bucket)
+                .expect("bucket probed")
+                .rows
+        };
+        assert_eq!(
+            rows_for(RowBucket::Le64),
+            RowBucket::Le64.representative_rows(32)
+        );
+        assert_eq!(
+            rows_for(RowBucket::Le1024),
+            RowBucket::Le1024.representative_rows(32)
+        );
+    }
+
+    #[test]
+    fn row_buckets_hold_independent_winners() {
+        // When probes disagree across batch geometries, each bucket
+        // keeps its own winner for the same (cols, k, mode).
+        let p = quick_planner();
+        p.cache()
+            .insert(RowBucket::Le64, 300, 10, "exact", bare_plan(RowAlgo::Heap, 8));
+        p.cache().insert(
+            RowBucket::Gt1024,
+            300,
+            10,
+            "exact",
+            bare_plan(RowAlgo::Radix, 64),
+        );
+        assert_eq!(p.plan(8, 300, 10, Mode::EXACT).algo, RowAlgo::Heap);
+        assert_eq!(p.plan(5000, 300, 10, Mode::EXACT).algo, RowAlgo::Radix);
+        assert_eq!(p.cache().len(), 2, "recalls must not add entries");
+        // the unseeded middle bucket calibrates its own entry
+        let mid = p.plan(200, 300, 10, Mode::EXACT);
+        assert_eq!(mid.source, PlanSource::Calibrated);
+        assert_eq!(p.cache().len(), 3);
     }
 
     #[test]
     fn cpu_only_planner_always_plans_the_cpu_backend() {
         let p = quick_planner();
-        assert_eq!(p.plan(128, 16, Mode::EXACT).backend, CPU_BACKEND_ID);
+        assert_eq!(p.plan(40, 128, 16, Mode::EXACT).backend, CPU_BACKEND_ID);
         assert_eq!(
-            p.plan(128, 16, Mode::EarlyStop { max_iter: 4 }).backend,
+            p.plan(40, 128, 16, Mode::EarlyStop { max_iter: 4 }).backend,
             CPU_BACKEND_ID
         );
         // the race logged the cpu probe as chosen
@@ -698,10 +1227,36 @@ mod tests {
     fn early_stop_plans_keep_the_papers_kernel() {
         let p = quick_planner();
         let mode = Mode::EarlyStop { max_iter: 4 };
-        let plan = p.plan(256, 32, mode);
+        let plan = p.plan(40, 256, 32, mode);
         assert_eq!(plan.algo, RowAlgo::RTopK(mode));
         // single-candidate shapes still get their grain measured
         assert_eq!(plan.source, PlanSource::Calibrated);
+        // and a single-candidate CPU-only race has no runner-up
+        assert!(plan.runner_up.is_none());
+    }
+
+    #[test]
+    fn calibrated_plans_record_probes_and_a_runner_up() {
+        let p = quick_planner();
+        let plan = p.plan(40, 128, 16, Mode::EXACT);
+        assert_eq!(plan.source, PlanSource::Calibrated);
+        assert_eq!(
+            plan.probes.len(),
+            7,
+            "every exact candidate's raw timing is recorded"
+        );
+        assert!(plan
+            .probes
+            .iter()
+            .all(|pr| pr.kind == ProbeKind::Algo && pr.secs.is_finite() && pr.rows > 0));
+        let ru = plan.runner_up.expect("multi-candidate race has a runner-up");
+        assert_eq!(ru.backend, CPU_BACKEND_ID);
+        assert_ne!(
+            ru.algo, plan.algo,
+            "runner-up must differ from the winner"
+        );
+        // the winner's probe entry carries its calibrated time
+        assert_eq!(plan.probes[0].name, plan.algo.name());
     }
 
     #[test]
@@ -714,13 +1269,13 @@ mod tests {
         let b = Mode::Exact { eps_rel: 1.4e-4 };
         assert_eq!(a.tag(), b.tag(), "premise: display tags collide");
         assert_ne!(mode_key(a), mode_key(b), "cache keys must not");
-        let pa = p.plan(64, 8, a);
-        let pb = p.plan(64, 8, b);
+        let pa = p.plan(20, 64, 8, a);
+        let pb = p.plan(20, 64, 8, b);
         assert_eq!(p.cache().len(), 2);
         assert_eq!(pa.algo, RowAlgo::RTopK(a));
         assert_eq!(pb.algo, RowAlgo::RTopK(b));
         // cache hits re-stamp the *requested* mode onto RTopK plans
-        assert_eq!(p.plan(64, 8, a).algo, RowAlgo::RTopK(a));
+        assert_eq!(p.plan(20, 64, 8, a).algo, RowAlgo::RTopK(a));
     }
 
     #[test]
@@ -731,31 +1286,28 @@ mod tests {
             calib_reps: 1,
             ..PlannerConfig::default()
         });
-        let first = p.plan(64, 8, Mode::EXACT);
+        let first = p.plan(20, 64, 8, Mode::EXACT);
         assert_eq!(first.algo, RowAlgo::Heap);
         assert_eq!(first.source, PlanSource::Forced);
         assert!(first.grain >= 1, "forced plans still calibrate a grain");
+        assert!(first.runner_up.is_none(), "pins are not shadow-probed");
         let es = Mode::EarlyStop { max_iter: 2 };
-        assert_eq!(p.plan(64, 8, es).algo, RowAlgo::RTopK(es));
+        assert_eq!(p.plan(20, 64, 8, es).algo, RowAlgo::RTopK(es));
         // recalls (now cached) keep the pin
-        assert_eq!(p.plan(64, 8, Mode::EXACT).algo, RowAlgo::Heap);
+        assert_eq!(p.plan(20, 64, 8, Mode::EXACT).algo, RowAlgo::Heap);
         // a stale adaptive decision (e.g. loaded from a pre-pin cache
         // file) is neither trusted nor overwritten by the pinned run —
         // it survives for the day the pin is removed
         p.cache().insert(
+            RowBucket::Le64,
             96,
             8,
             "exact",
-            Plan {
-                backend: CPU_BACKEND_ID.into(),
-                algo: RowAlgo::Radix,
-                grain: 4,
-                source: PlanSource::Cached,
-            },
+            bare_plan(RowAlgo::Radix, 4),
         );
-        assert_eq!(p.plan(96, 8, Mode::EXACT).algo, RowAlgo::Heap);
+        assert_eq!(p.plan(20, 96, 8, Mode::EXACT).algo, RowAlgo::Heap);
         assert_eq!(
-            p.cache().get(96, 8, "exact").unwrap().algo,
+            p.cache().get(RowBucket::Le64, 96, 8, "exact").unwrap().algo,
             RowAlgo::Radix,
             "pinned run must not erase persisted calibration"
         );
@@ -767,7 +1319,7 @@ mod tests {
             calib_rows: 0,
             ..PlannerConfig::default()
         });
-        let plan = p.plan(256, 32, Mode::EXACT);
+        let plan = p.plan(40, 256, 32, Mode::EXACT);
         assert_eq!(plan.source, PlanSource::Model);
         assert_eq!(plan.backend, CPU_BACKEND_ID, "no accelerators registered");
         // the prior must not pick the provably-expensive tail (the
@@ -775,8 +1327,13 @@ mod tests {
         // is the calibrator's call, not the prior's)
         assert_ne!(plan.algo, RowAlgo::Sort);
         assert_ne!(plan.algo, RowAlgo::Bitonic);
-        // model-only decisions do not probe backends
+        // model-only decisions do not probe backends...
         assert!(p.probe_log().is_empty());
+        // ...but still name the prior's second pick as the shadow
+        // comparator — online measurement is their only correction
+        let ru = plan.runner_up.expect("model plans carry a runner-up");
+        assert_eq!(ru.backend, CPU_BACKEND_ID);
+        assert_ne!(ru.algo, plan.algo);
     }
 
     #[test]
@@ -787,7 +1344,7 @@ mod tests {
             for mode in [Mode::EXACT, Mode::EarlyStop { max_iter: 4 }] {
                 let x = RowMatrix::random_normal(50, m, &mut rng);
                 let auto = p.run(&x, k, mode);
-                let plan = p.plan(m, k, mode);
+                let plan = p.plan(x.rows, m, k, mode);
                 let oracle = rowwise_topk_with(&x, k, plan.algo);
                 assert_eq!(auto.values, oracle.values, "M={m} k={k}");
                 assert_eq!(auto.indices, oracle.indices, "M={m} k={k}");
@@ -816,14 +1373,17 @@ mod tests {
             ..PlannerConfig::default()
         };
         let p = Planner::new(cfg.clone());
-        let decided = p.plan(96, 12, Mode::EXACT);
+        let decided = p.plan(30, 96, 12, Mode::EXACT);
         p.save().unwrap();
         let q = Planner::new(cfg);
-        let recalled = q.plan(96, 12, Mode::EXACT);
+        let recalled = q.plan(30, 96, 12, Mode::EXACT);
         assert_eq!(recalled.algo, decided.algo);
         assert_eq!(recalled.grain, decided.grain);
         assert_eq!(recalled.backend, decided.backend);
         assert_eq!(recalled.source, PlanSource::Cached);
+        // raw probes and the runner-up survive the roundtrip
+        assert_eq!(recalled.probes, decided.probes);
+        assert_eq!(recalled.runner_up, decided.runner_up);
         let _ = std::fs::remove_file(&path);
     }
 
@@ -834,6 +1394,7 @@ mod tests {
         // not carry (e.g. a pjrt-calibrated cache reused in a CPU-only
         // build)
         p.cache().insert(
+            RowBucket::Le64,
             80,
             8,
             "exact",
@@ -842,13 +1403,18 @@ mod tests {
                 algo: RowAlgo::RTopK(Mode::EXACT),
                 grain: 64,
                 source: PlanSource::Cached,
+                probes: Vec::new(),
+                runner_up: None,
             },
         );
-        let plan = p.plan(80, 8, Mode::EXACT);
+        let plan = p.plan(20, 80, 8, Mode::EXACT);
         assert_eq!(plan.backend, CPU_BACKEND_ID);
         assert_eq!(plan.source, PlanSource::Calibrated, "re-decided, not trusted");
         // and the re-decision replaced the stale entry
-        assert_eq!(p.cache().get(80, 8, "exact").unwrap().backend, CPU_BACKEND_ID);
+        assert_eq!(
+            p.cache().get(RowBucket::Le64, 80, 8, "exact").unwrap().backend,
+            CPU_BACKEND_ID
+        );
     }
 
     #[test]
@@ -859,7 +1425,7 @@ mod tests {
             calib_reps: 1,
             ..PlannerConfig::default()
         });
-        let plan = p.plan(64, 8, Mode::EXACT);
+        let plan = p.plan(20, 64, 8, Mode::EXACT);
         assert_eq!(plan.backend, CPU_BACKEND_ID);
         assert_eq!(plan.source, PlanSource::Forced);
         assert_eq!(p.cache().len(), 0, "pins must not touch the adaptive cache");
@@ -869,6 +1435,92 @@ mod tests {
             calib_rows: 0,
             ..PlannerConfig::default()
         });
-        assert_eq!(q.plan(64, 8, Mode::EXACT).backend, CPU_BACKEND_ID);
+        assert_eq!(q.plan(20, 64, 8, Mode::EXACT).backend, CPU_BACKEND_ID);
+    }
+
+    #[test]
+    fn shadow_off_never_ticks() {
+        let p = quick_planner(); // shadow_every = 0
+        for _ in 0..16 {
+            assert!(!p.shadow_due());
+        }
+        assert_eq!(p.shadow_observations(), 0);
+    }
+
+    #[test]
+    fn shadow_due_fires_every_nth_call() {
+        let p = Planner::new(PlannerConfig {
+            shadow_every: 4,
+            calib_rows: 0,
+            ..PlannerConfig::default()
+        });
+        let fired: Vec<bool> = (0..8).map(|_| p.shadow_due()).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, false, true, false, false, false, true]
+        );
+    }
+
+    #[test]
+    fn shadow_reprobe_demotes_a_stale_winner_with_hysteresis() {
+        let p = Planner::new(PlannerConfig {
+            shadow_every: 1,
+            calib_rows: 32,
+            calib_reps: 1,
+            ..PlannerConfig::default()
+        });
+        // seed a cached decision whose winner has gone stale
+        let mut seeded = bare_plan(RowAlgo::Sort, 16);
+        seeded.runner_up = Some(RunnerUp {
+            backend: CPU_BACKEND_ID.into(),
+            algo: RowAlgo::Heap,
+            grain: 8,
+        });
+        p.cache().insert(RowBucket::Le64, 128, 8, "exact", seeded);
+        // the runner-up measures 2x faster on every shadowed batch:
+        // after the minimum sample count the winner is demoted
+        let mut demoted = false;
+        for _ in 0..SHADOW_MIN_SAMPLES {
+            assert!(!demoted, "must not demote before the sample floor");
+            demoted = p.record_shadow(16, 128, 8, Mode::EXACT, 2.0e-3, 1.0e-3);
+        }
+        assert!(demoted, "a persistent 2x inversion must demote");
+        let now = p.plan(16, 128, 8, Mode::EXACT);
+        assert_eq!(now.algo, RowAlgo::Heap);
+        assert_eq!(now.grain, 8);
+        assert_eq!(
+            now.runner_up.as_ref().unwrap().algo,
+            RowAlgo::Sort,
+            "old winner becomes the comparator"
+        );
+        assert!(p.shadow_observations() >= SHADOW_MIN_SAMPLES);
+        // hysteresis: edges inside the margin (runner-up 5% faster)
+        // never flip the plan back, however many samples arrive
+        for _ in 0..20 {
+            assert!(!p.record_shadow(16, 128, 8, Mode::EXACT, 1.00e-3, 0.95e-3));
+        }
+        assert_eq!(
+            p.plan(16, 128, 8, Mode::EXACT).algo,
+            RowAlgo::Heap,
+            "no flapping inside the hysteresis margin"
+        );
+    }
+
+    #[test]
+    fn shadow_ignores_shapes_without_plans_or_runner_ups() {
+        let p = Planner::new(PlannerConfig {
+            shadow_every: 1,
+            calib_rows: 32,
+            calib_reps: 1,
+            ..PlannerConfig::default()
+        });
+        // no cached plan at all
+        assert!(!p.record_shadow(16, 64, 4, Mode::EXACT, 2.0, 1.0));
+        // cached plan without a runner-up
+        p.cache().insert(RowBucket::Le64, 64, 4, "exact", bare_plan(RowAlgo::Heap, 8));
+        assert!(!p.record_shadow(16, 64, 4, Mode::EXACT, 2.0, 1.0));
+        assert!(!p.record_shadow(16, 64, 4, Mode::EXACT, 2.0, 1.0));
+        assert!(!p.record_shadow(16, 64, 4, Mode::EXACT, 2.0, 1.0));
+        assert_eq!(p.plan(16, 64, 4, Mode::EXACT).algo, RowAlgo::Heap);
     }
 }

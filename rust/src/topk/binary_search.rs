@@ -31,13 +31,15 @@
 //! autovectorization; IEEE comparisons with NaN are always false, so a
 //! NaN element would silently corrupt the bracket and the counts rather
 //! than fail loudly. Rows must be NaN-free: this is a *caller
-//! contract*, not something any layer checks — in-crate producers
-//! (workload generators, GNN activations) are finite by construction,
-//! but `TopKService::submit` validates only `k`, so an external client
-//! handing the service NaN-bearing matrices gets silently wrong
-//! selections. Scan your inputs first if they can carry NaNs.
-//! Infinities are likewise unsupported (the midpoint `0.5 * (lo + hi)`
-//! would be NaN for opposite-sign infinities).
+//! contract* for direct library users — in-crate producers (workload
+//! generators, GNN activations) are finite by construction, and the
+//! service boundary enforces it for external clients:
+//! `TopKService::submit` rejects non-finite matrices with a clear
+//! error unless the operator opts out via `[serve] validate_inputs =
+//! false`. Callers bypassing the service should scan their inputs
+//! first if they can carry NaNs. Infinities are likewise unsupported
+//! (the midpoint `0.5 * (lo + hi)` would be NaN for opposite-sign
+//! infinities).
 
 use crate::topk::types::Mode;
 

@@ -14,6 +14,7 @@ use rtopk::backend::{
 use rtopk::config::BackendConfig;
 use rtopk::plan::{
     mode_key, tile_mode_key, PlanCache, PlanSource, Planner, PlannerConfig,
+    RowBucket,
 };
 use rtopk::runtime::executor::Executor;
 use rtopk::runtime::manifest::Manifest;
@@ -89,22 +90,31 @@ fn registry_routes_compiled_shapes_to_pjrt_and_falls_back_to_cpu() {
         PlannerConfig { calib_rows: 0, ..PlannerConfig::default() },
         registry.clone(),
     );
-    assert_eq!(planner.plan(256, 32, Mode::EXACT).backend, PJRT_BACKEND_ID);
     assert_eq!(
-        planner.plan(256, 32, Mode::EarlyStop { max_iter: 4 }).backend,
+        planner.plan(64, 256, 32, Mode::EXACT).backend,
+        PJRT_BACKEND_ID
+    );
+    assert_eq!(
+        planner
+            .plan(64, 256, 32, Mode::EarlyStop { max_iter: 4 })
+            .backend,
         PJRT_BACKEND_ID
     );
     // no tile -> CPU engine
-    assert_eq!(planner.plan(512, 32, Mode::EXACT).backend, CPU_BACKEND_ID);
-    assert_eq!(planner.plan(256, 16, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(planner.plan(64, 512, 32, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(planner.plan(64, 256, 16, Mode::EXACT).backend, CPU_BACKEND_ID);
     assert_eq!(
-        planner.plan(256, 32, Mode::EarlyStop { max_iter: 7 }).backend,
+        planner
+            .plan(64, 256, 32, Mode::EarlyStop { max_iter: 7 })
+            .backend,
         CPU_BACKEND_ID
     );
     // a loose-eps exact request is approximate: it must not match the
     // exact tile
     assert_eq!(
-        planner.plan(256, 32, Mode::Exact { eps_rel: 1e-4 }).backend,
+        planner
+            .plan(64, 256, 32, Mode::Exact { eps_rel: 1e-4 })
+            .backend,
         CPU_BACKEND_ID
     );
 }
@@ -135,7 +145,7 @@ fn calibration_probes_skip_the_stub_pjrt_cleanly() {
         PlannerConfig { calib_rows: 32, calib_reps: 1, ..PlannerConfig::default() },
         registry,
     );
-    let plan = planner.plan(256, 32, Mode::EXACT);
+    let plan = planner.plan(64, 256, 32, Mode::EXACT);
     assert_eq!(plan.source, PlanSource::Calibrated);
     assert_eq!(plan.backend, CPU_BACKEND_ID, "failed probe must not win");
 
@@ -145,14 +155,21 @@ fn calibration_probes_skip_the_stub_pjrt_cleanly() {
     assert_eq!(pjrt.len(), 1, "pjrt was probed exactly once for the shape");
     assert!(pjrt[0].secs.is_none(), "stub probe records as skipped");
     assert!(!pjrt[0].chosen);
+    assert_eq!(pjrt[0].bucket, RowBucket::Le64, "probes record their bucket");
     let cpu: Vec<_> =
         log.iter().filter(|p| p.backend == CPU_BACKEND_ID).collect();
     assert_eq!(cpu.len(), 1);
     assert!(cpu[0].secs.is_some(), "cpu is measured with the same harness");
     assert!(cpu[0].chosen);
 
+    // a skipped accelerator never becomes the shadow comparator — the
+    // runner-up comes from candidates that actually measured
+    if let Some(ru) = &plan.runner_up {
+        assert_eq!(ru.backend, CPU_BACKEND_ID);
+    }
+
     // shapes pjrt does not support at all are not probed
-    planner.plan(512, 32, Mode::EXACT);
+    planner.plan(64, 512, 32, Mode::EXACT);
     let log = planner.probe_log();
     assert!(log
         .iter()
@@ -202,32 +219,23 @@ fn stale_cached_plan_for_a_vanished_tile_is_rederived_not_dispatched() {
         PlannerConfig { calib_rows: 0, ..PlannerConfig::default() },
         registry,
     );
-    planner.cache().insert(
-        512,
-        32,
-        "exact",
-        rtopk::plan::Plan {
-            backend: PJRT_BACKEND_ID.into(),
-            algo: rtopk::topk::rowwise::RowAlgo::RTopK(Mode::EXACT),
-            grain: 64,
-            source: PlanSource::Cached,
-        },
-    );
-    let plan = planner.plan(512, 32, Mode::EXACT);
+    let pjrt_plan = || rtopk::plan::Plan {
+        backend: PJRT_BACKEND_ID.into(),
+        algo: rtopk::topk::rowwise::RowAlgo::RTopK(Mode::EXACT),
+        grain: 64,
+        source: PlanSource::Cached,
+        probes: Vec::new(),
+        runner_up: None,
+    };
+    planner.cache().insert(RowBucket::Le64, 512, 32, "exact", pjrt_plan());
+    let plan = planner.plan(64, 512, 32, Mode::EXACT);
     assert_eq!(plan.backend, CPU_BACKEND_ID, "unsupported shape re-decided");
     // a cached plan whose tile still exists is trusted as-is
-    planner.cache().insert(
-        256,
-        32,
-        "exact",
-        rtopk::plan::Plan {
-            backend: PJRT_BACKEND_ID.into(),
-            algo: rtopk::topk::rowwise::RowAlgo::RTopK(Mode::EXACT),
-            grain: 64,
-            source: PlanSource::Cached,
-        },
+    planner.cache().insert(RowBucket::Le64, 256, 32, "exact", pjrt_plan());
+    assert_eq!(
+        planner.plan(64, 256, 32, Mode::EXACT).backend,
+        PJRT_BACKEND_ID
     );
-    assert_eq!(planner.plan(256, 32, Mode::EXACT).backend, PJRT_BACKEND_ID);
 }
 
 #[test]
@@ -247,12 +255,12 @@ fn forced_backend_pins_never_reach_the_persisted_cache() {
         },
         registry,
     );
-    let pinned = planner.plan(256, 32, Mode::EXACT);
+    let pinned = planner.plan(64, 256, 32, Mode::EXACT);
     assert_eq!(pinned.backend, PJRT_BACKEND_ID);
     assert_eq!(pinned.source, PlanSource::Forced);
     // the pin resolves to cpu where pjrt has no tile — still forced,
     // still session-only
-    assert_eq!(planner.plan(512, 32, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(planner.plan(64, 512, 32, Mode::EXACT).backend, CPU_BACKEND_ID);
     assert_eq!(planner.cache().len(), 0, "pins bypass the adaptive cache");
     planner.save().unwrap();
     let reloaded = PlanCache::new();
@@ -311,7 +319,7 @@ fn custom_backends_are_measured_and_dispatched_like_any_other() {
         PlannerConfig { calib_rows: 32, calib_reps: 1, ..PlannerConfig::default() },
         registry.clone(),
     );
-    adaptive.plan(48, 6, Mode::EXACT);
+    adaptive.plan(25, 48, 6, Mode::EXACT);
     let probes = adaptive.probe_log();
     let mock_probe = probes
         .iter()
@@ -339,7 +347,7 @@ fn custom_backends_are_measured_and_dispatched_like_any_other() {
         "run() dispatched through the pinned backend"
     );
     // shapes outside the mock's support run the CPU engine
-    assert_eq!(pinned.plan(64, 6, Mode::EXACT).backend, CPU_BACKEND_ID);
+    assert_eq!(pinned.plan(25, 64, 6, Mode::EXACT).backend, CPU_BACKEND_ID);
 }
 
 #[test]
@@ -356,14 +364,18 @@ fn cached_plans_are_keyed_by_backend_and_survive_roundtrip() {
         ..PlannerConfig::default()
     };
     let p = Planner::new(cfg.clone());
-    let decided = p.plan(96, 12, Mode::EXACT);
+    let decided = p.plan(30, 96, 12, Mode::EXACT);
     assert_eq!(decided.backend, CPU_BACKEND_ID);
     p.save().unwrap();
-    // the persisted document records the backend id per entry
+    // the persisted document records the backend id, the row bucket,
+    // and the raw probe timings per entry (schema v3)
     let text = std::fs::read_to_string(&path).unwrap();
     assert!(text.contains("\"backend\":\"cpu\""), "doc: {text}");
+    assert!(text.contains("\"rows_bucket\":\"le64\""), "doc: {text}");
+    assert!(text.contains("\"probes\":"), "doc: {text}");
+    assert!(text.contains("\"created_unix\":"), "doc: {text}");
     let q = Planner::new(cfg);
-    let recalled = q.plan(96, 12, Mode::EXACT);
+    let recalled = q.plan(30, 96, 12, Mode::EXACT);
     assert_eq!(recalled.backend, decided.backend);
     assert_eq!(recalled.algo, decided.algo);
     assert_eq!(recalled.source, PlanSource::Cached);

@@ -4,9 +4,13 @@
 //! therefore `rowwise_topk_auto`) returns *bit-identical* output to the
 //! fixed-algorithm oracle of whatever plan the grid chose — dispatch
 //! may change speed, never results — and exact-mode plans additionally
-//! match the sort oracle's multiset.
+//! match the sort oracle's multiset. Plans are keyed per row bucket;
+//! the oracle lookup must use the matrix's own row count so both sides
+//! resolve the same bucketed plan.
 
-use rtopk::plan::{candidates, Plan, Planner, PlannerConfig, PlanSource};
+use rtopk::plan::{
+    candidates, Plan, PlanSource, Planner, PlannerConfig, RowBucket,
+};
 use rtopk::topk::rowwise::{rowwise_topk_with, RowAlgo};
 use rtopk::topk::types::Mode;
 use rtopk::topk::verify::is_exact;
@@ -47,7 +51,7 @@ fn auto_equals_fixed_algo_oracle_for_every_chosen_plan() {
         |(x, k, mode)| {
             let planner = &planner;
             let auto = planner.run(x, *k, *mode);
-            let plan = planner.plan(x.cols, *k, *mode);
+            let plan = planner.plan(x.rows, x.cols, *k, *mode);
             let oracle = rowwise_topk_with(x, *k, plan.algo);
             if auto.values != oracle.values || auto.indices != oracle.indices {
                 return Err(format!(
@@ -61,6 +65,58 @@ fn auto_equals_fixed_algo_oracle_for_every_chosen_plan() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn auto_parity_holds_across_row_buckets() {
+    // The same (cols, k, mode) planned at every bucket must stay
+    // bit-identical to each bucket's own plan oracle — bucketed
+    // dispatch changes speed, never results.
+    let planner = quick_planner();
+    let mut rng = Rng::seed_from(0xB0C);
+    for rows in [16usize, 200, 1500] {
+        let x = RowMatrix::random_normal(rows, 96, &mut rng);
+        let auto = planner.run(&x, 12, Mode::EXACT);
+        let plan = planner.plan(rows, 96, 12, Mode::EXACT);
+        let oracle = rowwise_topk_with(&x, 12, plan.algo);
+        assert_eq!(auto.values, oracle.values, "rows={rows}");
+        assert_eq!(auto.indices, oracle.indices, "rows={rows}");
+        assert!(is_exact(&x, &auto), "rows={rows}");
+    }
+    // one plan per touched bucket
+    assert_eq!(planner.cache().len(), 3);
+}
+
+#[test]
+fn buckets_of_one_shape_can_hold_different_winners() {
+    // Acceptance: two buckets of the same (cols, k, mode) holding
+    // different winners when their probes disagree. Probes are seeded
+    // directly (real timings are host-dependent); the planner must key
+    // recalls by bucket and never cross-contaminate.
+    let planner = quick_planner();
+    let seed = |algo: RowAlgo, grain: usize| Plan {
+        backend: "cpu".into(),
+        algo,
+        grain,
+        source: PlanSource::Cached,
+        probes: Vec::new(),
+        runner_up: None,
+    };
+    planner
+        .cache()
+        .insert(RowBucket::Le64, 300, 10, "exact", seed(RowAlgo::Heap, 8));
+    planner
+        .cache()
+        .insert(RowBucket::Gt1024, 300, 10, "exact", seed(RowAlgo::Radix, 64));
+    assert_eq!(planner.plan(8, 300, 10, Mode::EXACT).algo, RowAlgo::Heap);
+    assert_eq!(planner.plan(5000, 300, 10, Mode::EXACT).algo, RowAlgo::Radix);
+    // both run paths still produce exact results through their bucket's
+    // algorithm
+    let mut rng = Rng::seed_from(0xB0D);
+    for rows in [8usize, 1500] {
+        let x = RowMatrix::random_normal(rows, 300, &mut rng);
+        assert!(is_exact(&x, &planner.run(&x, 10, Mode::EXACT)));
+    }
 }
 
 #[test]
@@ -83,11 +139,11 @@ fn approximate_requests_never_switch_algorithm() {
     let planner = quick_planner();
     for it in [1u32, 4, 8] {
         let mode = Mode::EarlyStop { max_iter: it };
-        let plan = planner.plan(200, 20, mode);
+        let plan = planner.plan(40, 200, 20, mode);
         assert_eq!(plan.algo, RowAlgo::RTopK(mode));
     }
     let loose = Mode::Exact { eps_rel: 1e-3 };
-    assert_eq!(planner.plan(200, 20, loose).algo, RowAlgo::RTopK(loose));
+    assert_eq!(planner.plan(40, 200, 20, loose).algo, RowAlgo::RTopK(loose));
 }
 
 #[test]
@@ -101,18 +157,23 @@ fn cache_roundtrips_through_disk() {
         ..PlannerConfig::default()
     };
     let first = Planner::new(cfg.clone());
-    let mut decided: Vec<(usize, usize, Plan)> = Vec::new();
-    for &(m, k) in &[(64usize, 8usize), (128, 32), (256, 64)] {
-        decided.push((m, k, first.plan(m, k, Mode::EXACT)));
+    let mut decided: Vec<(usize, usize, usize, Plan)> = Vec::new();
+    // span two row buckets to prove the bucket dimension persists
+    for &(rows, m, k) in
+        &[(30usize, 64usize, 8usize), (30, 128, 32), (500, 128, 32)]
+    {
+        decided.push((rows, m, k, first.plan(rows, m, k, Mode::EXACT)));
     }
     first.save().unwrap();
 
     let second = Planner::new(cfg);
-    for (m, k, plan) in decided {
-        let recalled = second.plan(m, k, Mode::EXACT);
-        assert_eq!(recalled.algo, plan.algo, "M={m} k={k}");
-        assert_eq!(recalled.grain, plan.grain, "M={m} k={k}");
+    for (rows, m, k, plan) in decided {
+        let recalled = second.plan(rows, m, k, Mode::EXACT);
+        assert_eq!(recalled.algo, plan.algo, "rows={rows} M={m} k={k}");
+        assert_eq!(recalled.grain, plan.grain, "rows={rows} M={m} k={k}");
         assert_eq!(recalled.source, PlanSource::Cached);
+        assert_eq!(recalled.probes, plan.probes, "raw timings persist");
+        assert_eq!(recalled.runner_up, plan.runner_up, "runner-up persists");
     }
     // recalled plans still execute correctly
     let mut rng = Rng::seed_from(0xD15C);
