@@ -16,17 +16,121 @@
 //!       rows sweep 32/256, schema check only — the perf gate is
 //!       skipped because shared runners are too noisy to enforce
 //!       throughput ratios)
+//!
+//! The run ends with a mixed-tenant serving sweep: three tenants with
+//! WDRR weights 4/2/1 saturate one `TopKService` with equal offered
+//! load, and the per-tenant latency distributions show the weighted
+//! drain (the heavy tenant's tiles leave the queue ~4x as often as the
+//! light tenant's, so its percentiles sit correspondingly lower). The
+//! sweep is reported in the JSON document under `"tenants"`; it is
+//! never a pass/fail gate — queue latency on shared runners is too
+//! noisy to enforce ratios.
 
 use rtopk::bench::{workload, Table};
+use rtopk::config::{ServeConfig, TenantConfig, TenantsConfig};
+use rtopk::coordinator::TopKService;
 use rtopk::plan::{candidates, Planner, PlannerConfig, RowBucket};
 use rtopk::topk::rowwise::rowwise_topk_with;
 use rtopk::topk::types::Mode;
 use rtopk::util::json::{self, Value};
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
 use rtopk::util::timer::time_adaptive;
 use std::time::Duration;
 
 fn median_secs(f: impl FnMut()) -> f64 {
     time_adaptive(3, Duration::from_millis(120), f).median().as_secs_f64()
+}
+
+/// Saturate a CPU-only service with equal offered load from three
+/// tenants weighted 4/2/1 and report per-tenant completions and
+/// latency percentiles (printed as a table, returned as JSON values).
+fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
+    let weights: [(&str, u64); 3] = [("heavy", 4), ("medium", 2), ("light", 1)];
+    let per_tenant: usize = if smoke { 40 } else { 200 };
+    let req_rows: usize = if smoke { 32 } else { 64 };
+    let cols: usize = if smoke { 64 } else { 256 };
+    let k: usize = if smoke { 8 } else { 32 };
+    let cfg = ServeConfig {
+        workers: 2,
+        // one request = one full tile, so every submission is a
+        // WDRR-drained unit and the weights govern the drain order
+        max_batch_rows: req_rows,
+        // the deadline path must not dominate (it bypasses WDRR)
+        max_wait_us: 20_000,
+        tenants: TenantsConfig {
+            tenants: weights
+                .iter()
+                .map(|(n, w)| TenantConfig {
+                    weight: *w,
+                    ..TenantConfig::named(n)
+                })
+                .collect(),
+            ..Default::default()
+        },
+        ..ServeConfig::default()
+    };
+    let svc = TopKService::cpu_only(&cfg).expect("cpu-only service");
+    std::thread::scope(|scope| {
+        for (idx, (name, _)) in weights.iter().enumerate() {
+            let svc = &svc;
+            let name = *name;
+            scope.spawn(move || {
+                // distinct stream per tenant (seeding off the name
+                // length collided for "heavy"/"light")
+                let mut rng = Rng::seed_from(0xBEEF + idx as u64);
+                let mut handles = Vec::new();
+                for _ in 0..per_tenant {
+                    let x = RowMatrix::random_normal(req_rows, cols, &mut rng);
+                    if let Ok(h) = svc.submit_async_as(name, x, k, Some(Mode::EXACT))
+                    {
+                        handles.push(h);
+                    }
+                }
+                for h in handles {
+                    let _ = h.wait();
+                }
+            });
+        }
+    });
+    let s = svc.stats();
+    let total_rows: u64 = s.tenants.iter().map(|t| t.rows).sum();
+    let mut table = Table::new(
+        "mixed-tenant sweep (weights 4/2/1, equal offered load)",
+        &["tenant", "weight", "requests", "rows", "row share", "rejected",
+          "p50 us", "p99 us"],
+    );
+    let mut out = Vec::new();
+    for (name, weight) in weights {
+        let t = s
+            .tenants
+            .iter()
+            .find(|t| t.tenant == name)
+            .expect("tenant served");
+        let share = t.rows as f64 / total_rows.max(1) as f64;
+        table.row(vec![
+            name.to_string(),
+            weight.to_string(),
+            t.requests.to_string(),
+            t.rows.to_string(),
+            format!("{share:.3}"),
+            t.rejected.to_string(),
+            format!("{:.0}", t.p50_us),
+            format!("{:.0}", t.p99_us),
+        ]);
+        out.push(json::obj(vec![
+            ("tenant", json::s(name)),
+            ("weight", json::num(weight as f64)),
+            ("requests", json::num(t.requests as f64)),
+            ("rows", json::num(t.rows as f64)),
+            ("rejected", json::num(t.rejected as f64)),
+            ("p50_us", json::num(t.p50_us)),
+            ("p99_us", json::num(t.p99_us)),
+        ]));
+    }
+    table.print();
+    svc.shutdown();
+    out
 }
 
 fn main() {
@@ -128,6 +232,8 @@ fn main() {
     }
     t.print();
 
+    let tenants = mixed_tenant_sweep(smoke);
+
     let pass = min_vs_best >= 0.95 && min_vs_worst > 1.1;
     println!(
         "\nmin auto/best = {min_vs_best:.3} (want >= 0.95), \
@@ -153,6 +259,7 @@ fn main() {
         ("mode", json::s("exact")),
         ("smoke", Value::Bool(smoke)),
         ("grid", json::arr(points)),
+        ("tenants", json::arr(tenants)),
         (
             "summary",
             json::obj(vec![

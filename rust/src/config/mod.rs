@@ -214,6 +214,132 @@ impl BackendConfig {
     }
 }
 
+/// One tenant's serving policy (a `[tenants.<name>]` table). Untyped
+/// here — `coordinator::tenant::TenantDirectory::from_config` validates
+/// `force_algo` / `mode` strings at service startup (this module stays
+/// plain data with no dependency on the topk layer). Tenant names must
+/// not contain dots (the table key separator).
+///
+/// * `weight` — weighted-deficit-round-robin drain weight (default 1;
+///   0 is clamped to 1). A weight-4 tenant's budget-full batches drain
+///   4x as often as a weight-1 tenant's when both have backlog.
+/// * `max_in_flight_rows` — rows admitted and not yet replied to;
+///   submissions past the limit are rejected, not queued (0 = no
+///   limit, the default).
+/// * `max_queue_depth` — requests admitted and not yet replied to
+///   (0 = no limit, the default).
+/// * `force_algo` — per-tenant algorithm pin, same vocabulary and
+///   semantics rules as `[plan] force_algo`.
+/// * `mode` — default search mode (`exact` | `es<N>` | `eps<X>`) used
+///   when the tenant submits without an explicit mode.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantConfig {
+    pub name: String,
+    pub weight: u64,
+    pub max_in_flight_rows: usize,
+    pub max_queue_depth: usize,
+    pub force_algo: Option<String>,
+    pub mode: Option<String>,
+}
+
+impl TenantConfig {
+    /// A tenant entry with the defaults (weight 1, no quotas, no
+    /// overrides).
+    pub fn named(name: &str) -> TenantConfig {
+        TenantConfig {
+            name: name.to_string(),
+            weight: 1,
+            max_in_flight_rows: 0,
+            max_queue_depth: 0,
+            force_algo: None,
+            mode: None,
+        }
+    }
+}
+
+/// The `[tenants]` section: one [`TenantConfig`] per `[tenants.<name>]`
+/// table. Tenants absent from config are still served — under weight 1
+/// with no quotas — so this table *constrains* tenants rather than
+/// registering them.
+///
+/// Key names are checked: a misspelled quota key (say
+/// `max_inflight_rows`) would otherwise silently leave the tenant
+/// unquotaed, defeating the one feature the table exists for. Unknown
+/// keys are collected into `unknown_keys` here (this module never
+/// fails) and rejected at service startup by
+/// `coordinator::tenant::TenantDirectory::from_config`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantsConfig {
+    pub tenants: Vec<TenantConfig>,
+    /// `tenants.*` keys whose field name is not a known knob
+    pub unknown_keys: Vec<String>,
+}
+
+/// The field names a `[tenants.<name>]` table may set.
+pub const TENANT_KEYS: [&str; 5] =
+    ["weight", "max_in_flight_rows", "max_queue_depth", "force_algo", "mode"];
+
+impl TenantsConfig {
+    pub fn from_config(c: &Config) -> TenantsConfig {
+        let mut names: Vec<String> = Vec::new();
+        let mut unknown_keys: Vec<String> = Vec::new();
+        for key in c.keys() {
+            if let Some(rest) = key.strip_prefix("tenants.") {
+                if let Some((name, field)) = rest.rsplit_once('.') {
+                    if name.is_empty() {
+                        continue;
+                    }
+                    // a dotted name ([tenants.team.alpha]) would
+                    // register tenant "team.alpha" while the operator
+                    // meant to quota "alpha" — same silent-misaddress
+                    // class as a typoed field, so same treatment
+                    if name.contains('.') || !TENANT_KEYS.contains(&field) {
+                        unknown_keys.push(key.to_string());
+                        continue;
+                    }
+                    if !names.iter().any(|n| n == name) {
+                        names.push(name.to_string());
+                    }
+                }
+            }
+        }
+        let tenants = names
+            .iter()
+            .map(|name| {
+                let d = TenantConfig::named(name);
+                TenantConfig {
+                    name: name.clone(),
+                    weight: c
+                        .get_or(&format!("tenants.{name}.weight"), d.weight)
+                        .max(1),
+                    max_in_flight_rows: c.get_or(
+                        &format!("tenants.{name}.max_in_flight_rows"),
+                        d.max_in_flight_rows,
+                    ),
+                    max_queue_depth: c.get_or(
+                        &format!("tenants.{name}.max_queue_depth"),
+                        d.max_queue_depth,
+                    ),
+                    force_algo: c
+                        .get(&format!("tenants.{name}.force_algo"))
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.to_string()),
+                    mode: c
+                        .get(&format!("tenants.{name}.mode"))
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.to_string()),
+                }
+            })
+            .collect();
+        TenantsConfig { tenants, unknown_keys }
+    }
+
+    /// The entry for a tenant name, if one is configured.
+    pub fn get(&self, name: &str) -> Option<&TenantConfig> {
+        self.tenants.iter().find(|t| t.name == name)
+    }
+}
+
 /// Service deployment settings (defaults match the benched setup).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -236,6 +362,8 @@ pub struct ServeConfig {
     pub plan: PlanConfig,
     /// execution-backend registration / pinning knobs
     pub backend: BackendConfig,
+    /// per-tenant weights, quotas, and execution overrides
+    pub tenants: TenantsConfig,
 }
 
 impl Default for ServeConfig {
@@ -249,6 +377,7 @@ impl Default for ServeConfig {
             validate_inputs: true,
             plan: PlanConfig::default(),
             backend: BackendConfig::default(),
+            tenants: TenantsConfig::default(),
         }
     }
 }
@@ -268,6 +397,7 @@ impl ServeConfig {
             validate_inputs: c.get_or("serve.validate_inputs", d.validate_inputs),
             plan: PlanConfig::from_config(c),
             backend: BackendConfig::from_config(c),
+            tenants: TenantsConfig::from_config(c),
         }
     }
 }
@@ -278,7 +408,7 @@ pub struct TrainConfig {
     pub artifacts_dir: String,
     pub model: String,
     pub dataset: String,
-    /// "exact" or "es<N>"
+    /// `exact` or `es<N>`
     pub topk_mode: String,
     pub steps: usize,
     pub eval_every: usize,
@@ -380,6 +510,73 @@ mod tests {
         assert!(!ServeConfig::from_config(&c).validate_inputs);
         let c2 = Config::parse("[serve]\nworkers = 2").unwrap();
         assert!(ServeConfig::from_config(&c2).validate_inputs);
+    }
+
+    #[test]
+    fn tenants_section_parses_per_tenant_tables() {
+        let c = Config::parse(
+            "[tenants.alpha]\nweight = 4\nmax_in_flight_rows = 4096\n\
+             max_queue_depth = 64\nforce_algo = \"heap\"\n\
+             [tenants.beta]\nweight = 2\nmode = \"es4\"\n\
+             [tenants.gamma]\nweight = 0",
+        )
+        .unwrap();
+        let t = TenantsConfig::from_config(&c);
+        assert_eq!(t.tenants.len(), 3);
+        let alpha = t.get("alpha").unwrap();
+        assert_eq!(alpha.weight, 4);
+        assert_eq!(alpha.max_in_flight_rows, 4096);
+        assert_eq!(alpha.max_queue_depth, 64);
+        assert_eq!(alpha.force_algo.as_deref(), Some("heap"));
+        assert_eq!(alpha.mode, None);
+        let beta = t.get("beta").unwrap();
+        assert_eq!(beta.weight, 2);
+        assert_eq!(beta.max_in_flight_rows, 0, "quotas default to unlimited");
+        assert_eq!(beta.mode.as_deref(), Some("es4"));
+        // weight 0 would make a tenant never drain; clamped to 1
+        assert_eq!(t.get("gamma").unwrap().weight, 1);
+        assert!(t.get("unknown").is_none());
+        // empty-string overrides mean unset
+        let c2 = Config::parse("[tenants.x]\nforce_algo = \"\"").unwrap();
+        let t2 = TenantsConfig::from_config(&c2);
+        assert!(t2.get("x").unwrap().force_algo.is_none());
+        // no [tenants] section at all: empty table
+        assert!(TenantsConfig::from_config(&Config::default())
+            .tenants
+            .is_empty());
+    }
+
+    #[test]
+    fn misspelled_tenant_keys_are_collected_not_silently_dropped() {
+        // a typoed quota key must not leave the tenant unquotaed with
+        // no trace — from_config records it for startup validation
+        let c = Config::parse(
+            "[tenants.abuser]\nmax_inflight_rows = 4096\n\
+             [tenants.ok]\nweight = 2",
+        )
+        .unwrap();
+        let t = TenantsConfig::from_config(&c);
+        assert_eq!(
+            t.unknown_keys,
+            vec!["tenants.abuser.max_inflight_rows".to_string()]
+        );
+        assert!(t.get("abuser").is_none(), "no valid keys, no entry");
+        assert_eq!(t.get("ok").unwrap().weight, 2);
+        // clean configs carry no unknown keys
+        let clean = Config::parse("[tenants.ok]\nweight = 2").unwrap();
+        assert!(TenantsConfig::from_config(&clean).unknown_keys.is_empty());
+    }
+
+    #[test]
+    fn serve_config_carries_the_tenants_table() {
+        let c = Config::parse(
+            "[serve]\nworkers = 3\n[tenants.heavy]\nweight = 8",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.workers, 3);
+        assert_eq!(s.tenants.get("heavy").unwrap().weight, 8);
+        assert!(ServeConfig::default().tenants.tenants.is_empty());
     }
 
     #[test]

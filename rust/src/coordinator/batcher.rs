@@ -1,31 +1,58 @@
 //! Dynamic batcher: accumulate same-shape requests into row tiles, flush
-//! on tile-full or deadline, apply backpressure when the queue is deep.
+//! on tile-full or deadline, apply backpressure when the queue is deep,
+//! and drain budget-full tiles across tenants with weighted-deficit
+//! round-robin (WDRR).
 //!
 //! The paper's service scenario batches millions of small rows; here the
 //! unit of admission is a whole request (a matrix), and requests sharing
-//! (M, k, mode) are packed into one execution batch up to the tile's row
-//! budget. Rows never split across batches mid-request (simplifies
-//! result scatter; tiles are padded anyway).
+//! (tenant, M, k, mode) are packed into one execution batch up to the
+//! tile's row budget. Rows never split across batches mid-request
+//! (simplifies result scatter; tiles are padded anyway). Groups are
+//! keyed per tenant, so a batch is always single-tenant — per-tenant
+//! accounting, pins, and fairness need no cross-tenant untangling
+//! downstream.
 //!
-//! Flush policy — no head-of-line blocking across keys:
+//! Flush policy, in priority order per wake:
 //!
-//! * A group that reaches the row budget is flushable *immediately*,
-//!   wherever it sits in the queue. (The old behavior only ever
-//!   examined the head request's group, so a budget-full group behind a
-//!   fresh head of a different key sat until the head's deadline — and
-//!   every idle worker blocked on that same deadline.)
-//! * Deadline flushes go oldest-first: the overall head is by
-//!   construction the request with the earliest deadline, so waiting on
-//!   the head's deadline is waiting on the earliest deadline of any
-//!   group.
-//! * Within a key, FIFO order is preserved (the budget closes at the
-//!   first same-key request that does not fit).
+//! 1. **Deadline flushes bypass everything** and go oldest-first: the
+//!    overall head is by construction the request with the earliest
+//!    deadline, so waiting on the head's deadline is waiting on the
+//!    earliest deadline of any group. Deadline-expired groups are
+//!    served before any budget-full tile — under quota pressure a
+//!    heavy tenant's full tiles must not push a light tenant's
+//!    deadline-expired trickle past its latency SLO. (The first WDRR
+//!    cut recomputed oldest-first ordering but let ready tiles win
+//!    ties, which starved exactly the tenants the weights were meant
+//!    to protect.)
+//! 2. **Budget-full groups flush under WDRR.** A group that reaches the
+//!    row budget is flushable *immediately*, wherever it sits in the
+//!    queue — no head-of-line blocking across keys. When budget-full
+//!    groups from several tenants are pending, they drain
+//!    proportionally to tenant weight (deficit round-robin with a
+//!    one-tile quantum) instead of FIFO-by-key: each tenant accrues
+//!    `weight x tile` rows of credit per rotation and serves tiles
+//!    while its credit lasts, so a weight-4 tenant drains 4 tiles for
+//!    every 1 a weight-1 tenant drains, and no backlogged tenant is
+//!    ever skipped for a full rotation. Within a tenant, ready groups
+//!    drain in the order they filled, and within a key FIFO order is
+//!    preserved (the budget closes at the first same-key request that
+//!    does not fit).
 //!
-//! Bookkeeping is O(1) per wake: per-key running row counts are
-//! maintained on submit/flush (`Inner::group_rows`), and keys that
-//! cross the budget are queued in `Inner::ready` — `next_batch` never
-//! rescans the queue to rediscover group sizes.
+//! Bookkeeping is O(1)-amortized per wake: per-key running row counts
+//! are maintained on submit/flush (`Inner::group_rows`), keys that
+//! cross the budget are queued per tenant (`Inner::ready`), and the
+//! tenant rotation (`Inner::rr`) tops up deficits lazily — `next_batch`
+//! never rescans the queue to rediscover group sizes.
+//!
+//! Fairness accounting notes: a flushed batch is charged its *actual*
+//! rows (so budget-closed partial tiles under-charge and oversized
+//! single-request batches over-charge into debt), credit is capped at
+//! one tile above the tenant's quantum so an uncontended tenant cannot
+//! bank unbounded credit and later monopolize the workers, and a
+//! tenant's deficit resets when its ready queue drains (standard DRR
+//! reset-on-empty).
 
+use crate::coordinator::tenant::TenantId;
 use crate::topk::types::Mode;
 use crate::util::matrix::RowMatrix;
 use std::collections::{HashMap, VecDeque};
@@ -34,6 +61,7 @@ use std::time::{Duration, Instant};
 
 /// One admitted request plus its reply slot.
 pub struct Pending<T> {
+    pub tenant: TenantId,
     pub matrix: RowMatrix,
     pub k: usize,
     pub mode: Mode,
@@ -41,8 +69,9 @@ pub struct Pending<T> {
     pub reply: T,
 }
 
-/// A flushed batch: requests sharing (cols, k, mode).
+/// A flushed batch: requests sharing (tenant, cols, k, mode).
 pub struct Batch<T> {
+    pub tenant: TenantId,
     pub cols: usize,
     pub k: usize,
     pub mode: Mode,
@@ -71,12 +100,13 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Hashable form of a request's (cols, k, mode) grouping key. `Mode`
-/// carries an `f32`, so the float is keyed by its bit pattern — two
-/// requests group together iff their modes are bit-identical, exactly
-/// the equality `Mode: PartialEq` uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// Hashable form of a request's (tenant, cols, k, mode) grouping key.
+/// `Mode` carries an `f32`, so the float is keyed by its bit pattern —
+/// two requests group together iff their modes are bit-identical,
+/// exactly the equality `Mode: PartialEq` uses.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct GroupKey {
+    tenant: TenantId,
     cols: usize,
     k: usize,
     mode: ModeBits,
@@ -90,6 +120,7 @@ enum ModeBits {
 
 fn key_of<T>(p: &Pending<T>) -> GroupKey {
     GroupKey {
+        tenant: p.tenant.clone(),
         cols: p.matrix.cols,
         k: p.k,
         mode: match p.mode {
@@ -99,14 +130,27 @@ fn key_of<T>(p: &Pending<T>) -> GroupKey {
     }
 }
 
+/// One tenant's share of the WDRR state: its budget-full groups in
+/// fill order, plus its rows of accumulated drain credit.
+#[derive(Debug, Default)]
+struct TenantQueue {
+    /// rows of credit; negative = debt from an oversized batch
+    deficit: i64,
+    /// keys whose group crossed `max_rows`, in the order they did
+    ready: VecDeque<GroupKey>,
+}
+
 struct Inner<T> {
     queue: VecDeque<Pending<T>>,
     queued_rows: usize,
-    /// running rows per (cols, k, mode) group — updated on submit and
-    /// flush, never recomputed by scanning the queue
+    /// running rows per (tenant, cols, k, mode) group — updated on
+    /// submit and flush, never recomputed by scanning the queue
     group_rows: HashMap<GroupKey, usize>,
-    /// keys whose group crossed `max_rows`, in the order they did
-    ready: VecDeque<GroupKey>,
+    /// per-tenant budget-full group queues + deficit counters
+    ready: HashMap<TenantId, TenantQueue>,
+    /// round-robin rotation of tenants with queued ready groups
+    /// (stale-tolerant: entries are validated and pruned on pick)
+    rr: VecDeque<TenantId>,
     closed: bool,
 }
 
@@ -114,6 +158,8 @@ struct Inner<T> {
 /// threads pull ready batches).
 pub struct Batcher<T> {
     policy: BatchPolicy,
+    /// configured WDRR weights; tenants absent here weigh 1
+    weights: HashMap<TenantId, u64>,
     inner: Mutex<Inner<T>>,
     /// signaled when work arrives or the queue closes
     work: Condvar,
@@ -121,15 +167,36 @@ pub struct Batcher<T> {
     space: Condvar,
 }
 
+/// Largest honored WDRR weight. Clamping here keeps the deficit
+/// arithmetic inside i64 (`quantum = weight x max_rows` must never
+/// wrap negative — a negative quantum would make the pick loop spin
+/// forever under the queue lock) and a ratio of a million-to-one is
+/// already far past any meaningful fairness split.
+pub const MAX_WEIGHT: u64 = 1 << 20;
+
 impl<T> Batcher<T> {
+    /// A batcher where every tenant weighs 1 (plain deficit
+    /// round-robin; single-tenant workloads behave exactly as before
+    /// tenancy existed).
     pub fn new(policy: BatchPolicy) -> Self {
+        Batcher::with_weights(policy, Vec::new())
+    }
+
+    /// A batcher with explicit per-tenant WDRR weights (clamped into
+    /// `1..=`[`MAX_WEIGHT`]; tenants not listed weigh 1).
+    pub fn with_weights(policy: BatchPolicy, weights: Vec<(TenantId, u64)>) -> Self {
         Batcher {
             policy,
+            weights: weights
+                .into_iter()
+                .map(|(t, w)| (t, w.clamp(1, MAX_WEIGHT)))
+                .collect(),
             inner: Mutex::new(Inner {
                 queue: VecDeque::new(),
                 queued_rows: 0,
                 group_rows: HashMap::new(),
-                ready: VecDeque::new(),
+                ready: HashMap::new(),
+                rr: VecDeque::new(),
                 closed: false,
             }),
             work: Condvar::new(),
@@ -139,7 +206,14 @@ impl<T> Batcher<T> {
 
     /// Admit a request (blocks under backpressure). Returns false if the
     /// batcher is closed.
-    pub fn submit(&self, matrix: RowMatrix, k: usize, mode: Mode, reply: T) -> bool {
+    pub fn submit(
+        &self,
+        tenant: TenantId,
+        matrix: RowMatrix,
+        k: usize,
+        mode: Mode,
+        reply: T,
+    ) -> bool {
         let rows = matrix.rows;
         let mut g = self.inner.lock().unwrap();
         while !g.closed && g.queued_rows + rows > self.policy.queue_limit
@@ -151,6 +225,7 @@ impl<T> Batcher<T> {
             return false;
         }
         let pending = Pending {
+            tenant,
             matrix,
             k,
             mode,
@@ -160,71 +235,163 @@ impl<T> Batcher<T> {
         let key = key_of(&pending);
         g.queue.push_back(pending);
         g.queued_rows += rows;
-        let group = g.group_rows.entry(key).or_insert(0);
+        let group = g.group_rows.entry(key.clone()).or_insert(0);
         let was_ready = *group >= self.policy.max_rows;
         *group += rows;
         let now_ready = *group >= self.policy.max_rows;
-        if now_ready && !was_ready && !g.ready.contains(&key) {
-            g.ready.push_back(key);
+        if now_ready && !was_ready {
+            Self::enqueue_ready(&mut g, key);
         }
         drop(g);
         self.work.notify_one();
         true
     }
 
-    /// Pull the next batch. Flush order: any group that reached the row
-    /// budget (wherever it is in the queue), else the head group once
-    /// its deadline passes — the head is the oldest request, so no
-    /// other group's deadline can be earlier. Blocks otherwise. Returns
-    /// None when closed and drained.
-    pub fn next_batch(&self) -> Option<Batch<T>> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            // budget-full groups flush immediately, independent of the
-            // head's deadline
-            while let Some(key) = g.ready.pop_front() {
-                // the entry may be stale (another worker drained the
-                // group past a deadline flush); re-check the live count
-                if g.group_rows.get(&key).copied().unwrap_or(0)
-                    >= self.policy.max_rows
-                {
-                    return Some(self.finish_flush(g, key));
-                }
-            }
-            if let Some(head) = g.queue.front() {
-                let deadline = head.enqueued + self.policy.max_wait;
-                let key = key_of(head);
-                let now = Instant::now();
-                if g.closed || now >= deadline {
-                    return Some(self.finish_flush(g, key));
-                }
-                // wait for more work (a group may fill) or the deadline
-                let (ng, _) = self
-                    .work
-                    .wait_timeout(g, deadline.saturating_duration_since(now))
-                    .unwrap();
-                g = ng;
-            } else if g.closed {
-                return None;
-            } else {
-                g = self.work.wait(g).unwrap();
+    /// Queue a budget-full group key into its tenant's ready queue,
+    /// entering the tenant into the rotation if absent. Deduplicates: a
+    /// key can re-cross the budget while a stale entry for it is still
+    /// queued.
+    fn enqueue_ready(g: &mut Inner<T>, key: GroupKey) {
+        let Inner { ready, rr, .. } = g;
+        let tenant = key.tenant.clone();
+        let tq = ready.entry(tenant.clone()).or_default();
+        if !tq.ready.contains(&key) {
+            tq.ready.push_back(key);
+            if !rr.contains(&tenant) {
+                rr.push_back(tenant);
             }
         }
     }
 
-    /// Flush `key` out of the locked queue, then release the lock and
-    /// wake the right parties: producers always (rows drained), and
-    /// another worker when flushable groups remain — a worker that was
-    /// already parked on the head's deadline would otherwise sleep
-    /// through a budget-full tile this flush left behind (or a second
-    /// key that crossed its budget while we held the lock).
+    /// Weighted-deficit-round-robin pick over budget-full groups.
+    /// Visits the rotation front: serves it if its credit covers one
+    /// tile, else tops the credit up by `weight x tile` (capped one
+    /// tile above the quantum) and rotates. Stale keys — groups a
+    /// deadline flush already drained below the budget — are pruned
+    /// here, and a tenant whose queue empties leaves the rotation with
+    /// its credit reset. Terminates: every iteration serves, prunes, or
+    /// rotates-with-top-up, and after one full rotation every remaining
+    /// tenant's credit covers a tile.
+    fn pick_ready(
+        policy: &BatchPolicy,
+        weights: &HashMap<TenantId, u64>,
+        g: &mut Inner<T>,
+    ) -> Option<GroupKey> {
+        let Inner { ready, rr, group_rows, .. } = g;
+        // clamp keeps `quantum_base * MAX_WEIGHT` inside i64 (a
+        // negative quantum could never satisfy the serve condition)
+        let quantum_base = policy.max_rows.clamp(1, 1 << 32) as i64;
+        loop {
+            let tenant = match rr.front() {
+                Some(t) => t.clone(),
+                None => return None,
+            };
+            // prune stale keys: a deadline flush may have drained the
+            // group below the budget since it was queued
+            let drained = match ready.get_mut(&tenant) {
+                Some(tq) => {
+                    while let Some(key) = tq.ready.front() {
+                        if group_rows.get(key).copied().unwrap_or(0)
+                            >= policy.max_rows
+                        {
+                            break;
+                        }
+                        tq.ready.pop_front();
+                    }
+                    tq.ready.is_empty()
+                }
+                None => true,
+            };
+            if drained {
+                // reset-on-empty: the tenant leaves the rotation and
+                // forfeits any banked credit
+                ready.remove(&tenant);
+                rr.pop_front();
+                continue;
+            }
+            let tq = ready.get_mut(&tenant).expect("tenant queue checked above");
+            if tq.deficit >= quantum_base {
+                return tq.ready.pop_front();
+            }
+            let weight = weights
+                .get(&tenant)
+                .copied()
+                .unwrap_or(1)
+                .clamp(1, MAX_WEIGHT) as i64;
+            let quantum = quantum_base.saturating_mul(weight);
+            tq.deficit = tq
+                .deficit
+                .saturating_add(quantum)
+                .min(quantum.saturating_add(quantum_base));
+            rr.rotate_left(1);
+        }
+    }
+
+    /// Pull the next batch. Flush order: the head group once its
+    /// deadline passes (the head is the oldest request, so no other
+    /// group's deadline can be earlier — and an expired deadline beats
+    /// any budget-full tile), else a budget-full group picked by WDRR
+    /// across tenants. Blocks otherwise. Returns None when closed and
+    /// drained.
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let mut head_deadline = None;
+            if let Some(head) = g.queue.front() {
+                let deadline = head.enqueued + self.policy.max_wait;
+                if g.closed || now >= deadline {
+                    // deadline (or drain-on-close) flush: bypasses WDRR
+                    // so quota pressure can never starve a light
+                    // tenant past its latency budget
+                    let key = key_of(head);
+                    return Some(self.finish_flush(g, key, false));
+                }
+                head_deadline = Some(deadline);
+            } else if g.closed {
+                return None;
+            }
+            if let Some(key) = Self::pick_ready(&self.policy, &self.weights, &mut g)
+            {
+                return Some(self.finish_flush(g, key, true));
+            }
+            // wait for more work (a group may fill) or the deadline
+            g = match head_deadline {
+                Some(d) => {
+                    self.work
+                        .wait_timeout(g, d.saturating_duration_since(now))
+                        .unwrap()
+                        .0
+                }
+                None => self.work.wait(g).unwrap(),
+            };
+        }
+    }
+
+    /// Flush `key` out of the locked queue, charge a WDRR pick its
+    /// actual rows, then release the lock and wake the right parties:
+    /// producers always (rows drained), and another worker when
+    /// flushable groups remain — a worker that was already parked on
+    /// the head's deadline would otherwise sleep through a budget-full
+    /// tile this flush left behind (or a second key that crossed its
+    /// budget while we held the lock).
     fn finish_flush(
         &self,
         mut g: std::sync::MutexGuard<'_, Inner<T>>,
         key: GroupKey,
+        wdrr_pick: bool,
     ) -> Batch<T> {
+        let tenant = key.tenant.clone();
         let batch = self.flush_locked(&mut g, key);
-        let more_ready = !g.ready.is_empty();
+        if wdrr_pick {
+            // charge the tenant the rows actually drained (a tenant
+            // whose queue emptied has left the table; its reset credit
+            // would be meaningless to charge)
+            if let Some(tq) = g.ready.get_mut(&tenant) {
+                tq.deficit -= batch.total_rows as i64;
+            }
+        }
+        let more_ready = !g.rr.is_empty();
         drop(g);
         self.space.notify_all();
         if more_ready {
@@ -279,12 +446,12 @@ impl<T> Batcher<T> {
         };
         if remaining == 0 {
             g.group_rows.remove(&key);
-        } else if remaining >= self.policy.max_rows && !g.ready.contains(&key) {
+        } else if remaining >= self.policy.max_rows {
             // a budget-closing flush can leave another full tile behind
-            g.ready.push_back(key);
+            Self::enqueue_ready(g, key.clone());
         }
         let (cols, k, mode) = meta.expect("flush_locked on an empty group");
-        Batch { cols, k, mode, items, total_rows }
+        Batch { tenant: key.tenant, cols, k, mode, items, total_rows }
     }
 
     /// Close the queue: producers are rejected, workers drain then stop.
@@ -315,6 +482,15 @@ mod tests {
         RowMatrix::zeros(rows, cols)
     }
 
+    /// Default-tenant id (most tests predate tenancy).
+    fn dt() -> TenantId {
+        TenantId::default()
+    }
+
+    fn tid(name: &str) -> TenantId {
+        TenantId::new(name)
+    }
+
     #[test]
     fn groups_same_shape_requests() {
         let b: Batcher<usize> = Batcher::new(BatchPolicy {
@@ -322,16 +498,36 @@ mod tests {
             max_wait: Duration::from_millis(5),
             queue_limit: 1000,
         });
-        assert!(b.submit(mat(40, 8), 2, Mode::EXACT, 0));
-        assert!(b.submit(mat(40, 8), 2, Mode::EXACT, 1));
-        assert!(b.submit(mat(40, 16), 2, Mode::EXACT, 2)); // different M
+        assert!(b.submit(dt(), mat(40, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(dt(), mat(40, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(dt(), mat(40, 16), 2, Mode::EXACT, 2)); // different M
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.cols, 8);
         assert_eq!(batch.items.len(), 2);
         assert_eq!(batch.total_rows, 80);
+        assert_eq!(batch.tenant, dt());
         let batch2 = b.next_batch().unwrap();
         assert_eq!(batch2.cols, 16);
         assert_eq!(batch2.items[0].reply, 2);
+    }
+
+    #[test]
+    fn same_shape_different_tenants_do_not_share_a_batch() {
+        // tenant is a grouping dimension: per-tenant accounting and
+        // fairness require single-tenant batches
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 100,
+            max_wait: Duration::from_millis(5),
+            queue_limit: 1000,
+        });
+        assert!(b.submit(tid("a"), mat(40, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(tid("b"), mat(40, 8), 2, Mode::EXACT, 1));
+        let first = b.next_batch().unwrap();
+        assert_eq!(first.items.len(), 1);
+        assert_eq!(first.tenant, tid("a"));
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.items.len(), 1);
+        assert_eq!(second.tenant, tid("b"));
     }
 
     #[test]
@@ -341,7 +537,7 @@ mod tests {
             max_wait: Duration::from_secs(60), // deadline must not matter
             queue_limit: 1000,
         });
-        b.submit(mat(64, 8), 2, Mode::EXACT, 0);
+        b.submit(dt(), mat(64, 8), 2, Mode::EXACT, 0);
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert!(t0.elapsed() < Duration::from_secs(1));
@@ -355,7 +551,7 @@ mod tests {
             max_wait: Duration::from_millis(10),
             queue_limit: 1000,
         });
-        b.submit(mat(5, 8), 2, Mode::EXACT, 9);
+        b.submit(dt(), mat(5, 8), 2, Mode::EXACT, 9);
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert!(t0.elapsed() >= Duration::from_millis(8));
@@ -366,9 +562,9 @@ mod tests {
     #[test]
     fn close_drains_then_stops() {
         let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy::default()));
-        b.submit(mat(3, 4), 1, Mode::EXACT, 7);
+        b.submit(dt(), mat(3, 4), 1, Mode::EXACT, 7);
         b.close();
-        assert!(!b.submit(mat(1, 4), 1, Mode::EXACT, 8)); // rejected
+        assert!(!b.submit(dt(), mat(1, 4), 1, Mode::EXACT, 8)); // rejected
         let batch = b.next_batch().unwrap(); // drains the queued one
         assert_eq!(batch.items.len(), 1);
         assert!(b.next_batch().is_none());
@@ -384,8 +580,8 @@ mod tests {
             max_wait: Duration::from_millis(5),
             queue_limit: 1000,
         });
-        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 0));
-        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(dt(), mat(60, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(dt(), mat(60, 8), 2, Mode::EXACT, 1));
         let first = b.next_batch().unwrap();
         assert_eq!(first.total_rows, 60, "budget exceeded");
         assert_eq!(first.items[0].reply, 0);
@@ -405,9 +601,9 @@ mod tests {
             max_wait: Duration::from_millis(5),
             queue_limit: 1000,
         });
-        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 0));
-        assert!(b.submit(mat(60, 8), 2, Mode::EXACT, 1));
-        assert!(b.submit(mat(10, 8), 2, Mode::EXACT, 2));
+        assert!(b.submit(dt(), mat(60, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(dt(), mat(60, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(dt(), mat(10, 8), 2, Mode::EXACT, 2));
         let first = b.next_batch().unwrap();
         assert_eq!(
             first.items.iter().map(|p| p.reply).collect::<Vec<_>>(),
@@ -431,8 +627,8 @@ mod tests {
             max_wait: Duration::from_millis(5),
             queue_limit: 10_000,
         });
-        assert!(b.submit(mat(500, 8), 2, Mode::EXACT, 0));
-        assert!(b.submit(mat(10, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(dt(), mat(500, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(dt(), mat(10, 8), 2, Mode::EXACT, 1));
         let big = b.next_batch().unwrap();
         assert_eq!(big.total_rows, 500);
         assert_eq!(big.items.len(), 1, "oversized request must batch alone");
@@ -455,8 +651,8 @@ mod tests {
             max_wait: Duration::from_secs(60),
             queue_limit: 10_000,
         });
-        assert!(b.submit(mat(5, 8), 2, Mode::EXACT, 0)); // head, key A
-        assert!(b.submit(mat(64, 16), 2, Mode::EXACT, 1)); // key B: full
+        assert!(b.submit(dt(), mat(5, 8), 2, Mode::EXACT, 0)); // head, key A
+        assert!(b.submit(dt(), mat(64, 16), 2, Mode::EXACT, 1)); // key B: full
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
         assert!(
@@ -475,6 +671,73 @@ mod tests {
     }
 
     #[test]
+    fn expired_deadline_beats_a_budget_full_tile() {
+        // Regression (starved light tenant): a light tenant's trickle
+        // whose deadline has already expired must flush before a heavy
+        // tenant's budget-full tiles — WDRR governs ready tiles, never
+        // the latency SLO.
+        let b: Batcher<usize> = Batcher::with_weights(
+            BatchPolicy {
+                max_rows: 64,
+                max_wait: Duration::from_millis(20),
+                queue_limit: 100_000,
+            },
+            vec![(tid("heavy"), 8), (tid("light"), 1)],
+        );
+        // light submits first (head), then heavy piles up full tiles
+        assert!(b.submit(tid("light"), mat(3, 8), 2, Mode::EXACT, 0));
+        for i in 0..10 {
+            assert!(b.submit(tid("heavy"), mat(64, 8), 2, Mode::EXACT, 1 + i));
+        }
+        std::thread::sleep(Duration::from_millis(30)); // deadline passes
+        let first = b.next_batch().unwrap();
+        assert_eq!(
+            first.tenant,
+            tid("light"),
+            "deadline-expired trickle must bypass WDRR"
+        );
+        assert_eq!(first.total_rows, 3);
+        // with the light tenant served, WDRR drains the heavy backlog
+        let second = b.next_batch().unwrap();
+        assert_eq!(second.tenant, tid("heavy"));
+        assert_eq!(second.total_rows, 64);
+        b.close();
+    }
+
+    #[test]
+    fn wdrr_drains_tenants_proportionally_to_weight() {
+        // Two tenants with weights 2:1, both with deep backlogs of full
+        // tiles: over any window of 3 drains the weight-2 tenant gets 2
+        // and the weight-1 tenant gets 1.
+        let b: Batcher<usize> = Batcher::with_weights(
+            BatchPolicy {
+                max_rows: 64,
+                max_wait: Duration::from_secs(60),
+                queue_limit: 1 << 20,
+            },
+            vec![(tid("a"), 2), (tid("b"), 1)],
+        );
+        for i in 0..12 {
+            assert!(b.submit(tid("a"), mat(64, 8), 2, Mode::EXACT, i));
+            assert!(b.submit(tid("b"), mat(64, 8), 2, Mode::EXACT, 100 + i));
+        }
+        let mut a_rows = 0usize;
+        let mut b_rows = 0usize;
+        // drain 9 batches while both tenants stay backlogged
+        for _ in 0..9 {
+            let batch = b.next_batch().unwrap();
+            if batch.tenant == tid("a") {
+                a_rows += batch.total_rows;
+            } else {
+                b_rows += batch.total_rows;
+            }
+        }
+        assert_eq!(a_rows, 6 * 64, "weight-2 tenant drains 2 of every 3");
+        assert_eq!(b_rows, 3 * 64, "weight-1 tenant drains 1 of every 3");
+        b.close();
+    }
+
+    #[test]
     fn blocked_worker_wakes_for_a_late_arriving_full_group() {
         // A worker already parked on the head's (long) deadline must
         // wake and serve a different-key group the moment it fills.
@@ -483,11 +746,11 @@ mod tests {
             max_wait: Duration::from_secs(60),
             queue_limit: 10_000,
         }));
-        b.submit(mat(4, 8), 2, Mode::EXACT, 0); // head, key A
+        b.submit(dt(), mat(4, 8), 2, Mode::EXACT, 0); // head, key A
         let b2 = b.clone();
         let worker = std::thread::spawn(move || b2.next_batch().unwrap());
         std::thread::sleep(Duration::from_millis(30)); // worker parks
-        b.submit(mat(32, 16), 2, Mode::EXACT, 1); // key B fills
+        b.submit(dt(), mat(32, 16), 2, Mode::EXACT, 1); // key B fills
         let batch = worker.join().unwrap();
         assert_eq!(batch.cols, 16);
         assert_eq!(b.queued_rows(), 4);
@@ -506,7 +769,7 @@ mod tests {
             max_wait: Duration::from_secs(60),
             queue_limit: 10_000,
         }));
-        b.submit(mat(4, 8), 2, Mode::EXACT, 0); // head, key A, far deadline
+        b.submit(dt(), mat(4, 8), 2, Mode::EXACT, 0); // head, key A, far deadline
         let workers: Vec<_> = (0..2)
             .map(|_| {
                 let b = b.clone();
@@ -516,9 +779,9 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30)); // both park
         // key B arrives as two full tiles in one burst: the crossing
         // submit wakes one worker; the flush must wake the other
-        b.submit(mat(60, 16), 2, Mode::EXACT, 1);
-        b.submit(mat(60, 16), 2, Mode::EXACT, 2);
-        b.submit(mat(60, 16), 2, Mode::EXACT, 3);
+        b.submit(dt(), mat(60, 16), 2, Mode::EXACT, 1);
+        b.submit(dt(), mat(60, 16), 2, Mode::EXACT, 2);
+        b.submit(dt(), mat(60, 16), 2, Mode::EXACT, 3);
         let t0 = Instant::now();
         let mut cols: Vec<usize> =
             workers.into_iter().map(|w| w.join().unwrap().cols).collect();
@@ -543,8 +806,8 @@ mod tests {
             max_wait: Duration::from_millis(2),
             queue_limit: 1000,
         });
-        assert!(b.submit(mat(100, 8), 2, Mode::EXACT, 0));
-        assert!(b.submit(mat(0, 8), 2, Mode::EXACT, 1));
+        assert!(b.submit(dt(), mat(100, 8), 2, Mode::EXACT, 0));
+        assert!(b.submit(dt(), mat(0, 8), 2, Mode::EXACT, 1));
         let big = b.next_batch().unwrap();
         assert_eq!(big.total_rows, 100);
         assert_eq!(big.items.len(), 1);
@@ -557,13 +820,14 @@ mod tests {
 
     #[test]
     fn stress_multi_producer_no_loss_duplication_or_leak() {
-        // 4 producers x 60 requests of mixed sizes/keys against 2
-        // consumers, with a queue limit small enough to exercise
+        // 4 producers x 60 requests of mixed sizes/keys/tenants against
+        // 2 consumers, with a queue limit small enough to exercise
         // backpressure. Every reply token must come back exactly once,
-        // every batch must respect the key grouping and the row budget
-        // (unless it is a dedicated oversized batch), and both row
-        // counters — queued_rows and the per-key running counts — must
-        // reconcile to 0 at drain (no double-counting).
+        // every batch must respect the key grouping (including the
+        // tenant dimension) and the row budget (unless it is a
+        // dedicated oversized batch), and both row counters —
+        // queued_rows and the per-key running counts — must reconcile
+        // to 0 at drain (no double-counting).
         const PRODUCERS: usize = 4;
         const PER_PRODUCER: usize = 60;
         let policy = BatchPolicy {
@@ -571,7 +835,10 @@ mod tests {
             max_wait: Duration::from_micros(200),
             queue_limit: 256,
         };
-        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(policy));
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::with_weights(
+            policy,
+            vec![(tid("t0"), 3), (tid("t1"), 1)],
+        ));
         let seen = Arc::new(std::sync::Mutex::new(Vec::<usize>::new()));
 
         let consumers: Vec<_> = (0..2)
@@ -591,6 +858,7 @@ mod tests {
                             );
                         }
                         for p in &batch.items {
+                            assert_eq!(p.tenant, batch.tenant);
                             assert_eq!(p.matrix.cols, batch.cols);
                             assert_eq!(p.k, batch.k);
                             assert_eq!(p.mode, batch.mode);
@@ -608,10 +876,13 @@ mod tests {
                 std::thread::spawn(move || {
                     for i in 0..PER_PRODUCER {
                         // sizes 1..=20 plus an occasional oversized 100;
-                        // two cols keys to exercise grouping
+                        // two cols keys and two tenants to exercise
+                        // grouping
                         let rows = if i % 17 == 0 { 100 } else { 1 + (i * 7) % 20 };
                         let cols = if i % 3 == 0 { 16 } else { 8 };
+                        let tenant = if i % 2 == 0 { tid("t0") } else { tid("t1") };
                         assert!(b.submit(
+                            tenant,
                             mat(rows, cols),
                             2,
                             Mode::EXACT,
@@ -651,11 +922,11 @@ mod tests {
             max_wait: Duration::from_millis(1),
             queue_limit: 10,
         }));
-        b.submit(mat(10, 4), 1, Mode::EXACT, 0); // fills the queue
+        b.submit(dt(), mat(10, 4), 1, Mode::EXACT, 0); // fills the queue
         let b2 = b.clone();
         let producer = std::thread::spawn(move || {
             // blocks until the worker drains, then succeeds
-            b2.submit(mat(10, 4), 1, Mode::EXACT, 1)
+            b2.submit(dt(), mat(10, 4), 1, Mode::EXACT, 1)
         });
         std::thread::sleep(Duration::from_millis(20));
         assert!(!producer.is_finished(), "submit should be backpressured");

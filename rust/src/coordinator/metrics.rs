@@ -1,21 +1,53 @@
-//! Service metrics: lock-free counters + a mutex-guarded latency
-//! reservoir with percentile snapshots.
+//! Service metrics: lock-free aggregate counters, per-tenant counter
+//! tables, and mutex-guarded latency reservoirs with percentile
+//! snapshots.
 //!
-//! The reservoir uses counter-driven uniform sampling (Vitter's
+//! Reservoirs use counter-driven uniform sampling (Vitter's
 //! Algorithm R): once full, observation number `n` replaces a random
-//! slot with probability `RESERVOIR / n`, so the snapshot is a uniform
+//! slot with probability `cap / n`, so the snapshot is a uniform
 //! sample of the whole stream. The previous scheme picked the
 //! overwrite slot from the latency value itself
-//! (`latency.as_nanos() % RESERVOIR`), which collapsed
-//! identical/quantized latencies into the same few slots — a bimodal
-//! stream would keep overwriting two slots while 65k stale entries
-//! skewed every percentile.
+//! (`latency.as_nanos() % cap`), which collapsed identical/quantized
+//! latencies into the same few slots — a bimodal stream would keep
+//! overwriting two slots while 65k stale entries skewed every
+//! percentile.
+//!
+//! Tenancy: every served request is recorded twice — into the
+//! aggregate counters/reservoir (capacity [`RESERVOIR`]) and into its
+//! tenant's own table (a smaller [`TENANT_RESERVOIR`] reservoir per
+//! tenant; past [`MAX_TENANT_TABLES`] distinct tenants new names fold
+//! into the shared [`OVERFLOW_TENANT`] entry, so client-chosen names
+//! cannot grow the table forever). Quota rejections are
+//! recorded *only* as the rejected tenant's `rejected` counter: they
+//! never touch any latency reservoir, so one tenant shedding load
+//! cannot perturb another tenant's percentiles — pinned by the
+//! isolation tests in `tests/tenants.rs`.
 
+use crate::coordinator::tenant::TenantId;
 use crate::stats::summary::percentile;
 use crate::util::rng::Rng;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
+
+/// Aggregate latency-reservoir capacity.
+pub const RESERVOIR: usize = 1 << 16;
+
+/// Per-tenant latency-reservoir capacity (bounded per tenant so the
+/// table scales to many tenants).
+pub const TENANT_RESERVOIR: usize = 4096;
+
+/// Cap on distinct per-tenant metric tables. Tenant names are
+/// client-chosen, so past this many entries new names fold into the
+/// shared [`OVERFLOW_TENANT`] row instead of growing the map forever.
+/// Sized above the tenant directory's own bound
+/// (`crate::coordinator::tenant::MAX_AD_HOC_TENANTS` plus configured
+/// tenants) so well-behaved deployments never hit it.
+pub const MAX_TENANT_TABLES: usize = 4096;
+
+/// The synthetic tenant name overflow traffic is accounted under.
+pub const OVERFLOW_TENANT: &str = "(overflow)";
 
 /// Shared metrics hub (cheap to clone via Arc by the owner).
 #[derive(Debug, Default)]
@@ -28,22 +60,90 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// request latencies in microseconds (bounded uniform reservoir)
     latencies_us: Mutex<Reservoir>,
+    /// per-tenant counters and reservoirs, registered on first sight
+    tenants: RwLock<HashMap<TenantId, Arc<TenantMetrics>>>,
 }
 
-/// Bounded uniform sample of the latency stream.
+/// One tenant's counters + latency reservoir.
+#[derive(Debug)]
+struct TenantMetrics {
+    requests: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    /// submissions rejected by admission control (over quota)
+    rejected: AtomicU64,
+    latencies_us: Mutex<Reservoir>,
+}
+
+impl TenantMetrics {
+    fn new() -> TenantMetrics {
+        TenantMetrics {
+            requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            latencies_us: Mutex::new(Reservoir::with_cap(
+                TENANT_RESERVOIR,
+                0x7E4A,
+            )),
+        }
+    }
+}
+
+/// Bounded uniform sample of a latency stream.
 #[derive(Debug)]
 struct Reservoir {
     samples: Vec<u64>,
     /// observations offered so far (the Algorithm R counter)
     seen: u64,
     rng: Rng,
+    cap: usize,
+}
+
+impl Reservoir {
+    /// Deterministic seed: sampling must be unpredictable *per slot*,
+    /// not across runs — reproducible metrics are a feature.
+    fn with_cap(cap: usize, seed: u64) -> Reservoir {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Rng::seed_from(seed),
+            cap,
+        }
+    }
+
+    /// Offer one observation (Algorithm R: kept with probability
+    /// `cap / seen`, in a uniformly chosen slot).
+    fn offer(&mut self, us: u64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(us);
+        } else {
+            let seen = self.seen;
+            let j = self.rng.below(seen) as usize;
+            if j < self.cap {
+                self.samples[j] = us;
+            }
+        }
+    }
+
+    /// Sorted snapshot with (p50, p95, p99, max) in microseconds.
+    fn stats(&self) -> (f64, f64, f64, f64) {
+        let mut lat: Vec<f64> = self.samples.iter().map(|&v| v as f64).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, p) };
+        (
+            pick(50.0),
+            pick(95.0),
+            pick(99.0),
+            lat.last().copied().unwrap_or(0.0),
+        )
+    }
 }
 
 impl Default for Reservoir {
     fn default() -> Self {
-        // deterministic seed: sampling must be unpredictable *per
-        // slot*, not across runs — reproducible metrics are a feature
-        Reservoir { samples: Vec::new(), seen: 0, rng: Rng::seed_from(0x1A7E) }
+        Reservoir::with_cap(RESERVOIR, 0x1A7E)
     }
 }
 
@@ -60,28 +160,70 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     pub p99_us: f64,
     pub max_us: f64,
+    /// per-tenant view, sorted by tenant name
+    pub tenants: Vec<TenantSnapshot>,
 }
 
-const RESERVOIR: usize = 1 << 16;
+/// Point-in-time view of one tenant.
+#[derive(Clone, Debug)]
+pub struct TenantSnapshot {
+    pub tenant: String,
+    pub requests: u64,
+    pub rows: u64,
+    pub errors: u64,
+    /// submissions rejected by admission control (over quota)
+    pub rejected: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
 
 impl Metrics {
+    /// The tenant's table entry, registered on first sight (read-lock
+    /// fast path). Past [`MAX_TENANT_TABLES`] distinct tenants, new
+    /// names share the [`OVERFLOW_TENANT`] entry — client-chosen names
+    /// must not grow the map without bound.
+    fn tenant(&self, id: &TenantId) -> Arc<TenantMetrics> {
+        if let Some(t) = self.tenants.read().unwrap().get(id) {
+            return t.clone();
+        }
+        let mut map = self.tenants.write().unwrap();
+        if map.len() >= MAX_TENANT_TABLES && !map.contains_key(id) {
+            return map
+                .entry(TenantId::new(OVERFLOW_TENANT))
+                .or_insert_with(|| Arc::new(TenantMetrics::new()))
+                .clone();
+        }
+        map.entry(id.clone())
+            .or_insert_with(|| Arc::new(TenantMetrics::new()))
+            .clone()
+    }
+
+    /// Record a served request into the aggregate counters/reservoir
+    /// only (trainer path; the service path attributes to a tenant via
+    /// [`Metrics::record_request_for`]).
     pub fn record_request(&self, rows: usize, latency: Duration) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(rows as u64, Ordering::Relaxed);
         let us = latency.as_micros() as u64;
-        let mut r = self.latencies_us.lock().unwrap();
-        r.seen += 1;
-        if r.samples.len() < RESERVOIR {
-            r.samples.push(us);
-        } else {
-            // Algorithm R: keep this observation with probability
-            // RESERVOIR / seen, in a uniformly chosen slot
-            let seen = r.seen;
-            let j = r.rng.below(seen) as usize;
-            if j < RESERVOIR {
-                r.samples[j] = us;
-            }
-        }
+        self.latencies_us.lock().unwrap().offer(us);
+    }
+
+    /// Record a served request into both the aggregate and the tenant's
+    /// own counters/reservoir.
+    pub fn record_request_for(
+        &self,
+        tenant: &TenantId,
+        rows: usize,
+        latency: Duration,
+    ) {
+        self.record_request(rows, latency);
+        let t = self.tenant(tenant);
+        t.requests.fetch_add(1, Ordering::Relaxed);
+        t.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        let us = latency.as_micros() as u64;
+        t.latencies_us.lock().unwrap().offer(us);
     }
 
     pub fn record_batch(&self, via_pjrt: bool) {
@@ -97,17 +239,54 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a failed batch against the aggregate and the tenant.
+    pub fn record_error_for(&self, tenant: &TenantId) {
+        self.record_error();
+        self.tenant(tenant).errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an admission-control rejection. Counters only: a
+    /// rejection must never touch a latency reservoir (its latency is
+    /// the quota check, not service time), so shed load cannot skew
+    /// any tenant's percentiles.
+    pub fn record_rejection(&self, tenant: &TenantId) {
+        self.tenant(tenant).rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot one tenant's counters and percentiles (`None` if the
+    /// tenant was never recorded).
+    pub fn tenant_snapshot(&self, tenant: &TenantId) -> Option<TenantSnapshot> {
+        let t = self.tenants.read().unwrap().get(tenant)?.clone();
+        Some(Self::snap_tenant(tenant, &t))
+    }
+
+    fn snap_tenant(id: &TenantId, t: &TenantMetrics) -> TenantSnapshot {
+        let (p50_us, p95_us, p99_us, max_us) =
+            t.latencies_us.lock().unwrap().stats();
+        TenantSnapshot {
+            tenant: id.as_str().to_string(),
+            requests: t.requests.load(Ordering::Relaxed),
+            rows: t.rows.load(Ordering::Relaxed),
+            errors: t.errors.load(Ordering::Relaxed),
+            rejected: t.rejected.load(Ordering::Relaxed),
+            p50_us,
+            p95_us,
+            p99_us,
+            max_us,
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat: Vec<f64> = self
-            .latencies_us
-            .lock()
+        let (p50_us, p95_us, p99_us, max_us) =
+            self.latencies_us.lock().unwrap().stats();
+        let mut tenants: Vec<TenantSnapshot> = self
+            .tenants
+            .read()
             .unwrap()
-            .samples
             .iter()
-            .map(|&v| v as f64)
+            .map(|(id, t)| Self::snap_tenant(id, t))
             .collect();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pick = |p: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, p) };
+        tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             rows: self.rows.load(Ordering::Relaxed),
@@ -115,10 +294,11 @@ impl Metrics {
             pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
             cpu_batches: self.cpu_batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
-            p50_us: pick(50.0),
-            p95_us: pick(95.0),
-            p99_us: pick(99.0),
-            max_us: lat.last().copied().unwrap_or(0.0),
+            p50_us,
+            p95_us,
+            p99_us,
+            max_us,
+            tenants,
         }
     }
 }
@@ -142,6 +322,7 @@ mod tests {
         assert_eq!(s.cpu_batches, 1);
         assert!((s.p50_us - 50.5).abs() < 1.0);
         assert!(s.p99_us >= 99.0 && s.max_us == 100.0);
+        assert!(s.tenants.is_empty(), "no tenant-attributed traffic");
     }
 
     #[test]
@@ -190,5 +371,99 @@ mod tests {
             "p50 sits at the mode boundary, got {}",
             s.p50_us
         );
+    }
+
+    #[test]
+    fn tenant_attribution_feeds_both_views() {
+        let m = Metrics::default();
+        let a = TenantId::new("a");
+        let b = TenantId::new("b");
+        for i in 1..=10u64 {
+            m.record_request_for(&a, 4, Duration::from_micros(100 * i));
+        }
+        m.record_request_for(&b, 2, Duration::from_micros(5));
+        m.record_error_for(&b);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 11, "aggregate includes every tenant");
+        assert_eq!(s.rows, 42);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[0].tenant, "a", "sorted by name");
+        assert_eq!(s.tenants[0].requests, 10);
+        assert_eq!(s.tenants[0].rows, 40);
+        assert_eq!(s.tenants[0].rejected, 0);
+        assert!(s.tenants[0].p50_us >= 100.0);
+        assert_eq!(s.tenants[1].tenant, "b");
+        assert_eq!(s.tenants[1].errors, 1);
+        assert_eq!(s.tenants[1].max_us, 5.0);
+        let only_a = m.tenant_snapshot(&a).unwrap();
+        assert_eq!(only_a.requests, 10);
+        assert!(m.tenant_snapshot(&TenantId::new("nobody")).is_none());
+    }
+
+    #[test]
+    fn rejections_count_without_touching_any_reservoir() {
+        // The isolation contract: an over-quota tenant shedding load
+        // must not move any percentile — its own or anyone else's.
+        let m = Metrics::default();
+        let victim = TenantId::new("victim");
+        let noisy = TenantId::new("noisy");
+        for i in 1..=100u64 {
+            m.record_request_for(&victim, 1, Duration::from_micros(i));
+        }
+        let before = m.tenant_snapshot(&victim).unwrap();
+        for _ in 0..10_000 {
+            m.record_rejection(&noisy);
+        }
+        let after = m.tenant_snapshot(&victim).unwrap();
+        assert_eq!(before.p50_us, after.p50_us);
+        assert_eq!(before.p99_us, after.p99_us);
+        assert_eq!(before.max_us, after.max_us);
+        assert_eq!(before.requests, after.requests);
+        let noisy_snap = m.tenant_snapshot(&noisy).unwrap();
+        assert_eq!(noisy_snap.rejected, 10_000);
+        assert_eq!(noisy_snap.requests, 0);
+        assert_eq!(noisy_snap.p99_us, 0.0, "rejections carry no latency");
+        // and the aggregate reservoir saw nothing from the rejections
+        assert_eq!(m.snapshot().requests, 100);
+    }
+
+    #[test]
+    fn tenant_metric_tables_fold_into_overflow_past_the_cap() {
+        // client-chosen names must not grow the table forever: past the
+        // cap, traffic is still accounted — under the shared overflow
+        // entry
+        let m = Metrics::default();
+        for i in 0..MAX_TENANT_TABLES {
+            m.record_rejection(&TenantId::new(&format!("t{i}")));
+        }
+        m.record_request_for(&TenantId::new("late"), 3, Duration::from_micros(7));
+        m.record_rejection(&TenantId::new("later"));
+        let s = m.snapshot();
+        assert!(s.tenants.len() <= MAX_TENANT_TABLES + 1);
+        let overflow = s
+            .tenants
+            .iter()
+            .find(|t| t.tenant == OVERFLOW_TENANT)
+            .expect("overflow entry exists");
+        assert_eq!(overflow.requests, 1);
+        assert_eq!(overflow.rows, 3);
+        assert_eq!(overflow.rejected, 1);
+        assert!(
+            m.tenant_snapshot(&TenantId::new("late")).is_none(),
+            "no per-name entry past the cap"
+        );
+    }
+
+    #[test]
+    fn tenant_reservoirs_stay_bounded() {
+        let m = Metrics::default();
+        let t = TenantId::new("firehose");
+        for i in 0..(TENANT_RESERVOIR + 50) as u64 {
+            m.record_request_for(&t, 1, Duration::from_micros(i));
+        }
+        let map = m.tenants.read().unwrap();
+        let tm = map.get(&t).unwrap();
+        assert!(tm.latencies_us.lock().unwrap().samples.len() <= TENANT_RESERVOIR);
     }
 }

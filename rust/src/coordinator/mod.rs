@@ -1,20 +1,28 @@
-//! The L3 coordinator: a row-wise top-k *service* and the MaxK-GNN
-//! training orchestrator, built on the PJRT runtime and the execution
-//! backends.
+//! The L3 coordinator: a multi-tenant row-wise top-k *service* and the
+//! MaxK-GNN training orchestrator, built on the PJRT runtime and the
+//! execution backends.
 //!
 //! Serving path (quickstart -> production):
 //!
 //! ```text
-//!   client threads ──submit()──▶ Batcher (deadline + backpressure)
-//!                                  │ tiles of R rows, same (M, k, mode)
-//!                                  ▼
-//!                              Scheduler workers
-//!                                  │ backend: the planner's measured
-//!                                  │ per-shape choice (crate::plan)
-//!                                  ▼
-//!                              ExecBackend (crate::backend)
-//!                                  │ cpu:  in-crate engine
-//!                                  │ pjrt: Executor thread (owns PJRT)
+//!   client threads ──submit_as(tenant)──▶ admission control (tenant)
+//!                                           │ quota check: reject or
+//!                                           │ reserve (never queue shed
+//!                                           ▼            load)
+//!                                        Batcher (deadline + WDRR +
+//!                                           │     backpressure)
+//!                                           │ single-tenant tiles of
+//!                                           │ R rows, same (M, k, mode)
+//!                                           ▼
+//!                                        Scheduler workers
+//!                                           │ backend: the planner's
+//!                                           │ measured per-shape choice
+//!                                           │ (crate::plan)
+//!                                           ▼
+//!                                        ExecBackend (crate::backend)
+//!                                           │ cpu:  in-crate engine
+//!                                           │ pjrt: Executor thread
+//!                                           │       (owns PJRT)
 //! ```
 //!
 //! The adaptive execution planner (`crate::plan`) owns dispatch end to
@@ -24,15 +32,25 @@
 //! decided once per shape (cost-model prior + microbenchmark
 //! calibration, accelerator probes included) and cached. Backends that
 //! cannot execute here skip their probes cleanly, so the service always
-//! answers. The trainer drives the AOT train/eval step artifacts with
-//! device-resident parameter round-trips.
+//! answers.
+//!
+//! Multi-tenancy (`tenant`): every request runs as a tenant; admission
+//! control rejects over-quota submissions before they queue, the
+//! batcher drains budget-full tiles across tenants proportionally to
+//! configured weights (weighted-deficit round-robin, with deadline
+//! flushes exempt so no tenant starves past its latency budget), and
+//! metrics keep per-tenant counters and latency reservoirs next to the
+//! aggregates. The trainer drives the AOT train/eval step artifacts
+//! with device-resident parameter round-trips.
 
 pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
 pub mod service;
+pub mod tenant;
 pub mod trainer;
 
 pub use metrics::Metrics;
 pub use service::{ServiceStats, TopKRequest, TopKService};
+pub use tenant::{TenantDirectory, TenantId, DEFAULT_TENANT};
 pub use trainer::{TrainOutcome, Trainer};

@@ -8,6 +8,17 @@
 //! An accelerator backend that fails at execution time degrades to the
 //! CPU engine instead of failing the batch.
 //!
+//! Tenancy: batches are single-tenant by construction (the batcher
+//! groups per tenant), so delivery is where per-tenant accounting
+//! closes the loop — each reply releases the request's admission
+//! reservation (`crate::coordinator::tenant::TenantDirectory::release`)
+//! and records the latency into the tenant's own metrics table. A
+//! tenant-level `force_algo` pin (honored only where semantics allow,
+//! like the global pin) overrides the plan's CPU algorithm at dispatch
+//! and routes the batch to the CPU engine; pinned batches are never
+//! shadow-sampled — the timing would measure the pin, not the plan's
+//! winner.
+//!
 //! Shadow re-probing: when `[plan] shadow_every = N` is set (N > 0),
 //! every Nth dispatched batch is timed and then re-executed on the
 //! plan's recorded runner-up; the measured edge feeds the planner's
@@ -20,9 +31,12 @@
 //! 0` skips all of this: the dispatch path is then exactly the
 //! pre-shadow code.
 
-use crate::backend::{registry::QUARANTINE_AFTER, BackendRegistry, CPU_BACKEND_ID};
+use crate::backend::{
+    registry::QUARANTINE_AFTER, BackendRegistry, CPU_BACKEND_ID,
+};
 use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::tenant::TenantDirectory;
 use crate::plan::{Plan, Planner};
 use crate::topk::rowwise::rowwise_topk;
 use crate::topk::types::TopKResult;
@@ -46,6 +60,7 @@ pub fn spawn_workers(
     backends: Arc<BackendRegistry>,
     metrics: Arc<Metrics>,
     planner: Arc<Planner>,
+    tenants: Arc<TenantDirectory>,
 ) -> Vec<JoinHandle<()>> {
     (0..workers.max(1))
         .map(|i| {
@@ -53,11 +68,12 @@ pub fn spawn_workers(
             let backends = backends.clone();
             let metrics = metrics.clone();
             let planner = planner.clone();
+            let tenants = tenants.clone();
             std::thread::Builder::new()
                 .name(format!("topk-worker-{i}"))
                 .spawn(move || {
                     while let Some(batch) = batcher.next_batch() {
-                        run_batch(batch, &backends, &metrics, &planner);
+                        run_batch(batch, &backends, &metrics, &planner, &tenants);
                     }
                 })
                 .expect("spawn worker")
@@ -110,6 +126,7 @@ pub fn run_batch(
     backends: &BackendRegistry,
     metrics: &Metrics,
     planner: &Planner,
+    tenants: &TenantDirectory,
 ) {
     let plan = planner.plan(batch.total_rows, batch.cols, batch.k, batch.mode);
     // a plan can only name a registered backend, but resolve
@@ -122,16 +139,27 @@ pub fn run_batch(
     if backends.is_quarantined(backend.id()) {
         backend = backends.cpu();
     }
-    let spec = plan.spec();
+    let mut spec = plan.spec();
+    // a tenant-level algorithm pin overrides the plan's CPU algorithm
+    // and runs on the CPU engine (so what the pin names is what
+    // executes); semantics-gated exactly like the global force_algo
+    let mut tenant_pinned = false;
+    if let Some(algo) = tenants.pinned_algo(&batch.tenant, batch.mode) {
+        if algo != spec.algo {
+            spec = crate::backend::ExecSpec { algo, grain: plan.grain };
+            backend = backends.cpu();
+            tenant_pinned = true;
+        }
+    }
     let mats: Vec<&RowMatrix> =
         batch.items.iter().map(|item| &item.matrix).collect();
     let mut via_accel = backend.id() != CPU_BACKEND_ID;
     // time the dispatch only when this batch is a shadow sample — and
     // only when what executes really is the plan's winner: a dispatch
     // that silently resolved a quarantined/unregistered backend to the
-    // CPU would otherwise feed record_shadow a CPU-vs-CPU timing and
-    // keep the stale winner's EWMA pinned at zero forever
-    let is_primary = backend.id() == plan.backend;
+    // CPU (or a tenant pin) would otherwise feed record_shadow a
+    // timing that measures something other than the cached winner
+    let is_primary = !tenant_pinned && backend.id() == plan.backend;
     let shadow_t0 =
         if is_primary && planner.shadow_due() && plan.runner_up.is_some() {
             Some(Instant::now())
@@ -181,18 +209,21 @@ pub fn run_batch(
     }
     drop(mats);
     metrics.record_batch(via_accel);
+    let tenant = batch.tenant.clone();
     match outcome {
         Ok(results) => {
             for (item, res) in batch.items.into_iter().zip(results) {
                 let latency = item.enqueued.elapsed();
-                metrics.record_request(item.matrix.rows, latency);
+                metrics.record_request_for(&tenant, item.matrix.rows, latency);
+                tenants.release(&tenant, item.matrix.rows);
                 let _ = item.reply.send(Ok(res));
             }
         }
         Err(e) => {
-            metrics.record_error();
+            metrics.record_error_for(&tenant);
             let msg = format!("{e:#}");
             for item in batch.items {
+                tenants.release(&tenant, item.matrix.rows);
                 let _ = item.reply.send(Err(anyhow!("{msg}")));
             }
         }
@@ -218,12 +249,15 @@ mod tests {
     use std::time::Duration;
 
     fn one_item_batch(x: &RowMatrix, k: usize, mode: Mode, tx: Reply) -> Batch<Reply> {
+        use crate::coordinator::tenant::TenantId;
         Batch {
+            tenant: TenantId::default(),
             cols: x.cols,
             k,
             mode,
             total_rows: x.rows,
             items: vec![crate::coordinator::batcher::Pending {
+                tenant: TenantId::default(),
                 matrix: x.clone(),
                 k,
                 mode,
@@ -231,6 +265,10 @@ mod tests {
                 reply: tx,
             }],
         }
+    }
+
+    fn no_tenants() -> Arc<TenantDirectory> {
+        Arc::new(TenantDirectory::new())
     }
 
     #[test]
@@ -249,6 +287,7 @@ mod tests {
             backends,
             metrics.clone(),
             planner.clone(),
+            no_tenants(),
         );
 
         let mut rng = Rng::seed_from(21);
@@ -257,7 +296,13 @@ mod tests {
         for _ in 0..6 {
             let x = RowMatrix::random_normal(20, 32, &mut rng);
             let (tx, rx) = mpsc::channel();
-            assert!(batcher.submit(x.clone(), 4, Mode::EXACT, tx));
+            assert!(batcher.submit(
+                crate::coordinator::tenant::TenantId::default(),
+                x.clone(),
+                4,
+                Mode::EXACT,
+                tx
+            ));
             rxs.push(rx);
             mats.push(x);
         }
@@ -333,7 +378,7 @@ mod tests {
         for _ in 0..total_batches {
             let (tx, rx) = mpsc::channel();
             let batch = one_item_batch(&x, 4, Mode::EXACT, tx);
-            run_batch(batch, &backends, &metrics, &planner);
+            run_batch(batch, &backends, &metrics, &planner, &no_tenants());
             let res = rx.recv().unwrap().unwrap();
             assert!(is_exact(&x, &res), "fallback result must stay exact");
         }
@@ -405,6 +450,7 @@ mod tests {
             &backends,
             &metrics,
             &planner,
+            &no_tenants(),
         );
         assert!(is_exact(&x, &rx.recv().unwrap().unwrap()));
         assert_eq!(
@@ -484,6 +530,7 @@ mod tests {
                 &backends,
                 &metrics,
                 &planner,
+                &no_tenants(),
             );
             assert!(is_exact(&x, &rx.recv().unwrap().unwrap()));
         }
@@ -508,6 +555,7 @@ mod tests {
             &backends,
             &metrics,
             &planner,
+            &no_tenants(),
         );
         assert!(is_exact(&x, &rx.recv().unwrap().unwrap()));
         let s = metrics.snapshot();

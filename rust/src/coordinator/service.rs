@@ -1,18 +1,29 @@
 //! TopKService — the public serving API: batcher + scheduler + backend
-//! registry + adaptive planner wired together behind
-//! `submit`/`submit_async`.
+//! registry + adaptive planner + tenant directory wired together behind
+//! `submit`/`submit_async` (and their tenant-attributed `_as` forms).
 //!
 //! The service builds a [`BackendRegistry`] (CPU engine always; the
 //! PJRT tile backend when artifacts are present and `[backend]` allows
 //! it) and hands it to the planner — which then owns the per-shape
 //! backend choice end to end. The scheduler dispatches every batch
 //! through the plan's backend handle; there is no separate router.
+//!
+//! Multi-tenancy: every submission runs as a tenant (the anonymous
+//! forms run as [`DEFAULT_TENANT`]). Admission control happens here,
+//! before the batcher ever sees the request: an over-quota submission
+//! is rejected with a positioned error (tenant, observed load, limit)
+//! and counted in the tenant's `rejected` metric — it neither queues
+//! nor perturbs any latency reservoir. Admitted requests carry their
+//! [`TenantId`] through the batcher (which drains budget-full tiles
+//! across tenants by weighted-deficit round-robin) to the scheduler,
+//! which releases the admission reservation when the reply is sent.
 
 use crate::backend::BackendRegistry;
 use crate::config::ServeConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::scheduler::{spawn_workers, Reply};
+use crate::coordinator::tenant::{TenantDirectory, TenantId, DEFAULT_TENANT};
 use crate::plan::{Planner, PlannerConfig};
 use crate::runtime::executor::Executor;
 use crate::topk::types::{Mode, TopKResult};
@@ -50,6 +61,7 @@ pub struct TopKService {
     metrics: Arc<Metrics>,
     backends: Arc<BackendRegistry>,
     planner: Arc<Planner>,
+    tenants: Arc<TenantDirectory>,
     workers: Vec<JoinHandle<()>>,
     /// reject non-finite client matrices at submit (`[serve]
     /// validate_inputs`, default on)
@@ -97,11 +109,18 @@ impl TopKService {
                 ));
             }
         }
-        let batcher = Arc::new(Batcher::new(BatchPolicy {
-            max_rows: cfg.max_batch_rows,
-            max_wait: Duration::from_micros(cfg.max_wait_us),
-            queue_limit: cfg.queue_limit,
-        }));
+        let tenants = Arc::new(
+            TenantDirectory::from_config(&cfg.tenants)
+                .map_err(anyhow::Error::msg)?,
+        );
+        let batcher = Arc::new(Batcher::with_weights(
+            BatchPolicy {
+                max_rows: cfg.max_batch_rows,
+                max_wait: Duration::from_micros(cfg.max_wait_us),
+                queue_limit: cfg.queue_limit,
+            },
+            tenants.batch_weights(),
+        ));
         let metrics = Arc::new(Metrics::default());
         let mut planner_cfg = PlannerConfig::from_plan_config(&cfg.plan)
             .map_err(anyhow::Error::msg)?;
@@ -114,28 +133,48 @@ impl TopKService {
             backends.clone(),
             metrics.clone(),
             planner.clone(),
+            tenants.clone(),
         );
         Ok(TopKService {
             batcher,
             metrics,
             backends,
             planner,
+            tenants,
             workers,
             validate_inputs: cfg.validate_inputs,
             _executor: executor,
         })
     }
 
-    /// Submit a request; returns a handle to wait on.
+    /// Submit a request as a named tenant; returns a handle to wait on.
     ///
-    /// Validates `k` and — unless `[serve] validate_inputs = false` —
-    /// that the matrix is entirely finite: the top-k kernels use
-    /// branchless IEEE compares (`topk::binary_search`'s documented
-    /// input contract), so a NaN or infinity would silently corrupt
-    /// the selection rather than fail. The scan is one vectorizable
-    /// pass over data the service is about to read anyway.
-    pub fn submit_async(&self, matrix: RowMatrix, k: usize, mode: Mode)
-        -> Result<TopKRequest> {
+    /// `mode = None` uses the tenant's configured default mode (else
+    /// [`Mode::EXACT`]). Validates `k` and — unless `[serve]
+    /// validate_inputs = false` — that the matrix is entirely finite:
+    /// the top-k kernels use branchless IEEE compares
+    /// (`topk::binary_search`'s documented input contract), so a NaN or
+    /// infinity would silently corrupt the selection rather than fail.
+    /// The scan is one vectorizable pass over data the service is about
+    /// to read anyway.
+    ///
+    /// After validation the request is checked against the tenant's
+    /// admission quotas (`[tenants.<name>] max_in_flight_rows` /
+    /// `max_queue_depth`): an over-quota submission is rejected with a
+    /// positioned error and counted in the tenant's `rejected` metric —
+    /// it never reaches the batcher, so shed load cannot occupy queue
+    /// space or skew any latency reservoir.
+    pub fn submit_async_as(
+        &self,
+        tenant: &str,
+        matrix: RowMatrix,
+        k: usize,
+        mode: Option<Mode>,
+    ) -> Result<TopKRequest> {
+        let tenant = TenantId::new(tenant);
+        let mode = mode
+            .or_else(|| self.tenants.default_mode(&tenant))
+            .unwrap_or(Mode::EXACT);
         if k == 0 || k > matrix.cols {
             return Err(anyhow!("k={} out of range for M={}", k, matrix.cols));
         }
@@ -152,11 +191,36 @@ impl TopKService {
                 ));
             }
         }
+        let rows = matrix.rows;
+        if let Err(e) = self.tenants.admit(&tenant, rows) {
+            self.metrics.record_rejection(&tenant);
+            return Err(anyhow::Error::msg(e));
+        }
         let (tx, rx) = mpsc::channel();
-        if !self.batcher.submit(matrix, k, mode, tx) {
+        if !self.batcher.submit(tenant.clone(), matrix, k, mode, tx) {
+            self.tenants.release(&tenant, rows);
             return Err(anyhow!("service is shut down"));
         }
         Ok(TopKRequest { rx })
+    }
+
+    /// Submit as a tenant and wait.
+    pub fn submit_as(
+        &self,
+        tenant: &str,
+        matrix: RowMatrix,
+        k: usize,
+        mode: Option<Mode>,
+    ) -> Result<TopKResult> {
+        self.submit_async_as(tenant, matrix, k, mode)?.wait()
+    }
+
+    /// Submit a request under the default tenant; returns a handle to
+    /// wait on. See [`TopKService::submit_async_as`] for validation and
+    /// admission semantics.
+    pub fn submit_async(&self, matrix: RowMatrix, k: usize, mode: Mode)
+        -> Result<TopKRequest> {
+        self.submit_async_as(DEFAULT_TENANT, matrix, k, Some(mode))
     }
 
     /// Submit and wait.
@@ -181,6 +245,12 @@ impl TopKService {
     /// The shared adaptive planner (cached plans per batch shape).
     pub fn planner(&self) -> &Planner {
         &self.planner
+    }
+
+    /// The tenant directory: specs, weights, and live admission
+    /// counters.
+    pub fn tenants(&self) -> &TenantDirectory {
+        &self.tenants
     }
 
     /// Graceful shutdown: drain the queue, stop workers, persist the
@@ -391,11 +461,128 @@ mod tests {
     }
 
     #[test]
+    fn tenant_quota_rejections_are_positioned_and_counted() {
+        use crate::config::{TenantConfig, TenantsConfig};
+        let svc = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 50,
+            tenants: TenantsConfig {
+                tenants: vec![TenantConfig {
+                    max_in_flight_rows: 8,
+                    ..TenantConfig::named("capped")
+                }],
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(0x71);
+        // a request alone over the row quota is rejected outright
+        let big = RowMatrix::random_normal(9, 16, &mut rng);
+        let err = svc.submit_async_as("capped", big, 4, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("capped"), "names the tenant: {msg}");
+        assert!(msg.contains("max_in_flight_rows"), "names the knob: {msg}");
+        // an uncapped tenant with the same load is served
+        let ok = RowMatrix::random_normal(9, 16, &mut rng);
+        assert!(is_exact(&ok, &svc.submit_as("free", ok.clone(), 4, None).unwrap()));
+        // quota-fitting requests from the capped tenant are served, and
+        // completions release the reservation so traffic keeps flowing
+        for _ in 0..5 {
+            let x = RowMatrix::random_normal(8, 16, &mut rng);
+            assert!(is_exact(
+                &x,
+                &svc.submit_as("capped", x.clone(), 4, None).unwrap()
+            ));
+        }
+        let (rows_in_flight, reqs_in_flight) =
+            svc.tenants().in_flight(&TenantId::new("capped"));
+        assert_eq!((rows_in_flight, reqs_in_flight), (0, 0), "reservations released");
+        let s = svc.stats();
+        let capped = s.tenants.iter().find(|t| t.tenant == "capped").unwrap();
+        assert_eq!(capped.rejected, 1);
+        assert_eq!(capped.requests, 5);
+        let free = s.tenants.iter().find(|t| t.tenant == "free").unwrap();
+        assert_eq!(free.rejected, 0);
+        assert_eq!(free.requests, 1);
+    }
+
+    #[test]
+    fn tenant_default_mode_applies_when_mode_is_omitted() {
+        use crate::config::{TenantConfig, TenantsConfig};
+        let svc = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 50,
+            tenants: TenantsConfig {
+                tenants: vec![TenantConfig {
+                    mode: Some("es4".into()),
+                    ..TenantConfig::named("approx")
+                }],
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(0x72);
+        let x = RowMatrix::random_normal(30, 64, &mut rng);
+        // the tenant's omitted-mode submission must match an explicit
+        // es4 run bit for bit (early-stop is deterministic)
+        let res = svc.submit_as("approx", x.clone(), 8, None).unwrap();
+        let oracle = crate::topk::rowwise::rowwise_topk(
+            &x,
+            8,
+            Mode::EarlyStop { max_iter: 4 },
+        );
+        assert_eq!(res.values, oracle.values);
+        assert_eq!(res.indices, oracle.indices);
+        // an explicit mode still wins over the tenant default
+        let exact = svc.submit_as("approx", x.clone(), 8, Some(Mode::EXACT)).unwrap();
+        assert!(is_exact(&x, &exact));
+        // tenants without a default fall back to exact
+        let other = svc.submit_as("plain", x.clone(), 8, None).unwrap();
+        assert!(is_exact(&x, &other));
+    }
+
+    #[test]
+    fn tenant_force_algo_pin_is_validated_at_startup() {
+        use crate::config::{TenantConfig, TenantsConfig};
+        let bad = TopKService::cpu_only(&ServeConfig {
+            tenants: TenantsConfig {
+                tenants: vec![TenantConfig {
+                    force_algo: Some("warp9".into()),
+                    ..TenantConfig::named("x")
+                }],
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        assert!(bad.is_err(), "a typoed tenant pin must fail startup");
+        // a valid pin serves exact results through the pinned baseline
+        let svc = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 50,
+            tenants: TenantsConfig {
+                tenants: vec![TenantConfig {
+                    force_algo: Some("heap".into()),
+                    ..TenantConfig::named("pinned")
+                }],
+                ..Default::default()
+            },
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(0x73);
+        let x = RowMatrix::random_normal(40, 48, &mut rng);
+        let res = svc.submit_as("pinned", x.clone(), 6, Some(Mode::EXACT)).unwrap();
+        assert!(is_exact(&x, &res), "pin may change speed, never results");
+    }
+
+    #[test]
     fn shutdown_rejects_new_requests() {
         let svc = cpu_service(1);
         let batcher = svc.batcher.clone();
         svc.shutdown();
-        assert!(!batcher.submit(RowMatrix::zeros(1, 4), 1, Mode::EXACT,
-                                mpsc::channel().0));
+        assert!(!batcher.submit(TenantId::default(), RowMatrix::zeros(1, 4), 1,
+                                Mode::EXACT, mpsc::channel().0));
     }
 }

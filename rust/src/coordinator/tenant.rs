@@ -1,0 +1,486 @@
+//! Multi-tenant identity, quotas, and admission control.
+//!
+//! The serving north star is many clients sharing one device-backed
+//! top-k service; without per-tenant isolation a single heavy client
+//! can fill the batcher and starve everyone else's latency budget. This
+//! module supplies the two service-side halves of isolation:
+//!
+//! * **Identity + policy** — a [`TenantId`] threaded through every
+//!   request, and a [`TenantDirectory`] holding each tenant's
+//!   [`TenantSpec`] (weight, quotas, optional per-tenant execution
+//!   overrides) built from the `[tenants.<name>]` config tables.
+//! * **Admission control** — [`TenantDirectory::admit`] reserves a
+//!   request against the tenant's `max_queue_depth` /
+//!   `max_in_flight_rows` quotas *before* the batcher sees it, and
+//!   rejects over-quota submissions with a positioned error (tenant,
+//!   observed load, limit) instead of letting them queue. Accepted
+//!   work is released by the scheduler when the reply is sent
+//!   ([`TenantDirectory::release`]), so "in flight" spans
+//!   submit-to-reply, not just queue residency.
+//!
+//! The third half — *weighted-fair draining* of admitted work — lives
+//! in the batcher's weighted-deficit-round-robin flush policy
+//! (`crate::coordinator::batcher`), which consumes the per-tenant
+//! weights this directory exposes.
+//!
+//! Unknown tenants are legal: a request naming a tenant with no
+//! `[tenants.<name>]` table is served under the default spec (weight 1,
+//! no quotas). Configuration *constrains* tenants; it does not
+//! register them. Ad-hoc registration is bounded, though: tenant names
+//! are client-chosen, and an attacker minting a fresh name per request
+//! would otherwise grow the directory without limit — past
+//! [`MAX_AD_HOC_TENANTS`] never-configured tenants, admissions for
+//! *new* names are rejected (configured tenants and already-seen names
+//! are unaffected). The metrics table has the matching bound
+//! (`crate::coordinator::metrics`), folding overflow tenants into one
+//! shared entry.
+
+use crate::config::TenantsConfig;
+use crate::plan::{is_exact_semantics, parse_force, ForceAlgo};
+use crate::topk::rowwise::RowAlgo;
+use crate::topk::types::Mode;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// The tenant every request without an explicit tenant runs under.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// A tenant identity: a cheap-to-clone, hashable name. Two ids are
+/// equal iff their names are equal, so a `TenantId` can key the
+/// batcher's group map and the metrics table directly.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(Arc<str>);
+
+impl TenantId {
+    pub fn new(name: &str) -> TenantId {
+        TenantId(Arc::from(name))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl Default for TenantId {
+    fn default() -> Self {
+        TenantId::new(DEFAULT_TENANT)
+    }
+}
+
+impl std::fmt::Display for TenantId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// One tenant's validated serving policy (the typed form of a
+/// `[tenants.<name>]` config table).
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub id: TenantId,
+    /// weighted-deficit-round-robin drain weight (>= 1); a weight-4
+    /// tenant's budget-full batches drain 4x as often as a weight-1
+    /// tenant's when both have backlog
+    pub weight: u64,
+    /// max rows admitted and not yet replied to (0 = unlimited)
+    pub max_in_flight_rows: usize,
+    /// max requests admitted and not yet replied to (0 = unlimited)
+    pub max_queue_depth: usize,
+    /// per-tenant algorithm pin, honored only where it cannot change
+    /// result semantics (same contract as the global `force_algo`)
+    pub force_algo: Option<ForceAlgo>,
+    /// mode used when the tenant submits without an explicit mode
+    pub default_mode: Option<Mode>,
+}
+
+impl TenantSpec {
+    /// The spec an unconfigured tenant serves under: weight 1, no
+    /// quotas, no overrides.
+    pub fn ad_hoc(id: TenantId) -> TenantSpec {
+        TenantSpec {
+            id,
+            weight: 1,
+            max_in_flight_rows: 0,
+            max_queue_depth: 0,
+            force_algo: None,
+            default_mode: None,
+        }
+    }
+
+    /// The algorithm this tenant's pin forces for a request mode, if
+    /// any. Mirrors the planner's global-pin rule: a fixed baseline is
+    /// honored only for exact-semantics requests; approximate requests
+    /// keep the paper's kernel at their own mode (substituting an exact
+    /// baseline would change the output contract, not just the speed).
+    pub fn pinned_algo(&self, mode: Mode) -> Option<RowAlgo> {
+        self.force_algo.map(|force| match force {
+            ForceAlgo::RTopK => RowAlgo::RTopK(mode),
+            ForceAlgo::Fixed(a) if is_exact_semantics(mode) => a,
+            ForceAlgo::Fixed(_) => RowAlgo::RTopK(mode),
+        })
+    }
+}
+
+/// Live per-tenant admission counters next to the tenant's spec.
+#[derive(Debug)]
+struct TenantState {
+    spec: TenantSpec,
+    /// rows admitted and not yet replied to
+    in_flight_rows: AtomicUsize,
+    /// requests admitted and not yet replied to
+    in_flight_requests: AtomicUsize,
+}
+
+impl TenantState {
+    fn new(spec: TenantSpec) -> TenantState {
+        TenantState {
+            spec,
+            in_flight_rows: AtomicUsize::new(0),
+            in_flight_requests: AtomicUsize::new(0),
+        }
+    }
+}
+
+/// Cap on tenants registered ad hoc (i.e. never configured). Tenant
+/// names are client-chosen, so without a bound a caller minting a
+/// fresh name per request would grow the directory forever.
+pub const MAX_AD_HOC_TENANTS: usize = 1024;
+
+/// The service's tenant table: specs from config plus ad-hoc tenants
+/// registered on first use (bounded by [`MAX_AD_HOC_TENANTS`]), with
+/// live admission counters.
+#[derive(Debug)]
+pub struct TenantDirectory {
+    tenants: RwLock<HashMap<TenantId, Arc<TenantState>>>,
+    /// total entries allowed: configured tenants + the ad-hoc budget
+    capacity: usize,
+}
+
+impl Default for TenantDirectory {
+    fn default() -> Self {
+        TenantDirectory::new()
+    }
+}
+
+impl TenantDirectory {
+    /// An empty directory: every tenant is ad hoc (weight 1, no
+    /// quotas).
+    pub fn new() -> TenantDirectory {
+        TenantDirectory {
+            tenants: RwLock::new(HashMap::new()),
+            capacity: MAX_AD_HOC_TENANTS,
+        }
+    }
+
+    /// Build from the `[tenants]` config tables, validating each
+    /// tenant's `force_algo` / `mode` strings (a typo is a startup
+    /// error, not a silently-ignored knob).
+    pub fn from_config(cfg: &TenantsConfig) -> Result<TenantDirectory, String> {
+        if !cfg.unknown_keys.is_empty() {
+            return Err(format!(
+                "unknown [tenants] config keys {:?} — a misspelled quota \
+                 would silently stay unenforced (known fields: {}; tenant \
+                 names must not contain dots)",
+                cfg.unknown_keys,
+                crate::config::TENANT_KEYS.join(", ")
+            ));
+        }
+        let mut dir = TenantDirectory::new();
+        dir.capacity = cfg.tenants.len() + MAX_AD_HOC_TENANTS;
+        {
+            let mut map = dir.tenants.write().unwrap();
+            for t in &cfg.tenants {
+                let force_algo = match t.force_algo.as_deref() {
+                    None | Some("") => None,
+                    Some(s) => Some(parse_force(s).map_err(|e| {
+                        format!("[tenants.{}] force_algo: {e}", t.name)
+                    })?),
+                };
+                let default_mode = match t.mode.as_deref() {
+                    None | Some("") => None,
+                    Some(s) => Some(crate::bench::parse_mode(s).map_err(|e| {
+                        format!("[tenants.{}] mode: {e}", t.name)
+                    })?),
+                };
+                let id = TenantId::new(&t.name);
+                let spec = TenantSpec {
+                    id: id.clone(),
+                    weight: t.weight.max(1),
+                    max_in_flight_rows: t.max_in_flight_rows,
+                    max_queue_depth: t.max_queue_depth,
+                    force_algo,
+                    default_mode,
+                };
+                map.insert(id, Arc::new(TenantState::new(spec)));
+            }
+        }
+        Ok(dir)
+    }
+
+    /// The tenant's live state, registering an ad-hoc spec on first
+    /// sight (read-lock fast path; the write lock is only taken once
+    /// per new tenant). Errors once the directory is at capacity and
+    /// the name is new — client-chosen names must not grow state
+    /// without bound.
+    fn state(&self, id: &TenantId) -> Result<Arc<TenantState>, String> {
+        if let Some(s) = self.tenants.read().unwrap().get(id) {
+            return Ok(s.clone());
+        }
+        let mut map = self.tenants.write().unwrap();
+        if map.len() >= self.capacity && !map.contains_key(id) {
+            return Err(format!(
+                "tenant directory full ({} entries): refusing to register \
+                 new ad-hoc tenant {:?} — configure [tenants.{}] for \
+                 legitimate tenants or reuse existing names",
+                map.len(),
+                id.as_str(),
+                id.as_str()
+            ));
+        }
+        Ok(map
+            .entry(id.clone())
+            .or_insert_with(|| {
+                Arc::new(TenantState::new(TenantSpec::ad_hoc(id.clone())))
+            })
+            .clone())
+    }
+
+    /// Reserve one request of `rows` rows against the tenant's quotas.
+    /// On success the tenant's in-flight counters include the request
+    /// until [`TenantDirectory::release`] is called; on rejection the
+    /// counters are untouched and the error names the tenant, the
+    /// observed load, and the violated limit. The reserve-check-undo
+    /// sequence can transiently overcount a concurrent submitter by one
+    /// request — quotas are admission backstops, not exact semaphores.
+    pub fn admit(&self, id: &TenantId, rows: usize) -> Result<(), String> {
+        let st = self.state(id)?;
+        let spec = &st.spec;
+        let depth = st.in_flight_requests.fetch_add(1, Ordering::AcqRel) + 1;
+        if spec.max_queue_depth > 0 && depth > spec.max_queue_depth {
+            st.in_flight_requests.fetch_sub(1, Ordering::AcqRel);
+            return Err(format!(
+                "tenant {:?} over quota: {depth} requests in flight > \
+                 max_queue_depth {} (shed load or raise \
+                 [tenants.{}] max_queue_depth)",
+                id.as_str(),
+                spec.max_queue_depth,
+                id.as_str()
+            ));
+        }
+        let in_rows = st.in_flight_rows.fetch_add(rows, Ordering::AcqRel) + rows;
+        if spec.max_in_flight_rows > 0 && in_rows > spec.max_in_flight_rows {
+            st.in_flight_rows.fetch_sub(rows, Ordering::AcqRel);
+            st.in_flight_requests.fetch_sub(1, Ordering::AcqRel);
+            return Err(format!(
+                "tenant {:?} over quota: {in_rows} rows in flight \
+                 (this request: {rows}) > max_in_flight_rows {} \
+                 (shed load or raise [tenants.{}] max_in_flight_rows)",
+                id.as_str(),
+                spec.max_in_flight_rows,
+                id.as_str()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Return an admitted request's reservation (called by the
+    /// scheduler when the reply is delivered, and by the service when a
+    /// submission fails after admission).
+    pub fn release(&self, id: &TenantId, rows: usize) {
+        if let Some(st) = self.tenants.read().unwrap().get(id) {
+            st.in_flight_rows.fetch_sub(rows, Ordering::AcqRel);
+            st.in_flight_requests.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Live (in-flight rows, in-flight requests) for a tenant; (0, 0)
+    /// for tenants never seen.
+    pub fn in_flight(&self, id: &TenantId) -> (usize, usize) {
+        match self.tenants.read().unwrap().get(id) {
+            Some(st) => (
+                st.in_flight_rows.load(Ordering::Acquire),
+                st.in_flight_requests.load(Ordering::Acquire),
+            ),
+            None => (0, 0),
+        }
+    }
+
+    /// The tenant's WDRR weight (1 for unconfigured tenants).
+    pub fn weight(&self, id: &TenantId) -> u64 {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(id)
+            .map(|st| st.spec.weight)
+            .unwrap_or(1)
+    }
+
+    /// Every configured `(tenant, weight)` pair — the batcher's WDRR
+    /// table (ad-hoc tenants default to weight 1 inside the batcher).
+    pub fn batch_weights(&self) -> Vec<(TenantId, u64)> {
+        self.tenants
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(id, st)| (id.clone(), st.spec.weight))
+            .collect()
+    }
+
+    /// The algorithm the tenant's `force_algo` pin forces for a request
+    /// mode, if the tenant has a pin and the mode's semantics allow it.
+    pub fn pinned_algo(&self, id: &TenantId, mode: Mode) -> Option<RowAlgo> {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(id)
+            .and_then(|st| st.spec.pinned_algo(mode))
+    }
+
+    /// The tenant's default mode, if one is configured.
+    pub fn default_mode(&self, id: &TenantId) -> Option<Mode> {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(id)
+            .and_then(|st| st.spec.default_mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, TenantsConfig};
+
+    fn dir_from(toml: &str) -> Result<TenantDirectory, String> {
+        let c = Config::parse(toml).unwrap();
+        TenantDirectory::from_config(&TenantsConfig::from_config(&c))
+    }
+
+    #[test]
+    fn tenant_ids_compare_by_name() {
+        let a = TenantId::new("alpha");
+        let b = TenantId::new("alpha");
+        let c = TenantId::new("beta");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.to_string(), "alpha");
+        assert_eq!(TenantId::default().as_str(), DEFAULT_TENANT);
+    }
+
+    #[test]
+    fn unconfigured_tenants_are_unlimited_weight_one() {
+        let d = TenantDirectory::new();
+        let id = TenantId::new("walk-in");
+        for _ in 0..1000 {
+            d.admit(&id, 10_000).unwrap();
+        }
+        assert_eq!(d.weight(&id), 1);
+        assert_eq!(d.in_flight(&id), (10_000_000, 1000));
+        for _ in 0..1000 {
+            d.release(&id, 10_000);
+        }
+        assert_eq!(d.in_flight(&id), (0, 0));
+    }
+
+    #[test]
+    fn row_quota_rejects_with_a_positioned_error() {
+        let d = dir_from(
+            "[tenants.alpha]\nweight = 4\nmax_in_flight_rows = 100",
+        )
+        .unwrap();
+        let alpha = TenantId::new("alpha");
+        d.admit(&alpha, 60).unwrap();
+        d.admit(&alpha, 40).unwrap();
+        let err = d.admit(&alpha, 1).unwrap_err();
+        assert!(err.contains("alpha"), "names the tenant: {err}");
+        assert!(err.contains("101"), "names the observed load: {err}");
+        assert!(err.contains("100"), "names the limit: {err}");
+        // a rejection must not leak a reservation
+        assert_eq!(d.in_flight(&alpha), (100, 2));
+        d.release(&alpha, 60);
+        d.admit(&alpha, 60).unwrap();
+    }
+
+    #[test]
+    fn queue_depth_quota_counts_requests_not_rows() {
+        let d = dir_from("[tenants.b]\nmax_queue_depth = 2").unwrap();
+        let b = TenantId::new("b");
+        d.admit(&b, 1).unwrap();
+        d.admit(&b, 1).unwrap();
+        let err = d.admit(&b, 1).unwrap_err();
+        assert!(err.contains("max_queue_depth"), "got: {err}");
+        assert_eq!(d.in_flight(&b), (2, 2));
+        // other tenants are not affected by b's quota
+        d.admit(&TenantId::new("c"), 1).unwrap();
+    }
+
+    #[test]
+    fn config_overrides_parse_and_validate() {
+        let d = dir_from(
+            "[tenants.pinned]\nforce_algo = \"heap\"\nweight = 3\n\
+             [tenants.approx]\nmode = \"es4\"",
+        )
+        .unwrap();
+        let pinned = TenantId::new("pinned");
+        assert_eq!(d.weight(&pinned), 3);
+        assert_eq!(
+            d.pinned_algo(&pinned, Mode::EXACT),
+            Some(RowAlgo::Heap)
+        );
+        // approximate requests keep the paper's kernel despite the pin
+        let es = Mode::EarlyStop { max_iter: 4 };
+        assert_eq!(d.pinned_algo(&pinned, es), Some(RowAlgo::RTopK(es)));
+        let approx = TenantId::new("approx");
+        assert_eq!(d.default_mode(&approx), Some(es));
+        assert_eq!(d.default_mode(&pinned), None);
+        // bad knob values are startup errors
+        assert!(dir_from("[tenants.x]\nforce_algo = \"warp9\"").is_err());
+        assert!(dir_from("[tenants.x]\nmode = \"sometimes\"").is_err());
+    }
+
+    #[test]
+    fn ad_hoc_tenant_registration_is_bounded() {
+        // tenant names are client-chosen: minting a fresh name per
+        // request must hit a wall instead of growing the directory
+        // forever
+        let d = dir_from("[tenants.vip]\nweight = 2").unwrap();
+        for i in 0..MAX_AD_HOC_TENANTS {
+            d.admit(&TenantId::new(&format!("anon-{i}")), 1).unwrap();
+        }
+        let err = d.admit(&TenantId::new("one-too-many"), 1).unwrap_err();
+        assert!(err.contains("full"), "got: {err}");
+        assert!(err.contains("one-too-many"), "names the tenant: {err}");
+        // known names — ad hoc or configured — keep working
+        d.admit(&TenantId::new("anon-0"), 1).unwrap();
+        d.admit(&TenantId::new("vip"), 1).unwrap();
+    }
+
+    #[test]
+    fn dotted_tenant_names_fail_startup() {
+        // [tenants.team.alpha] would silently register "team.alpha"
+        // while the operator meant to quota "alpha"
+        let err =
+            dir_from("[tenants.team.alpha]\nmax_in_flight_rows = 64")
+                .unwrap_err();
+        assert!(err.contains("team.alpha"), "names the key: {err}");
+    }
+
+    #[test]
+    fn misspelled_tenant_config_keys_fail_startup() {
+        let err = dir_from("[tenants.abuser]\nmax_inflight_rows = 4096")
+            .unwrap_err();
+        assert!(err.contains("max_inflight_rows"), "names the typo: {err}");
+        assert!(err.contains("max_in_flight_rows"), "names the fix: {err}");
+    }
+
+    #[test]
+    fn zero_weight_is_clamped_to_one() {
+        let d = dir_from("[tenants.z]\nweight = 0").unwrap();
+        assert_eq!(d.weight(&TenantId::new("z")), 1);
+        assert!(d
+            .batch_weights()
+            .iter()
+            .any(|(id, w)| id.as_str() == "z" && *w == 1));
+    }
+}

@@ -54,7 +54,7 @@ pub fn maxk_compress(res: &TopKResult, cols: usize) -> CompressedRows {
 }
 
 /// SpMM with a row-compressed right-hand side:
-/// out[d] += w * compressed_row(s) for each in-edge (s, w) of d.
+/// `out[d] += w * compressed_row(s)` for each in-edge `(s, w)` of `d`.
 /// Inner loop is k-long instead of M-long — the MaxK-GNN speedup.
 pub fn spmm_compressed(g: &CsrGraph, x: &CompressedRows) -> RowMatrix {
     assert_eq!(g.num_nodes, x.rows);

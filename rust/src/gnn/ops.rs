@@ -34,7 +34,7 @@ pub fn matmul(a: &RowMatrix, b: &RowMatrix) -> RowMatrix {
     c
 }
 
-/// CSR SpMM: out[d] = sum_{(s,w) in in_edges(d)} w * x[s].
+/// CSR SpMM: `out[d] = sum_{(s,w) in in_edges(d)} w * x[s]`.
 /// Parallel over destination rows (each thread owns disjoint outputs).
 pub fn spmm_csr(g: &CsrGraph, x: &RowMatrix) -> RowMatrix {
     assert_eq!(g.num_nodes, x.rows);

@@ -5,8 +5,8 @@ use anyhow::{anyhow, Result};
 use rtopk::backend::BackendRegistry;
 use rtopk::bench::{parse_mode, workload, Table};
 use rtopk::cli::{App, Args, Command};
-use rtopk::config::{BackendConfig, Config, ServeConfig};
-use rtopk::coordinator::{Trainer, TopKService};
+use rtopk::config::{BackendConfig, Config, ServeConfig, TenantConfig};
+use rtopk::coordinator::{TenantId, TopKService, Trainer};
 use rtopk::plan::{model, Planner, PlannerConfig, RowBucket};
 use rtopk::runtime::executor::Executor;
 use rtopk::stats::expected_iterations;
@@ -38,6 +38,10 @@ fn app() -> App {
                 .opt("cols", "256", "row length M")
                 .opt("k", "32", "k per row")
                 .opt("mode", "es4", "search mode")
+                .opt("tenants", "",
+                     "comma-separated demo tenants name[:weight] — runs the \
+                      demo load round-robin across them with the weights \
+                      feeding the batcher's weighted-fair drain")
                 .switch("cpu-only", "skip PJRT, use the CPU engine"),
             Command::new("train", "train a MaxK-GNN via the AOT artifacts")
                 .opt("artifacts", "artifacts", "artifacts directory")
@@ -148,6 +152,43 @@ fn cmd_serve(a: &Args) -> Result<()> {
         cfg = ServeConfig::from_config(&c);
     }
     cfg.artifacts_dir = a.get("artifacts").unwrap().to_string();
+
+    // --tenants name[:weight],... : CLI weights extend/override the
+    // config's [tenants.<name>] tables, and the demo load is issued
+    // round-robin across the listed tenants
+    let mut demo_tenants: Vec<String> = Vec::new();
+    for tok in a.get("tenants").unwrap().split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        // a bare name keeps the tenant's configured weight (default 1);
+        // an explicit :weight overrides it
+        let (name, weight) = match tok.split_once(':') {
+            Some((n, w)) => (
+                n.trim().to_string(),
+                Some(
+                    w.trim()
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("bad tenant weight in {tok:?}"))?,
+                ),
+            ),
+            None => (tok.to_string(), None),
+        };
+        match cfg.tenants.tenants.iter_mut().find(|t| t.name == name) {
+            Some(t) => {
+                if let Some(w) = weight {
+                    t.weight = w.max(1);
+                }
+            }
+            None => cfg.tenants.tenants.push(TenantConfig {
+                weight: weight.unwrap_or(1).max(1),
+                ..TenantConfig::named(&name)
+            }),
+        }
+        demo_tenants.push(name);
+    }
+
     let svc = if a.switch("cpu-only") {
         TopKService::cpu_only(&cfg)?
     } else {
@@ -164,9 +205,14 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let mut rng = Rng::seed_from(7);
     let t0 = Instant::now();
     let handles: Vec<_> = (0..requests)
-        .map(|_| {
+        .map(|i| {
             let x = RowMatrix::random_normal(rows, cols, &mut rng);
-            svc.submit_async(x, k, mode)
+            if demo_tenants.is_empty() {
+                svc.submit_async(x, k, mode)
+            } else {
+                let name = &demo_tenants[i % demo_tenants.len()];
+                svc.submit_async_as(name, x, k, Some(mode))
+            }
         })
         .collect::<Result<_>>()?;
     for h in handles {
@@ -185,6 +231,27 @@ fn cmd_serve(a: &Args) -> Result<()> {
         s.p50_us, s.p95_us, s.p99_us, s.max_us, s.batches, s.pjrt_batches,
         s.cpu_batches
     );
+    if !s.tenants.is_empty() {
+        let mut t = Table::new(
+            "per-tenant",
+            &["tenant", "weight", "requests", "rows", "rejected", "errors",
+              "p50 us", "p99 us"],
+        );
+        for ts in &s.tenants {
+            let weight = svc.tenants().weight(&TenantId::new(&ts.tenant));
+            t.row(vec![
+                ts.tenant.clone(),
+                weight.to_string(),
+                ts.requests.to_string(),
+                ts.rows.to_string(),
+                ts.rejected.to_string(),
+                ts.errors.to_string(),
+                format!("{:.0}", ts.p50_us),
+                format!("{:.0}", ts.p99_us),
+            ]);
+        }
+        t.print();
+    }
     svc.shutdown();
     Ok(())
 }

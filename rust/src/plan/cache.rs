@@ -33,6 +33,21 @@
 //!     "runner_up": {"backend": "cpu", "algo": "heap", "grain": 64}}
 //! ]}
 //! ```
+//!
+//! Rejection rules, in the order the loader applies them (each is
+//! all-or-nothing — a document failing any rule merges zero entries):
+//!
+//! 1. `version != 3` — stale or foreign schema; re-calibrate.
+//! 2. Missing or mismatched `host` fingerprint — timings from another
+//!    machine are not evidence about this one.
+//! 3. Missing `created_unix`, or `now - created_unix > ttl` (with
+//!    `ttl > 0`) — measurements expire; hosts drift.
+//! 4. Any entry missing a required field (`rows_bucket`, `cols`, `k`,
+//!    `mode`, `backend`, `algo`) or naming an unknown bucket /
+//!    algorithm / mode tag.
+//! 5. Any entry (or its runner-up) pairing an approximate mode key
+//!    (`es<N>`, loose-eps exact) with a non-rtopk algorithm — that
+//!    would change the output contract, not just the speed.
 
 use crate::plan::{Plan, PlanSource, ProbeKind, RawProbe, RowBucket, RunnerUp};
 use crate::topk::rowwise::RowAlgo;

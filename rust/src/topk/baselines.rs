@@ -252,7 +252,7 @@ fn sift_down(vals: &mut [f32], idx: &mut [u32], mut i: usize, n: usize) {
 // Bucket select
 // ---------------------------------------------------------------------------
 
-/// Single-level bucket select: 256 equal-width buckets over [min, max],
+/// Single-level bucket select: 256 equal-width buckets over `[min, max]`,
 /// histogram pass finds the threshold bucket, collect pass emits
 /// everything above it and supplements from inside it (recursing once
 /// into the threshold bucket when it is badly skewed).

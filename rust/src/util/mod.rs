@@ -1,5 +1,20 @@
 //! General-purpose substrates (offline build: no crates.io, so these are
 //! implemented in-tree — see DESIGN.md §2 "Offline-build note").
+//!
+//! * [`json`] — minimal JSON value model, parser, and writer (serde is
+//!   not vendored); backs the plan cache, bench documents, and CLI
+//!   `--json` output.
+//! * [`matrix`] — dense row-major `RowMatrix` with seeded random
+//!   fills; the unit of every request and probe workload.
+//! * [`pool`] — scoped fork-join helpers over std threads with
+//!   disjoint-slot parallel fills; sized from `available_parallelism`
+//!   (`RTOPK_THREADS` overrides).
+//! * [`prop`] — tiny property-test harness: seeded case generation
+//!   with replayable failing seeds.
+//! * [`rng`] — deterministic xoshiro256++ with SplitMix64 seeding;
+//!   every experiment seeds explicitly so tables reproduce bit-for-bit.
+//! * [`timer`] — adaptive best-of timing loops shared by the
+//!   calibrator and the bench harnesses.
 
 pub mod json;
 pub mod matrix;
