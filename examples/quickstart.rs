@@ -9,7 +9,7 @@
 //!    CPU fallback otherwise.
 
 use rtopk::config::ServeConfig;
-use rtopk::coordinator::TopKService;
+use rtopk::coordinator::{SubmitRequest, TopKService};
 use rtopk::topk::verify::approx_metrics;
 use rtopk::topk::{rowwise_topk, Mode};
 use rtopk::util::matrix::RowMatrix;
@@ -43,7 +43,9 @@ fn main() -> anyhow::Result<()> {
     };
     println!("compiled variants: {:?}", svc.variants());
     let req = RowMatrix::random_normal(2000, 256, &mut rng);
-    let out = svc.submit(req, 32, Mode::EarlyStop { max_iter: 4 })?;
+    let out = svc.submit(
+        SubmitRequest::new(req, 32).mode(Mode::EarlyStop { max_iter: 4 }),
+    )?;
     println!("service returned {} rows x k={}", out.rows, out.k);
     let s = svc.stats();
     println!(

@@ -7,7 +7,7 @@
 //!   RTOPK_CLIENTS=8 RTOPK_REQS=40 cargo run --release --example serving
 
 use rtopk::config::ServeConfig;
-use rtopk::coordinator::TopKService;
+use rtopk::coordinator::{Priority, SubmitRequest, TopKService};
 use rtopk::topk::types::Mode;
 use rtopk::util::matrix::RowMatrix;
 use rtopk::util::rng::Rng;
@@ -49,7 +49,16 @@ fn main() -> anyhow::Result<()> {
                     };
                     let x = RowMatrix::random_normal(n, m, &mut rng);
                     rows += n;
-                    svc.submit(x, k, mode).expect("request failed");
+                    // odd-one-out clients showcase the typed knobs: a
+                    // high drain priority plus a generous end-to-end
+                    // deadline (never binding at this load)
+                    let mut req = SubmitRequest::new(x, k).mode(mode);
+                    if c == 0 {
+                        req = req
+                            .priority(Priority::High)
+                            .deadline(std::time::Duration::from_secs(30));
+                    }
+                    svc.submit(req).expect("request failed");
                 }
                 rows
             })

@@ -28,7 +28,7 @@
 
 use rtopk::bench::{workload, Table};
 use rtopk::config::{ServeConfig, TenantConfig, TenantsConfig};
-use rtopk::coordinator::TopKService;
+use rtopk::coordinator::{SubmitRequest, TopKService};
 use rtopk::plan::{candidates, Planner, PlannerConfig, RowBucket};
 use rtopk::topk::rowwise::rowwise_topk_with;
 use rtopk::topk::types::Mode;
@@ -82,8 +82,10 @@ fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
                 let mut handles = Vec::new();
                 for _ in 0..per_tenant {
                     let x = RowMatrix::random_normal(req_rows, cols, &mut rng);
-                    if let Ok(h) = svc.submit_async_as(name, x, k, Some(Mode::EXACT))
-                    {
+                    let req = SubmitRequest::new(x, k)
+                        .mode(Mode::EXACT)
+                        .tenant(name);
+                    if let Ok(h) = svc.submit_ticket(req) {
                         handles.push(h);
                     }
                 }
@@ -98,7 +100,7 @@ fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
     let mut table = Table::new(
         "mixed-tenant sweep (weights 4/2/1, equal offered load)",
         &["tenant", "weight", "requests", "rows", "row share", "rejected",
-          "p50 us", "p99 us"],
+          "cancelled", "timed out", "p50 us", "p99 us"],
     );
     let mut out = Vec::new();
     for (name, weight) in weights {
@@ -115,6 +117,8 @@ fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
             t.rows.to_string(),
             format!("{share:.3}"),
             t.rejected.to_string(),
+            t.cancelled.to_string(),
+            t.timed_out.to_string(),
             format!("{:.0}", t.p50_us),
             format!("{:.0}", t.p99_us),
         ]);
@@ -124,6 +128,8 @@ fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
             ("requests", json::num(t.requests as f64)),
             ("rows", json::num(t.rows as f64)),
             ("rejected", json::num(t.rejected as f64)),
+            ("cancelled", json::num(t.cancelled as f64)),
+            ("timed_out", json::num(t.timed_out as f64)),
             ("p50_us", json::num(t.p50_us)),
             ("p99_us", json::num(t.p99_us)),
         ]));

@@ -340,6 +340,11 @@ impl TenantsConfig {
     }
 }
 
+/// Default per-tenant cap on blocked cooperative submitters (the
+/// `[serve] max_blocked_waiters` knob). Single source of truth — the
+/// tenant directory's default references this constant.
+pub const MAX_BLOCKED_WAITERS: usize = 64;
+
 /// Service deployment settings (defaults match the benched setup).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -356,8 +361,18 @@ pub struct ServeConfig {
     /// reject non-finite (NaN/Inf) client matrices at submit with a
     /// clear error instead of letting the kernels' branchless IEEE
     /// compares silently corrupt the selection (default on; disable
-    /// only for callers that guarantee finite inputs themselves)
+    /// only for callers that guarantee finite inputs themselves —
+    /// per-request `ValidationPolicy` overrides win either way)
     pub validate_inputs: bool,
+    /// default behavior for over-quota submissions that do not choose
+    /// a policy themselves: `"reject"` (shed with a positioned error,
+    /// the default) or `"block"` (park the submitting thread until
+    /// quota frees). Validated at service startup.
+    pub over_quota_policy: String,
+    /// per-tenant cap on blocked cooperative submitters
+    /// (`OverQuotaPolicy::Block`); 0 turns blocking admission into
+    /// rejection
+    pub max_blocked_waiters: usize,
     /// adaptive-planner knobs for the CPU engine route
     pub plan: PlanConfig,
     /// execution-backend registration / pinning knobs
@@ -375,6 +390,8 @@ impl Default for ServeConfig {
             workers: 2,
             queue_limit: 1 << 16,
             validate_inputs: true,
+            over_quota_policy: "reject".into(),
+            max_blocked_waiters: MAX_BLOCKED_WAITERS,
             plan: PlanConfig::default(),
             backend: BackendConfig::default(),
             tenants: TenantsConfig::default(),
@@ -395,6 +412,13 @@ impl ServeConfig {
             workers: c.get_or("serve.workers", d.workers),
             queue_limit: c.get_or("serve.queue_limit", d.queue_limit),
             validate_inputs: c.get_or("serve.validate_inputs", d.validate_inputs),
+            over_quota_policy: c
+                .get("serve.over_quota_policy")
+                .filter(|s| !s.is_empty())
+                .unwrap_or(&d.over_quota_policy)
+                .to_string(),
+            max_blocked_waiters: c
+                .get_or("serve.max_blocked_waiters", d.max_blocked_waiters),
             plan: PlanConfig::from_config(c),
             backend: BackendConfig::from_config(c),
             tenants: TenantsConfig::from_config(c),
@@ -510,6 +534,26 @@ mod tests {
         assert!(!ServeConfig::from_config(&c).validate_inputs);
         let c2 = Config::parse("[serve]\nworkers = 2").unwrap();
         assert!(ServeConfig::from_config(&c2).validate_inputs);
+    }
+
+    #[test]
+    fn serve_over_quota_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert_eq!(d.over_quota_policy, "reject");
+        assert_eq!(d.max_blocked_waiters, 64);
+        let c = Config::parse(
+            "[serve]\nover_quota_policy = \"block\"\nmax_blocked_waiters = 8",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.over_quota_policy, "block");
+        assert_eq!(s.max_blocked_waiters, 8);
+        // empty string means "use the default", like the other knobs
+        let c2 = Config::parse("[serve]\nover_quota_policy = \"\"").unwrap();
+        assert_eq!(ServeConfig::from_config(&c2).over_quota_policy, "reject");
+        // the value itself is validated at service startup, not here
+        let c3 = Config::parse("[serve]\nover_quota_policy = \"typo\"").unwrap();
+        assert_eq!(ServeConfig::from_config(&c3).over_quota_policy, "typo");
     }
 
     #[test]

@@ -12,12 +12,28 @@
 //! accounting, pins, and fairness need no cross-tenant untangling
 //! downstream.
 //!
+//! Requests may carry a per-request **deadline** (an end-to-end latency
+//! budget): it *caps* that request's batching wait at half the budget
+//! still remaining at enqueue (the wait is `min(max_wait, remaining/2)`
+//! — a deadline can only shorten batching, never extend it past the
+//! global `max_wait`; the unspent budget remains for execution and
+//! delivery), and requests only share a group when their deadlines are
+//! within the same power-of-two class — close enough that the group
+//! flushing at its earliest member's time costs any co-member at most
+//! half its own wait, while clients that compute a fresh
+//! remaining-budget deadline per call still batch together instead of
+//! fragmenting into singleton groups. Requests also carry a
+//! **priority** class ([`Priority`]): another grouping dimension,
+//! consumed by the WDRR drain as a quantum multiplier (see below).
+//!
 //! Flush policy, in priority order per wake:
 //!
-//! 1. **Deadline flushes bypass everything** and go oldest-first: the
-//!    overall head is by construction the request with the earliest
-//!    deadline, so waiting on the head's deadline is waiting on the
-//!    earliest deadline of any group. Deadline-expired groups are
+//! 1. **Deadline flushes bypass everything** and go earliest-first: a
+//!    min-heap over every queued request's flush time (lazily pruned as
+//!    requests leave in batches) names the next group that must flush,
+//!    so a short per-request deadline behind a long-deadline head is
+//!    honored. For uniform waits the heap order is submission order —
+//!    exactly the old oldest-first rule. Deadline-expired groups are
 //!    served before any budget-full tile — under quota pressure a
 //!    heavy tenant's full tiles must not push a light tenant's
 //!    deadline-expired trickle past its latency SLO. (The first WDRR
@@ -30,13 +46,14 @@
 //!    groups from several tenants are pending, they drain
 //!    proportionally to tenant weight (deficit round-robin with a
 //!    one-tile quantum) instead of FIFO-by-key: each tenant accrues
-//!    `weight x tile` rows of credit per rotation and serves tiles
-//!    while its credit lasts, so a weight-4 tenant drains 4 tiles for
-//!    every 1 a weight-1 tenant drains, and no backlogged tenant is
-//!    ever skipped for a full rotation. Within a tenant, ready groups
-//!    drain in the order they filled, and within a key FIFO order is
-//!    preserved (the budget closes at the first same-key request that
-//!    does not fit).
+//!    `weight x tile` rows of credit per rotation — scaled by the
+//!    front group's [`Priority`] (normal 1x, high 4x, low 1/2x) — and
+//!    serves tiles while its credit lasts, so a weight-4 tenant drains
+//!    4 tiles for every 1 a weight-1 tenant drains, and no backlogged
+//!    tenant is ever skipped for a full rotation. Within a tenant,
+//!    ready groups drain in the order they filled, and within a key
+//!    FIFO order is preserved (the budget closes at the first same-key
+//!    request that does not fit).
 //!
 //! Bookkeeping is O(1)-amortized per wake: per-key running row counts
 //! are maintained on submit/flush (`Inner::group_rows`), keys that
@@ -52,12 +69,60 @@
 //! tenant's deficit resets when its ready queue drains (standard DRR
 //! reset-on-empty).
 
+use crate::coordinator::request::{CancelToken, Priority};
 use crate::coordinator::tenant::TenantId;
 use crate::topk::types::Mode;
 use crate::util::matrix::RowMatrix;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Everything the batcher needs to enqueue one request (the typed
+/// submission minus the reply slot — built by the service from a
+/// `SubmitRequest` after validation and admission).
+pub struct Enqueue {
+    pub tenant: TenantId,
+    pub matrix: RowMatrix,
+    pub k: usize,
+    pub mode: Mode,
+    /// when the caller submitted (before admission) — the clock served
+    /// latency and deadlines are measured against
+    pub submitted: Instant,
+    /// per-request deadline (duration from submit); caps the batching
+    /// wait at `min(max_wait, remaining/2)` and keys grouping by
+    /// power-of-two deadline class
+    pub deadline: Option<Duration>,
+    /// absolute expiry instant — the scheduler answers an expired
+    /// request with a timeout error instead of serving stale work
+    pub expire_at: Option<Instant>,
+    pub priority: Priority,
+    /// shared with the caller's ticket; a cancelled request is dropped
+    /// at dispatch
+    pub cancel: CancelToken,
+}
+
+impl Enqueue {
+    /// A submission with default policy (no deadline, normal priority,
+    /// fresh cancel token) — what the pre-typed-API call sites mean.
+    pub fn basic(
+        tenant: TenantId,
+        matrix: RowMatrix,
+        k: usize,
+        mode: Mode,
+    ) -> Enqueue {
+        Enqueue {
+            tenant,
+            matrix,
+            k,
+            mode,
+            submitted: Instant::now(),
+            deadline: None,
+            expire_at: None,
+            priority: Priority::Normal,
+            cancel: CancelToken::new(),
+        }
+    }
+}
 
 /// One admitted request plus its reply slot.
 pub struct Pending<T> {
@@ -65,7 +130,20 @@ pub struct Pending<T> {
     pub matrix: RowMatrix,
     pub k: usize,
     pub mode: Mode,
+    /// submit instant (before admission) — served latency is measured
+    /// from here, so time parked in blocking admission or backpressure
+    /// is visible in the reservoirs, not silently excluded
+    pub submitted: Instant,
     pub enqueued: Instant,
+    /// when this request's group must flush regardless of fill
+    pub flush_at: Instant,
+    /// the per-request deadline this request was submitted with, if any
+    /// (kept for positioned timeout errors)
+    pub deadline: Option<Duration>,
+    /// absolute expiry; checked by the scheduler at dispatch + delivery
+    pub expire_at: Option<Instant>,
+    pub priority: Priority,
+    pub cancel: CancelToken,
     pub reply: T,
 }
 
@@ -100,16 +178,36 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Hashable form of a request's (tenant, cols, k, mode) grouping key.
-/// `Mode` carries an `f32`, so the float is keyed by its bit pattern —
-/// two requests group together iff their modes are bit-identical,
-/// exactly the equality `Mode: PartialEq` uses.
+/// Hashable form of a request's (tenant, cols, k, mode, deadline
+/// class, priority) grouping key. `Mode` carries an `f32`, so the
+/// float is keyed by its bit pattern — two requests group together iff
+/// their modes are bit-identical, exactly the equality
+/// `Mode: PartialEq` uses. Deadline class and priority are grouping
+/// dimensions too: the WDRR scaling must be uniform across a group's
+/// members, and its flush times must be close (the earliest member
+/// flushes the group; same-class deadlines keep that early flush
+/// within 2x of everyone's own wait).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 struct GroupKey {
     tenant: TenantId,
     cols: usize,
     k: usize,
     mode: ModeBits,
+    /// power-of-two class of the per-request deadline (`None` = the
+    /// policy wait). Keyed by class, not exact nanoseconds: clients
+    /// that compute a fresh remaining-budget deadline per call would
+    /// otherwise fragment every request into a singleton group and
+    /// defeat batching entirely. Within a class deadlines differ by at
+    /// most 2x, and the flush heap flushes the group at its *earliest*
+    /// member's time, so sharing a group can only shorten a
+    /// co-member's wait — never push it past its own deadline.
+    deadline_class: Option<u32>,
+    priority: Priority,
+}
+
+/// Floor-log2 bucket of a deadline — the grouping class.
+fn deadline_class(d: Duration) -> u32 {
+    63 - (d.as_nanos().clamp(1, u64::MAX as u128) as u64).leading_zeros()
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -127,6 +225,43 @@ fn key_of<T>(p: &Pending<T>) -> GroupKey {
             Mode::Exact { eps_rel } => ModeBits::Exact(eps_rel.to_bits()),
             Mode::EarlyStop { max_iter } => ModeBits::EarlyStop(max_iter),
         },
+        deadline_class: p.deadline.map(deadline_class),
+        priority: p.priority,
+    }
+}
+
+/// One queued request's flush time in the deadline min-heap. Entries
+/// are lazily deleted: when the request leaves the queue in a batch its
+/// token's `queued` flag clears and the entry is pruned at the next
+/// peek, so the heap never needs random removal.
+struct FlushEntry {
+    at: Instant,
+    /// submission sequence — the tiebreak that keeps equal flush times
+    /// in FIFO order
+    seq: u64,
+    key: GroupKey,
+    token: CancelToken,
+}
+
+impl PartialEq for FlushEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for FlushEntry {}
+
+impl PartialOrd for FlushEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for FlushEntry {
+    /// Inverted ordering so `BinaryHeap` (a max-heap) pops the earliest
+    /// flush time first, FIFO within a tie.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.at.cmp(&self.at).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -143,14 +278,19 @@ struct TenantQueue {
 struct Inner<T> {
     queue: VecDeque<Pending<T>>,
     queued_rows: usize,
-    /// running rows per (tenant, cols, k, mode) group — updated on
-    /// submit and flush, never recomputed by scanning the queue
+    /// running rows per grouping key — updated on submit and flush,
+    /// never recomputed by scanning the queue
     group_rows: HashMap<GroupKey, usize>,
     /// per-tenant budget-full group queues + deficit counters
     ready: HashMap<TenantId, TenantQueue>,
     /// round-robin rotation of tenants with queued ready groups
     /// (stale-tolerant: entries are validated and pruned on pick)
     rr: VecDeque<TenantId>,
+    /// min-heap of every queued request's flush time (lazily pruned via
+    /// each token's `queued` flag) — names the next deadline flush
+    flush: BinaryHeap<FlushEntry>,
+    /// submission counter feeding [`FlushEntry::seq`]
+    seq: u64,
     closed: bool,
 }
 
@@ -165,6 +305,17 @@ pub struct Batcher<T> {
     work: Condvar,
     /// signaled when rows drain (unblocks backpressured producers)
     space: Condvar,
+}
+
+/// Why [`Batcher::submit_request`] refused a submission before it ever
+/// reached the queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitRefusal {
+    /// the batcher is closed (service shutting down)
+    Closed,
+    /// the request's deadline expired while blocked on backpressure —
+    /// the caller owes the client a positioned timeout error
+    Expired,
 }
 
 /// Largest honored WDRR weight. Clamping here keeps the deficit
@@ -197,6 +348,8 @@ impl<T> Batcher<T> {
                 group_rows: HashMap::new(),
                 ready: HashMap::new(),
                 rr: VecDeque::new(),
+                flush: BinaryHeap::new(),
+                seq: 0,
                 closed: false,
             }),
             work: Condvar::new(),
@@ -204,8 +357,10 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Admit a request (blocks under backpressure). Returns false if the
-    /// batcher is closed.
+    /// Admit a default-policy request (blocks under backpressure).
+    /// Returns false if the batcher is closed. Convenience over
+    /// [`Batcher::submit_request`] for call sites without per-request
+    /// policy.
     pub fn submit(
         &self,
         tenant: TenantId,
@@ -214,25 +369,93 @@ impl<T> Batcher<T> {
         mode: Mode,
         reply: T,
     ) -> bool {
-        let rows = matrix.rows;
-        let mut g = self.inner.lock().unwrap();
-        while !g.closed && g.queued_rows + rows > self.policy.queue_limit
-            && g.queued_rows > 0
-        {
-            g = self.space.wait(g).unwrap();
+        self.submit_request(Enqueue::basic(tenant, matrix, k, mode), reply)
+            .is_ok()
+    }
+
+    /// The batching wait for a request: the policy's `max_wait`, capped
+    /// at half the request's *remaining* budget — blocking admission,
+    /// validation, or backpressure may have eaten part of the deadline
+    /// before enqueue, and batching must leave execution headroom out
+    /// of what is actually left, not out of the original budget (a
+    /// request with time left to execute must never be parked until
+    /// exactly its expiry and then answered with a guaranteed timeout).
+    /// Never longer than `max_wait`.
+    fn effective_wait(&self, budget: Option<Duration>) -> Duration {
+        match budget {
+            None => self.policy.max_wait,
+            Some(b) => self.policy.max_wait.min(b / 2),
         }
-        if g.closed {
-            return false;
+    }
+
+    /// Admit a request (blocks under backpressure; the wait is bounded
+    /// by the request's own expiry — a deadline'd submission must not
+    /// park past its budget waiting for queue space). On refusal the
+    /// reply slot is dropped unanswered — the caller must release any
+    /// admission reservation and surface the matching error itself.
+    pub fn submit_request(
+        &self,
+        req: Enqueue,
+        reply: T,
+    ) -> Result<(), SubmitRefusal> {
+        let rows = req.matrix.rows;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(SubmitRefusal::Closed);
+            }
+            if g.queued_rows + rows <= self.policy.queue_limit
+                || g.queued_rows == 0
+            {
+                break;
+            }
+            match req.expire_at {
+                Some(at) => {
+                    let now = Instant::now();
+                    if now >= at {
+                        return Err(SubmitRefusal::Expired);
+                    }
+                    g = self.space.wait_timeout(g, at - now).unwrap().0;
+                }
+                None => g = self.space.wait(g).unwrap(),
+            }
+        }
+        let now = Instant::now();
+        // budget still on the clock at enqueue (the whole deadline when
+        // the caller supplied no expiry instant); an already-expired
+        // request gets a zero wait so the timeout error is prompt
+        let budget = req
+            .expire_at
+            .map(|at| at.saturating_duration_since(now))
+            .or(req.deadline);
+        let mut flush_at = now + self.effective_wait(budget);
+        if let Some(at) = req.expire_at {
+            flush_at = flush_at.min(at);
         }
         let pending = Pending {
-            tenant,
-            matrix,
-            k,
-            mode,
-            enqueued: Instant::now(),
+            tenant: req.tenant,
+            matrix: req.matrix,
+            k: req.k,
+            mode: req.mode,
+            submitted: req.submitted,
+            enqueued: now,
+            flush_at,
+            deadline: req.deadline,
+            expire_at: req.expire_at,
+            priority: req.priority,
+            cancel: req.cancel,
             reply,
         };
         let key = key_of(&pending);
+        pending.cancel.mark_queued(true);
+        g.seq += 1;
+        let seq = g.seq;
+        g.flush.push(FlushEntry {
+            at: pending.flush_at,
+            seq,
+            key: key.clone(),
+            token: pending.cancel.clone(),
+        });
         g.queue.push_back(pending);
         g.queued_rows += rows;
         let group = g.group_rows.entry(key.clone()).or_insert(0);
@@ -244,7 +467,7 @@ impl<T> Batcher<T> {
         }
         drop(g);
         self.work.notify_one();
-        true
+        Ok(())
     }
 
     /// Queue a budget-full group key into its tenant's ready queue,
@@ -318,7 +541,18 @@ impl<T> Batcher<T> {
                 .copied()
                 .unwrap_or(1)
                 .clamp(1, MAX_WEIGHT) as i64;
-            let quantum = quantum_base.saturating_mul(weight);
+            // the front group's priority scales the refill: while a
+            // tenant's next tile is high-priority it accrues credit 4x
+            // as fast (low: half) — Priority::Normal is exactly the
+            // pre-priority quantum. Bounded: quantum_base <= 2^32,
+            // weight <= 2^20, priority <= 4x, all inside i64.
+            let priority = tq
+                .ready
+                .front()
+                .map(|k| k.priority)
+                .unwrap_or(Priority::Normal);
+            let quantum =
+                priority.scale_quantum(quantum_base.saturating_mul(weight));
             tq.deficit = tq
                 .deficit
                 .saturating_add(quantum)
@@ -327,39 +561,45 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Pull the next batch. Flush order: the head group once its
-    /// deadline passes (the head is the oldest request, so no other
-    /// group's deadline can be earlier — and an expired deadline beats
-    /// any budget-full tile), else a budget-full group picked by WDRR
-    /// across tenants. Blocks otherwise. Returns None when closed and
-    /// drained.
+    /// Pull the next batch. Flush order: the group whose flush time
+    /// (per-request deadline override, else the policy wait) expires
+    /// earliest — an expired flush time beats any budget-full tile —
+    /// else a budget-full group picked by WDRR across tenants. Blocks
+    /// otherwise. Returns None when closed and drained.
     pub fn next_batch(&self) -> Option<Batch<T>> {
         let mut g = self.inner.lock().unwrap();
         loop {
             let now = Instant::now();
-            let mut head_deadline = None;
-            if let Some(head) = g.queue.front() {
-                let deadline = head.enqueued + self.policy.max_wait;
-                if g.closed || now >= deadline {
+            // prune heap entries whose request already left in a batch
+            while let Some(top) = g.flush.peek() {
+                if top.token.is_queued() {
+                    break;
+                }
+                g.flush.pop();
+            }
+            let next_flush = g.flush.peek().map(|e| (e.at, e.key.clone()));
+            if let Some((at, key)) = &next_flush {
+                if g.closed || now >= *at {
                     // deadline (or drain-on-close) flush: bypasses WDRR
                     // so quota pressure can never starve a light
                     // tenant past its latency budget
-                    let key = key_of(head);
-                    return Some(self.finish_flush(g, key, false));
+                    return Some(self.finish_flush(g, key.clone(), false));
                 }
-                head_deadline = Some(deadline);
             } else if g.closed {
+                // every queued request holds a live heap entry, so an
+                // empty heap means an empty queue
+                debug_assert!(g.queue.is_empty());
                 return None;
             }
             if let Some(key) = Self::pick_ready(&self.policy, &self.weights, &mut g)
             {
                 return Some(self.finish_flush(g, key, true));
             }
-            // wait for more work (a group may fill) or the deadline
-            g = match head_deadline {
-                Some(d) => {
+            // wait for more work (a group may fill) or the next flush
+            g = match next_flush {
+                Some((at, _)) => {
                     self.work
-                        .wait_timeout(g, d.saturating_duration_since(now))
+                        .wait_timeout(g, at.saturating_duration_since(now))
                         .unwrap()
                         .0
                 }
@@ -425,6 +665,9 @@ impl<T> Batcher<T> {
                         meta = Some((p.matrix.cols, p.k, p.mode));
                     }
                     total_rows += p.matrix.rows;
+                    // leaving the queue: the deadline heap's entry for
+                    // this request becomes prunable
+                    p.cancel.mark_queued(false);
                     items.push(p);
                     continue;
                 }
@@ -452,6 +695,48 @@ impl<T> Batcher<T> {
         }
         let (cols, k, mode) = meta.expect("flush_locked on an empty group");
         Batch { tenant: key.tenant, cols, k, mode, items, total_rows }
+    }
+
+    /// Remove every cancelled request still waiting in the queue and
+    /// return them (row accounting fixed, heap entries left for lazy
+    /// pruning, backpressured producers woken). Called from the
+    /// ticket's cancel hook so a cancelled request releases its tenant
+    /// quota and queue space immediately instead of pinning both until
+    /// the group's scheduled flush; the caller releases reservations
+    /// and delivers the `cancelled` error. Safe against a concurrent
+    /// flush: under the queue lock a request is either evicted here or
+    /// flushed there, never both.
+    pub fn evict_cancelled(&self) -> Vec<Pending<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.queue.iter().any(|p| p.cancel.is_cancelled()) {
+            return Vec::new();
+        }
+        let mut evicted = Vec::new();
+        let mut rest = VecDeque::with_capacity(g.queue.len());
+        while let Some(p) = g.queue.pop_front() {
+            if !p.cancel.is_cancelled() {
+                rest.push_back(p);
+                continue;
+            }
+            g.queued_rows -= p.matrix.rows;
+            let key = key_of(&p);
+            if let Some(e) = g.group_rows.get_mut(&key) {
+                *e = e.saturating_sub(p.matrix.rows);
+                if *e == 0 {
+                    g.group_rows.remove(&key);
+                }
+            }
+            // a ready entry whose group just fell below the budget is
+            // pruned by pick_ready; the flush-heap entry by next_batch
+            p.cancel.mark_queued(false);
+            evicted.push(p);
+        }
+        g.queue = rest;
+        drop(g);
+        if !evicted.is_empty() {
+            self.space.notify_all();
+        }
+        evicted
     }
 
     /// Close the queue: producers are rejected, workers drain then stop.
@@ -913,6 +1198,135 @@ mod tests {
             0,
             "per-key running counts leaked"
         );
+    }
+
+    #[test]
+    fn per_request_deadline_overrides_the_wait_and_splits_the_group() {
+        // Same shape, one request with a 40ms deadline against a 60s
+        // policy wait: the deadline'd request must not share a group
+        // with (or wait behind) the default-wait one — it flushes alone
+        // at half its budget while the default request keeps waiting.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 1_000_000,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 10_000,
+        });
+        assert!(b.submit(dt(), mat(5, 8), 2, Mode::EXACT, 0));
+        let deadlined = Enqueue {
+            deadline: Some(Duration::from_millis(40)),
+            ..Enqueue::basic(dt(), mat(7, 8), 2, Mode::EXACT)
+        };
+        assert!(b.submit_request(deadlined, 1).is_ok());
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(1),
+            "deadline'd request waited on the policy deadline: {waited:?}"
+        );
+        assert!(
+            waited >= Duration::from_millis(15),
+            "flush should wait ~half the budget (20ms), got {waited:?}"
+        );
+        assert_eq!(batch.items.len(), 1, "deadline splits the group");
+        assert_eq!(batch.items[0].reply, 1);
+        assert_eq!(batch.total_rows, 7);
+        assert_eq!(b.queued_rows(), 5, "default request keeps waiting");
+        b.close();
+        assert_eq!(b.next_batch().unwrap().items[0].reply, 0);
+        assert_eq!(b.group_rows_outstanding(), 0);
+    }
+
+    #[test]
+    fn short_deadline_behind_a_long_head_still_flushes_first() {
+        // The old head-deadline rule would sleep on the head's wait; a
+        // later-submitted request with a short per-request deadline
+        // must wake the worker and flush first.
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy {
+            max_rows: 1_000_000,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 10_000,
+        }));
+        b.submit(dt(), mat(4, 8), 2, Mode::EXACT, 0); // head, 60s wait
+        let b2 = b.clone();
+        let worker = std::thread::spawn(move || b2.next_batch().unwrap());
+        std::thread::sleep(Duration::from_millis(20)); // worker parks on 60s
+        let urgent = Enqueue {
+            deadline: Some(Duration::from_millis(30)),
+            ..Enqueue::basic(dt(), mat(9, 16), 2, Mode::EXACT)
+        };
+        assert!(b.submit_request(urgent, 1).is_ok());
+        let batch = worker.join().unwrap();
+        assert_eq!(batch.items[0].reply, 1, "urgent request flushes first");
+        assert_eq!(b.queued_rows(), 4);
+        b.close();
+    }
+
+    #[test]
+    fn evict_cancelled_removes_requests_and_fixes_accounting() {
+        // A cancelled request must leave the queue (and its row
+        // accounting) immediately when evicted, while co-members of
+        // the same group keep flushing normally.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 1000,
+        });
+        let doomed = Enqueue::basic(dt(), mat(10, 8), 2, Mode::EXACT);
+        let token = doomed.cancel.clone();
+        assert!(b.submit_request(doomed, 0).is_ok());
+        assert!(b.submit(dt(), mat(5, 8), 2, Mode::EXACT, 1));
+        assert!(b.evict_cancelled().is_empty(), "nothing cancelled yet");
+        token.cancel();
+        let evicted = b.evict_cancelled();
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(evicted[0].reply, 0);
+        assert_eq!(b.queued_rows(), 5, "cancelled rows freed");
+        assert_eq!(b.group_rows_outstanding(), 5);
+        // the surviving co-member still flushes
+        b.close();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(batch.items[0].reply, 1);
+        assert!(b.next_batch().is_none(), "evicted entry pruned cleanly");
+        assert_eq!(b.group_rows_outstanding(), 0);
+    }
+
+    #[test]
+    fn priority_scales_the_wdrr_quantum() {
+        // Equal weights, both tenants saturated with full tiles; the
+        // high-priority tenant's refill is 4x, so it drains 4 tiles per
+        // rotation to the normal tenant's 1.
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 64,
+            max_wait: Duration::from_secs(600),
+            queue_limit: 1 << 20,
+        });
+        for i in 0..12 {
+            let hi = Enqueue {
+                priority: Priority::High,
+                ..Enqueue::basic(tid("hi"), mat(64, 8), 2, Mode::EXACT)
+            };
+            assert!(b.submit_request(hi, i).is_ok());
+            assert!(b.submit(tid("lo"), mat(64, 8), 2, Mode::EXACT, 100 + i));
+        }
+        let mut hi_batches = 0usize;
+        let mut lo_batches = 0usize;
+        for _ in 0..10 {
+            let batch = b.next_batch().unwrap();
+            assert_eq!(batch.total_rows, 64);
+            if batch.tenant == tid("hi") {
+                hi_batches += 1;
+            } else {
+                lo_batches += 1;
+            }
+        }
+        assert_eq!(
+            (hi_batches, lo_batches),
+            (8, 2),
+            "high priority drains 4 of every 5 tiles at equal weight"
+        );
+        b.close();
     }
 
     #[test]

@@ -17,11 +17,13 @@
 //! tenant's own table (a smaller [`TENANT_RESERVOIR`] reservoir per
 //! tenant; past [`MAX_TENANT_TABLES`] distinct tenants new names fold
 //! into the shared [`OVERFLOW_TENANT`] entry, so client-chosen names
-//! cannot grow the table forever). Quota rejections are
-//! recorded *only* as the rejected tenant's `rejected` counter: they
-//! never touch any latency reservoir, so one tenant shedding load
-//! cannot perturb another tenant's percentiles — pinned by the
-//! isolation tests in `tests/tenants.rs`.
+//! cannot grow the table forever). Quota rejections, client
+//! cancellations, and deadline timeouts are recorded *only* as
+//! counters (`rejected` / `cancelled` / `timed_out`): none of them is
+//! a served request, so none may touch any latency reservoir — one
+//! tenant shedding, cancelling, or timing out cannot perturb another
+//! tenant's percentiles. Pinned by the isolation tests in
+//! `tests/tenants.rs`.
 
 use crate::coordinator::tenant::TenantId;
 use crate::stats::summary::percentile;
@@ -58,6 +60,10 @@ pub struct Metrics {
     pub pjrt_batches: AtomicU64,
     pub cpu_batches: AtomicU64,
     pub errors: AtomicU64,
+    /// requests dropped because the caller cancelled the ticket
+    pub cancelled: AtomicU64,
+    /// requests answered with a deadline-timeout error
+    pub timed_out: AtomicU64,
     /// request latencies in microseconds (bounded uniform reservoir)
     latencies_us: Mutex<Reservoir>,
     /// per-tenant counters and reservoirs, registered on first sight
@@ -72,6 +78,10 @@ struct TenantMetrics {
     errors: AtomicU64,
     /// submissions rejected by admission control (over quota)
     rejected: AtomicU64,
+    /// requests dropped because the caller cancelled the ticket
+    cancelled: AtomicU64,
+    /// requests answered with a deadline-timeout error
+    timed_out: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
 
@@ -82,6 +92,8 @@ impl TenantMetrics {
             rows: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            timed_out: AtomicU64::new(0),
             latencies_us: Mutex::new(Reservoir::with_cap(
                 TENANT_RESERVOIR,
                 0x7E4A,
@@ -156,6 +168,10 @@ pub struct MetricsSnapshot {
     pub pjrt_batches: u64,
     pub cpu_batches: u64,
     pub errors: u64,
+    /// requests dropped because the caller cancelled the ticket
+    pub cancelled: u64,
+    /// requests answered with a deadline-timeout error
+    pub timed_out: u64,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
@@ -173,6 +189,10 @@ pub struct TenantSnapshot {
     pub errors: u64,
     /// submissions rejected by admission control (over quota)
     pub rejected: u64,
+    /// requests dropped because the caller cancelled the ticket
+    pub cancelled: u64,
+    /// requests answered with a deadline-timeout error
+    pub timed_out: u64,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
@@ -253,6 +273,22 @@ impl Metrics {
         self.tenant(tenant).rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a client cancellation. Counters only — a cancelled
+    /// request was never served, so it carries no service latency and
+    /// must not perturb any reservoir.
+    pub fn record_cancelled_for(&self, tenant: &TenantId) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+        self.tenant(tenant).cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a deadline timeout (the request was answered with a
+    /// positioned timeout error instead of a result). Counters only,
+    /// same reservoir-isolation contract as rejections.
+    pub fn record_timed_out_for(&self, tenant: &TenantId) {
+        self.timed_out.fetch_add(1, Ordering::Relaxed);
+        self.tenant(tenant).timed_out.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Snapshot one tenant's counters and percentiles (`None` if the
     /// tenant was never recorded).
     pub fn tenant_snapshot(&self, tenant: &TenantId) -> Option<TenantSnapshot> {
@@ -269,6 +305,8 @@ impl Metrics {
             rows: t.rows.load(Ordering::Relaxed),
             errors: t.errors.load(Ordering::Relaxed),
             rejected: t.rejected.load(Ordering::Relaxed),
+            cancelled: t.cancelled.load(Ordering::Relaxed),
+            timed_out: t.timed_out.load(Ordering::Relaxed),
             p50_us,
             p95_us,
             p99_us,
@@ -294,6 +332,8 @@ impl Metrics {
             pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
             cpu_batches: self.cpu_batches.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
             p50_us,
             p95_us,
             p99_us,
@@ -426,6 +466,25 @@ mod tests {
         assert_eq!(noisy_snap.p99_us, 0.0, "rejections carry no latency");
         // and the aggregate reservoir saw nothing from the rejections
         assert_eq!(m.snapshot().requests, 100);
+    }
+
+    #[test]
+    fn cancelled_and_timed_out_are_counters_only() {
+        let m = Metrics::default();
+        let t = TenantId::new("flaky");
+        m.record_request_for(&t, 2, Duration::from_micros(9));
+        m.record_cancelled_for(&t);
+        m.record_cancelled_for(&t);
+        m.record_timed_out_for(&t);
+        let s = m.snapshot();
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.timed_out, 1);
+        assert_eq!(s.requests, 1, "drops are not served requests");
+        let ts = m.tenant_snapshot(&t).unwrap();
+        assert_eq!(ts.cancelled, 2);
+        assert_eq!(ts.timed_out, 1);
+        assert_eq!(ts.requests, 1);
+        assert_eq!(ts.max_us, 9.0, "reservoir holds only the served request");
     }
 
     #[test]

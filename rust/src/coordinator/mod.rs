@@ -5,7 +5,7 @@
 //! Serving path (quickstart -> production):
 //!
 //! ```text
-//!   client threads ──submit_as(tenant)──▶ admission control (tenant)
+//!   client threads ──submit(SubmitRequest)─▶ admission control (tenant)
 //!                                           │ quota check: reject or
 //!                                           │ reserve (never queue shed
 //!                                           ▼            load)
@@ -34,23 +34,41 @@
 //! cannot execute here skip their probes cleanly, so the service always
 //! answers.
 //!
+//! Requests enter through the typed API (`request`): a
+//! [`SubmitRequest`] builder carrying matrix + k plus per-request
+//! policy (mode, tenant, end-to-end deadline, WDRR priority,
+//! validation and over-quota overrides), answered by a [`TopKTicket`]
+//! (`wait` / `wait_timeout` / `try_wait` / `cancel`). The same request
+//! type has a versioned binary wire form (`wire`) — the frame format
+//! the future network-ingestion and sharding layers speak.
+//!
 //! Multi-tenancy (`tenant`): every request runs as a tenant; admission
-//! control rejects over-quota submissions before they queue, the
+//! control rejects over-quota submissions before they queue (or parks
+//! cooperative `Block`-policy submitters FIFO until quota frees), the
 //! batcher drains budget-full tiles across tenants proportionally to
-//! configured weights (weighted-deficit round-robin, with deadline
-//! flushes exempt so no tenant starves past its latency budget), and
-//! metrics keep per-tenant counters and latency reservoirs next to the
-//! aggregates. The trainer drives the AOT train/eval step artifacts
-//! with device-resident parameter round-trips.
+//! configured weights (weighted-deficit round-robin scaled by request
+//! priority, with deadline flushes exempt so no tenant starves past
+//! its latency budget), and metrics keep per-tenant counters and
+//! latency reservoirs next to the aggregates. The trainer drives the
+//! AOT train/eval step artifacts with device-resident parameter
+//! round-trips.
 
 pub mod batcher;
 pub mod metrics;
+pub mod request;
 pub mod scheduler;
 pub mod service;
 pub mod tenant;
 pub mod trainer;
+pub mod wire;
 
 pub use metrics::Metrics;
-pub use service::{ServiceStats, TopKRequest, TopKService};
+pub use request::{
+    CancelToken, OverQuotaPolicy, Priority, SubmitRequest, TopKTicket,
+    ValidationPolicy,
+};
+pub use service::{ServiceStats, TopKService};
+#[allow(deprecated)]
+pub use service::TopKRequest;
 pub use tenant::{TenantDirectory, TenantId, DEFAULT_TENANT};
 pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,474 @@
+//! The typed request API: [`SubmitRequest`] (what a caller asks for)
+//! and [`TopKTicket`] (the handle they hold while the service works).
+//!
+//! The service's submission surface used to be four positional-argument
+//! `submit*` variants; every new per-request knob would have required a
+//! fifth. `SubmitRequest` is the single self-describing form instead: a
+//! builder over matrix + k plus the per-request *policy* — mode, tenant,
+//! an end-to-end deadline, a WDRR [priority](Priority) class, a
+//! [validation](ValidationPolicy) override, and the
+//! [over-quota](OverQuotaPolicy) behavior. Being plain data (no
+//! channels, no handles), it is also exactly what the wire codec
+//! (`crate::coordinator::wire`) serializes for the future
+//! network-ingestion and sharding layers.
+//!
+//! A submission returns a [`TopKTicket`]: `wait` / `wait_timeout` /
+//! `try_wait` to collect the result, and [`TopKTicket::cancel()`] to
+//! abandon it — a cancelled request still queued is dropped by the
+//! scheduler (its admission reservation released, a `cancelled` error
+//! delivered); one already mid-flight completes but the reply is
+//! discarded.
+
+use crate::coordinator::tenant::TenantId;
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Per-request scheduling class. Priority feeds the batcher's
+/// weighted-deficit round-robin as a *quantum multiplier*: while a
+/// tenant's front-of-queue tile carries this priority, the tenant's
+/// credit refill per rotation is scaled by it. [`Priority::Normal`] is
+/// exactly the pre-priority behavior (multiplier 1); `High` refills 4x
+/// (the tenant drains up to 4 tiles per rotation where it drained 1);
+/// `Low` refills at half rate. Priority never reorders requests within
+/// a tenant (FIFO per group holds) and never outranks a deadline flush.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// half the normal WDRR refill — bulk work that should yield
+    Low,
+    /// the default: exactly the weight-proportional WDRR share
+    #[default]
+    Normal,
+    /// 4x the normal WDRR refill — latency-sensitive interactive work
+    High,
+}
+
+impl Priority {
+    /// Scale a tenant's WDRR refill quantum by this priority. The
+    /// result is always >= 1 so a low-priority tenant still accrues
+    /// credit every rotation (a zero quantum could never reach the
+    /// serve threshold and would spin the pick loop).
+    pub(crate) fn scale_quantum(self, quantum: i64) -> i64 {
+        match self {
+            Priority::Low => (quantum / 2).max(1),
+            Priority::Normal => quantum,
+            Priority::High => quantum.saturating_mul(4),
+        }
+    }
+
+    /// Stable name (CLI flags, wire tooling output).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Inverse of [`Priority::name`].
+    pub fn parse(s: &str) -> Result<Priority, String> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => Err(format!(
+                "unknown priority {other:?} (expected low | normal | high)"
+            )),
+        }
+    }
+}
+
+/// Per-request input-validation override. The service-wide default is
+/// `[serve] validate_inputs`; a request can force the scan on or off
+/// for itself alone.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ValidationPolicy {
+    /// follow the service's `[serve] validate_inputs` setting
+    #[default]
+    Inherit,
+    /// always scan this request's matrix for non-finite values
+    Strict,
+    /// skip the scan for this request (caller guarantees finiteness)
+    Skip,
+}
+
+/// What to do when the tenant is over its admission quota.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum OverQuotaPolicy {
+    /// shed: reject with a positioned error before queueing (the
+    /// pre-existing behavior, and the service default)
+    #[default]
+    Reject,
+    /// cooperate: block the submitting thread (FIFO per tenant, bounded
+    /// by `[serve] max_blocked_waiters`) until quota frees, the
+    /// request's deadline expires, or the service shuts down
+    Block,
+}
+
+impl OverQuotaPolicy {
+    /// Stable name (`[serve] over_quota_policy` values).
+    pub fn name(self) -> &'static str {
+        match self {
+            OverQuotaPolicy::Reject => "reject",
+            OverQuotaPolicy::Block => "block",
+        }
+    }
+
+    /// Inverse of [`OverQuotaPolicy::name`].
+    pub fn parse(s: &str) -> Result<OverQuotaPolicy, String> {
+        match s {
+            "reject" => Ok(OverQuotaPolicy::Reject),
+            "block" => Ok(OverQuotaPolicy::Block),
+            other => Err(format!(
+                "unknown over-quota policy {other:?} (expected reject | block)"
+            )),
+        }
+    }
+}
+
+/// Shared cancellation + queue-residency flags for one request. Cloned
+/// between the caller's [`TopKTicket`] and the copy travelling through
+/// the batcher, so a `cancel()` is visible to the scheduler wherever
+/// the request currently sits.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<TicketFlags>);
+
+#[derive(Debug, Default)]
+struct TicketFlags {
+    cancelled: AtomicBool,
+    /// true while the request sits in the batcher queue — the lazy-
+    /// deletion marker for the batcher's deadline heap
+    queued: AtomicBool,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation. Idempotent; takes effect at the next point
+    /// the scheduler inspects the request.
+    pub fn cancel(&self) {
+        self.0.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Queue-residency marker maintained by the batcher (set on
+    /// enqueue, cleared when the request leaves in a batch) so stale
+    /// deadline-heap entries can be pruned without scanning the queue.
+    pub(crate) fn mark_queued(&self, queued: bool) {
+        self.0.queued.store(queued, Ordering::Release);
+    }
+
+    pub(crate) fn is_queued(&self) -> bool {
+        self.0.queued.load(Ordering::Acquire)
+    }
+}
+
+/// One typed top-k submission: the matrix and `k`, plus every
+/// per-request policy knob. Build with [`SubmitRequest::new`] and the
+/// chainable setters, then hand to `TopKService::submit` (sync) or
+/// `TopKService::submit_ticket` (async).
+///
+/// ```no_run
+/// use rtopk::coordinator::{Priority, SubmitRequest, TopKService};
+/// use rtopk::topk::types::Mode;
+/// use rtopk::util::matrix::RowMatrix;
+/// use std::time::Duration;
+///
+/// let svc = TopKService::cpu_only(&Default::default()).unwrap();
+/// let req = SubmitRequest::new(RowMatrix::zeros(64, 256), 32)
+///     .mode(Mode::EarlyStop { max_iter: 4 })
+///     .tenant("interactive")
+///     .priority(Priority::High)
+///     .deadline(Duration::from_millis(20));
+/// let result = svc.submit(req).unwrap();
+/// assert_eq!(result.k, 32);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitRequest {
+    /// the input rows (one top-k selection per row)
+    pub matrix: RowMatrix,
+    /// elements to select per row
+    pub k: usize,
+    /// search mode; `None` uses the tenant's configured default mode,
+    /// else [`Mode::EXACT`]
+    pub mode: Option<Mode>,
+    /// the tenant this request runs as (admission quotas, WDRR weight,
+    /// per-tenant overrides); defaults to the anonymous default tenant
+    pub tenant: TenantId,
+    /// end-to-end latency budget measured from submission. Caps the
+    /// batcher's wait for this request at `min(max_wait, remaining/2)`
+    /// — a deadline can only shorten batching, and half of whatever
+    /// budget is left at enqueue stays reserved for execution and
+    /// delivery — and is enforced at dispatch and delivery: an
+    /// expired request is answered with a positioned timeout error,
+    /// never served stale work. `None` = no per-request deadline.
+    pub deadline: Option<Duration>,
+    /// WDRR drain-priority class (see [`Priority`])
+    pub priority: Priority,
+    /// per-request input-validation override (see [`ValidationPolicy`])
+    pub validation: ValidationPolicy,
+    /// over-quota behavior; `None` uses the service's configured
+    /// default (`[serve] over_quota_policy`, itself defaulting to
+    /// [`OverQuotaPolicy::Reject`])
+    pub over_quota: Option<OverQuotaPolicy>,
+}
+
+impl SubmitRequest {
+    /// A request with every policy at its default: tenant-default (or
+    /// exact) mode, anonymous tenant, no deadline, normal priority,
+    /// service-default validation and over-quota behavior.
+    pub fn new(matrix: RowMatrix, k: usize) -> SubmitRequest {
+        SubmitRequest {
+            matrix,
+            k,
+            mode: None,
+            tenant: TenantId::default(),
+            deadline: None,
+            priority: Priority::Normal,
+            validation: ValidationPolicy::Inherit,
+            over_quota: None,
+        }
+    }
+
+    /// Set an explicit search mode (overrides the tenant default).
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// Run as a named tenant.
+    pub fn tenant(mut self, name: &str) -> Self {
+        self.tenant = TenantId::new(name);
+        self
+    }
+
+    /// Set the end-to-end deadline (see the field docs for semantics).
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the WDRR priority class.
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Override the service's input-validation setting for this
+    /// request.
+    pub fn validation(mut self, policy: ValidationPolicy) -> Self {
+        self.validation = policy;
+        self
+    }
+
+    /// Choose the over-quota behavior for this request.
+    pub fn on_over_quota(mut self, policy: OverQuotaPolicy) -> Self {
+        self.over_quota = Some(policy);
+        self
+    }
+}
+
+/// The caller's handle to a pending submission.
+pub struct TopKTicket {
+    rx: mpsc::Receiver<Result<TopKResult>>,
+    cancel: CancelToken,
+    /// run after the cancel flag is set — the service hooks the
+    /// batcher's cancelled-request eviction here so a cancelled
+    /// request frees its quota and queue space immediately instead of
+    /// pinning both until its group's scheduled flush
+    on_cancel: Option<Arc<dyn Fn() + Send + Sync>>,
+}
+
+impl TopKTicket {
+    pub(crate) fn new(
+        rx: mpsc::Receiver<Result<TopKResult>>,
+        cancel: CancelToken,
+    ) -> TopKTicket {
+        TopKTicket { rx, cancel, on_cancel: None }
+    }
+
+    /// Attach the eviction hook invoked by [`TopKTicket::cancel()`].
+    pub(crate) fn with_cancel_hook(
+        mut self,
+        hook: Arc<dyn Fn() + Send + Sync>,
+    ) -> TopKTicket {
+        self.on_cancel = Some(hook);
+        self
+    }
+
+    /// Block for the result (or the request's error: validation,
+    /// execution, cancellation, deadline timeout).
+    pub fn wait(self) -> Result<TopKResult> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("service dropped the request"))?
+    }
+
+    /// Block for at most `timeout`. `None` means the request is still
+    /// in flight — the ticket stays usable; `Some` is the final
+    /// outcome, including the "service dropped the request" error when
+    /// the reply channel disconnected without an answer.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<TopKResult>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(anyhow!("service dropped the request")))
+            }
+        }
+    }
+
+    /// Non-blocking poll. `None` means still in flight. A disconnected
+    /// reply channel surfaces the "service dropped the request" error —
+    /// it must never read as "still pending" forever (regression:
+    /// `try_recv().ok()` swallowed the disconnect).
+    pub fn try_wait(&self) -> Option<Result<TopKResult>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("service dropped the request")))
+            }
+        }
+    }
+
+    /// Cancel the request. A request still queued is evicted promptly
+    /// (admission reservation released, queue space freed, a
+    /// `cancelled` error delivered to this ticket); one already
+    /// executing completes but its reply is discarded (a `cancelled`
+    /// error is delivered instead of the result). Idempotent.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+        if let Some(hook) = &self.on_cancel {
+            hook();
+        }
+    }
+
+    /// Whether [`TopKTicket::cancel()`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.is_cancelled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_setters() {
+        let req = SubmitRequest::new(RowMatrix::zeros(2, 4), 2);
+        assert_eq!(req.k, 2);
+        assert_eq!(req.mode, None);
+        assert_eq!(req.tenant, TenantId::default());
+        assert_eq!(req.deadline, None);
+        assert_eq!(req.priority, Priority::Normal);
+        assert_eq!(req.validation, ValidationPolicy::Inherit);
+        assert_eq!(req.over_quota, None);
+        let req = req
+            .mode(Mode::EarlyStop { max_iter: 4 })
+            .tenant("team-a")
+            .deadline(Duration::from_millis(5))
+            .priority(Priority::High)
+            .validation(ValidationPolicy::Skip)
+            .on_over_quota(OverQuotaPolicy::Block);
+        assert_eq!(req.mode, Some(Mode::EarlyStop { max_iter: 4 }));
+        assert_eq!(req.tenant.as_str(), "team-a");
+        assert_eq!(req.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(req.priority, Priority::High);
+        assert_eq!(req.validation, ValidationPolicy::Skip);
+        assert_eq!(req.over_quota, Some(OverQuotaPolicy::Block));
+    }
+
+    #[test]
+    fn priority_quantum_scaling() {
+        assert_eq!(Priority::Normal.scale_quantum(100), 100);
+        assert_eq!(Priority::High.scale_quantum(100), 400);
+        assert_eq!(Priority::Low.scale_quantum(100), 50);
+        // the low-priority refill never reaches zero (a zero quantum
+        // would spin the WDRR pick loop forever)
+        assert_eq!(Priority::Low.scale_quantum(1), 1);
+        // and high-priority scaling saturates instead of wrapping
+        assert!(Priority::High.scale_quantum(i64::MAX) > 0);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        for q in [OverQuotaPolicy::Reject, OverQuotaPolicy::Block] {
+            assert_eq!(OverQuotaPolicy::parse(q.name()).unwrap(), q);
+        }
+        assert!(OverQuotaPolicy::parse("queue").is_err());
+    }
+
+    #[test]
+    fn cancel_token_flags() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let clone = t.clone();
+        clone.cancel();
+        assert!(t.is_cancelled(), "cancellation is shared across clones");
+        t.mark_queued(true);
+        assert!(clone.is_queued());
+        t.mark_queued(false);
+        assert!(!clone.is_queued());
+    }
+
+    #[test]
+    fn try_wait_surfaces_a_dropped_reply_channel() {
+        // Regression: `try_recv().ok()` returned None forever when the
+        // service dropped the reply sender — a poller could never learn
+        // its request died. The disconnect must surface the same error
+        // `wait` reports.
+        let (tx, rx) = mpsc::channel();
+        let ticket = TopKTicket::new(rx, CancelToken::new());
+        assert!(ticket.try_wait().is_none(), "still pending while tx lives");
+        drop(tx);
+        match ticket.try_wait() {
+            Some(Err(e)) => {
+                assert!(format!("{e:#}").contains("dropped"), "got: {e:#}")
+            }
+            other => panic!(
+                "disconnect must surface an error, got {:?}",
+                other.map(|r| r.map(|_| ()))
+            ),
+        }
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_delivers() {
+        let (tx, rx) = mpsc::channel();
+        let ticket = TopKTicket::new(rx, CancelToken::new());
+        assert!(
+            ticket.wait_timeout(Duration::from_millis(1)).is_none(),
+            "nothing sent yet"
+        );
+        tx.send(Ok(TopKResult::zeros(1, 1))).unwrap();
+        match ticket.wait_timeout(Duration::from_secs(5)) {
+            Some(Ok(res)) => assert_eq!(res.rows, 1),
+            other => panic!("expected the result, got {:?}", other.map(|r| r.map(|_| ()))),
+        }
+        // sender gone, nothing buffered: the disconnect is an error,
+        // not an eternal timeout
+        drop(tx);
+        match ticket.wait_timeout(Duration::from_millis(1)) {
+            Some(Err(e)) => {
+                assert!(format!("{e:#}").contains("dropped"), "got: {e:#}")
+            }
+            other => panic!(
+                "disconnect must surface an error, got {:?}",
+                other.map(|r| r.map(|_| ()))
+            ),
+        }
+    }
+}

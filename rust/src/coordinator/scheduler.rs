@@ -19,6 +19,17 @@
 //! shadow-sampled — the timing would measure the pin, not the plan's
 //! winner.
 //!
+//! Cancellation and deadlines are enforced here, end to end: before a
+//! batch dispatches, every cancelled item is dropped (reservation
+//! released, `cancelled` error delivered, counted) and every item
+//! whose per-request deadline already expired is answered with a
+//! positioned timeout error instead of stale work — neither ever
+//! reaches a backend. Both flags are re-checked at delivery: a request
+//! cancelled mid-flight completes but its reply is discarded, and a
+//! result finished after the deadline is reported as a timeout rather
+//! than handed over late. Only the surviving items count as served
+//! requests or touch latency reservoirs.
+//!
 //! Shadow re-probing: when `[plan] shadow_every = N` is set (N > 0),
 //! every Nth dispatched batch is timed and then re-executed on the
 //! plan's recorded runner-up; the measured edge feeds the planner's
@@ -81,12 +92,22 @@ pub fn spawn_workers(
         .collect()
 }
 
+/// The shape one dispatched batch executed at (after cancelled /
+/// expired items were dropped).
+#[derive(Clone, Copy)]
+struct BatchShape {
+    rows: usize,
+    cols: usize,
+    k: usize,
+    mode: crate::topk::types::Mode,
+}
+
 /// Re-execute a shadowed batch on the plan's runner-up and feed the
 /// measured edge back to the planner. The shadow result is discarded;
 /// a runner-up that cannot execute (quarantined, vanished tile) simply
 /// yields no sample.
 fn shadow_reprobe(
-    batch: &Batch<Reply>,
+    shape: BatchShape,
     mats: &[&RowMatrix],
     winner_secs: f64,
     backends: &BackendRegistry,
@@ -100,15 +121,15 @@ fn shadow_reprobe(
     }
     let spec = crate::backend::ExecSpec { algo: ru.algo, grain: ru.grain };
     let t0 = Instant::now();
-    match rb.execute(&spec, mats, batch.k, batch.mode) {
+    match rb.execute(&spec, mats, shape.k, shape.mode) {
         Ok(res) => {
             let runner_secs = t0.elapsed().as_secs_f64();
             std::hint::black_box(res);
             planner.record_shadow(
-                batch.total_rows,
-                batch.cols,
-                batch.k,
-                batch.mode,
+                shape.rows,
+                shape.cols,
+                shape.k,
+                shape.mode,
                 winner_secs,
                 runner_secs,
             );
@@ -119,8 +140,52 @@ fn shadow_reprobe(
     }
 }
 
+/// Drop one cancelled request: release its reservation, count it, and
+/// deliver the `cancelled` error to the ticket. Shared with the
+/// service's ticket cancel-hook (which evicts cancelled requests from
+/// the batcher queue) so both cancellation reply paths stay identical.
+pub(crate) fn reply_cancelled(
+    item: crate::coordinator::batcher::Pending<Reply>,
+    metrics: &Metrics,
+    tenants: &TenantDirectory,
+    when: &str,
+) {
+    tenants.release(&item.tenant, item.matrix.rows);
+    metrics.record_cancelled_for(&item.tenant);
+    let _ = item.reply.send(Err(anyhow!(
+        "request cancelled by the client {when} (tenant {:?})",
+        item.tenant.as_str()
+    )));
+}
+
+/// Answer one deadline-expired request with a positioned timeout error
+/// — never stale work.
+fn reply_timed_out(
+    item: crate::coordinator::batcher::Pending<Reply>,
+    metrics: &Metrics,
+    tenants: &TenantDirectory,
+    when: &str,
+) {
+    tenants.release(&item.tenant, item.matrix.rows);
+    metrics.record_timed_out_for(&item.tenant);
+    // waited is measured from *submit*, not from batcher enqueue — a
+    // Block-policy request spends part of its budget parked in
+    // admission, and the positioned error must never claim
+    // waited < deadline for a correctly expired request
+    let waited_us = item.submitted.elapsed().as_micros();
+    let deadline_us =
+        item.deadline.map(|d| d.as_micros()).unwrap_or_default();
+    let _ = item.reply.send(Err(anyhow!(
+        "request deadline exceeded {when}: tenant {:?} waited {waited_us} us \
+         against a {deadline_us} us deadline; answering with a timeout \
+         instead of stale work",
+        item.tenant.as_str()
+    )));
+}
+
 /// Execute one batch through the plan's backend and deliver per-request
-/// results.
+/// results. Cancelled and deadline-expired items are dropped here,
+/// before any work is dispatched.
 pub fn run_batch(
     batch: Batch<Reply>,
     backends: &BackendRegistry,
@@ -128,7 +193,26 @@ pub fn run_batch(
     planner: &Planner,
     tenants: &TenantDirectory,
 ) {
-    let plan = planner.plan(batch.total_rows, batch.cols, batch.k, batch.mode);
+    let Batch { tenant, cols, k, mode, items, .. } = batch;
+    // pre-dispatch gate: drop cancelled items, answer expired ones
+    let now = Instant::now();
+    let mut live: Vec<_> = Vec::with_capacity(items.len());
+    for item in items {
+        if item.cancel.is_cancelled() {
+            reply_cancelled(item, metrics, tenants, "while queued");
+        } else if item.expire_at.is_some_and(|at| now >= at) {
+            reply_timed_out(item, metrics, tenants, "before dispatch");
+        } else {
+            live.push(item);
+        }
+    }
+    if live.is_empty() {
+        // the whole batch died before dispatch: nothing executes, no
+        // batch is recorded
+        return;
+    }
+    let total_rows: usize = live.iter().map(|p| p.matrix.rows).sum();
+    let plan = planner.plan(total_rows, cols, k, mode);
     // a plan can only name a registered backend, but resolve
     // defensively; a backend that kept failing at runtime is
     // quarantined — its batches run on the CPU engine directly instead
@@ -144,15 +228,14 @@ pub fn run_batch(
     // and runs on the CPU engine (so what the pin names is what
     // executes); semantics-gated exactly like the global force_algo
     let mut tenant_pinned = false;
-    if let Some(algo) = tenants.pinned_algo(&batch.tenant, batch.mode) {
+    if let Some(algo) = tenants.pinned_algo(&tenant, mode) {
         if algo != spec.algo {
             spec = crate::backend::ExecSpec { algo, grain: plan.grain };
             backend = backends.cpu();
             tenant_pinned = true;
         }
     }
-    let mats: Vec<&RowMatrix> =
-        batch.items.iter().map(|item| &item.matrix).collect();
+    let mats: Vec<&RowMatrix> = live.iter().map(|item| &item.matrix).collect();
     let mut via_accel = backend.id() != CPU_BACKEND_ID;
     // time the dispatch only when this batch is a shadow sample — and
     // only when what executes really is the plan's winner: a dispatch
@@ -166,7 +249,7 @@ pub fn run_batch(
         } else {
             None
         };
-    let mut outcome = backend.execute(&spec, &mats, batch.k, batch.mode);
+    let mut outcome = backend.execute(&spec, &mats, k, mode);
     let winner_secs = shadow_t0.map(|t| t.elapsed().as_secs_f64());
     let mut fell_back = false;
     if via_accel && outcome.is_err() {
@@ -195,7 +278,7 @@ pub fn run_batch(
         }
         via_accel = false;
         fell_back = true;
-        outcome = backends.cpu().execute(&spec, &mats, batch.k, batch.mode);
+        outcome = backends.cpu().execute(&spec, &mats, k, mode);
     } else if via_accel {
         backends.note_success(backend.id());
     }
@@ -204,16 +287,32 @@ pub fn run_batch(
     // valid winner sample
     if let Some(winner_secs) = winner_secs {
         if !fell_back && outcome.is_ok() {
-            shadow_reprobe(&batch, &mats, winner_secs, backends, planner, &plan);
+            let shape = BatchShape { rows: total_rows, cols, k, mode };
+            shadow_reprobe(shape, &mats, winner_secs, backends, planner, &plan);
         }
     }
     drop(mats);
     metrics.record_batch(via_accel);
-    let tenant = batch.tenant.clone();
     match outcome {
         Ok(results) => {
-            for (item, res) in batch.items.into_iter().zip(results) {
-                let latency = item.enqueued.elapsed();
+            for (item, res) in live.into_iter().zip(results) {
+                // delivery gate: a request cancelled mid-flight
+                // completed, but its reply is discarded; a result
+                // finished past the deadline is a timeout, not a late
+                // answer
+                if item.cancel.is_cancelled() {
+                    reply_cancelled(item, metrics, tenants, "mid-flight");
+                    continue;
+                }
+                if item.expire_at.is_some_and(|at| Instant::now() >= at) {
+                    reply_timed_out(item, metrics, tenants, "at delivery");
+                    continue;
+                }
+                // latency spans submit-to-reply (matching the tenant
+                // module's in-flight contract): time parked in blocking
+                // admission or backpressure is client-visible wait and
+                // must reach the reservoirs
+                let latency = item.submitted.elapsed();
                 metrics.record_request_for(&tenant, item.matrix.rows, latency);
                 tenants.release(&tenant, item.matrix.rows);
                 let _ = item.reply.send(Ok(res));
@@ -222,7 +321,19 @@ pub fn run_batch(
         Err(e) => {
             metrics.record_error_for(&tenant);
             let msg = format!("{e:#}");
-            for item in batch.items {
+            for item in live {
+                // the delivery gates apply here too: a caller that
+                // cancelled (or whose deadline passed) gets the
+                // documented cancelled/timeout error and counter, not
+                // a generic execution error it might retry on
+                if item.cancel.is_cancelled() {
+                    reply_cancelled(item, metrics, tenants, "mid-flight");
+                    continue;
+                }
+                if item.expire_at.is_some_and(|at| Instant::now() >= at) {
+                    reply_timed_out(item, metrics, tenants, "at delivery");
+                    continue;
+                }
                 tenants.release(&tenant, item.matrix.rows);
                 let _ = item.reply.send(Err(anyhow!("{msg}")));
             }
@@ -248,6 +359,27 @@ mod tests {
     use crate::util::rng::Rng;
     use std::time::Duration;
 
+    fn one_pending(x: &RowMatrix, k: usize, mode: Mode, tx: Reply)
+        -> crate::coordinator::batcher::Pending<Reply> {
+        use crate::coordinator::request::{CancelToken, Priority};
+        use crate::coordinator::tenant::TenantId;
+        let now = std::time::Instant::now();
+        crate::coordinator::batcher::Pending {
+            tenant: TenantId::default(),
+            matrix: x.clone(),
+            k,
+            mode,
+            submitted: now,
+            enqueued: now,
+            flush_at: now,
+            deadline: None,
+            expire_at: None,
+            priority: Priority::Normal,
+            cancel: CancelToken::new(),
+            reply: tx,
+        }
+    }
+
     fn one_item_batch(x: &RowMatrix, k: usize, mode: Mode, tx: Reply) -> Batch<Reply> {
         use crate::coordinator::tenant::TenantId;
         Batch {
@@ -256,14 +388,7 @@ mod tests {
             k,
             mode,
             total_rows: x.rows,
-            items: vec![crate::coordinator::batcher::Pending {
-                tenant: TenantId::default(),
-                matrix: x.clone(),
-                k,
-                mode,
-                enqueued: std::time::Instant::now(),
-                reply: tx,
-            }],
+            items: vec![one_pending(x, k, mode, tx)],
         }
     }
 
@@ -323,6 +448,71 @@ mod tests {
         // default config: shadow_every = 0 — dispatch must never have
         // taken a shadow sample
         assert_eq!(planner.shadow_observations(), 0);
+    }
+
+    #[test]
+    fn expired_deadline_is_answered_before_work_is_dispatched() {
+        // A batch whose only item is already past its deadline must be
+        // answered with a positioned timeout error — no backend runs,
+        // nothing counts as served.
+        let backends = Arc::new(BackendRegistry::cpu_only());
+        let metrics = Arc::new(Metrics::default());
+        let planner = Arc::new(Planner::default());
+        let tenants = no_tenants();
+        let mut rng = Rng::seed_from(0x61);
+        let x = RowMatrix::random_normal(6, 32, &mut rng);
+        let (tx, rx) = mpsc::channel();
+        let mut batch = one_item_batch(&x, 4, Mode::EXACT, tx);
+        batch.items[0].deadline = Some(Duration::from_micros(10));
+        batch.items[0].expire_at =
+            Some(std::time::Instant::now() - Duration::from_millis(1));
+        run_batch(batch, &backends, &metrics, &planner, &tenants);
+        let err = rx.recv().unwrap().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("deadline exceeded"), "got: {msg}");
+        assert!(msg.contains("10 us"), "names the deadline: {msg}");
+        let s = metrics.snapshot();
+        assert_eq!(s.timed_out, 1);
+        assert_eq!(s.requests, 0, "never served");
+        assert_eq!(s.batches, 0, "no work dispatched");
+        assert_eq!(s.errors, 0, "a timeout is not an execution error");
+        assert_eq!(planner.cache().len(), 0, "never even planned");
+    }
+
+    #[test]
+    fn cancelled_item_is_dropped_and_live_items_still_serve() {
+        // One cancelled and one live request in the same batch: the
+        // cancelled one gets a `cancelled` error and the live one is
+        // served normally.
+        let backends = Arc::new(BackendRegistry::cpu_only());
+        let metrics = Arc::new(Metrics::default());
+        let planner = Arc::new(Planner::default());
+        let tenants = no_tenants();
+        let mut rng = Rng::seed_from(0x62);
+        let x = RowMatrix::random_normal(5, 32, &mut rng);
+        let y = RowMatrix::random_normal(5, 32, &mut rng);
+        let (tx_c, rx_c) = mpsc::channel();
+        let (tx_l, rx_l) = mpsc::channel();
+        let cancelled = one_pending(&x, 4, Mode::EXACT, tx_c);
+        cancelled.cancel.cancel();
+        let live = one_pending(&y, 4, Mode::EXACT, tx_l);
+        let batch = Batch {
+            tenant: crate::coordinator::tenant::TenantId::default(),
+            cols: 32,
+            k: 4,
+            mode: Mode::EXACT,
+            total_rows: 10,
+            items: vec![cancelled, live],
+        };
+        run_batch(batch, &backends, &metrics, &planner, &tenants);
+        let err = rx_c.recv().unwrap().unwrap_err();
+        assert!(format!("{err:#}").contains("cancelled"), "got: {err:#}");
+        let res = rx_l.recv().unwrap().unwrap();
+        assert!(is_exact(&y, &res), "live request served exactly");
+        let s = metrics.snapshot();
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.requests, 1, "only the live request was served");
+        assert_eq!(s.rows, 5, "cancelled rows never count as served");
     }
 
     #[test]

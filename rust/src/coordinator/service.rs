@@ -1,6 +1,20 @@
 //! TopKService — the public serving API: batcher + scheduler + backend
 //! registry + adaptive planner + tenant directory wired together behind
-//! `submit`/`submit_async` (and their tenant-attributed `_as` forms).
+//! one canonical, typed submission path:
+//! [`TopKService::submit`]`(SubmitRequest)` and its async form
+//! [`TopKService::submit_ticket`].
+//!
+//! A [`SubmitRequest`] carries the matrix and `k` plus every
+//! per-request policy knob — mode, tenant, end-to-end deadline, WDRR
+//! priority, validation override, over-quota behavior — so the service
+//! surface grows by adding a field, not a fifth positional-argument
+//! overload. The old `submit_as` / `submit_async` / `submit_async_as`
+//! family remains for one release as thin `#[deprecated]` shims
+//! delegating here. The fourth old method — positional
+//! `submit(matrix, k, mode)` — could not keep its name (the canonical
+//! typed `submit` takes it), so it is the one deliberate hard break of
+//! this redesign: `svc.submit(x, k, mode)` becomes
+//! `svc.submit(SubmitRequest::new(x, k).mode(mode))`.
 //!
 //! The service builds a [`BackendRegistry`] (CPU engine always; the
 //! PJRT tile backend when artifacts are present and `[backend]` allows
@@ -8,22 +22,35 @@
 //! backend choice end to end. The scheduler dispatches every batch
 //! through the plan's backend handle; there is no separate router.
 //!
-//! Multi-tenancy: every submission runs as a tenant (the anonymous
-//! forms run as [`DEFAULT_TENANT`]). Admission control happens here,
-//! before the batcher ever sees the request: an over-quota submission
-//! is rejected with a positioned error (tenant, observed load, limit)
-//! and counted in the tenant's `rejected` metric — it neither queues
-//! nor perturbs any latency reservoir. Admitted requests carry their
-//! [`TenantId`] through the batcher (which drains budget-full tiles
-//! across tenants by weighted-deficit round-robin) to the scheduler,
-//! which releases the admission reservation when the reply is sent.
+//! Multi-tenancy: every submission runs as a tenant (requests without
+//! an explicit tenant run as
+//! [`DEFAULT_TENANT`](crate::coordinator::tenant::DEFAULT_TENANT)).
+//! Admission control
+//! happens here, before the batcher ever sees the request: an
+//! over-quota submission is rejected with a positioned error (tenant,
+//! observed load, limit) and counted in the tenant's `rejected` metric
+//! — it neither queues nor perturbs any latency reservoir — unless the
+//! request opted into [`OverQuotaPolicy::Block`], in which case the
+//! submitting thread parks FIFO (bounded by `[serve]
+//! max_blocked_waiters`) until quota frees, its deadline expires, or
+//! the service shuts down. Admitted requests carry their
+//! [`TenantId`](crate::coordinator::tenant::TenantId) through the
+//! batcher (which drains budget-full tiles across tenants
+//! by weighted-deficit round-robin, scaled by request priority) to the
+//! scheduler, which releases the admission reservation when the reply
+//! is sent.
 
 use crate::backend::BackendRegistry;
 use crate::config::ServeConfig;
-use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::batcher::{
+    BatchPolicy, Batcher, Enqueue, SubmitRefusal,
+};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::request::{
+    CancelToken, OverQuotaPolicy, SubmitRequest, TopKTicket, ValidationPolicy,
+};
 use crate::coordinator::scheduler::{spawn_workers, Reply};
-use crate::coordinator::tenant::{TenantDirectory, TenantId, DEFAULT_TENANT};
+use crate::coordinator::tenant::{AdmitBlockError, TenantDirectory};
 use crate::plan::{Planner, PlannerConfig};
 use crate::runtime::executor::Executor;
 use crate::topk::types::{Mode, TopKResult};
@@ -31,26 +58,12 @@ use crate::util::matrix::RowMatrix;
 use anyhow::{anyhow, Result};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-/// A pending asynchronous request.
-pub struct TopKRequest {
-    rx: mpsc::Receiver<Result<TopKResult>>,
-}
-
-impl TopKRequest {
-    /// Block for the result.
-    pub fn wait(self) -> Result<TopKResult> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("service dropped the request"))?
-    }
-
-    /// Non-blocking poll.
-    pub fn try_wait(&self) -> Option<Result<TopKResult>> {
-        self.rx.try_recv().ok()
-    }
-}
+/// Deprecated name for [`TopKTicket`] — the handle gained `cancel` /
+/// `wait_timeout` and a new name with the typed request API.
+#[deprecated(note = "use TopKTicket (returned by TopKService::submit_ticket)")]
+pub type TopKRequest = TopKTicket;
 
 /// Service-level statistics snapshot.
 pub type ServiceStats = MetricsSnapshot;
@@ -64,8 +77,17 @@ pub struct TopKService {
     tenants: Arc<TenantDirectory>,
     workers: Vec<JoinHandle<()>>,
     /// reject non-finite client matrices at submit (`[serve]
-    /// validate_inputs`, default on)
+    /// validate_inputs`, default on); per-request
+    /// [`ValidationPolicy`] overrides win
     validate_inputs: bool,
+    /// over-quota behavior for requests that do not choose one
+    /// (`[serve] over_quota_policy`, default reject)
+    default_over_quota: OverQuotaPolicy,
+    /// shared ticket cancel-hook: evicts cancelled requests from the
+    /// batcher queue so a cancel frees quota and queue space
+    /// immediately. Built once (it captures no per-request state) and
+    /// cloned onto every ticket.
+    cancel_hook: Arc<dyn Fn() + Send + Sync>,
     /// keeps the executor thread alive for the service's lifetime
     _executor: Option<Executor>,
 }
@@ -109,9 +131,12 @@ impl TopKService {
                 ));
             }
         }
+        let default_over_quota = OverQuotaPolicy::parse(&cfg.over_quota_policy)
+            .map_err(|e| anyhow!("[serve] over_quota_policy: {e}"))?;
         let tenants = Arc::new(
             TenantDirectory::from_config(&cfg.tenants)
-                .map_err(anyhow::Error::msg)?,
+                .map_err(anyhow::Error::msg)?
+                .with_max_blocked_waiters(cfg.max_blocked_waiters),
         );
         let batcher = Arc::new(Batcher::with_weights(
             BatchPolicy {
@@ -135,6 +160,21 @@ impl TopKService {
             planner.clone(),
             tenants.clone(),
         );
+        let cancel_hook: Arc<dyn Fn() + Send + Sync> = {
+            let batcher = batcher.clone();
+            let tenants = tenants.clone();
+            let metrics = metrics.clone();
+            Arc::new(move || {
+                for p in batcher.evict_cancelled() {
+                    crate::coordinator::scheduler::reply_cancelled(
+                        p,
+                        &metrics,
+                        &tenants,
+                        "while queued",
+                    );
+                }
+            })
+        };
         Ok(TopKService {
             batcher,
             metrics,
@@ -143,48 +183,76 @@ impl TopKService {
             tenants,
             workers,
             validate_inputs: cfg.validate_inputs,
+            default_over_quota,
+            cancel_hook,
             _executor: executor,
         })
     }
 
-    /// Submit a request as a named tenant; returns a handle to wait on.
+    /// Submit a typed request; returns the ticket to wait on (or
+    /// cancel). This is the one canonical submission path — every
+    /// other submit form delegates here.
     ///
-    /// `mode = None` uses the tenant's configured default mode (else
-    /// [`Mode::EXACT`]). Validates `k` and — unless `[serve]
-    /// validate_inputs = false` — that the matrix is entirely finite:
-    /// the top-k kernels use branchless IEEE compares
-    /// (`topk::binary_search`'s documented input contract), so a NaN or
-    /// infinity would silently corrupt the selection rather than fail.
-    /// The scan is one vectorizable pass over data the service is about
-    /// to read anyway.
+    /// Validation: `k` must fit the matrix; unless the effective
+    /// validation policy skips it, the matrix is scanned for non-finite
+    /// values (the top-k kernels use branchless IEEE compares —
+    /// `topk::binary_search`'s documented input contract — so a NaN or
+    /// infinity would silently corrupt the selection rather than
+    /// fail). The scan is one vectorizable pass over data the service
+    /// is about to read anyway.
     ///
-    /// After validation the request is checked against the tenant's
-    /// admission quotas (`[tenants.<name>] max_in_flight_rows` /
-    /// `max_queue_depth`): an over-quota submission is rejected with a
-    /// positioned error and counted in the tenant's `rejected` metric —
-    /// it never reaches the batcher, so shed load cannot occupy queue
-    /// space or skew any latency reservoir.
-    pub fn submit_async_as(
-        &self,
-        tenant: &str,
-        matrix: RowMatrix,
-        k: usize,
-        mode: Option<Mode>,
-    ) -> Result<TopKRequest> {
-        let tenant = TenantId::new(tenant);
+    /// Admission: the request is checked against the tenant's quotas
+    /// (`[tenants.<name>] max_in_flight_rows` / `max_queue_depth`).
+    /// Under [`OverQuotaPolicy::Reject`] an over-quota submission is
+    /// rejected with a positioned error and counted in the tenant's
+    /// `rejected` metric — it never reaches the batcher, so shed load
+    /// cannot occupy queue space or skew any latency reservoir. Under
+    /// [`OverQuotaPolicy::Block`] the submitting thread parks FIFO
+    /// until quota frees (or the deadline/shutdown ends the wait).
+    ///
+    /// Deadlines: a `SubmitRequest::deadline` bounds the request end
+    /// to end — batching is capped at `min(max_wait, remaining/2)`,
+    /// and a request that cannot be dispatched (or delivered) in time
+    /// is answered with a positioned timeout error, counted in
+    /// `timed_out`.
+    pub fn submit_ticket(&self, req: SubmitRequest) -> Result<TopKTicket> {
+        let submitted = Instant::now();
+        let SubmitRequest {
+            matrix,
+            k,
+            mode,
+            tenant,
+            deadline,
+            priority,
+            validation,
+            over_quota,
+        } = req;
         let mode = mode
             .or_else(|| self.tenants.default_mode(&tenant))
             .unwrap_or(Mode::EXACT);
         if k == 0 || k > matrix.cols {
             return Err(anyhow!("k={} out of range for M={}", k, matrix.cols));
         }
-        if self.validate_inputs {
+        if let Some(d) = deadline {
+            if d.is_zero() {
+                return Err(anyhow!(
+                    "deadline must be positive (a zero budget can never be met)"
+                ));
+            }
+        }
+        let validate = match validation {
+            ValidationPolicy::Inherit => self.validate_inputs,
+            ValidationPolicy::Strict => true,
+            ValidationPolicy::Skip => false,
+        };
+        if validate {
             if let Some(i) = matrix.data.iter().position(|v| !v.is_finite()) {
                 let cols = matrix.cols.max(1);
                 return Err(anyhow!(
                     "input matrix contains a non-finite value ({}) at row {} \
                      col {}; the top-k kernels require finite inputs \
-                     (set `[serve] validate_inputs = false` to skip this scan)",
+                     (set `[serve] validate_inputs = false` or \
+                     ValidationPolicy::Skip to skip this scan)",
                     matrix.data[i],
                     i / cols,
                     i % cols
@@ -192,19 +260,104 @@ impl TopKService {
             }
         }
         let rows = matrix.rows;
-        if let Err(e) = self.tenants.admit(&tenant, rows) {
-            self.metrics.record_rejection(&tenant);
-            return Err(anyhow::Error::msg(e));
+        let expire_at = deadline.map(|d| submitted + d);
+        match over_quota.unwrap_or(self.default_over_quota) {
+            OverQuotaPolicy::Reject => {
+                if let Err(e) = self.tenants.admit(&tenant, rows) {
+                    self.metrics.record_rejection(&tenant);
+                    return Err(anyhow::Error::msg(e));
+                }
+            }
+            OverQuotaPolicy::Block => {
+                if let Err(e) =
+                    self.tenants.admit_blocking(&tenant, rows, expire_at)
+                {
+                    // a deadline expiry while parked is a timeout, a
+                    // full waiter FIFO is a rejection, a shutdown is
+                    // neither
+                    match &e {
+                        AdmitBlockError::Timeout(_) => {
+                            self.metrics.record_timed_out_for(&tenant)
+                        }
+                        AdmitBlockError::WaitersFull(_)
+                        | AdmitBlockError::Rejected(_) => {
+                            self.metrics.record_rejection(&tenant)
+                        }
+                        AdmitBlockError::Closed(_) => {}
+                    }
+                    return Err(anyhow::Error::msg(e.message().to_string()));
+                }
+            }
         }
         let (tx, rx) = mpsc::channel();
-        if !self.batcher.submit(tenant.clone(), matrix, k, mode, tx) {
+        let cancel = CancelToken::new();
+        let enq = Enqueue {
+            tenant: tenant.clone(),
+            matrix,
+            k,
+            mode,
+            submitted,
+            deadline,
+            expire_at,
+            priority,
+            cancel: cancel.clone(),
+        };
+        if let Err(refusal) = self.batcher.submit_request(enq, tx) {
             self.tenants.release(&tenant, rows);
-            return Err(anyhow!("service is shut down"));
+            return match refusal {
+                SubmitRefusal::Closed => Err(anyhow!("service is shut down")),
+                SubmitRefusal::Expired => {
+                    self.metrics.record_timed_out_for(&tenant);
+                    Err(anyhow!(
+                        "request deadline exceeded while blocked on queue \
+                         backpressure: tenant {:?} waited {} us against a \
+                         {} us deadline; answering with a timeout instead of \
+                         queueing stale work",
+                        tenant.as_str(),
+                        submitted.elapsed().as_micros(),
+                        deadline.map(|d| d.as_micros()).unwrap_or_default()
+                    ))
+                }
+            };
         }
-        Ok(TopKRequest { rx })
+        // cancel() evicts cancelled requests from the queue right away
+        // — without this, a cancelled request would pin its tenant
+        // quota and queue_limit rows until its group's scheduled flush
+        Ok(TopKTicket::new(rx, cancel)
+            .with_cancel_hook(self.cancel_hook.clone()))
     }
 
-    /// Submit as a tenant and wait.
+    /// Submit a typed request and wait for the result. See
+    /// [`TopKService::submit_ticket`] for validation, admission, and
+    /// deadline semantics.
+    pub fn submit(&self, req: SubmitRequest) -> Result<TopKResult> {
+        self.submit_ticket(req)?.wait()
+    }
+
+    /// Deprecated positional form: submit as a named tenant, async.
+    #[deprecated(
+        note = "build a SubmitRequest and call submit_ticket (typed request API)"
+    )]
+    #[allow(deprecated)]
+    pub fn submit_async_as(
+        &self,
+        tenant: &str,
+        matrix: RowMatrix,
+        k: usize,
+        mode: Option<Mode>,
+    ) -> Result<TopKRequest> {
+        let mut req = SubmitRequest::new(matrix, k).tenant(tenant);
+        if let Some(mode) = mode {
+            req = req.mode(mode);
+        }
+        self.submit_ticket(req)
+    }
+
+    /// Deprecated positional form: submit as a named tenant and wait.
+    #[deprecated(
+        note = "build a SubmitRequest and call submit (typed request API)"
+    )]
+    #[allow(deprecated)]
     pub fn submit_as(
         &self,
         tenant: &str,
@@ -215,17 +368,15 @@ impl TopKService {
         self.submit_async_as(tenant, matrix, k, mode)?.wait()
     }
 
-    /// Submit a request under the default tenant; returns a handle to
-    /// wait on. See [`TopKService::submit_async_as`] for validation and
-    /// admission semantics.
+    /// Deprecated positional form: submit under the default tenant,
+    /// async.
+    #[deprecated(
+        note = "build a SubmitRequest and call submit_ticket (typed request API)"
+    )]
+    #[allow(deprecated)]
     pub fn submit_async(&self, matrix: RowMatrix, k: usize, mode: Mode)
         -> Result<TopKRequest> {
-        self.submit_async_as(DEFAULT_TENANT, matrix, k, Some(mode))
-    }
-
-    /// Submit and wait.
-    pub fn submit(&self, matrix: RowMatrix, k: usize, mode: Mode) -> Result<TopKResult> {
-        self.submit_async(matrix, k, mode)?.wait()
+        self.submit_ticket(SubmitRequest::new(matrix, k).mode(mode))
     }
 
     pub fn stats(&self) -> ServiceStats {
@@ -253,9 +404,11 @@ impl TopKService {
         &self.tenants
     }
 
-    /// Graceful shutdown: drain the queue, stop workers, persist the
-    /// plan cache (when `plan.cache_path` is configured).
+    /// Graceful shutdown: unblock cooperative waiters, drain the queue,
+    /// stop workers, persist the plan cache (when `plan.cache_path` is
+    /// configured).
     pub fn shutdown(mut self) {
+        self.tenants.close();
         self.batcher.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -268,6 +421,7 @@ impl TopKService {
 
 impl Drop for TopKService {
     fn drop(&mut self) {
+        self.tenants.close();
         self.batcher.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -278,6 +432,8 @@ impl Drop for TopKService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::Priority;
+    use crate::coordinator::tenant::TenantId;
     use crate::topk::verify::is_exact;
     use crate::util::rng::Rng;
 
@@ -290,12 +446,17 @@ mod tests {
         .unwrap()
     }
 
+    /// Shorthand: a typed request with an explicit mode.
+    fn sreq(matrix: RowMatrix, k: usize, mode: Mode) -> SubmitRequest {
+        SubmitRequest::new(matrix, k).mode(mode)
+    }
+
     #[test]
     fn submit_sync_exact() {
         let svc = cpu_service(2);
         let mut rng = Rng::seed_from(31);
         let x = RowMatrix::random_normal(50, 64, &mut rng);
-        let res = svc.submit(x.clone(), 8, Mode::EXACT).unwrap();
+        let res = svc.submit(sreq(x.clone(), 8, Mode::EXACT)).unwrap();
         assert!(is_exact(&x, &res));
         assert_eq!(svc.stats().requests, 1);
     }
@@ -304,15 +465,17 @@ mod tests {
     fn submit_many_async() {
         let svc = cpu_service(2);
         let mut rng = Rng::seed_from(32);
-        let reqs: Vec<(RowMatrix, TopKRequest)> = (0..8)
+        let reqs: Vec<(RowMatrix, TopKTicket)> = (0..8)
             .map(|_| {
                 let x = RowMatrix::random_normal(16, 32, &mut rng);
-                let r = svc.submit_async(x.clone(), 4, Mode::EXACT).unwrap();
-                (x, r)
+                let t = svc
+                    .submit_ticket(sreq(x.clone(), 4, Mode::EXACT))
+                    .unwrap();
+                (x, t)
             })
             .collect();
-        for (x, r) in reqs {
-            let res = r.wait().unwrap();
+        for (x, t) in reqs {
+            let res = t.wait().unwrap();
             assert!(is_exact(&x, &res));
         }
         let s = svc.stats();
@@ -321,11 +484,66 @@ mod tests {
     }
 
     #[test]
+    fn wait_timeout_returns_none_then_the_result() {
+        let svc = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 20_000, // 20ms batching wait
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(0x33);
+        let x = RowMatrix::random_normal(8, 32, &mut rng);
+        let ticket = svc.submit_ticket(sreq(x.clone(), 4, Mode::EXACT)).unwrap();
+        // the batch won't flush for ~20ms: an immediate poll times out
+        assert!(ticket.wait_timeout(Duration::from_millis(1)).is_none());
+        match ticket.wait_timeout(Duration::from_secs(10)) {
+            Some(Ok(res)) => assert!(is_exact(&x, &res)),
+            other => {
+                panic!("expected the result, got {:?}", other.map(|r| r.map(|_| ())))
+            }
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_delegate_to_the_typed_path() {
+        let svc = cpu_service(1);
+        let mut rng = Rng::seed_from(0x34);
+        let x = RowMatrix::random_normal(10, 32, &mut rng);
+        let res = svc.submit_as("legacy", x.clone(), 4, None).unwrap();
+        assert!(is_exact(&x, &res));
+        let y = RowMatrix::random_normal(10, 32, &mut rng);
+        let t: TopKRequest = svc.submit_async(y.clone(), 4, Mode::EXACT).unwrap();
+        assert!(is_exact(&y, &t.wait().unwrap()));
+        let z = RowMatrix::random_normal(10, 32, &mut rng);
+        let t = svc
+            .submit_async_as("legacy", z.clone(), 4, Some(Mode::EXACT))
+            .unwrap();
+        assert!(is_exact(&z, &t.wait().unwrap()));
+        let s = svc.stats();
+        assert_eq!(s.requests, 3);
+        let legacy = s.tenants.iter().find(|t| t.tenant == "legacy").unwrap();
+        assert_eq!(legacy.requests, 2, "shims keep tenant attribution");
+    }
+
+    #[test]
     fn rejects_bad_k() {
         let svc = cpu_service(1);
         let x = RowMatrix::zeros(2, 4);
-        assert!(svc.submit_async(x.clone(), 0, Mode::EXACT).is_err());
-        assert!(svc.submit_async(x, 5, Mode::EXACT).is_err());
+        assert!(svc.submit_ticket(sreq(x.clone(), 0, Mode::EXACT)).is_err());
+        assert!(svc.submit_ticket(sreq(x, 5, Mode::EXACT)).is_err());
+    }
+
+    #[test]
+    fn rejects_a_zero_deadline() {
+        let svc = cpu_service(1);
+        let err = svc
+            .submit_ticket(
+                sreq(RowMatrix::zeros(2, 4), 2, Mode::EXACT)
+                    .deadline(Duration::ZERO),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("deadline"), "got: {err:#}");
     }
 
     #[test]
@@ -350,7 +568,10 @@ mod tests {
         assert_eq!(svc.backends().ids(), vec!["cpu".to_string()]);
         let mut rng = Rng::seed_from(36);
         let x = RowMatrix::random_normal(10, 32, &mut rng);
-        assert!(is_exact(&x, &svc.submit(x.clone(), 4, Mode::EXACT).unwrap()));
+        assert!(is_exact(
+            &x,
+            &svc.submit(sreq(x.clone(), 4, Mode::EXACT)).unwrap()
+        ));
     }
 
     #[test]
@@ -359,8 +580,14 @@ mod tests {
         let mut rng = Rng::seed_from(34);
         let a = RowMatrix::random_normal(30, 48, &mut rng);
         let b = RowMatrix::random_normal(30, 96, &mut rng);
-        assert!(is_exact(&a, &svc.submit(a.clone(), 6, Mode::EXACT).unwrap()));
-        assert!(is_exact(&b, &svc.submit(b.clone(), 6, Mode::EXACT).unwrap()));
+        assert!(is_exact(
+            &a,
+            &svc.submit(sreq(a.clone(), 6, Mode::EXACT)).unwrap()
+        ));
+        assert!(is_exact(
+            &b,
+            &svc.submit(sreq(b.clone(), 6, Mode::EXACT)).unwrap()
+        ));
         assert_eq!(svc.planner().cache().len(), 2, "one plan per shape");
     }
 
@@ -380,7 +607,7 @@ mod tests {
         .unwrap();
         let mut rng = Rng::seed_from(35);
         let x = RowMatrix::random_normal(40, 48, &mut rng);
-        let res = svc.submit(x.clone(), 6, Mode::EXACT).unwrap();
+        let res = svc.submit(sreq(x.clone(), 6, Mode::EXACT)).unwrap();
         assert!(is_exact(&x, &res));
         assert_eq!(
             svc.planner().plan(40, 48, 6, Mode::EXACT).algo,
@@ -393,14 +620,14 @@ mod tests {
         let svc = cpu_service(1);
         let mut x = RowMatrix::zeros(4, 8);
         x.data[13] = f32::NAN;
-        let err = svc.submit_async(x, 4, Mode::EXACT).unwrap_err();
+        let err = svc.submit_ticket(sreq(x, 4, Mode::EXACT)).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("non-finite"), "got: {msg}");
         assert!(msg.contains("row 1"), "position is reported, got: {msg}");
         // infinities poison the bracket midpoint the same way
         let mut y = RowMatrix::zeros(4, 8);
         y.data[0] = f32::INFINITY;
-        assert!(svc.submit_async(y, 4, Mode::EXACT).is_err());
+        assert!(svc.submit_ticket(sreq(y, 4, Mode::EXACT)).is_err());
         assert_eq!(svc.stats().requests, 0, "rejected before admission");
         // the knob turns the scan off (expert escape hatch for callers
         // that guarantee finiteness themselves): the NaN matrix is
@@ -422,7 +649,30 @@ mod tests {
         .unwrap();
         let mut z = RowMatrix::zeros(4, 8);
         z.data[5] = f32::NAN;
-        assert!(loose.submit(z, 4, Mode::EXACT).is_ok());
+        assert!(loose.submit(sreq(z, 4, Mode::EXACT)).is_ok());
+        // ...and the per-request policy overrides the service default
+        // in both directions
+        let mut w = RowMatrix::zeros(4, 8);
+        w.data[5] = f32::NAN;
+        assert!(
+            loose
+                .submit_ticket(
+                    sreq(w, 4, Mode::EXACT)
+                        .validation(ValidationPolicy::Strict)
+                )
+                .is_err(),
+            "Strict forces the scan even with validate_inputs = false"
+        );
+        let strict_svc = cpu_service(1);
+        let mut v = RowMatrix::zeros(4, 8);
+        v.data[5] = f32::NAN;
+        let loose_req = SubmitRequest::new(v, 4)
+            .mode(Mode::EXACT)
+            .validation(ValidationPolicy::Skip);
+        assert!(
+            strict_svc.submit_ticket(loose_req).is_ok(),
+            "Skip bypasses the scan even with validate_inputs = true"
+        );
     }
 
     #[test]
@@ -436,6 +686,17 @@ mod tests {
             ..Default::default()
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn bad_over_quota_policy_fails_startup() {
+        let err = TopKService::cpu_only(&ServeConfig {
+            over_quota_policy: "queue".into(),
+            ..Default::default()
+        });
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("over_quota_policy"), "got: {msg}");
+        assert!(msg.contains("queue"), "names the typo: {msg}");
     }
 
     #[test]
@@ -479,20 +740,27 @@ mod tests {
         let mut rng = Rng::seed_from(0x71);
         // a request alone over the row quota is rejected outright
         let big = RowMatrix::random_normal(9, 16, &mut rng);
-        let err = svc.submit_async_as("capped", big, 4, None).unwrap_err();
+        let err = svc
+            .submit_ticket(SubmitRequest::new(big, 4).tenant("capped"))
+            .unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("capped"), "names the tenant: {msg}");
         assert!(msg.contains("max_in_flight_rows"), "names the knob: {msg}");
         // an uncapped tenant with the same load is served
         let ok = RowMatrix::random_normal(9, 16, &mut rng);
-        assert!(is_exact(&ok, &svc.submit_as("free", ok.clone(), 4, None).unwrap()));
+        assert!(is_exact(
+            &ok,
+            &svc.submit(SubmitRequest::new(ok.clone(), 4).tenant("free"))
+                .unwrap()
+        ));
         // quota-fitting requests from the capped tenant are served, and
         // completions release the reservation so traffic keeps flowing
         for _ in 0..5 {
             let x = RowMatrix::random_normal(8, 16, &mut rng);
             assert!(is_exact(
                 &x,
-                &svc.submit_as("capped", x.clone(), 4, None).unwrap()
+                &svc.submit(SubmitRequest::new(x.clone(), 4).tenant("capped"))
+                    .unwrap()
             ));
         }
         let (rows_in_flight, reqs_in_flight) =
@@ -527,7 +795,9 @@ mod tests {
         let x = RowMatrix::random_normal(30, 64, &mut rng);
         // the tenant's omitted-mode submission must match an explicit
         // es4 run bit for bit (early-stop is deterministic)
-        let res = svc.submit_as("approx", x.clone(), 8, None).unwrap();
+        let res = svc
+            .submit(SubmitRequest::new(x.clone(), 8).tenant("approx"))
+            .unwrap();
         let oracle = crate::topk::rowwise::rowwise_topk(
             &x,
             8,
@@ -536,10 +806,18 @@ mod tests {
         assert_eq!(res.values, oracle.values);
         assert_eq!(res.indices, oracle.indices);
         // an explicit mode still wins over the tenant default
-        let exact = svc.submit_as("approx", x.clone(), 8, Some(Mode::EXACT)).unwrap();
+        let exact = svc
+            .submit(
+                SubmitRequest::new(x.clone(), 8)
+                    .tenant("approx")
+                    .mode(Mode::EXACT),
+            )
+            .unwrap();
         assert!(is_exact(&x, &exact));
         // tenants without a default fall back to exact
-        let other = svc.submit_as("plain", x.clone(), 8, None).unwrap();
+        let other = svc
+            .submit(SubmitRequest::new(x.clone(), 8).tenant("plain"))
+            .unwrap();
         assert!(is_exact(&x, &other));
     }
 
@@ -573,8 +851,27 @@ mod tests {
         .unwrap();
         let mut rng = Rng::seed_from(0x73);
         let x = RowMatrix::random_normal(40, 48, &mut rng);
-        let res = svc.submit_as("pinned", x.clone(), 6, Some(Mode::EXACT)).unwrap();
+        let res = svc
+            .submit(
+                SubmitRequest::new(x.clone(), 6)
+                    .tenant("pinned")
+                    .mode(Mode::EXACT),
+            )
+            .unwrap();
         assert!(is_exact(&x, &res), "pin may change speed, never results");
+    }
+
+    #[test]
+    fn priority_rides_the_request_to_the_batcher() {
+        // Smoke: a high-priority request is served normally (the drain
+        // ratio itself is pinned by the batcher's WDRR tests).
+        let svc = cpu_service(1);
+        let mut rng = Rng::seed_from(0x74);
+        let x = RowMatrix::random_normal(12, 32, &mut rng);
+        let res = svc
+            .submit(sreq(x.clone(), 4, Mode::EXACT).priority(Priority::High))
+            .unwrap();
+        assert!(is_exact(&x, &res));
     }
 
     #[test]

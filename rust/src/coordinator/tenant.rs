@@ -13,9 +13,16 @@
 //!   request against the tenant's `max_queue_depth` /
 //!   `max_in_flight_rows` quotas *before* the batcher sees it, and
 //!   rejects over-quota submissions with a positioned error (tenant,
-//!   observed load, limit) instead of letting them queue. Accepted
-//!   work is released by the scheduler when the reply is sent
-//!   ([`TenantDirectory::release`]), so "in flight" spans
+//!   observed load, limit) instead of letting them queue. Cooperative
+//!   tenants can opt into *blocking* admission instead
+//!   ([`TenantDirectory::admit_blocking`], selected per request via
+//!   `OverQuotaPolicy::Block`): the submitting thread parks in a
+//!   per-tenant FIFO — bounded by
+//!   [`TenantDirectory::with_max_blocked_waiters`] — until quota
+//!   frees, the request's deadline expires, or the service shuts down
+//!   ([`TenantDirectory::close`]). Accepted work is released by the
+//!   scheduler when the reply is sent ([`TenantDirectory::release`]),
+//!   which also wakes blocked waiters; "in flight" spans
 //!   submit-to-reply, not just queue residency.
 //!
 //! The third half — *weighted-fair draining* of admitted work — lives
@@ -39,9 +46,10 @@ use crate::config::TenantsConfig;
 use crate::plan::{is_exact_semantics, parse_force, ForceAlgo};
 use crate::topk::rowwise::RowAlgo;
 use crate::topk::types::Mode;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// The tenant every request without an explicit tenant runs under.
 pub const DEFAULT_TENANT: &str = "default";
@@ -130,6 +138,13 @@ struct TenantState {
     in_flight_rows: AtomicUsize,
     /// requests admitted and not yet replied to
     in_flight_requests: AtomicUsize,
+    /// FIFO of blocked cooperative submitters (ticket numbers, front =
+    /// next to admit)
+    blocked: Mutex<VecDeque<u64>>,
+    /// signaled on release / shutdown so blocked submitters recheck
+    freed: Condvar,
+    /// ticket counter behind the blocked FIFO
+    next_ticket: AtomicU64,
 }
 
 impl TenantState {
@@ -138,6 +153,39 @@ impl TenantState {
             spec,
             in_flight_rows: AtomicUsize::new(0),
             in_flight_requests: AtomicUsize::new(0),
+            blocked: Mutex::new(VecDeque::new()),
+            freed: Condvar::new(),
+            next_ticket: AtomicU64::new(0),
+        }
+    }
+}
+
+/// How a blocking admission ([`TenantDirectory::admit_blocking`])
+/// failed — the service maps each kind to the right metric (a timeout
+/// is not a rejection).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitBlockError {
+    /// the request's deadline expired while waiting for quota
+    Timeout(String),
+    /// the directory shut down while waiting
+    Closed(String),
+    /// the per-tenant blocked FIFO is full (bounded cooperation: past
+    /// the cap, blocking degrades to rejection)
+    WaitersFull(String),
+    /// rejected before any waiting was possible (e.g. the ad-hoc
+    /// tenant registry is at capacity) — same taxonomy as a
+    /// non-blocking rejection
+    Rejected(String),
+}
+
+impl AdmitBlockError {
+    /// The positioned message, whatever the kind.
+    pub fn message(&self) -> &str {
+        match self {
+            AdmitBlockError::Timeout(m)
+            | AdmitBlockError::Closed(m)
+            | AdmitBlockError::WaitersFull(m)
+            | AdmitBlockError::Rejected(m) => m,
         }
     }
 }
@@ -147,6 +195,13 @@ impl TenantState {
 /// fresh name per request would grow the directory forever.
 pub const MAX_AD_HOC_TENANTS: usize = 1024;
 
+/// Default cap on blocked cooperative submitters per tenant (the
+/// `[serve] max_blocked_waiters` knob overrides it). Each blocked
+/// waiter is a parked client thread; the bound keeps a stalled tenant
+/// from accumulating unbounded parked threads. One value with
+/// `ServeConfig`'s default, by construction.
+pub const MAX_BLOCKED_WAITERS: usize = crate::config::MAX_BLOCKED_WAITERS;
+
 /// The service's tenant table: specs from config plus ad-hoc tenants
 /// registered on first use (bounded by [`MAX_AD_HOC_TENANTS`]), with
 /// live admission counters.
@@ -155,6 +210,11 @@ pub struct TenantDirectory {
     tenants: RwLock<HashMap<TenantId, Arc<TenantState>>>,
     /// total entries allowed: configured tenants + the ad-hoc budget
     capacity: usize,
+    /// per-tenant cap on blocked cooperative submitters
+    max_blocked_waiters: usize,
+    /// set by [`TenantDirectory::close`]; blocked waiters drain with a
+    /// shutdown error and new blocking admissions refuse immediately
+    closed: AtomicBool,
 }
 
 impl Default for TenantDirectory {
@@ -170,7 +230,17 @@ impl TenantDirectory {
         TenantDirectory {
             tenants: RwLock::new(HashMap::new()),
             capacity: MAX_AD_HOC_TENANTS,
+            max_blocked_waiters: MAX_BLOCKED_WAITERS,
+            closed: AtomicBool::new(false),
         }
+    }
+
+    /// Override the per-tenant blocked-waiter cap (the `[serve]
+    /// max_blocked_waiters` knob; 0 disables blocking admission
+    /// entirely — every `Block` submission degrades to rejection).
+    pub fn with_max_blocked_waiters(mut self, cap: usize) -> TenantDirectory {
+        self.max_blocked_waiters = cap;
+        self
     }
 
     /// Build from the `[tenants]` config tables, validating each
@@ -246,15 +316,8 @@ impl TenantDirectory {
             .clone())
     }
 
-    /// Reserve one request of `rows` rows against the tenant's quotas.
-    /// On success the tenant's in-flight counters include the request
-    /// until [`TenantDirectory::release`] is called; on rejection the
-    /// counters are untouched and the error names the tenant, the
-    /// observed load, and the violated limit. The reserve-check-undo
-    /// sequence can transiently overcount a concurrent submitter by one
-    /// request — quotas are admission backstops, not exact semaphores.
-    pub fn admit(&self, id: &TenantId, rows: usize) -> Result<(), String> {
-        let st = self.state(id)?;
+    /// The quota reserve-check-undo on one tenant's atomic counters.
+    fn try_reserve(st: &TenantState, id: &TenantId, rows: usize) -> Result<(), String> {
         let spec = &st.spec;
         let depth = st.in_flight_requests.fetch_add(1, Ordering::AcqRel) + 1;
         if spec.max_queue_depth > 0 && depth > spec.max_queue_depth {
@@ -284,13 +347,155 @@ impl TenantDirectory {
         Ok(())
     }
 
+    /// Reserve one request of `rows` rows against the tenant's quotas.
+    /// On success the tenant's in-flight counters include the request
+    /// until [`TenantDirectory::release`] is called; on rejection the
+    /// counters are untouched and the error names the tenant, the
+    /// observed load, and the violated limit. The reserve-check-undo
+    /// sequence can transiently overcount a concurrent submitter by one
+    /// request — quotas are admission backstops, not exact semaphores.
+    pub fn admit(&self, id: &TenantId, rows: usize) -> Result<(), String> {
+        let st = self.state(id)?;
+        Self::try_reserve(&st, id, rows)
+    }
+
+    /// Blocking admission for cooperative tenants
+    /// (`OverQuotaPolicy::Block`): instead of rejecting an over-quota
+    /// submission, park the submitting thread in the tenant's FIFO of
+    /// blocked waiters until quota frees. *Blocking* waiters admit
+    /// strictly in arrival order (a Block newcomer never overtakes a
+    /// parked Block waiter, even when quota is momentarily free);
+    /// non-blocking `Reject`-policy admissions stay lock-free and may
+    /// race a parked waiter for freed quota — quotas are backstops,
+    /// not exact semaphores, and the FIFO guarantee is among
+    /// cooperators. Gives up — with the matching [`AdmitBlockError`]
+    /// kind — when `expire_at` passes, the directory
+    /// [closes](TenantDirectory::close), the tenant's blocked FIFO is
+    /// already at the waiter cap, or the request could never fit the
+    /// quota at any load (waiting would hang forever).
+    pub fn admit_blocking(
+        &self,
+        id: &TenantId,
+        rows: usize,
+        expire_at: Option<Instant>,
+    ) -> Result<(), AdmitBlockError> {
+        let st = match self.state(id) {
+            Ok(st) => st,
+            // registry capacity, not a full waiter FIFO — keep the
+            // error kinds truthful
+            Err(e) => return Err(AdmitBlockError::Rejected(e)),
+        };
+        if self.closed.load(Ordering::Acquire) {
+            return Err(AdmitBlockError::Closed(format!(
+                "tenant {:?}: service is shutting down",
+                id.as_str()
+            )));
+        }
+        // an alone-over-quota request can never be admitted however
+        // long it waits — parking it would hang the submitter forever
+        // AND head-of-line block every later cooperator for the tenant
+        let cap = st.spec.max_in_flight_rows;
+        if cap > 0 && rows > cap {
+            return Err(AdmitBlockError::Rejected(format!(
+                "tenant {:?}: request of {rows} rows can never fit \
+                 max_in_flight_rows {cap}; refusing to wait for quota that \
+                 cannot free",
+                id.as_str()
+            )));
+        }
+        let mut q = st.blocked.lock().unwrap();
+        // FIFO: only jump the queue when nobody is parked
+        if q.is_empty() && Self::try_reserve(&st, id, rows).is_ok() {
+            return Ok(());
+        }
+        if q.len() >= self.max_blocked_waiters {
+            return Err(AdmitBlockError::WaitersFull(format!(
+                "tenant {:?} over quota with {} submitters already blocked \
+                 (max_blocked_waiters {}): rejecting instead of parking \
+                 another thread",
+                id.as_str(),
+                q.len(),
+                self.max_blocked_waiters
+            )));
+        }
+        let my = st.next_ticket.fetch_add(1, Ordering::AcqRel);
+        q.push_back(my);
+        loop {
+            if self.closed.load(Ordering::Acquire) {
+                q.retain(|&t| t != my);
+                st.freed.notify_all();
+                return Err(AdmitBlockError::Closed(format!(
+                    "tenant {:?}: service shut down while blocked on quota",
+                    id.as_str()
+                )));
+            }
+            if let Some(at) = expire_at {
+                if Instant::now() >= at {
+                    q.retain(|&t| t != my);
+                    st.freed.notify_all();
+                    return Err(AdmitBlockError::Timeout(format!(
+                        "tenant {:?}: request deadline expired while blocked \
+                         on admission quota (quota never freed in time)",
+                        id.as_str()
+                    )));
+                }
+            }
+            if q.front() == Some(&my)
+                && Self::try_reserve(&st, id, rows).is_ok()
+            {
+                q.pop_front();
+                // the next waiter may also fit (e.g. a large release)
+                st.freed.notify_all();
+                return Ok(());
+            }
+            // bounded wait: re-check periodically so a release whose
+            // notification raced the park (release notifies without
+            // holding this lock) can never strand a waiter
+            let poll = Duration::from_millis(50);
+            let wait = match expire_at {
+                Some(at) => at
+                    .saturating_duration_since(Instant::now())
+                    .min(poll),
+                None => poll,
+            };
+            q = st.freed.wait_timeout(q, wait).unwrap().0;
+        }
+    }
+
+    /// Live blocked-waiter count for a tenant (0 for tenants never
+    /// seen). Reporting / test hook for blocking admission.
+    pub fn blocked_waiters(&self, id: &TenantId) -> usize {
+        match self.tenants.read().unwrap().get(id) {
+            Some(st) => st.blocked.lock().unwrap().len(),
+            None => 0,
+        }
+    }
+
+    /// Shut the directory down: blocked cooperative submitters drain
+    /// with a shutdown error and new blocking admissions refuse
+    /// immediately. Idempotent; non-blocking admission (`admit`) is
+    /// unaffected — the service boundary stops those itself.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        for st in self.tenants.read().unwrap().values() {
+            // acquire the waiter lock so the store above cannot race
+            // into the window between a waiter's check and its park
+            drop(st.blocked.lock().unwrap());
+            st.freed.notify_all();
+        }
+    }
+
     /// Return an admitted request's reservation (called by the
     /// scheduler when the reply is delivered, and by the service when a
-    /// submission fails after admission).
+    /// submission fails after admission). Wakes blocked cooperative
+    /// submitters — the freed quota may admit the front of the FIFO.
     pub fn release(&self, id: &TenantId, rows: usize) {
         if let Some(st) = self.tenants.read().unwrap().get(id) {
             st.in_flight_rows.fetch_sub(rows, Ordering::AcqRel);
             st.in_flight_requests.fetch_sub(1, Ordering::AcqRel);
+            if !st.blocked.lock().unwrap().is_empty() {
+                st.freed.notify_all();
+            }
         }
     }
 
@@ -472,6 +677,148 @@ mod tests {
             .unwrap_err();
         assert!(err.contains("max_inflight_rows"), "names the typo: {err}");
         assert!(err.contains("max_in_flight_rows"), "names the fix: {err}");
+    }
+
+    #[test]
+    fn block_admission_admits_in_fifo_order() {
+        // Two waiters park behind a full quota; releases must admit
+        // them strictly in arrival order, and a newcomer must not
+        // overtake a parked waiter.
+        let d = Arc::new(dir_from("[tenants.coop]\nmax_queue_depth = 1").unwrap());
+        let coop = TenantId::new("coop");
+        d.admit(&coop, 4).unwrap(); // fills the quota
+        let spawn_waiter = |tag: u64| {
+            let d = d.clone();
+            let coop = coop.clone();
+            std::thread::spawn(move || {
+                d.admit_blocking(&coop, 1, None).unwrap();
+                tag
+            })
+        };
+        let w1 = spawn_waiter(1);
+        while d.blocked_waiters(&coop) < 1 {
+            std::thread::yield_now();
+        }
+        let w2 = spawn_waiter(2);
+        while d.blocked_waiters(&coop) < 2 {
+            std::thread::yield_now();
+        }
+        // free one slot: exactly the first waiter admits
+        d.release(&coop, 4);
+        assert_eq!(w1.join().unwrap(), 1);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while d.blocked_waiters(&coop) > 1 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(d.blocked_waiters(&coop), 1, "second waiter still parked");
+        assert_eq!(d.in_flight(&coop), (1, 1));
+        // free again: the second waiter admits
+        d.release(&coop, 1);
+        assert_eq!(w2.join().unwrap(), 2);
+        assert_eq!(d.blocked_waiters(&coop), 0);
+        assert_eq!(d.in_flight(&coop), (1, 1));
+    }
+
+    #[test]
+    fn block_admission_respects_shutdown() {
+        let d = Arc::new(dir_from("[tenants.coop]\nmax_queue_depth = 1").unwrap());
+        let coop = TenantId::new("coop");
+        d.admit(&coop, 1).unwrap();
+        let waiter = {
+            let d = d.clone();
+            let coop = coop.clone();
+            std::thread::spawn(move || d.admit_blocking(&coop, 1, None))
+        };
+        while d.blocked_waiters(&coop) < 1 {
+            std::thread::yield_now();
+        }
+        d.close();
+        match waiter.join().unwrap() {
+            Err(AdmitBlockError::Closed(m)) => {
+                assert!(m.contains("coop"), "names the tenant: {m}")
+            }
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // reservation count untouched by the refused waiter
+        assert_eq!(d.in_flight(&coop), (1, 1));
+        // and new blocking admissions refuse immediately once closed
+        assert!(matches!(
+            d.admit_blocking(&TenantId::new("late"), 1, None),
+            Err(AdmitBlockError::Closed(_))
+        ));
+    }
+
+    #[test]
+    fn block_admission_times_out_at_the_deadline() {
+        let d = dir_from("[tenants.coop]\nmax_queue_depth = 1").unwrap();
+        let coop = TenantId::new("coop");
+        d.admit(&coop, 1).unwrap();
+        let t0 = Instant::now();
+        let err = d
+            .admit_blocking(&coop, 1, Some(t0 + Duration::from_millis(60)))
+            .unwrap_err();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(55),
+            "gave up early: {:?}",
+            t0.elapsed()
+        );
+        match err {
+            AdmitBlockError::Timeout(m) => {
+                assert!(m.contains("deadline"), "got: {m}")
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert_eq!(d.blocked_waiters(&coop), 0, "timed-out waiter left the FIFO");
+        assert_eq!(d.in_flight(&coop), (1, 1), "no reservation leaked");
+    }
+
+    #[test]
+    fn infeasible_block_requests_are_rejected_not_parked_forever() {
+        // A request larger than the row cap can never fit — blocking
+        // on it would hang the submitter and head-of-line block every
+        // later cooperator for the tenant.
+        let d = dir_from("[tenants.tiny]\nmax_in_flight_rows = 8").unwrap();
+        let tiny = TenantId::new("tiny");
+        match d.admit_blocking(&tiny, 9, None) {
+            Err(AdmitBlockError::Rejected(m)) => {
+                assert!(m.contains("never fit"), "got: {m}");
+                assert!(m.contains("max_in_flight_rows"), "names the knob: {m}");
+            }
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(d.blocked_waiters(&tiny), 0, "nothing parked");
+        assert_eq!(d.in_flight(&tiny), (0, 0));
+        // a feasible request still admits normally
+        assert!(d.admit_blocking(&tiny, 8, None).is_ok());
+    }
+
+    #[test]
+    fn blocked_waiters_are_bounded() {
+        let d = Arc::new(
+            dir_from("[tenants.coop]\nmax_queue_depth = 1")
+                .unwrap()
+                .with_max_blocked_waiters(1),
+        );
+        let coop = TenantId::new("coop");
+        d.admit(&coop, 1).unwrap();
+        let waiter = {
+            let d = d.clone();
+            let coop = coop.clone();
+            std::thread::spawn(move || d.admit_blocking(&coop, 1, None))
+        };
+        while d.blocked_waiters(&coop) < 1 {
+            std::thread::yield_now();
+        }
+        // the FIFO is at capacity: the next Block submission degrades
+        // to an immediate rejection instead of parking another thread
+        match d.admit_blocking(&coop, 1, None) {
+            Err(AdmitBlockError::WaitersFull(m)) => {
+                assert!(m.contains("max_blocked_waiters"), "got: {m}")
+            }
+            other => panic!("expected WaitersFull, got {other:?}"),
+        }
+        d.release(&coop, 1);
+        assert!(waiter.join().unwrap().is_ok());
     }
 
     #[test]

@@ -1,0 +1,640 @@
+//! Versioned wire codec: the framed little-endian binary encoding of
+//! [`SubmitRequest`] and [`TopKResult`] — the on-disk / on-socket
+//! contract the future network-ingestion and cross-process-sharding
+//! layers plug into unchanged.
+//!
+//! ## Frame layout (schema v1)
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "RTKF"
+//! 4       2     schema version (u16 LE) — strict: unknown versions are
+//!               rejected with a positioned error, never reinterpreted
+//! 6       1     frame kind (1 = submit request, 2 = top-k result)
+//! 7       1     reserved (must be 0)
+//! 8       8     payload length (u64 LE) — must equal the bytes that
+//!               actually follow the header, exactly
+//! 16      4     payload CRC32 (u32 LE)
+//! 20      4     header CRC32 over bytes 0..20 (u32 LE)
+//! 24      ...   payload
+//! ```
+//!
+//! Both checksums are standard CRC-32 (IEEE 802.3 reflected polynomial
+//! `0xEDB88320`, the same function zlib's `crc32` computes), so any
+//! language can produce and verify frames. Every decode failure carries
+//! the byte offset it was detected at; decode never panics on arbitrary
+//! input — truncations, bit flips, bad enums, and length mismatches are
+//! all positioned [`WireError`]s.
+//!
+//! ## Payloads (all little-endian)
+//!
+//! Submit request (kind 1):
+//!
+//! ```text
+//! u16 tenant_len, tenant bytes (UTF-8)
+//! u32 k
+//! u8  mode tag: 0 = unset (tenant/service default),
+//!               1 = exact (f32 eps_rel follows),
+//!               2 = early-stop (u32 max_iter follows)
+//! u64 deadline_ns (0 = none; a zero deadline is unrepresentable and
+//!                  rejected at encode — the service refuses it anyway)
+//! u8  priority: 0 low, 1 normal, 2 high
+//! u8  validation: 0 inherit, 1 strict, 2 skip
+//! u8  over-quota: 0 service default, 1 reject, 2 block
+//! u32 rows, u32 cols
+//! rows*cols f32 matrix data (row-major)
+//! ```
+//!
+//! Top-k result (kind 2):
+//!
+//! ```text
+//! u32 rows, u32 k
+//! rows*k f32 values
+//! rows*k u32 indices
+//! ```
+//!
+//! Golden fixture frames for schema v1 are committed under
+//! `rust/tests/fixtures/` and byte-pinned by `tests/wire.rs`, so an
+//! accidental encoding change breaks the build instead of silently
+//! breaking every peer.
+
+use crate::coordinator::request::{
+    OverQuotaPolicy, Priority, SubmitRequest, ValidationPolicy,
+};
+use crate::coordinator::tenant::TenantId;
+use crate::topk::types::{Mode, TopKResult};
+use crate::util::matrix::RowMatrix;
+use std::time::Duration;
+
+/// Frame magic: "RTKF" (RTop-K Frame).
+pub const MAGIC: [u8; 4] = *b"RTKF";
+/// The schema version this build speaks. Decoding any other version is
+/// a strict, positioned rejection.
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 24;
+/// Decode guard: frames claiming a payload larger than this are
+/// rejected before any allocation happens.
+pub const MAX_PAYLOAD: u64 = 1 << 32;
+
+const KIND_SUBMIT: u8 = 1;
+const KIND_RESULT: u8 = 2;
+
+/// A positioned decode/encode failure: `offset` is the byte at which
+/// the problem was detected.
+#[derive(Debug, PartialEq, Eq)]
+pub struct WireError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "wire frame error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+fn fail<T>(offset: usize, msg: impl Into<String>) -> Result<T, WireError> {
+    Err(WireError { offset, msg: msg.into() })
+}
+
+/// Byte-at-a-time lookup table for [`crc32`], built at compile time.
+/// Frames carry whole matrices, so the checksum runs over megabytes on
+/// the request path — the table form is ~10x the bitwise loop.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 {
+                (crc >> 1) ^ 0xEDB8_8320
+            } else {
+                crc >> 1
+            };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// Standard CRC-32 (IEEE, reflected, init/xorout `0xFFFFFFFF`) — the
+/// same checksum zlib's `crc32` computes, so non-Rust peers need no
+/// custom code.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ u32::from(b)) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// A decoded frame.
+#[derive(Debug, PartialEq)]
+pub enum Frame {
+    Submit(SubmitRequest),
+    Result(TopKResult),
+}
+
+/// Encode either frame kind. See [`encode_request`] / [`encode_result`]
+/// for the kind-specific entry points.
+pub fn encode(frame: &Frame) -> Result<Vec<u8>, WireError> {
+    match frame {
+        Frame::Submit(req) => encode_request(req),
+        Frame::Result(res) => encode_result(res),
+    }
+}
+
+fn frame_with_payload(kind: u8, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0); // reserved
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&crc32(&payload).to_le_bytes());
+    let header_crc = crc32(&out[..20]);
+    out.extend_from_slice(&header_crc.to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode a [`SubmitRequest`] as a v1 frame. Fails (never panics) on
+/// shapes the format cannot carry: tenant names past `u16::MAX` bytes
+/// or matrix dimensions past `u32::MAX`.
+pub fn encode_request(req: &SubmitRequest) -> Result<Vec<u8>, WireError> {
+    let tenant = req.tenant.as_str().as_bytes();
+    if tenant.len() > u16::MAX as usize {
+        return fail(0, format!("tenant name too long ({} bytes)", tenant.len()));
+    }
+    if req.matrix.rows > u32::MAX as usize
+        || req.matrix.cols > u32::MAX as usize
+        || req.k > u32::MAX as usize
+    {
+        return fail(
+            0,
+            format!(
+                "matrix shape ({} x {}, k={}) exceeds the u32 wire fields",
+                req.matrix.rows, req.matrix.cols, req.k
+            ),
+        );
+    }
+    // exact payload size up front: frames carry whole matrices, and
+    // growing a multi-megabyte Vec by doubling would re-copy the data
+    // several times before the CRC pass even starts
+    let mut p = Vec::with_capacity(
+        2 + tenant.len()
+            + 4
+            + 1
+            + if req.mode.is_some() { 4 } else { 0 }
+            + 8
+            + 3
+            + 8
+            + 4 * req.matrix.data.len(),
+    );
+    p.extend_from_slice(&(tenant.len() as u16).to_le_bytes());
+    p.extend_from_slice(tenant);
+    p.extend_from_slice(&(req.k as u32).to_le_bytes());
+    match req.mode {
+        None => p.push(0),
+        Some(Mode::Exact { eps_rel }) => {
+            p.push(1);
+            p.extend_from_slice(&eps_rel.to_bits().to_le_bytes());
+        }
+        Some(Mode::EarlyStop { max_iter }) => {
+            p.push(2);
+            p.extend_from_slice(&max_iter.to_le_bytes());
+        }
+    }
+    // 0 on the wire means "no deadline", so a zero deadline cannot be
+    // represented — reject it instead of silently aliasing it to None
+    // (the service refuses zero deadlines anyway; a peer must too).
+    // Likewise a deadline past the u64 nanosecond field (> ~584 years)
+    // is rejected rather than silently truncated: encode(decode(x))
+    // must round-trip exactly or fail loudly.
+    let deadline_ns = match req.deadline {
+        None => 0u64,
+        Some(d) if d.is_zero() => {
+            return fail(0, "a zero deadline is not representable on the wire \
+                            (0 encodes \"no deadline\")")
+        }
+        Some(d) => match u64::try_from(d.as_nanos()) {
+            Ok(ns) => ns,
+            Err(_) => {
+                return fail(
+                    0,
+                    format!(
+                        "deadline {d:?} exceeds the u64 nanosecond wire field"
+                    ),
+                )
+            }
+        },
+    };
+    p.extend_from_slice(&deadline_ns.to_le_bytes());
+    p.push(match req.priority {
+        Priority::Low => 0,
+        Priority::Normal => 1,
+        Priority::High => 2,
+    });
+    p.push(match req.validation {
+        ValidationPolicy::Inherit => 0,
+        ValidationPolicy::Strict => 1,
+        ValidationPolicy::Skip => 2,
+    });
+    p.push(match req.over_quota {
+        None => 0,
+        Some(OverQuotaPolicy::Reject) => 1,
+        Some(OverQuotaPolicy::Block) => 2,
+    });
+    p.extend_from_slice(&(req.matrix.rows as u32).to_le_bytes());
+    p.extend_from_slice(&(req.matrix.cols as u32).to_le_bytes());
+    for v in &req.matrix.data {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    Ok(frame_with_payload(KIND_SUBMIT, p))
+}
+
+/// Encode a [`TopKResult`] as a v1 frame.
+pub fn encode_result(res: &TopKResult) -> Result<Vec<u8>, WireError> {
+    if res.rows > u32::MAX as usize || res.k > u32::MAX as usize {
+        return fail(
+            0,
+            format!("result shape ({} rows, k={}) exceeds the u32 wire fields",
+                    res.rows, res.k),
+        );
+    }
+    let mut p =
+        Vec::with_capacity(8 + 4 * res.values.len() + 4 * res.indices.len());
+    p.extend_from_slice(&(res.rows as u32).to_le_bytes());
+    p.extend_from_slice(&(res.k as u32).to_le_bytes());
+    for v in &res.values {
+        p.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for i in &res.indices {
+        p.extend_from_slice(&i.to_le_bytes());
+    }
+    Ok(frame_with_payload(KIND_RESULT, p))
+}
+
+/// Bounds-checked little-endian reader tracking the absolute byte
+/// offset for positioned errors.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Bytes left unread — the allocation bound for shape-sized reads.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return fail(
+                self.pos,
+                format!(
+                    "truncated payload: {what} needs {n} bytes, {} remain",
+                    self.buf.len() - self.pos
+                ),
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, WireError> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, WireError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, WireError> {
+        let s = self.take(8, what)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(s);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32(what)?))
+    }
+}
+
+/// Decode one frame, strictly: the magic, both checksums, the schema
+/// version, every enum tag, and the exact payload length must all
+/// check out, and no trailing bytes may remain. Errors carry the byte
+/// offset the problem was detected at.
+pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
+    if bytes.len() < HEADER_LEN {
+        return fail(
+            bytes.len(),
+            format!("truncated frame: {} bytes < {HEADER_LEN}-byte header",
+                    bytes.len()),
+        );
+    }
+    if bytes[0..4] != MAGIC {
+        return fail(0, format!("bad magic {:02x?} (expected {MAGIC:02x?})",
+                               &bytes[0..4]));
+    }
+    let stored_header_crc = u32::from_le_bytes([
+        bytes[20], bytes[21], bytes[22], bytes[23],
+    ]);
+    let actual_header_crc = crc32(&bytes[..20]);
+    if stored_header_crc != actual_header_crc {
+        return fail(
+            20,
+            format!(
+                "header checksum mismatch: stored {stored_header_crc:#010x}, \
+                 computed {actual_header_crc:#010x}"
+            ),
+        );
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != VERSION {
+        return fail(
+            4,
+            format!(
+                "unsupported schema version {version} (this build speaks \
+                 {VERSION}); refusing to reinterpret a foreign schema"
+            ),
+        );
+    }
+    let kind = bytes[6];
+    if bytes[7] != 0 {
+        return fail(7, format!("reserved byte must be 0, got {}", bytes[7]));
+    }
+    let payload_len = u64::from_le_bytes([
+        bytes[8], bytes[9], bytes[10], bytes[11], bytes[12], bytes[13],
+        bytes[14], bytes[15],
+    ]);
+    if payload_len > MAX_PAYLOAD {
+        return fail(
+            8,
+            format!("payload length {payload_len} exceeds the {MAX_PAYLOAD} cap"),
+        );
+    }
+    let actual_payload = bytes.len() - HEADER_LEN;
+    if payload_len != actual_payload as u64 {
+        return fail(
+            8,
+            format!(
+                "payload length mismatch: header says {payload_len}, frame \
+                 carries {actual_payload} (truncated or trailing bytes)"
+            ),
+        );
+    }
+    let payload = &bytes[HEADER_LEN..];
+    let stored_payload_crc =
+        u32::from_le_bytes([bytes[16], bytes[17], bytes[18], bytes[19]]);
+    let actual_payload_crc = crc32(payload);
+    if stored_payload_crc != actual_payload_crc {
+        return fail(
+            16,
+            format!(
+                "payload checksum mismatch: stored {stored_payload_crc:#010x}, \
+                 computed {actual_payload_crc:#010x}"
+            ),
+        );
+    }
+    // payload errors report absolute frame offsets
+    let mut r = Reader { buf: bytes, pos: HEADER_LEN };
+    let frame = match kind {
+        KIND_SUBMIT => Frame::Submit(decode_submit(&mut r)?),
+        KIND_RESULT => Frame::Result(decode_result(&mut r)?),
+        other => {
+            return fail(6, format!("unknown frame kind {other} (expected 1 | 2)"))
+        }
+    };
+    if r.pos != bytes.len() {
+        return fail(
+            r.pos,
+            format!("{} trailing payload bytes after the frame body",
+                    bytes.len() - r.pos),
+        );
+    }
+    Ok(frame)
+}
+
+fn decode_submit(r: &mut Reader<'_>) -> Result<SubmitRequest, WireError> {
+    let tenant_len = r.u16("tenant length")? as usize;
+    let tenant_pos = r.pos;
+    let tenant_bytes = r.take(tenant_len, "tenant name")?;
+    let tenant = match std::str::from_utf8(tenant_bytes) {
+        Ok(s) => TenantId::new(s),
+        Err(e) => {
+            return fail(
+                tenant_pos + e.valid_up_to(),
+                "tenant name is not valid UTF-8",
+            )
+        }
+    };
+    let k = r.u32("k")? as usize;
+    let mode_pos = r.pos;
+    let mode = match r.u8("mode tag")? {
+        0 => None,
+        1 => {
+            let eps_pos = r.pos;
+            let eps_rel = r.f32("exact eps")?;
+            if !eps_rel.is_finite() {
+                return fail(eps_pos, format!("non-finite exact eps {eps_rel}"));
+            }
+            Some(Mode::Exact { eps_rel })
+        }
+        2 => Some(Mode::EarlyStop { max_iter: r.u32("early-stop max_iter")? }),
+        other => {
+            return fail(
+                mode_pos,
+                format!("unknown mode tag {other} (expected 0 | 1 | 2)"),
+            )
+        }
+    };
+    let deadline_ns = r.u64("deadline")?;
+    let deadline = match deadline_ns {
+        0 => None,
+        ns => Some(Duration::from_nanos(ns)),
+    };
+    let prio_pos = r.pos;
+    let priority = match r.u8("priority")? {
+        0 => Priority::Low,
+        1 => Priority::Normal,
+        2 => Priority::High,
+        other => {
+            return fail(prio_pos, format!("unknown priority tag {other}"))
+        }
+    };
+    let val_pos = r.pos;
+    let validation = match r.u8("validation policy")? {
+        0 => ValidationPolicy::Inherit,
+        1 => ValidationPolicy::Strict,
+        2 => ValidationPolicy::Skip,
+        other => {
+            return fail(val_pos, format!("unknown validation tag {other}"))
+        }
+    };
+    let oq_pos = r.pos;
+    let over_quota = match r.u8("over-quota policy")? {
+        0 => None,
+        1 => Some(OverQuotaPolicy::Reject),
+        2 => Some(OverQuotaPolicy::Block),
+        other => {
+            return fail(oq_pos, format!("unknown over-quota tag {other}"))
+        }
+    };
+    let rows = r.u32("rows")? as usize;
+    let cols = r.u32("cols")? as usize;
+    let cells = match rows.checked_mul(cols) {
+        Some(c) => c,
+        None => return fail(r.pos, format!("rows*cols overflows ({rows} x {cols})")),
+    };
+    // pre-allocate at most what the payload can actually carry: a tiny
+    // frame claiming a huge shape must fail on truncation, not OOM
+    let mut data = Vec::with_capacity(cells.min(r.remaining() / 4));
+    for _ in 0..cells {
+        data.push(r.f32("matrix data")?);
+    }
+    Ok(SubmitRequest {
+        matrix: RowMatrix::from_vec(rows, cols, data),
+        k,
+        mode,
+        tenant,
+        deadline,
+        priority,
+        validation,
+        over_quota,
+    })
+}
+
+fn decode_result(r: &mut Reader<'_>) -> Result<TopKResult, WireError> {
+    let rows = r.u32("rows")? as usize;
+    let k = r.u32("k")? as usize;
+    let cells = match rows.checked_mul(k) {
+        Some(c) => c,
+        None => return fail(r.pos, format!("rows*k overflows ({rows} x {k})")),
+    };
+    // same allocation guard as decode_submit: capacity is bounded by
+    // the bytes actually present, never by the claimed shape
+    let mut values = Vec::with_capacity(cells.min(r.remaining() / 8));
+    for _ in 0..cells {
+        values.push(r.f32("result values")?);
+    }
+    let mut indices = Vec::with_capacity(cells.min(r.remaining() / 4));
+    for _ in 0..cells {
+        indices.push(r.u32("result indices")?);
+    }
+    Ok(TopKResult { rows, k, values, indices })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> SubmitRequest {
+        SubmitRequest::new(
+            RowMatrix::from_vec(2, 3, vec![1.0, -2.5, 0.0, 3.25, -0.125, 8.0]),
+            2,
+        )
+        .mode(Mode::EarlyStop { max_iter: 4 })
+        .tenant("alpha")
+        .deadline(Duration::from_micros(1500))
+        .priority(Priority::High)
+        .validation(ValidationPolicy::Strict)
+        .on_over_quota(OverQuotaPolicy::Block)
+    }
+
+    #[test]
+    fn crc32_matches_the_standard_vectors() {
+        // the canonical IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn submit_roundtrip() {
+        let req = sample_request();
+        let bytes = encode_request(&req).unwrap();
+        assert_eq!(&bytes[0..4], &MAGIC);
+        match decode(&bytes).unwrap() {
+            Frame::Submit(back) => assert_eq!(back, req),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let res = TopKResult {
+            rows: 2,
+            k: 2,
+            values: vec![3.25, 1.0, 8.0, 0.5],
+            indices: vec![3, 0, 1, 2],
+        };
+        let bytes = encode_result(&res).unwrap();
+        match decode(&bytes).unwrap() {
+            Frame::Result(back) => assert_eq!(back, res),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_rejected_with_position() {
+        let mut bytes = encode_request(&sample_request()).unwrap();
+        bytes[4..6].copy_from_slice(&2u16.to_le_bytes());
+        // keep the header checksum valid so the version check itself is
+        // what fires
+        let crc = crc32(&bytes[..20]);
+        bytes[20..24].copy_from_slice(&crc.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert_eq!(err.offset, 4);
+        assert!(err.msg.contains("version 2"), "got: {}", err.msg);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_reject_cleanly() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[0x52]).is_err());
+        assert!(decode(&MAGIC).is_err());
+    }
+
+    #[test]
+    fn zero_deadline_is_rejected_at_encode_not_aliased_to_none() {
+        // 0 ns on the wire means "no deadline"; silently encoding a
+        // zero deadline as None would break the roundtrip property
+        let req = sample_request().deadline(Duration::ZERO);
+        let err = encode_request(&req).unwrap_err();
+        assert!(err.msg.contains("zero deadline"), "got: {err}");
+    }
+
+    #[test]
+    fn huge_claimed_shapes_fail_on_truncation_without_allocating() {
+        // a tiny frame claiming rows=2^31 x cols=2 must die on the
+        // first missing byte, not pre-allocate gigabytes. An empty
+        // matrix puts rows/cols in the last 8 payload bytes.
+        let small = SubmitRequest::new(RowMatrix::zeros(0, 0), 1);
+        let mut bytes = encode_request(&small).unwrap();
+        // patch rows to 2^31 and cols to 2 (last 8 payload bytes),
+        // re-stamp both CRCs so only the truncation check can fire
+        let n = bytes.len();
+        bytes[n - 8..n - 4].copy_from_slice(&(1u32 << 31).to_le_bytes());
+        bytes[n - 4..].copy_from_slice(&2u32.to_le_bytes());
+        let crc = crc32(&bytes[HEADER_LEN..]);
+        bytes[16..20].copy_from_slice(&crc.to_le_bytes());
+        let hcrc = crc32(&bytes[..20]);
+        bytes[20..24].copy_from_slice(&hcrc.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(err.msg.contains("truncated"), "got: {err}");
+    }
+}

@@ -6,7 +6,10 @@ use rtopk::backend::BackendRegistry;
 use rtopk::bench::{parse_mode, workload, Table};
 use rtopk::cli::{App, Args, Command};
 use rtopk::config::{BackendConfig, Config, ServeConfig, TenantConfig};
-use rtopk::coordinator::{TenantId, TopKService, Trainer};
+use rtopk::coordinator::{
+    wire, Priority, SubmitRequest, TenantId, TopKService, Trainer,
+};
+use std::time::Duration;
 use rtopk::plan::{model, Planner, PlannerConfig, RowBucket};
 use rtopk::runtime::executor::Executor;
 use rtopk::stats::expected_iterations;
@@ -77,6 +80,21 @@ fn app() -> App {
                 .opt("k", "32", "k per row")
                 .opt("rows", "10000", "rows to sample")
                 .opt("iters", "2,3,4,5,6,7,8", "max_iter sweep"),
+            Command::new("encode", "write a schema-v1 wire frame (submit request or result)")
+                .opt("out", "request.rtkf", "output frame path")
+                .opt("rows", "4", "matrix rows N")
+                .opt("cols", "16", "row length M")
+                .opt("k", "4", "elements to select per row")
+                .opt("mode", "exact", "exact | es<N> | eps<X>")
+                .opt("tenant", "default", "tenant the request runs as")
+                .opt("deadline-us", "0", "per-request deadline in us (0 = none)")
+                .opt("priority", "normal", "low | normal | high")
+                .opt("seed", "1", "matrix content seed")
+                .switch("result", "encode the computed TopKResult frame instead"),
+            Command::new("decode", "decode and summarize a wire frame file")
+                .opt_req("in", "frame file to decode")
+                .switch("verify", "for submit frames: also run the request \
+                                   and print the result shape"),
             Command::new("info", "show manifest + routing table")
                 .opt("artifacts", "artifacts", "artifacts directory"),
             Command::new("run", "execute one artifact with random inputs and time it")
@@ -104,6 +122,8 @@ fn main() {
                 "plan" => cmd_plan(&args),
                 "stats" => cmd_stats(&args),
                 "analyze" => cmd_analyze(&args),
+                "encode" => cmd_encode(&args),
+                "decode" => cmd_decode(&args),
                 "info" => cmd_info(&args),
                 "run" => cmd_run(&args),
                 _ => unreachable!(),
@@ -207,12 +227,11 @@ fn cmd_serve(a: &Args) -> Result<()> {
     let handles: Vec<_> = (0..requests)
         .map(|i| {
             let x = RowMatrix::random_normal(rows, cols, &mut rng);
-            if demo_tenants.is_empty() {
-                svc.submit_async(x, k, mode)
-            } else {
-                let name = &demo_tenants[i % demo_tenants.len()];
-                svc.submit_async_as(name, x, k, Some(mode))
+            let mut req = SubmitRequest::new(x, k).mode(mode);
+            if !demo_tenants.is_empty() {
+                req = req.tenant(&demo_tenants[i % demo_tenants.len()]);
             }
+            svc.submit_ticket(req)
         })
         .collect::<Result<_>>()?;
     for h in handles {
@@ -234,8 +253,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
     if !s.tenants.is_empty() {
         let mut t = Table::new(
             "per-tenant",
-            &["tenant", "weight", "requests", "rows", "rejected", "errors",
-              "p50 us", "p99 us"],
+            &["tenant", "weight", "requests", "rows", "rejected", "cancelled",
+              "timed out", "errors", "p50 us", "p99 us"],
         );
         for ts in &s.tenants {
             let weight = svc.tenants().weight(&TenantId::new(&ts.tenant));
@@ -245,6 +264,8 @@ fn cmd_serve(a: &Args) -> Result<()> {
                 ts.requests.to_string(),
                 ts.rows.to_string(),
                 ts.rejected.to_string(),
+                ts.cancelled.to_string(),
+                ts.timed_out.to_string(),
                 ts.errors.to_string(),
                 format!("{:.0}", ts.p50_us),
                 format!("{:.0}", ts.p99_us),
@@ -501,6 +522,103 @@ fn cmd_analyze(a: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// Build the demo `SubmitRequest` the `encode` flags describe.
+fn encode_request_from_args(a: &Args) -> Result<SubmitRequest> {
+    let rows: usize = a.req("rows").map_err(anyhow::Error::msg)?;
+    let cols: usize = a.req("cols").map_err(anyhow::Error::msg)?;
+    let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
+    let seed: u64 = a.req("seed").map_err(anyhow::Error::msg)?;
+    let deadline_us: u64 = a.req("deadline-us").map_err(anyhow::Error::msg)?;
+    let mode = parse_mode(a.get("mode").unwrap()).map_err(anyhow::Error::msg)?;
+    let priority = Priority::parse(a.get("priority").unwrap())
+        .map_err(anyhow::Error::msg)?;
+    if k == 0 || k > cols {
+        return Err(anyhow!("k={k} out of range for --cols {cols}"));
+    }
+    let mut rng = Rng::seed_from(seed);
+    let x = RowMatrix::random_normal(rows, cols, &mut rng);
+    let mut req = SubmitRequest::new(x, k)
+        .mode(mode)
+        .tenant(a.get("tenant").unwrap())
+        .priority(priority);
+    if deadline_us > 0 {
+        req = req.deadline(Duration::from_micros(deadline_us));
+    }
+    Ok(req)
+}
+
+fn cmd_encode(a: &Args) -> Result<()> {
+    let out = a.get("out").unwrap();
+    let req = encode_request_from_args(a)?;
+    let (bytes, what) = if a.switch("result") {
+        let mode = req.mode.expect("encode always sets a mode");
+        let res = rowwise_topk(&req.matrix, req.k, mode);
+        (wire::encode(&wire::Frame::Result(res))?, "topk-result")
+    } else {
+        (wire::encode(&wire::Frame::Submit(req))?, "submit-request")
+    };
+    std::fs::write(out, &bytes)?;
+    println!(
+        "wrote {} bytes ({what}, wire schema v{}) to {out}",
+        bytes.len(),
+        wire::VERSION
+    );
+    Ok(())
+}
+
+fn cmd_decode(a: &Args) -> Result<()> {
+    let path = a.get("in").ok_or_else(|| anyhow!("--in required"))?;
+    let bytes = std::fs::read(path)?;
+    match wire::decode(&bytes)? {
+        wire::Frame::Submit(req) => {
+            println!("submit-request frame (wire schema v{})", wire::VERSION);
+            println!("  tenant     {}", req.tenant.as_str());
+            println!("  matrix     {} x {}", req.matrix.rows, req.matrix.cols);
+            println!("  k          {}", req.k);
+            println!(
+                "  mode       {}",
+                req.mode.map(|m| m.tag()).unwrap_or_else(|| "(default)".into())
+            );
+            println!(
+                "  deadline   {}",
+                req.deadline
+                    .map(|d| format!("{} us", d.as_micros()))
+                    .unwrap_or_else(|| "(none)".into())
+            );
+            println!("  priority   {}", req.priority.name());
+            if a.switch("verify") {
+                // the wire layer is structural only: k is an arbitrary
+                // u32 on the wire, so gate it here — a CLI must report,
+                // not panic, on a hostile-but-well-framed payload
+                if req.k == 0 || req.k > req.matrix.cols {
+                    return Err(anyhow!(
+                        "cannot verify: frame carries k={} out of range for \
+                         M={}",
+                        req.k,
+                        req.matrix.cols
+                    ));
+                }
+                let mode = req.mode.unwrap_or(Mode::EXACT);
+                let res = rowwise_topk(&req.matrix, req.k, mode);
+                println!("  verified   -> {} rows x k={}", res.rows, res.k);
+            }
+        }
+        wire::Frame::Result(res) => {
+            println!("topk-result frame (wire schema v{})", wire::VERSION);
+            println!("  rows       {}", res.rows);
+            println!("  k          {}", res.k);
+            if res.rows > 0 {
+                println!(
+                    "  row 0      values {:?} indices {:?}",
+                    res.row_values(0),
+                    res.row_indices(0)
+                );
+            }
+        }
+    }
     Ok(())
 }
 

@@ -30,9 +30,15 @@
 //!     "backend": "cpu", "algo": "rtopk_exact", "grain": 64,
 //!     "probes": [{"kind": "algo", "name": "rtopk_exact",
 //!                 "secs": 1.2e-5, "rows": 64}],
-//!     "runner_up": {"backend": "cpu", "algo": "heap", "grain": 64}}
+//!     "runner_up": {"backend": "cpu", "algo": "heap", "grain": 64},
+//!     "shadow": {"ewma": -0.4, "samples": 5, "demotions": 1}}
 //! ]}
 //! ```
+//!
+//! The optional `shadow` object is the online-demotion evidence
+//! (`plan::ShadowHistory`): present iff the entry's winner was
+//! installed by a shadow re-probe demotion. It is an entry-payload
+//! addition within schema v3 — documents without it load unchanged.
 //!
 //! Rejection rules, in the order the loader applies them (each is
 //! all-or-nothing — a document failing any rule merges zero entries):
@@ -49,7 +55,9 @@
 //!    (`es<N>`, loose-eps exact) with a non-rtopk algorithm — that
 //!    would change the output contract, not just the speed.
 
-use crate::plan::{Plan, PlanSource, ProbeKind, RawProbe, RowBucket, RunnerUp};
+use crate::plan::{
+    Plan, PlanSource, ProbeKind, RawProbe, RowBucket, RunnerUp, ShadowHistory,
+};
 use crate::topk::rowwise::RowAlgo;
 use crate::topk::types::Mode;
 use crate::util::json::{self, Value};
@@ -206,6 +214,17 @@ impl PlanCache {
                     ]),
                     None => Value::Null,
                 };
+                // entry-payload addition (still schema v3): demotion
+                // evidence rides with a shadow-demoted plan so a
+                // restart cannot resurrect the demoted winner blind
+                let shadow = match &plan.shadow {
+                    Some(h) => json::obj(vec![
+                        ("ewma", json::num(h.ewma)),
+                        ("samples", json::num(h.samples as f64)),
+                        ("demotions", json::num(h.demotions as f64)),
+                    ]),
+                    None => Value::Null,
+                };
                 json::obj(vec![
                     ("rows_bucket", json::s(bucket.name())),
                     ("cols", json::num(cols as f64)),
@@ -216,6 +235,7 @@ impl PlanCache {
                     ("grain", json::num(plan.grain as f64)),
                     ("probes", json::arr(probes)),
                     ("runner_up", runner_up),
+                    ("shadow", shadow),
                 ])
             })
             .collect();
@@ -398,6 +418,27 @@ impl PlanCache {
                     })
                 }
             };
+            // optional demotion evidence (entry-payload addition, not
+            // a schema bump: older v3 documents simply carry none)
+            let shadow = match p.get("shadow") {
+                None | Some(Value::Null) => None,
+                Some(sh) => Some(ShadowHistory {
+                    ewma: sh
+                        .get("ewma")
+                        .and_then(Value::as_f64)
+                        .ok_or("bad shadow.ewma")?,
+                    samples: sh
+                        .get("samples")
+                        .and_then(Value::as_usize)
+                        .ok_or("bad shadow.samples")?
+                        as u64,
+                    demotions: sh
+                        .get("demotions")
+                        .and_then(Value::as_usize)
+                        .ok_or("bad shadow.demotions")?
+                        as u32,
+                }),
+            };
             parsed.push((
                 bucket,
                 cols,
@@ -410,6 +451,7 @@ impl PlanCache {
                     source: PlanSource::Cached,
                     probes,
                     runner_up,
+                    shadow,
                 },
             ));
         }
@@ -508,6 +550,7 @@ mod tests {
             source: PlanSource::Calibrated,
             probes: Vec::new(),
             runner_up: None,
+            shadow: None,
         }
     }
 
@@ -535,6 +578,11 @@ mod tests {
                 backend: "cpu".into(),
                 algo: RowAlgo::Heap,
                 grain: 32,
+            }),
+            shadow: Some(ShadowHistory {
+                ewma: -0.375,
+                samples: 6,
+                demotions: 2,
             }),
         }
     }
@@ -580,6 +628,7 @@ mod tests {
                 source: PlanSource::Calibrated,
                 probes: Vec::new(),
                 runner_up: None,
+                shadow: None,
             },
         );
         let text = c.to_json();
@@ -592,6 +641,7 @@ mod tests {
             assert_eq!(q.backend, p.backend);
             assert_eq!(q.probes, p.probes);
             assert_eq!(q.runner_up, p.runner_up);
+            assert_eq!(q.shadow, p.shadow, "demotion history roundtrips");
             assert_eq!(q.source, PlanSource::Cached);
         }
     }
@@ -793,6 +843,7 @@ mod tests {
                 source: PlanSource::Forced,
                 probes: Vec::new(),
                 runner_up: None,
+                shadow: None,
             },
         );
         let d = PlanCache::new();

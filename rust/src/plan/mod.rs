@@ -251,6 +251,23 @@ pub struct RunnerUp {
     pub grain: usize,
 }
 
+/// The shadow re-probe evidence behind a demoted plan, carried on the
+/// plan (and persisted in the v3 cache's entry payload) so a restart
+/// neither resurrects the demoted winner nor forgets why it fell: the
+/// EWMA edge and sample count at demotion time, plus a demotion
+/// counter that keeps accumulating across restarts (a shape demoted on
+/// every boot is a calibration-stability signal worth seeing).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShadowHistory {
+    /// EWMA of `(runner_secs - winner_secs) / winner_secs` at the
+    /// moment the demotion fired (negative: the runner-up was faster)
+    pub ewma: f64,
+    /// shadow samples behind that EWMA
+    pub samples: u64,
+    /// demotions this shape has suffered, across restarts
+    pub demotions: u32,
+}
+
 /// One execution decision for a shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Plan {
@@ -268,6 +285,9 @@ pub struct Plan {
     /// the race's runner-up, if the shape had more than one candidate —
     /// `None` disables shadow re-probing for the shape
     pub runner_up: Option<RunnerUp>,
+    /// shadow-demotion evidence (`Some` iff this plan's winner was
+    /// installed by an online demotion); persisted with the plan
+    pub shadow: Option<ShadowHistory>,
 }
 
 impl Plan {
@@ -446,7 +466,7 @@ pub fn candidates(m: usize, k: usize, mode: Mode) -> Vec<RowAlgo> {
 }
 
 /// Per-shape shadow re-probe state: the EWMA of the winner-vs-runner-up
-/// relative edge, plus the bounded-log counter.
+/// relative edge, plus the bounded-log and demotion counters.
 #[derive(Clone, Copy, Debug, Default)]
 struct ShadowState {
     /// EWMA of `(runner_secs - winner_secs) / winner_secs`; negative
@@ -454,6 +474,9 @@ struct ShadowState {
     ewma: f64,
     samples: u64,
     logged: u32,
+    /// demotions fired for this shape — seeded from a persisted plan's
+    /// [`ShadowHistory`] so the count survives restarts
+    demotions: u32,
 }
 
 type ShapeKey = (RowBucket, usize, usize, String);
@@ -510,6 +533,19 @@ impl Planner {
                 }
             }
         }
+        // re-seed shadow state from persisted demotion history: the
+        // EWMA restarts (post-demotion it watches the other direction
+        // from zero, exactly the in-process reset) but the demotion
+        // counter carries across restarts
+        let mut shadow = BTreeMap::new();
+        for (bucket, cols, k, mode, plan) in cache.snapshot() {
+            if let Some(h) = plan.shadow {
+                shadow.insert(
+                    (bucket, cols, k, mode),
+                    ShadowState { demotions: h.demotions, ..ShadowState::default() },
+                );
+            }
+        }
         Planner {
             cfg,
             backends,
@@ -518,7 +554,7 @@ impl Planner {
             decide_lock: Mutex::new(()),
             probe_log: Mutex::new(Vec::new()),
             shadow_ctr: AtomicU64::new(0),
-            shadow: Mutex::new(BTreeMap::new()),
+            shadow: Mutex::new(shadow),
             shadow_seen: AtomicU64::new(0),
         }
     }
@@ -793,6 +829,7 @@ impl Planner {
                 source: PlanSource::Model,
                 probes: Vec::new(),
                 runner_up,
+                shadow: None,
             };
         }
         // one probe workload — sized for this row bucket — serves the
@@ -861,6 +898,7 @@ impl Planner {
             source: PlanSource::Calibrated,
             probes,
             runner_up,
+            shadow: None,
         }
     }
 
@@ -892,6 +930,7 @@ impl Planner {
                 source: PlanSource::Forced,
                 probes: Vec::new(),
                 runner_up: None,
+                shadow: None,
             };
         }
         let rep_rows = bucket.representative_rows(self.cfg.calib_rows);
@@ -932,6 +971,7 @@ impl Planner {
             source: PlanSource::Forced,
             probes: Vec::new(),
             runner_up: None,
+            shadow: None,
         }
     }
 
@@ -1010,6 +1050,7 @@ impl Planner {
             algo: plan.algo,
             grain: plan.grain,
         };
+        st.demotions += 1;
         let demoted = Plan {
             backend: ru.backend.clone(),
             algo: ru.algo,
@@ -1017,6 +1058,14 @@ impl Planner {
             source: PlanSource::Shadow,
             probes: plan.probes.clone(),
             runner_up: Some(old),
+            // the evidence travels with the plan (and into the
+            // persisted cache): a restart must neither resurrect the
+            // demoted winner nor forget how often this shape flips
+            shadow: Some(ShadowHistory {
+                ewma: st.ewma,
+                samples: st.samples,
+                demotions: st.demotions,
+            }),
         };
         self.cache.insert(bucket, cols, k, &key, demoted);
         let ewma = st.ewma;
@@ -1104,6 +1153,7 @@ mod tests {
             source: PlanSource::Cached,
             probes: Vec::new(),
             runner_up: None,
+            shadow: None,
         }
     }
 
@@ -1405,6 +1455,7 @@ mod tests {
                 source: PlanSource::Cached,
                 probes: Vec::new(),
                 runner_up: None,
+                shadow: None,
             },
         );
         let plan = p.plan(20, 80, 8, Mode::EXACT);
@@ -1504,6 +1555,56 @@ mod tests {
             RowAlgo::Heap,
             "no flapping inside the hysteresis margin"
         );
+    }
+
+    #[test]
+    fn shadow_demotions_persist_with_their_edge_history() {
+        // ROADMAP follow-on: a restart must not resurrect a demoted
+        // winner, and the demotion evidence (edge EWMA, sample count,
+        // demotion counter) must survive the save/load cycle so the
+        // counter keeps accumulating across restarts.
+        let path = std::env::temp_dir().join("rtopk_shadow_persist_test.json");
+        let _ = std::fs::remove_file(&path);
+        let cfg = PlannerConfig {
+            shadow_every: 1,
+            calib_rows: 32,
+            calib_reps: 1,
+            cache_path: Some(path.clone()),
+            ..PlannerConfig::default()
+        };
+        let p = Planner::new(cfg.clone());
+        let mut seeded = bare_plan(RowAlgo::Sort, 16);
+        seeded.runner_up = Some(RunnerUp {
+            backend: CPU_BACKEND_ID.into(),
+            algo: RowAlgo::Heap,
+            grain: 8,
+        });
+        p.cache().insert(RowBucket::Le64, 128, 8, "exact", seeded);
+        for _ in 0..SHADOW_MIN_SAMPLES {
+            p.record_shadow(16, 128, 8, Mode::EXACT, 2.0e-3, 1.0e-3);
+        }
+        let demoted = p.cache().get(RowBucket::Le64, 128, 8, "exact").unwrap();
+        assert_eq!(demoted.algo, RowAlgo::Heap, "premise: demotion fired");
+        let h = demoted.shadow.expect("demoted plan carries its history");
+        assert!(h.ewma < -SHADOW_MARGIN, "edge at demotion: {}", h.ewma);
+        assert_eq!(h.samples, SHADOW_MIN_SAMPLES);
+        assert_eq!(h.demotions, 1);
+        p.save().unwrap();
+
+        // restart: the demoted plan (and its history) load back
+        let q = Planner::new(cfg);
+        let recalled = q.plan(16, 128, 8, Mode::EXACT);
+        assert_eq!(recalled.algo, RowAlgo::Heap, "demoted winner not resurrected");
+        assert_eq!(recalled.shadow, Some(h), "edge history survived the restart");
+        // a second demotion (the edge inverts back) continues the
+        // persisted counter instead of restarting at 1
+        for _ in 0..SHADOW_MIN_SAMPLES {
+            q.record_shadow(16, 128, 8, Mode::EXACT, 2.0e-3, 1.0e-3);
+        }
+        let flipped = q.cache().get(RowBucket::Le64, 128, 8, "exact").unwrap();
+        assert_eq!(flipped.algo, RowAlgo::Sort, "roles swapped again");
+        assert_eq!(flipped.shadow.unwrap().demotions, 2, "counter accumulated");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -36,7 +36,7 @@ impl Mode {
 /// Values are **unsorted** (selection order: threshold survivors by
 /// index, then borderline supplements by index) exactly as the paper
 /// specifies — neural-network consumers never need sorted output.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TopKResult {
     pub rows: usize,
     pub k: usize,

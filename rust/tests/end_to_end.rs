@@ -4,7 +4,7 @@
 //! the test-suite twin of `examples/gnn_training.rs`.
 
 use rtopk::config::{BackendConfig, ServeConfig};
-use rtopk::coordinator::{TopKService, Trainer};
+use rtopk::coordinator::{SubmitRequest, TopKService, Trainer};
 use rtopk::runtime::executor::Executor;
 use rtopk::topk::types::Mode;
 use rtopk::topk::verify::is_exact;
@@ -50,8 +50,12 @@ fn train_then_serve_composes() {
     let mut rng = Rng::seed_from(3);
     let routed = RowMatrix::random_normal(600, 256, &mut rng);
     let fallback = RowMatrix::random_normal(60, 80, &mut rng);
-    let r1 = svc.submit_async(routed.clone(), 32, Mode::EXACT).unwrap();
-    let r2 = svc.submit_async(fallback.clone(), 8, Mode::EXACT).unwrap();
+    let r1 = svc
+        .submit_ticket(SubmitRequest::new(routed.clone(), 32).mode(Mode::EXACT))
+        .unwrap();
+    let r2 = svc
+        .submit_ticket(SubmitRequest::new(fallback.clone(), 8).mode(Mode::EXACT))
+        .unwrap();
     assert!(is_exact(&routed, &r1.wait().unwrap()));
     assert!(is_exact(&fallback, &r2.wait().unwrap()));
     let s = svc.stats();

@@ -101,6 +101,7 @@ fn buckets_of_one_shape_can_hold_different_winners() {
         source: PlanSource::Cached,
         probes: Vec::new(),
         runner_up: None,
+        shadow: None,
     };
     planner
         .cache()

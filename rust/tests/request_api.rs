@@ -1,0 +1,265 @@
+//! Integration: the typed request API end to end — per-request
+//! deadlines answered with positioned timeouts (never stale work),
+//! cancellation releasing admission reservations, blocking over-quota
+//! admission, and per-request validation overrides through a live
+//! service.
+
+use rtopk::config::{ServeConfig, TenantConfig, TenantsConfig};
+use rtopk::coordinator::{
+    OverQuotaPolicy, SubmitRequest, TenantId, TopKService,
+};
+use rtopk::topk::types::Mode;
+use rtopk::topk::verify::is_exact;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn tid(name: &str) -> TenantId {
+    TenantId::new(name)
+}
+
+#[test]
+fn expired_deadline_times_out_before_work_is_dispatched() {
+    // A 1ns deadline is always expired by the time a worker picks the
+    // batch up: the reply must be a positioned timeout error, the
+    // request must never count as served, and the admission
+    // reservation must come back.
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 100,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(0xDead);
+    let x = RowMatrix::random_normal(8, 32, &mut rng);
+    let ticket = svc
+        .submit_ticket(
+            SubmitRequest::new(x, 4)
+                .mode(Mode::EXACT)
+                .deadline(Duration::from_nanos(1)),
+        )
+        .unwrap();
+    let err = ticket.wait().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline exceeded"), "got: {msg}");
+    assert!(msg.contains("default"), "names the tenant: {msg}");
+    let s = svc.stats();
+    assert_eq!(s.timed_out, 1);
+    assert_eq!(s.requests, 0, "stale work must not be served or counted");
+    assert_eq!(s.batches, 0, "nothing was dispatched");
+    assert_eq!(
+        svc.tenants().in_flight(&TenantId::default()),
+        (0, 0),
+        "timeout released the admission reservation"
+    );
+    // a generous deadline on the same service serves normally
+    let y = RowMatrix::random_normal(8, 32, &mut rng);
+    let res = svc
+        .submit(
+            SubmitRequest::new(y.clone(), 4)
+                .mode(Mode::EXACT)
+                .deadline(Duration::from_secs(30)),
+        )
+        .unwrap();
+    assert!(is_exact(&y, &res));
+    assert_eq!(svc.stats().requests, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn cancel_while_queued_releases_the_admission_reservation() {
+    // Long batching wait so the request is reliably still queued when
+    // cancel() lands; the scheduler must then drop it — cancelled
+    // error, reservation back to zero, nothing served.
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 50_000, // 50ms
+        tenants: TenantsConfig {
+            tenants: vec![TenantConfig {
+                max_in_flight_rows: 64,
+                ..TenantConfig::named("coop")
+            }],
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(0xCA);
+    let x = RowMatrix::random_normal(8, 32, &mut rng);
+    let ticket = svc
+        .submit_ticket(
+            SubmitRequest::new(x, 4).mode(Mode::EXACT).tenant("coop"),
+        )
+        .unwrap();
+    assert_eq!(svc.tenants().in_flight(&tid("coop")), (8, 1), "reserved");
+    ticket.cancel();
+    assert!(ticket.is_cancelled());
+    let err = ticket.wait().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("cancelled"), "got: {msg}");
+    assert!(msg.contains("coop"), "names the tenant: {msg}");
+    let s = svc.stats();
+    assert_eq!(s.cancelled, 1);
+    assert_eq!(s.requests, 0, "a cancelled request is not a served request");
+    assert_eq!(
+        svc.tenants().in_flight(&tid("coop")),
+        (0, 0),
+        "cancellation released the reservation"
+    );
+    let coop = s.tenants.iter().find(|t| t.tenant == "coop").unwrap();
+    assert_eq!(coop.cancelled, 1);
+    assert_eq!(coop.max_us, 0.0, "no reservoir entry for a drop");
+    svc.shutdown();
+}
+
+#[test]
+fn block_policy_waits_for_quota_instead_of_rejecting() {
+    // Tenant quota: one request in flight. The first (async) ticket
+    // holds the quota until its ~20ms batch completes; the second
+    // submission uses Block and must park, then serve — zero
+    // rejections.
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 20_000,
+        tenants: TenantsConfig {
+            tenants: vec![TenantConfig {
+                max_queue_depth: 1,
+                ..TenantConfig::named("coop")
+            }],
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(0xB1);
+    let first = RowMatrix::random_normal(8, 32, &mut rng);
+    let second = RowMatrix::random_normal(8, 32, &mut rng);
+    let ticket = svc
+        .submit_ticket(
+            SubmitRequest::new(first.clone(), 4)
+                .mode(Mode::EXACT)
+                .tenant("coop"),
+        )
+        .unwrap();
+    // over quota now — Reject policy proves it...
+    let rejected = svc.submit_ticket(
+        SubmitRequest::new(second.clone(), 4)
+            .mode(Mode::EXACT)
+            .tenant("coop")
+            .on_over_quota(OverQuotaPolicy::Reject),
+    );
+    assert!(rejected.is_err(), "premise: the quota is actually held");
+    // ...while Block parks until the first request's reply frees it
+    let res = svc
+        .submit(
+            SubmitRequest::new(second.clone(), 4)
+                .mode(Mode::EXACT)
+                .tenant("coop")
+                .on_over_quota(OverQuotaPolicy::Block),
+        )
+        .unwrap();
+    assert!(is_exact(&second, &res));
+    assert!(is_exact(&first, &ticket.wait().unwrap()));
+    let s = svc.stats();
+    let coop = s.tenants.iter().find(|t| t.tenant == "coop").unwrap();
+    assert_eq!(coop.requests, 2, "both served");
+    assert_eq!(coop.rejected, 1, "only the explicit Reject probe shed");
+    assert_eq!(svc.tenants().in_flight(&tid("coop")), (0, 0));
+    svc.shutdown();
+}
+
+#[test]
+fn blocked_submission_times_out_at_its_deadline() {
+    // The quota holder never completes (long batching wait), so a
+    // Block submission with a short deadline must give up with a
+    // timeout error — and count as timed out, not rejected.
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 5_000_000, // the holder stays queued for ~5s
+        tenants: TenantsConfig {
+            tenants: vec![TenantConfig {
+                max_queue_depth: 1,
+                ..TenantConfig::named("coop")
+            }],
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(0xB2);
+    let holder = RowMatrix::random_normal(4, 32, &mut rng);
+    let _holder_ticket = svc
+        .submit_ticket(
+            SubmitRequest::new(holder, 2).mode(Mode::EXACT).tenant("coop"),
+        )
+        .unwrap();
+    let t0 = Instant::now();
+    let err = svc
+        .submit(
+            SubmitRequest::new(RowMatrix::zeros(4, 32), 2)
+                .mode(Mode::EXACT)
+                .tenant("coop")
+                .deadline(Duration::from_millis(80))
+                .on_over_quota(OverQuotaPolicy::Block),
+        )
+        .unwrap_err();
+    assert!(
+        t0.elapsed() >= Duration::from_millis(70),
+        "gave up before the deadline: {:?}",
+        t0.elapsed()
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(4),
+        "blocked past the deadline: {:?}",
+        t0.elapsed()
+    );
+    let msg = format!("{err:#}");
+    assert!(msg.contains("deadline"), "got: {msg}");
+    let s = svc.stats();
+    let coop = s.tenants.iter().find(|t| t.tenant == "coop").unwrap();
+    assert_eq!(coop.timed_out, 1, "an admission timeout is a timeout");
+    assert_eq!(coop.rejected, 0, "…not a rejection");
+    assert_eq!(svc.tenants().blocked_waiters(&tid("coop")), 0, "FIFO drained");
+    // shutdown still drains the queued holder cleanly
+    svc.shutdown();
+}
+
+#[test]
+fn service_default_over_quota_policy_comes_from_config() {
+    // over_quota_policy = "block": a request that says nothing about
+    // over-quota behavior parks instead of rejecting.
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 20_000,
+        over_quota_policy: "block".into(),
+        tenants: TenantsConfig {
+            tenants: vec![TenantConfig {
+                max_queue_depth: 1,
+                ..TenantConfig::named("coop")
+            }],
+            ..Default::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(0xB3);
+    let a = RowMatrix::random_normal(8, 32, &mut rng);
+    let b = RowMatrix::random_normal(8, 32, &mut rng);
+    let ticket = svc
+        .submit_ticket(
+            SubmitRequest::new(a.clone(), 4).mode(Mode::EXACT).tenant("coop"),
+        )
+        .unwrap();
+    let res = svc
+        .submit(
+            SubmitRequest::new(b.clone(), 4).mode(Mode::EXACT).tenant("coop"),
+        )
+        .unwrap();
+    assert!(is_exact(&b, &res));
+    assert!(is_exact(&a, &ticket.wait().unwrap()));
+    let s = svc.stats();
+    let coop = s.tenants.iter().find(|t| t.tenant == "coop").unwrap();
+    assert_eq!(coop.rejected, 0, "config default turned shedding into parking");
+    assert_eq!(coop.requests, 2);
+    svc.shutdown();
+}

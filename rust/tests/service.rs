@@ -3,7 +3,7 @@
 //! concurrent load.
 
 use rtopk::config::{BackendConfig, ServeConfig};
-use rtopk::coordinator::TopKService;
+use rtopk::coordinator::{SubmitRequest, TopKService};
 use rtopk::topk::types::Mode;
 use rtopk::topk::verify::{approx_metrics, is_exact};
 use rtopk::util::matrix::RowMatrix;
@@ -49,7 +49,9 @@ fn pjrt_route_serves_exact_topk() {
         .contains(&(256usize, 32usize, "exact".to_string())));
     let mut rng = Rng::seed_from(41);
     let x = RowMatrix::random_normal(1500, 256, &mut rng); // > 1 tile
-    let res = svc.submit(x.clone(), 32, Mode::EXACT).unwrap();
+    let res = svc
+        .submit(SubmitRequest::new(x.clone(), 32).mode(Mode::EXACT))
+        .unwrap();
     assert_eq!(res.rows, 1500);
     assert!(is_exact(&x, &res), "PJRT route returned non-exact top-k");
     let s = svc.stats();
@@ -69,7 +71,12 @@ fn pjrt_and_cpu_routes_agree_exactly() {
     // CPU engine must produce identical approximate selections — the
     // cross-language bit-equality guarantee, end to end through the
     // whole coordinator.
-    let pjrt = svc.submit(x.clone(), 32, Mode::EarlyStop { max_iter: 4 }).unwrap();
+    let pjrt = svc
+        .submit(
+            SubmitRequest::new(x.clone(), 32)
+                .mode(Mode::EarlyStop { max_iter: 4 }),
+        )
+        .unwrap();
     let cpu =
         rtopk::topk::rowwise_topk(&x, 32, Mode::EarlyStop { max_iter: 4 });
     assert_eq!(pjrt.values, cpu.values);
@@ -85,7 +92,9 @@ fn unrouted_shapes_fall_back_to_cpu() {
     let svc = pjrt_service();
     let mut rng = Rng::seed_from(44);
     let x = RowMatrix::random_normal(64, 100, &mut rng); // M=100: no tile
-    let res = svc.submit(x.clone(), 10, Mode::EXACT).unwrap();
+    let res = svc
+        .submit(SubmitRequest::new(x.clone(), 10).mode(Mode::EXACT))
+        .unwrap();
     assert!(is_exact(&x, &res));
     assert!(svc.stats().cpu_batches >= 1);
 }
@@ -105,7 +114,10 @@ fn concurrent_clients_under_load() {
                 for _ in 0..5 {
                     let x = RowMatrix::random_normal(300, 256, &mut rng);
                     let res = svc
-                        .submit(x.clone(), 32, Mode::EarlyStop { max_iter: 8 })
+                        .submit(
+                            SubmitRequest::new(x.clone(), 32)
+                                .mode(Mode::EarlyStop { max_iter: 8 }),
+                        )
                         .unwrap();
                     let m = approx_metrics(&x, &res);
                     assert!(m.hit > 0.9, "hit {}", m.hit);

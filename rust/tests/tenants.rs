@@ -11,7 +11,7 @@
 
 use rtopk::config::{ServeConfig, TenantConfig, TenantsConfig};
 use rtopk::coordinator::batcher::{BatchPolicy, Batcher};
-use rtopk::coordinator::{TenantId, TopKService};
+use rtopk::coordinator::{SubmitRequest, TenantId, TopKService};
 use rtopk::topk::types::Mode;
 use rtopk::topk::verify::is_exact;
 use rtopk::util::matrix::RowMatrix;
@@ -262,7 +262,8 @@ fn service_stress_over_quota_tenant_cannot_perturb_others() {
                     // fire the burst without waiting: tenant c's
                     // in-flight quota (4 requests' worth of rows) must
                     // reject the rest of its burst
-                    match svc.submit_async_as(t, x.clone(), 4, None) {
+                    let req = SubmitRequest::new(x.clone(), 4).tenant(t);
+                    match svc.submit_ticket(req) {
                         Ok(h) => handles.push((x, h)),
                         Err(e) => {
                             let msg = format!("{e:#}");
@@ -347,7 +348,8 @@ fn rejections_never_move_another_tenants_reservoir() {
     let mut rng = Rng::seed_from(0x99);
     for _ in 0..20 {
         let x = RowMatrix::random_normal(16, 32, &mut rng);
-        assert!(is_exact(&x, &svc.submit_as("victim", x.clone(), 4, None).unwrap()));
+        let req = SubmitRequest::new(x.clone(), 4).tenant("victim");
+        assert!(is_exact(&x, &svc.submit(req).unwrap()));
     }
     let before = svc
         .stats()
@@ -357,7 +359,8 @@ fn rejections_never_move_another_tenants_reservoir() {
         .unwrap();
     for _ in 0..500 {
         // every submission exceeds the 2-row quota: dies at admission
-        let err = svc.submit_async_as("noisy", RowMatrix::zeros(4, 16), 2, None);
+        let err = svc
+            .submit_ticket(SubmitRequest::new(RowMatrix::zeros(4, 16), 2).tenant("noisy"));
         assert!(err.is_err(), "4-row request must exceed the 2-row quota");
     }
     let after_stats = svc.stats();

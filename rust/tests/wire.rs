@@ -1,0 +1,233 @@
+//! Wire-codec integration: golden-file byte pinning for schema v1
+//! (committed fixture frames must encode/decode byte-exact, so an
+//! accidental encoding change breaks the build), roundtrip property
+//! tests over randomized frames, and adversarial truncation/corruption
+//! sweeps — decode must reject with a positioned error, never panic.
+
+use rtopk::coordinator::wire::{self, Frame, HEADER_LEN};
+use rtopk::coordinator::{
+    OverQuotaPolicy, Priority, SubmitRequest, ValidationPolicy,
+};
+use rtopk::topk::types::{Mode, TopKResult};
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::time::Duration;
+
+/// The request behind `fixtures/wire_submit_v1.bin` — regenerate the
+/// fixture only for a deliberate, versioned format change.
+fn golden_request() -> SubmitRequest {
+    SubmitRequest::new(
+        RowMatrix::from_vec(
+            2,
+            4,
+            vec![1.0, -2.0, 0.5, 3.25, -0.125, 8.0, -64.0, 0.0],
+        ),
+        3,
+    )
+    .mode(Mode::EarlyStop { max_iter: 4 })
+    .tenant("golden")
+    .deadline(Duration::from_micros(1500))
+    .priority(Priority::High)
+    .validation(ValidationPolicy::Strict)
+    .on_over_quota(OverQuotaPolicy::Block)
+}
+
+/// The result behind `fixtures/wire_result_v1.bin`.
+fn golden_result() -> TopKResult {
+    TopKResult {
+        rows: 2,
+        k: 2,
+        values: vec![3.25, 1.0, 8.0, 0.5],
+        indices: vec![3, 0, 1, 2],
+    }
+}
+
+#[test]
+fn golden_submit_frame_is_byte_exact() {
+    let fixture: &[u8] = include_bytes!("fixtures/wire_submit_v1.bin");
+    let encoded = wire::encode(&Frame::Submit(golden_request())).unwrap();
+    assert_eq!(
+        encoded, fixture,
+        "schema-v1 submit encoding changed; peers speaking v1 would \
+         mis-decode every frame — bump the wire VERSION instead"
+    );
+    match wire::decode(fixture).unwrap() {
+        Frame::Submit(req) => assert_eq!(req, golden_request()),
+        other => panic!("wrong frame kind: {other:?}"),
+    }
+}
+
+#[test]
+fn golden_result_frame_is_byte_exact() {
+    let fixture: &[u8] = include_bytes!("fixtures/wire_result_v1.bin");
+    let encoded = wire::encode(&Frame::Result(golden_result())).unwrap();
+    assert_eq!(
+        encoded, fixture,
+        "schema-v1 result encoding changed; bump the wire VERSION instead"
+    );
+    match wire::decode(fixture).unwrap() {
+        Frame::Result(res) => assert_eq!(res, golden_result()),
+        other => panic!("wrong frame kind: {other:?}"),
+    }
+}
+
+/// A randomized-but-valid request: every enum arm, optional field, and
+/// shape dimension gets exercised across the sweep.
+fn random_request(rng: &mut Rng) -> SubmitRequest {
+    let rows = rng.index(6); // 0-row requests are legal on the wire
+    let cols = 1 + rng.index(8);
+    let mut data = vec![0f32; rows * cols];
+    rng.fill_normal(&mut data);
+    let mut req = SubmitRequest::new(
+        RowMatrix::from_vec(rows, cols, data),
+        1 + rng.index(cols),
+    );
+    match rng.index(3) {
+        0 => {}
+        1 => {
+            req = req.mode(Mode::Exact {
+                eps_rel: rng.uniform_range(1e-8, 1e-2),
+            })
+        }
+        _ => {
+            req = req.mode(Mode::EarlyStop { max_iter: rng.below(9) as u32 })
+        }
+    }
+    let names = ["", "a", "tenant-b", "Ωmega", "x y z"];
+    req = req.tenant(names[rng.index(names.len())]);
+    if rng.chance(0.5) {
+        req = req.deadline(Duration::from_nanos(1 + rng.below(1 << 40)));
+    }
+    req = req.priority(
+        [Priority::Low, Priority::Normal, Priority::High][rng.index(3)],
+    );
+    req = req.validation(
+        [
+            ValidationPolicy::Inherit,
+            ValidationPolicy::Strict,
+            ValidationPolicy::Skip,
+        ][rng.index(3)],
+    );
+    if rng.chance(0.5) {
+        req = req.on_over_quota(
+            [OverQuotaPolicy::Reject, OverQuotaPolicy::Block][rng.index(2)],
+        );
+    }
+    req
+}
+
+#[test]
+fn random_submit_frames_roundtrip() {
+    let mut rng = Rng::seed_from(0xA11CE);
+    for i in 0..200 {
+        let req = random_request(&mut rng);
+        let bytes = wire::encode(&Frame::Submit(req.clone())).unwrap();
+        match wire::decode(&bytes).unwrap() {
+            Frame::Submit(back) => {
+                assert_eq!(back, req, "roundtrip diverged at case {i}")
+            }
+            other => panic!("wrong frame kind: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn random_result_frames_roundtrip() {
+    let mut rng = Rng::seed_from(0xB0B);
+    for i in 0..200 {
+        let rows = rng.index(8);
+        let k = rng.index(5);
+        let mut values = vec![0f32; rows * k];
+        rng.fill_normal(&mut values);
+        let indices: Vec<u32> =
+            (0..rows * k).map(|_| rng.below(1 << 20) as u32).collect();
+        let res = TopKResult { rows, k, values, indices };
+        let bytes = wire::encode(&Frame::Result(res.clone())).unwrap();
+        match wire::decode(&bytes).unwrap() {
+            Frame::Result(back) => {
+                assert_eq!(back, res, "roundtrip diverged at case {i}")
+            }
+            other => panic!("wrong frame kind: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn every_truncation_rejects_with_a_position_and_never_panics() {
+    let frames = [
+        wire::encode(&Frame::Submit(golden_request())).unwrap(),
+        wire::encode(&Frame::Result(golden_result())).unwrap(),
+    ];
+    for bytes in &frames {
+        for len in 0..bytes.len() {
+            let err = wire::decode(&bytes[..len])
+                .expect_err("a truncated frame must never decode");
+            assert!(
+                err.offset <= bytes.len(),
+                "error offset {} points past the frame",
+                err.offset
+            );
+        }
+    }
+}
+
+#[test]
+fn every_single_bit_flip_rejects() {
+    // the checksummed header + payload CRC make any single-bit
+    // corruption detectable; decode must reject every one, not
+    // reinterpret
+    let frames = [
+        wire::encode(&Frame::Submit(golden_request())).unwrap(),
+        wire::encode(&Frame::Result(golden_result())).unwrap(),
+    ];
+    for bytes in &frames {
+        for i in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut flipped = bytes.clone();
+                flipped[i] ^= 1 << bit;
+                assert!(
+                    wire::decode(&flipped).is_err(),
+                    "flip of byte {i} bit {bit} decoded anyway"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn trailing_bytes_reject() {
+    let mut bytes = wire::encode(&Frame::Submit(golden_request())).unwrap();
+    bytes.push(0);
+    let err = wire::decode(&bytes).unwrap_err();
+    assert!(
+        err.msg.contains("mismatch") || err.msg.contains("trailing"),
+        "got: {err}"
+    );
+}
+
+#[test]
+fn foreign_schema_versions_are_strictly_rejected() {
+    // flip the version and re-stamp the header CRC so the version gate
+    // itself (not the checksum) is what rejects
+    for version in [0u16, 2, 7, u16::MAX] {
+        let mut bytes = wire::encode(&Frame::Submit(golden_request())).unwrap();
+        bytes[4..6].copy_from_slice(&version.to_le_bytes());
+        let crc = wire::crc32(&bytes[..20]);
+        bytes[20..24].copy_from_slice(&crc.to_le_bytes());
+        let err = wire::decode(&bytes).unwrap_err();
+        assert_eq!(err.offset, 4, "version errors are positioned");
+        assert!(
+            err.msg.contains(&format!("version {version}")),
+            "names the foreign version: {err}"
+        );
+    }
+}
+
+#[test]
+fn header_len_is_part_of_the_contract() {
+    // the committed fixtures pin this too, but make the constant's
+    // value explicit: changing it is a wire-format break
+    assert_eq!(HEADER_LEN, 24);
+    let bytes = wire::encode(&Frame::Submit(golden_request())).unwrap();
+    assert_eq!(&bytes[0..4], b"RTKF");
+}
