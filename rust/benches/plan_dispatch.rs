@@ -24,7 +24,10 @@
 //! light tenant's, so its percentiles sit correspondingly lower). The
 //! sweep is reported in the JSON document under `"tenants"`; it is
 //! never a pass/fail gate — queue latency on shared runners is too
-//! noisy to enforce ratios.
+//! noisy to enforce ratios. The sweep's final telemetry-hub
+//! LoadSnapshot (queue gauges, service-rate EWMA, rows histogram,
+//! per-tenant in-flight and infeasible counters) is exported under
+//! `"telemetry"` so CI can pin the queryable-metrics schema.
 
 use rtopk::bench::{workload, Table};
 use rtopk::config::{ServeConfig, TenantConfig, TenantsConfig};
@@ -44,8 +47,9 @@ fn median_secs(f: impl FnMut()) -> f64 {
 
 /// Saturate a CPU-only service with equal offered load from three
 /// tenants weighted 4/2/1 and report per-tenant completions and
-/// latency percentiles (printed as a table, returned as JSON values).
-fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
+/// latency percentiles (printed as a table, returned as JSON values)
+/// plus the telemetry hub's full LoadSnapshot taken after the drain.
+fn mixed_tenant_sweep(smoke: bool) -> (Vec<Value>, Value) {
     let weights: [(&str, u64); 3] = [("heavy", 4), ("medium", 2), ("light", 1)];
     let per_tenant: usize = if smoke { 40 } else { 200 };
     let req_rows: usize = if smoke { 32 } else { 64 };
@@ -128,6 +132,7 @@ fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
             ("requests", json::num(t.requests as f64)),
             ("rows", json::num(t.rows as f64)),
             ("rejected", json::num(t.rejected as f64)),
+            ("infeasible", json::num(t.infeasible as f64)),
             ("cancelled", json::num(t.cancelled as f64)),
             ("timed_out", json::num(t.timed_out as f64)),
             ("p50_us", json::num(t.p50_us)),
@@ -135,8 +140,12 @@ fn mixed_tenant_sweep(smoke: bool) -> Vec<Value> {
         ]));
     }
     table.print();
+    // the queryable load view the self-tuning loop consumes — exported
+    // whole so CI can pin its schema (queue gauges, service rate, rows
+    // histogram, per-tenant in-flight/infeasible counters)
+    let telemetry = svc.load_snapshot().to_json();
     svc.shutdown();
-    out
+    (out, telemetry)
 }
 
 fn main() {
@@ -238,7 +247,7 @@ fn main() {
     }
     t.print();
 
-    let tenants = mixed_tenant_sweep(smoke);
+    let (tenants, telemetry) = mixed_tenant_sweep(smoke);
 
     let pass = min_vs_best >= 0.95 && min_vs_worst > 1.1;
     println!(
@@ -266,6 +275,7 @@ fn main() {
         ("smoke", Value::Bool(smoke)),
         ("grid", json::arr(points)),
         ("tenants", json::arr(tenants)),
+        ("telemetry", telemetry),
         (
             "summary",
             json::obj(vec![

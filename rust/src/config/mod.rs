@@ -100,10 +100,12 @@ fn strip_comment(line: &str) -> &str {
 ///   0 runs on the cost-model prior alone.
 /// * `calib_reps` — best-of repetitions per probe.
 /// * `cache_path` — JSON file persisting plans across restarts. Plans
-///   are keyed per row bucket and persisted as schema v3: each entry
+///   are keyed per row bucket and persisted as schema v4: each entry
 ///   carries its `rows_bucket`, the raw probe timings behind the
 ///   decision, and the race's runner-up; the document carries a host
-///   fingerprint and a `created_unix` stamp. Foreign-host, old-schema
+///   fingerprint, a `created_unix` stamp, and the learned row-bucket
+///   boundaries. Schema-v3 documents migrate in place (entries
+///   re-bucketed under the default boundaries); foreign-host, older
 ///   (v1/v2), or expired documents are rejected wholesale and
 ///   re-calibrated.
 /// * `cache_ttl_secs` — persisted-cache expiry in seconds (default one
@@ -115,6 +117,14 @@ fn strip_comment(line: &str) -> &str {
 ///   hysteresis margin is demoted in place. 0 (default) turns the
 ///   mechanism off entirely — dispatch is then exactly the
 ///   pre-shadow path.
+/// * `shadow_every_max` — ceiling the load-adaptive cadence may
+///   stretch `shadow_every` to when telemetry shows deep queues or
+///   near-deadline traffic (0 = 8x the base).
+/// * `shadow_busy_rows` — queued rows at or above which a telemetry
+///   report counts as busy for the cadence loop.
+/// * `bucket_learn_window` — rows samples the service accumulates
+///   between row-bucket boundary relearn attempts (the telemetry
+///   window the quantile split is computed over).
 #[derive(Clone, Debug)]
 pub struct PlanConfig {
     pub force_algo: Option<String>,
@@ -123,6 +133,9 @@ pub struct PlanConfig {
     pub cache_path: Option<String>,
     pub cache_ttl_secs: u64,
     pub shadow_every: usize,
+    pub shadow_every_max: usize,
+    pub shadow_busy_rows: u64,
+    pub bucket_learn_window: usize,
 }
 
 /// Hand-written (not derived): a derived Default would zero
@@ -139,6 +152,9 @@ impl Default for PlanConfig {
             // (this module must stay free of plan-layer dependencies)
             cache_ttl_secs: 7 * 24 * 3600,
             shadow_every: 0,
+            shadow_every_max: 0,
+            shadow_busy_rows: 4096,
+            bucket_learn_window: 1024,
         }
     }
 }
@@ -159,6 +175,10 @@ impl PlanConfig {
                 .map(|s| s.to_string()),
             cache_ttl_secs: c.get_or("plan.cache_ttl_secs", d.cache_ttl_secs),
             shadow_every: c.get_or("plan.shadow_every", d.shadow_every),
+            shadow_every_max: c.get_or("plan.shadow_every_max", d.shadow_every_max),
+            shadow_busy_rows: c.get_or("plan.shadow_busy_rows", d.shadow_busy_rows),
+            bucket_learn_window: c
+                .get_or("plan.bucket_learn_window", d.bucket_learn_window),
         }
     }
 }
@@ -373,6 +393,17 @@ pub struct ServeConfig {
     /// (`OverQuotaPolicy::Block`); 0 turns blocking admission into
     /// rejection
     pub max_blocked_waiters: usize,
+    /// reject deadline'd submissions whose deadline is provably
+    /// unmeetable at enqueue (current backlog at the measured service
+    /// rate plus the request's own cost-model floor already exceeds
+    /// the budget) with an immediate positioned error instead of
+    /// queueing work guaranteed to time out (default on)
+    pub feasibility_admission: bool,
+    /// slack factor for feasibility admission: reject only when the
+    /// predicted completion exceeds `deadline * (1 + margin)` — the
+    /// margin absorbs estimate noise so admission stays a *provably
+    /// unmeetable* test, not a load-shedding heuristic
+    pub feasibility_margin: f64,
     /// adaptive-planner knobs for the CPU engine route
     pub plan: PlanConfig,
     /// execution-backend registration / pinning knobs
@@ -392,6 +423,8 @@ impl Default for ServeConfig {
             validate_inputs: true,
             over_quota_policy: "reject".into(),
             max_blocked_waiters: MAX_BLOCKED_WAITERS,
+            feasibility_admission: true,
+            feasibility_margin: 0.25,
             plan: PlanConfig::default(),
             backend: BackendConfig::default(),
             tenants: TenantsConfig::default(),
@@ -419,6 +452,10 @@ impl ServeConfig {
                 .to_string(),
             max_blocked_waiters: c
                 .get_or("serve.max_blocked_waiters", d.max_blocked_waiters),
+            feasibility_admission: c
+                .get_or("serve.feasibility_admission", d.feasibility_admission),
+            feasibility_margin: c
+                .get_or("serve.feasibility_margin", d.feasibility_margin),
             plan: PlanConfig::from_config(c),
             backend: BackendConfig::from_config(c),
             tenants: TenantsConfig::from_config(c),
@@ -508,7 +545,8 @@ mod tests {
         let c = Config::parse(
             "[plan]\nforce_algo = \"radix\"\ncalib_rows = 64\n\
              cache_path = \"plans.json\"\ncache_ttl_secs = 3600\n\
-             shadow_every = 32",
+             shadow_every = 32\nshadow_every_max = 128\n\
+             shadow_busy_rows = 2048\nbucket_learn_window = 256",
         )
         .unwrap();
         let p = PlanConfig::from_config(&c);
@@ -518,6 +556,9 @@ mod tests {
         assert_eq!(p.cache_path.as_deref(), Some("plans.json"));
         assert_eq!(p.cache_ttl_secs, 3600);
         assert_eq!(p.shadow_every, 32);
+        assert_eq!(p.shadow_every_max, 128);
+        assert_eq!(p.shadow_busy_rows, 2048);
+        assert_eq!(p.bucket_learn_window, 256);
         // empty string means unset
         let c2 = Config::parse("[plan]\nforce_algo = \"\"").unwrap();
         assert!(PlanConfig::from_config(&c2).force_algo.is_none());
@@ -554,6 +595,20 @@ mod tests {
         // the value itself is validated at service startup, not here
         let c3 = Config::parse("[serve]\nover_quota_policy = \"typo\"").unwrap();
         assert_eq!(ServeConfig::from_config(&c3).over_quota_policy, "typo");
+    }
+
+    #[test]
+    fn serve_feasibility_knobs_parse_with_defaults() {
+        let d = ServeConfig::default();
+        assert!(d.feasibility_admission, "feasibility admission defaults on");
+        assert_eq!(d.feasibility_margin, 0.25);
+        let c = Config::parse(
+            "[serve]\nfeasibility_admission = false\nfeasibility_margin = 0.5",
+        )
+        .unwrap();
+        let s = ServeConfig::from_config(&c);
+        assert!(!s.feasibility_admission);
+        assert_eq!(s.feasibility_margin, 0.5);
     }
 
     #[test]

@@ -69,6 +69,7 @@
 //! tenant's deficit resets when its ready queue drains (standard DRR
 //! reset-on-empty).
 
+use crate::coordinator::metrics::{QueueGauges, QueueProbe};
 use crate::coordinator::request::{CancelToken, Priority};
 use crate::coordinator::tenant::TenantId;
 use crate::topk::types::Mode;
@@ -750,11 +751,43 @@ impl<T> Batcher<T> {
         self.inner.lock().unwrap().queued_rows
     }
 
+    /// Point-in-time queue gauges for the telemetry hub: queued rows,
+    /// queued requests, and the tightest remaining end-to-end deadline
+    /// slack among queued requests (`None` when nothing queued carries
+    /// a deadline). Slack is measured against request *expiry*, not
+    /// flush times — flush waits are a few hundred microseconds by
+    /// design, so they would read as "near deadline" whenever anything
+    /// is queued at all. One lock, one queue scan.
+    pub fn queue_gauges(&self) -> QueueGauges {
+        let g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let min_slack_us = g
+            .queue
+            .iter()
+            .filter_map(|p| p.expire_at)
+            .min()
+            .map(|at| at.saturating_duration_since(now).as_micros() as u64);
+        QueueGauges {
+            queued_rows: g.queued_rows as u64,
+            queued_requests: g.queue.len() as u64,
+            min_slack_us,
+        }
+    }
+
     /// Sum of the per-key running row counts — must always reconcile
     /// with [`Batcher::queued_rows`] (and drain to 0 with the queue).
     /// Exposed for invariant checks in tests and debugging.
     pub fn group_rows_outstanding(&self) -> usize {
         self.inner.lock().unwrap().group_rows.values().sum()
+    }
+}
+
+/// The batcher is the service's live queue-gauges source: the hub
+/// registers it at build and feedback consumers (cadence control,
+/// feasibility admission) poll through the hub.
+impl<T: Send> QueueProbe for Batcher<T> {
+    fn queue_gauges(&self) -> QueueGauges {
+        Batcher::queue_gauges(self)
     }
 }
 
@@ -1325,6 +1358,36 @@ mod tests {
             (hi_batches, lo_batches),
             (8, 2),
             "high priority drains 4 of every 5 tiles at equal weight"
+        );
+        b.close();
+    }
+
+    #[test]
+    fn queue_gauges_report_rows_requests_and_deadline_slack() {
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_rows: 1_000_000,
+            max_wait: Duration::from_secs(60),
+            queue_limit: 10_000,
+        });
+        assert_eq!(b.queue_gauges(), QueueGauges::default());
+        assert!(b.submit(dt(), mat(40, 8), 2, Mode::EXACT, 0));
+        let g = b.queue_gauges();
+        assert_eq!(g.queued_rows, 40);
+        assert_eq!(g.queued_requests, 1);
+        assert_eq!(g.min_slack_us, None, "no deadline'd request queued");
+        let urgent = Enqueue {
+            deadline: Some(Duration::from_secs(2)),
+            expire_at: Some(Instant::now() + Duration::from_secs(2)),
+            ..Enqueue::basic(dt(), mat(7, 8), 2, Mode::EXACT)
+        };
+        assert!(b.submit_request(urgent, 1).is_ok());
+        let g = b.queue_gauges();
+        assert_eq!(g.queued_rows, 47);
+        assert_eq!(g.queued_requests, 2);
+        let slack = g.min_slack_us.expect("deadline'd request sets slack");
+        assert!(
+            slack > 1_000_000 && slack <= 2_000_000,
+            "slack should be ~2s, got {slack} us"
         );
         b.close();
     }

@@ -1,6 +1,24 @@
-//! Service metrics: lock-free aggregate counters, per-tenant counter
-//! tables, and mutex-guarded latency reservoirs with percentile
-//! snapshots.
+//! The telemetry hub: lock-free aggregate counters, per-tenant counter
+//! tables, mutex-guarded latency reservoirs — and, since the feedback
+//! refactor, a cheaply-queryable *load* view ([`LoadSnapshot`]) that
+//! closes the serving system's self-tuning loop.
+//!
+//! The hub is written to by every layer (service admission, batcher,
+//! scheduler workers) and read back by the layers that adapt:
+//!
+//! * the scheduler stretches the planner's shadow-reprobe cadence when
+//!   [`TelemetryHub::queue_gauges`] shows deep queues or near-deadline
+//!   traffic;
+//! * the planner re-derives its row-bucket boundaries from the
+//!   [`TelemetryHub::rows_window`] of recently observed request sizes;
+//! * service admission consults [`TelemetryHub::queue_gauges`] plus the
+//!   [`TelemetryHub::ns_per_row`] service-rate estimate to reject
+//!   deadline-infeasible requests at enqueue.
+//!
+//! Counters are *folded*: one [`Counter`] enum and one [`CounterSet`]
+//! per scope (aggregate + per tenant) replace the per-field atomics
+//! that PR 4/5 each grew ad hoc, so a new outcome class (like
+//! [`Counter::Infeasible`]) registers in exactly one place.
 //!
 //! Reservoirs use counter-driven uniform sampling (Vitter's
 //! Algorithm R): once full, observation number `n` replaces a random
@@ -17,19 +35,19 @@
 //! tenant's own table (a smaller [`TENANT_RESERVOIR`] reservoir per
 //! tenant; past [`MAX_TENANT_TABLES`] distinct tenants new names fold
 //! into the shared [`OVERFLOW_TENANT`] entry, so client-chosen names
-//! cannot grow the table forever). Quota rejections, client
-//! cancellations, and deadline timeouts are recorded *only* as
-//! counters (`rejected` / `cancelled` / `timed_out`): none of them is
-//! a served request, so none may touch any latency reservoir — one
-//! tenant shedding, cancelling, or timing out cannot perturb another
-//! tenant's percentiles. Pinned by the isolation tests in
-//! `tests/tenants.rs`.
+//! cannot grow the table forever). Quota rejections, infeasibility
+//! rejections, client cancellations, and deadline timeouts are
+//! recorded *only* as counters: none of them is a served request, so
+//! none may touch any latency reservoir — one tenant shedding,
+//! cancelling, or timing out cannot perturb another tenant's
+//! percentiles. Pinned by the isolation tests in `tests/tenants.rs`.
 
-use crate::coordinator::tenant::TenantId;
+use crate::coordinator::tenant::{TenantDirectory, TenantId};
 use crate::stats::summary::percentile;
+use crate::util::json::{self, Value};
 use crate::util::rng::Rng;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
@@ -51,49 +69,175 @@ pub const MAX_TENANT_TABLES: usize = 4096;
 /// The synthetic tenant name overflow traffic is accounted under.
 pub const OVERFLOW_TENANT: &str = "(overflow)";
 
-/// Shared metrics hub (cheap to clone via Arc by the owner).
+/// Default capacity of the recent-request-rows window feeding the
+/// planner's bucket learning (`[plan] bucket_learn_window` resizes it).
+pub const ROWS_WINDOW_DEFAULT: usize = 1024;
+
+/// Number of log2 buckets in the rows-size histogram (bucket `i`
+/// counts requests with `rows` in `(2^(i-1), 2^i]`; bucket 0 is
+/// rows <= 1). 2^32 rows is far beyond any matrix this crate holds.
+const ROWS_HIST_BUCKETS: usize = 33;
+
+/// EWMA smoothing for the observed per-row service rate: matches the
+/// planner's shadow EWMA so both halves of the loop react at the same
+/// speed.
+const RATE_EWMA_ALPHA: f64 = 0.3;
+
+/// One request/row outcome class. Adding a variant here (and a name in
+/// [`Counter::ALL`]) is the *whole* registration: every scope's table,
+/// snapshot, and JSON view picks it up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Counter {
+    /// served requests
+    Requests,
+    /// served rows
+    Rows,
+    /// failed batches surfaced as request errors
+    Errors,
+    /// submissions rejected by admission control (over quota)
+    Rejected,
+    /// submissions rejected because the deadline was provably
+    /// unmeetable at enqueue (feasibility admission; distinct from
+    /// quota shedding)
+    Infeasible,
+    /// requests dropped because the caller cancelled the ticket
+    Cancelled,
+    /// requests answered with a deadline-timeout error
+    TimedOut,
+}
+
+impl Counter {
+    /// Every counter, in declaration order (the `CounterSet` index).
+    pub const ALL: [Counter; 7] = [
+        Counter::Requests,
+        Counter::Rows,
+        Counter::Errors,
+        Counter::Rejected,
+        Counter::Infeasible,
+        Counter::Cancelled,
+        Counter::TimedOut,
+    ];
+
+    pub const COUNT: usize = Counter::ALL.len();
+}
+
+/// A fixed table of the [`Counter`] classes — the one place counters
+/// for a scope (aggregate or tenant) live.
 #[derive(Debug, Default)]
-pub struct Metrics {
-    pub requests: AtomicU64,
-    pub rows: AtomicU64,
+pub struct CounterSet {
+    vals: [AtomicU64; Counter::COUNT],
+}
+
+impl CounterSet {
+    pub fn add(&self, c: Counter, n: u64) {
+        self.vals[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, c: Counter) -> u64 {
+        self.vals[c as usize].load(Ordering::Relaxed)
+    }
+}
+
+/// Cheap point-in-time queue gauges, read straight off the batcher via
+/// the registered [`QueueProbe`]. This (not a full [`LoadSnapshot`])
+/// is what per-batch consumers poll — no allocation, one lock.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QueueGauges {
+    /// rows sitting in the batcher, admitted but not yet dispatched
+    pub queued_rows: u64,
+    /// requests sitting in the batcher
+    pub queued_requests: u64,
+    /// microseconds until the tightest end-to-end deadline among
+    /// queued requests (`None` when nothing queued carries a
+    /// deadline) — the cadence controller's "near-deadline traffic"
+    /// signal
+    pub min_slack_us: Option<u64>,
+}
+
+/// Source of live queue gauges (implemented by the batcher; tests
+/// inject fakes to create deterministic backlog).
+pub trait QueueProbe: Send + Sync {
+    fn queue_gauges(&self) -> QueueGauges;
+}
+
+/// Shared metrics/telemetry hub (cloned via `Arc` by the owner).
+///
+/// The historical name `Metrics` remains as an alias; existing
+/// `record_*` call sites are unchanged.
+pub struct TelemetryHub {
+    counters: CounterSet,
     pub batches: AtomicU64,
     pub pjrt_batches: AtomicU64,
     pub cpu_batches: AtomicU64,
-    pub errors: AtomicU64,
-    /// requests dropped because the caller cancelled the ticket
-    pub cancelled: AtomicU64,
-    /// requests answered with a deadline-timeout error
-    pub timed_out: AtomicU64,
     /// request latencies in microseconds (bounded uniform reservoir)
     latencies_us: Mutex<Reservoir>,
     /// per-tenant counters and reservoirs, registered on first sight
     tenants: RwLock<HashMap<TenantId, Arc<TenantMetrics>>>,
+    /// recent request row counts (bounded window; quantile source for
+    /// the planner's learned bucket boundaries)
+    rows_window: Mutex<std::collections::VecDeque<u32>>,
+    rows_window_cap: AtomicUsize,
+    /// log2 histogram of request row counts since start
+    rows_hist: [AtomicU64; ROWS_HIST_BUCKETS],
+    /// EWMA of observed batch service time, nanoseconds per row
+    /// (0 = no batch has completed yet)
+    ns_per_row: AtomicU64,
+    /// live queue gauges source (the batcher), registered at service
+    /// build; absent in trainer/bench uses of the hub
+    queue_probe: RwLock<Option<Arc<dyn QueueProbe>>>,
+    /// live per-tenant in-flight gauges source
+    tenant_dir: RwLock<Option<Arc<TenantDirectory>>>,
+}
+
+/// Historical name for [`TelemetryHub`].
+pub type Metrics = TelemetryHub;
+
+// hand-written: the registered probes are plain `dyn` handles with no
+// Debug bound
+impl std::fmt::Debug for TelemetryHub {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetryHub")
+            .field("requests", &self.counters.get(Counter::Requests))
+            .field("rows", &self.counters.get(Counter::Rows))
+            .field("batches", &self.batches)
+            .field("ns_per_row", &self.ns_per_row)
+            .finish_non_exhaustive()
+    }
+}
+
+// hand-written: `[AtomicU64; 33]` is past std's 32-element Default
+// impl cutoff for arrays
+impl Default for TelemetryHub {
+    fn default() -> Self {
+        TelemetryHub {
+            counters: CounterSet::default(),
+            batches: AtomicU64::new(0),
+            pjrt_batches: AtomicU64::new(0),
+            cpu_batches: AtomicU64::new(0),
+            latencies_us: Mutex::new(Reservoir::default()),
+            tenants: RwLock::new(HashMap::new()),
+            rows_window: Mutex::new(std::collections::VecDeque::new()),
+            rows_window_cap: AtomicUsize::new(ROWS_WINDOW_DEFAULT),
+            rows_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            ns_per_row: AtomicU64::new(0),
+            queue_probe: RwLock::new(None),
+            tenant_dir: RwLock::new(None),
+        }
+    }
 }
 
 /// One tenant's counters + latency reservoir.
 #[derive(Debug)]
 struct TenantMetrics {
-    requests: AtomicU64,
-    rows: AtomicU64,
-    errors: AtomicU64,
-    /// submissions rejected by admission control (over quota)
-    rejected: AtomicU64,
-    /// requests dropped because the caller cancelled the ticket
-    cancelled: AtomicU64,
-    /// requests answered with a deadline-timeout error
-    timed_out: AtomicU64,
+    counters: CounterSet,
     latencies_us: Mutex<Reservoir>,
 }
 
 impl TenantMetrics {
     fn new() -> TenantMetrics {
         TenantMetrics {
-            requests: AtomicU64::new(0),
-            rows: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            rejected: AtomicU64::new(0),
-            cancelled: AtomicU64::new(0),
-            timed_out: AtomicU64::new(0),
+            counters: CounterSet::default(),
             latencies_us: Mutex::new(Reservoir::with_cap(
                 TENANT_RESERVOIR,
                 0x7E4A,
@@ -168,6 +312,10 @@ pub struct MetricsSnapshot {
     pub pjrt_batches: u64,
     pub cpu_batches: u64,
     pub errors: u64,
+    /// submissions rejected by admission control (over quota)
+    pub rejected: u64,
+    /// submissions rejected by deadline-feasibility admission
+    pub infeasible: u64,
     /// requests dropped because the caller cancelled the ticket
     pub cancelled: u64,
     /// requests answered with a deadline-timeout error
@@ -189,6 +337,8 @@ pub struct TenantSnapshot {
     pub errors: u64,
     /// submissions rejected by admission control (over quota)
     pub rejected: u64,
+    /// submissions rejected by deadline-feasibility admission
+    pub infeasible: u64,
     /// requests dropped because the caller cancelled the ticket
     pub cancelled: u64,
     /// requests answered with a deadline-timeout error
@@ -199,7 +349,142 @@ pub struct TenantSnapshot {
     pub max_us: f64,
 }
 
-impl Metrics {
+/// One tenant's live-load row in a [`LoadSnapshot`].
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    pub tenant: String,
+    /// rows admitted and not yet replied to
+    pub in_flight_rows: u64,
+    /// requests admitted and not yet replied to
+    pub in_flight_requests: u64,
+    pub rejected: u64,
+    pub infeasible: u64,
+    pub timed_out: u64,
+}
+
+/// One nonzero bucket of the rows-size log2 histogram: `count`
+/// requests carried at most `le` rows (and more than the previous
+/// bucket's `le`).
+#[derive(Clone, Debug)]
+pub struct RowsBucketCount {
+    pub le: u64,
+    pub count: u64,
+}
+
+/// The typed load view every feedback consumer queries — and exactly
+/// what `rtopk stats --load` prints, so operators and tests see what
+/// the loop sees.
+#[derive(Clone, Debug)]
+pub struct LoadSnapshot {
+    /// live batcher gauges (zeros when no probe is registered)
+    pub queue: QueueGauges,
+    /// rows admitted and not yet replied to, summed over tenants
+    pub in_flight_rows: u64,
+    /// requests admitted and not yet replied to, summed over tenants
+    pub in_flight_requests: u64,
+    /// EWMA of observed batch service time, ns/row (0 = no estimate)
+    pub ns_per_row: u64,
+    /// recent-request-rows window: size and quantiles
+    pub rows_window_len: usize,
+    pub rows_p50: u64,
+    pub rows_p90: u64,
+    /// nonzero log2 buckets of the all-time rows histogram
+    pub rows_histogram: Vec<RowsBucketCount>,
+    /// aggregate latency quantiles (microseconds)
+    pub latency_p50_us: f64,
+    pub latency_p95_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_max_us: f64,
+    /// aggregate outcome totals (rates are ratios of these)
+    pub requests_total: u64,
+    pub rejected_total: u64,
+    pub infeasible_total: u64,
+    pub cancelled_total: u64,
+    pub timed_out_total: u64,
+    pub errors_total: u64,
+    /// per-tenant live load + shed counters, sorted by tenant name
+    pub tenants: Vec<TenantLoad>,
+}
+
+impl LoadSnapshot {
+    /// JSON form (the `rtopk stats --load` output and the bench
+    /// document's `telemetry` section — CI pins these keys).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("queued_rows", json::num(self.queue.queued_rows as f64)),
+            (
+                "queued_requests",
+                json::num(self.queue.queued_requests as f64),
+            ),
+            (
+                "min_slack_us",
+                match self.queue.min_slack_us {
+                    Some(us) => json::num(us as f64),
+                    None => Value::Null,
+                },
+            ),
+            ("in_flight_rows", json::num(self.in_flight_rows as f64)),
+            (
+                "in_flight_requests",
+                json::num(self.in_flight_requests as f64),
+            ),
+            ("ns_per_row", json::num(self.ns_per_row as f64)),
+            ("rows_window_len", json::num(self.rows_window_len as f64)),
+            ("rows_p50", json::num(self.rows_p50 as f64)),
+            ("rows_p90", json::num(self.rows_p90 as f64)),
+            (
+                "rows_histogram",
+                json::arr(
+                    self.rows_histogram
+                        .iter()
+                        .map(|b| {
+                            json::obj(vec![
+                                ("le", json::num(b.le as f64)),
+                                ("count", json::num(b.count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("latency_p50_us", json::num(self.latency_p50_us)),
+            ("latency_p95_us", json::num(self.latency_p95_us)),
+            ("latency_p99_us", json::num(self.latency_p99_us)),
+            ("latency_max_us", json::num(self.latency_max_us)),
+            ("requests_total", json::num(self.requests_total as f64)),
+            ("rejected_total", json::num(self.rejected_total as f64)),
+            ("infeasible_total", json::num(self.infeasible_total as f64)),
+            ("cancelled_total", json::num(self.cancelled_total as f64)),
+            ("timed_out_total", json::num(self.timed_out_total as f64)),
+            ("errors_total", json::num(self.errors_total as f64)),
+            (
+                "tenants",
+                json::arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            json::obj(vec![
+                                ("tenant", json::s(&t.tenant)),
+                                (
+                                    "in_flight_rows",
+                                    json::num(t.in_flight_rows as f64),
+                                ),
+                                (
+                                    "in_flight_requests",
+                                    json::num(t.in_flight_requests as f64),
+                                ),
+                                ("rejected", json::num(t.rejected as f64)),
+                                ("infeasible", json::num(t.infeasible as f64)),
+                                ("timed_out", json::num(t.timed_out as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl TelemetryHub {
     /// The tenant's table entry, registered on first sight (read-lock
     /// fast path). Past [`MAX_TENANT_TABLES`] distinct tenants, new
     /// names share the [`OVERFLOW_TENANT`] entry — client-chosen names
@@ -222,10 +507,10 @@ impl Metrics {
 
     /// Record a served request into the aggregate counters/reservoir
     /// only (trainer path; the service path attributes to a tenant via
-    /// [`Metrics::record_request_for`]).
+    /// [`TelemetryHub::record_request_for`]).
     pub fn record_request(&self, rows: usize, latency: Duration) {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.counters.add(Counter::Requests, 1);
+        self.counters.add(Counter::Rows, rows as u64);
         let us = latency.as_micros() as u64;
         self.latencies_us.lock().unwrap().offer(us);
     }
@@ -240,8 +525,8 @@ impl Metrics {
     ) {
         self.record_request(rows, latency);
         let t = self.tenant(tenant);
-        t.requests.fetch_add(1, Ordering::Relaxed);
-        t.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        t.counters.add(Counter::Requests, 1);
+        t.counters.add(Counter::Rows, rows as u64);
         let us = latency.as_micros() as u64;
         t.latencies_us.lock().unwrap().offer(us);
     }
@@ -256,13 +541,13 @@ impl Metrics {
     }
 
     pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.counters.add(Counter::Errors, 1);
     }
 
     /// Record a failed batch against the aggregate and the tenant.
     pub fn record_error_for(&self, tenant: &TenantId) {
         self.record_error();
-        self.tenant(tenant).errors.fetch_add(1, Ordering::Relaxed);
+        self.tenant(tenant).counters.add(Counter::Errors, 1);
     }
 
     /// Record an admission-control rejection. Counters only: a
@@ -270,23 +555,224 @@ impl Metrics {
     /// the quota check, not service time), so shed load cannot skew
     /// any tenant's percentiles.
     pub fn record_rejection(&self, tenant: &TenantId) {
-        self.tenant(tenant).rejected.fetch_add(1, Ordering::Relaxed);
+        self.counters.add(Counter::Rejected, 1);
+        self.tenant(tenant).counters.add(Counter::Rejected, 1);
+    }
+
+    /// Record a deadline-feasibility rejection (the request provably
+    /// could not meet its deadline, so admission answered immediately).
+    /// Distinct from quota shedding; same counters-only contract.
+    pub fn record_infeasible_for(&self, tenant: &TenantId) {
+        self.counters.add(Counter::Infeasible, 1);
+        self.tenant(tenant).counters.add(Counter::Infeasible, 1);
     }
 
     /// Record a client cancellation. Counters only — a cancelled
     /// request was never served, so it carries no service latency and
     /// must not perturb any reservoir.
     pub fn record_cancelled_for(&self, tenant: &TenantId) {
-        self.cancelled.fetch_add(1, Ordering::Relaxed);
-        self.tenant(tenant).cancelled.fetch_add(1, Ordering::Relaxed);
+        self.counters.add(Counter::Cancelled, 1);
+        self.tenant(tenant).counters.add(Counter::Cancelled, 1);
     }
 
     /// Record a deadline timeout (the request was answered with a
     /// positioned timeout error instead of a result). Counters only,
     /// same reservoir-isolation contract as rejections.
     pub fn record_timed_out_for(&self, tenant: &TenantId) {
-        self.timed_out.fetch_add(1, Ordering::Relaxed);
-        self.tenant(tenant).timed_out.fetch_add(1, Ordering::Relaxed);
+        self.counters.add(Counter::TimedOut, 1);
+        self.tenant(tenant).counters.add(Counter::TimedOut, 1);
+    }
+
+    // ------------------------------------------------------ load view
+
+    /// Register the live queue-gauges source (the batcher). Tests
+    /// re-register fakes to inject deterministic backlog.
+    pub fn set_queue_probe(&self, probe: Arc<dyn QueueProbe>) {
+        *self.queue_probe.write().unwrap() = Some(probe);
+    }
+
+    /// Register the tenant directory supplying per-tenant in-flight
+    /// gauges.
+    pub fn set_tenant_directory(&self, dir: Arc<TenantDirectory>) {
+        *self.tenant_dir.write().unwrap() = Some(dir);
+    }
+
+    /// Live queue gauges — the cheap per-batch poll (zeros when no
+    /// probe is registered, e.g. trainer/bench uses of the hub).
+    pub fn queue_gauges(&self) -> QueueGauges {
+        match self.queue_probe.read().unwrap().as_ref() {
+            Some(p) => p.queue_gauges(),
+            None => QueueGauges::default(),
+        }
+    }
+
+    /// Resize the recent-rows window (`[plan] bucket_learn_window`).
+    /// Existing samples beyond the new capacity are dropped oldest
+    /// first.
+    pub fn set_rows_window(&self, cap: usize) {
+        let cap = cap.max(1);
+        self.rows_window_cap.store(cap, Ordering::Relaxed);
+        let mut w = self.rows_window.lock().unwrap();
+        while w.len() > cap {
+            w.pop_front();
+        }
+    }
+
+    /// Observe one admitted request's row count (service submit path).
+    pub fn observe_rows(&self, rows: usize) {
+        let bucket = (usize::BITS - rows.max(1).leading_zeros()) as usize;
+        let bucket = if rows.is_power_of_two() { bucket - 1 } else { bucket };
+        self.rows_hist[bucket.min(ROWS_HIST_BUCKETS - 1)]
+            .fetch_add(1, Ordering::Relaxed);
+        let cap = {
+            let c = self.rows_window_cap.load(Ordering::Relaxed);
+            if c == 0 {
+                ROWS_WINDOW_DEFAULT
+            } else {
+                c
+            }
+        };
+        let mut w = self.rows_window.lock().unwrap();
+        while w.len() >= cap {
+            w.pop_front();
+        }
+        w.push_back(rows.min(u32::MAX as usize) as u32);
+    }
+
+    /// The recent-request-rows window, oldest first (the planner's
+    /// bucket-learning sample).
+    pub fn rows_window(&self) -> Vec<u32> {
+        self.rows_window.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Record one executed batch's service time; feeds the ns/row EWMA
+    /// behind feasibility admission.
+    pub fn record_batch_timing(&self, rows: usize, elapsed: Duration) {
+        if rows == 0 {
+            return;
+        }
+        let obs = elapsed.as_nanos() as f64 / rows as f64;
+        // lock-free EWMA: a lost race between two workers skews one
+        // sample's weight, never the gauge's magnitude
+        let old = self.ns_per_row.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            obs
+        } else {
+            old as f64 * (1.0 - RATE_EWMA_ALPHA) + obs * RATE_EWMA_ALPHA
+        };
+        self.ns_per_row
+            .store((new.max(1.0)) as u64, Ordering::Relaxed);
+    }
+
+    /// EWMA of observed batch service time in nanoseconds per row
+    /// (0 until the first batch completes).
+    pub fn ns_per_row(&self) -> u64 {
+        self.ns_per_row.load(Ordering::Relaxed)
+    }
+
+    /// Assemble the full typed load view. Heavier than
+    /// [`TelemetryHub::queue_gauges`] (sorts tenants, copies the rows
+    /// window) — meant for operators, admission decisions, and tests,
+    /// not per-batch polling.
+    pub fn load_snapshot(&self) -> LoadSnapshot {
+        let queue = self.queue_gauges();
+        let (p50, p95, p99, max) = self.latencies_us.lock().unwrap().stats();
+        let mut window = self.rows_window();
+        window.sort_unstable();
+        let q = |p: f64| -> u64 {
+            if window.is_empty() {
+                0
+            } else {
+                let idx = ((window.len() - 1) as f64 * p / 100.0).round() as usize;
+                window[idx] as u64
+            }
+        };
+        let rows_histogram: Vec<RowsBucketCount> = (0..ROWS_HIST_BUCKETS)
+            .filter_map(|i| {
+                let count = self.rows_hist[i].load(Ordering::Relaxed);
+                if count == 0 {
+                    None
+                } else {
+                    Some(RowsBucketCount { le: 1u64 << i, count })
+                }
+            })
+            .collect();
+        // per-tenant: counters from the hub tables, in-flight gauges
+        // overlaid from the tenant directory
+        let in_flight: HashMap<String, (u64, u64)> = self
+            .tenant_dir
+            .read()
+            .unwrap()
+            .as_ref()
+            .map(|d| {
+                d.all_in_flight()
+                    .into_iter()
+                    .map(|(id, rows, depth)| {
+                        (id.as_str().to_string(), (rows, depth))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut tenants: Vec<TenantLoad> = {
+            let map = self.tenants.read().unwrap();
+            let mut names: std::collections::BTreeSet<String> = map
+                .keys()
+                .map(|id| id.as_str().to_string())
+                .collect();
+            names.extend(in_flight.keys().cloned());
+            names
+                .into_iter()
+                .map(|name| {
+                    let (fr, fd) = in_flight
+                        .get(&name)
+                        .copied()
+                        .unwrap_or((0, 0));
+                    let (rej, inf, to) = map
+                        .get(&TenantId::new(&name))
+                        .map(|t| {
+                            (
+                                t.counters.get(Counter::Rejected),
+                                t.counters.get(Counter::Infeasible),
+                                t.counters.get(Counter::TimedOut),
+                            )
+                        })
+                        .unwrap_or((0, 0, 0));
+                    TenantLoad {
+                        tenant: name,
+                        in_flight_rows: fr,
+                        in_flight_requests: fd,
+                        rejected: rej,
+                        infeasible: inf,
+                        timed_out: to,
+                    }
+                })
+                .collect()
+        };
+        tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        LoadSnapshot {
+            queue,
+            in_flight_rows: tenants.iter().map(|t| t.in_flight_rows).sum(),
+            in_flight_requests: tenants
+                .iter()
+                .map(|t| t.in_flight_requests)
+                .sum(),
+            ns_per_row: self.ns_per_row(),
+            rows_window_len: window.len(),
+            rows_p50: q(50.0),
+            rows_p90: q(90.0),
+            rows_histogram,
+            latency_p50_us: p50,
+            latency_p95_us: p95,
+            latency_p99_us: p99,
+            latency_max_us: max,
+            requests_total: self.counters.get(Counter::Requests),
+            rejected_total: self.counters.get(Counter::Rejected),
+            infeasible_total: self.counters.get(Counter::Infeasible),
+            cancelled_total: self.counters.get(Counter::Cancelled),
+            timed_out_total: self.counters.get(Counter::TimedOut),
+            errors_total: self.counters.get(Counter::Errors),
+            tenants,
+        }
     }
 
     /// Snapshot one tenant's counters and percentiles (`None` if the
@@ -301,12 +787,13 @@ impl Metrics {
             t.latencies_us.lock().unwrap().stats();
         TenantSnapshot {
             tenant: id.as_str().to_string(),
-            requests: t.requests.load(Ordering::Relaxed),
-            rows: t.rows.load(Ordering::Relaxed),
-            errors: t.errors.load(Ordering::Relaxed),
-            rejected: t.rejected.load(Ordering::Relaxed),
-            cancelled: t.cancelled.load(Ordering::Relaxed),
-            timed_out: t.timed_out.load(Ordering::Relaxed),
+            requests: t.counters.get(Counter::Requests),
+            rows: t.counters.get(Counter::Rows),
+            errors: t.counters.get(Counter::Errors),
+            rejected: t.counters.get(Counter::Rejected),
+            infeasible: t.counters.get(Counter::Infeasible),
+            cancelled: t.counters.get(Counter::Cancelled),
+            timed_out: t.counters.get(Counter::TimedOut),
             p50_us,
             p95_us,
             p99_us,
@@ -326,14 +813,16 @@ impl Metrics {
             .collect();
         tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
         MetricsSnapshot {
-            requests: self.requests.load(Ordering::Relaxed),
-            rows: self.rows.load(Ordering::Relaxed),
+            requests: self.counters.get(Counter::Requests),
+            rows: self.counters.get(Counter::Rows),
             batches: self.batches.load(Ordering::Relaxed),
             pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
             cpu_batches: self.cpu_batches.load(Ordering::Relaxed),
-            errors: self.errors.load(Ordering::Relaxed),
-            cancelled: self.cancelled.load(Ordering::Relaxed),
-            timed_out: self.timed_out.load(Ordering::Relaxed),
+            errors: self.counters.get(Counter::Errors),
+            rejected: self.counters.get(Counter::Rejected),
+            infeasible: self.counters.get(Counter::Infeasible),
+            cancelled: self.counters.get(Counter::Cancelled),
+            timed_out: self.counters.get(Counter::TimedOut),
             p50_us,
             p95_us,
             p99_us,
@@ -488,6 +977,31 @@ mod tests {
     }
 
     #[test]
+    fn infeasible_is_a_distinct_counters_only_class() {
+        // feasibility rejections must not mix with quota rejections and
+        // must obey the same reservoir-isolation contract
+        let m = Metrics::default();
+        let t = TenantId::new("rushed");
+        m.record_request_for(&t, 2, Duration::from_micros(11));
+        m.record_infeasible_for(&t);
+        m.record_infeasible_for(&t);
+        m.record_rejection(&t);
+        let s = m.snapshot();
+        assert_eq!(s.infeasible, 2);
+        assert_eq!(s.rejected, 1, "quota and feasibility stay separate");
+        assert_eq!(s.requests, 1);
+        let ts = m.tenant_snapshot(&t).unwrap();
+        assert_eq!(ts.infeasible, 2);
+        assert_eq!(ts.rejected, 1);
+        assert_eq!(ts.max_us, 11.0, "no reservoir contact");
+        let load = m.load_snapshot();
+        assert_eq!(load.infeasible_total, 2);
+        assert_eq!(load.rejected_total, 1);
+        assert_eq!(load.tenants.len(), 1);
+        assert_eq!(load.tenants[0].infeasible, 2);
+    }
+
+    #[test]
     fn tenant_metric_tables_fold_into_overflow_past_the_cap() {
         // client-chosen names must not grow the table forever: past the
         // cap, traffic is still accounted — under the shared overflow
@@ -524,5 +1038,127 @@ mod tests {
         let map = m.tenants.read().unwrap();
         let tm = map.get(&t).unwrap();
         assert!(tm.latencies_us.lock().unwrap().samples.len() <= TENANT_RESERVOIR);
+    }
+
+    // ------------------------------------------------- load-view tests
+
+    struct FakeProbe(QueueGauges);
+    impl QueueProbe for FakeProbe {
+        fn queue_gauges(&self) -> QueueGauges {
+            self.0.clone()
+        }
+    }
+
+    #[test]
+    fn queue_gauges_default_to_zero_without_a_probe() {
+        let m = Metrics::default();
+        assert_eq!(m.queue_gauges(), QueueGauges::default());
+        let snap = m.load_snapshot();
+        assert_eq!(snap.queue.queued_rows, 0);
+        assert_eq!(snap.in_flight_rows, 0);
+    }
+
+    #[test]
+    fn registered_probe_feeds_gauges_and_snapshot() {
+        let m = Metrics::default();
+        m.set_queue_probe(Arc::new(FakeProbe(QueueGauges {
+            queued_rows: 9000,
+            queued_requests: 17,
+            min_slack_us: Some(250),
+        })));
+        let g = m.queue_gauges();
+        assert_eq!(g.queued_rows, 9000);
+        assert_eq!(g.min_slack_us, Some(250));
+        assert_eq!(m.load_snapshot().queue, g);
+    }
+
+    #[test]
+    fn rows_window_is_bounded_and_quantiled() {
+        let m = Metrics::default();
+        m.set_rows_window(8);
+        for r in 1..=20usize {
+            m.observe_rows(r);
+        }
+        let w = m.rows_window();
+        assert_eq!(w.len(), 8, "window keeps the newest cap samples");
+        assert_eq!(w, (13..=20).map(|r| r as u32).collect::<Vec<_>>());
+        let snap = m.load_snapshot();
+        assert_eq!(snap.rows_window_len, 8);
+        assert!(snap.rows_p50 >= 13 && snap.rows_p50 <= 20);
+        assert!(snap.rows_p90 >= snap.rows_p50);
+    }
+
+    #[test]
+    fn rows_histogram_buckets_by_log2() {
+        let m = Metrics::default();
+        m.observe_rows(1); // le=1
+        m.observe_rows(2); // le=2
+        m.observe_rows(3); // le=4
+        m.observe_rows(64); // le=64
+        m.observe_rows(65); // le=128
+        let snap = m.load_snapshot();
+        let get = |le: u64| {
+            snap.rows_histogram
+                .iter()
+                .find(|b| b.le == le)
+                .map(|b| b.count)
+                .unwrap_or(0)
+        };
+        assert_eq!(get(1), 1);
+        assert_eq!(get(2), 1);
+        assert_eq!(get(4), 1);
+        assert_eq!(get(64), 1);
+        assert_eq!(get(128), 1);
+    }
+
+    #[test]
+    fn batch_timing_feeds_the_ns_per_row_ewma() {
+        let m = Metrics::default();
+        assert_eq!(m.ns_per_row(), 0, "no estimate before the first batch");
+        m.record_batch_timing(1000, Duration::from_micros(1000));
+        assert_eq!(m.ns_per_row(), 1000, "first sample is taken verbatim");
+        // a faster batch pulls the EWMA down by alpha
+        m.record_batch_timing(1000, Duration::from_micros(0));
+        let after = m.ns_per_row();
+        assert!(after < 1000 && after >= 600, "ewma moved: {after}");
+        m.record_batch_timing(0, Duration::from_secs(1));
+        assert_eq!(m.ns_per_row(), after, "zero-row batches are ignored");
+    }
+
+    #[test]
+    fn load_snapshot_json_carries_the_pinned_keys() {
+        let m = Metrics::default();
+        m.record_request_for(&TenantId::new("a"), 4, Duration::from_micros(10));
+        m.observe_rows(4);
+        let v = m.load_snapshot().to_json();
+        for key in [
+            "queued_rows",
+            "queued_requests",
+            "min_slack_us",
+            "in_flight_rows",
+            "in_flight_requests",
+            "ns_per_row",
+            "rows_window_len",
+            "rows_p50",
+            "rows_p90",
+            "rows_histogram",
+            "latency_p50_us",
+            "latency_p95_us",
+            "latency_p99_us",
+            "latency_max_us",
+            "requests_total",
+            "rejected_total",
+            "infeasible_total",
+            "cancelled_total",
+            "timed_out_total",
+            "errors_total",
+            "tenants",
+        ] {
+            assert!(v.get(key).is_some(), "snapshot JSON missing {key}");
+        }
+        let tenants = v.get("tenants").unwrap().as_array().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("tenant").unwrap().as_str(), Some("a"));
+        assert!(tenants[0].get("infeasible").is_some());
     }
 }

@@ -62,7 +62,9 @@ pub mod tenant;
 pub mod trainer;
 pub mod wire;
 
-pub use metrics::Metrics;
+pub use metrics::{
+    LoadSnapshot, Metrics, QueueGauges, QueueProbe, TelemetryHub,
+};
 pub use request::{
     CancelToken, OverQuotaPolicy, Priority, SubmitRequest, TopKTicket,
     ValidationPolicy,

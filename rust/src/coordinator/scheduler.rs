@@ -41,6 +41,16 @@
 //! (its timing measures the failure, not the winner). `shadow_every =
 //! 0` skips all of this: the dispatch path is then exactly the
 //! pre-shadow code.
+//!
+//! Telemetry feedback: every executed batch feeds the hub's ns-per-row
+//! service-rate EWMA (`Metrics::record_batch_timing` — the estimate
+//! behind deadline-feasibility admission) and reports the live queue
+//! gauges to the planner's shadow-cadence controller
+//! (`Planner::note_load` — deep queues or near-deadline traffic
+//! stretch the re-probe cadence, idle restores it). Every
+//! [`RELEARN_EVERY`] batches the planner re-derives its row-bucket
+//! boundaries from the hub's recent-request-rows window
+//! (`Planner::relearn_buckets`).
 
 use crate::backend::{
     registry::QUARANTINE_AFTER, BackendRegistry, CPU_BACKEND_ID,
@@ -53,10 +63,17 @@ use crate::topk::rowwise::rowwise_topk;
 use crate::topk::types::TopKResult;
 use crate::util::matrix::RowMatrix;
 use anyhow::{anyhow, Result};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Re-derive the planner's row-bucket boundaries from the telemetry
+/// hub's rows window once per this many executed batches. Cheap
+/// (sort of a bounded window) but not free, and the boundaries only
+/// drift on workload shifts — no reason to pay it per batch.
+pub const RELEARN_EVERY: u64 = 64;
 
 /// Reply slot carried through the batcher.
 pub type Reply = mpsc::Sender<Result<TopKResult>>;
@@ -249,6 +266,7 @@ pub fn run_batch(
         } else {
             None
         };
+    let exec_t0 = Instant::now();
     let mut outcome = backend.execute(&spec, &mats, k, mode);
     let winner_secs = shadow_t0.map(|t| t.elapsed().as_secs_f64());
     let mut fell_back = false;
@@ -282,6 +300,10 @@ pub fn run_batch(
     } else if via_accel {
         backends.note_success(backend.id());
     }
+    // captured before any shadow re-execute: the service-rate estimate
+    // must measure what it took to serve the batch (fallback attempts
+    // included), not the optional runner-up probe on top
+    let exec_elapsed = exec_t0.elapsed();
     // the shadow run needs the live matrices, so it happens before the
     // results scatter consumes the batch; a fallen-back batch is not a
     // valid winner sample
@@ -293,6 +315,18 @@ pub fn run_batch(
     }
     drop(mats);
     metrics.record_batch(via_accel);
+    if outcome.is_ok() {
+        metrics.record_batch_timing(total_rows, exec_elapsed);
+    }
+    // close the feedback loop once per batch: feed the live queue
+    // gauges to the planner's shadow-cadence controller, and
+    // periodically re-derive the row-bucket boundaries from the
+    // observed request-size window
+    let gauges = metrics.queue_gauges();
+    planner.note_load(gauges.queued_rows, gauges.min_slack_us);
+    if metrics.batches.load(Ordering::Relaxed) % RELEARN_EVERY == 0 {
+        planner.relearn_buckets(&metrics.rows_window());
+    }
     match outcome {
         Ok(results) => {
             for (item, res) in live.into_iter().zip(results) {
@@ -445,6 +479,10 @@ mod tests {
         assert_eq!(s.rows, 120);
         assert!(s.batches >= 1);
         assert_eq!(s.errors, 0);
+        assert!(
+            metrics.ns_per_row() > 0,
+            "served batches must feed the service-rate EWMA"
+        );
         // default config: shadow_every = 0 — dispatch must never have
         // taken a shadow sample
         assert_eq!(planner.shadow_observations(), 0);

@@ -45,7 +45,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::batcher::{
     BatchPolicy, Batcher, Enqueue, SubmitRefusal,
 };
-use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
+use crate::coordinator::metrics::{LoadSnapshot, Metrics, MetricsSnapshot};
 use crate::coordinator::request::{
     CancelToken, OverQuotaPolicy, SubmitRequest, TopKTicket, ValidationPolicy,
 };
@@ -83,6 +83,12 @@ pub struct TopKService {
     /// over-quota behavior for requests that do not choose one
     /// (`[serve] over_quota_policy`, default reject)
     default_over_quota: OverQuotaPolicy,
+    /// reject provably-unmeetable deadlines at enqueue (`[serve]
+    /// feasibility_admission`, default on)
+    feasibility_admission: bool,
+    /// slack factor on the feasibility prediction (`[serve]
+    /// feasibility_margin`)
+    feasibility_margin: f64,
     /// shared ticket cancel-hook: evicts cancelled requests from the
     /// batcher queue so a cancel frees quota and queue space
     /// immediately. Built once (it captures no per-request state) and
@@ -147,6 +153,13 @@ impl TopKService {
             tenants.batch_weights(),
         ));
         let metrics = Arc::new(Metrics::default());
+        // wire the telemetry hub's live-load sources: the batcher is
+        // the queue-gauges probe, the tenant directory supplies
+        // per-tenant in-flight gauges, and the rows window is sized to
+        // the planner's bucket-learning knob
+        metrics.set_queue_probe(batcher.clone());
+        metrics.set_tenant_directory(tenants.clone());
+        metrics.set_rows_window(cfg.plan.bucket_learn_window);
         let mut planner_cfg = PlannerConfig::from_plan_config(&cfg.plan)
             .map_err(anyhow::Error::msg)?;
         planner_cfg.force_backend = cfg.backend.force.clone();
@@ -184,6 +197,8 @@ impl TopKService {
             workers,
             validate_inputs: cfg.validate_inputs,
             default_over_quota,
+            feasibility_admission: cfg.feasibility_admission,
+            feasibility_margin: cfg.feasibility_margin,
             cancel_hook,
             _executor: executor,
         })
@@ -214,7 +229,13 @@ impl TopKService {
     /// to end — batching is capped at `min(max_wait, remaining/2)`,
     /// and a request that cannot be dispatched (or delivered) in time
     /// is answered with a positioned timeout error, counted in
-    /// `timed_out`.
+    /// `timed_out`. When `[serve] feasibility_admission` is on
+    /// (default), a deadline the service provably cannot meet — current
+    /// backlog at the measured service rate plus this request's own
+    /// rows at the cost model's optimistic floor already exceed the
+    /// budget — is refused at enqueue with an `infeasible` error,
+    /// counted separately from quota rejections, before any quota is
+    /// reserved or queue space consumed.
     pub fn submit_ticket(&self, req: SubmitRequest) -> Result<TopKTicket> {
         let submitted = Instant::now();
         let SubmitRequest {
@@ -261,6 +282,44 @@ impl TopKService {
         }
         let rows = matrix.rows;
         let expire_at = deadline.map(|d| submitted + d);
+        // deadline-feasibility admission: refuse a deadline the service
+        // provably cannot meet *before* any quota is reserved or queue
+        // space consumed. The prediction is deliberately optimistic —
+        // the current backlog at the measured service rate plus this
+        // request's own rows at the cost model's ideal-parallel floor —
+        // so only certainly-doomed requests are refused, and the margin
+        // adds further slack for estimate noise on top.
+        if self.feasibility_admission {
+            if let Some(d) = deadline {
+                let gauges = self.metrics.queue_gauges();
+                let rate = self.metrics.ns_per_row() as f64;
+                let floor =
+                    crate::plan::model::floor_ns_per_row(matrix.cols, k, mode);
+                let predicted_ns =
+                    gauges.queued_rows as f64 * rate + rows as f64 * floor;
+                let budget_ns = d.as_nanos() as f64
+                    * (1.0 + self.feasibility_margin.max(0.0));
+                if predicted_ns > budget_ns {
+                    self.metrics.record_infeasible_for(&tenant);
+                    return Err(anyhow!(
+                        "deadline infeasible at enqueue for tenant '{}': \
+                         {} rows within {} us cannot be met — {} rows \
+                         already queued at the measured {} ns/row plus \
+                         this request's cost-model floor predict at \
+                         least {} us (feasibility margin {:.0}%); \
+                         raise the deadline, shrink the request, or \
+                         disable [serve] feasibility_admission",
+                        tenant.as_str(),
+                        rows,
+                        d.as_micros(),
+                        gauges.queued_rows,
+                        rate as u64,
+                        (predicted_ns / 1_000.0) as u64,
+                        self.feasibility_margin.max(0.0) * 100.0
+                    ));
+                }
+            }
+        }
         match over_quota.unwrap_or(self.default_over_quota) {
             OverQuotaPolicy::Reject => {
                 if let Err(e) = self.tenants.admit(&tenant, rows) {
@@ -289,6 +348,9 @@ impl TopKService {
                 }
             }
         }
+        // the hub's rows window samples *admitted* traffic — the
+        // population the planner's bucket learning should model
+        self.metrics.observe_rows(rows);
         let (tx, rx) = mpsc::channel();
         let cancel = CancelToken::new();
         let enq = Enqueue {
@@ -381,6 +443,19 @@ impl TopKService {
 
     pub fn stats(&self) -> ServiceStats {
         self.metrics.snapshot()
+    }
+
+    /// The full typed load view — queue gauges, service rate, rows
+    /// histogram, latency percentiles, and per-tenant in-flight state
+    /// (what `rtopk stats --load` prints as JSON).
+    pub fn load_snapshot(&self) -> LoadSnapshot {
+        self.metrics.load_snapshot()
+    }
+
+    /// The shared telemetry hub itself, for callers that want live
+    /// gauges rather than a point-in-time snapshot.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
     }
 
     /// Compiled tile variants available to accelerator backends.
@@ -881,5 +956,72 @@ mod tests {
         svc.shutdown();
         assert!(!batcher.submit(TenantId::default(), RowMatrix::zeros(1, 4), 1,
                                 Mode::EXACT, mpsc::channel().0));
+    }
+
+    #[test]
+    fn infeasible_deadline_is_refused_at_enqueue() {
+        // Twin requests: same matrix, one deadline the cost-model floor
+        // alone proves unmeetable, one generous. The doomed twin must
+        // be refused synchronously (counted as `infeasible`, not
+        // `rejected`) and the feasible twin served normally.
+        let svc = cpu_service(1);
+        let mut rng = Rng::seed_from(0x75);
+        let x = RowMatrix::random_normal(1 << 17, 8, &mut rng);
+        let err = svc
+            .submit(
+                sreq(x.clone(), 2, Mode::EXACT)
+                    .deadline(Duration::from_micros(2)),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("infeasible"), "got: {err}");
+        assert!(err.contains("2 us"), "names the deadline: {err}");
+        let s = svc.stats();
+        assert_eq!(s.infeasible, 1);
+        assert_eq!(s.rejected, 0, "infeasible is not a quota rejection");
+        assert_eq!(s.timed_out, 0, "refused before it could time out");
+        let res = svc
+            .submit(
+                sreq(x.clone(), 2, Mode::EXACT)
+                    .deadline(Duration::from_secs(30)),
+            )
+            .unwrap();
+        assert!(is_exact(&x, &res), "the feasible twin is served");
+        assert_eq!(svc.stats().requests, 1);
+    }
+
+    #[test]
+    fn feasibility_admission_can_be_disabled() {
+        let svc = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 100,
+            feasibility_admission: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(0x76);
+        let x = RowMatrix::random_normal(1 << 17, 8, &mut rng);
+        // With the gate off the doomed request is admitted and runs
+        // into the ordinary deadline machinery instead.
+        let err = svc
+            .submit(
+                sreq(x, 2, Mode::EXACT).deadline(Duration::from_micros(2)),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(!err.contains("infeasible"), "got: {err}");
+        assert_eq!(svc.stats().infeasible, 0);
+    }
+
+    #[test]
+    fn admitted_rows_feed_the_hub_window() {
+        let svc = cpu_service(1);
+        let mut rng = Rng::seed_from(0x77);
+        let x = RowMatrix::random_normal(24, 32, &mut rng);
+        svc.submit(sreq(x, 4, Mode::EXACT)).unwrap();
+        assert_eq!(svc.metrics().rows_window(), vec![24]);
+        let snap = svc.load_snapshot();
+        assert_eq!(snap.rows_window_len, 1);
+        assert_eq!(snap.requests_total, 1);
     }
 }

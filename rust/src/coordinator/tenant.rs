@@ -511,6 +511,27 @@ impl TenantDirectory {
         }
     }
 
+    /// Live `(tenant, in-flight rows, in-flight requests)` for every
+    /// tenant the directory has seen — the telemetry hub's per-tenant
+    /// load gauges. Configured-but-never-seen tenants report zeros;
+    /// counters are read individually, so a row can be transiently
+    /// inconsistent with a concurrent admit/release (gauges, not
+    /// ledger).
+    pub fn all_in_flight(&self) -> Vec<(TenantId, u64, u64)> {
+        self.tenants
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(id, st)| {
+                (
+                    id.clone(),
+                    st.in_flight_rows.load(Ordering::Acquire) as u64,
+                    st.in_flight_requests.load(Ordering::Acquire) as u64,
+                )
+            })
+            .collect()
+    }
+
     /// The tenant's WDRR weight (1 for unconfigured tenants).
     pub fn weight(&self, id: &TenantId) -> u64 {
         self.tenants
@@ -586,6 +607,32 @@ mod tests {
             d.release(&id, 10_000);
         }
         assert_eq!(d.in_flight(&id), (0, 0));
+    }
+
+    #[test]
+    fn all_in_flight_reports_every_seen_tenant() {
+        let d = dir_from("[tenants.vip]\nweight = 2").unwrap();
+        let vip = TenantId::new("vip");
+        let anon = TenantId::new("walk-in");
+        d.admit(&vip, 10).unwrap();
+        d.admit(&anon, 3).unwrap();
+        d.admit(&anon, 4).unwrap();
+        let mut all = d.all_in_flight();
+        all.sort();
+        assert_eq!(
+            all,
+            vec![(vip.clone(), 10, 1), (anon.clone(), 7, 2)],
+            "rows and request depth per tenant"
+        );
+        d.release(&anon, 3);
+        d.release(&anon, 4);
+        let mut all = d.all_in_flight();
+        all.sort();
+        assert_eq!(
+            all,
+            vec![(vip, 10, 1), (anon, 0, 0)],
+            "released tenants stay listed at zero"
+        );
     }
 
     #[test]

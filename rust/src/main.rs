@@ -74,7 +74,11 @@ fn app() -> App {
                 .opt("cols", "256", "row length M")
                 .opt("k", "32", "k per row")
                 .opt("eps", "0.0001", "relative precision eps'")
-                .opt("trials", "10000", "repetitions"),
+                .opt("trials", "10000", "repetitions")
+                .opt("rows", "64", "rows per request (with --load)")
+                .opt("requests", "8", "demo requests to serve (with --load)")
+                .switch("load", "serve a short demo workload and print the \
+                                 telemetry hub's LoadSnapshot as JSON"),
             Command::new("analyze", "early-stop quality metrics (Table 2)")
                 .opt("cols", "256", "row length M")
                 .opt("k", "32", "k per row")
@@ -480,6 +484,9 @@ fn cmd_plan(a: &Args) -> Result<()> {
 }
 
 fn cmd_stats(a: &Args) -> Result<()> {
+    if a.switch("load") {
+        return cmd_stats_load(a);
+    }
     let m: usize = a.req("cols").map_err(anyhow::Error::msg)?;
     let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
     let eps: f32 = a.req("eps").map_err(anyhow::Error::msg)?;
@@ -497,6 +504,38 @@ fn cmd_stats(a: &Args) -> Result<()> {
     if k < m {
         println!("analytic E(n) (Eq. 4):  {:.2}", expected_iterations(m, k));
     }
+    Ok(())
+}
+
+/// `stats --load`: serve a short deterministic CPU-only workload and
+/// print the telemetry hub's `LoadSnapshot` as JSON — the same typed
+/// view the scheduler's feedback loop (shadow cadence, bucket
+/// learning) and feasibility admission consume.
+fn cmd_stats_load(a: &Args) -> Result<()> {
+    let m: usize = a.req("cols").map_err(anyhow::Error::msg)?;
+    let k: usize = a.req("k").map_err(anyhow::Error::msg)?;
+    let rows: usize = a.req("rows").map_err(anyhow::Error::msg)?;
+    let requests: usize = a.req("requests").map_err(anyhow::Error::msg)?;
+    if k == 0 || k > m {
+        return Err(anyhow!("k={k} out of range for --cols {m}"));
+    }
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 2,
+        max_wait_us: 100,
+        ..Default::default()
+    })?;
+    let mut rng = Rng::seed_from(1234);
+    let tickets: Vec<_> = (0..requests)
+        .map(|_| {
+            let x = RowMatrix::random_normal(rows, m, &mut rng);
+            svc.submit_ticket(SubmitRequest::new(x, k).mode(Mode::EXACT))
+        })
+        .collect::<Result<_>>()?;
+    for t in tickets {
+        t.wait()?;
+    }
+    println!("{}", svc.load_snapshot().to_json());
+    svc.shutdown();
     Ok(())
 }
 

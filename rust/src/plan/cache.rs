@@ -22,9 +22,10 @@
 //! on-disk format (written with the in-tree `util::json`):
 //!
 //! ```json
-//! {"version": 3,
+//! {"version": 4,
 //!  "host": {"parallelism": 8, "cpu_model": "..."},
 //!  "created_unix": 1753660800,
+//!  "bucket_bounds": [64, 1024],
 //!  "plans": [
 //!    {"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "exact",
 //!     "backend": "cpu", "algo": "rtopk_exact", "grain": 64,
@@ -35,23 +36,34 @@
 //! ]}
 //! ```
 //!
+//! Schema v4 adds the document-level `bucket_bounds` pair — the
+//! (possibly learned) row-bucket boundaries every `rows_bucket` label
+//! in the document is keyed under. v3 documents (fixed 64/1024
+//! boundaries, no `bucket_bounds` key) are still accepted and
+//! **migrated**: each entry is re-keyed by its calibration probe's row
+//! count under the loading cache's current boundaries, so existing
+//! calibration survives the schema bump instead of being discarded.
+//!
 //! The optional `shadow` object is the online-demotion evidence
 //! (`plan::ShadowHistory`): present iff the entry's winner was
-//! installed by a shadow re-probe demotion. It is an entry-payload
-//! addition within schema v3 — documents without it load unchanged.
+//! installed by a shadow re-probe demotion. Documents without it load
+//! unchanged.
 //!
 //! Rejection rules, in the order the loader applies them (each is
 //! all-or-nothing — a document failing any rule merges zero entries):
 //!
-//! 1. `version != 3` — stale or foreign schema; re-calibrate.
+//! 1. `version` not 4 (current) or 3 (migrated) — stale or foreign
+//!    schema; re-calibrate.
 //! 2. Missing or mismatched `host` fingerprint — timings from another
 //!    machine are not evidence about this one.
 //! 3. Missing `created_unix`, or `now - created_unix > ttl` (with
 //!    `ttl > 0`) — measurements expire; hosts drift.
-//! 4. Any entry missing a required field (`rows_bucket`, `cols`, `k`,
+//! 4. A v4 document missing `bucket_bounds`, or carrying a degenerate
+//!    pair (`b0 = 0` or `b1 < 2*b0`).
+//! 5. Any entry missing a required field (`rows_bucket`, `cols`, `k`,
 //!    `mode`, `backend`, `algo`) or naming an unknown bucket /
 //!    algorithm / mode tag.
-//! 5. Any entry (or its runner-up) pairing an approximate mode key
+//! 6. Any entry (or its runner-up) pairing an approximate mode key
 //!    (`es<N>`, loose-eps exact) with a non-rtopk algorithm — that
 //!    would change the output contract, not just the speed.
 
@@ -68,9 +80,16 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 /// Version of the persisted document. Bump whenever the schema or the
 /// meaning of a field changes; old caches are then re-calibrated, never
-/// reinterpreted. (v1 had no host fingerprint and no backend field; v2
-/// had no rows bucket, no raw probe timings, and no TTL timestamp.)
-pub const SCHEMA_VERSION: usize = 3;
+/// reinterpreted — except v3, which is migrated (see
+/// [`MIGRATABLE_VERSION`]). (v1 had no host fingerprint and no backend
+/// field; v2 had no rows bucket, no raw probe timings, and no TTL
+/// timestamp; v3 had no `bucket_bounds`.)
+pub const SCHEMA_VERSION: usize = 4;
+
+/// The one prior version the loader migrates instead of rejecting:
+/// v3 entries carry their calibration probes, which is enough to
+/// re-key them under the current bucket boundaries.
+pub const MIGRATABLE_VERSION: usize = 3;
 
 /// Default persisted-cache TTL: one week. Calibration is cheap and
 /// hosts drift (thermal paste, firmware, co-tenants), so a stale cache
@@ -120,7 +139,7 @@ fn now_unix() -> u64 {
 type Key = (RowBucket, usize, usize, String);
 
 /// Concurrent plan cache (read-mostly; one write per new keyed shape).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PlanCache {
     inner: RwLock<BTreeMap<Key, Plan>>,
     /// `created_unix` of the oldest document merged into this cache.
@@ -130,11 +149,74 @@ pub struct PlanCache {
     /// service keep stale measurements alive forever. `None` until a
     /// document is loaded; a never-loaded cache saves with "now".
     created: Mutex<Option<u64>>,
+    /// Row-bucket boundaries `(b0, b1)` every key's [`RowBucket`] label
+    /// is interpreted under. Seeded with
+    /// [`RowBucket::DEFAULT_BOUNDS`]; re-derived from observed traffic
+    /// by [`crate::plan::Planner::relearn_buckets`] via
+    /// [`PlanCache::set_bounds`], and persisted as the v4 document's
+    /// `bucket_bounds`. Lock order: `bounds` before `inner` (only
+    /// `set_bounds` holds both).
+    bounds: RwLock<(usize, usize)>,
+}
+
+impl Default for PlanCache {
+    fn default() -> PlanCache {
+        PlanCache {
+            inner: RwLock::new(BTreeMap::new()),
+            created: Mutex::new(None),
+            bounds: RwLock::new(RowBucket::DEFAULT_BOUNDS),
+        }
+    }
 }
 
 impl PlanCache {
     pub fn new() -> PlanCache {
         PlanCache::default()
+    }
+
+    /// The current row-bucket boundaries `(b0, b1)`.
+    pub fn bounds(&self) -> (usize, usize) {
+        *self.bounds.read().unwrap()
+    }
+
+    /// The bucket `rows` falls in under the current boundaries.
+    pub fn bucket_of(&self, rows: usize) -> RowBucket {
+        RowBucket::of_with(rows, self.bounds())
+    }
+
+    /// Install new (learned) bucket boundaries, re-keying every cached
+    /// entry under them. An entry is re-bucketed by its calibration
+    /// probe's row count when it carries one (that is the geometry the
+    /// measurement was actually taken at), else by the top edge of its
+    /// old bucket. On a key collision the entry from the smaller old
+    /// bucket wins (deterministic; the displaced shape lazily
+    /// re-calibrates if its geometry recurs). Boundaries are
+    /// sanitized to `b0 >= 1`, `b1 >= 2*b0`.
+    pub fn set_bounds(&self, b0: usize, b1: usize) {
+        let b0 = b0.max(1);
+        let b1 = b1.max(b0.saturating_mul(2));
+        let mut bounds = self.bounds.write().unwrap();
+        if *bounds == (b0, b1) {
+            return;
+        }
+        let (ob0, ob1) = *bounds;
+        let mut inner = self.inner.write().unwrap();
+        let old: BTreeMap<Key, Plan> = std::mem::take(&mut *inner);
+        for ((bucket, cols, k, mode), plan) in old {
+            let rows = plan
+                .probes
+                .iter()
+                .find(|p| p.kind == ProbeKind::Algo)
+                .map(|p| p.rows)
+                .unwrap_or(match bucket {
+                    RowBucket::Le64 => ob0,
+                    RowBucket::Le1024 => ob1,
+                    RowBucket::Gt1024 => ob1.saturating_add(1),
+                });
+            let rebucketed = RowBucket::of_with(rows, (b0, b1));
+            inner.entry((rebucketed, cols, k, mode)).or_insert(plan);
+        }
+        *bounds = (b0, b1);
     }
 
     pub fn get(
@@ -239,6 +321,7 @@ impl PlanCache {
                 ])
             })
             .collect();
+        let (b0, b1) = self.bounds();
         json::obj(vec![
             ("version", json::num(SCHEMA_VERSION as f64)),
             (
@@ -249,6 +332,10 @@ impl PlanCache {
                 ]),
             ),
             ("created_unix", json::num(created_unix as f64)),
+            (
+                "bucket_bounds",
+                json::arr(vec![json::num(b0 as f64), json::num(b1 as f64)]),
+            ),
             ("plans", json::arr(plans)),
         ])
         .to_string()
@@ -293,9 +380,10 @@ impl PlanCache {
     ) -> Result<usize, String> {
         let v = json::parse(text)?;
         let version = v.get("version").and_then(Value::as_usize).unwrap_or(0);
-        if version != SCHEMA_VERSION {
+        if version != SCHEMA_VERSION && version != MIGRATABLE_VERSION {
             return Err(format!(
-                "plan-cache schema version {version} != {SCHEMA_VERSION} \
+                "plan-cache schema version {version} is neither \
+                 {SCHEMA_VERSION} nor the migratable {MIGRATABLE_VERSION} \
                  (stale or foreign cache)"
             ));
         }
@@ -329,6 +417,31 @@ impl PlanCache {
                 ));
             }
         }
+        // v4 carries the boundaries its bucket labels are keyed under;
+        // a v3 document has none (fixed 64/1024) and its entries are
+        // migrated below by probe geometry instead
+        let doc_bounds = if version == SCHEMA_VERSION {
+            let b = v
+                .get("bucket_bounds")
+                .and_then(Value::as_array)
+                .ok_or("plan cache missing bucket_bounds")?;
+            let (b0, b1) = match b {
+                [b0, b1] => (
+                    b0.as_usize().ok_or("bad bucket_bounds[0]")?,
+                    b1.as_usize().ok_or("bad bucket_bounds[1]")?,
+                ),
+                _ => return Err("bucket_bounds must be a [b0, b1] pair".into()),
+            };
+            if b0 == 0 || b1 < b0.saturating_mul(2) {
+                return Err(format!(
+                    "degenerate bucket_bounds [{b0}, {b1}] \
+                     (need b0 >= 1 and b1 >= 2*b0)"
+                ));
+            }
+            Some((b0, b1))
+        } else {
+            None
+        };
         let plans = v
             .get("plans")
             .and_then(Value::as_array)
@@ -456,7 +569,26 @@ impl PlanCache {
             ));
         }
         let n = parsed.len();
+        // v4: adopt the document's boundaries first (set_bounds re-keys
+        // anything already cached), then insert under the parsed labels
+        // — they were written under exactly these boundaries. v3: keep
+        // the current boundaries and migrate each entry by the geometry
+        // its calibration probe actually ran at (entries without probes
+        // keep their label: under the seed boundaries that is the same
+        // partition a v3 writer used).
+        if let Some((b0, b1)) = doc_bounds {
+            self.set_bounds(b0, b1);
+        }
         for (bucket, cols, k, mode, plan) in parsed {
+            let bucket = if doc_bounds.is_some() {
+                bucket
+            } else {
+                plan.probes
+                    .iter()
+                    .find(|p| p.kind == ProbeKind::Algo)
+                    .map(|p| self.bucket_of(p.rows))
+                    .unwrap_or(bucket)
+            };
             self.insert(bucket, cols, k, &mode, plan);
         }
         // remember the oldest merged stamp so a later save carries the
@@ -754,12 +886,14 @@ mod tests {
         let c = PlanCache::new();
         assert!(c.load_json("{}").is_err());
         // v1/v2 documents are stale by definition — recalibrate rather
-        // than reinterpret (v2 lacked buckets, probes, and the stamp)
+        // than reinterpret (v2 lacked buckets, probes, and the stamp);
+        // a future schema is just as untrustworthy
         assert!(c.load_json(r#"{"version": 1, "plans": []}"#).is_err());
         assert!(c.load_json(r#"{"version": 2, "plans": []}"#).is_err());
-        assert!(c.load_json(r#"{"version": 4, "plans": []}"#).is_err());
-        // v3 without a host stamp
+        assert!(c.load_json(r#"{"version": 5, "plans": []}"#).is_err());
+        // v3 (migratable) and v4 still need a host stamp
         assert!(c.load_json(r#"{"version": 3, "plans": []}"#).is_err());
+        assert!(c.load_json(r#"{"version": 4, "plans": []}"#).is_err());
         // v3 without a creation stamp
         let host = HostFingerprint::current();
         let no_stamp = format!(
@@ -770,6 +904,20 @@ mod tests {
             json::s(&host.cpu_model).to_string()
         );
         assert!(c.load_json(&no_stamp).unwrap_err().contains("created_unix"));
+        // v4 without bucket_bounds, or with a degenerate pair
+        let v4_no_bounds = format!(r#"{{"version": 4, {}, "plans": []}}"#, host_json());
+        assert!(c
+            .load_json(&v4_no_bounds)
+            .unwrap_err()
+            .contains("bucket_bounds"));
+        let v4_degenerate = format!(
+            r#"{{"version": 4, {}, "bucket_bounds": [512, 600], "plans": []}}"#,
+            host_json()
+        );
+        assert!(c
+            .load_json(&v4_degenerate)
+            .unwrap_err()
+            .contains("degenerate"));
         // entry missing required fields
         let doc = format!(
             r#"{{"version": 3, {}, "plans": [{{"cols": 1}}]}}"#,
@@ -890,6 +1038,88 @@ mod tests {
             host_json()
         );
         assert_eq!(c.load_json(&ok).unwrap(), 1);
+    }
+
+    #[test]
+    fn bucket_bounds_roundtrip_in_v4_documents() {
+        let c = PlanCache::new();
+        assert_eq!(c.bounds(), RowBucket::DEFAULT_BOUNDS);
+        c.set_bounds(128, 2048);
+        c.insert(RowBucket::Le64, 256, 32, "exact", plan(RowAlgo::Radix, 64));
+        let text = c.to_json();
+        assert!(text.contains(r#""version":4"#), "got: {text}");
+        assert!(text.contains(r#""bucket_bounds":[128,2048]"#), "got: {text}");
+        let d = PlanCache::new();
+        assert_eq!(d.load_json(&text).unwrap(), 1);
+        assert_eq!(d.bounds(), (128, 2048), "learned bounds survive the roundtrip");
+        assert!(d.get(RowBucket::Le64, 256, 32, "exact").is_some());
+    }
+
+    #[test]
+    fn set_bounds_rebuckets_entries_by_probe_geometry() {
+        let c = PlanCache::new();
+        // calibrated at 500 probe rows -> Le1024 under the seed bounds
+        let mut probed = plan(RowAlgo::Radix, 64);
+        probed.probes.push(RawProbe {
+            kind: ProbeKind::Algo,
+            name: "radix".into(),
+            secs: 1.0e-5,
+            rows: 500,
+        });
+        c.insert(RowBucket::Le1024, 256, 32, "exact", probed);
+        // probe-less entry: falls back to its old bucket's top edge
+        c.insert(RowBucket::Le64, 512, 16, "exact", plan(RowAlgo::Heap, 8));
+        c.set_bounds(500, 1000);
+        assert_eq!(c.len(), 2, "re-keying must not lose calibration");
+        // 500 <= the new b0: the small bucket now owns that plan
+        assert_eq!(
+            c.get(RowBucket::Le64, 256, 32, "exact").unwrap().algo,
+            RowAlgo::Radix
+        );
+        assert!(c.get(RowBucket::Le1024, 256, 32, "exact").is_none());
+        // the old small bucket's top edge (64) is still <= 500
+        assert!(c.get(RowBucket::Le64, 512, 16, "exact").is_some());
+        // setting the same bounds again is a no-op
+        c.set_bounds(500, 1000);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn v3_documents_migrate_with_rebucketed_entries() {
+        // A v3 document (pre-learned-bounds schema, no bucket_bounds):
+        // accepted, entries re-keyed by the geometry their calibration
+        // probe ran at under the loading cache's current boundaries.
+        let doc = format!(
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le1024", "cols": 256, "k": 32, "mode": "exact",
+                "backend": "cpu", "algo": "radix", "grain": 8,
+                "probes": [{{"kind": "algo", "name": "radix",
+                             "secs": 1e-5, "rows": 500}}]}},
+              {{"rows_bucket": "le64", "cols": 128, "k": 8, "mode": "exact",
+                "backend": "cpu", "algo": "heap", "grain": 8}}
+            ]}}"#,
+            host_json()
+        );
+        // under the seed bounds the migration is the identity mapping
+        let c = PlanCache::new();
+        assert_eq!(c.load_json(&doc).unwrap(), 2);
+        assert!(c.get(RowBucket::Le1024, 256, 32, "exact").is_some());
+        assert!(c.get(RowBucket::Le64, 128, 8, "exact").is_some());
+        // under learned bounds the probed entry re-keys; the probe-less
+        // one keeps its label
+        let d = PlanCache::new();
+        d.set_bounds(500, 1000);
+        assert_eq!(d.load_json(&doc).unwrap(), 2);
+        assert_eq!(
+            d.get(RowBucket::Le64, 256, 32, "exact").unwrap().algo,
+            RowAlgo::Radix
+        );
+        assert!(d.get(RowBucket::Le1024, 256, 32, "exact").is_none());
+        assert!(d.get(RowBucket::Le64, 128, 8, "exact").is_some());
+        // a migrated cache reserializes as v4 with its own boundaries
+        let text = d.to_json();
+        assert!(text.contains(r#""version":4"#));
+        assert!(text.contains(r#""bucket_bounds":[500,1000]"#));
     }
 
     #[test]

@@ -60,6 +60,31 @@
 //!    hysteresis margin is demoted in place, with quarantine-style
 //!    bounded logging mirroring the backend degradation path.
 //!
+//! ## Telemetry feedback (the closed loop)
+//!
+//! Two planner inputs come back from the serving layer's telemetry hub
+//! (`coordinator::metrics::TelemetryHub`) instead of being fixed at
+//! startup:
+//!
+//! * **Load-adaptive shadow cadence** ([`Planner::note_load`]): shadow
+//!   re-probes double-execute a batch, which is exactly wrong under
+//!   pressure. The scheduler reports queue depth and deadline slack
+//!   after each batch; sustained busy readings stretch the effective
+//!   `shadow_every` (×2 per step, up to `shadow_every_max`), sustained
+//!   idle readings restore it (÷2 per step, back to the configured
+//!   base). Both directions require a streak
+//!   ([`CADENCE_STRETCH_AFTER`] / [`CADENCE_RESTORE_AFTER`]) so an
+//!   alternating load signal never flaps the cadence.
+//! * **Learned row buckets** ([`Planner::relearn_buckets`]): the
+//!   `<=64 / <=1024 / >1024` split is a guess about batch geometry;
+//!   the observed rows histogram is not. Once enough rows samples
+//!   accumulate the boundaries are re-derived from the P33/P66
+//!   quantiles and the plan cache re-keys its entries under them
+//!   ([`cache::PlanCache::set_bounds`]) — calibration is re-bucketed,
+//!   never discarded. The three [`RowBucket`] names stay fixed ordinal
+//!   labels (small/medium/large) so cache schema, CLI output, and
+//!   bench JSON never change shape.
+//!
 //! ## Correctness contract
 //!
 //! Candidate substitution never changes result *semantics*:
@@ -92,6 +117,12 @@
 //!   re-calibrated wholesale (0 = never expires).
 //! * `shadow_every` — shadow re-probe every Nth dispatched batch
 //!   (0 = off; dispatch is then exactly the pre-shadow path).
+//! * `shadow_every_max` — ceiling the load-adaptive cadence may
+//!   stretch to (0 = 8x the base).
+//! * `shadow_busy_rows` — queued-rows threshold above which a load
+//!   report counts as busy.
+//! * `bucket_learn_window` — rows samples the serving loop collects
+//!   between bucket-boundary relearn attempts.
 
 pub mod cache;
 pub mod calibrate;
@@ -103,24 +134,31 @@ use crate::topk::types::{Mode, TopKResult};
 use crate::util::matrix::RowMatrix;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 pub use cache::{parse_algo, parse_mode_tag, HostFingerprint, PlanCache};
 
 /// Batch row-count buckets — the rows dimension of a plan key. Three
-/// service-shaped regimes: interactive trickles (`<= 64` rows), the
-/// batcher's steady state (`<= 1024`, the default tile budget), and
-/// oversized/bulk requests (`> 1024`). Coarse on purpose: each bucket
+/// service-shaped regimes: interactive trickles, the batcher's steady
+/// state, and oversized/bulk requests. Coarse on purpose: each bucket
 /// is one calibration, and winners move with orders of magnitude, not
 /// with ±10 rows.
+///
+/// The variant names record the *seed* boundaries
+/// ([`RowBucket::DEFAULT_BOUNDS`], `<=64 / <=1024 / >1024`). Once the
+/// serving loop has observed enough real batch geometry it re-derives
+/// the boundaries from the rows histogram
+/// ([`Planner::relearn_buckets`]); the names then read as ordinal
+/// labels — small / medium / large — while staying byte-stable in the
+/// cache schema, CLI output, and bench JSON.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum RowBucket {
-    /// `rows <= 64`
+    /// the small regime (`rows <= b0`; seed `b0 = 64`)
     Le64,
-    /// `64 < rows <= 1024`
+    /// the medium regime (`b0 < rows <= b1`; seed `b1 = 1024`)
     Le1024,
-    /// `rows > 1024`
+    /// the bulk regime (`rows > b1`)
     Gt1024,
 }
 
@@ -128,18 +166,27 @@ impl RowBucket {
     pub const ALL: [RowBucket; 3] =
         [RowBucket::Le64, RowBucket::Le1024, RowBucket::Gt1024];
 
-    /// The bucket a batch of `rows` rows plans under.
+    /// Seed partition boundaries `(b0, b1)`: `rows <= b0` is small,
+    /// `rows <= b1` medium, the rest bulk.
+    pub const DEFAULT_BOUNDS: (usize, usize) = (64, 1024);
+
+    /// The bucket a batch of `rows` rows plans under (seed boundaries).
     pub fn of(rows: usize) -> RowBucket {
-        if rows <= 64 {
+        RowBucket::of_with(rows, RowBucket::DEFAULT_BOUNDS)
+    }
+
+    /// The bucket `rows` falls in under explicit boundaries.
+    pub fn of_with(rows: usize, (b0, b1): (usize, usize)) -> RowBucket {
+        if rows <= b0 {
             RowBucket::Le64
-        } else if rows <= 1024 {
+        } else if rows <= b1 {
             RowBucket::Le1024
         } else {
             RowBucket::Gt1024
         }
     }
 
-    /// Stable serialized name (plan-cache schema v3, CLI output).
+    /// Stable serialized name (plan-cache schema v3/v4, CLI output).
     pub fn name(self) -> &'static str {
         match self {
             RowBucket::Le64 => "le64",
@@ -163,12 +210,33 @@ impl RowBucket {
     /// Probe-matrix rows used to calibrate this bucket, scaled from the
     /// `calib_rows` budget but clamped *into* the bucket so the probe
     /// actually has the bucket's geometry (a 192-row probe says nothing
-    /// about per-batch setup costs at 16 rows, and vice versa).
+    /// about per-batch setup costs at 16 rows, and vice versa). Seed
+    /// boundaries; the planner passes the learned ones.
     pub fn representative_rows(self, calib_rows: usize) -> usize {
+        self.representative_rows_with(RowBucket::DEFAULT_BOUNDS, calib_rows)
+    }
+
+    /// [`RowBucket::representative_rows`] under explicit boundaries;
+    /// the clamp targets keep their seed proportions (1.5x `b0` for the
+    /// medium floor, 1.25x–4x `b1` for the bulk range) so learned
+    /// bounds probe at the same relative geometry the seeds did.
+    pub fn representative_rows_with(
+        self,
+        (b0, b1): (usize, usize),
+        calib_rows: usize,
+    ) -> usize {
         match self {
-            RowBucket::Le64 => calib_rows.clamp(1, 64),
-            RowBucket::Le1024 => calib_rows.clamp(96, 1024),
-            RowBucket::Gt1024 => (calib_rows.saturating_mul(8)).clamp(1280, 4096),
+            RowBucket::Le64 => calib_rows.clamp(1, b0.max(1)),
+            RowBucket::Le1024 => {
+                let lo = (b0 + b0 / 2).max(b0 + 1).min(b1);
+                calib_rows.clamp(lo, b1.max(lo))
+            }
+            RowBucket::Gt1024 => {
+                let lo = (b1 + b1 / 4).max(b1 + 1);
+                calib_rows
+                    .saturating_mul(8)
+                    .clamp(lo, b1.saturating_mul(4).max(lo))
+            }
         }
     }
 }
@@ -363,6 +431,25 @@ pub const SHADOW_MIN_SAMPLES: u64 = 3;
 /// (mirrors the backend-quarantine log bound).
 const SHADOW_LOG_MAX: u32 = 3;
 
+/// Consecutive busy load reports before the shadow cadence stretches
+/// one step (x2, capped at `shadow_every_max`).
+pub const CADENCE_STRETCH_AFTER: u32 = 2;
+/// Consecutive idle load reports before the cadence restores one step
+/// (/2, floored at the configured `shadow_every`). Larger than the
+/// stretch streak on purpose: backing off under pressure should be
+/// quick, resuming double-execution should want sustained calm.
+pub const CADENCE_RESTORE_AFTER: u32 = 4;
+/// A load report whose minimum deadline slack is below this counts as
+/// busy (near-deadline traffic) regardless of queue depth.
+pub const CADENCE_NEAR_DEADLINE_US: u64 = 2_000;
+
+/// Minimum rows samples before a bucket-boundary relearn is considered.
+pub const BUCKET_LEARN_MIN_SAMPLES: usize = 64;
+/// Relative move a learned boundary must make before the cache
+/// re-buckets (hysteresis: re-bucketing re-keys every cached plan, so
+/// quantile jitter must not thrash the cache).
+pub const BUCKET_MOVE_MIN_REL: f64 = 0.5;
+
 /// Planner knobs (typed form of the config `[plan]` section plus the
 /// `[backend]` pin).
 #[derive(Clone, Debug)]
@@ -381,6 +468,13 @@ pub struct PlannerConfig {
     pub cache_ttl_secs: u64,
     /// shadow re-probe every Nth dispatched batch (0 = off)
     pub shadow_every: usize,
+    /// ceiling the load-adaptive cadence may stretch `shadow_every` to
+    /// (0 = 8x the base)
+    pub shadow_every_max: usize,
+    /// queued rows at or above which a load report counts as busy
+    pub shadow_busy_rows: u64,
+    /// rows samples collected between bucket-relearn attempts
+    pub bucket_learn_window: usize,
 }
 
 impl Default for PlannerConfig {
@@ -393,6 +487,9 @@ impl Default for PlannerConfig {
             cache_path: None,
             cache_ttl_secs: cache::DEFAULT_TTL_SECS,
             shadow_every: 0,
+            shadow_every_max: 0,
+            shadow_busy_rows: 4096,
+            bucket_learn_window: 1024,
         }
     }
 }
@@ -412,6 +509,9 @@ impl PlannerConfig {
             cache_path: c.cache_path.as_ref().map(PathBuf::from),
             cache_ttl_secs: c.cache_ttl_secs,
             shadow_every: c.shadow_every,
+            shadow_every_max: c.shadow_every_max,
+            shadow_busy_rows: c.shadow_busy_rows,
+            bucket_learn_window: c.bucket_learn_window,
         })
     }
 }
@@ -481,6 +581,16 @@ struct ShadowState {
 
 type ShapeKey = (RowBucket, usize, usize, String);
 
+/// Load-adaptive shadow-cadence state: the effective `shadow_every`
+/// plus the busy/idle streak counters behind the hysteresis.
+#[derive(Clone, Copy, Debug)]
+struct CadenceState {
+    /// effective cadence `shadow_due` gates on
+    current: usize,
+    busy_streak: u32,
+    idle_streak: u32,
+}
+
 /// The adaptive planner: decision pipeline + shared plan cache +
 /// backend registry.
 pub struct Planner {
@@ -506,6 +616,11 @@ pub struct Planner {
     shadow: Mutex<BTreeMap<ShapeKey, ShadowState>>,
     /// Total shadow measurements recorded (reporting / tests).
     shadow_seen: AtomicU64,
+    /// Load-adaptive cadence streaks ([`Planner::note_load`]).
+    cadence: Mutex<CadenceState>,
+    /// Lock-free mirror of `cadence.current` — `shadow_due` runs on
+    /// every dispatched batch and must not take the streak lock.
+    cadence_current: AtomicUsize,
 }
 
 impl Default for Planner {
@@ -546,6 +661,7 @@ impl Planner {
                 );
             }
         }
+        let base_cadence = cfg.shadow_every;
         Planner {
             cfg,
             backends,
@@ -556,6 +672,12 @@ impl Planner {
             shadow_ctr: AtomicU64::new(0),
             shadow: Mutex::new(shadow),
             shadow_seen: AtomicU64::new(0),
+            cadence: Mutex::new(CadenceState {
+                current: base_cadence,
+                busy_streak: 0,
+                idle_streak: 0,
+            }),
+            cadence_current: AtomicUsize::new(base_cadence),
         }
     }
 
@@ -616,11 +738,18 @@ impl Planner {
             .is_some_and(|b| b.supports(cols, k, mode))
     }
 
+    /// The row bucket `rows` plans under, using the cache's current
+    /// (possibly learned) boundaries.
+    pub fn bucket_of(&self, rows: usize) -> RowBucket {
+        RowBucket::of_with(rows, self.cache.bounds())
+    }
+
     /// Decide (or recall) the plan for a batch shape. `rows` is the
-    /// batch's row count; it selects the [`RowBucket`] key dimension.
+    /// batch's row count; it selects the [`RowBucket`] key dimension
+    /// under the current (possibly learned) boundaries.
     pub fn plan(&self, rows: usize, cols: usize, k: usize, mode: Mode) -> Plan {
         let base_grain = default_grain(cols);
-        let bucket = RowBucket::of(rows);
+        let bucket = self.bucket_of(rows);
         let key = mode_key(mode);
         if self.cfg.force.is_some() || self.cfg.force_backend.is_some() {
             // Pinned: the pin fixes the algorithm and/or backend, not
@@ -832,9 +961,11 @@ impl Planner {
                 shadow: None,
             };
         }
-        // one probe workload — sized for this row bucket — serves the
-        // algorithm race, the grain neighborhood, and the backend race
-        let rep_rows = bucket.representative_rows(self.cfg.calib_rows);
+        // one probe workload — sized for this row bucket under the
+        // current boundaries — serves the algorithm race, the grain
+        // neighborhood, and the backend race
+        let rep_rows =
+            bucket.representative_rows_with(self.cache.bounds(), self.cfg.calib_rows);
         let x = calibrate::probe_workload(rep_rows, cols);
         let (algo, grain, secs, cpu_probes) =
             self.race_cpu_on(&x, cols, k, mode, base_grain);
@@ -933,7 +1064,8 @@ impl Planner {
                 shadow: None,
             };
         }
-        let rep_rows = bucket.representative_rows(self.cfg.calib_rows);
+        let rep_rows =
+            bucket.representative_rows_with(self.cache.bounds(), self.cfg.calib_rows);
         let x = calibrate::probe_workload(rep_rows, cols);
         let (algo, grain, secs) = match self.forced_algo(mode) {
             Some(algo) => {
@@ -975,17 +1107,125 @@ impl Planner {
         }
     }
 
-    /// Counter-driven shadow gate: true on every `shadow_every`-th
-    /// call. With `shadow_every = 0` this returns false without
-    /// touching any state, so dispatch behaves exactly as it did before
-    /// shadow re-probing existed.
+    /// Counter-driven shadow gate: true on every Nth call, where N is
+    /// the *effective* cadence — the configured `shadow_every` when the
+    /// load-adaptive loop is quiet, a stretched multiple of it under
+    /// sustained pressure (see [`Planner::note_load`]). With
+    /// `shadow_every = 0` this returns false without touching any
+    /// state, so dispatch behaves exactly as it did before shadow
+    /// re-probing existed.
     pub fn shadow_due(&self) -> bool {
-        let every = self.cfg.shadow_every;
+        let every = self.cadence_current.load(Ordering::Relaxed);
         if every == 0 {
             return false;
         }
         let n = self.shadow_ctr.fetch_add(1, Ordering::Relaxed) + 1;
         n % every as u64 == 0
+    }
+
+    /// The effective shadow cadence right now (the configured base when
+    /// idle, stretched under load; 0 = shadow re-probing off).
+    pub fn shadow_cadence(&self) -> usize {
+        self.cadence_current.load(Ordering::Relaxed)
+    }
+
+    /// The cadence ceiling: the configured `shadow_every_max`, or 8x
+    /// the base when unset.
+    fn cadence_max(&self) -> usize {
+        let base = self.cfg.shadow_every;
+        if base == 0 {
+            return 0;
+        }
+        if self.cfg.shadow_every_max == 0 {
+            base.saturating_mul(8)
+        } else {
+            self.cfg.shadow_every_max.max(base)
+        }
+    }
+
+    /// Feed one load observation from the serving layer's telemetry
+    /// (queued rows across the batcher, and the tightest deadline slack
+    /// of anything queued). Shadow re-probes double-execute a batch —
+    /// exactly wrong under pressure — so sustained busy readings
+    /// (queue at or past `shadow_busy_rows`, or slack under
+    /// [`CADENCE_NEAR_DEADLINE_US`]) stretch the effective cadence x2
+    /// per [`CADENCE_STRETCH_AFTER`]-long streak up to the ceiling, and
+    /// sustained idle readings restore it /2 per
+    /// [`CADENCE_RESTORE_AFTER`]-long streak down to the base. A streak
+    /// resets whenever the opposite reading arrives, so an alternating
+    /// signal changes nothing (no flapping).
+    pub fn note_load(&self, queued_rows: u64, min_slack_us: Option<u64>) {
+        if self.cfg.shadow_every == 0 {
+            return;
+        }
+        let busy = queued_rows >= self.cfg.shadow_busy_rows
+            || min_slack_us.is_some_and(|s| s < CADENCE_NEAR_DEADLINE_US);
+        let base = self.cfg.shadow_every;
+        let max = self.cadence_max();
+        let mut st = self.cadence.lock().unwrap();
+        if busy {
+            st.idle_streak = 0;
+            st.busy_streak += 1;
+            if st.busy_streak >= CADENCE_STRETCH_AFTER {
+                st.busy_streak = 0;
+                st.current = st.current.saturating_mul(2).min(max);
+            }
+        } else {
+            st.busy_streak = 0;
+            st.idle_streak += 1;
+            if st.idle_streak >= CADENCE_RESTORE_AFTER {
+                st.idle_streak = 0;
+                st.current = (st.current / 2).max(base);
+            }
+        }
+        self.cadence_current.store(st.current, Ordering::Relaxed);
+    }
+
+    /// Re-derive the row-bucket boundaries from an observed rows
+    /// window (the telemetry hub's recent batch sizes): the P33/P66
+    /// quantiles become the new `(b0, b1)` split, so each bucket
+    /// covers roughly a third of real traffic instead of a guessed
+    /// range. Guarded three ways: a minimum sample count
+    /// ([`BUCKET_LEARN_MIN_SAMPLES`]), a minimum relative move per
+    /// boundary ([`BUCKET_MOVE_MIN_REL`] — re-keying the cache must
+    /// not thrash on quantile jitter), and `b1 >= 2*b0` (degenerate
+    /// splits collapse a bucket). Operator pins freeze tuning, this
+    /// included. Returns whether the boundaries changed; cached plans
+    /// are re-bucketed, never discarded
+    /// ([`cache::PlanCache::set_bounds`]).
+    pub fn relearn_buckets(&self, rows_window: &[u32]) -> bool {
+        if self.cfg.force.is_some() || self.cfg.force_backend.is_some() {
+            return false;
+        }
+        if rows_window.len() < BUCKET_LEARN_MIN_SAMPLES {
+            return false;
+        }
+        let mut sorted: Vec<u32> = rows_window.to_vec();
+        sorted.sort_unstable();
+        let q = |p: f64| -> usize {
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx.min(sorted.len() - 1)] as usize
+        };
+        let b0 = q(1.0 / 3.0).max(8);
+        let b1 = q(2.0 / 3.0).max(b0.saturating_mul(2));
+        let (c0, c1) = self.cache.bounds();
+        let moved = |new: usize, old: usize| {
+            (new as f64 - old as f64).abs() / (old as f64).max(1.0)
+                >= BUCKET_MOVE_MIN_REL
+        };
+        if !moved(b0, c0) && !moved(b1, c1) {
+            return false;
+        }
+        self.cache.set_bounds(b0, b1);
+        // re-keying breaks the shape attribution of in-flight shadow
+        // EWMAs; restart them (persisted demotion counters stay with
+        // their plans, exactly as across a process restart)
+        let mut g = self.shadow.lock().unwrap();
+        for st in g.values_mut() {
+            st.ewma = 0.0;
+            st.samples = 0;
+        }
+        true
     }
 
     /// Total shadow measurements recorded so far.
@@ -1015,7 +1255,7 @@ impl Planner {
         if self.cfg.force.is_some() || self.cfg.force_backend.is_some() {
             return false;
         }
-        let bucket = RowBucket::of(rows);
+        let bucket = self.bucket_of(rows);
         let key = mode_key(mode);
         let Some(plan) = self.cache.get(bucket, cols, k, &key) else {
             return false;
@@ -1605,6 +1845,112 @@ mod tests {
         assert_eq!(flipped.algo, RowAlgo::Sort, "roles swapped again");
         assert_eq!(flipped.shadow.unwrap().demotions, 2, "counter accumulated");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cadence_stretches_under_sustained_load_and_restores_with_hysteresis() {
+        let p = Planner::new(PlannerConfig {
+            shadow_every: 4,
+            shadow_every_max: 16,
+            shadow_busy_rows: 1000,
+            calib_rows: 0,
+            ..PlannerConfig::default()
+        });
+        assert_eq!(p.shadow_cadence(), 4);
+        // one busy report is noise, not pressure
+        p.note_load(5000, None);
+        assert_eq!(p.shadow_cadence(), 4);
+        // the second consecutive one stretches x2
+        p.note_load(5000, None);
+        assert_eq!(p.shadow_cadence(), 8);
+        // near-deadline slack counts as busy even with an empty queue
+        p.note_load(0, Some(100));
+        p.note_load(0, Some(100));
+        assert_eq!(p.shadow_cadence(), 16);
+        // the configured ceiling holds
+        p.note_load(5000, None);
+        p.note_load(5000, None);
+        assert_eq!(p.shadow_cadence(), 16);
+        // restoring wants a longer streak: three idle reports change
+        // nothing...
+        for _ in 0..3 {
+            p.note_load(0, None);
+        }
+        assert_eq!(p.shadow_cadence(), 16);
+        // ...the fourth steps back down, towards (never past) the base
+        p.note_load(0, None);
+        assert_eq!(p.shadow_cadence(), 8);
+        // an alternating load signal resets both streaks: no flapping
+        for _ in 0..8 {
+            p.note_load(5000, None);
+            p.note_load(0, None);
+        }
+        assert_eq!(p.shadow_cadence(), 8);
+        // sustained calm walks all the way back to the base and stops
+        for _ in 0..20 {
+            p.note_load(0, None);
+        }
+        assert_eq!(p.shadow_cadence(), 4);
+        // shadow_due gates on the effective cadence
+        let fired = (0..8).filter(|_| p.shadow_due()).count();
+        assert_eq!(fired, 2, "cadence 4 over 8 calls fires twice");
+    }
+
+    #[test]
+    fn cadence_is_inert_when_shadowing_is_off() {
+        let p = quick_planner(); // shadow_every = 0
+        p.note_load(1_000_000, Some(0));
+        p.note_load(1_000_000, Some(0));
+        assert_eq!(p.shadow_cadence(), 0);
+        assert!(!p.shadow_due());
+    }
+
+    #[test]
+    fn relearned_buckets_rekey_plans_and_redirect_lookups() {
+        let p = quick_planner();
+        let first = p.plan(500, 96, 8, Mode::EXACT); // medium under seeds
+        assert_eq!(first.source, PlanSource::Calibrated);
+        assert_eq!(p.cache().len(), 1);
+        // below the sample floor nothing moves
+        assert!(!p.relearn_buckets(&[4u32; 8]));
+        // a skewed window: two thirds of traffic is tiny, one third bulk
+        let mut window = Vec::new();
+        window.extend(std::iter::repeat(8u32).take(100));
+        window.extend(std::iter::repeat(16u32).take(100));
+        window.extend(std::iter::repeat(2000u32).take(100));
+        assert!(p.relearn_buckets(&window));
+        let learned = p.cache().bounds();
+        assert_ne!(learned, RowBucket::DEFAULT_BOUNDS);
+        assert!(learned.1 >= learned.0 * 2, "degenerate split: {learned:?}");
+        // the cached plan was re-keyed by its probe geometry, so the
+        // same request recalls it instead of re-calibrating
+        let recalled = p.plan(500, 96, 8, Mode::EXACT);
+        assert_eq!(recalled.source, PlanSource::Cached, "calibration survived");
+        assert_eq!(recalled.algo, first.algo);
+        assert_eq!(p.cache().len(), 1);
+        // a tiny request now calibrates in its own (learned) bucket at
+        // the learned geometry
+        let small = p.plan(10, 96, 8, Mode::EXACT);
+        assert_eq!(small.source, PlanSource::Calibrated);
+        assert_eq!(p.cache().len(), 2);
+        // quantile jitter below the move threshold must not re-key
+        let mut jitter = Vec::new();
+        jitter.extend(std::iter::repeat(8u32).take(100));
+        jitter.extend(std::iter::repeat(20u32).take(100));
+        jitter.extend(std::iter::repeat(2000u32).take(100));
+        assert!(!p.relearn_buckets(&jitter));
+        assert_eq!(p.cache().bounds(), learned);
+    }
+
+    #[test]
+    fn pinned_planners_do_not_relearn_buckets() {
+        let p = Planner::new(PlannerConfig {
+            force: Some(ForceAlgo::RTopK),
+            calib_rows: 0,
+            ..PlannerConfig::default()
+        });
+        assert!(!p.relearn_buckets(&vec![8u32; 300]));
+        assert_eq!(p.cache().bounds(), RowBucket::DEFAULT_BOUNDS);
     }
 
     #[test]

@@ -102,6 +102,26 @@ pub fn prior_cost(algo: RowAlgo, m: usize, k: usize) -> f64 {
     }
 }
 
+/// Optimistic per-row execution-time floor in nanoseconds for shape
+/// `(m, k, mode)`: the cheapest candidate's prior cycle count at the
+/// A6000 clock, assuming perfect row-parallel occupancy across every
+/// SM. Deliberately the *most favorable* defensible estimate —
+/// deadline-feasibility admission multiplies it by a request's rows,
+/// so a request is refused only when even an ideally-parallel device
+/// could not finish inside its deadline. Real hosts are slower; the
+/// admission layer layers the measured ns-per-row EWMA on top once
+/// batches flow.
+pub fn floor_ns_per_row(m: usize, k: usize, mode: Mode) -> f64 {
+    let cheapest = crate::plan::candidates(m, k, mode)
+        .into_iter()
+        .map(|a| prior_cost(a, m, k))
+        .fold(f64::INFINITY, f64::min);
+    if !cheapest.is_finite() {
+        return 0.0;
+    }
+    cheapest / CostModel::A6000_CLOCK_GHZ / CostModel::A6000_SMS as f64
+}
+
 /// Candidates ranked cheapest-first by the prior.
 pub fn rank(candidates: &[RowAlgo], m: usize, k: usize) -> Vec<(RowAlgo, f64)> {
     let mut scored: Vec<(RowAlgo, f64)> = candidates
@@ -162,6 +182,25 @@ mod tests {
         assert_eq!(expected_iters(Mode::EXACT, 1, 1), 1.0);
         assert_eq!(expected_iters(Mode::EarlyStop { max_iter: 6 }, 256, 32), 6.0);
         assert!(expected_iters(Mode::EXACT, 256, 64) > 8.0);
+    }
+
+    #[test]
+    fn feasibility_floor_is_positive_optimistic_and_monotone() {
+        let f = floor_ns_per_row(256, 32, Mode::EXACT);
+        assert!(f > 0.0 && f.is_finite());
+        // wider rows cost more, even at the floor
+        assert!(floor_ns_per_row(4096, 32, Mode::EXACT) > f);
+        // the floor is the *cheapest* candidate: never above any
+        // single candidate's own prior at the same scale
+        let cheapest_cycles = f
+            * CostModel::A6000_CLOCK_GHZ
+            * CostModel::A6000_SMS as f64;
+        for algo in [RowAlgo::RTopK(Mode::EXACT), RowAlgo::Heap, RowAlgo::Sort] {
+            assert!(cheapest_cycles <= prior_cost(algo, 256, 32) + 1e-9);
+        }
+        // approximate modes floor on the paper's kernel alone
+        let es = floor_ns_per_row(256, 32, Mode::EarlyStop { max_iter: 2 });
+        assert!(es > 0.0 && es.is_finite());
     }
 
     #[test]

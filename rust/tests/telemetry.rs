@@ -1,0 +1,246 @@
+//! Integration: the telemetry feedback loop end to end — the hub's
+//! queryable LoadSnapshot, load-adaptive shadow cadence, learned
+//! row-bucket boundaries persisting as plan-cache schema v4, and
+//! deadline-feasibility admission (with the quota/infeasible counter
+//! split). Everything here is deterministic: backlog is injected
+//! through the hub's probe seam, never raced through real queues.
+
+use rtopk::config::{PlanConfig, ServeConfig};
+use rtopk::coordinator::{
+    Metrics, QueueGauges, QueueProbe, SubmitRequest, TopKService,
+};
+use rtopk::plan::{Planner, PlannerConfig, RowBucket};
+use rtopk::topk::types::Mode;
+use rtopk::topk::verify::is_exact;
+use rtopk::util::json;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A queue-gauges source the tests control directly: what the batcher
+/// is to the real service, minus the nondeterminism of actual queues.
+struct FakeQueue(Mutex<QueueGauges>);
+
+impl FakeQueue {
+    fn new() -> Arc<FakeQueue> {
+        Arc::new(FakeQueue(Mutex::new(QueueGauges::default())))
+    }
+    fn set(&self, queued_rows: u64, min_slack_us: Option<u64>) {
+        *self.0.lock().unwrap() = QueueGauges {
+            queued_rows,
+            queued_requests: if queued_rows == 0 { 0 } else { 1 },
+            min_slack_us,
+        };
+    }
+}
+
+impl QueueProbe for FakeQueue {
+    fn queue_gauges(&self) -> QueueGauges {
+        self.0.lock().unwrap().clone()
+    }
+}
+
+/// The scheduler's per-batch feedback step: read the hub's gauges,
+/// feed them to the planner's cadence controller.
+fn feed(hub: &Metrics, planner: &Planner, times: usize) {
+    for _ in 0..times {
+        let g = hub.queue_gauges();
+        planner.note_load(g.queued_rows, g.min_slack_us);
+    }
+}
+
+#[test]
+fn cadence_stretches_under_backlog_and_restores_when_idle() {
+    let hub = Metrics::default();
+    let probe = FakeQueue::new();
+    hub.set_queue_probe(probe.clone());
+    let planner = Planner::new(PlannerConfig {
+        calib_rows: 0,
+        shadow_every: 8,
+        shadow_every_max: 32,
+        shadow_busy_rows: 100,
+        ..PlannerConfig::default()
+    });
+    assert_eq!(planner.shadow_cadence(), 8);
+
+    // two consecutive busy reports double the cadence; the first alone
+    // does nothing (hysteresis)
+    probe.set(500, None);
+    feed(&hub, &planner, 1);
+    assert_eq!(planner.shadow_cadence(), 8);
+    feed(&hub, &planner, 1);
+    assert_eq!(planner.shadow_cadence(), 16);
+    // sustained pressure keeps doubling up to the ceiling, then holds
+    feed(&hub, &planner, 2);
+    assert_eq!(planner.shadow_cadence(), 32);
+    feed(&hub, &planner, 10);
+    assert_eq!(planner.shadow_cadence(), 32, "capped at shadow_every_max");
+
+    // an alternating busy/idle signal never flaps the duty cycle
+    for _ in 0..6 {
+        probe.set(500, None);
+        feed(&hub, &planner, 1);
+        probe.set(0, None);
+        feed(&hub, &planner, 1);
+    }
+    assert_eq!(planner.shadow_cadence(), 32);
+
+    // four consecutive idle reports halve it, stepwise back to base
+    probe.set(0, None);
+    feed(&hub, &planner, 4);
+    assert_eq!(planner.shadow_cadence(), 16);
+    feed(&hub, &planner, 4);
+    assert_eq!(planner.shadow_cadence(), 8);
+    feed(&hub, &planner, 8);
+    assert_eq!(planner.shadow_cadence(), 8, "never below the base");
+
+    // near-deadline traffic counts as busy even with a shallow queue
+    probe.set(1, Some(1_500));
+    feed(&hub, &planner, 2);
+    assert_eq!(planner.shadow_cadence(), 16);
+}
+
+#[test]
+fn infeasible_twin_rejected_feasible_twin_served() {
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 100,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Rng::seed_from(0x7E1E);
+    // a request so large the cost-model floor alone proves a 2 us
+    // deadline unmeetable, no backlog required
+    let x = RowMatrix::random_normal(1 << 17, 8, &mut rng);
+    let err = svc
+        .submit(
+            SubmitRequest::new(x.clone(), 2)
+                .mode(Mode::EXACT)
+                .tenant("edge")
+                .deadline(Duration::from_micros(2)),
+        )
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("infeasible"), "got: {err}");
+    assert!(err.contains("edge"), "names the tenant: {err}");
+
+    let snap = svc.load_snapshot();
+    assert_eq!(snap.infeasible_total, 1);
+    assert_eq!(snap.rejected_total, 0, "not a quota rejection");
+    assert_eq!(snap.timed_out_total, 0, "refused before it could time out");
+    let t = snap.tenants.iter().find(|t| t.tenant == "edge").unwrap();
+    assert_eq!(t.infeasible, 1);
+    assert_eq!(t.rejected, 0);
+
+    // the feasible twin — same matrix, generous deadline — is served
+    let res = svc
+        .submit(
+            SubmitRequest::new(x.clone(), 2)
+                .mode(Mode::EXACT)
+                .tenant("edge")
+                .deadline(Duration::from_secs(30)),
+        )
+        .unwrap();
+    assert!(is_exact(&x, &res));
+    let snap = svc.load_snapshot();
+    assert_eq!(snap.requests_total, 1);
+    assert_eq!(snap.infeasible_total, 1, "the refusal did not double-count");
+    assert!(snap.ns_per_row > 0, "serving the twin set the rate EWMA");
+}
+
+#[test]
+fn injected_backlog_makes_deadlines_infeasible_until_drained() {
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 100,
+        ..Default::default()
+    })
+    .unwrap();
+    // teach the hub a service rate (1 ms per 1000 rows = 1000 ns/row),
+    // then inject a million-row backlog through the probe seam
+    svc.metrics().record_batch_timing(1000, Duration::from_millis(1));
+    let probe = FakeQueue::new();
+    probe.set(1_000_000, None);
+    svc.metrics().set_queue_probe(probe.clone());
+
+    // 1M queued rows x 1000 ns/row = 1 s of backlog: a 10 ms deadline
+    // on even a tiny request is provably unmeetable
+    let mut rng = Rng::seed_from(0xB10C);
+    let x = RowMatrix::random_normal(4, 32, &mut rng);
+    let req = || {
+        SubmitRequest::new(x.clone(), 4)
+            .mode(Mode::EXACT)
+            .deadline(Duration::from_millis(10))
+    };
+    let err = svc.submit(req()).unwrap_err().to_string();
+    assert!(err.contains("infeasible"), "got: {err}");
+    assert_eq!(svc.load_snapshot().infeasible_total, 1);
+
+    // drain the injected backlog: the identical request is now
+    // feasible and served inside the same deadline
+    probe.set(0, None);
+    let res = svc.submit(req()).unwrap();
+    assert!(is_exact(&x, &res));
+    let snap = svc.load_snapshot();
+    assert_eq!(snap.requests_total, 1);
+    assert_eq!(snap.infeasible_total, 1);
+    assert_eq!(snap.timed_out_total, 0);
+}
+
+#[test]
+fn skewed_workload_learns_buckets_and_persists_schema_v4() {
+    let path =
+        std::env::temp_dir().join("rtopk_telemetry_e2e_cache.json");
+    let _ = std::fs::remove_file(&path);
+    let svc = TopKService::cpu_only(&ServeConfig {
+        workers: 1,
+        max_wait_us: 50,
+        plan: PlanConfig {
+            calib_rows: 0,
+            cache_path: Some(path.to_string_lossy().into_owned()),
+            ..PlanConfig::default()
+        },
+        ..Default::default()
+    })
+    .unwrap();
+
+    // bimodal request sizes far from the default (64, 1024) split:
+    // sequential submit-and-wait makes each request its own batch, so
+    // the scheduler's every-64-batches relearn fires deterministically
+    // on a 32x{8-row} + 32x{2000-row} window
+    let mut rng = Rng::seed_from(0x5E_ED);
+    for i in 0..70 {
+        let rows = if i % 2 == 0 { 8 } else { 2000 };
+        let x = RowMatrix::random_normal(rows, 32, &mut rng);
+        let res = svc
+            .submit(SubmitRequest::new(x.clone(), 4).mode(Mode::EXACT))
+            .unwrap();
+        assert!(is_exact(&x, &res));
+    }
+
+    // the planner now buckets by the learned (8, 2000) boundaries: 16
+    // rows was "small" under the defaults, is medium-regime now
+    assert_eq!(RowBucket::of(16), RowBucket::Le64);
+    assert_eq!(svc.planner().bucket_of(16), RowBucket::Le1024);
+    assert_eq!(svc.planner().bucket_of(2000), RowBucket::Le1024);
+    let snap = svc.load_snapshot();
+    assert!(snap.rows_p50 == 8 || snap.rows_p50 == 2000, "{}", snap.rows_p50);
+    assert!(snap.rows_p90 >= snap.rows_p50);
+
+    // shutdown persists the cache; the document on disk is schema v4
+    // carrying the learned, non-default boundaries
+    svc.shutdown();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = json::parse(&text).unwrap();
+    assert_eq!(doc.get("version").and_then(|v| v.as_usize()), Some(4));
+    let bounds: Vec<usize> = doc
+        .get("bucket_bounds")
+        .and_then(|v| v.as_array())
+        .unwrap()
+        .iter()
+        .map(|b| b.as_usize().unwrap())
+        .collect();
+    assert_eq!(bounds, vec![8, 2000], "learned, not the (64, 1024) seed");
+    let _ = std::fs::remove_file(&path);
+}
