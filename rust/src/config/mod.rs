@@ -360,6 +360,39 @@ impl TenantsConfig {
     }
 }
 
+/// Persistent-worker-pool knobs (the `[pool]` section). The service
+/// applies these before the pool's first job (`util::pool::configure`);
+/// the `RTOPK_THREADS` env var overrides `threads` when set to a valid
+/// positive integer.
+///
+/// * `threads` — total participants per fork-join job (resident
+///   workers + the submitting thread). 0 (default) sizes from
+///   `available_parallelism`.
+/// * `warm_on_start` — start the pool and run one no-op job at service
+///   build (default true), so the first client batch does not pay
+///   worker start-up. `false` defers to the first parallel call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolConfig {
+    pub threads: usize,
+    pub warm_on_start: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { threads: 0, warm_on_start: true }
+    }
+}
+
+impl PoolConfig {
+    pub fn from_config(c: &Config) -> PoolConfig {
+        let d = PoolConfig::default();
+        PoolConfig {
+            threads: c.get_or("pool.threads", d.threads),
+            warm_on_start: c.get_or("pool.warm_on_start", d.warm_on_start),
+        }
+    }
+}
+
 /// Default per-tenant cap on blocked cooperative submitters (the
 /// `[serve] max_blocked_waiters` knob). Single source of truth — the
 /// tenant directory's default references this constant.
@@ -410,6 +443,8 @@ pub struct ServeConfig {
     pub backend: BackendConfig,
     /// per-tenant weights, quotas, and execution overrides
     pub tenants: TenantsConfig,
+    /// persistent worker-pool sizing / warmup knobs
+    pub pool: PoolConfig,
 }
 
 impl Default for ServeConfig {
@@ -428,6 +463,7 @@ impl Default for ServeConfig {
             plan: PlanConfig::default(),
             backend: BackendConfig::default(),
             tenants: TenantsConfig::default(),
+            pool: PoolConfig::default(),
         }
     }
 }
@@ -459,6 +495,7 @@ impl ServeConfig {
             plan: PlanConfig::from_config(c),
             backend: BackendConfig::from_config(c),
             tenants: TenantsConfig::from_config(c),
+            pool: PoolConfig::from_config(c),
         }
     }
 }
@@ -676,6 +713,22 @@ mod tests {
         assert_eq!(s.workers, 3);
         assert_eq!(s.tenants.get("heavy").unwrap().weight, 8);
         assert!(ServeConfig::default().tenants.tenants.is_empty());
+    }
+
+    #[test]
+    fn pool_config_section_parses_with_defaults() {
+        let d = PoolConfig::default();
+        assert_eq!(d.threads, 0, "0 = size from available_parallelism");
+        assert!(d.warm_on_start);
+        let c = Config::parse("[pool]\nthreads = 6\nwarm_on_start = false").unwrap();
+        let p = PoolConfig::from_config(&c);
+        assert_eq!(p.threads, 6);
+        assert!(!p.warm_on_start);
+        // ServeConfig carries the section
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.pool.threads, 6);
+        assert!(!s.pool.warm_on_start);
+        assert_eq!(ServeConfig::default().pool, PoolConfig::default());
     }
 
     #[test]

@@ -404,6 +404,9 @@ pub struct LoadSnapshot {
     pub errors_total: u64,
     /// per-tenant live load + shed counters, sorted by tenant name
     pub tenants: Vec<TenantLoad>,
+    /// execution-substrate saturation: the persistent worker pool's
+    /// counters (all zeros until the pool has run a job)
+    pub pool: crate::util::pool::PoolGauges,
 }
 
 impl LoadSnapshot {
@@ -479,6 +482,20 @@ impl LoadSnapshot {
                         })
                         .collect(),
                 ),
+            ),
+            (
+                "pool",
+                json::obj(vec![
+                    ("workers", json::num(self.pool.workers as f64)),
+                    ("jobs", json::num(self.pool.jobs as f64)),
+                    ("inline_jobs", json::num(self.pool.inline_jobs as f64)),
+                    ("tasks", json::num(self.pool.tasks as f64)),
+                    ("steals", json::num(self.pool.steals as f64)),
+                    ("parks", json::num(self.pool.parks as f64)),
+                    ("unparks", json::num(self.pool.unparks as f64)),
+                    ("busy_ns", json::num(self.pool.busy_ns as f64)),
+                    ("utilization", json::num(self.pool.utilization)),
+                ]),
             ),
         ])
     }
@@ -772,6 +789,9 @@ impl TelemetryHub {
             timed_out_total: self.counters.get(Counter::TimedOut),
             errors_total: self.counters.get(Counter::Errors),
             tenants,
+            // read live from the pool, like the queue gauges: the pool
+            // is process-global, so no registration step is needed
+            pool: crate::util::pool::gauges(),
         }
     }
 
@@ -1153,6 +1173,7 @@ mod tests {
             "timed_out_total",
             "errors_total",
             "tenants",
+            "pool",
         ] {
             assert!(v.get(key).is_some(), "snapshot JSON missing {key}");
         }
@@ -1160,5 +1181,20 @@ mod tests {
         assert_eq!(tenants.len(), 1);
         assert_eq!(tenants[0].get("tenant").unwrap().as_str(), Some("a"));
         assert!(tenants[0].get("infeasible").is_some());
+        // pool gauges are always present (zeros until the pool runs)
+        let pool = v.get("pool").unwrap();
+        for key in [
+            "workers",
+            "jobs",
+            "inline_jobs",
+            "tasks",
+            "steals",
+            "parks",
+            "unparks",
+            "busy_ns",
+            "utilization",
+        ] {
+            assert!(pool.get(key).is_some(), "pool gauges missing {key}");
+        }
     }
 }

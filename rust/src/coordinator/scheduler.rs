@@ -50,7 +50,13 @@
 //! stretch the re-probe cadence, idle restores it). Every
 //! [`RELEARN_EVERY`] batches the planner re-derives its row-bucket
 //! boundaries from the hub's recent-request-rows window
-//! (`Planner::relearn_buckets`).
+//! (`Planner::relearn_buckets`). The hub's `LoadSnapshot` additionally
+//! carries the persistent worker pool's gauges
+//! (`crate::util::pool::gauges` — jobs, steals, park/unpark counts,
+//! worker utilization), read live at snapshot time, so consumers see
+//! execution-substrate saturation next to queue depth; shadow results
+//! are recycled into the result-buffer freelist since they never leave
+//! this module.
 
 use crate::backend::{
     registry::QUARANTINE_AFTER, BackendRegistry, CPU_BACKEND_ID,
@@ -141,7 +147,12 @@ fn shadow_reprobe(
     match rb.execute(&spec, mats, shape.k, shape.mode) {
         Ok(res) => {
             let runner_secs = t0.elapsed().as_secs_f64();
-            std::hint::black_box(res);
+            // shadow results never leave the scheduler: return their
+            // buffers to the result freelist instead of dropping them
+            for r in res {
+                std::hint::black_box(&r);
+                r.recycle();
+            }
             planner.record_shadow(
                 shape.rows,
                 shape.cols,

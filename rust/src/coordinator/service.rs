@@ -139,6 +139,15 @@ impl TopKService {
         }
         let default_over_quota = OverQuotaPolicy::parse(&cfg.over_quota_policy)
             .map_err(|e| anyhow!("[serve] over_quota_policy: {e}"))?;
+        // Apply `[pool]` sizing before the pool's first job (the global
+        // pool is created lazily and sized once), then optionally warm
+        // it so the first client batch pays no worker start-up.
+        if cfg.pool.threads > 0 {
+            crate::util::pool::configure(cfg.pool.threads);
+        }
+        if cfg.pool.warm_on_start {
+            crate::util::pool::warm();
+        }
         let tenants = Arc::new(
             TenantDirectory::from_config(&cfg.tenants)
                 .map_err(anyhow::Error::msg)?

@@ -42,6 +42,13 @@ pub fn probe_workload(rows: usize, m: usize) -> RowMatrix {
 }
 
 /// Best-of-`reps` wall time of one candidate on `x` (one warmup run).
+///
+/// Warms the persistent worker pool first so the measurement reflects
+/// pool-resident dispatch — the rate every steady-state batch sees —
+/// rather than charging the first candidate for worker start-up.
+/// Probe results are recycled into the result-buffer freelist (they
+/// never leave the calibrator), so repeated calibration allocates no
+/// output buffers.
 pub fn time_candidate(
     x: &RowMatrix,
     k: usize,
@@ -49,12 +56,14 @@ pub fn time_candidate(
     grain: usize,
     reps: usize,
 ) -> f64 {
-    std::hint::black_box(rowwise_topk_grained(x, k, algo, grain));
+    crate::util::pool::warm();
+    std::hint::black_box(rowwise_topk_grained(x, k, algo, grain)).recycle();
     let mut best = f64::INFINITY;
     for _ in 0..reps.max(1) {
         let t0 = Instant::now();
-        std::hint::black_box(rowwise_topk_grained(x, k, algo, grain));
+        let res = std::hint::black_box(rowwise_topk_grained(x, k, algo, grain));
         let dt = t0.elapsed().as_secs_f64();
+        res.recycle();
         if dt < best {
             best = dt;
         }

@@ -111,6 +111,15 @@ pub fn prior_cost(algo: RowAlgo, m: usize, k: usize) -> f64 {
 /// could not finish inside its deadline. Real hosts are slower; the
 /// admission layer layers the measured ns-per-row EWMA on top once
 /// batches flow.
+///
+/// The floor carries **no per-batch dispatch term**: since the
+/// persistent worker pool ([`crate::util::pool`]) replaced
+/// spawn-per-call threading, batch dispatch is a queue push + condvar
+/// wake whose cost is (a) independent of rows and (b) already inside
+/// the measured ns-per-row EWMA the admission layer prefers once
+/// traffic flows. Charging a fixed spawn overhead here would make the
+/// floor *pessimistic* for exactly the small batches it must stay
+/// optimistic for.
 pub fn floor_ns_per_row(m: usize, k: usize, mode: Mode) -> f64 {
     let cheapest = crate::plan::candidates(m, k, mode)
         .into_iter()

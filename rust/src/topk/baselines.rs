@@ -9,6 +9,9 @@
 //! RTop-K's results are unsorted, which is part of the paper's argument.
 
 /// Reusable per-thread scratch buffers (allocation-free hot loop).
+/// Arenas are grow-only: [`Scratch::ensure`] reserves for the largest
+/// (M, k) shape seen on this thread and never shrinks, so steady-state
+/// batches of recurring shapes perform zero allocations.
 pub struct Scratch {
     pub keys: Vec<u32>,
     pub tmp_idx: Vec<u32>,
@@ -16,13 +19,51 @@ pub struct Scratch {
     pub hist: [usize; 256],
 }
 
+/// Scratch allocation events (creates and grows) across all threads —
+/// the dispatch-overhead bench and the arena tests use deltas of this
+/// to prove the steady state allocates nothing.
+static SCRATCH_ALLOCS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total scratch-arena allocation events so far (process-wide,
+/// monotone). A delta of zero across a window of batches means every
+/// row ran out of pre-grown arenas.
+pub fn scratch_allocs() -> u64 {
+    SCRATCH_ALLOCS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
 impl Scratch {
-    pub fn new(m: usize, _k: usize) -> Self {
-        Scratch {
-            keys: Vec::with_capacity(m),
-            tmp_idx: Vec::with_capacity(m),
-            pairs: Vec::with_capacity(m.next_power_of_two()),
-            hist: [0; 256],
+    /// An empty arena; buffers grow on first [`Scratch::ensure`]. Does
+    /// not count as an allocation event.
+    pub fn empty() -> Self {
+        Scratch { keys: Vec::new(), tmp_idx: Vec::new(), pairs: Vec::new(), hist: [0; 256] }
+    }
+
+    pub fn new(m: usize, k: usize) -> Self {
+        let mut s = Scratch::empty();
+        s.ensure(m, k);
+        s
+    }
+
+    /// Grow-only reserve for an (M, k) row shape: after this call the
+    /// buffers hold at least the capacities `Scratch::new(m, k)` would
+    /// have provided. Counts one allocation event if anything grew.
+    pub fn ensure(&mut self, m: usize, _k: usize) {
+        let mut grew = false;
+        if self.keys.capacity() < m {
+            self.keys.reserve(m - self.keys.len());
+            grew = true;
+        }
+        if self.tmp_idx.capacity() < m {
+            self.tmp_idx.reserve(m - self.tmp_idx.len());
+            grew = true;
+        }
+        let pcap = m.next_power_of_two();
+        if self.pairs.capacity() < pcap {
+            self.pairs.reserve(pcap - self.pairs.len());
+            grew = true;
+        }
+        if grew {
+            SCRATCH_ALLOCS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         }
     }
 }

@@ -44,13 +44,46 @@ pub struct TopKResult {
     pub indices: Vec<u32>,
 }
 
+/// Bounded freelist of retired result buffers, so internal callers that
+/// produce-and-discard results in a loop (calibration probes, shadow
+/// re-probes, benches) do not allocate a fresh pair of vectors per
+/// batch. Capacity-keyed: `zeros` reuses the first entry large enough
+/// for the requested (rows, k). Results delivered to clients are owned
+/// by the client and never enter the freelist.
+static RESULT_POOL: std::sync::Mutex<Vec<(Vec<f32>, Vec<u32>)>> =
+    std::sync::Mutex::new(Vec::new());
+
+/// Retired buffers kept at most; beyond this, `recycle` just drops.
+const RESULT_POOL_CAP: usize = 16;
+
 impl TopKResult {
+    /// A zero-filled (rows, k) result. Reuses a retired buffer pair from
+    /// the freelist when one with sufficient capacity exists; semantics
+    /// are identical to fresh allocation (fully zeroed, exact length).
     pub fn zeros(rows: usize, k: usize) -> Self {
-        TopKResult {
-            rows,
-            k,
-            values: vec![0.0; rows * k],
-            indices: vec![0; rows * k],
+        let need = rows * k;
+        let reused = {
+            let mut pool = RESULT_POOL.lock().unwrap();
+            pool.iter()
+                .position(|(v, i)| v.capacity() >= need && i.capacity() >= need)
+                .map(|at| pool.swap_remove(at))
+        };
+        let (mut values, mut indices) = reused.unwrap_or_default();
+        values.clear();
+        values.resize(need, 0.0);
+        indices.clear();
+        indices.resize(need, 0);
+        TopKResult { rows, k, values, indices }
+    }
+
+    /// Return this result's buffers to the freelist for a future
+    /// [`TopKResult::zeros`] call. Use only for results that never leave
+    /// the library (probe/bench outputs); client-facing results are
+    /// simply dropped by the client.
+    pub fn recycle(self) {
+        let mut pool = RESULT_POOL.lock().unwrap();
+        if pool.len() < RESULT_POOL_CAP {
+            pool.push((self.values, self.indices));
         }
     }
 
@@ -85,6 +118,24 @@ mod tests {
         assert_eq!(Mode::EXACT.tag(), "exact");
         assert_eq!(Mode::EarlyStop { max_iter: 4 }.tag(), "es4");
         assert_eq!(Mode::Exact { eps_rel: 1e-4 }.tag(), "exact_eps1e-4");
+    }
+
+    #[test]
+    fn recycled_buffers_come_back_zeroed() {
+        let mut r = TopKResult::zeros(4, 3);
+        r.values.fill(9.0);
+        r.indices.fill(9);
+        r.recycle();
+        // Any subsequent zeros() call — whether or not it wins the
+        // recycled pair under concurrent tests — must be fully zeroed
+        // and exactly sized.
+        let fresh = TopKResult::zeros(2, 3);
+        assert_eq!(fresh.values, vec![0.0; 6]);
+        assert_eq!(fresh.indices, vec![0; 6]);
+        let bigger = TopKResult::zeros(8, 3);
+        assert_eq!(bigger.values.len(), 24);
+        assert!(bigger.values.iter().all(|&v| v == 0.0));
+        assert!(bigger.indices.iter().all(|&i| i == 0));
     }
 
     #[test]

@@ -6,9 +6,11 @@
 //!   `--json` output.
 //! * [`matrix`] — dense row-major `RowMatrix` with seeded random
 //!   fills; the unit of every request and probe workload.
-//! * [`pool`] — scoped fork-join helpers over std threads with
-//!   disjoint-slot parallel fills; sized from `available_parallelism`
-//!   (`RTOPK_THREADS` overrides).
+//! * [`pool`] — persistent fork-join worker pool over std threads:
+//!   resident workers parked on a condvar, atomic-counter dynamic
+//!   scheduling, disjoint-slot parallel fills, panic propagation, and
+//!   queryable gauges; sized from `RTOPK_THREADS` > `[pool] threads` >
+//!   `available_parallelism`.
 //! * [`prop`] — tiny property-test harness: seeded case generation
 //!   with replayable failing seeds.
 //! * [`rng`] — deterministic xoshiro256++ with SplitMix64 seeding;

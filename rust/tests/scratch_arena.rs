@@ -1,0 +1,76 @@
+//! Scratch-arena behavior: correctness when one thread's grow-only
+//! arena serves interleaved (cols, k) shapes back to back, and the
+//! zero-allocation steady state the persistent pool exists to provide.
+//!
+//! This is deliberately the only test in its binary: the allocation
+//! counter (`baselines::scratch_allocs`) is process-global, and a
+//! sibling test running topk work concurrently would fault its own
+//! arenas mid-window.
+
+use rtopk::topk::baselines::scratch_allocs;
+use rtopk::topk::rowwise::{rowwise_topk_grained, RowAlgo};
+use rtopk::topk::types::Mode;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+
+#[test]
+fn interleaved_shapes_stay_correct_and_steady_state_allocates_zero() {
+    let mut rng = Rng::seed_from(0xA7E4A);
+    // Interleave shapes so each thread's arena alternates between
+    // larger and smaller (M, k) demands — the reuse pattern where a
+    // stale capacity or un-cleared buffer would corrupt a selection.
+    let shapes: [(usize, usize, usize); 5] = [
+        (40, 96, 8),
+        (24, 256, 32),
+        (64, 33, 5),
+        (16, 512, 64),
+        (48, 96, 12),
+    ];
+    let algos = [
+        RowAlgo::Heap,
+        RowAlgo::Radix,
+        RowAlgo::Bucket,
+        RowAlgo::RTopK(Mode::EXACT),
+    ];
+    for round in 0..3 {
+        for (i, &(rows, cols, k)) in shapes.iter().enumerate() {
+            let x = RowMatrix::random_normal(rows, cols, &mut rng);
+            let algo = algos[(round + i) % algos.len()];
+            let res = rowwise_topk_grained(&x, k, algo, 2);
+            for r in 0..rows {
+                let mut got = res.row_values(r).to_vec();
+                got.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let mut want = x.row(r).to_vec();
+                want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                want.truncate(k);
+                assert_eq!(
+                    got, want,
+                    "{} round {round} shape ({rows},{cols},{k}) row {r}",
+                    algo.name()
+                );
+                for (v, &ix) in res.row_values(r).iter().zip(res.row_indices(r)) {
+                    assert_eq!(*v, x.get(r, ix as usize), "{}", algo.name());
+                }
+            }
+        }
+    }
+
+    // Steady state: once every participating thread's arena has grown
+    // to the recurring shape, a window of repeated batches performs
+    // zero allocation events. Dynamic scheduling can leave a slow
+    // worker's arena cold for a while, so earlier windows double as
+    // warmup; convergence within the attempt budget is required.
+    let x = RowMatrix::random_normal(64, 512, &mut rng);
+    let mut last = u64::MAX;
+    for _ in 0..10 {
+        let before = scratch_allocs();
+        for _ in 0..20 {
+            rowwise_topk_grained(&x, 64, RowAlgo::Radix, 4).recycle();
+        }
+        last = scratch_allocs() - before;
+        if last == 0 {
+            break;
+        }
+    }
+    assert_eq!(last, 0, "steady-state batches must not allocate scratch");
+}
