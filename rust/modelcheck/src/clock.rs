@@ -1,0 +1,86 @@
+//! Vector clocks for happens-before tracking.
+//!
+//! Every model thread carries a [`VClock`]; every synchronization object
+//! (mutex, atomic) carries the clock released into it. Acquire-style
+//! operations join the object's clock into the thread's, release-style
+//! operations join the thread's into the object's, and the data-race
+//! detector compares the clocks of tracked raw-memory accesses: a read
+//! and a write to the same location race unless one's clock is wholly
+//! `<=` the other's.
+
+/// A per-thread logical clock: component `i` is how far thread `i`'s
+/// history this clock has observed. Indexing past the end reads 0, so
+/// clocks grow lazily as threads spawn.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VClock(Vec<u32>);
+
+impl VClock {
+    pub fn new() -> VClock {
+        VClock(Vec::new())
+    }
+
+    pub fn get(&self, tid: usize) -> u32 {
+        self.0.get(tid).copied().unwrap_or(0)
+    }
+
+    fn grow_to(&mut self, tid: usize) {
+        if self.0.len() <= tid {
+            self.0.resize(tid + 1, 0);
+        }
+    }
+
+    /// Advance this clock's own component (one new event on `tid`).
+    pub fn tick(&mut self, tid: usize) {
+        self.grow_to(tid);
+        self.0[tid] += 1;
+    }
+
+    /// Pointwise max: after `a.join(b)`, `a` has observed everything
+    /// either clock had.
+    pub fn join(&mut self, other: &VClock) {
+        self.grow_to(other.0.len().saturating_sub(1));
+        for (i, v) in other.0.iter().enumerate() {
+            if *v > self.0[i] {
+                self.0[i] = *v;
+            }
+        }
+    }
+
+    /// `self <= other` pointwise: every event this clock has seen,
+    /// `other` has also seen — i.e. self happens-before-or-equals other.
+    pub fn leq(&self, other: &VClock) -> bool {
+        self.0
+            .iter()
+            .enumerate()
+            .all(|(i, v)| *v <= other.get(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_and_leq() {
+        let mut a = VClock::new();
+        let mut b = VClock::new();
+        a.tick(0); // a = [1]
+        b.tick(1); // b = [0,1]
+        assert!(!a.leq(&b));
+        assert!(!b.leq(&a));
+        let mut c = a.clone();
+        c.join(&b); // c = [1,1]
+        assert!(a.leq(&c));
+        assert!(b.leq(&c));
+        assert!(!c.leq(&a));
+    }
+
+    #[test]
+    fn empty_clock_precedes_everything() {
+        let empty = VClock::new();
+        let mut t = VClock::new();
+        t.tick(3);
+        assert!(empty.leq(&t));
+        assert!(empty.leq(&empty));
+    }
+}

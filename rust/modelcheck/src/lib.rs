@@ -1,0 +1,326 @@
+//! # modelcheck — deterministic thread-interleaving explorer
+//!
+//! A loom-style concurrency model checker for the rtopk serving stack,
+//! in-tree and dependency-free (the offline build cannot fetch loom or
+//! shuttle, and the checker only needs std).
+//!
+//! ## Model
+//!
+//! A test body runs many times, once per explored *schedule*. Threads
+//! are real OS threads, but at most one runs at a time: every operation
+//! on the façade primitives in [`sync`] (lock/unlock, condvar
+//! park/notify, atomic access, spawn/join, tracked raw access) is a
+//! *schedule point* where the thread parks and a controller decides who
+//! runs next. The controller either enumerates every decision
+//! depth-first ([`Strategy::Dfs`], with replay-prefix backtracking) or
+//! takes seeded random walks ([`Strategy::Random`]).
+//!
+//! What it detects:
+//!
+//! * **Deadlocks** — a wait-for graph (lock waiters → holder, joiners →
+//!   joinee) is checked for cycles every round, and a round with no
+//!   runnable thread and no pending timeout is reported with a
+//!   per-thread blocked report. Lost wakeups surface here: the condvar
+//!   park takes a schedule point *before* releasing the mutex, so the
+//!   window between a waiter's last check and its park is explorable.
+//! * **Data races on tracked raw memory** — every thread carries a
+//!   vector clock; mutexes and atomics carry the clock released into
+//!   them (acquire joins object→thread, release joins thread→object).
+//!   [`sync::race_read`]/[`sync::race_write`] declare accesses to raw
+//!   memory the type system cannot see (the pool's lifetime-erased
+//!   `*const (dyn Fn + Sync)` job body) and fail the execution when two
+//!   accesses are unordered by happens-before.
+//! * **Panics and assertion failures** in any interleaving, reported
+//!   with the failing schedule.
+//!
+//! ## Deliberate simplifications
+//!
+//! * **Sequentially consistent memory.** Vector clocks track the
+//!   *presence* of acquire/release edges per `Ordering`, but values read
+//!   are always the latest written — weak-memory reorderings are not
+//!   simulated. A missing-edge bug is caught as a race; a
+//!   wrong-ordering bug whose only symptom is a stale read is not.
+//! * **`notify_one` wakes the longest-parked waiter** (FIFO). std makes
+//!   no such promise; protocols relying on wake *order* should assert it
+//!   explicitly (as the tenant FIFO suite does) rather than lean on the
+//!   model's choice.
+//! * **No spurious wakeups.** Waiters wake only by notify or timeout.
+//!   Code must still loop on its predicate (std requires it), but the
+//!   model does not exercise the spurious path.
+//! * **Model time advances when idle**: timeouts fire only when no
+//!   thread can run, and then *all* pending `wait_timeout`s fire at
+//!   once (wake order among them is still explored as separate
+//!   grants). This keeps poll loops from turning into livelock or an
+//!   unbounded schedule tree during exploration, at the cost of never
+//!   exploring "timeout although work was pending".
+//! * **`RwLock` is not modelled** (re-exported as std): read guards are
+//!   harmless; write guards must not be held across schedule points or
+//!   the harness stalls (a 10s watchdog reports the blocked thread).
+//!
+//! ## Writing a suite
+//!
+//! The body must be self-contained: create every thread and sync object
+//! inside the closure (process globals keep state across executions and
+//! are invisible to the explorer), avoid wall-clock branching (DFS
+//! replays decision traces; nondeterminism is detected and reported —
+//! use [`Strategy::Random`] if unavoidable), and avoid spin-waits (park
+//! on a condvar instead; a spinning thread never blocks, so DFS keeps
+//! granting it).
+//!
+//! ```
+//! use modelcheck::{model, sync::{Arc, Mutex, Condvar}};
+//!
+//! model(|| {
+//!     let pair = Arc::new((Mutex::new(false), Condvar::new()));
+//!     let p2 = Arc::clone(&pair);
+//!     let t = modelcheck::sync::thread::spawn(move || {
+//!         let (m, cv) = &*p2;
+//!         *m.lock().unwrap() = true;
+//!         cv.notify_one();
+//!     });
+//!     let (m, cv) = &*pair;
+//!     let mut done = m.lock().unwrap();
+//!     while !*done {
+//!         done = cv.wait(done).unwrap();
+//!     }
+//!     drop(done);
+//!     t.join().unwrap();
+//! });
+//! ```
+
+mod clock;
+mod sched;
+pub mod sync;
+
+pub use sched::{model, Checker, Failure, Report, Strategy};
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use super::sync::{thread, Arc, Condvar, Mutex};
+    use super::{model, Checker};
+
+    #[test]
+    fn dfs_explores_mutex_counter_exhaustively() {
+        let report = Checker::dfs().check(|| {
+            let n = Arc::new(Mutex::new(0usize));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let n = Arc::clone(&n);
+                    thread::spawn(move || {
+                        *n.lock().unwrap() += 1;
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        assert!(report.failure.is_none(), "{:?}", report.failure);
+        assert!(report.complete, "DFS should exhaust this tiny tree");
+        assert!(
+            report.executions > 1,
+            "two racing lockers must yield multiple schedules"
+        );
+    }
+
+    /// The lost-wakeup shape the checker exists for: the flag is set
+    /// outside the mutex, so the notify can land in the window between
+    /// the waiter's check and its park — some schedule deadlocks.
+    #[test]
+    fn lost_wakeup_is_caught() {
+        let report = Checker::dfs().check(|| {
+            let flag = Arc::new(AtomicBool::new(false));
+            let m = Arc::new(Mutex::new(()));
+            let cv = Arc::new(Condvar::new());
+            let (f2, cv2) = (Arc::clone(&flag), Arc::clone(&cv));
+            let setter = thread::spawn(move || {
+                f2.store(true, Ordering::Release);
+                cv2.notify_one();
+            });
+            let mut g = m.lock().unwrap();
+            while !flag.load(Ordering::Acquire) {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            setter.join().unwrap();
+        });
+        let failure = report.failure.expect("DFS must find the lost wakeup");
+        assert!(
+            failure.message.contains("deadlock"),
+            "unexpected failure: {}",
+            failure.message
+        );
+    }
+
+    /// Same protocol with the store under the mutex: the waiter either
+    /// sees the flag before parking or is parked when the notify fires.
+    #[test]
+    fn flag_under_lock_is_clean() {
+        model(|| {
+            let flag = Arc::new(AtomicBool::new(false));
+            let m = Arc::new(Mutex::new(()));
+            let cv = Arc::new(Condvar::new());
+            let (f2, m2, cv2) =
+                (Arc::clone(&flag), Arc::clone(&m), Arc::clone(&cv));
+            let setter = thread::spawn(move || {
+                let g = m2.lock().unwrap();
+                f2.store(true, Ordering::Release);
+                drop(g);
+                cv2.notify_one();
+            });
+            let mut g = m.lock().unwrap();
+            while !flag.load(Ordering::Acquire) {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            setter.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn unsynchronized_raw_access_is_a_race() {
+        const LOC: usize = 0xbeef;
+        let report = Checker::dfs().check(|| {
+            let a = thread::spawn(|| super::sync::race_write(LOC));
+            let b = thread::spawn(|| super::sync::race_write(LOC));
+            let _ = a.join();
+            let _ = b.join();
+        });
+        let failure = report.failure.expect("unordered writes must race");
+        assert!(
+            failure.message.contains("data race"),
+            "unexpected failure: {}",
+            failure.message
+        );
+    }
+
+    #[test]
+    fn mutex_ordered_raw_access_is_clean() {
+        const LOC: usize = 0xfeed;
+        let report = Checker::dfs().check(|| {
+            let m = Arc::new(Mutex::new(()));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = Arc::clone(&m);
+                    thread::spawn(move || {
+                        let _g = m.lock().unwrap();
+                        super::sync::race_write(LOC);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            // Join edges order this read after both writes.
+            super::sync::race_read(LOC);
+        });
+        assert!(report.failure.is_none(), "{:?}", report.failure);
+        assert!(report.complete);
+    }
+
+    #[test]
+    fn lock_order_inversion_is_a_deadlock() {
+        let report = Checker::dfs().check(|| {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t = thread::spawn(move || {
+                let _gb = b2.lock().unwrap();
+                let _ga = a2.lock().unwrap();
+            });
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+            drop(_gb);
+            drop(_ga);
+            let _ = t.join();
+        });
+        let failure = report.failure.expect("AB-BA must deadlock somewhere");
+        assert!(
+            failure.message.contains("deadlock"),
+            "unexpected failure: {}",
+            failure.message
+        );
+    }
+
+    #[test]
+    fn panicking_thread_is_reported_with_schedule() {
+        let report = Checker::dfs().check(|| {
+            let t = thread::spawn(|| panic!("boom in model"));
+            let _ = t.join();
+        });
+        let failure = report.failure.expect("panic must be reported");
+        assert!(
+            failure.message.contains("boom in model"),
+            "unexpected failure: {}",
+            failure.message
+        );
+        assert!(!failure.schedule.is_empty());
+    }
+
+    #[test]
+    fn wait_timeout_fires_only_when_idle() {
+        // A waiter nobody ever notifies: the logical timeout fires and
+        // the body completes — no deadlock report, no real 1h sleep.
+        let report = Checker::dfs().check(|| {
+            let m = Mutex::new(());
+            let cv = Condvar::new();
+            let g = m.lock().unwrap();
+            let (g, res) = cv
+                .wait_timeout(g, std::time::Duration::from_secs(3600))
+                .unwrap();
+            assert!(res.timed_out());
+            drop(g);
+        });
+        assert!(report.failure.is_none(), "{:?}", report.failure);
+    }
+
+    #[test]
+    fn random_strategy_smoke() {
+        let report = Checker::random(40, 0x5eed).check(|| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..3)
+                .map(|_| {
+                    let n = Arc::clone(&n);
+                    thread::spawn(move || {
+                        n.fetch_add(1, Ordering::AcqRel);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(n.load(Ordering::Acquire), 3);
+        });
+        assert!(report.failure.is_none(), "{:?}", report.failure);
+        assert_eq!(report.executions, 40);
+    }
+
+    /// Outside a checker the façade is plain std: real threads, real
+    /// blocking — this is what `cargo test` without the model cfg runs.
+    #[test]
+    fn passthrough_behaves_like_std() {
+        let n = Arc::new(Mutex::new(0usize));
+        let cv = Arc::new(Condvar::new());
+        let (n2, cv2) = (Arc::clone(&n), Arc::clone(&cv));
+        let t = thread::Builder::new()
+            .name("pt".to_string())
+            .spawn(move || {
+                *n2.lock().unwrap() += 1;
+                cv2.notify_all();
+            })
+            .unwrap();
+        let mut g = n.lock().unwrap();
+        while *g == 0 {
+            g = cv.wait(g).unwrap();
+        }
+        assert_eq!(*g, 1);
+        drop(g);
+        t.join().unwrap();
+        super::sync::race_write(0x1); // no-op outside the model
+        let b = AtomicBool::new(false);
+        assert!(!b.swap(true, Ordering::AcqRel));
+        assert!(b.load(Ordering::Acquire));
+    }
+}

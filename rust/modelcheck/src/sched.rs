@@ -1,0 +1,1048 @@
+//! The deterministic scheduler: one logical thread runs at a time, every
+//! synchronization operation is a *schedule point*, and the controller
+//! explores the tree of schedule decisions (exhaustive DFS or seeded
+//! random walks). See the crate docs for the model and its limits.
+//!
+//! Mechanics: model threads are real OS threads, but each one parks on
+//! the execution's condvar whenever it reaches a schedule point and only
+//! proceeds when the controller grants it the "running" token. Because
+//! at most one model thread is ever running, the region between two
+//! schedule points executes atomically with respect to the model — which
+//! is exactly why every cross-thread operation (lock, atomic, condvar
+//! park/notify, join, tracked raw access) must pass through a schedule
+//! point, and why plain data shared between those points is invisible to
+//! the explorer unless flagged via [`race_read`]/[`race_write`].
+
+use crate::clock::VClock;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, OnceLock};
+use std::time::Duration;
+
+/// Panic payload used to unwind model threads when an execution aborts
+/// (failure found, or wind-down after a sibling failed). Never reported
+/// as an application panic.
+pub(crate) struct AbortToken;
+
+// ---------------------------------------------------------------------------
+// Per-thread context
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub exec: Arc<Exec>,
+    pub tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// The current thread's model context, if it is a model thread.
+pub(crate) fn cur() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// The context to schedule under: `None` for passthrough threads *and*
+/// for model threads that are already unwinding (their teardown —
+/// destructors, pool shutdown from `Drop` — degrades to real std
+/// operations so a panic during abort can never double-panic the
+/// process).
+pub(crate) fn scheduled() -> Option<Ctx> {
+    if std::thread::panicking() {
+        return None;
+    }
+    cur()
+}
+
+// ---------------------------------------------------------------------------
+// Execution state
+// ---------------------------------------------------------------------------
+
+/// What a quiescent thread is waiting to do next.
+#[derive(Clone, Debug)]
+pub(crate) enum Op {
+    /// Plain schedule point (atomic access, notify, tracked access).
+    Point(&'static str),
+    /// Acquire the mutex at this address; enabled iff unheld.
+    Lock(usize),
+    /// About to atomically release `mutex` and park on `cv`. Always
+    /// enabled — granting it models the preemption window between a
+    /// waiter's last check and its park (where lost wakeups live).
+    CvPark { cv: usize, mutex: usize, timeout: bool },
+    /// Join thread `tid`; enabled iff that thread finished.
+    Join(usize),
+}
+
+#[derive(Clone, Debug)]
+enum Status {
+    /// OS thread exists but has not reached its first schedule point.
+    Spawning,
+    /// Parked at a schedule point, op published, waiting for a grant.
+    Ready(Op),
+    /// Holds the running token (at most one thread at a time).
+    Running,
+    /// Parked on a condvar: released the mutex, waiting for a notify
+    /// (or, when `timeout`, for the controller to fire its timeout —
+    /// model time only advances when nothing else can run).
+    CvWaiting { cv: usize, timeout: bool, notified: bool, fired: bool },
+    Finished,
+}
+
+struct Th {
+    name: String,
+    status: Status,
+    clock: VClock,
+    /// Set by the controller when granting a wake out of `CvWaiting`:
+    /// true iff the wake was a fired timeout, not a notify.
+    wake_was_timeout: bool,
+}
+
+#[derive(Default)]
+struct MutexSt {
+    held_by: Option<usize>,
+    clock: VClock,
+}
+
+/// Race-detector record for one tracked raw-memory location.
+#[derive(Default)]
+struct Loc {
+    last_write: Option<(usize, VClock)>,
+    /// Most recent read per thread since the last write.
+    reads: Vec<(usize, VClock)>,
+}
+
+pub(crate) struct ExecState {
+    threads: Vec<Th>,
+    mutexes: HashMap<usize, MutexSt>,
+    atomics: HashMap<usize, VClock>,
+    /// Park order per condvar address (front = longest-parked waiter).
+    cv_waiters: HashMap<usize, VecDeque<usize>>,
+    locs: HashMap<usize, Loc>,
+    /// Schedule decisions made so far: (number of choices, chosen index).
+    decisions: Vec<(usize, usize)>,
+    step: usize,
+    /// Replay prefix for DFS (beyond it, the picker decides).
+    prefix: Vec<usize>,
+    picker: Picker,
+    max_steps: usize,
+    trace: Vec<String>,
+    failure: Option<String>,
+    aborting: bool,
+}
+
+pub(crate) struct Exec {
+    state: StdMutex<ExecState>,
+    cv: StdCondvar,
+}
+
+enum Picker {
+    /// DFS: first enabled choice once past the replay prefix.
+    First,
+    /// Seeded random walk (no replay).
+    Random(u64),
+}
+
+fn splitmix(s: &mut u64) -> u64 {
+    *s = s.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *s;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl ExecState {
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+        self.aborting = true;
+    }
+
+    fn trace_push(&mut self, line: String) {
+        // Bound memory on long random walks; the tail is what matters.
+        if self.trace.len() >= 512 {
+            self.trace.drain(..256);
+            self.trace.insert(0, "… (earlier steps trimmed)".to_string());
+        }
+        self.trace.push(line);
+    }
+
+    fn all_quiescent(&self) -> bool {
+        !self
+            .threads
+            .iter()
+            .any(|t| matches!(t.status, Status::Spawning | Status::Running))
+    }
+
+    fn all_finished(&self) -> bool {
+        self.threads.iter().all(|t| matches!(t.status, Status::Finished))
+    }
+
+    /// Grantable choices this round, ordered by thread id (determinism).
+    fn choices(&self) -> Vec<Choice> {
+        let mut out = Vec::new();
+        for (tid, th) in self.threads.iter().enumerate() {
+            match &th.status {
+                Status::Ready(Op::Point(_)) | Status::Ready(Op::CvPark { .. }) => {
+                    out.push(Choice::Grant(tid))
+                }
+                Status::Ready(Op::Lock(m)) => {
+                    if self.mutexes.get(m).and_then(|s| s.held_by).is_none() {
+                        out.push(Choice::Grant(tid));
+                    }
+                }
+                Status::Ready(Op::Join(t)) => {
+                    if matches!(self.threads[*t].status, Status::Finished) {
+                        out.push(Choice::Grant(tid));
+                    }
+                }
+                Status::CvWaiting { notified, fired, .. } => {
+                    if *notified || *fired {
+                        out.push(Choice::Grant(tid));
+                    }
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Wait-for edges for blocked threads: `Lock` points at the holder,
+    /// `Join` at the joinee. Used for cycle detection and the deadlock
+    /// report.
+    fn wait_edges(&self) -> Vec<(usize, usize, String)> {
+        let mut edges = Vec::new();
+        for (tid, th) in self.threads.iter().enumerate() {
+            match &th.status {
+                Status::Ready(Op::Lock(m)) => {
+                    if let Some(holder) =
+                        self.mutexes.get(m).and_then(|s| s.held_by)
+                    {
+                        edges.push((
+                            tid,
+                            holder,
+                            format!("lock {:#x} held by t{holder}", m),
+                        ));
+                    }
+                }
+                Status::Ready(Op::Join(t)) => {
+                    if !matches!(self.threads[*t].status, Status::Finished) {
+                        edges.push((tid, *t, format!("join of t{t}")));
+                    }
+                }
+                _ => {}
+            }
+        }
+        edges
+    }
+
+    fn wait_cycle(&self) -> Option<Vec<usize>> {
+        let edges = self.wait_edges();
+        let next: HashMap<usize, usize> =
+            edges.iter().map(|(a, b, _)| (*a, *b)).collect();
+        for &start in next.keys() {
+            let (mut slow, mut path) = (start, vec![start]);
+            while let Some(&n) = next.get(&slow) {
+                if let Some(pos) = path.iter().position(|&p| p == n) {
+                    return Some(path[pos..].to_vec());
+                }
+                path.push(n);
+                slow = n;
+                if path.len() > self.threads.len() + 1 {
+                    break;
+                }
+            }
+        }
+        None
+    }
+
+    fn blocked_report(&self, header: &str) -> String {
+        let mut lines = vec![header.to_string()];
+        for (tid, th) in self.threads.iter().enumerate() {
+            let what = match &th.status {
+                Status::Ready(Op::Lock(m)) => {
+                    let holder = self
+                        .mutexes
+                        .get(m)
+                        .and_then(|s| s.held_by)
+                        .map(|h| format!(" held by t{h}"))
+                        .unwrap_or_default();
+                    format!("blocked locking mutex {:#x}{holder}", m)
+                }
+                Status::Ready(Op::Join(t)) => format!("waiting to join t{t}"),
+                Status::Ready(Op::CvPark { cv, .. }) => {
+                    format!("about to park on condvar {:#x}", cv)
+                }
+                Status::Ready(Op::Point(l)) => format!("at point `{l}`"),
+                Status::CvWaiting { cv, timeout, .. } => format!(
+                    "parked on condvar {:#x}{}",
+                    cv,
+                    if *timeout { " (with timeout)" } else { "" }
+                ),
+                Status::Running => "running".to_string(),
+                Status::Spawning => "spawning".to_string(),
+                Status::Finished => continue,
+            };
+            lines.push(format!("  t{tid} [{}]: {what}", th.name));
+        }
+        lines.join("\n")
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Choice {
+    /// Hand the running token to this thread (granting its pending op
+    /// or waking it out of a condvar park).
+    Grant(usize),
+}
+
+// ---------------------------------------------------------------------------
+// Thread-side schedule points (called from sync.rs)
+// ---------------------------------------------------------------------------
+
+fn abort_unwind() -> ! {
+    std::panic::panic_any(AbortToken)
+}
+
+/// Park at a schedule point until the controller grants the running
+/// token. The op must already describe what this thread does next.
+fn yield_op(ctx: &Ctx, op: Op) {
+    let mut st = ctx.exec.state.lock().unwrap();
+    if st.aborting {
+        drop(st);
+        abort_unwind();
+    }
+    st.threads[ctx.tid].status = Status::Ready(op);
+    ctx.exec.cv.notify_all();
+    loop {
+        if st.aborting {
+            drop(st);
+            abort_unwind();
+        }
+        if matches!(st.threads[ctx.tid].status, Status::Running) {
+            return;
+        }
+        st = ctx.exec.cv.wait(st).unwrap();
+    }
+}
+
+/// Plain schedule point.
+pub(crate) fn point(ctx: &Ctx, label: &'static str) {
+    yield_op(ctx, Op::Point(label));
+}
+
+/// Schedule point acquiring `mutex_addr`; on return the model holds it.
+pub(crate) fn acquire_mutex(ctx: &Ctx, mutex_addr: usize) {
+    yield_op(ctx, Op::Lock(mutex_addr));
+}
+
+/// Release `mutex_addr`. Not itself a schedule point: the release only
+/// *enables* other threads, and the next decision round sees it.
+pub(crate) fn release_mutex(ctx: &Ctx, mutex_addr: usize) {
+    let mut st = ctx.exec.state.lock().unwrap();
+    let tid = ctx.tid;
+    st.threads[tid].clock.tick(tid);
+    let thread_clock = st.threads[tid].clock.clone();
+    let m = st.mutexes.entry(mutex_addr).or_default();
+    if m.held_by == Some(tid) {
+        m.held_by = None;
+    }
+    m.clock.join(&thread_clock);
+    ctx.exec.cv.notify_all();
+}
+
+/// Schedule point for "about to release the mutex and park" — granting
+/// another thread here models the lost-wakeup window (a notify fired
+/// now is not seen by this not-yet-parked waiter).
+pub(crate) fn cv_park_point(
+    ctx: &Ctx,
+    cv_addr: usize,
+    mutex_addr: usize,
+    timeout: bool,
+) {
+    yield_op(ctx, Op::CvPark { cv: cv_addr, mutex: mutex_addr, timeout });
+}
+
+/// Park on `cv_addr` until notified or (when `timeout`) the controller
+/// fires this waiter's timeout. The caller must already have released
+/// the mutex (guard drop) *after* its `cv_park_point` — no schedule
+/// point separates release from park, so the pair is atomic, matching
+/// std's guarantee. Returns true iff the wake was a fired timeout.
+pub(crate) fn cv_park(ctx: &Ctx, cv_addr: usize, timeout: bool) -> bool {
+    let tid = ctx.tid;
+    let mut st = ctx.exec.state.lock().unwrap();
+    if st.aborting {
+        drop(st);
+        abort_unwind();
+    }
+    st.cv_waiters.entry(cv_addr).or_default().push_back(tid);
+    st.threads[tid].status = Status::CvWaiting {
+        cv: cv_addr,
+        timeout,
+        notified: false,
+        fired: false,
+    };
+    ctx.exec.cv.notify_all();
+    loop {
+        if st.aborting {
+            // Deregister so an aborted waiter is not "woken" later.
+            if let Some(q) = st.cv_waiters.get_mut(&cv_addr) {
+                q.retain(|&t| t != tid);
+            }
+            drop(st);
+            abort_unwind();
+        }
+        if matches!(st.threads[tid].status, Status::Running) {
+            return st.threads[tid].wake_was_timeout;
+        }
+        st = ctx.exec.cv.wait(st).unwrap();
+    }
+}
+
+/// Notify effect (the caller passed a `Point` first): mark one / all
+/// parked waiters notified. `notify_one` wakes in park (FIFO) order —
+/// a deliberate simplification over std's unspecified order.
+pub(crate) fn cv_notify(ctx: &Ctx, cv_addr: usize, all: bool) {
+    let mut st = ctx.exec.state.lock().unwrap();
+    let waiters: Vec<usize> = st
+        .cv_waiters
+        .get(&cv_addr)
+        .map(|q| q.iter().copied().collect())
+        .unwrap_or_default();
+    for tid in waiters {
+        if let Status::CvWaiting { notified, .. } =
+            &mut st.threads[tid].status
+        {
+            if !*notified {
+                *notified = true;
+                if !all {
+                    break;
+                }
+            }
+        }
+    }
+    ctx.exec.cv.notify_all();
+}
+
+/// Happens-before bookkeeping for an atomic access (the caller passed a
+/// `Point` first and performs the real operation around this call).
+pub(crate) fn atomic_hb(ctx: &Ctx, addr: usize, ord: Ordering, is_load: bool, is_store: bool) {
+    let mut st = ctx.exec.state.lock().unwrap();
+    let tid = ctx.tid;
+    let acquire = matches!(
+        ord,
+        Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst
+    ) && is_load;
+    let release = matches!(
+        ord,
+        Ordering::Release | Ordering::AcqRel | Ordering::SeqCst
+    ) && is_store;
+    if acquire {
+        let obj = st.atomics.entry(addr).or_default().clone();
+        st.threads[tid].clock.join(&obj);
+    }
+    if release {
+        let thread_clock = st.threads[tid].clock.clone();
+        st.atomics.entry(addr).or_default().join(&thread_clock);
+    }
+}
+
+/// Tracked raw-memory read: fails the execution if it is not ordered
+/// after the location's last write.
+pub(crate) fn race_read(ctx: &Ctx, addr: usize) {
+    point(ctx, "race.read");
+    let mut st = ctx.exec.state.lock().unwrap();
+    let tid = ctx.tid;
+    let my = st.threads[tid].clock.clone();
+    let loc = st.locs.entry(addr).or_default();
+    if let Some((wtid, wclock)) = &loc.last_write {
+        if !wclock.leq(&my) {
+            let msg = format!(
+                "data race: t{tid} reads {:#x} unordered with the write \
+                 by t{wtid} (no happens-before edge)",
+                addr
+            );
+            st.fail(msg);
+            ctx.exec.cv.notify_all();
+            drop(st);
+            abort_unwind();
+        }
+    }
+    let loc = st.locs.entry(addr).or_default();
+    loc.reads.retain(|(t, _)| *t != tid);
+    loc.reads.push((tid, my));
+}
+
+/// Tracked raw-memory write: fails the execution if any prior access to
+/// the location is not ordered before it.
+pub(crate) fn race_write(ctx: &Ctx, addr: usize) {
+    point(ctx, "race.write");
+    let mut st = ctx.exec.state.lock().unwrap();
+    let tid = ctx.tid;
+    let my = st.threads[tid].clock.clone();
+    let loc = st.locs.entry(addr).or_default();
+    let mut conflict: Option<String> = None;
+    if let Some((wtid, wclock)) = &loc.last_write {
+        if !wclock.leq(&my) {
+            conflict = Some(format!("the write by t{wtid}"));
+        }
+    }
+    if conflict.is_none() {
+        for (rtid, rclock) in &loc.reads {
+            if *rtid != tid && !rclock.leq(&my) {
+                conflict = Some(format!("the read by t{rtid}"));
+                break;
+            }
+        }
+    }
+    if let Some(what) = conflict {
+        let msg = format!(
+            "data race: t{tid} writes {:#x} unordered with {what} \
+             (no happens-before edge)",
+            addr
+        );
+        st.fail(msg);
+        ctx.exec.cv.notify_all();
+        drop(st);
+        abort_unwind();
+    }
+    let loc = st.locs.entry(addr).or_default();
+    loc.last_write = Some((tid, my));
+    loc.reads.clear();
+}
+
+/// Block until `target` finishes (schedule point), joining its clock.
+pub(crate) fn join_thread(ctx: &Ctx, target: usize) {
+    yield_op(ctx, Op::Join(target));
+    let mut st = ctx.exec.state.lock().unwrap();
+    let final_clock = st.threads[target].clock.clone();
+    st.threads[ctx.tid].clock.join(&final_clock);
+}
+
+/// Register a child thread (spawn is not itself a schedule point: the
+/// child's first schedule point is the synchronization event).
+pub(crate) fn register_child(ctx: &Ctx, name: String) -> usize {
+    let mut st = ctx.exec.state.lock().unwrap();
+    let parent = ctx.tid;
+    st.threads[parent].clock.tick(parent);
+    let mut clock = st.threads[parent].clock.clone();
+    let tid = st.threads.len();
+    clock.tick(tid);
+    st.threads.push(Th {
+        name,
+        status: Status::Spawning,
+        clock,
+        wake_was_timeout: false,
+    });
+    tid
+}
+
+/// Model-thread body wrapper: first schedule point, run, then mark
+/// finished (recording a non-abort panic as the execution's failure).
+pub(crate) fn run_thread_body<T>(
+    exec: Arc<Exec>,
+    tid: usize,
+    f: impl FnOnce() -> T,
+) -> T {
+    CTX.with(|c| {
+        *c.borrow_mut() = Some(Ctx { exec: Arc::clone(&exec), tid })
+    });
+    let ctx = Ctx { exec: Arc::clone(&exec), tid };
+    point(&ctx, "start");
+    let result = catch_unwind(AssertUnwindSafe(f));
+    let mut st = exec.state.lock().unwrap();
+    if let Err(payload) = &result {
+        if !payload.is::<AbortToken>() {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            let name = st.threads[tid].name.clone();
+            st.fail(format!("thread t{tid} [{name}] panicked: {msg}"));
+        }
+    }
+    st.threads[tid].clock.tick(tid);
+    st.threads[tid].status = Status::Finished;
+    exec.cv.notify_all();
+    drop(st);
+    CTX.with(|c| *c.borrow_mut() = None);
+    match result {
+        Ok(v) => v,
+        Err(payload) => resume_unwind(payload),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controller
+// ---------------------------------------------------------------------------
+
+/// One finished execution's outcome.
+struct ExecOutcome {
+    decisions: Vec<(usize, usize)>,
+    failure: Option<String>,
+    trace: Vec<String>,
+}
+
+/// How long the controller waits for a model thread to reach a schedule
+/// point before declaring the harness stalled (a real block outside the
+/// model, e.g. contending a non-façade lock with a parked thread).
+const STALL: Duration = Duration::from_secs(10);
+
+/// Silence the default panic hook for [`AbortToken`] unwinds: aborting
+/// an execution panics every parked model thread, and printing a
+/// backtrace per thread per aborted schedule would drown real output.
+/// Application panics still print normally.
+fn install_quiet_abort_hook() {
+    static HOOK: OnceLock<()> = OnceLock::new();
+    HOOK.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !info.payload().is::<AbortToken>() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn run_one<F>(
+    body: &Arc<F>,
+    prefix: Vec<usize>,
+    picker: Picker,
+    max_steps: usize,
+) -> ExecOutcome
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_quiet_abort_hook();
+    let exec = Arc::new(Exec {
+        state: StdMutex::new(ExecState {
+            threads: Vec::new(),
+            mutexes: HashMap::new(),
+            atomics: HashMap::new(),
+            cv_waiters: HashMap::new(),
+            locs: HashMap::new(),
+            decisions: Vec::new(),
+            step: 0,
+            prefix,
+            picker,
+            max_steps,
+            trace: Vec::new(),
+            failure: None,
+            aborting: false,
+        }),
+        cv: StdCondvar::new(),
+    });
+    // Register and spawn the root thread (t0).
+    {
+        let mut st = exec.state.lock().unwrap();
+        let mut clock = VClock::new();
+        clock.tick(0);
+        st.threads.push(Th {
+            name: "root".to_string(),
+            status: Status::Spawning,
+            clock,
+            wake_was_timeout: false,
+        });
+    }
+    let root = {
+        let exec = Arc::clone(&exec);
+        let body = Arc::clone(body);
+        std::thread::Builder::new()
+            .name("mc-root".to_string())
+            .spawn(move || {
+                run_thread_body(exec, 0, move || body());
+            })
+            .expect("spawn model root thread")
+    };
+
+    let mut stalled = false;
+    loop {
+        let mut st = exec.state.lock().unwrap();
+        // Wait for quiescence (no thread spawning or running).
+        let mut waited = Duration::ZERO;
+        while !st.all_quiescent() {
+            let (s, timeout) =
+                exec.cv.wait_timeout(st, Duration::from_millis(100)).unwrap();
+            st = s;
+            if timeout.timed_out() {
+                waited += Duration::from_millis(100);
+                if waited >= STALL {
+                    let report = st.blocked_report(
+                        "harness stall: a model thread blocked outside \
+                         the model (real lock or unported primitive?)",
+                    );
+                    st.fail(report);
+                    stalled = true;
+                    break;
+                }
+            }
+        }
+        if stalled {
+            exec.cv.notify_all();
+            break;
+        }
+        if st.aborting || st.all_finished() {
+            exec.cv.notify_all();
+            break;
+        }
+        // Immediate wait-for-graph cycle check (partial deadlocks).
+        if let Some(cycle) = st.wait_cycle() {
+            let header = format!(
+                "deadlock: wait-for cycle {}",
+                cycle
+                    .iter()
+                    .map(|t| format!("t{t}"))
+                    .collect::<Vec<_>>()
+                    .join(" -> ")
+            );
+            let report = st.blocked_report(&header);
+            st.fail(report);
+            exec.cv.notify_all();
+            continue;
+        }
+        let choices = st.choices();
+        if choices.is_empty() {
+            // Nothing runnable: advance model time by firing EVERY
+            // pending timeout at once. This is a forced transition, not
+            // a schedule decision — firing timeouts selectively would
+            // hand DFS an infinite branch on poll-loop protocols (fire
+            // one waiter, it rechecks, reparks, fire it again, ...).
+            // Waking order among the fired waiters is still explored:
+            // each is a separate grant at the next decision round.
+            let mut fired_count = 0usize;
+            for th in st.threads.iter_mut() {
+                if let Status::CvWaiting {
+                    timeout: true,
+                    notified: false,
+                    fired,
+                    ..
+                } = &mut th.status
+                {
+                    if !*fired {
+                        *fired = true;
+                        fired_count += 1;
+                    }
+                }
+            }
+            if fired_count == 0 {
+                let report = st.blocked_report(
+                    "deadlock: no runnable thread and no pending timeout \
+                     (lost wakeup or wait-for cycle)",
+                );
+                st.fail(report);
+                exec.cv.notify_all();
+                continue;
+            }
+            st.trace_push(format!(
+                "advance model time: fired {fired_count} pending timeout(s)"
+            ));
+            continue;
+        }
+        let n = choices.len();
+        let step = st.step;
+        let idx = if step < st.prefix.len() {
+            let want = st.prefix[step];
+            if want >= n {
+                st.fail(format!(
+                    "internal: DFS replay diverged at step {step} \
+                     (wanted choice {want} of {n}) — the model body is \
+                     nondeterministic (wall-clock reads?); use the \
+                     random strategy for this suite"
+                ));
+                exec.cv.notify_all();
+                continue;
+            }
+            want
+        } else {
+            match &mut st.picker {
+                Picker::First => 0,
+                Picker::Random(seed) => (splitmix(seed) % n as u64) as usize,
+            }
+        };
+        st.decisions.push((n, idx));
+        st.step += 1;
+        if st.step > st.max_steps {
+            let report = st.blocked_report(&format!(
+                "step bound exceeded ({} schedule points): livelock, or \
+                 raise max_steps",
+                st.max_steps
+            ));
+            st.fail(report);
+            exec.cv.notify_all();
+            continue;
+        }
+        match choices[idx] {
+            Choice::Grant(tid) => {
+                let desc = match &st.threads[tid].status {
+                    Status::Ready(op) => format!("{op:?}"),
+                    Status::CvWaiting { fired, notified, .. } => format!(
+                        "Wake({})",
+                        if *notified { "notified" } else if *fired { "timeout" } else { "?" }
+                    ),
+                    other => format!("{other:?}"),
+                };
+                st.trace_push(format!("step {step}: grant t{tid} {desc}"));
+                st.threads[tid].clock.tick(tid);
+                match st.threads[tid].status.clone() {
+                    Status::Ready(Op::Lock(m)) => {
+                        let obj_clock = {
+                            let mu = st.mutexes.entry(m).or_default();
+                            mu.held_by = Some(tid);
+                            mu.clock.clone()
+                        };
+                        st.threads[tid].clock.join(&obj_clock);
+                    }
+                    Status::Ready(Op::Join(_)) => {
+                        // Clock join happens thread-side (join_thread).
+                    }
+                    Status::CvWaiting { cv, notified, fired, .. } => {
+                        if let Some(q) = st.cv_waiters.get_mut(&cv) {
+                            q.retain(|&t| t != tid);
+                        }
+                        st.threads[tid].wake_was_timeout =
+                            fired && !notified;
+                    }
+                    _ => {}
+                }
+                st.threads[tid].status = Status::Running;
+            }
+        }
+        exec.cv.notify_all();
+    }
+
+    // Wind down: wait (bounded) for every model thread to finish, then
+    // join the root OS thread.
+    {
+        let mut st = exec.state.lock().unwrap();
+        let mut waited = Duration::ZERO;
+        while !st.all_finished() && waited < STALL {
+            let (s, t) =
+                exec.cv.wait_timeout(st, Duration::from_millis(100)).unwrap();
+            st = s;
+            if t.timed_out() {
+                waited += Duration::from_millis(100);
+            }
+            exec.cv.notify_all();
+        }
+        if !st.all_finished() {
+            stalled = true;
+            st.fail(
+                "harness stall during wind-down: leaking execution threads"
+                    .to_string(),
+            );
+        }
+    }
+    if !stalled {
+        let _ = root.join();
+    }
+    let st = exec.state.lock().unwrap();
+    ExecOutcome {
+        decisions: st.decisions.clone(),
+        failure: st.failure.clone(),
+        trace: st.trace.clone(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API
+// ---------------------------------------------------------------------------
+
+/// A failing schedule: what went wrong and the decision trace that got
+/// there (replay it by reading the granted ops in order).
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub message: String,
+    pub schedule: Vec<String>,
+}
+
+/// Exploration outcome.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Executions (interleavings) actually run.
+    pub executions: u64,
+    /// True iff DFS exhausted the schedule tree (always false for the
+    /// random strategy unless the tree had a single schedule).
+    pub complete: bool,
+    pub failure: Option<Failure>,
+}
+
+/// Exploration strategy.
+#[derive(Clone, Copy, Debug)]
+pub enum Strategy {
+    /// Depth-first over every schedule decision, up to the execution
+    /// cap. Requires a deterministic body (no wall-clock branching).
+    Dfs,
+    /// `iterations` seeded random walks. Tolerates nondeterministic
+    /// bodies (each walk is independent; no replay).
+    Random { iterations: u64, seed: u64 },
+}
+
+/// Configured model checker. `Checker::dfs()` / `Checker::random(..)`
+/// then `.check(body)`; [`model`] is the assert-on-failure shorthand.
+#[derive(Clone, Debug)]
+pub struct Checker {
+    strategy: Strategy,
+    max_executions: u64,
+    max_steps: usize,
+}
+
+impl Checker {
+    pub fn dfs() -> Checker {
+        Checker {
+            strategy: Strategy::Dfs,
+            max_executions: 20_000,
+            max_steps: 20_000,
+        }
+    }
+
+    pub fn random(iterations: u64, seed: u64) -> Checker {
+        Checker {
+            strategy: Strategy::Random { iterations, seed },
+            max_executions: iterations,
+            max_steps: 20_000,
+        }
+    }
+
+    /// Cap the number of executions (DFS stops incomplete at the cap).
+    pub fn max_executions(mut self, n: u64) -> Checker {
+        self.max_executions = n;
+        self
+    }
+
+    /// Cap schedule points per execution (livelock backstop).
+    pub fn max_steps(mut self, n: usize) -> Checker {
+        self.max_steps = n;
+        self
+    }
+
+    /// Apply `RTOPK_MC_MAX_EXECS` (CI bounds exploration time with it).
+    pub fn env_caps(mut self) -> Checker {
+        if let Ok(v) = std::env::var("RTOPK_MC_MAX_EXECS") {
+            if let Ok(n) = v.trim().parse::<u64>() {
+                if n >= 1 {
+                    self.max_executions = self.max_executions.min(n);
+                }
+            }
+        }
+        self
+    }
+
+    /// Explore `body` under the configured strategy. The body runs once
+    /// per execution on a fresh model; it must create its threads and
+    /// synchronization objects inside the call (no reuse of model state
+    /// across executions — process-global sync objects stay invisible).
+    pub fn check<F>(&self, body: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let body = Arc::new(body);
+        match self.strategy {
+            Strategy::Dfs => {
+                let mut executions = 0u64;
+                let mut prefix: Vec<usize> = Vec::new();
+                loop {
+                    let out = run_one(
+                        &body,
+                        prefix.clone(),
+                        Picker::First,
+                        self.max_steps,
+                    );
+                    executions += 1;
+                    if let Some(message) = out.failure {
+                        return Report {
+                            executions,
+                            complete: false,
+                            failure: Some(Failure {
+                                message,
+                                schedule: out.trace,
+                            }),
+                        };
+                    }
+                    // Backtrack: deepest decision with an unexplored
+                    // sibling becomes the next prefix.
+                    let mut next: Option<Vec<usize>> = None;
+                    for (i, &(n, chosen)) in
+                        out.decisions.iter().enumerate().rev()
+                    {
+                        if chosen + 1 < n {
+                            let mut p: Vec<usize> = out.decisions[..i]
+                                .iter()
+                                .map(|(_, c)| *c)
+                                .collect();
+                            p.push(chosen + 1);
+                            next = Some(p);
+                            break;
+                        }
+                    }
+                    match next {
+                        None => {
+                            return Report {
+                                executions,
+                                complete: true,
+                                failure: None,
+                            }
+                        }
+                        Some(p) => prefix = p,
+                    }
+                    if executions >= self.max_executions {
+                        return Report {
+                            executions,
+                            complete: false,
+                            failure: None,
+                        };
+                    }
+                }
+            }
+            Strategy::Random { iterations, seed } => {
+                let iterations = iterations.min(self.max_executions);
+                for i in 0..iterations {
+                    let out = run_one(
+                        &body,
+                        Vec::new(),
+                        Picker::Random(seed.wrapping_add(
+                            i.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                        )),
+                        self.max_steps,
+                    );
+                    if let Some(message) = out.failure {
+                        return Report {
+                            executions: i + 1,
+                            complete: false,
+                            failure: Some(Failure {
+                                message,
+                                schedule: out.trace,
+                            }),
+                        };
+                    }
+                }
+                Report {
+                    executions: iterations,
+                    complete: false,
+                    failure: None,
+                }
+            }
+        }
+    }
+}
+
+/// Exhaustive (bounded) DFS over `body`; panics with the failing
+/// schedule if any interleaving races, deadlocks, or panics.
+pub fn model<F>(body: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let report = Checker::dfs().env_caps().check(body);
+    if let Some(f) = report.failure {
+        panic!(
+            "model check failed after {} execution(s): {}\nschedule:\n{}",
+            report.executions,
+            f.message,
+            f.schedule.join("\n")
+        );
+    }
+}

@@ -1,0 +1,520 @@
+//! Model-aware drop-in replacements for the `std::sync` surface the
+//! serving stack uses. Each primitive wraps the real std object (so the
+//! data it protects behaves normally) and adds schedule points +
+//! happens-before bookkeeping when the calling thread is a model thread.
+//!
+//! Three operating modes per call site, decided at runtime:
+//!
+//! * **Modelled** — the thread was spawned under a [`crate::Checker`]
+//!   execution: every lock/park/notify/atomic op yields to the
+//!   controller and updates vector clocks.
+//! * **Passthrough** — not a model thread (normal `cargo test`, or the
+//!   crate compiled into the tree without `--cfg rtopk_model_check`):
+//!   behaves exactly like `std::sync`.
+//! * **Teardown** — a model thread that is already unwinding (abort or
+//!   application panic): degrades to real std operations with bounded
+//!   waits, so destructors (e.g. a pool's `Drop`-driven shutdown) can
+//!   never double-panic or hang the harness.
+//!
+//! Mixing modelled and passthrough threads on the *same* condvar is not
+//! supported: modelled waiters park on the controller, real waiters on
+//! the std condvar, and a notify only reaches both because every notify
+//! is forwarded to the std condvar too. Keep one protocol per test.
+
+use crate::sched;
+use std::sync::{
+    Condvar as StdCondvar, LockResult, Mutex as StdMutex,
+    MutexGuard as StdMutexGuard, PoisonError,
+};
+use std::time::Duration;
+
+pub use std::sync::Arc;
+// Reader-writer locks are *not* modelled: re-exported as-is so façade
+// users compile, with the rule (see rtopk's util/sync.rs) that write
+// guards must not be held across model schedule points.
+pub use std::sync::RwLock;
+
+/// Bounded wait used on teardown paths instead of an unbounded park —
+/// during an abort nobody will notify a real condvar, and destructors
+/// polling a "done" flag must still make progress.
+const TEARDOWN_WAIT: Duration = Duration::from_millis(2);
+
+// ---------------------------------------------------------------------------
+// Mutex
+// ---------------------------------------------------------------------------
+
+/// Mutex façade: a real `std::sync::Mutex` plus a model identity (its
+/// own address) used for lock-order exploration and deadlock detection.
+pub struct Mutex<T: ?Sized> {
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Mutex<T> {
+        Mutex { inner: StdMutex::new(t) }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+}
+
+impl<T: ?Sized> Mutex<T> {
+    fn addr(&self) -> usize {
+        self as *const Mutex<T> as *const () as usize
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        if let Some(ctx) = sched::scheduled() {
+            // Schedule point: enabled only while no model thread holds
+            // this mutex, so the real lock below cannot block.
+            sched::acquire_mutex(&ctx, self.addr());
+            let g = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+            Ok(MutexGuard { lock: self, inner: Some(g), model: true })
+        } else {
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), model: false }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(p.into_inner()),
+                    model: false,
+                })),
+            }
+        }
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Mutex<T> {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T: ?Sized + std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Guard façade. Dropping it releases the real lock first, then (for a
+/// modelled acquisition) records the logical release — the model
+/// release is what re-enables blocked `Lock` ops at the next decision
+/// round. The logical release runs even during unwinding (`cur`, not
+/// `scheduled`), otherwise an aborting thread would leave the model
+/// mutex held forever and every later execution would "deadlock".
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+    model: bool,
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard taken")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.inner.take();
+        if self.model {
+            if let Some(ctx) = sched::cur() {
+                sched::release_mutex(&ctx, self.lock.addr());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Condvar
+// ---------------------------------------------------------------------------
+
+/// Result of a façade `wait_timeout`, mirroring std's.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Condvar façade. Modelled waits park on the controller (the real
+/// condvar is only used by passthrough/teardown threads); the wait
+/// sequence is: `CvPark` schedule point (taken while the mutex is still
+/// held — this is the window where lost wakeups live), then guard drop
+/// (real unlock + logical release) and park as one atomic model step,
+/// then a `Lock` schedule point to reacquire on wake.
+pub struct Condvar {
+    inner: StdCondvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Condvar {
+        Condvar { inner: StdCondvar::new() }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Condvar as usize
+    }
+
+    pub fn wait<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+    ) -> LockResult<MutexGuard<'a, T>> {
+        Ok(self.wait_inner(guard, None).0)
+    }
+
+    /// Modelled timeouts are *logical*: the controller fires them only
+    /// when no other thread can run (model time advances when idle), so
+    /// the `Duration` is ignored under the model. Passthrough waits use
+    /// it for real.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        Ok(self.wait_inner(guard, Some(dur)))
+    }
+
+    fn wait_inner<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Option<Duration>,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        let lock = guard.lock;
+        match (guard.model, sched::scheduled()) {
+            (true, Some(ctx)) => {
+                let cv = self.addr();
+                let m = lock.addr();
+                sched::cv_park_point(&ctx, cv, m, dur.is_some());
+                // Unlock (real + logical) and park: no schedule point in
+                // between, so the pair is atomic, matching std.
+                drop(guard);
+                let fired = sched::cv_park(&ctx, cv, dur.is_some());
+                sched::acquire_mutex(&ctx, m);
+                let g =
+                    lock.inner.lock().unwrap_or_else(PoisonError::into_inner);
+                (
+                    MutexGuard { lock, inner: Some(g), model: true },
+                    WaitTimeoutResult(fired),
+                )
+            }
+            (model, _) => {
+                // Passthrough, or a model thread mid-unwind (teardown):
+                // real wait, bounded on teardown so an abort can't hang.
+                let std_g = guard.inner.take().expect("guard taken");
+                let teardown = model; // model guard but not scheduled
+                drop(guard); // inert for std; logical release if modelled
+                let wait_for = if teardown {
+                    Some(dur.map_or(TEARDOWN_WAIT, |d| d.min(TEARDOWN_WAIT)))
+                } else {
+                    dur
+                };
+                let (g, timed_out) = match wait_for {
+                    None => (
+                        self.inner
+                            .wait(std_g)
+                            .unwrap_or_else(PoisonError::into_inner),
+                        false,
+                    ),
+                    Some(d) => {
+                        let (g, t) = self
+                            .inner
+                            .wait_timeout(std_g, d)
+                            .unwrap_or_else(PoisonError::into_inner);
+                        (g, t.timed_out())
+                    }
+                };
+                (
+                    MutexGuard { lock, inner: Some(g), model },
+                    WaitTimeoutResult(timed_out),
+                )
+            }
+        }
+    }
+
+    pub fn notify_one(&self) {
+        if let Some(ctx) = sched::scheduled() {
+            sched::point(&ctx, "cv.notify_one");
+            sched::cv_notify(&ctx, self.addr(), false);
+        }
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        if let Some(ctx) = sched::scheduled() {
+            sched::point(&ctx, "cv.notify_all");
+            sched::cv_notify(&ctx, self.addr(), true);
+        }
+        self.inner.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Condvar {
+        Condvar::new()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Atomics
+// ---------------------------------------------------------------------------
+
+/// Atomic façades. The real atomic performs the operation (so values
+/// are always coherent); the model adds a schedule point per access and
+/// per-`Ordering` acquire/release vector-clock edges. Within the model
+/// the memory system is sequentially consistent — only the *presence*
+/// of happens-before edges is ordering-faithful, not weak-memory
+/// reordering (see the crate docs).
+pub mod atomic {
+    use crate::sched;
+    pub use std::sync::atomic::Ordering;
+    use std::sync::atomic::{
+        AtomicBool as StdBool, AtomicU64 as StdU64, AtomicUsize as StdUsize,
+    };
+
+    macro_rules! model_atomic_common {
+        ($name:ident, $std:ty, $t:ty) => {
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $t) -> $name {
+                    $name { inner: <$std>::new(v) }
+                }
+
+                fn addr(&self) -> usize {
+                    self as *const $name as usize
+                }
+
+                pub fn load(&self, ord: Ordering) -> $t {
+                    if let Some(ctx) = sched::scheduled() {
+                        sched::point(&ctx, "atomic.load");
+                        sched::atomic_hb(&ctx, self.addr(), ord, true, false);
+                    }
+                    self.inner.load(ord)
+                }
+
+                pub fn store(&self, v: $t, ord: Ordering) {
+                    if let Some(ctx) = sched::scheduled() {
+                        sched::point(&ctx, "atomic.store");
+                        self.inner.store(v, ord);
+                        sched::atomic_hb(&ctx, self.addr(), ord, false, true);
+                    } else {
+                        self.inner.store(v, ord);
+                    }
+                }
+
+                pub fn swap(&self, v: $t, ord: Ordering) -> $t {
+                    if let Some(ctx) = sched::scheduled() {
+                        sched::point(&ctx, "atomic.swap");
+                        let out = self.inner.swap(v, ord);
+                        sched::atomic_hb(&ctx, self.addr(), ord, true, true);
+                        out
+                    } else {
+                        self.inner.swap(v, ord)
+                    }
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $t,
+                    new: $t,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$t, $t> {
+                    if let Some(ctx) = sched::scheduled() {
+                        sched::point(&ctx, "atomic.cas");
+                        let out = self
+                            .inner
+                            .compare_exchange(current, new, success, failure);
+                        let (ord, stored) = match out {
+                            Ok(_) => (success, true),
+                            Err(_) => (failure, false),
+                        };
+                        sched::atomic_hb(&ctx, self.addr(), ord, true, stored);
+                        out
+                    } else {
+                        self.inner.compare_exchange(current, new, success, failure)
+                    }
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(
+                    &self,
+                    f: &mut std::fmt::Formatter<'_>,
+                ) -> std::fmt::Result {
+                    self.inner.fmt(f)
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> $name {
+                    $name::new(Default::default())
+                }
+            }
+        };
+    }
+
+    macro_rules! model_atomic_int {
+        ($name:ident, $std:ty, $t:ty) => {
+            model_atomic_common!($name, $std, $t);
+
+            impl $name {
+                fn rmw(
+                    &self,
+                    label: &'static str,
+                    ord: Ordering,
+                    f: impl FnOnce(&$std) -> $t,
+                ) -> $t {
+                    if let Some(ctx) = sched::scheduled() {
+                        sched::point(&ctx, label);
+                        let out = f(&self.inner);
+                        sched::atomic_hb(&ctx, self.addr(), ord, true, true);
+                        out
+                    } else {
+                        f(&self.inner)
+                    }
+                }
+
+                pub fn fetch_add(&self, v: $t, ord: Ordering) -> $t {
+                    self.rmw("atomic.fetch_add", ord, |a| a.fetch_add(v, ord))
+                }
+
+                pub fn fetch_sub(&self, v: $t, ord: Ordering) -> $t {
+                    self.rmw("atomic.fetch_sub", ord, |a| a.fetch_sub(v, ord))
+                }
+
+                pub fn fetch_max(&self, v: $t, ord: Ordering) -> $t {
+                    self.rmw("atomic.fetch_max", ord, |a| a.fetch_max(v, ord))
+                }
+
+                pub fn fetch_min(&self, v: $t, ord: Ordering) -> $t {
+                    self.rmw("atomic.fetch_min", ord, |a| a.fetch_min(v, ord))
+                }
+            }
+        };
+    }
+
+    model_atomic_common!(AtomicBool, StdBool, bool);
+    model_atomic_int!(AtomicUsize, StdUsize, usize);
+    model_atomic_int!(AtomicU64, StdU64, u64);
+}
+
+// ---------------------------------------------------------------------------
+// Threads
+// ---------------------------------------------------------------------------
+
+/// Thread façade. Spawning from a model thread registers the child with
+/// the execution (its first schedule point is the first thing it does);
+/// spawning from a passthrough thread is plain `std::thread`.
+pub mod thread {
+    use crate::sched;
+
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Builder {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Builder {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            let mut b = std::thread::Builder::new();
+            if let Some(n) = &self.name {
+                b = b.name(n.clone());
+            }
+            if let Some(ctx) = sched::scheduled() {
+                let name = self.name.unwrap_or_else(|| "model".to_string());
+                let tid = sched::register_child(&ctx, name);
+                let exec = ctx.exec.clone();
+                let inner =
+                    b.spawn(move || sched::run_thread_body(exec, tid, f))?;
+                Ok(JoinHandle { inner, tid: Some(tid) })
+            } else {
+                Ok(JoinHandle { inner: b.spawn(f)?, tid: None })
+            }
+        }
+    }
+
+    impl Default for Builder {
+        fn default() -> Builder {
+            Builder::new()
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    pub struct JoinHandle<T> {
+        inner: std::thread::JoinHandle<T>,
+        tid: Option<usize>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Under the model, joining is a schedule point enabled once the
+        /// child finished; during teardown it falls back to the real
+        /// join (the child is unwinding too and will exit).
+        pub fn join(self) -> std::thread::Result<T> {
+            if let (Some(tid), Some(ctx)) = (self.tid, sched::scheduled()) {
+                sched::join_thread(&ctx, tid);
+            }
+            self.inner.join()
+        }
+
+        pub fn is_finished(&self) -> bool {
+            self.inner.is_finished()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Race-detector hooks
+// ---------------------------------------------------------------------------
+
+/// Declare a read of tracked raw memory (e.g. dereferencing a smuggled
+/// `*const` job pointer). Under the model this is a schedule point that
+/// fails the execution unless the location's last write happens-before
+/// this read. No-op outside the model.
+pub fn race_read(addr: usize) {
+    if let Some(ctx) = sched::scheduled() {
+        sched::race_read(&ctx, addr);
+    }
+}
+
+/// Declare a write of tracked raw memory (see [`race_read`]): fails the
+/// execution unless every prior access happens-before this write.
+pub fn race_write(addr: usize) {
+    if let Some(ctx) = sched::scheduled() {
+        sched::race_write(&ctx, addr);
+    }
+}

@@ -1,0 +1,49 @@
+//! Repo-invariant lint gate: `cargo run --bin rtopk-lint [repo-root]`.
+//!
+//! Thin driver over [`rtopk::lint`]: walks `rust/src`, checks the
+//! cross-file contracts (config knobs <-> docs/CONFIG.md, `unsafe` <->
+//! `// SAFETY:`, wall-clock-free cost model and wire codec, Counter
+//! <-> LoadSnapshot JSON keys, no deprecated-shim callers), prints one
+//! line per violation, and exits non-zero when any survive the
+//! `rust/lint-allow.txt` allowlist. The same rules run inside
+//! `cargo test` (`lint::tests::real_tree_is_clean`); this binary is
+//! the named CI step and the local pre-push hook.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    // default root: the checkout this binary was built from (the
+    // parent of the rust/ package), so plain `cargo run --bin
+    // rtopk-lint` works from anywhere inside the repo
+    let root = std::env::args().nth(1).map_or_else(
+        || {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("rust/ package sits inside the repo")
+                .to_path_buf()
+        },
+        PathBuf::from,
+    );
+    match rtopk::lint::run_all(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("rtopk-lint: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                eprintln!("{f}");
+            }
+            eprintln!(
+                "rtopk-lint: {} violation(s); fix them or add a justified \
+                 line to rust/lint-allow.txt",
+                findings.len()
+            );
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("rtopk-lint: cannot walk {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

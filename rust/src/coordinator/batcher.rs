@@ -74,8 +74,8 @@ use crate::coordinator::request::{CancelToken, Priority};
 use crate::coordinator::tenant::TenantId;
 use crate::topk::types::Mode;
 use crate::util::matrix::RowMatrix;
+use crate::util::sync::{Condvar, Mutex};
 use std::collections::{BinaryHeap, HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Everything the batcher needs to enqueue one request (the typed
@@ -618,7 +618,7 @@ impl<T> Batcher<T> {
     /// budget while we held the lock).
     fn finish_flush(
         &self,
-        mut g: std::sync::MutexGuard<'_, Inner<T>>,
+        mut g: crate::util::sync::MutexGuard<'_, Inner<T>>,
         key: GroupKey,
         wdrr_pick: bool,
     ) -> Batch<T> {

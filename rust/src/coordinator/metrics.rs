@@ -397,6 +397,7 @@ pub struct LoadSnapshot {
     pub latency_max_us: f64,
     /// aggregate outcome totals (rates are ratios of these)
     pub requests_total: u64,
+    pub rows_total: u64,
     pub rejected_total: u64,
     pub infeasible_total: u64,
     pub cancelled_total: u64,
@@ -454,6 +455,7 @@ impl LoadSnapshot {
             ("latency_p99_us", json::num(self.latency_p99_us)),
             ("latency_max_us", json::num(self.latency_max_us)),
             ("requests_total", json::num(self.requests_total as f64)),
+            ("rows_total", json::num(self.rows_total as f64)),
             ("rejected_total", json::num(self.rejected_total as f64)),
             ("infeasible_total", json::num(self.infeasible_total as f64)),
             ("cancelled_total", json::num(self.cancelled_total as f64)),
@@ -783,6 +785,7 @@ impl TelemetryHub {
             latency_p99_us: p99,
             latency_max_us: max,
             requests_total: self.counters.get(Counter::Requests),
+            rows_total: self.counters.get(Counter::Rows),
             rejected_total: self.counters.get(Counter::Rejected),
             infeasible_total: self.counters.get(Counter::Infeasible),
             cancelled_total: self.counters.get(Counter::Cancelled),
@@ -1167,6 +1170,7 @@ mod tests {
             "latency_p99_us",
             "latency_max_us",
             "requests_total",
+            "rows_total",
             "rejected_total",
             "infeasible_total",
             "cancelled_total",

@@ -63,6 +63,8 @@ pub fn spmm_compressed(g: &CsrGraph, x: &CompressedRows) -> RowMatrix {
     let optr = SendPtr(out.data.as_mut_ptr());
     pool::parallel_ranges(g.num_nodes, 16, |start, end| {
         for d in start..end {
+            // SAFETY: destination rows are partitioned disjointly
+            // across threads; `out` outlives the parallel call.
             let orow = unsafe {
                 std::slice::from_raw_parts_mut(optr.get().add(d * m), m)
             };
@@ -85,6 +87,8 @@ impl<T> SendPtr<T> {
         self.0
     }
 }
+// SAFETY: participants write only their own disjoint row ranges (the
+// scheduler partitions 0..num_nodes), and the pointee outlives the job.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

@@ -43,6 +43,8 @@ pub fn spmm_csr(g: &CsrGraph, x: &RowMatrix) -> RowMatrix {
     let optr = SendPtr(out.data.as_mut_ptr());
     pool::parallel_ranges(g.num_nodes, 16, |start, end| {
         for d in start..end {
+            // SAFETY: destination rows are partitioned disjointly
+            // across threads; `out` outlives the parallel call.
             let orow = unsafe {
                 std::slice::from_raw_parts_mut(optr.get().add(d * f), f)
             };
@@ -84,6 +86,8 @@ impl<T> SendPtr<T> {
         self.0
     }
 }
+// SAFETY: participants write only their own disjoint row ranges (the
+// scheduler partitions 0..rows), and the pointee outlives the job.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

@@ -43,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod gnn;
 pub mod graph;
+pub mod lint;
 pub mod plan;
 pub mod runtime;
 pub mod simt;

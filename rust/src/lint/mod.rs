@@ -1,0 +1,881 @@
+//! Repo-invariant lint: machine-checks the cross-file contracts this
+//! codebase relies on but `rustc` cannot see. Dependency-free and
+//! token-level (see [`source`]); run via `cargo run --bin rtopk-lint`
+//! (CI runs it as a named step) or exercised in-process by the
+//! `real_tree_is_clean` test, so `cargo test` fails when an invariant
+//! drifts.
+//!
+//! The rules:
+//!
+//! * **knob-doc** — every config knob referenced in code
+//!   (`"serve.x"`, `"plan.y"`, `"backend.z"`, `"pool.w"`,
+//!   `"tenants.{name}.k"`, plus the `TENANT_KEYS` table) has a row in
+//!   `docs/CONFIG.md` under its section heading, and every documented
+//!   row is backed by a knob the code actually reads — both directions,
+//!   all five sections.
+//! * **safety-comment** — every `unsafe` token in non-test code has a
+//!   `// SAFETY:` comment on the same or one of the six preceding
+//!   lines.
+//! * **wall-clock** — `Instant::now` / `SystemTime` never appear in
+//!   `plan/model.rs` (the cost model must be a pure function) or
+//!   `coordinator/wire.rs` (encoding must be deterministic) outside
+//!   the allowlist.
+//! * **counter-key** — every [`crate::coordinator::metrics::Counter`]
+//!   variant has its `<snake_case>_total` key in the `LoadSnapshot`
+//!   JSON, and every `*_total` key in `metrics.rs` maps back to a
+//!   variant.
+//! * **deprecated-call** — no non-test code calls or names an item the
+//!   repo marks `#[deprecated]` (the submit shims), outside
+//!   `#[allow(deprecated)]` items and `use` re-exports.
+//!
+//! False positives are suppressed via `rust/lint-allow.txt`
+//! (`rule path-suffix token # why` per line), kept deliberately empty
+//! until a rule earns an exception.
+
+pub mod source;
+
+use source::{blank_attr_items, idents, line_of, scan, Scanned};
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Attribute prefixes whose items are invisible to test-skipping rules
+/// (whitespace-insensitive match against the attribute text).
+const TEST_ATTRS: &[&str] = &["#[cfg(test)", "#[cfg(all(test", "#[test]"];
+
+/// One lint violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// rule id, e.g. `knob-doc`
+    pub rule: &'static str,
+    /// repo-relative path
+    pub path: String,
+    /// 1-based line (0 when the finding is about a whole file/section)
+    pub line: usize,
+    /// the offending token, for allowlist matching
+    pub token: String,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Parsed `lint-allow.txt`: `rule path-suffix token` triples.
+#[derive(Debug, Default)]
+pub struct Allowlist {
+    entries: Vec<(String, String, String)>,
+}
+
+impl Allowlist {
+    pub fn parse(text: &str) -> Allowlist {
+        let mut entries = Vec::new();
+        for raw in text.lines() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            if let (Some(r), Some(p), Some(t)) = (it.next(), it.next(), it.next()) {
+                entries.push((r.to_string(), p.to_string(), t.to_string()));
+            }
+        }
+        Allowlist { entries }
+    }
+
+    pub fn permits(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|(r, p, t)| {
+            r == f.rule && f.path.ends_with(p.as_str()) && *t == f.token
+        })
+    }
+}
+
+/// A source file handed to the rules: repo-relative path + content.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+fn non_test_code(s: &Scanned) -> String {
+    blank_attr_items(&s.code, TEST_ATTRS)
+}
+
+// ---------------------------------------------------------------------------
+// Rule: knob-doc
+// ---------------------------------------------------------------------------
+
+/// The `[section]` names CONFIG.md must document and code may reference.
+const KNOB_SECTIONS: [&str; 5] = ["serve", "plan", "backend", "pool", "tenants"];
+
+/// Parse `docs/CONFIG.md` into section -> documented keys. Sections are
+/// `## `[serve]`` headings (the tenants heading is `## `[tenants.<name>]``);
+/// keys are the leading `` `key` `` cell of each table row.
+pub fn documented_knobs(config_md: &str) -> BTreeMap<String, BTreeSet<String>> {
+    let mut out: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    let mut current: Option<String> = None;
+    for line in config_md.lines() {
+        if let Some(h) = line.strip_prefix("## `[") {
+            let name = h.split(&[']', '.'][..]).next().unwrap_or("");
+            current = if KNOB_SECTIONS.contains(&name) {
+                out.entry(name.to_string()).or_default();
+                Some(name.to_string())
+            } else {
+                None
+            };
+            continue;
+        }
+        if line.starts_with("## ") {
+            current = None;
+            continue;
+        }
+        if let (Some(section), Some(rest)) = (&current, line.strip_prefix("| `")) {
+            if let Some(key) = rest.split('`').next() {
+                if !key.is_empty()
+                    && key.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+                {
+                    out.get_mut(section).unwrap().insert(key.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+fn knob_of(lit: &str) -> Option<(String, String)> {
+    let (section, rest) = lit.split_once('.')?;
+    if !KNOB_SECTIONS.contains(&section) {
+        return None;
+    }
+    let key = if section == "tenants" {
+        // "tenants.{name}.weight" (format!) or "tenants.acme.weight"
+        let (_name, key) = rest.rsplit_once('.')?;
+        key
+    } else {
+        rest
+    };
+    if key.is_empty()
+        || !key.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+    {
+        return None;
+    }
+    Some((section.to_string(), key.to_string()))
+}
+
+/// Extract the string-literal elements of the `TENANT_KEYS` table (the
+/// per-tenant knob names are bare, not dotted, so [`knob_of`] cannot
+/// see them).
+fn tenant_table_keys(s: &Scanned) -> Vec<StrLitRef<'_>> {
+    let Some(pos) = s.code.find("TENANT_KEYS") else {
+        return Vec::new();
+    };
+    // the literals sit between the `=` of the declaration and the `;`
+    // ending it (the `;` inside the `[&str; N]` type sits before `=`)
+    let eq = s.code[pos..].find('=').map_or(pos, |o| pos + o);
+    let end = s.code[eq..].find(';').map_or(s.code.len(), |o| eq + o);
+    let start_line = line_of(&s.code, eq);
+    let end_line = line_of(&s.code, end);
+    s.strings
+        .iter()
+        .filter(|l| l.line >= start_line && l.line <= end_line)
+        .map(|l| StrLitRef { line: l.line, text: &l.text })
+        .collect()
+}
+
+struct StrLitRef<'a> {
+    line: usize,
+    text: &'a str,
+}
+
+/// Both directions of the knob <-> CONFIG.md contract.
+pub fn check_knobs(files: &[SourceFile], config_md: &str) -> Vec<Finding> {
+    let documented = documented_knobs(config_md);
+    let mut findings = Vec::new();
+    for section in KNOB_SECTIONS {
+        if !documented.contains_key(section) {
+            findings.push(Finding {
+                rule: "knob-doc",
+                path: "docs/CONFIG.md".into(),
+                line: 0,
+                token: section.to_string(),
+                message: format!(
+                    "CONFIG.md has no `## `[{section}]`` section (all five \
+                     knob sections must be documented)"
+                ),
+            });
+        }
+    }
+    // code -> docs, remembering which documented keys code actually uses
+    let mut used: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in files {
+        let s = scan(&f.text);
+        let masked = non_test_code(&s);
+        // string literals inside test items were blanked in `masked`;
+        // a literal counts only if its line still has code
+        let live_line = |line: usize| {
+            masked
+                .lines()
+                .nth(line - 1)
+                .is_some_and(|l| !l.trim().is_empty())
+        };
+        let mut seen: Vec<(usize, String, String)> = s
+            .strings
+            .iter()
+            .filter(|l| live_line(l.line))
+            .filter_map(|l| {
+                knob_of(&l.text).map(|(sec, key)| (l.line, sec, key))
+            })
+            .collect();
+        if f.path.ends_with("config/mod.rs") {
+            for l in tenant_table_keys(&s) {
+                seen.push((l.line, "tenants".into(), l.text.to_string()));
+            }
+        }
+        for (line, section, key) in seen {
+            used.entry(section.clone()).or_default().insert(key.clone());
+            let ok = documented
+                .get(&section)
+                .is_some_and(|keys| keys.contains(&key));
+            if !ok {
+                findings.push(Finding {
+                    rule: "knob-doc",
+                    path: f.path.clone(),
+                    line,
+                    token: format!("{section}.{key}"),
+                    message: format!(
+                        "config knob `[{section}] {key}` is read here but has \
+                         no row in docs/CONFIG.md"
+                    ),
+                });
+            }
+        }
+    }
+    // docs -> code
+    for (section, keys) in &documented {
+        for key in keys {
+            let is_used = used
+                .get(section)
+                .is_some_and(|u| u.contains(key));
+            if !is_used {
+                findings.push(Finding {
+                    rule: "knob-doc",
+                    path: "docs/CONFIG.md".into(),
+                    line: 0,
+                    token: format!("{section}.{key}"),
+                    message: format!(
+                        "documented knob `[{section}] {key}` is never read by \
+                         the code (stale row or missing wiring)"
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule: safety-comment
+// ---------------------------------------------------------------------------
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may sit.
+const SAFETY_WINDOW: usize = 6;
+
+pub fn check_safety_comments(f: &SourceFile) -> Vec<Finding> {
+    let s = scan(&f.text);
+    let masked = non_test_code(&s);
+    let mut findings = Vec::new();
+    for (pos, word) in idents(&masked) {
+        if word != "unsafe" {
+            continue;
+        }
+        let line = line_of(&masked, pos);
+        let covered = (line.saturating_sub(SAFETY_WINDOW)..=line).any(|l| {
+            s.comments
+                .get(&l)
+                .is_some_and(|c| c.contains("SAFETY:"))
+        });
+        if !covered {
+            findings.push(Finding {
+                rule: "safety-comment",
+                path: f.path.clone(),
+                line,
+                token: "unsafe".into(),
+                message: format!(
+                    "`unsafe` without a `// SAFETY:` comment on the same or \
+                     the {SAFETY_WINDOW} preceding lines"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule: wall-clock
+// ---------------------------------------------------------------------------
+
+/// Files that must stay wall-clock free: the planner cost model (a pure
+/// function — nondeterminism would poison plan comparisons and the
+/// model-check DFS) and the wire codec (byte-exact golden files).
+const CLOCK_FREE_FILES: [&str; 2] =
+    ["plan/model.rs", "coordinator/wire.rs"];
+
+pub fn check_wall_clock(f: &SourceFile) -> Vec<Finding> {
+    if !CLOCK_FREE_FILES.iter().any(|p| f.path.ends_with(p)) {
+        return Vec::new();
+    }
+    let s = scan(&f.text);
+    let masked = non_test_code(&s);
+    let mut findings = Vec::new();
+    for (pos, word) in idents(&masked) {
+        let bad = match word.as_str() {
+            "SystemTime" => true,
+            "Instant" => {
+                // only the clock read is banned; passing `Instant`
+                // values through (deadlines) is fine
+                masked[pos..]
+                    .chars()
+                    .skip(word.chars().count())
+                    .collect::<String>()
+                    .trim_start()
+                    .starts_with("::now")
+            }
+            _ => false,
+        };
+        if bad {
+            findings.push(Finding {
+                rule: "wall-clock",
+                path: f.path.clone(),
+                line: line_of(&masked, pos),
+                token: word.clone(),
+                message: format!(
+                    "`{word}` in a deterministic file (cost model / wire \
+                     codec must not read wall clocks)"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule: counter-key
+// ---------------------------------------------------------------------------
+
+fn camel_to_snake(name: &str) -> String {
+    let mut out = String::new();
+    for (i, c) in name.chars().enumerate() {
+        if c.is_ascii_uppercase() {
+            if i > 0 {
+                out.push('_');
+            }
+            out.push(c.to_ascii_lowercase());
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Variant names of `pub enum Counter` in the metrics source.
+fn counter_variants(s: &Scanned) -> Vec<String> {
+    let Some(pos) = s.code.find("enum Counter") else {
+        return Vec::new();
+    };
+    let body_start = match s.code[pos..].find('{') {
+        Some(off) => pos + off + 1,
+        None => return Vec::new(),
+    };
+    let body_end = match s.code[body_start..].find('}') {
+        Some(off) => body_start + off,
+        None => return Vec::new(),
+    };
+    idents(&s.code[body_start..body_end])
+        .into_iter()
+        .map(|(_, w)| w)
+        .filter(|w| w.chars().next().is_some_and(|c| c.is_ascii_uppercase()))
+        .collect()
+}
+
+/// Counter enum <-> `LoadSnapshot` JSON keys, both directions.
+pub fn check_counter_keys(metrics: &SourceFile) -> Vec<Finding> {
+    let s = scan(&metrics.text);
+    let masked = non_test_code(&s);
+    let variants = counter_variants(&s);
+    let mut findings = Vec::new();
+    if variants.is_empty() {
+        findings.push(Finding {
+            rule: "counter-key",
+            path: metrics.path.clone(),
+            line: 0,
+            token: "Counter".into(),
+            message: "could not locate `enum Counter` (rule needs updating?)"
+                .into(),
+        });
+        return findings;
+    }
+    let live_line = |line: usize| {
+        masked
+            .lines()
+            .nth(line - 1)
+            .is_some_and(|l| !l.trim().is_empty())
+    };
+    let total_keys: BTreeSet<&str> = s
+        .strings
+        .iter()
+        .filter(|l| live_line(l.line))
+        .map(|l| l.text.as_str())
+        .filter(|t| {
+            t.ends_with("_total")
+                && t.chars().all(|c| c.is_ascii_lowercase() || c == '_')
+        })
+        .collect();
+    let expected: BTreeMap<String, &String> = variants
+        .iter()
+        .map(|v| (format!("{}_total", camel_to_snake(v)), v))
+        .collect();
+    for (key, variant) in &expected {
+        if !total_keys.contains(key.as_str()) {
+            findings.push(Finding {
+                rule: "counter-key",
+                path: metrics.path.clone(),
+                line: 0,
+                token: key.clone(),
+                message: format!(
+                    "Counter::{variant} has no `{key}` key in the \
+                     LoadSnapshot JSON (snapshot consumers cannot see it)"
+                ),
+            });
+        }
+    }
+    for key in total_keys {
+        if !expected.contains_key(key) {
+            findings.push(Finding {
+                rule: "counter-key",
+                path: metrics.path.clone(),
+                line: 0,
+                token: key.to_string(),
+                message: format!(
+                    "JSON key `{key}` does not correspond to any Counter \
+                     variant (stale key or missing variant)"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Rule: deprecated-call
+// ---------------------------------------------------------------------------
+
+/// Names of items the repo marks `#[deprecated]`.
+pub fn deprecated_items(files: &[SourceFile]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for f in files {
+        let s = scan(&f.text);
+        let code = &s.code;
+        let mut search_from = 0;
+        while let Some(off) = code[search_from..].find("#[deprecated") {
+            let attr_at = search_from + off;
+            search_from = attr_at + 1;
+            // scan forward past attributes to the item header
+            let words = idents(&code[attr_at..]);
+            let mut take_next = false;
+            for (_, w) in words {
+                match w.as_str() {
+                    "fn" | "type" | "struct" | "enum" | "trait" | "const" => {
+                        take_next = true;
+                    }
+                    _ if take_next => {
+                        names.insert(w);
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    names
+}
+
+pub fn check_deprecated_calls(
+    files: &[SourceFile],
+    deprecated: &BTreeSet<String>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        let s = scan(&f.text);
+        // invisible regions: test items, #[allow(deprecated)] items
+        // (shim bodies, the re-export), and the deprecated definitions
+        // themselves
+        let masked = blank_attr_items(
+            &s.code,
+            &[
+                "#[cfg(test)",
+                "#[cfg(all(test",
+                "#[test]",
+                "#[allow(deprecated)",
+                "#[deprecated",
+            ],
+        );
+        for (pos, word) in idents(&masked) {
+            if !deprecated.contains(&word) {
+                continue;
+            }
+            let line = line_of(&masked, pos);
+            // `use` statements only move names around
+            let line_text = masked.lines().nth(line - 1).unwrap_or("");
+            let trimmed = line_text.trim_start();
+            if trimmed.starts_with("use ") || trimmed.starts_with("pub use ") {
+                continue;
+            }
+            findings.push(Finding {
+                rule: "deprecated-call",
+                path: f.path.clone(),
+                line,
+                token: word.clone(),
+                message: format!(
+                    "`{word}` is #[deprecated]; non-test code must use the \
+                     typed SubmitRequest API instead"
+                ),
+            });
+        }
+    }
+    findings
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Load every `rust/src/**/*.rs` under `repo_root` with repo-relative
+/// paths.
+pub fn load_sources(repo_root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let src = repo_root.join("rust").join("src");
+    let mut paths = Vec::new();
+    walk_rs(&src, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(repo_root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile { path: rel, text: std::fs::read_to_string(&p)? });
+    }
+    Ok(files)
+}
+
+/// Run every rule against a repo checkout; returns the findings that
+/// survive the allowlist.
+pub fn run_all(repo_root: &Path) -> std::io::Result<Vec<Finding>> {
+    let files = load_sources(repo_root)?;
+    let config_md =
+        std::fs::read_to_string(repo_root.join("docs").join("CONFIG.md"))?;
+    let allow = match std::fs::read_to_string(
+        repo_root.join("rust").join("lint-allow.txt"),
+    ) {
+        Ok(t) => Allowlist::parse(&t),
+        Err(_) => Allowlist::default(),
+    };
+    let mut findings = check_knobs(&files, &config_md);
+    for f in &files {
+        findings.extend(check_safety_comments(f));
+        findings.extend(check_wall_clock(f));
+        if f.path.ends_with("coordinator/metrics.rs") {
+            findings.extend(check_counter_keys(f));
+        }
+    }
+    let deprecated = deprecated_items(&files);
+    findings.extend(check_deprecated_calls(&files, &deprecated));
+    findings.retain(|f| !allow.permits(f));
+    Ok(findings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.into(), text: text.into() }
+    }
+
+    const CONFIG_MD: &str = "\
+## `[serve]`
+| Key | Type | Default | Meaning |
+| --- | --- | --- | --- |
+| `workers` | int | `2` | Threads. |
+## `[plan]`
+| `calib_rows` | int | `192` | Rows. |
+## `[backend]`
+| `enable` | bool | `true` | On. |
+## `[pool]`
+| `threads` | int | `0` | Auto. |
+## `[tenants.<name>]`
+| `weight` | int | `1` | WDRR. |
+";
+
+    #[test]
+    fn knob_rule_passes_when_code_and_docs_agree() {
+        let files = [sf(
+            "rust/src/config/mod.rs",
+            r#"
+            fn load(c: &Config) {
+                c.get_or("serve.workers", 2);
+                c.get_or("plan.calib_rows", 192);
+                c.get_or("backend.enable", true);
+                c.get_or("pool.threads", 0);
+                let _ = format!("tenants.{name}.weight");
+            }
+            "#,
+        )];
+        let found = check_knobs(&files, CONFIG_MD);
+        assert!(found.is_empty(), "{found:?}");
+    }
+
+    #[test]
+    fn undocumented_knob_is_flagged() {
+        let files = [sf(
+            "rust/src/config/mod.rs",
+            r#"
+            fn load(c: &Config) {
+                c.get_or("serve.workers", 2);
+                c.get_or("serve.brand_new_knob", 1);
+                c.get_or("plan.calib_rows", 192);
+                c.get_or("backend.enable", true);
+                c.get_or("pool.threads", 0);
+                let _ = format!("tenants.{name}.weight");
+            }
+            "#,
+        )];
+        let found = check_knobs(&files, CONFIG_MD);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].token, "serve.brand_new_knob");
+    }
+
+    #[test]
+    fn stale_doc_row_is_flagged_and_test_code_does_not_count() {
+        // the only reference to serve.workers sits in a test module, so
+        // the documented row must be reported as stale
+        let files = [sf(
+            "rust/src/config/mod.rs",
+            r#"
+            fn load(c: &Config) {
+                c.get_or("plan.calib_rows", 192);
+                c.get_or("backend.enable", true);
+                c.get_or("pool.threads", 0);
+                let _ = format!("tenants.{name}.weight");
+            }
+            #[cfg(test)]
+            mod tests {
+                fn t(c: &Config) { c.get_or("serve.workers", 2); }
+            }
+            "#,
+        )];
+        let found = check_knobs(&files, CONFIG_MD);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].token, "serve.workers");
+        assert!(found[0].message.contains("never read"));
+    }
+
+    #[test]
+    fn missing_section_is_flagged() {
+        let md = "## `[serve]`\n| `workers` | int | `2` | T. |\n";
+        let files = [sf(
+            "rust/src/config/mod.rs",
+            r#"fn f(c: &Config) { c.get_or("serve.workers", 2); }"#,
+        )];
+        let found = check_knobs(&files, md);
+        let missing: Vec<_> =
+            found.iter().filter(|f| f.line == 0 && f.path.ends_with("CONFIG.md")
+                && f.message.contains("no `##")).collect();
+        assert_eq!(missing.len(), 4, "{found:?}"); // plan/backend/pool/tenants
+    }
+
+    #[test]
+    fn safety_rule_accepts_commented_and_rejects_bare_unsafe() {
+        let ok = sf(
+            "rust/src/x.rs",
+            "// SAFETY: disjoint rows per thread.\n\
+             let v = unsafe { &*p };\n",
+        );
+        assert!(check_safety_comments(&ok).is_empty());
+        let bad = sf("rust/src/x.rs", "let v = unsafe { &*p };\n");
+        let found = check_safety_comments(&bad);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].rule, "safety-comment");
+        // mentions in strings and comments are not tokens
+        let quoted = sf(
+            "rust/src/x.rs",
+            "let s = \"unsafe\"; // unsafe is discussed here only\n",
+        );
+        assert!(check_safety_comments(&quoted).is_empty());
+    }
+
+    #[test]
+    fn safety_window_is_bounded() {
+        let far = sf(
+            "rust/src/x.rs",
+            "// SAFETY: too far away.\n\n\n\n\n\n\n\nlet v = unsafe { &*p };\n",
+        );
+        assert_eq!(check_safety_comments(&far).len(), 1);
+    }
+
+    #[test]
+    fn wall_clock_rule_only_bites_deterministic_files() {
+        let model = sf(
+            "rust/src/plan/model.rs",
+            "fn t() { let t0 = Instant::now(); }\n",
+        );
+        let found = check_wall_clock(&model);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].token, "Instant");
+        // passing an Instant through is fine; reading the clock is not
+        let pass_through = sf(
+            "rust/src/plan/model.rs",
+            "fn t(deadline: Instant) -> Instant { deadline }\n",
+        );
+        assert!(check_wall_clock(&pass_through).is_empty());
+        let elsewhere = sf(
+            "rust/src/coordinator/scheduler.rs",
+            "fn t() { let t0 = Instant::now(); }\n",
+        );
+        assert!(check_wall_clock(&elsewhere).is_empty());
+        let wire = sf(
+            "rust/src/coordinator/wire.rs",
+            "fn t() { let s = SystemTime::now(); }\n",
+        );
+        assert_eq!(check_wall_clock(&wire).len(), 1);
+    }
+
+    const METRICS_OK: &str = r#"
+        pub enum Counter { Requests, TimedOut }
+        fn json(s: &Snap) {
+            obj(vec![
+                ("requests_total", num(s.requests_total)),
+                ("timed_out_total", num(s.timed_out_total)),
+            ]);
+        }
+    "#;
+
+    #[test]
+    fn counter_rule_passes_on_matched_keys() {
+        let found = check_counter_keys(&sf(
+            "rust/src/coordinator/metrics.rs",
+            METRICS_OK,
+        ));
+        assert!(found.is_empty(), "{found:?}");
+    }
+
+    #[test]
+    fn counter_rule_flags_missing_and_stale_keys() {
+        let missing = sf(
+            "rust/src/coordinator/metrics.rs",
+            r#"
+            pub enum Counter { Requests, TimedOut }
+            fn json(s: &Snap) { obj(vec![("requests_total", num(1.0))]); }
+            "#,
+        );
+        let found = check_counter_keys(&missing);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].token, "timed_out_total");
+        let stale = sf(
+            "rust/src/coordinator/metrics.rs",
+            r#"
+            pub enum Counter { Requests }
+            fn json(s: &Snap) {
+                obj(vec![
+                    ("requests_total", num(1.0)),
+                    ("ghosts_total", num(0.0)),
+                ]);
+            }
+            "#,
+        );
+        let found = check_counter_keys(&stale);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].token, "ghosts_total");
+    }
+
+    #[test]
+    fn deprecated_rule_finds_shim_calls_outside_shields() {
+        let service = sf(
+            "rust/src/coordinator/service.rs",
+            r#"
+            #[deprecated(note = "use submit_ticket")]
+            #[allow(deprecated)]
+            pub fn submit_as(&self) { self.inner() }
+            "#,
+        );
+        let caller = sf(
+            "rust/src/cli/serve.rs",
+            "fn go(svc: &S) { svc.submit_as(); }\n",
+        );
+        let test_caller = sf(
+            "rust/src/cli/other.rs",
+            "#[cfg(test)]\nmod tests { fn t(s: &S) { s.submit_as(); } }\n",
+        );
+        let files = [service, caller, test_caller];
+        let deprecated = deprecated_items(&files);
+        assert!(deprecated.contains("submit_as"), "{deprecated:?}");
+        let found = check_deprecated_calls(&files, &deprecated);
+        assert_eq!(found.len(), 1, "{found:?}");
+        assert_eq!(found[0].path, "rust/src/cli/serve.rs");
+        assert_eq!(found[0].token, "submit_as");
+    }
+
+    #[test]
+    fn allowlist_suppresses_exact_matches_only() {
+        let f = Finding {
+            rule: "wall-clock",
+            path: "rust/src/plan/model.rs".into(),
+            line: 3,
+            token: "Instant".into(),
+            message: String::new(),
+        };
+        let allow = Allowlist::parse(
+            "# comment line\nwall-clock plan/model.rs Instant # why: probes\n",
+        );
+        assert!(allow.permits(&f));
+        let other = Finding { token: "SystemTime".into(), ..f.clone() };
+        assert!(!allow.permits(&other));
+    }
+
+    /// The real tree must be lint-clean: this is the tier-1 enforcement
+    /// of the invariants (CI also runs the binary as a named step).
+    #[test]
+    fn real_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ has a parent")
+            .to_path_buf();
+        let findings = run_all(&root).expect("lint walk");
+        assert!(
+            findings.is_empty(),
+            "repo lint violations:\n{}",
+            findings
+                .iter()
+                .map(|f| f.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}

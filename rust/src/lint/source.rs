@@ -1,0 +1,337 @@
+//! Token-level Rust source scanner backing the repo lint.
+//!
+//! Not a parser: a single pass that classifies every byte of a source
+//! file as code, comment, or literal, so the rules in [`crate::lint`]
+//! can ask token questions ("does `unsafe` appear outside a string?",
+//! "which string literals look like config knobs?") without false
+//! positives from doc prose or error messages. Handles line and nested
+//! block comments, regular/raw/byte string literals, char literals vs.
+//! lifetimes, and blanking of `#[cfg(test)]`-style items.
+
+use std::collections::HashMap;
+
+/// One string literal, with the 1-based line it starts on and its
+/// unescaped-enough content (escape sequences are kept verbatim — the
+/// rules only match plain identifier-ish text).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StrLit {
+    pub line: usize,
+    pub text: String,
+}
+
+/// A scanned source file.
+pub struct Scanned {
+    /// The source with comments and literal *contents* blanked to
+    /// spaces (newlines kept), so byte offsets and line numbers match
+    /// the original. Token scans run on this.
+    pub code: String,
+    /// Every string literal in source order.
+    pub strings: Vec<StrLit>,
+    /// Comment text per 1-based line (a block comment contributes to
+    /// every line it spans).
+    pub comments: HashMap<usize, String>,
+}
+
+/// Classify `src` in one pass.
+pub fn scan(src: &str) -> Scanned {
+    let b: Vec<char> = src.chars().collect();
+    let mut code: Vec<char> = b.clone();
+    let mut strings = Vec::new();
+    let mut comments: HashMap<usize, String> = HashMap::new();
+    let mut i = 0;
+    let mut line = 1;
+
+    let blank = |code: &mut Vec<char>, from: usize, to: usize| {
+        for c in code.iter_mut().take(to).skip(from) {
+            if *c != '\n' {
+                *c = ' ';
+            }
+        }
+    };
+
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            let start = i;
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            comments.entry(line).or_default().push_str(&text);
+            blank(&mut code, start, i);
+            continue;
+        }
+        // block comment (nested)
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                } else if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 1;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 1;
+                }
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            for (off, part) in text.split('\n').enumerate() {
+                comments
+                    .entry(start_line + off)
+                    .or_default()
+                    .push_str(part);
+            }
+            blank(&mut code, start, i);
+            continue;
+        }
+        // raw (and byte-raw) string: r"..." / r#"..."# / br#"..."#
+        if c == 'r' || (c == 'b' && b.get(i + 1) == Some(&'r')) {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&'"') {
+                let content_start = j + 1;
+                let mut k = content_start;
+                let closer: String =
+                    std::iter::once('"').chain((0..hashes).map(|_| '#')).collect();
+                let mut content_end = b.len();
+                while k < b.len() {
+                    if b[k] == '"' {
+                        let tail: String =
+                            b[k..(k + 1 + hashes).min(b.len())].iter().collect();
+                        if tail == closer {
+                            content_end = k;
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                let text: String = b[content_start..content_end].iter().collect();
+                strings.push(StrLit { line, text: text.clone() });
+                blank(&mut code, content_start, content_end);
+                line += text.matches('\n').count();
+                i = (content_end + 1 + hashes).min(b.len());
+                continue;
+            }
+            // not a raw string ("r" / "br" identifier chars): if this
+            // is mid-identifier fall through to the identifier skip
+        }
+        // regular (and byte) string
+        if c == '"' || (c == 'b' && b.get(i + 1) == Some(&'"')) {
+            let content_start = i + if c == 'b' { 2 } else { 1 };
+            let mut k = content_start;
+            while k < b.len() {
+                match b[k] {
+                    '\\' => k += 2,
+                    '"' => break,
+                    _ => k += 1,
+                }
+            }
+            let content_end = k.min(b.len());
+            let text: String = b[content_start..content_end].iter().collect();
+            strings.push(StrLit { line, text: text.clone() });
+            blank(&mut code, content_start, content_end);
+            line += text.matches('\n').count();
+            i = (content_end + 1).min(b.len());
+            continue;
+        }
+        // char literal vs lifetime: 'x' / '\n' are literals, 'a (no
+        // closing quote right after) is a lifetime
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // escaped char literal: skip to the closing quote
+                let mut k = i + 2;
+                while k < b.len() && b[k] != '\'' {
+                    k += 1;
+                }
+                blank(&mut code, i + 1, k);
+                i = (k + 1).min(b.len());
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') && b.get(i + 1) != Some(&'\'') {
+                blank(&mut code, i + 1, i + 2);
+                i += 3;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        // identifiers: skip as a unit so "r" in "for" never starts a
+        // raw-string scan
+        if c.is_alphanumeric() || c == '_' {
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            continue;
+        }
+        i += 1;
+    }
+
+    Scanned { code: code.into_iter().collect(), strings, comments }
+}
+
+/// Blank (to spaces) every item introduced by an attribute whose text
+/// starts with one of `attr_prefixes` — e.g. `#[cfg(test)]` mods or
+/// `#[deprecated]` items. "Item" is everything from the attribute to
+/// the matching close brace of the first `{`-block, or the first
+/// top-level `;` for brace-less items (type aliases, `use`). Runs on
+/// already-[`scan`]ned code so attributes inside strings don't count.
+pub fn blank_attr_items(code: &str, attr_prefixes: &[&str]) -> String {
+    let b: Vec<char> = code.chars().collect();
+    let mut out = b.clone();
+    let n = b.len();
+    let mut i = 0;
+    while i < n {
+        if b[i] != '#' || b.get(i + 1) != Some(&'[') {
+            i += 1;
+            continue;
+        }
+        let rest: String = b[i..(i + 40).min(n)].iter().collect();
+        let compact: String = rest.chars().filter(|c| !c.is_whitespace()).collect();
+        if !attr_prefixes.iter().any(|p| compact.starts_with(p)) {
+            i += 1;
+            continue;
+        }
+        // span: from the attribute through the end of the item,
+        // skipping any further attributes between them
+        let start = i;
+        let mut j = i;
+        // walk past this attribute's brackets
+        let mut bdepth = 0;
+        while j < n {
+            match b[j] {
+                '[' => bdepth += 1,
+                ']' => {
+                    bdepth -= 1;
+                    if bdepth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        // then to the item end: first `{...}` block or top-level `;`
+        let mut depth = 0;
+        while j < n {
+            match b[j] {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                ';' if depth == 0 => {
+                    j += 1;
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        for c in out.iter_mut().take(j).skip(start) {
+            if *c != '\n' {
+                *c = ' ';
+            }
+        }
+        i = j;
+    }
+    out.into_iter().collect()
+}
+
+/// 1-based line number of char offset `pos` in `code`.
+pub fn line_of(code: &str, pos: usize) -> usize {
+    1 + code.chars().take(pos).filter(|&c| c == '\n').count()
+}
+
+/// Iterator over `(char_offset, word)` for every identifier-shaped
+/// token in `code`.
+pub fn idents(code: &str) -> Vec<(usize, String)> {
+    let b: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i].is_alphanumeric() || b[i] == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.push((start, b[start..i].iter().collect()));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let s = scan(
+            "let x = \"unsafe in a string\"; // unsafe in a comment\nunsafe {}\n",
+        );
+        assert!(!s.code.contains("in a string"));
+        assert!(!s.code.contains("in a comment"));
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].text, "unsafe in a string");
+        assert!(s.comments[&1].contains("unsafe in a comment"));
+        // the real token survives on line 2
+        assert!(s.code.lines().nth(1).unwrap().contains("unsafe"));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let s = scan("fn f<'a>(x: &'a str) { let y = r#\"quote \" here\"#; }");
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].text, "quote \" here");
+        assert!(s.code.contains("'a str"), "lifetime must survive");
+    }
+
+    #[test]
+    fn char_literal_does_not_eat_the_line() {
+        let s = scan("let c = '\"'; let knob = \"serve.workers\";");
+        assert_eq!(s.strings.len(), 1);
+        assert_eq!(s.strings[0].text, "serve.workers");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scan("/* a /* b */ c */ fn real() {}");
+        assert!(!s.code.contains('a'));
+        assert!(s.code.contains("fn real"));
+    }
+
+    #[test]
+    fn attr_item_blanking_handles_braces_and_semis() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { bad_call(); } }\n\
+                   #[allow(deprecated)]\npub use service::OldName;\n\
+                   fn keep() { good_call(); }\n";
+        let s = scan(src);
+        let masked = blank_attr_items(&s.code, &["#[cfg(test)", "#[allow(deprecated)"]);
+        assert!(!masked.contains("bad_call"));
+        assert!(!masked.contains("OldName"));
+        assert!(masked.contains("good_call"));
+        // line structure preserved
+        assert_eq!(masked.matches('\n').count(), src.matches('\n').count());
+    }
+}

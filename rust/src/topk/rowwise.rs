@@ -168,6 +168,9 @@ impl<T> SendPtr<T> {
         self.0
     }
 }
+// SAFETY: every participant dereferences only inside the disjoint
+// per-row windows handed out by `parallel_dynamic`, and the output
+// buffers outlive the job (the submitter joins before returning).
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

@@ -15,6 +15,10 @@
 //!   with replayable failing seeds.
 //! * [`rng`] — deterministic xoshiro256++ with SplitMix64 seeding;
 //!   every experiment seeds explicitly so tables reproduce bit-for-bit.
+//! * [`sync`] — synchronization façade: std re-exports normally, the
+//!   in-tree model checker's instrumented primitives under
+//!   `cfg(rtopk_model_check)`. All new cross-thread protocol code
+//!   imports from here (see the module docs for the rules).
 //! * [`timer`] — adaptive best-of timing loops shared by the
 //!   calibrator and the bench harnesses.
 
@@ -23,4 +27,5 @@ pub mod matrix;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod timer;

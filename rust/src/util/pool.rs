@@ -31,19 +31,26 @@
 //! pool exists caps at the resident worker count. [`gauges`] exposes
 //! job/steal/park counters and worker utilization for the telemetry hub.
 
+// Protocol state (queue, latch, shutdown flag, worker handles) goes
+// through the sync façade so the model checker can explore it; gauges,
+// config, and the process-global pool stay on std (observability only —
+// see util/sync.rs for the rules).
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::{race_read, race_write, thread, Arc, Condvar, Mutex};
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, AtomicUsize as StdAtomicUsize};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 // ---------------------------------------------------------------------------
 // Sizing
 // ---------------------------------------------------------------------------
 
-/// `[pool] threads` from config; 0 means "not configured".
-static CONFIG_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// `[pool] threads` from config; 0 means "not configured". Process
+/// global, so it stays on std (façade rule: no globals in the model).
+static CONFIG_THREADS: StdAtomicUsize = StdAtomicUsize::new(0);
 
 /// Record the `[pool] threads` config value. Takes effect for sizing the
 /// global pool only if called before the pool's first job (the service
@@ -231,6 +238,9 @@ fn worker_loop(shared: Arc<PoolShared>) {
         };
         let Some(job) = job else { return };
         let t0 = Instant::now();
+        // Model hook: this deref must happen-after the submitter's
+        // publish and happen-before its reclaim (no-op in real builds).
+        race_read(job.func as *const () as usize);
         // SAFETY: see `JobCore::func` — the submitter is blocked on the
         // completion latch, so the closure is alive for this call.
         let func = unsafe { &*job.func };
@@ -252,7 +262,7 @@ fn worker_loop(shared: Arc<PoolShared>) {
 /// instances to exercise shutdown and panic paths deterministically.
 pub struct Pool {
     shared: Arc<PoolShared>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
     /// Total participants per job (resident workers + the submitter).
     threads: usize,
     started: Instant,
@@ -272,7 +282,7 @@ impl Pool {
         for i in 0..threads - 1 {
             let sh = Arc::clone(&shared);
             handles.push(
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("rtopk-pool-{i}"))
                     .spawn(move || worker_loop(sh))
                     .expect("spawn rtopk pool worker"),
@@ -289,12 +299,20 @@ impl Pool {
     /// Stop the workers and join them. Queued jobs drain first (workers
     /// re-check the queue before honoring the flag). Idempotent.
     pub fn shutdown(&self) {
+        #[cfg(not(rtopk_model_check_mutants))]
         {
             // Flip the flag under the queue lock so a worker between its
             // shutdown check and `cv.wait` cannot miss the wakeup.
             let _q = self.shared.queue.lock().unwrap();
             self.shared.shutdown.store(true, Ordering::Release);
         }
+        // Seeded missed-wakeup mutant (the historical bug class this
+        // checker exists for): flipping the flag *outside* the queue
+        // lock lets the store+notify land between a worker's shutdown
+        // check and its park — that worker sleeps forever. The
+        // `mutant_` suite asserts the model checker reports it.
+        #[cfg(rtopk_model_check_mutants)]
+        self.shared.shutdown.store(true, Ordering::Release);
         self.shared.cv.notify_all();
         let mut workers = self.workers.lock().unwrap();
         for handle in workers.drain(..) {
@@ -357,6 +375,9 @@ impl Pool {
             done: Mutex::new(false),
             done_cv: Condvar::new(),
         });
+        // Model hook: publish the stack-borrowed closure before any
+        // worker can dereference it (no-op in real builds).
+        race_write(job.func as *const () as usize);
         {
             let mut q = self.shared.queue.lock().unwrap();
             for _ in 0..extra {
@@ -372,6 +393,9 @@ impl Pool {
         // counter as the workers, then blocks until every stub finished.
         let own = catch_unwind(AssertUnwindSafe(f));
         job.join();
+        // Model hook: reclaim the borrow — the latch must order every
+        // worker's dereference before this point, or it is a race.
+        race_write(job.func as *const () as usize);
         let worker_panic = job.panic.lock().unwrap().take();
         if let Some(payload) = worker_panic {
             resume_unwind(payload);
@@ -441,6 +465,10 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: the pointer is only ever dereferenced at indices inside the
+// disjoint ranges the dynamic scheduler hands out, and the pointee
+// slice outlives the job (the submitter joins before returning), so
+// sharing the handle across participant threads is sound.
 unsafe impl<T: Send> Send for SendPtr<T> {}
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
@@ -614,5 +642,155 @@ mod tests {
         let g = gauges();
         assert!(g.jobs + g.inline_jobs >= 1);
         assert!((0.0..=1.0).contains(&g.utilization));
+    }
+}
+
+/// Model-check suites: compiled only under `RUSTFLAGS="--cfg
+/// rtopk_model_check"` (CI's bounded model-check job). Each test body
+/// is explored across thread interleavings by the in-tree checker; see
+/// rust/modelcheck/src/lib.rs for the model. Private pools only — the
+/// process-global pool outlives executions and is invisible to the
+/// explorer.
+#[cfg(all(test, rtopk_model_check))]
+mod model_tests {
+    #[allow(unused_imports)]
+    use super::*;
+
+    /// Trunk protocols: every explored schedule must be free of
+    /// deadlocks, data races on the erased closure, and panics.
+    #[cfg(not(rtopk_model_check_mutants))]
+    mod trunk {
+        use super::super::*;
+        use modelcheck::{model, Checker};
+
+        /// The shutdown-vs-notify window at two threads: a worker
+        /// between its shutdown check and its park must still see the
+        /// wakeup (the flag flips under the queue lock). Exhaustive.
+        #[test]
+        fn model_shutdown_quiesces_two_threads() {
+            model(|| {
+                let pool = Pool::new(2);
+                pool.shutdown();
+            });
+        }
+
+        /// Same window with two workers racing for the same park/wake.
+        #[test]
+        fn model_shutdown_quiesces_three_threads() {
+            let report = Checker::dfs()
+                .max_executions(8_000)
+                .env_caps()
+                .check(|| {
+                    let pool = Pool::new(3);
+                    pool.shutdown();
+                });
+            assert!(report.failure.is_none(), "{:#?}", report.failure);
+        }
+
+        /// Full fork-join latch at three participants (2 workers + the
+        /// submitter): dynamic counter covers every index exactly once,
+        /// the erased-closure accesses are ordered by publish/latch,
+        /// and shutdown drains cleanly afterwards.
+        #[test]
+        fn model_latch_three_participants() {
+            let report = Checker::dfs()
+                .max_executions(8_000)
+                .env_caps()
+                .check(|| {
+                    let pool = Pool::new(3);
+                    let hits: Vec<AtomicU64> =
+                        (0..2).map(|_| AtomicU64::new(0)).collect();
+                    pool.run_dynamic(2, 1, 3, &|a: usize, b: usize| {
+                        for i in a..b {
+                            hits[i].fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                    for h in &hits {
+                        assert_eq!(h.load(Ordering::Relaxed), 1);
+                    }
+                    pool.shutdown();
+                });
+            assert!(report.failure.is_none(), "{:#?}", report.failure);
+        }
+
+        /// Four threads via seeded random walks (the DFS tree is too
+        /// wide to exhaust; walks still cross the interesting windows).
+        #[test]
+        fn model_latch_four_threads_random() {
+            let report = Checker::random(200, 0x7069).check(|| {
+                let pool = Pool::new(4);
+                let hits: Vec<AtomicU64> =
+                    (0..3).map(|_| AtomicU64::new(0)).collect();
+                pool.run_dynamic(3, 1, 4, &|a: usize, b: usize| {
+                    for i in a..b {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                for h in &hits {
+                    assert_eq!(h.load(Ordering::Relaxed), 1);
+                }
+                pool.shutdown();
+            });
+            assert!(report.failure.is_none(), "{:#?}", report.failure);
+        }
+
+        /// Panic during a job, in every interleaving: the payload
+        /// reaches the submitter, the latch still completes, and the
+        /// pool survives to run a second job and shut down.
+        #[test]
+        fn model_panic_during_job() {
+            let report = Checker::dfs()
+                .max_executions(8_000)
+                .env_caps()
+                .check(|| {
+                    let pool = Pool::new(2);
+                    let caught = catch_unwind(AssertUnwindSafe(|| {
+                        pool.run_dynamic(2, 1, 2, &|a: usize, _b: usize| {
+                            if a == 0 {
+                                panic!("model boom");
+                            }
+                        });
+                    }));
+                    assert!(
+                        caught.is_err(),
+                        "participant panic must reach the submitter"
+                    );
+                    let ran = AtomicU64::new(0);
+                    pool.run_dynamic(2, 1, 2, &|a: usize, b: usize| {
+                        ran.fetch_add((b - a) as u64, Ordering::Relaxed);
+                    });
+                    assert_eq!(ran.load(Ordering::Relaxed), 2);
+                    pool.shutdown();
+                });
+            assert!(report.failure.is_none(), "{:#?}", report.failure);
+        }
+    }
+
+    /// Detector pins: with the seeded mutants compiled in
+    /// (`--cfg rtopk_model_check_mutants`), the checker MUST flag the
+    /// protocol — these assert the *failure*, regression-pinning the
+    /// bug class the checker exists for.
+    #[cfg(rtopk_model_check_mutants)]
+    mod mutants {
+        use super::super::*;
+        use modelcheck::Checker;
+
+        #[test]
+        fn mutant_missed_wakeup_shutdown_is_caught() {
+            // deliberately no env_caps(): capping exploration could
+            // starve the buggy schedule and fail this test spuriously
+            let report = Checker::dfs().max_executions(8_000).check(|| {
+                let pool = Pool::new(2);
+                pool.shutdown();
+            });
+            let failure = report.failure.expect(
+                "flag-outside-lock shutdown must deadlock some schedule",
+            );
+            assert!(
+                failure.message.contains("deadlock"),
+                "expected a deadlock report, got: {}",
+                failure.message
+            );
+        }
     }
 }

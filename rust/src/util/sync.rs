@@ -1,0 +1,64 @@
+//! Synchronization façade for the serving stack.
+//!
+//! Concurrency-bearing modules (`util::pool`, `coordinator::tenant`,
+//! `coordinator::batcher`) import their primitives from here instead of
+//! `std::sync`. Normally every name is a re-export of std — zero cost,
+//! identical semantics. Compiled with `RUSTFLAGS="--cfg
+//! rtopk_model_check"`, the same names resolve to the in-tree
+//! `modelcheck` crate's instrumented primitives, and the model-check
+//! suites (`model_*` tests) explore thread interleavings of the real
+//! protocol code: deadlocks, lost wakeups, and data races on tracked
+//! raw memory become test failures with a replayable schedule. See
+//! `rust/modelcheck/src/lib.rs` for the model and its limits, and
+//! docs/ARCHITECTURE.md ("Verification & static analysis") for the
+//! rules below in long form.
+//!
+//! ## Façade rules for new sync code
+//!
+//! * New cross-thread protocol state uses these names — `sync::Mutex`,
+//!   `sync::Condvar`, `sync::atomic::*`, `sync::thread` — not
+//!   `std::sync`. Observability-only state (gauges, counters that no
+//!   control flow depends on) may stay on `std::sync::atomic` so it
+//!   does not inflate the model's schedule tree.
+//! * Process globals (`static`, `OnceLock`) stay std: a model execution
+//!   must create all of its sync objects inside the test body, and
+//!   globals outlive executions.
+//! * `RwLock` is passthrough even under the model; do not hold a write
+//!   guard across any façade operation.
+//! * Raw-pointer data handed between threads (the pool's erased job
+//!   body) is invisible to the model's clocks: bracket the accesses
+//!   with [`race_read`]/[`race_write`] — free in normal builds.
+//! * Do not read wall clocks on paths a DFS model suite drives; the
+//!   replay becomes nondeterministic (detected and reported). Suites
+//!   for timeout-bearing code pass `expire_at: None`-style arguments or
+//!   use the random strategy.
+
+#[cfg(not(rtopk_model_check))]
+pub use std::sync::atomic;
+#[cfg(not(rtopk_model_check))]
+pub use std::sync::{
+    Arc, Condvar, Mutex, MutexGuard, RwLock, WaitTimeoutResult,
+};
+#[cfg(not(rtopk_model_check))]
+pub use std::thread;
+
+/// Tracked raw-memory read hook: no-op outside the model. Call before
+/// dereferencing shared data the type system cannot see (smuggled raw
+/// pointers), passing a stable address identifying the location.
+#[cfg(not(rtopk_model_check))]
+#[inline(always)]
+pub fn race_read(_addr: usize) {}
+
+/// Tracked raw-memory write hook: no-op outside the model. Call when
+/// publishing or reclaiming such data (see [`race_read`]).
+#[cfg(not(rtopk_model_check))]
+#[inline(always)]
+pub fn race_write(_addr: usize) {}
+
+#[cfg(rtopk_model_check)]
+pub use modelcheck::sync::atomic;
+#[cfg(rtopk_model_check)]
+pub use modelcheck::sync::{
+    race_read, race_write, thread, Arc, Condvar, Mutex, MutexGuard, RwLock,
+    WaitTimeoutResult,
+};
