@@ -35,6 +35,7 @@ use rtopk::coordinator::{SubmitRequest, TopKService};
 use rtopk::plan::{candidates, Planner, PlannerConfig, RowBucket};
 use rtopk::topk::rowwise::rowwise_topk_with;
 use rtopk::topk::types::Mode;
+use rtopk::topk::verify::recall_of;
 use rtopk::util::json::{self, Value};
 use rtopk::util::matrix::RowMatrix;
 use rtopk::util::rng::Rng;
@@ -148,6 +149,43 @@ fn mixed_tenant_sweep(smoke: bool) -> (Vec<Value>, Value) {
     (out, telemetry)
 }
 
+/// Per-mode achieved-recall stats over one seeded workload: what each
+/// request mode actually returns relative to the exact oracle, next to
+/// what the planner recorded at decision time (`planned_recall` is the
+/// qualification race's measurement for recall-contracted modes, null
+/// for modes that carry no contract). Exported under `"recall"` so CI
+/// pins the schema; never a perf gate.
+fn recall_sweep(planner: &Planner, smoke: bool) -> Value {
+    let (rows, cols, k) =
+        if smoke { (64usize, 128usize, 16usize) } else { (128, 512, 32) };
+    let x = workload(rows, cols, 0x_5EC_A11);
+    let mut modes = Vec::new();
+    for (name, mode) in [
+        ("exact", Mode::EXACT),
+        ("es4", Mode::EarlyStop { max_iter: 4 }),
+        ("apx950", Mode::Approx { recall_milli: 950 }),
+    ] {
+        let plan = planner.plan(rows, cols, k, mode);
+        let res = planner.run(&x, k, mode);
+        let achieved = recall_of(&x, &res);
+        modes.push(json::obj(vec![
+            ("mode", json::s(name)),
+            ("algo", json::s(&plan.algo.name())),
+            ("achieved_recall", json::num(achieved)),
+            (
+                "planned_recall",
+                plan.recall.map(json::num).unwrap_or(Value::Null),
+            ),
+        ]));
+    }
+    json::obj(vec![
+        ("rows", json::num(rows as f64)),
+        ("cols", json::num(cols as f64)),
+        ("k", json::num(k as f64)),
+        ("modes", json::arr(modes)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RTOPK_SMOKE").is_ok();
     let quick = smoke || std::env::var("RTOPK_QUICK").is_ok();
@@ -248,6 +286,7 @@ fn main() {
     t.print();
 
     let (tenants, telemetry) = mixed_tenant_sweep(smoke);
+    let recall = recall_sweep(&planner, smoke);
 
     let pass = min_vs_best >= 0.95 && min_vs_worst > 1.1;
     println!(
@@ -276,6 +315,7 @@ fn main() {
         ("grid", json::arr(points)),
         ("tenants", json::arr(tenants)),
         ("telemetry", telemetry),
+        ("recall", recall),
         (
             "summary",
             json::obj(vec![

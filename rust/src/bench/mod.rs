@@ -105,7 +105,8 @@ pub fn early_stop_iters(m: usize, k: usize, max_iter: u32, seed: u64) -> u32 {
     search_early_stop(&row, k, max_iter).iters
 }
 
-/// Parse a mode string ("exact", "eps1e-4", "es4") for bench CLIs.
+/// Parse a mode string ("exact", "eps1e-4", "es4", "apx950") for bench
+/// CLIs and the `[tenants.<name>] mode` knob.
 pub fn parse_mode(s: &str) -> Result<Mode, String> {
     if s == "exact" {
         return Ok(Mode::EXACT);
@@ -118,7 +119,19 @@ pub fn parse_mode(s: &str) -> Result<Mode, String> {
         let eps_rel: f32 = eps.parse().map_err(|_| format!("bad mode {s:?}"))?;
         return Ok(Mode::Exact { eps_rel });
     }
-    Err(format!("unknown mode {s:?} (expected exact | es<N> | eps<X>)"))
+    if let Some(rm) = s.strip_prefix("apx") {
+        let recall_milli: u16 =
+            rm.parse().map_err(|_| format!("bad mode {s:?}"))?;
+        if recall_milli == 0 || recall_milli > 1000 {
+            return Err(format!(
+                "mode {s:?}: recall target must be in 1..=1000 thousandths"
+            ));
+        }
+        return Ok(Mode::Approx { recall_milli });
+    }
+    Err(format!(
+        "unknown mode {s:?} (expected exact | es<N> | eps<X> | apx<N>)"
+    ))
 }
 
 #[cfg(test)]
@@ -159,6 +172,17 @@ mod tests {
         assert_eq!(parse_mode("exact").unwrap(), Mode::EXACT);
         assert_eq!(parse_mode("es4").unwrap(), Mode::EarlyStop { max_iter: 4 });
         assert!(matches!(parse_mode("eps1e-4").unwrap(), Mode::Exact { .. }));
+        assert_eq!(
+            parse_mode("apx950").unwrap(),
+            Mode::Approx { recall_milli: 950 }
+        );
+        assert_eq!(
+            parse_mode("apx1000").unwrap(),
+            Mode::Approx { recall_milli: 1000 }
+        );
+        assert!(parse_mode("apx0").is_err(), "zero recall is no contract");
+        assert!(parse_mode("apx1001").is_err(), "recall cannot exceed 1");
+        assert!(parse_mode("apx").is_err());
         assert!(parse_mode("wat").is_err());
     }
 

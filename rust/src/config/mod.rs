@@ -125,6 +125,14 @@ fn strip_comment(line: &str) -> &str {
 /// * `bucket_learn_window` — rows samples the service accumulates
 ///   between row-bucket boundary relearn attempts (the telemetry
 ///   window the quantile split is computed over).
+/// * `recall_probe_rows` — rows in the seeded probe workload the
+///   planner measures `Mode::Approx` candidates' recall on before the
+///   timing race (candidates below the target are disqualified
+///   regardless of speed; clamped to at least 8).
+/// * `recall_margin_milli` — qualification safety margin in
+///   thousandths added to the requested recall target: a candidate
+///   must measure at least `target + margin` to stay in the race, so
+///   sampling noise on the probe cannot admit a borderline mode.
 #[derive(Clone, Debug)]
 pub struct PlanConfig {
     pub force_algo: Option<String>,
@@ -136,6 +144,8 @@ pub struct PlanConfig {
     pub shadow_every_max: usize,
     pub shadow_busy_rows: u64,
     pub bucket_learn_window: usize,
+    pub recall_probe_rows: usize,
+    pub recall_margin_milli: u16,
 }
 
 /// Hand-written (not derived): a derived Default would zero
@@ -155,6 +165,8 @@ impl Default for PlanConfig {
             shadow_every_max: 0,
             shadow_busy_rows: 4096,
             bucket_learn_window: 1024,
+            recall_probe_rows: 256,
+            recall_margin_milli: 5,
         }
     }
 }
@@ -179,6 +191,10 @@ impl PlanConfig {
             shadow_busy_rows: c.get_or("plan.shadow_busy_rows", d.shadow_busy_rows),
             bucket_learn_window: c
                 .get_or("plan.bucket_learn_window", d.bucket_learn_window),
+            recall_probe_rows: c
+                .get_or("plan.recall_probe_rows", d.recall_probe_rows),
+            recall_margin_milli: c
+                .get_or("plan.recall_margin_milli", d.recall_margin_milli),
         }
     }
 }
@@ -250,8 +266,8 @@ impl BackendConfig {
 ///   (0 = no limit, the default).
 /// * `force_algo` — per-tenant algorithm pin, same vocabulary and
 ///   semantics rules as `[plan] force_algo`.
-/// * `mode` — default search mode (`exact` | `es<N>` | `eps<X>`) used
-///   when the tenant submits without an explicit mode.
+/// * `mode` — default search mode (`exact` | `es<N>` | `eps<X>` |
+///   `apx<N>`) used when the tenant submits without an explicit mode.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TenantConfig {
     pub name: String,
@@ -437,6 +453,12 @@ pub struct ServeConfig {
     /// margin absorbs estimate noise so admission stays a *provably
     /// unmeetable* test, not a load-shedding heuristic
     pub feasibility_margin: f64,
+    /// floor (in thousandths) on the recall target a `Mode::Approx`
+    /// submission may request: requests below it are rejected at submit
+    /// with a positioned error, so one misconfigured caller cannot
+    /// quietly degrade its own results past what the deployment deems
+    /// usable (default 500 = recall 0.5; 1 admits any valid target)
+    pub min_recall_milli: u16,
     /// adaptive-planner knobs for the CPU engine route
     pub plan: PlanConfig,
     /// execution-backend registration / pinning knobs
@@ -460,6 +482,7 @@ impl Default for ServeConfig {
             max_blocked_waiters: MAX_BLOCKED_WAITERS,
             feasibility_admission: true,
             feasibility_margin: 0.25,
+            min_recall_milli: 500,
             plan: PlanConfig::default(),
             backend: BackendConfig::default(),
             tenants: TenantsConfig::default(),
@@ -492,6 +515,8 @@ impl ServeConfig {
                 .get_or("serve.feasibility_admission", d.feasibility_admission),
             feasibility_margin: c
                 .get_or("serve.feasibility_margin", d.feasibility_margin),
+            min_recall_milli: c
+                .get_or("serve.min_recall_milli", d.min_recall_milli),
             plan: PlanConfig::from_config(c),
             backend: BackendConfig::from_config(c),
             tenants: TenantsConfig::from_config(c),
@@ -603,6 +628,25 @@ mod tests {
         let d = PlanConfig::default();
         assert_eq!(d.cache_ttl_secs, 7 * 24 * 3600);
         assert_eq!(d.shadow_every, 0);
+    }
+
+    #[test]
+    fn recall_knobs_parse_with_defaults() {
+        let d = PlanConfig::default();
+        assert_eq!(d.recall_probe_rows, 256);
+        assert_eq!(d.recall_margin_milli, 5);
+        let c = Config::parse(
+            "[plan]\nrecall_probe_rows = 64\nrecall_margin_milli = 10\n\
+             [serve]\nmin_recall_milli = 800",
+        )
+        .unwrap();
+        let p = PlanConfig::from_config(&c);
+        assert_eq!(p.recall_probe_rows, 64);
+        assert_eq!(p.recall_margin_milli, 10);
+        let s = ServeConfig::from_config(&c);
+        assert_eq!(s.min_recall_milli, 800);
+        assert_eq!(s.plan.recall_probe_rows, 64);
+        assert_eq!(ServeConfig::default().min_recall_milli, 500);
     }
 
     #[test]

@@ -215,6 +215,7 @@ fn deadline_class(d: Duration) -> u32 {
 enum ModeBits {
     Exact(u32),
     EarlyStop(u32),
+    Approx(u16),
 }
 
 fn key_of<T>(p: &Pending<T>) -> GroupKey {
@@ -225,6 +226,7 @@ fn key_of<T>(p: &Pending<T>) -> GroupKey {
         mode: match p.mode {
             Mode::Exact { eps_rel } => ModeBits::Exact(eps_rel.to_bits()),
             Mode::EarlyStop { max_iter } => ModeBits::EarlyStop(max_iter),
+            Mode::Approx { recall_milli } => ModeBits::Approx(recall_milli),
         },
         deadline_class: p.deadline.map(deadline_class),
         priority: p.priority,

@@ -89,6 +89,9 @@ pub struct TopKService {
     /// slack factor on the feasibility prediction (`[serve]
     /// feasibility_margin`)
     feasibility_margin: f64,
+    /// floor (in thousandths) on the recall target a `Mode::Approx`
+    /// submission may request (`[serve] min_recall_milli`)
+    min_recall_milli: u16,
     /// shared ticket cancel-hook: evicts cancelled requests from the
     /// batcher queue so a cancel frees quota and queue space
     /// immediately. Built once (it captures no per-request state) and
@@ -208,6 +211,7 @@ impl TopKService {
             default_over_quota,
             feasibility_admission: cfg.feasibility_admission,
             feasibility_margin: cfg.feasibility_margin,
+            min_recall_milli: cfg.min_recall_milli,
             cancel_hook,
             _executor: executor,
         })
@@ -260,6 +264,33 @@ impl TopKService {
         let mode = mode
             .or_else(|| self.tenants.default_mode(&tenant))
             .unwrap_or(Mode::EXACT);
+        // Recall-contract admission: a malformed or below-floor target
+        // is refused here, before quota or queue space is touched —
+        // the planner downstream assumes every Approx target it sees is
+        // a valid contract it must qualify candidates against.
+        if let Mode::Approx { recall_milli } = mode {
+            if recall_milli == 0 || recall_milli > 1000 {
+                return Err(anyhow!(
+                    "approx recall target {} out of range for tenant '{}': \
+                     recall_milli must be in 1..=1000 thousandths \
+                     (1000 = exact recall)",
+                    recall_milli,
+                    tenant.as_str()
+                ));
+            }
+            if recall_milli < self.min_recall_milli {
+                return Err(anyhow!(
+                    "approx recall target {} below the service floor for \
+                     tenant '{}': `[serve] min_recall_milli = {}` refuses \
+                     contracts weaker than {:.3} recall; raise the request's \
+                     target or lower the floor",
+                    recall_milli,
+                    tenant.as_str(),
+                    self.min_recall_milli,
+                    self.min_recall_milli as f64 / 1000.0
+                ));
+            }
+        }
         if k == 0 || k > matrix.cols {
             return Err(anyhow!("k={} out of range for M={}", k, matrix.cols));
         }
@@ -616,6 +647,61 @@ mod tests {
         let x = RowMatrix::zeros(2, 4);
         assert!(svc.submit_ticket(sreq(x.clone(), 0, Mode::EXACT)).is_err());
         assert!(svc.submit_ticket(sreq(x, 5, Mode::EXACT)).is_err());
+    }
+
+    #[test]
+    fn approx_submissions_are_served_and_meet_their_contract() {
+        let svc = cpu_service(2);
+        let mut rng = Rng::seed_from(0x78);
+        let x = RowMatrix::random_normal(40, 256, &mut rng);
+        let res = svc
+            .submit(sreq(x.clone(), 16, Mode::Approx { recall_milli: 950 }))
+            .unwrap();
+        let r = crate::topk::verify::recall_of(&x, &res);
+        // one seeded draw, not a statistical sweep (that lives in the
+        // recall harness tests) — but the achieved recall must at least
+        // clear the contract's statistical gate
+        assert!(
+            r >= crate::topk::verify::recall_gate(0.95, x.rows),
+            "achieved recall {r} under the 0.95 contract gate"
+        );
+        assert_eq!(svc.stats().requests, 1);
+    }
+
+    #[test]
+    fn approx_targets_below_the_service_floor_are_refused() {
+        // default floor: [serve] min_recall_milli = 500
+        let svc = cpu_service(1);
+        let x = RowMatrix::zeros(4, 16);
+        let err = svc
+            .submit_ticket(sreq(x.clone(), 4, Mode::Approx { recall_milli: 499 }))
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("min_recall_milli"), "names the knob: {msg}");
+        assert!(msg.contains("499"), "names the target: {msg}");
+        assert_eq!(svc.stats().requests, 0, "refused before admission");
+        // a malformed target is refused regardless of the floor
+        let err = svc
+            .submit_ticket(sreq(x.clone(), 4, Mode::Approx { recall_milli: 0 }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("1..=1000"));
+        let err = svc
+            .submit_ticket(sreq(x, 4, Mode::Approx { recall_milli: 1001 }))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("1..=1000"));
+        // floor = 1 admits any valid target
+        let open = TopKService::cpu_only(&ServeConfig {
+            workers: 1,
+            max_wait_us: 50,
+            min_recall_milli: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut rng = Rng::seed_from(0x79);
+        let y = RowMatrix::random_normal(8, 64, &mut rng);
+        assert!(open
+            .submit(sreq(y, 4, Mode::Approx { recall_milli: 100 }))
+            .is_ok());
     }
 
     #[test]

@@ -35,7 +35,10 @@
 //! u32 k
 //! u8  mode tag: 0 = unset (tenant/service default),
 //!               1 = exact (f32 eps_rel follows),
-//!               2 = early-stop (u32 max_iter follows)
+//!               2 = early-stop (u32 max_iter follows),
+//!               3 = approx (u16 recall target in thousandths follows;
+//!                   must be 1..=1000 — 0 and impossible targets are
+//!                   rejected at both encode and decode)
 //! u64 deadline_ns (0 = none; a zero deadline is unrepresentable and
 //!                  rejected at encode — the service refuses it anyway)
 //! u8  priority: 0 low, 1 normal, 2 high
@@ -187,11 +190,16 @@ pub fn encode_request(req: &SubmitRequest) -> Result<Vec<u8>, WireError> {
     // exact payload size up front: frames carry whole matrices, and
     // growing a multi-megabyte Vec by doubling would re-copy the data
     // several times before the CRC pass even starts
+    let mode_bytes = match req.mode {
+        None => 0,
+        Some(Mode::Approx { .. }) => 2,
+        Some(_) => 4,
+    };
     let mut p = Vec::with_capacity(
         2 + tenant.len()
             + 4
             + 1
-            + if req.mode.is_some() { 4 } else { 0 }
+            + mode_bytes
             + 8
             + 3
             + 8
@@ -209,6 +217,22 @@ pub fn encode_request(req: &SubmitRequest) -> Result<Vec<u8>, WireError> {
         Some(Mode::EarlyStop { max_iter }) => {
             p.push(2);
             p.extend_from_slice(&max_iter.to_le_bytes());
+        }
+        Some(Mode::Approx { recall_milli }) => {
+            // mirror the zero-deadline rule: an out-of-range target is
+            // rejected at encode so encode(decode(x)) can never produce
+            // a frame this build's own decoder refuses
+            if recall_milli == 0 || recall_milli > 1000 {
+                return fail(
+                    0,
+                    format!(
+                        "approx recall target {recall_milli} out of range \
+                         (1..=1000 thousandths)"
+                    ),
+                );
+            }
+            p.push(3);
+            p.extend_from_slice(&recall_milli.to_le_bytes());
         }
     }
     // 0 on the wire means "no deadline", so a zero deadline cannot be
@@ -456,10 +480,24 @@ fn decode_submit(r: &mut Reader<'_>) -> Result<SubmitRequest, WireError> {
             Some(Mode::Exact { eps_rel })
         }
         2 => Some(Mode::EarlyStop { max_iter: r.u32("early-stop max_iter")? }),
+        3 => {
+            let rm_pos = r.pos;
+            let recall_milli = r.u16("approx recall target")?;
+            if recall_milli == 0 || recall_milli > 1000 {
+                return fail(
+                    rm_pos,
+                    format!(
+                        "approx recall target {recall_milli} out of range \
+                         (1..=1000 thousandths)"
+                    ),
+                );
+            }
+            Some(Mode::Approx { recall_milli })
+        }
         other => {
             return fail(
                 mode_pos,
-                format!("unknown mode tag {other} (expected 0 | 1 | 2)"),
+                format!("unknown mode tag {other} (expected 0 | 1 | 2 | 3)"),
             )
         }
     };
@@ -607,6 +645,40 @@ mod tests {
         assert!(decode(&[]).is_err());
         assert!(decode(&[0x52]).is_err());
         assert!(decode(&MAGIC).is_err());
+    }
+
+    #[test]
+    fn approx_mode_roundtrips_and_rejects_out_of_range_targets() {
+        let req = sample_request().mode(Mode::Approx { recall_milli: 950 });
+        let bytes = encode_request(&req).unwrap();
+        match decode(&bytes).unwrap() {
+            Frame::Submit(back) => {
+                assert_eq!(back.mode, Some(Mode::Approx { recall_milli: 950 }));
+                assert_eq!(back, req);
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // encode refuses impossible targets outright
+        for bad in [0u16, 1001, u16::MAX] {
+            let err = encode_request(
+                &sample_request().mode(Mode::Approx { recall_milli: bad }),
+            )
+            .unwrap_err();
+            assert!(err.msg.contains("out of range"), "got: {err}");
+        }
+        // decode refuses a hand-patched out-of-range target with the
+        // positioned error (the u16 sits right after the mode tag byte)
+        let good = sample_request().mode(Mode::Approx { recall_milli: 1000 });
+        let mut bytes = encode_request(&good).unwrap();
+        let rm_pos = HEADER_LEN + 2 + "alpha".len() + 4 + 1;
+        bytes[rm_pos..rm_pos + 2].copy_from_slice(&1001u16.to_le_bytes());
+        let crc = crc32(&bytes[HEADER_LEN..]);
+        bytes[16..20].copy_from_slice(&crc.to_le_bytes());
+        let hcrc = crc32(&bytes[..20]);
+        bytes[20..24].copy_from_slice(&hcrc.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert_eq!(err.offset, rm_pos);
+        assert!(err.msg.contains("out of range"), "got: {err}");
     }
 
     #[test]

@@ -30,7 +30,7 @@ fn app() -> App {
                 .opt("rows", "65536", "number of rows N")
                 .opt("cols", "256", "row length M")
                 .opt("k", "32", "elements to select per row")
-                .opt("mode", "exact", "exact | es<N> | eps<X>")
+                .opt("mode", "exact", "exact | es<N> | eps<X> | apx<N>")
                 .opt("seed", "42", "workload seed")
                 .switch("verify", "check against the exact oracle"),
             Command::new("serve", "start the top-k service and run a demo load")
@@ -60,7 +60,7 @@ fn app() -> App {
                 .opt("rows", "",
                      "comma-separated batch row counts to plan for \
                       (empty = each row bucket's representative count)")
-                .opt("mode", "exact", "exact | es<N> | eps<X>")
+                .opt("mode", "exact", "exact | es<N> | eps<X> | apx<N>")
                 .opt("calib-rows", "192",
                      "microbenchmark rows per candidate (0 = cost model only)")
                 .opt("force", "", "pin one algorithm (expert; empty = adaptive)")
@@ -89,7 +89,7 @@ fn app() -> App {
                 .opt("rows", "4", "matrix rows N")
                 .opt("cols", "16", "row length M")
                 .opt("k", "4", "elements to select per row")
-                .opt("mode", "exact", "exact | es<N> | eps<X>")
+                .opt("mode", "exact", "exact | es<N> | eps<X> | apx<N>")
                 .opt("tenant", "default", "tenant the request runs as")
                 .opt("deadline-us", "0", "per-request deadline in us (0 = none)")
                 .opt("priority", "normal", "low | normal | high")

@@ -64,8 +64,14 @@
 //!    `mode`, `backend`, `algo`) or naming an unknown bucket /
 //!    algorithm / mode tag.
 //! 6. Any entry (or its runner-up) pairing an approximate mode key
-//!    (`es<N>`, loose-eps exact) with a non-rtopk algorithm — that
-//!    would change the output contract, not just the speed.
+//!    (`es<N>`, `apx<N>`, loose-eps exact) with a non-rtopk algorithm —
+//!    that would change the output contract, not just the speed.
+//!
+//! Recall-contracted entries (`apx<N>` keys) additionally carry an
+//! optional `recall` number — the winner's achieved recall on the
+//! qualification probe — following the `shadow` optional-field
+//! precedent (an entry-payload addition, not a schema bump; documents
+//! without it load unchanged).
 
 use crate::plan::{
     Plan, PlanSource, ProbeKind, RawProbe, RowBucket, RunnerUp, ShadowHistory,
@@ -307,6 +313,12 @@ impl PlanCache {
                     ]),
                     None => Value::Null,
                 };
+                // achieved recall travels with recall-contracted plans
+                // so a recalled decision stays auditable after restart
+                let recall = match plan.recall {
+                    Some(r) => json::num(r),
+                    None => Value::Null,
+                };
                 json::obj(vec![
                     ("rows_bucket", json::s(bucket.name())),
                     ("cols", json::num(cols as f64)),
@@ -318,6 +330,7 @@ impl PlanCache {
                     ("probes", json::arr(probes)),
                     ("runner_up", runner_up),
                     ("shadow", shadow),
+                    ("recall", recall),
                 ])
             })
             .collect();
@@ -552,6 +565,20 @@ impl PlanCache {
                         as u32,
                 }),
             };
+            // optional achieved-recall figure (entry-payload addition,
+            // like `shadow`); a present-but-unparseable or out-of-range
+            // value rejects the document — it claims evidence it cannot
+            // carry
+            let recall = match p.get("recall") {
+                None | Some(Value::Null) => None,
+                Some(r) => {
+                    let r = r.as_f64().ok_or("bad recall")?;
+                    if !(0.0..=1.0).contains(&r) {
+                        return Err(format!("recall {r} outside [0, 1]"));
+                    }
+                    Some(r)
+                }
+            };
             parsed.push((
                 bucket,
                 cols,
@@ -565,6 +592,7 @@ impl PlanCache {
                     probes,
                     runner_up,
                     shadow,
+                    recall,
                 },
             ));
         }
@@ -667,6 +695,16 @@ pub fn parse_mode_tag(tag: &str) -> Result<Mode, String> {
             it.parse().map_err(|_| format!("bad mode tag {tag:?}"))?;
         return Ok(Mode::EarlyStop { max_iter });
     }
+    if let Some(rm) = tag.strip_prefix("apx") {
+        let recall_milli: u16 =
+            rm.parse().map_err(|_| format!("bad mode tag {tag:?}"))?;
+        if recall_milli == 0 || recall_milli > 1000 {
+            return Err(format!(
+                "mode tag {tag:?}: recall target must be in 1..=1000 thousandths"
+            ));
+        }
+        return Ok(Mode::Approx { recall_milli });
+    }
     Err(format!("unknown mode tag {tag:?}"))
 }
 
@@ -683,6 +721,7 @@ mod tests {
             probes: Vec::new(),
             runner_up: None,
             shadow: None,
+            recall: None,
         }
     }
 
@@ -716,6 +755,7 @@ mod tests {
                 samples: 6,
                 demotions: 2,
             }),
+            recall: None,
         }
     }
 
@@ -761,11 +801,23 @@ mod tests {
                 probes: Vec::new(),
                 runner_up: None,
                 shadow: None,
+                recall: None,
+            },
+        );
+        // a recall-contracted entry with its achieved-recall figure
+        c.insert(
+            RowBucket::Le64,
+            1024,
+            32,
+            "apx950",
+            Plan {
+                recall: Some(0.9625),
+                ..plan(RowAlgo::RTopK(Mode::Approx { recall_milli: 950 }), 16)
             },
         );
         let text = c.to_json();
         let d = PlanCache::new();
-        assert_eq!(d.load_json(&text).unwrap(), 3);
+        assert_eq!(d.load_json(&text).unwrap(), 4);
         for (bucket, cols, k, mode, p) in c.snapshot() {
             let q = d.get(bucket, cols, k, &mode).unwrap();
             assert_eq!(q.algo, p.algo);
@@ -774,6 +826,7 @@ mod tests {
             assert_eq!(q.probes, p.probes);
             assert_eq!(q.runner_up, p.runner_up);
             assert_eq!(q.shadow, p.shadow, "demotion history roundtrips");
+            assert_eq!(q.recall, p.recall, "achieved recall roundtrips");
             assert_eq!(q.source, PlanSource::Cached);
         }
     }
@@ -862,12 +915,53 @@ mod tests {
             parse_algo("rtopk_es4").unwrap(),
             RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 })
         );
+        assert_eq!(
+            parse_algo("rtopk_apx950").unwrap(),
+            RowAlgo::RTopK(Mode::Approx { recall_milli: 950 })
+        );
         assert!(matches!(
             parse_algo("rtopk_exact_eps1e-4").unwrap(),
             RowAlgo::RTopK(Mode::Exact { .. })
         ));
         assert!(parse_algo("nope").is_err());
         assert!(parse_algo("rtopk_wat").is_err());
+    }
+
+    #[test]
+    fn approx_mode_tags_roundtrip_and_reject_out_of_range_targets() {
+        assert_eq!(
+            parse_mode_tag("apx950").unwrap(),
+            Mode::Approx { recall_milli: 950 }
+        );
+        assert_eq!(
+            parse_mode_tag("apx1000").unwrap(),
+            Mode::Approx { recall_milli: 1000 }
+        );
+        // the tag is lossless: parse(tag(m)) == m for every target
+        for rm in [1u16, 500, 950, 999, 1000] {
+            let m = Mode::Approx { recall_milli: rm };
+            assert_eq!(parse_mode_tag(&m.tag()).unwrap(), m);
+        }
+        assert!(parse_mode_tag("apx0").is_err(), "recall 0 is meaningless");
+        assert!(parse_mode_tag("apx1001").is_err(), "recall > 1 impossible");
+        assert!(parse_mode_tag("apx").is_err());
+        assert!(parse_mode_tag("apx9.5").is_err());
+    }
+
+    #[test]
+    fn recall_field_out_of_range_rejects_the_document() {
+        let doc = format!(
+            r#"{{"version": 3, {}, "plans": [
+              {{"rows_bucket": "le64", "cols": 256, "k": 32, "mode": "apx950",
+                "backend": "cpu", "algo": "rtopk_apx950", "grain": 8,
+                "recall": 1.5}}
+            ]}}"#,
+            host_json()
+        );
+        let c = PlanCache::new();
+        let err = c.load_json(&doc).unwrap_err();
+        assert!(err.contains("recall"), "got: {err}");
+        assert!(c.is_empty());
     }
 
     /// `"host": {...}, "created_unix": N` fragment for hand-built docs.
@@ -992,6 +1086,7 @@ mod tests {
                 probes: Vec::new(),
                 runner_up: None,
                 shadow: None,
+                recall: None,
             },
         );
         let d = PlanCache::new();

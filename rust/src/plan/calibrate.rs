@@ -71,6 +71,19 @@ pub fn time_candidate(
     best
 }
 
+/// Measured recall of one candidate on a probe matrix, against the
+/// shared value-multiset oracle ([`crate::topk::verify::recall_of`]).
+/// The planner's recall-qualification gate uses this to disqualify
+/// `Mode::Approx` family members below the contract before the timing
+/// race runs; the verification harness reuses it so calibration and
+/// tests measure recall through one code path.
+pub fn measure_recall(x: &RowMatrix, k: usize, algo: RowAlgo) -> f64 {
+    let res = rowwise_topk_grained(x, k, algo, crate::topk::rowwise::default_grain(x.cols));
+    let r = crate::topk::verify::recall_of(x, &res);
+    res.recycle();
+    r
+}
+
 /// Measure every candidate on an existing probe matrix; returns probes
 /// sorted fastest-first.
 pub fn microbench_on(
@@ -308,6 +321,18 @@ mod tests {
             }
         }
         assert!(time_backend(&Unsupporting, &x, 4, Mode::EXACT, 1).is_none());
+    }
+
+    #[test]
+    fn measured_recall_is_exact_for_exact_and_bounded_for_truncated() {
+        let x = probe_workload(48, 256);
+        let exact = measure_recall(&x, 32, RowAlgo::RTopK(Mode::EXACT));
+        assert_eq!(exact, 1.0, "exact selection recalls the full multiset");
+        let es2 = measure_recall(&x, 32, RowAlgo::RTopK(Mode::EarlyStop { max_iter: 2 }));
+        assert!((0.0..=1.0).contains(&es2));
+        assert!(es2 < 1.0, "a 2-iteration bracket cannot resolve 256 columns");
+        // deterministic: the same probe measures the same recall
+        assert_eq!(es2, measure_recall(&x, 32, RowAlgo::RTopK(Mode::EarlyStop { max_iter: 2 })));
     }
 
     #[test]

@@ -96,6 +96,19 @@
 //! * Approximate requests (early-stop, or a loose exact eps) are
 //!   defined *by the paper's algorithm*, so the planner only tunes the
 //!   grain and always executes `RowAlgo::RTopK(mode)`.
+//! * Recall-contracted requests (`Mode::Approx { recall_milli }`) are
+//!   defined by their *contract*, not by one kernel: the race admits
+//!   the two-stage kernel, the paper's early-stop kernel at several
+//!   budgets, and exact selection, measures each candidate's recall on
+//!   the calibration probes with the shared oracle
+//!   (`topk::verify::recall_of`), and **disqualifies any candidate
+//!   below the target (plus `recall_margin_milli`) regardless of
+//!   speed**. Exact selection always qualifies, so the family is never
+//!   empty; unmeasured decision paths (model-only, forced-backend
+//!   pins) rank only the provable members (the two-stage kernel —
+//!   whose own calibration table enforces the target at execution
+//!   time — and exact). The winner's achieved recall is recorded on
+//!   the plan and persisted.
 //! * Backends carry the same contract (`tests/runtime.rs` pins the
 //!   PJRT tile bit-for-bit against the Rust engine), so switching
 //!   backends can change speed, never results. Shadow demotion only
@@ -123,6 +136,11 @@
 //!   report counts as busy.
 //! * `bucket_learn_window` — rows samples the serving loop collects
 //!   between bucket-boundary relearn attempts.
+//! * `recall_probe_rows` — rows in the seeded workload the recall
+//!   qualification gate measures `Mode::Approx` candidates on.
+//! * `recall_margin_milli` — safety margin (thousandths) added to a
+//!   request's recall target during qualification, so probe noise
+//!   cannot admit a candidate sitting exactly at the contract.
 
 pub mod cache;
 pub mod calibrate;
@@ -356,6 +374,11 @@ pub struct Plan {
     /// shadow-demotion evidence (`Some` iff this plan's winner was
     /// installed by an online demotion); persisted with the plan
     pub shadow: Option<ShadowHistory>,
+    /// achieved recall of the winner on the qualification probe —
+    /// `Some` only for calibrated decisions of recall-contracted
+    /// (`Mode::Approx`) requests; persisted with the plan so a recalled
+    /// decision stays auditable against its contract
+    pub recall: Option<f64>,
 }
 
 impl Plan {
@@ -475,6 +498,12 @@ pub struct PlannerConfig {
     pub shadow_busy_rows: u64,
     /// rows samples collected between bucket-relearn attempts
     pub bucket_learn_window: usize,
+    /// rows in the seeded recall-qualification probe for `Mode::Approx`
+    /// requests
+    pub recall_probe_rows: usize,
+    /// safety margin (thousandths) added to the recall target when
+    /// qualifying candidates
+    pub recall_margin_milli: u16,
 }
 
 impl Default for PlannerConfig {
@@ -490,6 +519,8 @@ impl Default for PlannerConfig {
             shadow_every_max: 0,
             shadow_busy_rows: 4096,
             bucket_learn_window: 1024,
+            recall_probe_rows: 256,
+            recall_margin_milli: 5,
         }
     }
 }
@@ -512,6 +543,8 @@ impl PlannerConfig {
             shadow_every_max: c.shadow_every_max,
             shadow_busy_rows: c.shadow_busy_rows,
             bucket_learn_window: c.bucket_learn_window,
+            recall_probe_rows: c.recall_probe_rows,
+            recall_margin_milli: c.recall_margin_milli,
         })
     }
 }
@@ -533,6 +566,8 @@ pub fn mode_key(mode: Mode) -> String {
         Mode::Exact { eps_rel } if eps_rel <= 1e-15 => "exact".into(),
         Mode::Exact { eps_rel } => format!("exact_eps{eps_rel:.9e}"),
         Mode::EarlyStop { max_iter } => format!("es{max_iter}"),
+        // the recall target is an integer in thousandths: lossless
+        Mode::Approx { recall_milli } => format!("apx{recall_milli}"),
     }
 }
 
@@ -559,10 +594,48 @@ pub fn candidates(m: usize, k: usize, mode: Mode) -> Vec<RowAlgo> {
         let mut v = vec![RowAlgo::RTopK(mode)];
         v.extend(RowAlgo::all_baselines());
         v
+    } else if let Mode::Approx { .. } = mode {
+        // the recall race: the two-stage kernel, the paper's early-stop
+        // kernel at increasing budgets, and exact selection as the
+        // always-qualifying floor. Calibration measures each one's
+        // recall and disqualifies the ones below the target before the
+        // timing race picks a winner; all members are RTop-K-family, so
+        // the cache's kernel-pairing rule for non-exact keys holds.
+        vec![
+            RowAlgo::RTopK(mode),
+            RowAlgo::RTopK(Mode::EarlyStop { max_iter: 4 }),
+            RowAlgo::RTopK(Mode::EarlyStop { max_iter: 6 }),
+            RowAlgo::RTopK(Mode::EarlyStop { max_iter: 8 }),
+            RowAlgo::RTopK(Mode::EXACT),
+        ]
     } else {
-        // approximate semantics are defined by the paper's kernel
+        // early-stop / loose-eps semantics are defined by the paper's
+        // kernel
         vec![RowAlgo::RTopK(mode)]
     }
+}
+
+/// The subset of [`candidates`] whose recall contract holds *without a
+/// measured probe* — what the unmeasured decision paths (model-only,
+/// forced-backend fallbacks) may rank for a `Mode::Approx` request:
+/// the two-stage kernel (its own calibration table enforces the target
+/// empirically at execution time) and exact-semantics members (recall
+/// 1 by definition). Early-stop members need a measured qualification
+/// probe and are dropped here. Every other mode passes through
+/// unchanged.
+pub fn provable_candidates(m: usize, k: usize, mode: Mode) -> Vec<RowAlgo> {
+    let all = candidates(m, k, mode);
+    if !matches!(mode, Mode::Approx { .. }) {
+        return all;
+    }
+    all.into_iter()
+        .filter(|a| match a {
+            RowAlgo::RTopK(m) => {
+                matches!(m, Mode::Approx { .. }) || is_exact_semantics(*m)
+            }
+            _ => true,
+        })
+        .collect()
 }
 
 /// Per-shape shadow re-probe state: the EWMA of the winner-vs-runner-up
@@ -710,18 +783,24 @@ impl Planner {
     }
 
     /// Normalize a cached adaptive plan for this request: stamp the
-    /// source (a recall is a recall, wherever the entry came from) and
-    /// re-stamp the RTopK mode — the cached algo may carry a lossily-
-    /// serialized mode (JSON stores the display tag); the request's own
-    /// mode is authoritative. The runner-up gets the same re-stamp so a
-    /// shadow demotion can never swap in a stale mode.
+    /// source (a recall is a recall, wherever the entry came from) and,
+    /// for exact-family requests, re-stamp the RTopK eps — the cached
+    /// algo may carry a lossily-serialized eps (JSON stores the display
+    /// tag); the request's own mode is authoritative there. The
+    /// runner-up gets the same re-stamp so a shadow demotion can never
+    /// swap in a stale eps. Early-stop and apx tags round-trip
+    /// losslessly, and a `Mode::Approx` request's cached winner may
+    /// legitimately be a *different* RTopK mode (the recall race admits
+    /// exact and early-stop candidates), so those are never rewritten.
     fn recall(mut p: Plan, mode: Mode) -> Plan {
-        if let RowAlgo::RTopK(_) = p.algo {
-            p.algo = RowAlgo::RTopK(mode);
-        }
-        if let Some(ru) = &mut p.runner_up {
-            if let RowAlgo::RTopK(_) = ru.algo {
-                ru.algo = RowAlgo::RTopK(mode);
+        if matches!(mode, Mode::Exact { .. }) {
+            if let RowAlgo::RTopK(Mode::Exact { .. }) = p.algo {
+                p.algo = RowAlgo::RTopK(mode);
+            }
+            if let Some(ru) = &mut p.runner_up {
+                if let RowAlgo::RTopK(Mode::Exact { .. }) = ru.algo {
+                    ru.algo = RowAlgo::RTopK(mode);
+                }
             }
         }
         p.source = PlanSource::Cached;
@@ -813,10 +892,54 @@ impl Planner {
         }
     }
 
+    /// Recall qualification for `Mode::Approx` requests: measure every
+    /// non-exact candidate's recall on a seeded probe workload
+    /// (`recall_probe_rows` rows, the shared `topk::verify` oracle) and
+    /// drop the ones below the target plus `recall_margin_milli` —
+    /// **regardless of how fast they would race**. Exact-semantics
+    /// candidates qualify at recall 1.0 without measurement, so the
+    /// surviving family is never empty. Returns the qualified
+    /// candidates plus each candidate's measured recall (disqualified
+    /// ones included, for the audit trail). Every other mode passes
+    /// through unmeasured.
+    fn qualify_recall(
+        &self,
+        cols: usize,
+        k: usize,
+        mode: Mode,
+        all: Vec<RowAlgo>,
+    ) -> (Vec<RowAlgo>, Option<Vec<(RowAlgo, f64)>>) {
+        let Mode::Approx { recall_milli } = mode else {
+            return (all, None);
+        };
+        let need = (recall_milli as u32 + self.cfg.recall_margin_milli as u32)
+            .min(1000) as f64
+            / 1000.0;
+        let rx = calibrate::probe_workload(self.cfg.recall_probe_rows.max(8), cols);
+        let mut measured = Vec::with_capacity(all.len());
+        let mut keep = Vec::new();
+        for a in all {
+            let r = match a {
+                RowAlgo::RTopK(m) if !is_exact_semantics(m) => {
+                    calibrate::measure_recall(&rx, k, a)
+                }
+                // exact algorithms return the exact multiset: recall 1
+                _ => 1.0,
+            };
+            measured.push((a, r));
+            if r >= need {
+                keep.push(a);
+            }
+        }
+        (keep, Some(measured))
+    }
+
     /// Race the CPU candidates on a probe workload; returns the winning
     /// `(algo, grain, secs)` with the grain neighborhood calibrated,
     /// plus every candidate's raw probe (fastest first, the winner's
-    /// entry carrying its grain-calibrated time).
+    /// entry carrying its grain-calibrated time) and — for recall-
+    /// contracted requests — the winner's measured recall from the
+    /// qualification gate.
     fn race_cpu_on(
         &self,
         x: &RowMatrix,
@@ -824,8 +947,9 @@ impl Planner {
         k: usize,
         mode: Mode,
         base_grain: usize,
-    ) -> (RowAlgo, usize, f64, Vec<calibrate::Probe>) {
-        let cands = candidates(cols, k, mode);
+    ) -> (RowAlgo, usize, f64, Vec<calibrate::Probe>, Option<f64>) {
+        let (cands, recalls) =
+            self.qualify_recall(cols, k, mode, candidates(cols, k, mode));
         let (mut probes, algo, base_secs) = if cands.len() == 1 {
             // nothing to race, but the grain is still worth measuring
             let secs = calibrate::time_candidate(
@@ -856,7 +980,10 @@ impl Planner {
             base_secs,
         );
         probes[0].secs = secs;
-        (algo, grain, secs, probes)
+        let won = recalls
+            .as_ref()
+            .and_then(|rs| rs.iter().find(|(a, _)| *a == algo).map(|&(_, r)| r));
+        (algo, grain, secs, probes, won)
     }
 
     /// Race every registered accelerator backend that supports the
@@ -936,7 +1063,10 @@ impl Planner {
             // manifest prior for the backend, and the prior's second
             // pick as the shadow comparator (with no calibration,
             // online measurement is the only correction signal)
-            let ranked = model::rank(&candidates(cols, k, mode), cols, k);
+            // recall-contracted shapes rank only provable members here:
+            // with no calibration there is no measurement to qualify an
+            // early-stop candidate against the contract
+            let ranked = model::rank(&provable_candidates(cols, k, mode), cols, k);
             let backend = self.prior_backend(cols, k, mode);
             let runner_up = if backend != CPU_BACKEND_ID {
                 Some(RunnerUp {
@@ -959,6 +1089,7 @@ impl Planner {
                 probes: Vec::new(),
                 runner_up,
                 shadow: None,
+                recall: None,
             };
         }
         // one probe workload — sized for this row bucket under the
@@ -967,7 +1098,7 @@ impl Planner {
         let rep_rows =
             bucket.representative_rows_with(self.cache.bounds(), self.cfg.calib_rows);
         let x = calibrate::probe_workload(rep_rows, cols);
-        let (algo, grain, secs, cpu_probes) =
+        let (algo, grain, secs, cpu_probes, recall) =
             self.race_cpu_on(&x, cols, k, mode, base_grain);
         let (backend, accel) =
             self.race_backends_on(bucket, &x, cols, k, mode, secs);
@@ -1030,6 +1161,7 @@ impl Planner {
             probes,
             runner_up,
             shadow: None,
+            recall,
         }
     }
 
@@ -1049,7 +1181,7 @@ impl Planner {
     ) -> Plan {
         if self.cfg.calib_rows == 0 {
             let algo = self.forced_algo(mode).unwrap_or_else(|| {
-                model::rank(&candidates(cols, k, mode), cols, k)[0].0
+                model::rank(&provable_candidates(cols, k, mode), cols, k)[0].0
             });
             let backend = self
                 .forced_backend_for(cols, k, mode)
@@ -1062,6 +1194,7 @@ impl Planner {
                 probes: Vec::new(),
                 runner_up: None,
                 shadow: None,
+                recall: None,
             };
         }
         let rep_rows =
@@ -1087,7 +1220,7 @@ impl Planner {
                 (algo, grain, secs)
             }
             None => {
-                let (algo, grain, secs, _) =
+                let (algo, grain, secs, _, _) =
                     self.race_cpu_on(&x, cols, k, mode, base_grain);
                 (algo, grain, secs)
             }
@@ -1104,6 +1237,7 @@ impl Planner {
             probes: Vec::new(),
             runner_up: None,
             shadow: None,
+            recall: None,
         }
     }
 
@@ -1306,6 +1440,11 @@ impl Planner {
                 samples: st.samples,
                 demotions: st.demotions,
             }),
+            // the runner-up passed the same recall qualification gate at
+            // decision time (unqualified candidates never become
+            // runner-ups), so the contract survives the demotion; the
+            // decision-time measurement travels along unchanged
+            recall: plan.recall,
         };
         self.cache.insert(bucket, cols, k, &key, demoted);
         let ewma = st.ewma;
@@ -1394,6 +1533,7 @@ mod tests {
             probes: Vec::new(),
             runner_up: None,
             shadow: None,
+            recall: None,
         }
     }
 
@@ -1433,6 +1573,41 @@ mod tests {
         // a loose exact eps is approximate too
         let loose = candidates(256, 32, Mode::Exact { eps_rel: 1e-4 });
         assert_eq!(loose.len(), 1);
+        // a recall contract races the whole RTop-K family: the
+        // requested two-stage mode, the early-stop ladder, and the
+        // exact kernel as the always-qualified fallback
+        let apx = candidates(256, 32, Mode::Approx { recall_milli: 950 });
+        assert_eq!(apx.len(), 5);
+        assert!(apx.iter().all(|a| matches!(a, RowAlgo::RTopK(_))));
+        assert_eq!(apx[0], RowAlgo::RTopK(Mode::Approx { recall_milli: 950 }));
+        assert_eq!(*apx.last().unwrap(), RowAlgo::RTopK(Mode::EXACT));
+    }
+
+    #[test]
+    fn provable_candidates_drop_unmeasurable_family_members() {
+        // under a recall contract, paths with no calibration probe may
+        // only rank members whose recall is provable without
+        // measurement: the contracted mode itself (analytic binomial
+        // bound) and exact kernels (recall 1 by construction)
+        let prov = provable_candidates(256, 32, Mode::Approx { recall_milli: 950 });
+        assert!(!prov.is_empty());
+        for a in &prov {
+            match a {
+                RowAlgo::RTopK(m) => assert!(
+                    matches!(m, Mode::Approx { .. }) || is_exact_semantics(*m),
+                    "unprovable member {} leaked into model-only ranking",
+                    a.name()
+                ),
+                other => panic!("non-RTopK member {} under a recall key", other.name()),
+            }
+        }
+        // every other mode passes through unchanged
+        assert_eq!(
+            provable_candidates(256, 32, Mode::EXACT),
+            candidates(256, 32, Mode::EXACT)
+        );
+        let es = Mode::EarlyStop { max_iter: 4 };
+        assert_eq!(provable_candidates(256, 32, es), candidates(256, 32, es));
     }
 
     #[test]
@@ -1523,6 +1698,64 @@ mod tests {
         assert_eq!(plan.source, PlanSource::Calibrated);
         // and a single-candidate CPU-only race has no runner-up
         assert!(plan.runner_up.is_none());
+    }
+
+    #[test]
+    fn recall_contract_plans_qualify_and_record_achieved_recall() {
+        let p = quick_planner();
+        let mode = Mode::Approx { recall_milli: 950 };
+        let plan = p.plan(40, 512, 32, mode);
+        assert_eq!(plan.source, PlanSource::Calibrated);
+        assert!(
+            matches!(plan.algo, RowAlgo::RTopK(_)),
+            "recall keys pair with the RTop-K kernel family, got {}",
+            plan.algo.name()
+        );
+        let r = plan
+            .recall
+            .expect("calibrated recall-contract plans record achieved recall");
+        assert!(
+            (0.95..=1.0).contains(&r),
+            "winner's achieved recall {r} violates the 0.95 contract"
+        );
+        // cache hits keep the measured winner and its recorded recall —
+        // the requested-mode re-stamp is for lossy exact-eps tags only
+        let hit = p.plan(40, 512, 32, mode);
+        assert_eq!(hit.source, PlanSource::Cached);
+        assert_eq!(hit.algo, plan.algo);
+        assert_eq!(hit.recall, plan.recall);
+        // exact requests never carry a recall figure
+        assert_eq!(p.plan(40, 64, 8, Mode::EXACT).recall, None);
+    }
+
+    #[test]
+    fn recall_qualification_never_admits_a_below_target_candidate() {
+        let p = quick_planner();
+        // target 1.0: nothing below a perfect measured recall may stay
+        let mode = Mode::Approx { recall_milli: 1000 };
+        let all = candidates(1024, 32, mode);
+        let (keep, measured) = p.qualify_recall(1024, 32, mode, all.clone());
+        let measured = measured.expect("recall contracts measure the family");
+        assert_eq!(measured.len(), all.len(), "every candidate gets a verdict");
+        for (a, r) in &measured {
+            assert!((0.0..=1.0).contains(r), "recall out of range for {}", a.name());
+            assert_eq!(
+                keep.contains(a),
+                *r >= 1.0,
+                "{} kept/dropped against its own measurement (r={r})",
+                a.name()
+            );
+        }
+        // exact members free-pass at 1.0, so the family is never empty
+        assert!(keep.contains(&RowAlgo::RTopK(Mode::EXACT)));
+        assert!(measured
+            .iter()
+            .any(|(a, r)| *a == RowAlgo::RTopK(Mode::EXACT) && *r == 1.0));
+        // no contract -> no measurement, family passes through
+        let (through, none) =
+            p.qualify_recall(1024, 32, Mode::EXACT, candidates(1024, 32, Mode::EXACT));
+        assert!(none.is_none());
+        assert_eq!(through.len(), 7);
     }
 
     #[test]
@@ -1631,7 +1864,11 @@ mod tests {
         let p = quick_planner();
         let mut rng = Rng::seed_from(0x9A7);
         for &(m, k) in &[(64usize, 8usize), (100, 13), (256, 32)] {
-            for mode in [Mode::EXACT, Mode::EarlyStop { max_iter: 4 }] {
+            for mode in [
+                Mode::EXACT,
+                Mode::EarlyStop { max_iter: 4 },
+                Mode::Approx { recall_milli: 900 },
+            ] {
                 let x = RowMatrix::random_normal(50, m, &mut rng);
                 let auto = p.run(&x, k, mode);
                 let plan = p.plan(x.rows, m, k, mode);
@@ -1696,6 +1933,7 @@ mod tests {
                 probes: Vec::new(),
                 runner_up: None,
                 shadow: None,
+                recall: None,
             },
         );
         let plan = p.plan(20, 80, 8, Mode::EXACT);

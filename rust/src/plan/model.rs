@@ -30,6 +30,11 @@ use crate::topk::types::Mode;
 const W: f64 = 32.0; // elements per streamed group (matches simt)
 
 /// Expected search iterations for an RTop-K mode at shape (m, k).
+/// For `Mode::Approx` this is the *effective full-row-scan count*: the
+/// B per-bucket searches each stream m/B elements, so one round of all
+/// buckets costs one full-row pass and runs for the per-bucket expected
+/// iteration count, plus the merge of the B*k' survivors amortized as
+/// a fractional pass.
 pub fn expected_iters(mode: Mode, m: usize, k: usize) -> f64 {
     match mode {
         Mode::EarlyStop { max_iter } => max_iter as f64,
@@ -40,6 +45,22 @@ pub fn expected_iters(mode: Mode, m: usize, k: usize) -> f64 {
                 1.0
             } else {
                 expected_iterations(m, k).max(1.0)
+            }
+        }
+        Mode::Approx { recall_milli } => {
+            // analytic (B, k') only: the prior must stay deterministic
+            // and probe-free (calibration owns the empirical check)
+            let (b, kp) = crate::topk::approx::params_for(m, k, recall_milli);
+            if b <= 1 {
+                expected_iters(Mode::EXACT, m, k)
+            } else {
+                let bm = m / b;
+                let per_bucket = if kp >= bm || bm < 2 {
+                    1.0
+                } else {
+                    expected_iterations(bm, kp).max(1.0)
+                };
+                per_bucket + (b * kp) as f64 / m as f64
             }
         }
     }
@@ -191,6 +212,25 @@ mod tests {
         assert_eq!(expected_iters(Mode::EXACT, 1, 1), 1.0);
         assert_eq!(expected_iters(Mode::EarlyStop { max_iter: 6 }, 256, 32), 6.0);
         assert!(expected_iters(Mode::EXACT, 256, 64) > 8.0);
+    }
+
+    #[test]
+    fn approx_prior_is_cheaper_than_exact_when_a_split_exists() {
+        let apx = expected_iters(Mode::Approx { recall_milli: 900 }, 1024, 32);
+        let ex = expected_iters(Mode::EXACT, 1024, 32);
+        assert!(apx.is_finite() && apx > 0.0);
+        assert!(apx < ex, "effective scans {apx} !< exact {ex}");
+        // a perfect-recall target degenerates to the exact count, and
+        // cramped shapes must not blow up
+        assert_eq!(
+            expected_iters(Mode::Approx { recall_milli: 1000 }, 1024, 32),
+            ex
+        );
+        assert!(expected_iters(Mode::Approx { recall_milli: 950 }, 8, 4).is_finite());
+        // the feasibility floor stays positive for recall-contracted
+        // requests (admission calls this on every submit)
+        let f = floor_ns_per_row(1024, 32, Mode::Approx { recall_milli: 950 });
+        assert!(f > 0.0 && f.is_finite());
     }
 
     #[test]

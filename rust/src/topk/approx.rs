@@ -1,0 +1,361 @@
+//! Recall-contracted two-stage approximate top-k (the Samaga et al. /
+//! Key et al. family from PAPERS.md): split the row into `B` equal
+//! buckets, select the exact top-`k'` of each bucket with the paper's
+//! kernel, then merge the `B*k'` survivors exactly.
+//!
+//! ## Why this hits a recall target
+//!
+//! Model the row as a uniformly random permutation of its values (the
+//! bucketing is positional, the data carries no positional structure).
+//! Each of the k true top-k elements lands in a given bucket with
+//! probability 1/B independently of the others' *marginal* placement,
+//! so the count X of true winners in one bucket is Binomial(k, 1/B)
+//! (the multinomial marginal). A bucket forwards its exact top-k', so
+//! it loses `(X - k')+` true winners, and by linearity over buckets
+//!
+//! ```text
+//! E[recall] = 1 - (B / k) * E[(X - k')+],   X ~ Bin(k, 1/B)
+//! ```
+//!
+//! exactly — no approximation beyond the permutation model.
+//! [`expected_recall`] evaluates this in f64; [`params_for`] inverts it
+//! (smallest k' per candidate B meeting the target, cheapest (B, k')
+//! kept). Real rows are not random permutations, so
+//! [`calibrated_params`] additionally validates the analytic pick on a
+//! seeded probe workload and tightens k' / collapses B until the
+//! *measured* recall clears the target; `B = 1` degenerates to exact
+//! selection, which is the unconditional fallback.
+//!
+//! Determinism: everything here is seed-fixed and wall-clock-free, so a
+//! given (M, k, target) always resolves to the same (B, k') in every
+//! process — plan caches and golden tests can rely on it.
+
+use crate::topk::binary_search::{rtopk_row, SearchOut};
+use crate::topk::types::Mode;
+use crate::util::matrix::RowMatrix;
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Largest bucket count [`params_for`] will consider (powers of two up
+/// to this; more buckets than true winners can never help recall).
+const MAX_BUCKETS: usize = 64;
+
+/// Rows in the seeded validation probe of [`calibrated_params`]. Small
+/// on purpose — it runs once per (M, k, target) shape per process — but
+/// large enough that rows x k recall slots give a tight binomial band
+/// (at 48 rows x k = 32 the 3-sigma band on a 0.95 rate is ~±1.7%).
+const CALIB_PROBE_ROWS: usize = 48;
+
+/// Expected recall of exact-per-bucket two-stage selection with `b`
+/// buckets keeping `kp` elements each, for a row whose true top-k is
+/// uniformly placed (see module docs for the derivation). Exact in
+/// f64; monotone nondecreasing in `kp`, 1.0 when `kp >= k` or `b <= 1`.
+pub fn expected_recall(b: usize, k: usize, kp: usize) -> f64 {
+    if b <= 1 || kp >= k {
+        return 1.0;
+    }
+    let p = 1.0 / b as f64;
+    // iterate the Binomial(k, p) pmf: pmf(0) = (1-p)^k,
+    // pmf(x+1) = pmf(x) * (k-x)/(x+1) * p/(1-p)
+    let mut pmf = (1.0 - p).powi(k as i32);
+    let mut excess = 0.0; // E[(X - kp)+]
+    for x in 0..k {
+        pmf *= (k - x) as f64 / (x + 1) as f64 * p / (1.0 - p);
+        if x + 1 > kp {
+            excess += (x + 1 - kp) as f64 * pmf;
+        }
+    }
+    (1.0 - b as f64 * excess / k as f64).clamp(0.0, 1.0)
+}
+
+/// Analytic (B, k') for shape (m, k) at a `recall_milli` target:
+/// smallest k' per power-of-two B whose [`expected_recall`] clears the
+/// target, cheapest surviving pair by merge-candidate count. Returns
+/// `(1, k)` — plain exact selection — whenever no bucketed split is
+/// worthwhile (target 1000, tiny rows, k too close to m).
+pub fn params_for(m: usize, k: usize, recall_milli: u16) -> (usize, usize) {
+    let target = recall_milli as f64 / 1000.0;
+    if recall_milli >= 1000 || k < 2 || m < 4 * k {
+        return (1, k);
+    }
+    let mut best: Option<(usize, usize, f64)> = None;
+    let mut b = 2usize;
+    while b <= MAX_BUCKETS && b <= k && m / b >= 2 {
+        let floor = k.div_ceil(b); // b * k' >= k or the merge starves
+        let cap = (m / b).min(k); // k' must fit the smallest bucket
+        for kp in floor..=cap {
+            if expected_recall(b, k, kp) < target {
+                continue;
+            }
+            // cost proxy: merge candidates plus a fixed per-bucket
+            // search surcharge — the first stage streams the whole row
+            // regardless of B, so the candidate count is what varies
+            let cost = (b * kp + 4 * b) as f64;
+            if best.map_or(true, |(_, _, c)| cost < c) {
+                best = Some((b, kp, cost));
+            }
+            break; // kp is minimal for this B; larger kp only costs more
+        }
+        b *= 2;
+    }
+    best.map_or((1, k), |(b, kp, _)| (b, kp))
+}
+
+thread_local! {
+    /// Grow-only per-thread scratch for the bucket stage (per-bucket
+    /// output slots and the merge candidate list), mirroring the
+    /// rowwise driver's arena: recurring shapes allocate nothing.
+    static SCRATCH: RefCell<(Vec<f32>, Vec<u32>, Vec<(f32, u32)>)> =
+        RefCell::new((Vec::new(), Vec::new(), Vec::new()));
+}
+
+/// The raw two-stage kernel at explicit (B, k'): exact top-k' per
+/// bucket (the paper's kernel, indices re-based to the full row), then
+/// an exact merge of the B*k' candidates. Output is sorted descending
+/// (ties by index) — a legal selection order for [`TopKResult`]
+/// consumers, which never require sorted output.
+///
+/// The returned [`SearchOut`] is synthesized: `iters` aggregates the
+/// per-bucket search iterations (the quantity the iteration histograms
+/// track), `t1`/`t2` are the merged selection's k-th value (the
+/// effective selection threshold).
+///
+/// [`TopKResult`]: crate::topk::types::TopKResult
+pub fn two_stage_row(
+    row: &[f32],
+    k: usize,
+    b: usize,
+    kp: usize,
+    vals: &mut [f32],
+    idx: &mut [u32],
+) -> SearchOut {
+    debug_assert!(k >= 1 && k <= row.len());
+    if b <= 1 || b * kp < k || kp > row.len() / b {
+        // degenerate split: plain exact selection honors any target
+        return rtopk_row(row, k, Mode::EXACT, vals, idx);
+    }
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let (bv, bi, cands) = &mut *scratch;
+        bv.resize(kp, 0.0);
+        bi.resize(kp, 0);
+        cands.clear();
+        // first `extra` buckets take one element more, so every bucket
+        // holds at least floor(m / b) >= kp elements
+        let base = row.len() / b;
+        let extra = row.len() % b;
+        let mut start = 0usize;
+        let mut iters = 0u32;
+        for i in 0..b {
+            let len = base + (i < extra) as usize;
+            let s = rtopk_row(&row[start..start + len], kp, Mode::EXACT, bv, bi);
+            iters += s.iters;
+            for j in 0..kp {
+                cands.push((bv[j], start as u32 + bi[j]));
+            }
+            start += len;
+        }
+        // exact merge: descending by value, ties by index (rows are
+        // NaN-free per the kernel's input contract)
+        cands.sort_unstable_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        for (w, &(v, i)) in cands.iter().take(k).enumerate() {
+            vals[w] = v;
+            idx[w] = i;
+        }
+        let kth = vals[k - 1];
+        SearchOut { t1: kth, t2: kth, iters }
+    })
+}
+
+/// Calibration table: (m, k, recall_milli) -> empirically validated
+/// (B, k'). Process-wide and computed under the lock, so concurrent
+/// first touches of one shape resolve once (single-flight) and every
+/// process derives identical entries (seeded probe, no wall clock).
+static CALIBRATED: Mutex<BTreeMap<(usize, usize, u16), (usize, usize)>> =
+    Mutex::new(BTreeMap::new());
+
+/// (B, k') for shape (m, k) at a recall target, validated empirically:
+/// starting from the analytic [`params_for`] pick, measure recall of
+/// [`two_stage_row`] on a seeded Gaussian probe and, while it falls
+/// short of the target, grow k' (then halve B when k' hits its bucket
+/// cap) until it clears — terminating at `(1, k)` = exact, which has
+/// recall 1 by construction. Results are memoized per process.
+pub fn calibrated_params(m: usize, k: usize, recall_milli: u16) -> (usize, usize) {
+    let key = (m, k, recall_milli);
+    let mut table = CALIBRATED.lock().unwrap();
+    if let Some(&hit) = table.get(&key) {
+        return hit;
+    }
+    let (mut b, mut kp) = params_for(m, k, recall_milli);
+    if b > 1 {
+        let target = recall_milli as f64 / 1000.0;
+        let mut rng =
+            Rng::seed_from(0xA99C ^ ((m as u64) << 24) ^ ((k as u64) << 12) ^ recall_milli as u64);
+        let x = RowMatrix::random_normal(CALIB_PROBE_ROWS, m, &mut rng);
+        let mut vals = vec![0.0f32; k];
+        let mut idx = vec![0u32; k];
+        loop {
+            let mut total = 0.0;
+            for r in 0..x.rows {
+                two_stage_row(x.row(r), k, b, kp, &mut vals, &mut idx);
+                total += crate::topk::verify::recall_of_row(x.row(r), &vals);
+            }
+            if total / x.rows as f64 >= target {
+                break;
+            }
+            // tighten: more survivors per bucket, then fewer buckets
+            if kp < (m / b).min(k) {
+                kp += 1;
+            } else if b > 2 {
+                b /= 2;
+                kp = params_for_kp(b, k, m, recall_milli).max(kp);
+            } else {
+                b = 1;
+                kp = k;
+                break;
+            }
+        }
+    }
+    table.insert(key, (b, kp));
+    (b, kp)
+}
+
+/// Minimal analytic k' for a fixed bucket count (the re-derivation
+/// [`calibrated_params`] needs after halving B).
+fn params_for_kp(b: usize, k: usize, m: usize, recall_milli: u16) -> usize {
+    let target = recall_milli as f64 / 1000.0;
+    let cap = (m / b).min(k);
+    for kp in k.div_ceil(b)..=cap {
+        if expected_recall(b, k, kp) >= target {
+            return kp;
+        }
+    }
+    cap
+}
+
+/// One row of `Mode::Approx { recall_milli }`: resolve the calibrated
+/// (B, k') for this shape and run the two-stage kernel. This is the
+/// arm `rtopk_row` dispatches to.
+pub fn approx_row(
+    row: &[f32],
+    k: usize,
+    recall_milli: u16,
+    vals: &mut [f32],
+    idx: &mut [u32],
+) -> SearchOut {
+    let (b, kp) = calibrated_params(row.len(), k, recall_milli);
+    two_stage_row(row, k, b, kp, vals, idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topk::verify;
+    use crate::topk::{rowwise_topk, Mode};
+
+    #[test]
+    fn binomial_recall_matches_hand_computed_case() {
+        // b=2, k=2, kp=1: both winners collide in one bucket with
+        // probability 1/2, losing one of two -> recall 3/4 exactly.
+        assert!((expected_recall(2, 2, 1) - 0.75).abs() < 1e-12);
+        // saturation and degeneracy
+        assert_eq!(expected_recall(1, 32, 1), 1.0);
+        assert_eq!(expected_recall(4, 32, 32), 1.0);
+        // monotone in kp
+        let mut prev = 0.0;
+        for kp in 1..=32 {
+            let r = expected_recall(8, 32, kp);
+            assert!(r >= prev - 1e-12, "recall not monotone at kp={kp}");
+            prev = r;
+        }
+        assert!(prev > 0.999);
+    }
+
+    #[test]
+    fn analytic_params_respect_constraints_and_target() {
+        for &(m, k) in &[(256usize, 32usize), (1024, 64), (4096, 128), (512, 16)] {
+            for &t in &[800u16, 900, 950, 990] {
+                let (b, kp) = params_for(m, k, t);
+                assert!(b >= 1 && kp >= 1, "degenerate params at ({m},{k},{t})");
+                if b > 1 {
+                    assert!(b * kp >= k, "merge starves at ({m},{k},{t})");
+                    assert!(kp <= m / b, "k' overflows bucket at ({m},{k},{t})");
+                    assert!(
+                        expected_recall(b, k, kp) >= t as f64 / 1000.0,
+                        "analytic target missed at ({m},{k},{t})"
+                    );
+                }
+            }
+        }
+        // target 1.0 and cramped shapes must fall back to exact
+        assert_eq!(params_for(256, 32, 1000), (1, 32));
+        assert_eq!(params_for(8, 4, 950), (1, 4));
+    }
+
+    #[test]
+    fn degenerate_split_equals_exact() {
+        let mut rng = Rng::seed_from(0x25A);
+        let x = RowMatrix::random_normal(8, 128, &mut rng);
+        let mut vals = vec![0.0f32; 16];
+        let mut idx = vec![0u32; 16];
+        for r in 0..x.rows {
+            two_stage_row(x.row(r), 16, 1, 16, &mut vals, &mut idx);
+            assert!(
+                (verify::recall_of_row(x.row(r), &vals) - 1.0).abs() < 1e-12,
+                "b=1 must be exact"
+            );
+        }
+    }
+
+    #[test]
+    fn two_stage_output_is_gathered_and_unique() {
+        let mut rng = Rng::seed_from(0x25B);
+        let x = RowMatrix::random_normal(16, 512, &mut rng);
+        let (b, kp) = params_for(512, 32, 900);
+        assert!(b > 1, "premise: a real split exists at (512, 32, 900)");
+        let mut vals = vec![0.0f32; 32];
+        let mut idx = vec![0u32; 32];
+        for r in 0..x.rows {
+            two_stage_row(x.row(r), 32, b, kp, &mut vals, &mut idx);
+            let mut u = idx.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 32, "duplicate indices");
+            for (v, &i) in vals.iter().zip(&idx) {
+                assert_eq!(*v, x.row(r)[i as usize], "value not gathered");
+            }
+        }
+    }
+
+    #[test]
+    fn calibrated_params_memoize_and_meet_target() {
+        let a = calibrated_params(1024, 32, 950);
+        let b = calibrated_params(1024, 32, 950);
+        assert_eq!(a, b, "memoized entry must be stable");
+        // end-to-end through the Mode dispatch: measured recall clears
+        // the contract on an independent seed (derandomized; the
+        // calibration loop already enforced it on its own probe, this
+        // checks generalization to a fresh stream inside the harness's
+        // documented 3-sigma gate)
+        let mut rng = Rng::seed_from(0x25C);
+        let x = RowMatrix::random_normal(256, 1024, &mut rng);
+        let res = rowwise_topk(&x, 32, Mode::Approx { recall_milli: 950 });
+        let r = verify::recall_of(&x, &res);
+        assert!(
+            r >= verify::recall_gate(0.95, x.rows),
+            "measured recall {r} below contract"
+        );
+    }
+
+    #[test]
+    fn target_1000_degenerates_to_exact_selection() {
+        let mut rng = Rng::seed_from(0x25D);
+        let x = RowMatrix::random_normal(32, 256, &mut rng);
+        let res = rowwise_topk(&x, 16, Mode::Approx { recall_milli: 1000 });
+        assert!(verify::is_exact(&x, &res));
+    }
+}

@@ -208,6 +208,12 @@ pub fn rtopk_row(
     let s = match mode {
         Mode::Exact { eps_rel } => search_exact(row, k, eps_rel, 64),
         Mode::EarlyStop { max_iter } => search_early_stop(row, k, max_iter),
+        // Two-stage bucketed selection is not a single-threshold search,
+        // so it cannot flow into select_row below; it runs the full
+        // bucket/merge pipeline and synthesizes its SearchOut.
+        Mode::Approx { recall_milli } => {
+            return crate::topk::approx::approx_row(row, k, recall_milli, vals, idx);
+        }
     };
     select_row(row, k, s, vals, idx);
     s

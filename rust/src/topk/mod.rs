@@ -11,9 +11,14 @@
 //! * [`baselines`] — the algorithms the paper compares against or
 //!   discusses: RadixSelect (PyTorch's `torch.topk` underlying method),
 //!   QuickSelect, heap, bucket select, bitonic top-k, and full sort.
+//! * [`approx`] — recall-contracted two-stage bucketed selection behind
+//!   `Mode::Approx` (binomial (B, k') derivation + empirical
+//!   calibration table).
 //! * [`verify`] — oracle comparisons: exact-set equality, hit rate and
-//!   relative-error metrics (Table 2's E1/E2/Hit).
+//!   relative-error metrics (Table 2's E1/E2/Hit), and the shared
+//!   recall harness (oracle, seeded distributions, statistical gate).
 
+pub mod approx;
 pub mod baselines;
 pub mod binary_search;
 pub mod rowwise;

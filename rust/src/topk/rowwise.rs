@@ -64,8 +64,10 @@ pub fn rowwise_topk(x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
 /// for this (M, k, mode) — cost-model prior plus one-time on-host
 /// microbenchmark calibration, cached per shape. Semantics match
 /// [`rowwise_topk`]: exact requests get an exact algorithm (any of the
-/// zoo), approximate requests always run the paper's kernel at their
-/// requested mode.
+/// zoo); early-stop and loose-eps requests always run the paper's
+/// kernel at their requested mode; recall-contracted requests
+/// (`Mode::Approx`) may run any RTop-K-family candidate whose measured
+/// recall clears the contract (see `plan`'s correctness contract).
 pub fn rowwise_topk_auto(x: &RowMatrix, k: usize, mode: Mode) -> TopKResult {
     crate::plan::global().run(x, k, mode)
 }

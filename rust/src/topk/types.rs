@@ -15,6 +15,13 @@ pub enum Mode {
     /// Algorithm 2: hard iteration budget, one-pass selection at the
     /// final lower bracket. Approximate; paper sweeps max_iter in 2..8.
     EarlyStop { max_iter: u32 },
+    /// Recall-contracted two-stage bucketed selection (Samaga et al. /
+    /// Key et al. family): split the row into B buckets, take the top
+    /// k' of each with the paper's kernel, merge exactly. `recall_milli`
+    /// is the contracted recall target in thousandths (950 = recall >=
+    /// 0.95), exact-representable on the wire; (B, k') are derived from
+    /// it in `topk::approx`. 1000 degenerates to exact selection.
+    Approx { recall_milli: u16 },
 }
 
 impl Mode {
@@ -26,6 +33,7 @@ impl Mode {
             Mode::Exact { eps_rel } if *eps_rel <= 1e-15 => "exact".into(),
             Mode::Exact { eps_rel } => format!("exact_eps{eps_rel:.0e}"),
             Mode::EarlyStop { max_iter } => format!("es{max_iter}"),
+            Mode::Approx { recall_milli } => format!("apx{recall_milli}"),
         }
     }
 }
@@ -118,6 +126,7 @@ mod tests {
         assert_eq!(Mode::EXACT.tag(), "exact");
         assert_eq!(Mode::EarlyStop { max_iter: 4 }.tag(), "es4");
         assert_eq!(Mode::Exact { eps_rel: 1e-4 }.tag(), "exact_eps1e-4");
+        assert_eq!(Mode::Approx { recall_milli: 950 }.tag(), "apx950");
     }
 
     #[test]

@@ -227,6 +227,7 @@ fn stale_cached_plan_for_a_vanished_tile_is_rederived_not_dispatched() {
         probes: Vec::new(),
         runner_up: None,
         shadow: None,
+        recall: None,
     };
     planner.cache().insert(RowBucket::Le64, 512, 32, "exact", pjrt_plan());
     let plan = planner.plan(64, 512, 32, Mode::EXACT);

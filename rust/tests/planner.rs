@@ -102,6 +102,7 @@ fn buckets_of_one_shape_can_hold_different_winners() {
         probes: Vec::new(),
         runner_up: None,
         shadow: None,
+        recall: None,
     };
     planner
         .cache()
