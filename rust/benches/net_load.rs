@@ -1,0 +1,398 @@
+//! Open-loop multi-tenant load generator for the network serving layer
+//! (`net::serve` + `net::serve_router`), over real loopback sockets.
+//!
+//! Phase 1 — tenant isolation on one server: a *clean* tenant (weight
+//! 4, no quotas) runs its workload twice, first alone (baseline), then
+//! while a *noisy* tenant floods the same server through its own
+//! connection. The noisy tenant carries a small `max_in_flight_rows`
+//! quota, so its flood is shed at admission with fast positioned
+//! errors — it never occupies queue space, which is the mechanism that
+//! keeps the clean tenant's p99 uncontaminated. Both phases report
+//! client-measured per-tenant p50/p99 and the server's `NetGauges`.
+//!
+//! Phase 2 — shard-death accountability: two in-process workers behind
+//! a router; mid-stream one worker is killed abruptly
+//! (`ServerHandle::shutdown` drops its connections with requests
+//! parked). Every affected request must be answered with a positioned
+//! `shard_down` error frame naming the dead shard — the gate is
+//! `all_answered`: results + positioned errors == frames sent, no
+//! silence.
+//!
+//! Results are emitted as a JSON document (last line of output):
+//!
+//!   cargo bench --bench net_load                (full counts)
+//!   RTOPK_SMOKE=1 cargo bench --bench net_load  (CI: tiny counts,
+//!       correctness gates only — latency ratios are reported, never
+//!       gated, because shared runners are too noisy)
+
+use rtopk::bench::Table;
+use rtopk::config::{NetConfig, ServeConfig, TenantConfig, TenantsConfig};
+use rtopk::coordinator::wire::{
+    self, Frame, FrameDecoder, ERR_SHARD_DOWN,
+};
+use rtopk::coordinator::{SubmitRequest, TopKService};
+use rtopk::net;
+use rtopk::topk::Mode;
+use rtopk::util::json::{self, Value};
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One tenant's client-side outcome over a connection.
+struct ClientStats {
+    sent: usize,
+    ok: usize,
+    shed: usize,
+    /// reply latencies in microseconds, FIFO-matched to sends
+    latencies_us: Vec<f64>,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+/// Pipelined open-loop client: write all `n` frames (stamping each
+/// send), then read the `n` FIFO replies, matching latency by
+/// position. Offered load never adapts to completions.
+fn run_client(
+    addr: SocketAddr,
+    tenant: &str,
+    n: usize,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    seed: u64,
+) -> ClientStats {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut rng = Rng::seed_from(seed);
+    let mut sends = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = RowMatrix::random_normal(rows, cols, &mut rng);
+        let req = SubmitRequest::new(x, k).mode(Mode::EXACT).tenant(tenant);
+        let bytes =
+            wire::encode(&Frame::Submit(req)).expect("encode submit");
+        sends.push(Instant::now());
+        stream.write_all(&bytes).expect("send frame");
+    }
+    let mut stats = ClientStats {
+        sent: n,
+        ok: 0,
+        shed: 0,
+        latencies_us: Vec::with_capacity(n),
+    };
+    let mut dec = FrameDecoder::new();
+    let mut chunk = [0u8; 16 * 1024];
+    let mut got = 0usize;
+    while got < n {
+        match dec.next().expect("clean reply stream") {
+            Some(frame) => {
+                stats
+                    .latencies_us
+                    .push(sends[got].elapsed().as_secs_f64() * 1e6);
+                got += 1;
+                match frame {
+                    Frame::Result(_) => stats.ok += 1,
+                    Frame::Error(_) => stats.shed += 1,
+                    other => panic!("unexpected reply frame: {other:?}"),
+                }
+            }
+            None => {
+                let read = stream.read(&mut chunk).expect("read replies");
+                assert!(read > 0, "server closed with replies owed");
+                dec.feed(&chunk[..read]);
+            }
+        }
+    }
+    stats.latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    stats
+}
+
+fn tenant_json(name: &str, weight: u64, c: &ClientStats) -> Value {
+    json::obj(vec![
+        ("tenant", json::s(name)),
+        ("weight", json::num(weight as f64)),
+        ("sent", json::num(c.sent as f64)),
+        ("ok", json::num(c.ok as f64)),
+        ("shed", json::num(c.shed as f64)),
+        ("p50_us", json::num(percentile(&c.latencies_us, 0.50))),
+        ("p99_us", json::num(percentile(&c.latencies_us, 0.99))),
+    ])
+}
+
+/// A loopback `[net]` config binding an ephemeral port.
+fn loopback_net() -> NetConfig {
+    NetConfig { bind: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+fn main() {
+    let smoke = std::env::var("RTOPK_SMOKE").is_ok();
+    let (clean_n, noisy_n, rows, cols, k) = if smoke {
+        (48usize, 160usize, 16usize, 64usize, 8usize)
+    } else {
+        (256, 1024, 64, 256, 32)
+    };
+
+    // ---- phase 1: one server, clean tenant vs noisy flood ----------
+    let cfg = ServeConfig {
+        workers: 2,
+        tenants: TenantsConfig {
+            tenants: vec![
+                TenantConfig { weight: 4, ..TenantConfig::named("clean") },
+                TenantConfig {
+                    weight: 1,
+                    // the noisy flood sheds at admission: at most two
+                    // requests' worth of rows in flight, the rest is
+                    // answered with fast positioned rejections
+                    max_in_flight_rows: 2 * rows,
+                    ..TenantConfig::named("noisy")
+                },
+            ],
+            ..Default::default()
+        },
+        ..ServeConfig::default()
+    };
+    let svc = Arc::new(TopKService::cpu_only(&cfg).expect("service"));
+    let server = net::serve(svc.clone(), &loopback_net()).expect("serve");
+    let addr = server.addr();
+
+    // baseline: the clean tenant alone
+    let baseline =
+        run_client(addr, "clean", clean_n, rows, cols, k, 0x0C1EA);
+    assert_eq!(baseline.shed, 0, "unquotaed tenant must never shed");
+
+    // contended: clean + noisy concurrently, own connections
+    let t0 = Instant::now();
+    let (clean, noisy) = std::thread::scope(|scope| {
+        let c = scope.spawn(move || {
+            run_client(addr, "clean", clean_n, rows, cols, k, 0x0C1EB)
+        });
+        let n = scope.spawn(move || {
+            run_client(addr, "noisy", noisy_n, rows, cols, k, 0x4015E)
+        });
+        (c.join().expect("clean client"), n.join().expect("noisy client"))
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let frames_per_sec = (clean.sent + noisy.sent) as f64 / wall.max(1e-9);
+    assert_eq!(clean.shed, 0, "clean tenant must never shed");
+    assert!(noisy.shed > 0, "the noisy flood must exceed its quota");
+    assert_eq!(noisy.ok + noisy.shed, noisy.sent, "every frame answered");
+
+    let gauges = server.stats().gauges();
+    assert_eq!(gauges.decode_errors, 0, "well-formed load never misdecodes");
+    let expected_in = (baseline.sent + clean.sent + noisy.sent) as u64;
+    assert_eq!(gauges.frames_in, expected_in, "server saw every frame");
+    server.shutdown();
+    match Arc::try_unwrap(svc) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("server loop retained the service"),
+    }
+
+    let clean_p99 = percentile(&clean.latencies_us, 0.99);
+    let baseline_p99 = percentile(&baseline.latencies_us, 0.99);
+    let contamination = clean_p99 / baseline_p99.max(1e-9);
+
+    let mut t = Table::new(
+        "net_load phase 1 (open loop, own connections)",
+        &["tenant", "weight", "sent", "ok", "shed", "p50 us", "p99 us"],
+    );
+    for (name, w, c) in [
+        ("clean-baseline", 4u64, &baseline),
+        ("clean", 4, &clean),
+        ("noisy", 1, &noisy),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            w.to_string(),
+            c.sent.to_string(),
+            c.ok.to_string(),
+            c.shed.to_string(),
+            format!("{:.0}", percentile(&c.latencies_us, 0.50)),
+            format!("{:.0}", percentile(&c.latencies_us, 0.99)),
+        ]);
+    }
+    t.print();
+    println!(
+        "clean p99 contamination ratio (contended/baseline): {contamination:.2}x \
+         (reported, not gated: shed load never queues, so the ratio \
+         measures runner noise)"
+    );
+
+    // ---- phase 2: router with a killed worker ----------------------
+    let worker_cfg = ServeConfig {
+        workers: 1,
+        // park requests in the batcher long enough for the kill to
+        // land while they are provably in flight on the doomed shard
+        max_batch_rows: 1 << 20,
+        max_wait_us: if smoke { 300_000 } else { 500_000 },
+        ..ServeConfig::default()
+    };
+    let mut workers = Vec::new();
+    let mut shard_addrs = Vec::new();
+    for _ in 0..2 {
+        let svc =
+            Arc::new(TopKService::cpu_only(&worker_cfg).expect("worker"));
+        let h = net::serve(svc.clone(), &loopback_net()).expect("worker net");
+        shard_addrs.push(h.addr().to_string());
+        workers.push((svc, h));
+    }
+    let router_cfg = NetConfig {
+        bind: "127.0.0.1:0".to_string(),
+        shards: shard_addrs.clone(),
+        health_cadence_ms: 50,
+        health_timeout_ms: 100,
+        ..NetConfig::default()
+    };
+    // weight 2 spreads the bench tenant across both shards
+    let weights: HashMap<String, u64> =
+        [("spread".to_string(), 2u64)].into_iter().collect();
+    let router = net::serve_router(&router_cfg, weights).expect("router");
+
+    let batch = if smoke { 8usize } else { 32 };
+    let mut stream = TcpStream::connect(router.addr()).expect("router conn");
+    stream.set_nodelay(true).expect("nodelay");
+    let mut rng = Rng::seed_from(0xD1E);
+    let mut sent = 0usize;
+    let mut send = |stream: &mut TcpStream, rng: &mut Rng, n: usize| {
+        for _ in 0..n {
+            let x = RowMatrix::random_normal(8, 32, rng);
+            let req =
+                SubmitRequest::new(x, 4).mode(Mode::EXACT).tenant("spread");
+            let bytes =
+                wire::encode(&Frame::Submit(req)).expect("encode submit");
+            stream.write_all(&bytes).expect("send via router");
+        }
+    };
+    // wave 1 lands on both shards and is parked by the long batch
+    // window; the kill catches its dead-shard half in flight
+    send(&mut stream, &mut rng, batch);
+    sent += batch;
+    let (_, doomed_handle) = workers.pop().expect("two workers");
+    let killed_addr = shard_addrs[1].clone();
+    doomed_handle.shutdown();
+    // wave 2 arrives after the death: the router must reroute or
+    // refuse with positioned errors — never stay silent
+    send(&mut stream, &mut rng, batch);
+    sent += batch;
+
+    let mut results = 0usize;
+    let mut positioned = 0usize;
+    let mut dec = FrameDecoder::new();
+    let mut chunk = [0u8; 16 * 1024];
+    let mut got = 0usize;
+    while got < sent {
+        match dec.next().expect("clean router reply stream") {
+            Some(frame) => {
+                got += 1;
+                match frame {
+                    Frame::Result(_) => results += 1,
+                    Frame::Error(e) => {
+                        assert_eq!(
+                            e.code, ERR_SHARD_DOWN,
+                            "only shard-death errors expected: {e:?}"
+                        );
+                        assert!(
+                            e.msg.contains("request #"),
+                            "shard errors must be positioned: {}",
+                            e.msg
+                        );
+                        positioned += 1;
+                    }
+                    other => panic!("unexpected router reply: {other:?}"),
+                }
+            }
+            None => {
+                let read = stream.read(&mut chunk).expect("router replies");
+                assert!(read > 0, "router closed with replies owed");
+                dec.feed(&chunk[..read]);
+            }
+        }
+    }
+    let all_answered = results + positioned == sent;
+    assert!(all_answered, "router left requests unanswered");
+    assert!(
+        positioned > 0,
+        "killing a shard mid-wave must produce positioned errors"
+    );
+    let shard_counters = router.shard_counters();
+    router.shutdown();
+    for (svc, h) in workers {
+        h.shutdown();
+        match Arc::try_unwrap(svc) {
+            Ok(s) => s.shutdown(),
+            Err(_) => panic!("worker loop retained its service"),
+        }
+    }
+    println!(
+        "router: {sent} sent -> {results} results + {positioned} positioned \
+         shard-down errors (killed {killed_addr})"
+    );
+
+    let shards_json: Vec<Value> = shard_counters
+        .iter()
+        .map(|(addr, forwarded, errors)| {
+            json::obj(vec![
+                ("addr", json::s(addr)),
+                ("forwarded", json::num(*forwarded as f64)),
+                ("errors", json::num(*errors as f64)),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("bench", json::s("net_load")),
+        ("smoke", Value::Bool(smoke)),
+        ("frames_per_sec", json::num(frames_per_sec)),
+        (
+            "tenants",
+            json::arr(vec![
+                tenant_json("clean_baseline", 4, &baseline),
+                tenant_json("clean", 4, &clean),
+                tenant_json("noisy", 1, &noisy),
+            ]),
+        ),
+        ("contamination_ratio", json::num(contamination)),
+        (
+            "net",
+            json::obj(vec![
+                ("frames_in", json::num(gauges.frames_in as f64)),
+                ("frames_out", json::num(gauges.frames_out as f64)),
+                ("decode_errors", json::num(gauges.decode_errors as f64)),
+                (
+                    "open_connections",
+                    json::num(gauges.open_connections as f64),
+                ),
+            ]),
+        ),
+        (
+            "router",
+            json::obj(vec![
+                ("shards", json::arr(shards_json)),
+                ("killed", json::s(&killed_addr)),
+                ("sent", json::num(sent as f64)),
+                ("results", json::num(results as f64)),
+                ("positioned_errors", json::num(positioned as f64)),
+                (
+                    "all_answered",
+                    Value::Bool(all_answered)),
+            ]),
+        ),
+        (
+            "summary",
+            json::obj(vec![
+                ("clean_p99_us", json::num(clean_p99)),
+                ("baseline_p99_us", json::num(baseline_p99)),
+                ("noisy_shed", json::num(noisy.shed as f64)),
+                ("pass", Value::Bool(true)),
+            ]),
+        ),
+    ]);
+    println!("{}", doc.to_string());
+}

@@ -409,6 +409,85 @@ impl PoolConfig {
     }
 }
 
+/// Network-layer knobs (the `[net]` section), read by `rtopk listen`
+/// and `rtopk shard`. Untyped here — `net::server` / `net::router`
+/// validate the bind address and shard list when they open sockets.
+///
+/// * `bind` — listen address for both subcommands.
+/// * `max_connections` — accepted-connection cap; a connection past the
+///   cap is answered with one overload error frame and closed.
+/// * `read_buf_bytes` — per-connection cap on buffered undecoded
+///   bytes. Reads pause at the cap, so a client streaming a frame
+///   larger than this deadlocks itself — size it above the largest
+///   legitimate request frame.
+/// * `write_buf_bytes` — per-connection cap on buffered encoded reply
+///   bytes; result encoding (and then reads) pause while a slow reader
+///   keeps the buffer at the cap.
+/// * `max_inflight_per_conn` — requests one connection may have inside
+///   the service at once; further frames wait in the read buffer.
+/// * `shards` — comma-separated worker addresses the shard router fans
+///   requests across (ignored by `rtopk listen`).
+/// * `health_cadence_ms` — interval between ping probes to each shard.
+/// * `health_timeout_ms` — per-probe connect/read timeout; a probe
+///   past it counts as a failure toward quarantine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    pub bind: String,
+    pub max_connections: usize,
+    pub read_buf_bytes: usize,
+    pub write_buf_bytes: usize,
+    pub max_inflight_per_conn: usize,
+    pub shards: Vec<String>,
+    pub health_cadence_ms: u64,
+    pub health_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            bind: "127.0.0.1:7070".to_string(),
+            max_connections: 1024,
+            read_buf_bytes: 64 << 20,
+            write_buf_bytes: 64 << 20,
+            max_inflight_per_conn: 64,
+            shards: Vec::new(),
+            health_cadence_ms: 500,
+            health_timeout_ms: 250,
+        }
+    }
+}
+
+impl NetConfig {
+    pub fn from_config(c: &Config) -> NetConfig {
+        let d = NetConfig::default();
+        NetConfig {
+            bind: c
+                .get("net.bind")
+                .filter(|s| !s.is_empty())
+                .map(|s| s.to_string())
+                .unwrap_or(d.bind),
+            max_connections: c.get_or("net.max_connections", d.max_connections),
+            read_buf_bytes: c.get_or("net.read_buf_bytes", d.read_buf_bytes),
+            write_buf_bytes: c.get_or("net.write_buf_bytes", d.write_buf_bytes),
+            max_inflight_per_conn: c
+                .get_or("net.max_inflight_per_conn", d.max_inflight_per_conn),
+            shards: c
+                .get("net.shards")
+                .map(|s| {
+                    s.split(',')
+                        .map(|t| t.trim().to_string())
+                        .filter(|t| !t.is_empty())
+                        .collect()
+                })
+                .unwrap_or_default(),
+            health_cadence_ms: c
+                .get_or("net.health_cadence_ms", d.health_cadence_ms),
+            health_timeout_ms: c
+                .get_or("net.health_timeout_ms", d.health_timeout_ms),
+        }
+    }
+}
+
 /// Default per-tenant cap on blocked cooperative submitters (the
 /// `[serve] max_blocked_waiters` knob). Single source of truth — the
 /// tenant directory's default references this constant.

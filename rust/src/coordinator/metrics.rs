@@ -161,6 +161,44 @@ pub trait QueueProbe: Send + Sync {
     fn queue_gauges(&self) -> QueueGauges;
 }
 
+/// Point-in-time network-layer gauges, read off the serving socket
+/// loop via the registered [`NetProbe`]. Field names are the snapshot
+/// JSON keys, pinned by [`NET_KEYS`] and cross-checked against this
+/// struct by the rtopk-lint counter-key rule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetGauges {
+    /// currently accepted client connections
+    pub open_connections: u64,
+    /// frames decoded off client sockets since start (all kinds)
+    pub frames_in: u64,
+    /// frames queued toward client sockets since start (all kinds)
+    pub frames_out: u64,
+    /// connections dropped for undecodable input since start
+    pub decode_errors: u64,
+    /// shards currently answering health probes (0 when not sharding)
+    pub shards_alive: u64,
+    /// shards currently quarantined by the health prober
+    pub shards_quarantined: u64,
+}
+
+/// The snapshot JSON keys of the `net` section, one per [`NetGauges`]
+/// field, in field order. The rtopk-lint counter-key rule checks this
+/// list and the struct against each other in both directions.
+pub const NET_KEYS: [&str; 6] = [
+    "open_connections",
+    "frames_in",
+    "frames_out",
+    "decode_errors",
+    "shards_alive",
+    "shards_quarantined",
+];
+
+/// Source of live network gauges (implemented by the net layer's
+/// shared stats block; absent until `rtopk listen` registers one).
+pub trait NetProbe: Send + Sync {
+    fn net_gauges(&self) -> NetGauges;
+}
+
 /// Shared metrics/telemetry hub (cloned via `Arc` by the owner).
 ///
 /// The historical name `Metrics` remains as an alias; existing
@@ -188,6 +226,10 @@ pub struct TelemetryHub {
     queue_probe: RwLock<Option<Arc<dyn QueueProbe>>>,
     /// live per-tenant in-flight gauges source
     tenant_dir: RwLock<Option<Arc<TenantDirectory>>>,
+    /// live network-layer gauges source (the socket loop's stats
+    /// block), registered by `net::server::serve`; absent for
+    /// in-process-only deployments
+    net_probe: RwLock<Option<Arc<dyn NetProbe>>>,
 }
 
 /// Historical name for [`TelemetryHub`].
@@ -223,6 +265,7 @@ impl Default for TelemetryHub {
             ns_per_row: AtomicU64::new(0),
             queue_probe: RwLock::new(None),
             tenant_dir: RwLock::new(None),
+            net_probe: RwLock::new(None),
         }
     }
 }
@@ -408,6 +451,10 @@ pub struct LoadSnapshot {
     /// execution-substrate saturation: the persistent worker pool's
     /// counters (all zeros until the pool has run a job)
     pub pool: crate::util::pool::PoolGauges,
+    /// network-layer gauges (`None` until `rtopk listen` or the shard
+    /// router registers a [`NetProbe`] — null in the JSON, so "no net
+    /// layer" and "idle net layer" stay distinguishable)
+    pub net: Option<NetGauges>,
 }
 
 impl LoadSnapshot {
@@ -498,6 +545,30 @@ impl LoadSnapshot {
                     ("busy_ns", json::num(self.pool.busy_ns as f64)),
                     ("utilization", json::num(self.pool.utilization)),
                 ]),
+            ),
+            (
+                // keys here must stay in lockstep with NET_KEYS (and
+                // the NetGauges fields) — the lint rule checks the
+                // const against the struct, and the test below checks
+                // the JSON against the const
+                "net",
+                match &self.net {
+                    None => Value::Null,
+                    Some(n) => json::obj(vec![
+                        (
+                            "open_connections",
+                            json::num(n.open_connections as f64),
+                        ),
+                        ("frames_in", json::num(n.frames_in as f64)),
+                        ("frames_out", json::num(n.frames_out as f64)),
+                        ("decode_errors", json::num(n.decode_errors as f64)),
+                        ("shards_alive", json::num(n.shards_alive as f64)),
+                        (
+                            "shards_quarantined",
+                            json::num(n.shards_quarantined as f64),
+                        ),
+                    ]),
+                },
             ),
         ])
     }
@@ -614,6 +685,22 @@ impl TelemetryHub {
     /// gauges.
     pub fn set_tenant_directory(&self, dir: Arc<TenantDirectory>) {
         *self.tenant_dir.write().unwrap() = Some(dir);
+    }
+
+    /// Register the live network-gauges source (the socket loop's
+    /// stats block). Before registration the snapshot's `net` section
+    /// is null — "no network layer", distinct from an idle one.
+    pub fn set_net_probe(&self, probe: Arc<dyn NetProbe>) {
+        *self.net_probe.write().unwrap() = Some(probe);
+    }
+
+    /// Live network gauges (`None` when no net layer is attached).
+    pub fn net_gauges(&self) -> Option<NetGauges> {
+        self.net_probe
+            .read()
+            .unwrap()
+            .as_ref()
+            .map(|p| p.net_gauges())
     }
 
     /// Live queue gauges — the cheap per-batch poll (zeros when no
@@ -795,6 +882,7 @@ impl TelemetryHub {
             // read live from the pool, like the queue gauges: the pool
             // is process-global, so no registration step is needed
             pool: crate::util::pool::gauges(),
+            net: self.net_gauges(),
         }
     }
 
@@ -1178,6 +1266,7 @@ mod tests {
             "errors_total",
             "tenants",
             "pool",
+            "net",
         ] {
             assert!(v.get(key).is_some(), "snapshot JSON missing {key}");
         }
@@ -1200,5 +1289,34 @@ mod tests {
         ] {
             assert!(pool.get(key).is_some(), "pool gauges missing {key}");
         }
+        // no net probe registered: the section is null, not absent
+        assert!(matches!(v.get("net"), Some(Value::Null)));
+    }
+
+    struct FakeNet(NetGauges);
+    impl NetProbe for FakeNet {
+        fn net_gauges(&self) -> NetGauges {
+            self.0.clone()
+        }
+    }
+
+    #[test]
+    fn net_section_carries_every_pinned_key_once_a_probe_registers() {
+        let m = Metrics::default();
+        m.set_net_probe(Arc::new(FakeNet(NetGauges {
+            open_connections: 3,
+            frames_in: 10,
+            frames_out: 9,
+            decode_errors: 1,
+            shards_alive: 2,
+            shards_quarantined: 1,
+        })));
+        let v = m.load_snapshot().to_json();
+        let net = v.get("net").expect("net section");
+        for key in NET_KEYS {
+            assert!(net.get(key).is_some(), "net gauges missing {key}");
+        }
+        assert_eq!(net.get("open_connections").unwrap().as_f64(), Some(3.0));
+        assert_eq!(net.get("shards_quarantined").unwrap().as_f64(), Some(1.0));
     }
 }

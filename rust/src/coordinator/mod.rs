@@ -63,7 +63,8 @@ pub mod trainer;
 pub mod wire;
 
 pub use metrics::{
-    LoadSnapshot, Metrics, QueueGauges, QueueProbe, TelemetryHub,
+    LoadSnapshot, Metrics, NetGauges, NetProbe, QueueGauges, QueueProbe,
+    TelemetryHub,
 };
 pub use request::{
     CancelToken, OverQuotaPolicy, Priority, SubmitRequest, TopKTicket,

@@ -10,7 +10,8 @@
 //! 0       4     magic  "RTKF"
 //! 4       2     schema version (u16 LE) — strict: unknown versions are
 //!               rejected with a positioned error, never reinterpreted
-//! 6       1     frame kind (1 = submit request, 2 = top-k result)
+//! 6       1     frame kind (1 = submit request, 2 = top-k result,
+//!               3 = error, 4 = ping, 5 = pong)
 //! 7       1     reserved (must be 0)
 //! 8       8     payload length (u64 LE) — must equal the bytes that
 //!               actually follow the header, exactly
@@ -56,6 +57,20 @@
 //! rows*k u32 indices
 //! ```
 //!
+//! Error (kind 3) — the server's negative answer to one submit frame
+//! (admission rejection, timeout, cancellation, shard failure):
+//!
+//! ```text
+//! u32 code (see ERR_* constants)
+//! u32 message length, message bytes (UTF-8)
+//! ```
+//!
+//! Ping (kind 4) / pong (kind 5) — liveness probes, echoed verbatim:
+//!
+//! ```text
+//! u64 nonce
+//! ```
+//!
 //! Golden fixture frames for schema v1 are committed under
 //! `rust/tests/fixtures/` and byte-pinned by `tests/wire.rs`, so an
 //! accidental encoding change breaks the build instead of silently
@@ -82,6 +97,23 @@ pub const MAX_PAYLOAD: u64 = 1 << 32;
 
 const KIND_SUBMIT: u8 = 1;
 const KIND_RESULT: u8 = 2;
+const KIND_ERROR: u8 = 3;
+const KIND_PING: u8 = 4;
+const KIND_PONG: u8 = 5;
+
+/// Error-frame code: the service refused or failed the request
+/// (admission, validation, execution, deadline, cancellation — the
+/// message says which, in the service's own words).
+pub const ERR_REQUEST: u32 = 1;
+/// Error-frame code: the peer violated the framing protocol (for
+/// example a client sent a result frame); the connection closes after
+/// this frame is flushed.
+pub const ERR_PROTOCOL: u32 = 2;
+/// Error-frame code: the shard holding this in-flight request died;
+/// the message names the shard address.
+pub const ERR_SHARD_DOWN: u32 = 3;
+/// Error-frame code: the server is at its connection cap.
+pub const ERR_OVERLOAD: u32 = 4;
 
 /// A positioned decode/encode failure: `offset` is the byte at which
 /// the problem was detected.
@@ -137,19 +169,35 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     !crc
 }
 
+/// A per-request failure carried on the wire in place of a result
+/// frame: a stable numeric code (the `ERR_*` constants) plus the
+/// server's positioned human-readable message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorFrame {
+    pub code: u32,
+    pub msg: String,
+}
+
 /// A decoded frame.
 #[derive(Debug, PartialEq)]
 pub enum Frame {
     Submit(SubmitRequest),
     Result(TopKResult),
+    Error(ErrorFrame),
+    Ping(u64),
+    Pong(u64),
 }
 
-/// Encode either frame kind. See [`encode_request`] / [`encode_result`]
-/// for the kind-specific entry points.
+/// Encode any frame kind. See [`encode_request`] / [`encode_result`] /
+/// [`encode_error`] / [`encode_ping`] / [`encode_pong`] for the
+/// kind-specific entry points.
 pub fn encode(frame: &Frame) -> Result<Vec<u8>, WireError> {
     match frame {
         Frame::Submit(req) => encode_request(req),
         Frame::Result(res) => encode_result(res),
+        Frame::Error(err) => encode_error(err),
+        Frame::Ping(nonce) => Ok(encode_ping(*nonce)),
+        Frame::Pong(nonce) => Ok(encode_pong(*nonce)),
     }
 }
 
@@ -305,6 +353,31 @@ pub fn encode_result(res: &TopKResult) -> Result<Vec<u8>, WireError> {
     Ok(frame_with_payload(KIND_RESULT, p))
 }
 
+/// Encode an [`ErrorFrame`] as a v1 frame. Fails (never panics) on
+/// messages past the u32 length field — in practice unreachable, since
+/// server error strings are short.
+pub fn encode_error(err: &ErrorFrame) -> Result<Vec<u8>, WireError> {
+    let msg = err.msg.as_bytes();
+    if msg.len() > u32::MAX as usize {
+        return fail(0, format!("error message too long ({} bytes)", msg.len()));
+    }
+    let mut p = Vec::with_capacity(8 + msg.len());
+    p.extend_from_slice(&err.code.to_le_bytes());
+    p.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    p.extend_from_slice(msg);
+    Ok(frame_with_payload(KIND_ERROR, p))
+}
+
+/// Encode a ping frame carrying `nonce` (echoed back in the pong).
+pub fn encode_ping(nonce: u64) -> Vec<u8> {
+    frame_with_payload(KIND_PING, nonce.to_le_bytes().to_vec())
+}
+
+/// Encode a pong frame echoing `nonce`.
+pub fn encode_pong(nonce: u64) -> Vec<u8> {
+    frame_with_payload(KIND_PONG, nonce.to_le_bytes().to_vec())
+}
+
 /// Bounds-checked little-endian reader tracking the absolute byte
 /// offset for positioned errors.
 struct Reader<'a> {
@@ -359,18 +432,13 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Decode one frame, strictly: the magic, both checksums, the schema
-/// version, every enum tag, and the exact payload length must all
-/// check out, and no trailing bytes may remain. Errors carry the byte
-/// offset the problem was detected at.
-pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
-    if bytes.len() < HEADER_LEN {
-        return fail(
-            bytes.len(),
-            format!("truncated frame: {} bytes < {HEADER_LEN}-byte header",
-                    bytes.len()),
-        );
-    }
+/// Validate everything a 24-byte header can prove on its own — magic,
+/// header checksum, schema version, reserved byte, payload-length cap —
+/// and return the declared payload length. Shared by the one-shot
+/// [`decode`] and the incremental [`FrameDecoder`], which must reject a
+/// corrupt header the moment 24 bytes arrive instead of buffering
+/// toward a garbage length field.
+fn check_header(bytes: &[u8]) -> Result<u64, WireError> {
     if bytes[0..4] != MAGIC {
         return fail(0, format!("bad magic {:02x?} (expected {MAGIC:02x?})",
                                &bytes[0..4]));
@@ -398,7 +466,6 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
             ),
         );
     }
-    let kind = bytes[6];
     if bytes[7] != 0 {
         return fail(7, format!("reserved byte must be 0, got {}", bytes[7]));
     }
@@ -412,6 +479,23 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
             format!("payload length {payload_len} exceeds the {MAX_PAYLOAD} cap"),
         );
     }
+    Ok(payload_len)
+}
+
+/// Decode one frame, strictly: the magic, both checksums, the schema
+/// version, every enum tag, and the exact payload length must all
+/// check out, and no trailing bytes may remain. Errors carry the byte
+/// offset the problem was detected at.
+pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
+    if bytes.len() < HEADER_LEN {
+        return fail(
+            bytes.len(),
+            format!("truncated frame: {} bytes < {HEADER_LEN}-byte header",
+                    bytes.len()),
+        );
+    }
+    let payload_len = check_header(bytes)?;
+    let kind = bytes[6];
     let actual_payload = bytes.len() - HEADER_LEN;
     if payload_len != actual_payload as u64 {
         return fail(
@@ -440,8 +524,11 @@ pub fn decode(bytes: &[u8]) -> Result<Frame, WireError> {
     let frame = match kind {
         KIND_SUBMIT => Frame::Submit(decode_submit(&mut r)?),
         KIND_RESULT => Frame::Result(decode_result(&mut r)?),
+        KIND_ERROR => Frame::Error(decode_error(&mut r)?),
+        KIND_PING => Frame::Ping(r.u64("ping nonce")?),
+        KIND_PONG => Frame::Pong(r.u64("pong nonce")?),
         other => {
-            return fail(6, format!("unknown frame kind {other} (expected 1 | 2)"))
+            return fail(6, format!("unknown frame kind {other} (expected 1..=5)"))
         }
     };
     if r.pos != bytes.len() {
@@ -577,6 +664,103 @@ fn decode_result(r: &mut Reader<'_>) -> Result<TopKResult, WireError> {
     Ok(TopKResult { rows, k, values, indices })
 }
 
+fn decode_error(r: &mut Reader<'_>) -> Result<ErrorFrame, WireError> {
+    let code = r.u32("error code")?;
+    let msg_len = r.u32("error message length")? as usize;
+    let msg_pos = r.pos;
+    let msg_bytes = r.take(msg_len, "error message")?;
+    let msg = match std::str::from_utf8(msg_bytes) {
+        Ok(s) => s.to_string(),
+        Err(e) => {
+            return fail(
+                msg_pos + e.valid_up_to(),
+                "error message is not valid UTF-8",
+            )
+        }
+    };
+    Ok(ErrorFrame { code, msg })
+}
+
+/// Incremental frame decoder: feed arbitrary byte chunks as they
+/// arrive off a socket, pull complete [`Frame`]s out as they become
+/// available. The network layer's read path never needs a whole frame
+/// in one `read()`.
+///
+/// Headers are validated eagerly the moment 24 bytes are buffered
+/// (magic, header checksum, version, reserved byte, payload cap), so a
+/// corrupt or non-RTKF stream fails fast instead of waiting on a
+/// garbage length field. Any returned [`WireError`] means framing is
+/// lost and the stream is unrecoverable — callers must drop the
+/// connection, not call [`FrameDecoder::next`] again.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// consumed prefix of `buf`, drained lazily so each yielded frame
+    /// is O(frame) instead of O(buffer)
+    start: usize,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder::default()
+    }
+
+    /// Append bytes read off the stream.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // compact before growing: keeps the buffer bounded by the
+        // unconsumed suffix plus one read chunk
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered and not yet consumed by a yielded frame — the
+    /// quantity a server bounds to cap per-connection memory.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pull the next complete frame. `Ok(None)` means "need more
+    /// bytes"; errors are terminal (see the type-level doc).
+    pub fn next(&mut self) -> Result<Option<Frame>, WireError> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let payload_len = check_header(avail)?;
+        let total = HEADER_LEN + payload_len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let frame = decode(&avail[..total])?;
+        self.start += total;
+        Ok(Some(frame))
+    }
+
+    /// Like [`FrameDecoder::next`], but also return the frame's exact
+    /// encoded bytes — what a router forwards verbatim so the payload
+    /// is never re-encoded (and never re-checksummed incorrectly).
+    pub fn next_with_bytes(
+        &mut self,
+    ) -> Result<Option<(Frame, Vec<u8>)>, WireError> {
+        let avail = &self.buf[self.start..];
+        if avail.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let payload_len = check_header(avail)?;
+        let total = HEADER_LEN + payload_len as usize;
+        if avail.len() < total {
+            return Ok(None);
+        }
+        let bytes = avail[..total].to_vec();
+        let frame = decode(&bytes)?;
+        self.start += total;
+        Ok(Some((frame, bytes)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -708,5 +892,170 @@ mod tests {
         bytes[20..24].copy_from_slice(&hcrc.to_le_bytes());
         let err = decode(&bytes).unwrap_err();
         assert!(err.msg.contains("truncated"), "got: {err}");
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        let err = ErrorFrame {
+            code: ERR_SHARD_DOWN,
+            msg: "shard 127.0.0.1:9000 failed".to_string(),
+        };
+        match decode(&encode_error(&err).unwrap()).unwrap() {
+            Frame::Error(back) => assert_eq!(back, err),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match decode(&encode_ping(0xDEAD_BEEF_0BAD_CAFE)).unwrap() {
+            Frame::Ping(n) => assert_eq!(n, 0xDEAD_BEEF_0BAD_CAFE),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match decode(&encode_pong(7)).unwrap() {
+            Frame::Pong(n) => assert_eq!(n, 7),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // empty messages are fine; the code still travels
+        let bare = ErrorFrame { code: ERR_OVERLOAD, msg: String::new() };
+        match decode(&encode_error(&bare).unwrap()).unwrap() {
+            Frame::Error(back) => assert_eq!(back, bare),
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_kind_names_the_full_range() {
+        let mut bytes = encode_ping(1);
+        bytes[6] = 9;
+        let hcrc = crc32(&bytes[..20]);
+        bytes[20..24].copy_from_slice(&hcrc.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert_eq!(err.offset, 6);
+        assert!(err.msg.contains("1..=5"), "got: {}", err.msg);
+    }
+
+    /// Deterministic xorshift so the split-point property test never
+    /// depends on ambient randomness.
+    struct XorShift(u64);
+    impl XorShift {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+    }
+
+    fn sample_frames() -> Vec<Vec<u8>> {
+        vec![
+            encode_request(&sample_request()).unwrap(),
+            encode_result(&TopKResult {
+                rows: 2,
+                k: 2,
+                values: vec![3.25, 1.0, 8.0, 0.5],
+                indices: vec![3, 0, 1, 2],
+            })
+            .unwrap(),
+            encode_request(
+                &sample_request().mode(Mode::Approx { recall_milli: 950 }),
+            )
+            .unwrap(),
+            encode_error(&ErrorFrame {
+                code: ERR_REQUEST,
+                msg: "deadline exceeded".to_string(),
+            })
+            .unwrap(),
+            encode_ping(42),
+            encode_pong(42),
+        ]
+    }
+
+    #[test]
+    fn frame_decoder_yields_one_shot_frames_across_random_splits() {
+        // property: for any way of chunking a stream of valid frames,
+        // the incremental decoder yields exactly the frames the
+        // one-shot decoder sees, in order
+        let frames = sample_frames();
+        let expected: Vec<Frame> =
+            frames.iter().map(|b| decode(b).unwrap()).collect();
+        let stream: Vec<u8> = frames.concat();
+        let mut rng = XorShift(0x2A65_11B8_D00D_F00D);
+        for trial in 0..64 {
+            let mut dec = FrameDecoder::new();
+            let mut got = Vec::new();
+            let mut pos = 0;
+            while pos < stream.len() {
+                // chunk sizes 1..=max, mixing tiny and large reads
+                let max = if trial % 2 == 0 { 7 } else { 4096 };
+                let n = (rng.next() as usize % max + 1)
+                    .min(stream.len() - pos);
+                dec.feed(&stream[pos..pos + n]);
+                pos += n;
+                while let Some(f) = dec.next().unwrap() {
+                    got.push(f);
+                }
+            }
+            assert_eq!(got, expected, "trial {trial} diverged");
+            assert_eq!(dec.buffered(), 0, "trial {trial} left bytes behind");
+        }
+    }
+
+    #[test]
+    fn frame_decoder_single_byte_feed_matches_one_shot() {
+        let frames = sample_frames();
+        let expected: Vec<Frame> =
+            frames.iter().map(|b| decode(b).unwrap()).collect();
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for b in frames.concat() {
+            dec.feed(&[b]);
+            while let Some(f) = dec.next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, expected);
+    }
+
+    #[test]
+    fn frame_decoder_rejects_corrupt_headers_before_buffering_payload() {
+        // a bad magic fails as soon as 24 bytes are in, even though the
+        // (garbage) length field claims a huge payload
+        let mut junk = encode_ping(1);
+        junk[0] = b'X';
+        let mut dec = FrameDecoder::new();
+        dec.feed(&junk[..HEADER_LEN]);
+        let err = dec.next().unwrap_err();
+        assert_eq!(err.offset, 0);
+        assert!(err.msg.contains("bad magic"), "got: {}", err.msg);
+
+        // a bit flip anywhere in the header trips the header CRC with
+        // only the header buffered
+        let mut flipped = encode_ping(2);
+        flipped[9] ^= 0x40;
+        let mut dec = FrameDecoder::new();
+        dec.feed(&flipped[..HEADER_LEN]);
+        let err = dec.next().unwrap_err();
+        assert!(
+            err.msg.contains("checksum mismatch"),
+            "got: {}",
+            err.msg
+        );
+    }
+
+    #[test]
+    fn frame_decoder_reports_need_more_until_the_frame_completes() {
+        let frame = encode_request(&sample_request()).unwrap();
+        let mut dec = FrameDecoder::new();
+        // header alone: valid, but the payload is still outstanding
+        dec.feed(&frame[..HEADER_LEN]);
+        assert!(dec.next().unwrap().is_none());
+        // all but the last byte: still pending
+        dec.feed(&frame[HEADER_LEN..frame.len() - 1]);
+        assert!(dec.next().unwrap().is_none());
+        dec.feed(&frame[frame.len() - 1..]);
+        match dec.next().unwrap() {
+            Some(Frame::Submit(back)) => assert_eq!(back, sample_request()),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert!(dec.next().unwrap().is_none());
     }
 }

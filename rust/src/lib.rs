@@ -44,6 +44,7 @@ pub mod coordinator;
 pub mod gnn;
 pub mod graph;
 pub mod lint;
+pub mod net;
 pub mod plan;
 pub mod runtime;
 pub mod simt;

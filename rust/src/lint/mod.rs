@@ -8,11 +8,11 @@
 //! The rules:
 //!
 //! * **knob-doc** — every config knob referenced in code
-//!   (`"serve.x"`, `"plan.y"`, `"backend.z"`, `"pool.w"`,
+//!   (`"serve.x"`, `"plan.y"`, `"backend.z"`, `"pool.w"`, `"net.v"`,
 //!   `"tenants.{name}.k"`, plus the `TENANT_KEYS` table) has a row in
 //!   `docs/CONFIG.md` under its section heading, and every documented
 //!   row is backed by a knob the code actually reads — both directions,
-//!   all five sections.
+//!   all six sections.
 //! * **safety-comment** — every `unsafe` token in non-test code has a
 //!   `// SAFETY:` comment on the same or one of the six preceding
 //!   lines.
@@ -23,7 +23,9 @@
 //! * **counter-key** — every [`crate::coordinator::metrics::Counter`]
 //!   variant has its `<snake_case>_total` key in the `LoadSnapshot`
 //!   JSON, and every `*_total` key in `metrics.rs` maps back to a
-//!   variant.
+//!   variant; likewise the `NET_KEYS` table and the `NetGauges` struct
+//!   fields must agree one-to-one (the snapshot's `net` section is
+//!   pinned the same way the counters are).
 //! * **deprecated-call** — no non-test code calls or names an item the
 //!   repo marks `#[deprecated]` (the submit shims), outside
 //!   `#[allow(deprecated)]` items and `use` re-exports.
@@ -111,7 +113,8 @@ fn non_test_code(s: &Scanned) -> String {
 // ---------------------------------------------------------------------------
 
 /// The `[section]` names CONFIG.md must document and code may reference.
-const KNOB_SECTIONS: [&str; 5] = ["serve", "plan", "backend", "pool", "tenants"];
+const KNOB_SECTIONS: [&str; 6] =
+    ["serve", "plan", "backend", "pool", "net", "tenants"];
 
 /// Parse `docs/CONFIG.md` into section -> documented keys. Sections are
 /// `## `[serve]`` headings (the tenants heading is `## `[tenants.<name>]``);
@@ -204,7 +207,7 @@ pub fn check_knobs(files: &[SourceFile], config_md: &str) -> Vec<Finding> {
                 line: 0,
                 token: section.to_string(),
                 message: format!(
-                    "CONFIG.md has no `## `[{section}]`` section (all five \
+                    "CONFIG.md has no `## `[{section}]`` section (all six \
                      knob sections must be documented)"
                 ),
             });
@@ -382,6 +385,44 @@ fn camel_to_snake(name: &str) -> String {
     out
 }
 
+/// String-literal elements of the `NET_KEYS` table in the metrics
+/// source (same extraction shape as `TENANT_KEYS`: the literals sit
+/// between the declaration's `=` and its terminating `;`).
+fn net_key_literals(s: &Scanned) -> Vec<String> {
+    let Some(pos) = s.code.find("NET_KEYS") else {
+        return Vec::new();
+    };
+    let eq = s.code[pos..].find('=').map_or(pos, |o| pos + o);
+    let end = s.code[eq..].find(';').map_or(s.code.len(), |o| eq + o);
+    let start_line = line_of(&s.code, eq);
+    let end_line = line_of(&s.code, end);
+    s.strings
+        .iter()
+        .filter(|l| l.line >= start_line && l.line <= end_line)
+        .map(|l| l.text.clone())
+        .collect()
+}
+
+/// Field names of `pub struct NetGauges` in the metrics source.
+fn net_gauge_fields(s: &Scanned) -> Vec<String> {
+    let Some(pos) = s.code.find("struct NetGauges") else {
+        return Vec::new();
+    };
+    let body_start = match s.code[pos..].find('{') {
+        Some(off) => pos + off + 1,
+        None => return Vec::new(),
+    };
+    let body_end = match s.code[body_start..].find('}') {
+        Some(off) => body_start + off,
+        None => return Vec::new(),
+    };
+    idents(&s.code[body_start..body_end])
+        .into_iter()
+        .map(|(_, w)| w)
+        .filter(|w| w != "pub" && w != "u64")
+        .collect()
+}
+
 /// Variant names of `pub enum Counter` in the metrics source.
 fn counter_variants(s: &Scanned) -> Vec<String> {
     let Some(pos) = s.code.find("enum Counter") else {
@@ -463,6 +504,43 @@ pub fn check_counter_keys(metrics: &SourceFile) -> Vec<Finding> {
                 message: format!(
                     "JSON key `{key}` does not correspond to any Counter \
                      variant (stale key or missing variant)"
+                ),
+            });
+        }
+    }
+    // NET_KEYS <-> NetGauges fields, both directions. Fixtures without
+    // a net section (neither table nor struct present) are exempt.
+    let keys = net_key_literals(&s);
+    let fields = net_gauge_fields(&s);
+    if keys.is_empty() && fields.is_empty() {
+        return findings;
+    }
+    let key_set: BTreeSet<&String> = keys.iter().collect();
+    let field_set: BTreeSet<&String> = fields.iter().collect();
+    for field in &fields {
+        if !key_set.contains(field) {
+            findings.push(Finding {
+                rule: "counter-key",
+                path: metrics.path.clone(),
+                line: 0,
+                token: field.clone(),
+                message: format!(
+                    "NetGauges field `{field}` has no entry in NET_KEYS \
+                     (snapshot consumers pin the `net` section by these keys)"
+                ),
+            });
+        }
+    }
+    for key in &keys {
+        if !field_set.contains(key) {
+            findings.push(Finding {
+                rule: "counter-key",
+                path: metrics.path.clone(),
+                line: 0,
+                token: key.clone(),
+                message: format!(
+                    "NET_KEYS entry `{key}` does not name a NetGauges field \
+                     (stale key or missing gauge)"
                 ),
             });
         }
@@ -630,6 +708,8 @@ mod tests {
 | `enable` | bool | `true` | On. |
 ## `[pool]`
 | `threads` | int | `0` | Auto. |
+## `[net]`
+| `bind` | string | `127.0.0.1:7070` | Listen address. |
 ## `[tenants.<name>]`
 | `weight` | int | `1` | WDRR. |
 ";
@@ -644,6 +724,7 @@ mod tests {
                 c.get_or("plan.calib_rows", 192);
                 c.get_or("backend.enable", true);
                 c.get_or("pool.threads", 0);
+                c.get("net.bind");
                 let _ = format!("tenants.{name}.weight");
             }
             "#,
@@ -663,6 +744,7 @@ mod tests {
                 c.get_or("plan.calib_rows", 192);
                 c.get_or("backend.enable", true);
                 c.get_or("pool.threads", 0);
+                c.get("net.bind");
                 let _ = format!("tenants.{name}.weight");
             }
             "#,
@@ -683,6 +765,7 @@ mod tests {
                 c.get_or("plan.calib_rows", 192);
                 c.get_or("backend.enable", true);
                 c.get_or("pool.threads", 0);
+                c.get("net.bind");
                 let _ = format!("tenants.{name}.weight");
             }
             #[cfg(test)]
@@ -708,7 +791,7 @@ mod tests {
         let missing: Vec<_> =
             found.iter().filter(|f| f.line == 0 && f.path.ends_with("CONFIG.md")
                 && f.message.contains("no `##")).collect();
-        assert_eq!(missing.len(), 4, "{found:?}"); // plan/backend/pool/tenants
+        assert_eq!(missing.len(), 5, "{found:?}"); // plan/backend/pool/net/tenants
     }
 
     #[test]
@@ -813,6 +896,35 @@ mod tests {
         let found = check_counter_keys(&stale);
         assert_eq!(found.len(), 1, "{found:?}");
         assert_eq!(found[0].token, "ghosts_total");
+    }
+
+    #[test]
+    fn counter_rule_pins_net_keys_to_net_gauges_fields() {
+        let matched = sf(
+            "rust/src/coordinator/metrics.rs",
+            r#"
+            pub enum Counter { Requests }
+            pub struct NetGauges { pub frames_in: u64, pub frames_out: u64 }
+            pub const NET_KEYS: [&str; 2] = ["frames_in", "frames_out"];
+            fn json(s: &Snap) { obj(vec![("requests_total", num(1.0))]); }
+            "#,
+        );
+        assert!(check_counter_keys(&matched).is_empty());
+        let drifted = sf(
+            "rust/src/coordinator/metrics.rs",
+            r#"
+            pub enum Counter { Requests }
+            pub struct NetGauges { pub frames_in: u64, pub decode_errors: u64 }
+            pub const NET_KEYS: [&str; 2] = ["frames_in", "frames_out"];
+            fn json(s: &Snap) { obj(vec![("requests_total", num(1.0))]); }
+            "#,
+        );
+        let found = check_counter_keys(&drifted);
+        assert_eq!(found.len(), 2, "{found:?}");
+        let tokens: Vec<&str> =
+            found.iter().map(|f| f.token.as_str()).collect();
+        assert!(tokens.contains(&"decode_errors"), "{tokens:?}");
+        assert!(tokens.contains(&"frames_out"), "{tokens:?}");
     }
 
     #[test]

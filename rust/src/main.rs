@@ -5,7 +5,7 @@ use anyhow::{anyhow, Result};
 use rtopk::backend::BackendRegistry;
 use rtopk::bench::{parse_mode, workload, Table};
 use rtopk::cli::{App, Args, Command};
-use rtopk::config::{BackendConfig, Config, ServeConfig, TenantConfig};
+use rtopk::config::{BackendConfig, Config, NetConfig, ServeConfig, TenantConfig};
 use rtopk::coordinator::{
     wire, Priority, SubmitRequest, TenantId, TopKService, Trainer,
 };
@@ -46,6 +46,21 @@ fn app() -> App {
                       demo load round-robin across them with the weights \
                       feeding the batcher's weighted-fair drain")
                 .switch("cpu-only", "skip PJRT, use the CPU engine"),
+            Command::new("listen", "serve schema-v1 frames over TCP (a worker \
+                                    process for `rtopk shard`, or standalone)")
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("config", "", "optional TOML config file ([net] + [serve] \
+                                    + [tenants.*] sections apply)")
+                .opt("bind", "", "listen address override (default: [net] bind, \
+                                  127.0.0.1:7070; use :0 for an ephemeral port)")
+                .switch("cpu-only", "skip PJRT, use the CPU engine"),
+            Command::new("shard", "route frames across rtopk listen workers \
+                                   with weight-aware allocation + health probes")
+                .opt("config", "", "optional TOML config file ([net] shards + \
+                                    [tenants.*] weights apply)")
+                .opt("bind", "", "router listen address override")
+                .opt("shards", "", "comma-separated worker addresses \
+                                    (overrides [net] shards)"),
             Command::new("train", "train a MaxK-GNN via the AOT artifacts")
                 .opt("artifacts", "artifacts", "artifacts directory")
                 .opt("model", "gcn", "gcn | sage | gin")
@@ -122,6 +137,8 @@ fn main() {
             let run = match cmd.name {
                 "topk" => cmd_topk(&args),
                 "serve" => cmd_serve(&args),
+                "listen" => cmd_listen(&args),
+                "shard" => cmd_shard(&args),
                 "train" => cmd_train(&args),
                 "plan" => cmd_plan(&args),
                 "stats" => cmd_stats(&args),
@@ -278,6 +295,68 @@ fn cmd_serve(a: &Args) -> Result<()> {
         t.print();
     }
     svc.shutdown();
+    Ok(())
+}
+
+fn cmd_listen(a: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    let mut net = NetConfig::default();
+    if let Some(path) = a.get("config").filter(|s| !s.is_empty()) {
+        let c = Config::load(std::path::Path::new(path))
+            .map_err(anyhow::Error::msg)?;
+        cfg = ServeConfig::from_config(&c);
+        net = NetConfig::from_config(&c);
+    }
+    cfg.artifacts_dir = a.get("artifacts").unwrap().to_string();
+    if let Some(bind) = a.get("bind").filter(|s| !s.is_empty()) {
+        net.bind = bind.to_string();
+    }
+    let svc = Arc::new(if a.switch("cpu-only") {
+        TopKService::cpu_only(&cfg)?
+    } else {
+        TopKService::start(&cfg)?
+    });
+    let handle = rtopk::net::serve(svc.clone(), &net)?;
+    println!(
+        "rtopk listen: {} (compiled variants: {:?})",
+        handle.addr(),
+        svc.variants()
+    );
+    handle.join();
+    Ok(())
+}
+
+fn cmd_shard(a: &Args) -> Result<()> {
+    let mut net = NetConfig::default();
+    let mut weights: std::collections::HashMap<String, u64> =
+        std::collections::HashMap::new();
+    if let Some(path) = a.get("config").filter(|s| !s.is_empty()) {
+        let c = Config::load(std::path::Path::new(path))
+            .map_err(anyhow::Error::msg)?;
+        net = NetConfig::from_config(&c);
+        // tenant WDRR weights double as the router's fan-out widths
+        for t in ServeConfig::from_config(&c).tenants.tenants {
+            weights.insert(t.name, t.weight);
+        }
+    }
+    if let Some(bind) = a.get("bind").filter(|s| !s.is_empty()) {
+        net.bind = bind.to_string();
+    }
+    if let Some(shards) = a.get("shards").filter(|s| !s.is_empty()) {
+        net.shards = shards
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+    }
+    let handle = rtopk::net::serve_router(&net, weights)?;
+    println!(
+        "rtopk shard: {} routing {} worker(s): {}",
+        handle.addr(),
+        net.shards.len(),
+        net.shards.join(", ")
+    );
+    handle.join();
     Ok(())
 }
 

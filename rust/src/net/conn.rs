@@ -1,0 +1,469 @@
+//! Per-connection protocol state machine for the `rtopk listen`
+//! server: incremental decode → service submission → FIFO reply
+//! delivery, with both buffers bounded.
+//!
+//! The machine is transport-agnostic (`Read`/`Write` + `WouldBlock`),
+//! so unit tests drive it with in-memory cursors and the server drives
+//! it with nonblocking `TcpStream`s. It is single-threaded by
+//! construction — owned and driven only by the socket loop — which is
+//! why it needs no locks at all; the concurrency lives in the service
+//! behind [`TopKService::submit_ticket`] and is already model-checked
+//! there.
+//!
+//! One subtlety worth naming: admission can block. A submit whose
+//! tenant chose the Block over-quota policy, or one that hits the
+//! batcher's global queue limit, parks the socket loop until space
+//! frees — every connection stalls, which is TCP backpressure doing
+//! its job, but deployments that need strict isolation should size
+//! `[serve] queue_limit` above worst-case backlog and give noisy
+//! tenants row quotas (those shed with a fast reject before the global
+//! queue fills).
+
+use crate::coordinator::wire::{
+    self, Frame, FrameDecoder, ERR_PROTOCOL, ERR_REQUEST,
+};
+use crate::coordinator::{TopKService, TopKTicket};
+use crate::net::{error_frame_bytes, NetStats};
+use crate::topk::types::TopKResult;
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::sync::Arc;
+
+/// Per-connection buffer and concurrency caps (from `[net]`).
+#[derive(Clone, Copy, Debug)]
+pub struct ConnLimits {
+    pub read_buf_bytes: usize,
+    pub write_buf_bytes: usize,
+    pub max_inflight: usize,
+}
+
+/// One owed reply, in submission order.
+enum Slot {
+    /// inside the service; resolves via `try_wait`
+    InFlight(TopKTicket),
+    /// already encoded (admission error, or a ticket that resolved
+    /// while an earlier request was still pending)
+    Ready(Vec<u8>),
+}
+
+/// Protocol state for one accepted connection.
+pub struct Connection {
+    svc: Arc<TopKService>,
+    stats: Arc<NetStats>,
+    limits: ConnLimits,
+    decoder: FrameDecoder,
+    /// replies owed to the client, FIFO — the Nth entry answers the
+    /// Nth submit frame
+    pending: VecDeque<Slot>,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    /// graceful teardown: flush `outbuf`, then close (set on protocol
+    /// violations after the terminal error frame is queued)
+    closing: bool,
+    /// transport gone (EOF, reset): nothing more can be delivered
+    dead: bool,
+}
+
+impl Connection {
+    pub fn new(
+        svc: Arc<TopKService>,
+        stats: Arc<NetStats>,
+        limits: ConnLimits,
+    ) -> Connection {
+        Connection {
+            svc,
+            stats,
+            limits,
+            decoder: FrameDecoder::new(),
+            pending: VecDeque::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn outbuf_len(&self) -> usize {
+        self.outbuf.len() - self.outpos
+    }
+
+    /// Whether the socket loop should keep READ interest: not tearing
+    /// down, and neither buffer is at its cap. Pausing reads at the
+    /// caps is the memory bound — the client's unread bytes stay in
+    /// kernel buffers and TCP flow control takes over.
+    pub fn wants_read(&self) -> bool {
+        !self.closing
+            && !self.dead
+            && self.decoder.buffered() < self.limits.read_buf_bytes
+            && self.outbuf_len() < self.limits.write_buf_bytes
+    }
+
+    /// Whether the socket loop should keep WRITE interest.
+    pub fn wants_write(&self) -> bool {
+        !self.dead && self.outbuf_len() > 0
+    }
+
+    /// Done: everything deliverable is delivered (or nothing ever will
+    /// be). The server drops the connection when this turns true.
+    pub fn finished(&self) -> bool {
+        self.dead
+            || (self.closing && self.outbuf_len() == 0 && self.pending.is_empty())
+    }
+
+    /// Readiness hint: pull bytes until `WouldBlock` (or a cap),
+    /// decode, submit. Returns `false` when the transport died.
+    pub fn on_readable(&mut self, io: &mut impl Read) -> bool {
+        let mut chunk = [0u8; 16 * 1024];
+        while self.wants_read() {
+            match io.read(&mut chunk) {
+                Ok(0) => {
+                    self.transport_died();
+                    break;
+                }
+                Ok(n) => {
+                    self.decoder.feed(&chunk[..n]);
+                    self.drain_decoder();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.transport_died();
+                    break;
+                }
+            }
+        }
+        !self.dead
+    }
+
+    /// Decode buffered frames while there is room to hold their
+    /// replies. Frames past the in-flight cap stay undecoded in the
+    /// read buffer until `pump` frees slots.
+    fn drain_decoder(&mut self) {
+        while !self.closing
+            && self.pending.len() < self.limits.max_inflight
+            && self.outbuf_len() < self.limits.write_buf_bytes
+        {
+            match self.decoder.next() {
+                Ok(Some(frame)) => {
+                    self.stats.frame_in();
+                    self.handle_frame(frame);
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // framing is lost: one terminal error frame, then
+                    // teardown (cancelling anything still in flight)
+                    self.stats.decode_error();
+                    self.fail_connection(
+                        ERR_PROTOCOL,
+                        &format!("undecodable frame: {e}"),
+                    );
+                    break;
+                }
+            }
+        }
+    }
+
+    fn handle_frame(&mut self, frame: Frame) {
+        match frame {
+            Frame::Submit(req) => match self.svc.submit_ticket(req) {
+                Ok(ticket) => self.pending.push_back(Slot::InFlight(ticket)),
+                // admission refusals (quota, feasibility, validation,
+                // recall floor) become positioned error frames in the
+                // same FIFO slot a result would have used
+                Err(e) => self.pending.push_back(Slot::Ready(
+                    error_frame_bytes(ERR_REQUEST, &format!("{e:#}")),
+                )),
+            },
+            // pings bypass the FIFO: a health probe must not wait
+            // behind a deep submit backlog
+            Frame::Ping(nonce) => {
+                let pong = wire::encode_pong(nonce);
+                self.queue_bytes(&pong);
+            }
+            Frame::Result(_) | Frame::Pong(_) | Frame::Error(_) => {
+                self.fail_connection(
+                    ERR_PROTOCOL,
+                    "clients send submit (1) or ping (4) frames only",
+                );
+            }
+        }
+    }
+
+    /// Queue an encoded frame onto the write buffer.
+    fn queue_bytes(&mut self, bytes: &[u8]) {
+        self.outbuf.extend_from_slice(bytes);
+        self.stats.frame_out();
+    }
+
+    /// Terminal protocol failure: queue one error frame, cancel all
+    /// in-flight work, flush, close.
+    fn fail_connection(&mut self, code: u32, msg: &str) {
+        let bytes = error_frame_bytes(code, msg);
+        self.queue_bytes(&bytes);
+        self.cancel_inflight();
+        self.closing = true;
+    }
+
+    /// The transport is gone: nothing can be delivered, so every
+    /// pending request is cancelled — quota and queue space must not
+    /// stay pinned to a vanished peer.
+    fn transport_died(&mut self) {
+        self.dead = true;
+        self.cancel_inflight();
+    }
+
+    fn cancel_inflight(&mut self) {
+        for slot in &self.pending {
+            if let Slot::InFlight(ticket) = slot {
+                ticket.cancel();
+            }
+        }
+        self.pending.clear();
+    }
+
+    /// Move resolved replies into the write buffer, strictly FIFO.
+    /// Called every loop tick (completions arrive from worker threads,
+    /// not from socket readiness). Freed slots may unblock decoding of
+    /// already-buffered frames, so the decoder drains afterwards.
+    pub fn pump(&mut self) {
+        loop {
+            if self.outbuf_len() >= self.limits.write_buf_bytes {
+                break;
+            }
+            let bytes = match self.pending.front() {
+                None => break,
+                Some(Slot::Ready(_)) => match self.pending.pop_front() {
+                    Some(Slot::Ready(b)) => b,
+                    _ => unreachable!("front() said Ready"),
+                },
+                Some(Slot::InFlight(ticket)) => match ticket.try_wait() {
+                    // the head is still running; later completions wait
+                    // their turn (FIFO is the protocol contract)
+                    None => break,
+                    Some(outcome) => {
+                        self.pending.pop_front();
+                        encode_outcome(outcome)
+                    }
+                },
+            };
+            self.queue_bytes(&bytes);
+        }
+        if !self.closing && !self.dead {
+            self.drain_decoder();
+        }
+    }
+
+    /// Readiness hint: flush the write buffer until `WouldBlock` or
+    /// empty. Returns `false` when the transport died.
+    pub fn on_writable(&mut self, io: &mut impl Write) -> bool {
+        while self.outpos < self.outbuf.len() {
+            match io.write(&self.outbuf[self.outpos..]) {
+                Ok(0) => {
+                    self.transport_died();
+                    break;
+                }
+                Ok(n) => self.outpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.transport_died();
+                    break;
+                }
+            }
+        }
+        if self.outpos == self.outbuf.len() {
+            self.outbuf.clear();
+            self.outpos = 0;
+        } else if self.outpos > 64 * 1024 {
+            // reclaim the flushed prefix without waiting for a full
+            // drain (a slow reader may never fully drain)
+            self.outbuf.drain(..self.outpos);
+            self.outpos = 0;
+        }
+        !self.dead
+    }
+}
+
+impl Drop for Connection {
+    /// Safety net: however the server discards a connection, its
+    /// in-flight tickets get cancelled.
+    fn drop(&mut self) {
+        self.cancel_inflight();
+    }
+}
+
+fn encode_outcome(
+    outcome: anyhow::Result<TopKResult>,
+) -> Vec<u8> {
+    match outcome {
+        Ok(res) => wire::encode_result(&res).unwrap_or_else(|e| {
+            error_frame_bytes(
+                ERR_REQUEST,
+                &format!("result not encodable: {e}"),
+            )
+        }),
+        Err(e) => error_frame_bytes(ERR_REQUEST, &format!("{e:#}")),
+    }
+}
+
+#[cfg(all(test, not(rtopk_model_check)))]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::coordinator::wire::{decode, encode_ping, encode_request};
+    use crate::coordinator::SubmitRequest;
+    use crate::topk::verify::is_exact;
+    use crate::util::matrix::RowMatrix;
+    use crate::util::rng::Rng;
+
+    fn small_limits() -> ConnLimits {
+        ConnLimits {
+            read_buf_bytes: 1 << 20,
+            write_buf_bytes: 1 << 20,
+            max_inflight: 8,
+        }
+    }
+
+    fn test_service() -> Arc<TopKService> {
+        let mut cfg = ServeConfig::default();
+        cfg.workers = 1;
+        cfg.max_wait_us = 0; // flush immediately: deterministic tests
+        Arc::new(TopKService::cpu_only(&cfg).unwrap())
+    }
+
+    /// Drive the machine with in-memory buffers until all owed replies
+    /// flushed (bounded spin: completions come from worker threads).
+    fn run_to_quiescence(conn: &mut Connection, input: &[u8]) -> Vec<u8> {
+        let mut cursor = std::io::Cursor::new(input.to_vec());
+        assert!(conn.on_readable(&mut cursor));
+        let mut out = Vec::new();
+        for _ in 0..5000 {
+            conn.pump();
+            conn.on_writable(&mut out);
+            if conn.pending.is_empty()
+                && conn.outbuf_len() == 0
+                && conn.decoder.buffered() == 0
+            {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        out
+    }
+
+    #[test]
+    fn submits_round_trip_in_fifo_order() {
+        let svc = test_service();
+        let stats = Arc::new(NetStats::default());
+        let mut conn =
+            Connection::new(svc, stats.clone(), small_limits());
+
+        let mut rng = Rng::seed_from(7);
+        let mats: Vec<RowMatrix> = (0..3)
+            .map(|_| RowMatrix::random_normal(8, 32, &mut rng))
+            .collect();
+        let mut input = Vec::new();
+        for m in &mats {
+            input.extend_from_slice(
+                &encode_request(&SubmitRequest::new(m.clone(), 4)).unwrap(),
+            );
+        }
+        let out = run_to_quiescence(&mut conn, &input);
+
+        let mut dec = FrameDecoder::new();
+        dec.feed(&out);
+        for m in &mats {
+            match dec.next().unwrap().expect("a reply per submit") {
+                Frame::Result(res) => {
+                    assert_eq!(res.rows, 8);
+                    assert_eq!(res.k, 4);
+                    assert!(is_exact(m, &res));
+                }
+                other => panic!("wrong frame: {other:?}"),
+            }
+        }
+        assert!(dec.next().unwrap().is_none(), "extra frames");
+        assert_eq!(stats.gauges().frames_in, 3);
+        assert_eq!(stats.gauges().frames_out, 3);
+    }
+
+    #[test]
+    fn ping_answers_out_of_band_and_garbage_fails_the_connection() {
+        let svc = test_service();
+        let stats = Arc::new(NetStats::default());
+        let mut conn = Connection::new(svc, stats.clone(), small_limits());
+
+        let mut input = encode_ping(99);
+        input.extend_from_slice(b"this is not a frame header at all!!");
+        let out = run_to_quiescence(&mut conn, &input);
+
+        let mut dec = FrameDecoder::new();
+        dec.feed(&out);
+        match dec.next().unwrap().expect("pong") {
+            Frame::Pong(n) => assert_eq!(n, 99),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        match dec.next().unwrap().expect("terminal error frame") {
+            Frame::Error(e) => {
+                assert_eq!(e.code, ERR_PROTOCOL);
+                assert!(e.msg.contains("undecodable"), "got: {}", e.msg);
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+        assert!(conn.closing);
+        assert!(conn.finished());
+        assert_eq!(stats.gauges().decode_errors, 1);
+    }
+
+    #[test]
+    fn invalid_request_is_answered_with_a_request_error_frame() {
+        let svc = test_service();
+        let stats = Arc::new(NetStats::default());
+        let mut conn = Connection::new(svc, stats, small_limits());
+
+        // k larger than cols: the service's admission refuses it
+        let bad =
+            SubmitRequest::new(RowMatrix::zeros(4, 8), 64);
+        let input = encode_request(&bad).unwrap();
+        let out = run_to_quiescence(&mut conn, &input);
+
+        let mut dec = FrameDecoder::new();
+        dec.feed(&out);
+        match dec.next().unwrap().expect("error frame") {
+            Frame::Error(e) => assert_eq!(e.code, ERR_REQUEST),
+            other => panic!("wrong frame: {other:?}"),
+        }
+        // the connection survives: per-request errors are not fatal
+        assert!(!conn.closing && !conn.dead);
+    }
+
+    #[test]
+    fn eof_cancels_in_flight_tickets() {
+        let mut cfg = ServeConfig::default();
+        cfg.workers = 1;
+        // park requests in the batcher so they are still in flight
+        // when the EOF lands
+        cfg.max_wait_us = 5_000_000;
+        cfg.max_batch_rows = 1 << 30;
+        let svc = Arc::new(TopKService::cpu_only(&cfg).unwrap());
+        let stats = Arc::new(NetStats::default());
+        let mut conn =
+            Connection::new(svc.clone(), stats, small_limits());
+
+        let req = SubmitRequest::new(RowMatrix::zeros(4, 16), 2);
+        let mut input = encode_request(&req).unwrap();
+        // half of a second frame: the disconnect happens mid-frame
+        let partial = encode_request(&req).unwrap();
+        input.extend_from_slice(&partial[..partial.len() / 2]);
+
+        let mut cursor = std::io::Cursor::new(input);
+        // reads the bytes, submits the complete frame, then hits EOF
+        assert!(!conn.on_readable(&mut cursor));
+        assert!(conn.finished());
+        assert_eq!(conn.pending.len(), 0, "tickets dropped after cancel");
+        // the cancel-hook evicted the queued request and counted it
+        let snap = svc.load_snapshot();
+        assert_eq!(snap.cancelled_total, 1);
+        assert_eq!(snap.in_flight_rows, 0, "quota released");
+    }
+}

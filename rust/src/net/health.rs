@@ -1,0 +1,202 @@
+//! Shard health: ping/pong probes with quarantine-and-retry, the same
+//! policy shape as the backend registry's accelerator quarantine
+//! (`backend::registry::QUARANTINE_AFTER` consecutive failures bench a
+//! shard; a later successful probe restores it).
+//!
+//! The prober runs on its own thread with its own short-lived
+//! connections — probes must not queue behind a shard's submit FIFO,
+//! and a wedged shard must time out without stalling the router loop.
+//! The shard table is the cross-thread protocol state (prober writes,
+//! router loop reads routing decisions off it), so it lives behind the
+//! `util::sync` façade.
+
+use crate::backend::registry::QUARANTINE_AFTER;
+use crate::coordinator::wire::{encode_ping, Frame, FrameDecoder};
+use crate::net::NetStats;
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Mutex;
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One shard's live health, prober-maintained.
+#[derive(Clone, Debug)]
+pub struct ShardState {
+    pub alive: bool,
+    pub consecutive_failures: u32,
+}
+
+/// Health table for a fixed shard list. Shards start alive (optimistic:
+/// traffic flows before the first probe lands; a dead shard's first
+/// requests get positioned errors via the router's I/O failure path,
+/// which quarantines immediately).
+pub struct ShardTable {
+    pub addrs: Vec<String>,
+    states: Mutex<Vec<ShardState>>,
+}
+
+impl ShardTable {
+    pub fn new(addrs: Vec<String>) -> ShardTable {
+        let states = addrs
+            .iter()
+            .map(|_| ShardState { alive: true, consecutive_failures: 0 })
+            .collect();
+        ShardTable { addrs, states: Mutex::new(states) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.addrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.addrs.is_empty()
+    }
+
+    /// Per-shard liveness snapshot, index-aligned with `addrs`.
+    pub fn alive(&self) -> Vec<bool> {
+        self.states.lock().unwrap().iter().map(|s| s.alive).collect()
+    }
+
+    /// (alive, quarantined) counts for the gauges.
+    pub fn counts(&self) -> (u64, u64) {
+        let states = self.states.lock().unwrap();
+        let alive = states.iter().filter(|s| s.alive).count() as u64;
+        (alive, states.len() as u64 - alive)
+    }
+
+    /// Record a probe outcome. A success restores the shard on the
+    /// spot; [`QUARANTINE_AFTER`] consecutive failures quarantine it.
+    /// Returns the shard's post-update liveness.
+    pub fn note_probe(&self, idx: usize, ok: bool) -> bool {
+        let mut states = self.states.lock().unwrap();
+        let s = &mut states[idx];
+        if ok {
+            s.consecutive_failures = 0;
+            s.alive = true;
+        } else {
+            s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+            if s.consecutive_failures >= QUARANTINE_AFTER {
+                s.alive = false;
+            }
+        }
+        s.alive
+    }
+
+    /// The router observed a hard I/O failure (connect refused, reset,
+    /// protocol violation) — quarantine immediately rather than waiting
+    /// for [`QUARANTINE_AFTER`] probes to notice. The prober's next
+    /// successful ping restores the shard.
+    pub fn mark_dead(&self, idx: usize) {
+        let mut states = self.states.lock().unwrap();
+        let s = &mut states[idx];
+        s.alive = false;
+        s.consecutive_failures = s.consecutive_failures.max(QUARANTINE_AFTER);
+    }
+}
+
+/// One synchronous ping probe: connect, send, await the matching pong.
+/// Every step is bounded by `timeout`.
+pub fn probe(addr: &str, timeout: Duration, nonce: u64) -> bool {
+    let sockaddr = match addr.to_socket_addrs().ok().and_then(|mut a| a.next())
+    {
+        Some(a) => a,
+        None => return false,
+    };
+    let mut stream = match TcpStream::connect_timeout(&sockaddr, timeout) {
+        Ok(s) => s,
+        Err(_) => return false,
+    };
+    if stream.set_read_timeout(Some(timeout)).is_err()
+        || stream.set_write_timeout(Some(timeout)).is_err()
+    {
+        return false;
+    }
+    if stream.write_all(&encode_ping(nonce)).is_err() {
+        return false;
+    }
+    let mut dec = FrameDecoder::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) | Err(_) => return false,
+            Ok(n) => {
+                dec.feed(&chunk[..n]);
+                match dec.next() {
+                    Ok(Some(Frame::Pong(n))) => return n == nonce,
+                    Ok(Some(_)) => return false,
+                    Ok(None) => continue,
+                    Err(_) => return false,
+                }
+            }
+        }
+    }
+}
+
+/// Spawn the prober thread: every `cadence`, ping every shard, update
+/// the table and the shard-health gauges. Stops when `stop` flips.
+pub fn spawn_prober(
+    table: Arc<ShardTable>,
+    stats: Arc<NetStats>,
+    cadence: Duration,
+    timeout: Duration,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("rtopk-health".to_string())
+        .spawn(move || {
+            let mut nonce: u64 = 0;
+            // publish the optimistic initial state before first sleep
+            let (alive, quarantined) = table.counts();
+            stats.set_shard_health(alive, quarantined);
+            while !stop.load(Ordering::Acquire) {
+                for idx in 0..table.len() {
+                    nonce = nonce.wrapping_add(1);
+                    let ok = probe(&table.addrs[idx], timeout, nonce);
+                    table.note_probe(idx, ok);
+                }
+                let (alive, quarantined) = table.counts();
+                stats.set_shard_health(alive, quarantined);
+                std::thread::sleep(cadence);
+            }
+        })
+        .expect("spawn health prober")
+}
+
+#[cfg(all(test, not(rtopk_model_check)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quarantine_after_consecutive_failures_and_restore_on_success() {
+        let t = ShardTable::new(vec!["a:1".into(), "b:2".into()]);
+        assert_eq!(t.alive(), vec![true, true]);
+        for i in 1..=QUARANTINE_AFTER {
+            let alive = t.note_probe(0, false);
+            assert_eq!(alive, i < QUARANTINE_AFTER, "failure #{i}");
+        }
+        assert_eq!(t.alive(), vec![false, true]);
+        assert_eq!(t.counts(), (1, 1));
+        // one intervening success resets the streak
+        assert!(t.note_probe(0, true));
+        assert_eq!(t.counts(), (2, 0));
+        // a single failure after restore does not re-quarantine
+        assert!(t.note_probe(0, false));
+    }
+
+    #[test]
+    fn mark_dead_quarantines_immediately() {
+        let t = ShardTable::new(vec!["a:1".into()]);
+        t.mark_dead(0);
+        assert_eq!(t.alive(), vec![false]);
+        // restore still works via a successful probe
+        assert!(t.note_probe(0, true));
+    }
+
+    #[test]
+    fn probe_fails_cleanly_on_unresolvable_and_refused_addresses() {
+        assert!(!probe("not an address", Duration::from_millis(50), 1));
+        // a port nothing listens on: refused (or timed out), not hung
+        assert!(!probe("127.0.0.1:1", Duration::from_millis(200), 2));
+    }
+}

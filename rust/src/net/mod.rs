@@ -1,0 +1,180 @@
+//! Network serving layer: schema-v1 frames over TCP.
+//!
+//! Two deployables share this module and the wire codec:
+//!
+//! * [`server`] — `rtopk listen`: a single-threaded readiness loop
+//!   (see [`reactor`]) accepting client connections, incrementally
+//!   decoding submit frames ([`crate::coordinator::wire::FrameDecoder`])
+//!   into [`crate::coordinator::SubmitRequest`]s, and submitting them
+//!   through the in-process [`crate::coordinator::TopKService`] —
+//!   tenants, quotas, deadlines, feasibility admission, and recall
+//!   floors all apply unchanged. Results stream back as result frames;
+//!   per-request failures as error frames.
+//! * [`router`] — `rtopk shard`: the same readiness loop fanning
+//!   client frames across N worker processes speaking this protocol,
+//!   with weight-aware shard allocation, [`health`]-probe quarantine,
+//!   and positioned error frames for requests stranded on a dead
+//!   shard.
+//!
+//! ## Protocol contract
+//!
+//! A client sends submit (kind 1) and ping (kind 4) frames. The server
+//! answers every submit frame with exactly one result (kind 2) or
+//! error (kind 3) frame, **in submission order per connection** — the
+//! Nth reply answers the Nth submit, even though the service completes
+//! requests out of order. Pings are answered with pongs out-of-band
+//! (they never wait behind submits). Closing the connection cancels
+//! every in-flight request via the ticket cancel-hook: quota and queue
+//! space are released promptly, never leaked to a vanished peer.
+//!
+//! ## Backpressure
+//!
+//! Per-connection memory is bounded by `[net] read_buf_bytes` +
+//! `[net] write_buf_bytes` + one in-flight result. A slow reader fills
+//! the write buffer, which pauses result encoding, which (with
+//! `max_inflight_per_conn`) pauses frame decoding, which lets the read
+//! buffer fill, which pauses socket reads — at which point TCP flow
+//! control pushes the backpressure to the client. No unbounded queue
+//! exists anywhere on the path.
+//!
+//! ## Locks
+//!
+//! Cross-thread state (the health prober's shard table, shutdown
+//! flags) goes through the `util::sync` model-check façade like every
+//! other concurrency-bearing module. The per-connection state machines
+//! are single-threaded by construction — owned by the socket loop —
+//! and the observability counters in [`NetStats`] are plain
+//! `std::sync::atomic` per the façade's observability carve-out.
+
+pub mod conn;
+pub mod health;
+pub mod reactor;
+pub mod router;
+pub mod server;
+
+pub use router::{serve_router, RouterHandle};
+pub use server::{serve, ServerHandle};
+
+use crate::coordinator::metrics::{NetGauges, NetProbe};
+use crate::coordinator::wire::{self, ErrorFrame};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared observability counters for one server or router instance.
+/// Registered with the service's [`crate::coordinator::TelemetryHub`]
+/// as the [`NetProbe`] behind the snapshot's `net` section.
+/// Observability-only: no control flow reads these, so they stay on
+/// std atomics (the façade's carve-out) and cost the model checker
+/// nothing.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    open_connections: AtomicU64,
+    frames_in: AtomicU64,
+    frames_out: AtomicU64,
+    decode_errors: AtomicU64,
+    shards_alive: AtomicU64,
+    shards_quarantined: AtomicU64,
+}
+
+impl NetStats {
+    pub fn conn_opened(&self) {
+        self.open_connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn conn_closed(&self) {
+        self.open_connections.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn frame_in(&self) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn frame_out(&self) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn decode_error(&self) {
+        self.decode_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_shard_health(&self, alive: u64, quarantined: u64) {
+        self.shards_alive.store(alive, Ordering::Relaxed);
+        self.shards_quarantined.store(quarantined, Ordering::Relaxed);
+    }
+
+    pub fn gauges(&self) -> NetGauges {
+        NetGauges {
+            open_connections: self.open_connections.load(Ordering::Relaxed),
+            frames_in: self.frames_in.load(Ordering::Relaxed),
+            frames_out: self.frames_out.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
+            shards_alive: self.shards_alive.load(Ordering::Relaxed),
+            shards_quarantined: self.shards_quarantined.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl NetProbe for NetStats {
+    fn net_gauges(&self) -> NetGauges {
+        self.gauges()
+    }
+}
+
+/// Cap on error-frame message bytes: errors must stay deliverable
+/// through a nearly-full write buffer and must never dwarf the request
+/// they answer.
+const MAX_ERROR_MSG_BYTES: usize = 16 * 1024;
+
+/// Encode an error frame, truncating the message (on a char boundary)
+/// to [`MAX_ERROR_MSG_BYTES`]. Total infallibility matters more than
+/// the message tail: this runs on the failure path, where a second
+/// failure would turn a positioned error into silence.
+pub(crate) fn error_frame_bytes(code: u32, msg: &str) -> Vec<u8> {
+    let mut end = msg.len().min(MAX_ERROR_MSG_BYTES);
+    while end > 0 && !msg.is_char_boundary(end) {
+        end -= 1;
+    }
+    let frame = ErrorFrame { code, msg: msg[..end].to_string() };
+    wire::encode_error(&frame)
+        .expect("bounded error messages always encode")
+}
+
+#[cfg(all(test, not(rtopk_model_check)))]
+mod tests {
+    use super::*;
+    use crate::coordinator::wire::{decode, Frame, ERR_REQUEST};
+
+    #[test]
+    fn error_frame_bytes_truncates_on_char_boundaries() {
+        // a message of multi-byte chars longer than the cap must not
+        // split a char (that would be invalid UTF-8 on the wire)
+        let long = "é".repeat(MAX_ERROR_MSG_BYTES);
+        let bytes = error_frame_bytes(ERR_REQUEST, &long);
+        match decode(&bytes).unwrap() {
+            Frame::Error(e) => {
+                assert_eq!(e.code, ERR_REQUEST);
+                assert!(e.msg.len() <= MAX_ERROR_MSG_BYTES);
+                assert!(e.msg.chars().all(|c| c == 'é'));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_roundtrip_through_gauges() {
+        let s = NetStats::default();
+        s.conn_opened();
+        s.conn_opened();
+        s.conn_closed();
+        s.frame_in();
+        s.frame_out();
+        s.decode_error();
+        s.set_shard_health(2, 1);
+        let g = s.gauges();
+        assert_eq!(g.open_connections, 1);
+        assert_eq!(g.frames_in, 1);
+        assert_eq!(g.frames_out, 1);
+        assert_eq!(g.decode_errors, 1);
+        assert_eq!(g.shards_alive, 2);
+        assert_eq!(g.shards_quarantined, 1);
+    }
+}

@@ -1,0 +1,907 @@
+//! `rtopk shard`: a frame router fanning client submits across N
+//! worker processes that each run `rtopk listen` on the same protocol.
+//!
+//! ## Allocation
+//!
+//! Weight-aware rendezvous hashing. A tenant with WDRR weight *w*
+//! (from `[tenants.<name>] weight`) is spread across its top
+//! `min(w, alive_shards)` shards by rendezvous rank — heavier tenants
+//! get more parallel capacity, lighter tenants stay sticky (warm plan
+//! caches, fewer cross-shard moves) — and successive requests
+//! round-robin inside that allocated set. Rendezvous ranking keeps
+//! allocations stable when a shard dies: only the dead shard's slice
+//! of traffic moves.
+//!
+//! ## Correlation
+//!
+//! Workers answer each connection's submits in FIFO order (the
+//! protocol contract), so the router keeps one FIFO of
+//! `(client, seq)` per upstream connection and matches replies by
+//! position. Client replies are re-sequenced per client — a reply that
+//! overtakes an earlier request routed to a slower shard waits in a
+//! reorder buffer so each client still sees strict FIFO.
+//!
+//! ## Failure
+//!
+//! A dead shard (I/O failure, EOF, protocol violation, or
+//! health-probe quarantine — see [`crate::net::health`]) fails every
+//! request in flight on it with a **positioned** error frame naming
+//! the shard and the request's position, never silence. The shard is
+//! quarantined and the prober keeps retrying; a successful ping
+//! restores it to the allocation pool.
+
+use crate::config::NetConfig;
+use crate::coordinator::wire::{
+    self, Frame, FrameDecoder, ERR_OVERLOAD, ERR_PROTOCOL, ERR_SHARD_DOWN,
+};
+use crate::net::health::{spawn_prober, ShardTable};
+use crate::net::reactor::{new_reactor, os_handle, Event, Reactor, READ, WRITE};
+use crate::net::{error_frame_bytes, NetStats};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
+use std::time::Duration;
+
+const TICK: Duration = Duration::from_millis(1);
+const LISTENER_TOKEN: usize = 0;
+/// Upstream shard i owns token `UP_BASE + i`; clients count up from 1.
+const UP_BASE: usize = usize::MAX - (1 << 20);
+
+/// Per-shard forwarding counters (observability; the bench's
+/// per-shard JSON section reads these).
+#[derive(Debug, Default)]
+pub struct ShardCounters {
+    pub forwarded: AtomicU64,
+    pub shard_down_errors: AtomicU64,
+}
+
+/// A running shard router.
+pub struct RouterHandle {
+    addr: SocketAddr,
+    stats: Arc<NetStats>,
+    table: Arc<ShardTable>,
+    counters: Arc<Vec<ShardCounters>>,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.stats.clone()
+    }
+
+    /// Per-shard `(addr, forwarded, shard_down_errors)` counters.
+    pub fn shard_counters(&self) -> Vec<(String, u64, u64)> {
+        self.table
+            .addrs
+            .iter()
+            .zip(self.counters.iter())
+            .map(|(a, c)| {
+                (
+                    a.clone(),
+                    c.forwarded.load(Ordering::Relaxed),
+                    c.shard_down_errors.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    /// Stop the loop and the health prober; join both.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Block the calling thread for the router's lifetime.
+    pub fn join(mut self) {
+        if let Some(t) = self.threads.drain(..).next() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// FNV-1a, the rendezvous hash base. Stable across runs and platforms
+/// (allocation must not depend on process-random hasher seeds).
+fn fnv1a(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Rendezvous score of (tenant, shard).
+fn rendezvous(tenant: &str, shard: &str) -> u64 {
+    fnv1a(shard.as_bytes(), fnv1a(tenant.as_bytes(), 0))
+}
+
+/// Pick a shard for one request: rank the alive shards by rendezvous
+/// score for this tenant, keep the top `min(weight, alive)` of them,
+/// round-robin inside that set via `counter`. Pure — unit-tested
+/// without sockets.
+pub fn allocate_shard(
+    tenant: &str,
+    weight: u64,
+    addrs: &[String],
+    alive: &[bool],
+    counter: u64,
+) -> Option<usize> {
+    let mut ranked: Vec<(u64, usize)> = addrs
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| alive.get(i).copied().unwrap_or(false))
+        .map(|(i, a)| (rendezvous(tenant, a), i))
+        .collect();
+    if ranked.is_empty() {
+        return None;
+    }
+    ranked.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let fan = (weight.max(1) as usize).min(ranked.len());
+    Some(ranked[(counter % fan as u64) as usize].1)
+}
+
+/// One client connection's routing state.
+struct Client {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    /// next sequence number to assign to a submit
+    next_seq: u64,
+    /// next sequence number owed to the socket (FIFO contract)
+    next_deliver: u64,
+    /// replies that overtook an earlier in-flight request
+    reorder: HashMap<u64, Vec<u8>>,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    closing: bool,
+    dead: bool,
+    interest: u8,
+}
+
+impl Client {
+    fn new(stream: TcpStream) -> Client {
+        Client {
+            stream,
+            decoder: FrameDecoder::new(),
+            next_seq: 0,
+            next_deliver: 0,
+            reorder: HashMap::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            closing: false,
+            dead: false,
+            interest: READ,
+        }
+    }
+
+    fn outbuf_len(&self) -> usize {
+        self.outbuf.len() - self.outpos
+    }
+
+    fn inflight(&self) -> u64 {
+        self.next_seq - self.next_deliver - self.reorder.len() as u64
+    }
+
+    /// Sequenced delivery: park the reply until its turn, then drain
+    /// every consecutive reply that was waiting behind it.
+    fn deliver(&mut self, seq: u64, bytes: Vec<u8>, stats: &NetStats) {
+        self.reorder.insert(seq, bytes);
+        while let Some(b) = self.reorder.remove(&self.next_deliver) {
+            self.outbuf.extend_from_slice(&b);
+            self.next_deliver += 1;
+            stats.frame_out();
+        }
+    }
+
+    fn wants_read(&self, limits: &Limits) -> bool {
+        !self.closing
+            && !self.dead
+            && self.decoder.buffered() < limits.read_buf
+            && self.outbuf_len() < limits.write_buf
+            && (self.inflight() as usize) < limits.max_inflight
+    }
+
+    fn wants_write(&self) -> bool {
+        !self.dead && self.outbuf_len() > 0
+    }
+
+    fn finished(&self) -> bool {
+        self.dead || (self.closing && self.outbuf_len() == 0)
+    }
+}
+
+/// One worker process the router multiplexes onto.
+struct Upstream {
+    addr: String,
+    stream: Option<TcpStream>,
+    decoder: FrameDecoder,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    /// submits forwarded and not yet answered, FIFO — workers answer
+    /// per-connection in order, so position is the correlation key
+    pending: VecDeque<(usize, u64)>,
+}
+
+impl Upstream {
+    fn outbuf_len(&self) -> usize {
+        self.outbuf.len() - self.outpos
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Limits {
+    read_buf: usize,
+    write_buf: usize,
+    max_inflight: usize,
+    max_connections: usize,
+    connect_timeout: Duration,
+}
+
+/// Bind the router and spawn its loop + health prober.
+///
+/// `weights` maps tenant name → WDRR weight (from
+/// `config::TenantsConfig`); unknown tenants get weight 1.
+pub fn serve_router(
+    cfg: &NetConfig,
+    weights: HashMap<String, u64>,
+) -> io::Result<RouterHandle> {
+    if cfg.shards.is_empty() {
+        return Err(io::Error::new(
+            ErrorKind::InvalidInput,
+            "[net] shards is empty: the router needs at least one worker \
+             address",
+        ));
+    }
+    let listener = TcpListener::bind(&cfg.bind)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let stats = Arc::new(NetStats::default());
+    let table = Arc::new(ShardTable::new(cfg.shards.clone()));
+    let counters: Arc<Vec<ShardCounters>> = Arc::new(
+        cfg.shards.iter().map(|_| ShardCounters::default()).collect(),
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let prober = spawn_prober(
+        table.clone(),
+        stats.clone(),
+        Duration::from_millis(cfg.health_cadence_ms.max(1)),
+        Duration::from_millis(cfg.health_timeout_ms.max(1)),
+        stop.clone(),
+    );
+    let limits = Limits {
+        read_buf: cfg.read_buf_bytes.max(1),
+        write_buf: cfg.write_buf_bytes.max(1),
+        max_inflight: cfg.max_inflight_per_conn.max(1),
+        max_connections: cfg.max_connections.max(1),
+        connect_timeout: Duration::from_millis(cfg.health_timeout_ms.max(1)),
+    };
+    let loop_ctx = (
+        table.clone(),
+        counters.clone(),
+        stats.clone(),
+        stop.clone(),
+        weights,
+    );
+    let thread = std::thread::Builder::new()
+        .name("rtopk-shard".to_string())
+        .spawn(move || {
+            let (table, counters, stats, stop, weights) = loop_ctx;
+            router_loop(
+                listener, table, counters, stats, stop, weights, limits,
+            )
+        })?;
+    Ok(RouterHandle {
+        addr,
+        stats,
+        table,
+        counters,
+        stop,
+        threads: vec![thread, prober],
+    })
+}
+
+/// Nonblocking read into a frame decoder, bounded by `cap` buffered
+/// bytes. Returns `false` when the transport died (EOF or hard error).
+fn pull(stream: &mut TcpStream, dec: &mut FrameDecoder, cap: usize) -> bool {
+    let mut chunk = [0u8; 16 * 1024];
+    while dec.buffered() < cap {
+        match stream.read(&mut chunk) {
+            Ok(0) => return false,
+            Ok(n) => dec.feed(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    true
+}
+
+/// Nonblocking flush of an out-buffer. Returns `false` on transport
+/// death; compacts the flushed prefix.
+fn flush(stream: &mut TcpStream, outbuf: &mut Vec<u8>, outpos: &mut usize) -> bool {
+    while *outpos < outbuf.len() {
+        match stream.write(&outbuf[*outpos..]) {
+            Ok(0) => return false,
+            Ok(n) => *outpos += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    if *outpos == outbuf.len() {
+        outbuf.clear();
+        *outpos = 0;
+    } else if *outpos > 64 * 1024 {
+        outbuf.drain(..*outpos);
+        *outpos = 0;
+    }
+    true
+}
+
+#[allow(clippy::too_many_arguments)]
+fn router_loop(
+    listener: TcpListener,
+    table: Arc<ShardTable>,
+    counters: Arc<Vec<ShardCounters>>,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    weights: HashMap<String, u64>,
+    limits: Limits,
+) {
+    let mut reactor = new_reactor();
+    if reactor
+        .register(os_handle(&listener), LISTENER_TOKEN, READ)
+        .is_err()
+    {
+        return;
+    }
+    let mut clients: HashMap<usize, Client> = HashMap::new();
+    let mut next_token = LISTENER_TOKEN + 1;
+    let mut upstreams: Vec<Upstream> = table
+        .addrs
+        .iter()
+        .map(|a| Upstream {
+            addr: a.clone(),
+            stream: None,
+            decoder: FrameDecoder::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            pending: VecDeque::new(),
+        })
+        .collect();
+    let mut rr: HashMap<String, u64> = HashMap::new();
+    let mut events: Vec<Event> = Vec::new();
+    // (client, seq, frame bytes) replies produced this tick
+    let mut deliveries: Vec<(usize, u64, Vec<u8>)> = Vec::new();
+
+    while !stop.load(Ordering::Acquire) {
+        if reactor.wait(TICK, &mut events).is_err() {
+            break;
+        }
+        for ev in &events {
+            if ev.token == LISTENER_TOKEN {
+                accept_clients(
+                    &listener,
+                    &mut clients,
+                    &mut next_token,
+                    reactor.as_mut(),
+                    &stats,
+                    limits,
+                );
+            } else if ev.token >= UP_BASE {
+                let idx = ev.token - UP_BASE;
+                if idx >= upstreams.len() {
+                    continue;
+                }
+                let up = &mut upstreams[idx];
+                let mut died = false;
+                if let Some(stream) = up.stream.as_mut() {
+                    if ev.readable && !pull(stream, &mut up.decoder, limits.read_buf)
+                    {
+                        died = true;
+                    }
+                    if ev.writable
+                        && !flush(stream, &mut up.outbuf, &mut up.outpos)
+                    {
+                        died = true;
+                    }
+                }
+                if died {
+                    fail_shard(
+                        idx,
+                        &mut upstreams[idx],
+                        &table,
+                        &counters,
+                        reactor.as_mut(),
+                        &mut deliveries,
+                    );
+                }
+            } else if let Some(c) = clients.get_mut(&ev.token) {
+                if ev.readable && !pull(&mut c.stream, &mut c.decoder, limits.read_buf)
+                {
+                    c.dead = true;
+                }
+                if ev.writable
+                    && !flush(&mut c.stream, &mut c.outbuf, &mut c.outpos)
+                {
+                    c.dead = true;
+                }
+            }
+        }
+
+        // health-probe quarantine with an open upstream connection:
+        // treat exactly like an observed I/O death so the shard's
+        // in-flight requests get their positioned errors now
+        let alive = table.alive();
+        for idx in 0..upstreams.len() {
+            if !alive[idx]
+                && (upstreams[idx].stream.is_some()
+                    || !upstreams[idx].pending.is_empty())
+            {
+                fail_shard(
+                    idx,
+                    &mut upstreams[idx],
+                    &table,
+                    &counters,
+                    reactor.as_mut(),
+                    &mut deliveries,
+                );
+            }
+        }
+
+        // decode upstream replies and correlate by FIFO position
+        for idx in 0..upstreams.len() {
+            let up = &mut upstreams[idx];
+            if up.stream.is_none() {
+                continue;
+            }
+            let mut broken = false;
+            loop {
+                match up.decoder.next_with_bytes() {
+                    Ok(Some((frame, bytes))) => match frame {
+                        Frame::Result(_) | Frame::Error(_) => {
+                            match up.pending.pop_front() {
+                                Some((tok, seq)) => {
+                                    deliveries.push((tok, seq, bytes))
+                                }
+                                // a reply with nothing outstanding:
+                                // the worker broke the FIFO contract
+                                None => {
+                                    broken = true;
+                                    break;
+                                }
+                            }
+                        }
+                        _ => {
+                            broken = true;
+                            break;
+                        }
+                    },
+                    Ok(None) => break,
+                    Err(_) => {
+                        stats.decode_error();
+                        broken = true;
+                        break;
+                    }
+                }
+            }
+            if broken {
+                fail_shard(
+                    idx,
+                    &mut upstreams[idx],
+                    &table,
+                    &counters,
+                    reactor.as_mut(),
+                    &mut deliveries,
+                );
+            }
+        }
+
+        // decode client frames and route them
+        let mut routed: Vec<(usize, u64, String, Vec<u8>)> = Vec::new();
+        for (&tok, c) in clients.iter_mut() {
+            loop {
+                if c.closing
+                    || c.dead
+                    || (c.inflight() as usize) >= limits.max_inflight
+                    || c.outbuf_len() >= limits.write_buf
+                {
+                    break;
+                }
+                match c.decoder.next_with_bytes() {
+                    Ok(Some((frame, bytes))) => {
+                        stats.frame_in();
+                        match frame {
+                            Frame::Submit(req) => {
+                                let seq = c.next_seq;
+                                c.next_seq += 1;
+                                routed.push((
+                                    tok,
+                                    seq,
+                                    req.tenant.as_str().to_string(),
+                                    bytes,
+                                ));
+                            }
+                            Frame::Ping(nonce) => {
+                                c.outbuf
+                                    .extend_from_slice(&wire::encode_pong(nonce));
+                                stats.frame_out();
+                            }
+                            _ => {
+                                c.outbuf.extend_from_slice(&error_frame_bytes(
+                                    ERR_PROTOCOL,
+                                    "clients send submit (1) or ping (4) \
+                                     frames only",
+                                ));
+                                stats.frame_out();
+                                c.closing = true;
+                            }
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        stats.decode_error();
+                        c.outbuf.extend_from_slice(&error_frame_bytes(
+                            ERR_PROTOCOL,
+                            &format!("undecodable frame: {e}"),
+                        ));
+                        stats.frame_out();
+                        c.closing = true;
+                    }
+                }
+            }
+        }
+        for (tok, seq, tenant, bytes) in routed {
+            let alive = table.alive();
+            let weight = weights.get(&tenant).copied().unwrap_or(1);
+            let counter = rr.entry(tenant.clone()).or_insert(0);
+            let pick =
+                allocate_shard(&tenant, weight, &table.addrs, &alive, *counter);
+            *counter += 1;
+            match pick {
+                None => deliveries.push((
+                    tok,
+                    seq,
+                    error_frame_bytes(
+                        ERR_SHARD_DOWN,
+                        &format!(
+                            "request #{seq}: no alive shard (all {} \
+                             quarantined)",
+                            table.addrs.len()
+                        ),
+                    ),
+                )),
+                Some(idx) => {
+                    if ensure_connected(
+                        idx,
+                        &mut upstreams[idx],
+                        &table,
+                        reactor.as_mut(),
+                        limits,
+                    ) {
+                        let up = &mut upstreams[idx];
+                        up.outbuf.extend_from_slice(&bytes);
+                        up.pending.push_back((tok, seq));
+                        counters[idx].forwarded.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        counters[idx]
+                            .shard_down_errors
+                            .fetch_add(1, Ordering::Relaxed);
+                        deliveries.push((
+                            tok,
+                            seq,
+                            error_frame_bytes(
+                                ERR_SHARD_DOWN,
+                                &format!(
+                                    "request #{seq}: shard {} is unreachable",
+                                    table.addrs[idx]
+                                ),
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+
+        // hand replies (and failure frames) to their clients in
+        // sequence order
+        for (tok, seq, bytes) in deliveries.drain(..) {
+            if let Some(c) = clients.get_mut(&tok) {
+                // a vanished client's replies are dropped on the floor
+                c.deliver(seq, bytes, &stats);
+            }
+        }
+
+        // opportunistic flushes + interest maintenance
+        for idx in 0..upstreams.len() {
+            let up = &mut upstreams[idx];
+            let mut died = false;
+            if let Some(stream) = up.stream.as_mut() {
+                if up.outpos < up.outbuf.len()
+                    && !flush(stream, &mut up.outbuf, &mut up.outpos)
+                {
+                    died = true;
+                }
+            }
+            if died {
+                fail_shard(
+                    idx,
+                    &mut upstreams[idx],
+                    &table,
+                    &counters,
+                    reactor.as_mut(),
+                    &mut deliveries,
+                );
+                continue;
+            }
+            let up = &mut upstreams[idx];
+            if let Some(stream) = up.stream.as_ref() {
+                let want = READ
+                    | (if up.outbuf_len() > 0 { WRITE } else { 0 });
+                let _ = reactor.reregister(
+                    os_handle(stream),
+                    UP_BASE + idx,
+                    want,
+                );
+            }
+        }
+        // late failure frames from the flush pass above
+        for (tok, seq, bytes) in deliveries.drain(..) {
+            if let Some(c) = clients.get_mut(&tok) {
+                c.deliver(seq, bytes, &stats);
+            }
+        }
+        let mut finished: Vec<usize> = Vec::new();
+        for (&tok, c) in clients.iter_mut() {
+            if c.wants_write() && !flush(&mut c.stream, &mut c.outbuf, &mut c.outpos)
+            {
+                c.dead = true;
+            }
+            if c.finished() {
+                finished.push(tok);
+                continue;
+            }
+            let want = (if c.wants_read(&limits) { READ } else { 0 })
+                | (if c.wants_write() { WRITE } else { 0 });
+            if want != c.interest
+                && reactor
+                    .reregister(os_handle(&c.stream), tok, want)
+                    .is_ok()
+            {
+                c.interest = want;
+            }
+        }
+        for tok in finished {
+            if let Some(c) = clients.remove(&tok) {
+                let _ = reactor.deregister(os_handle(&c.stream));
+                stats.conn_closed();
+            }
+        }
+    }
+    for (_, c) in clients.drain() {
+        let _ = reactor.deregister(os_handle(&c.stream));
+        stats.conn_closed();
+    }
+    for up in &mut upstreams {
+        if let Some(s) = up.stream.take() {
+            let _ = reactor.deregister(os_handle(&s));
+        }
+    }
+    let _ = reactor.deregister(os_handle(&listener));
+}
+
+fn accept_clients(
+    listener: &TcpListener,
+    clients: &mut HashMap<usize, Client>,
+    next_token: &mut usize,
+    reactor: &mut dyn Reactor,
+    stats: &Arc<NetStats>,
+    limits: Limits,
+) {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                if clients.len() >= limits.max_connections {
+                    let bytes = error_frame_bytes(
+                        ERR_OVERLOAD,
+                        &format!(
+                            "router at max_connections ({})",
+                            limits.max_connections
+                        ),
+                    );
+                    let _ = stream.write_all(&bytes);
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let token = *next_token;
+                *next_token += 1;
+                if reactor.register(os_handle(&stream), token, READ).is_err() {
+                    continue;
+                }
+                clients.insert(token, Client::new(stream));
+                stats.conn_opened();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Lazily (re)connect an upstream. Blocking connect with the health
+/// timeout as the bound: a short, rare stall when a shard first sees
+/// traffic — after that the prober's quarantine keeps dead shards out
+/// of the allocation pool entirely.
+fn ensure_connected(
+    idx: usize,
+    up: &mut Upstream,
+    table: &ShardTable,
+    reactor: &mut dyn Reactor,
+    limits: Limits,
+) -> bool {
+    if up.stream.is_some() {
+        return true;
+    }
+    let sockaddr = match up
+        .addr
+        .to_socket_addrs()
+        .ok()
+        .and_then(|mut a| a.next())
+    {
+        Some(a) => a,
+        None => {
+            table.mark_dead(idx);
+            return false;
+        }
+    };
+    match TcpStream::connect_timeout(&sockaddr, limits.connect_timeout) {
+        Ok(stream) => {
+            if stream.set_nonblocking(true).is_err() {
+                table.mark_dead(idx);
+                return false;
+            }
+            let _ = stream.set_nodelay(true);
+            if reactor
+                .register(os_handle(&stream), UP_BASE + idx, READ)
+                .is_err()
+            {
+                table.mark_dead(idx);
+                return false;
+            }
+            up.decoder = FrameDecoder::new();
+            up.outbuf.clear();
+            up.outpos = 0;
+            up.stream = Some(stream);
+            true
+        }
+        Err(_) => {
+            table.mark_dead(idx);
+            false
+        }
+    }
+}
+
+/// A shard died: positioned error frames for everything in flight on
+/// it, quarantine, and teardown of the multiplexed connection. The
+/// prober's next successful ping restores the shard.
+fn fail_shard(
+    idx: usize,
+    up: &mut Upstream,
+    table: &ShardTable,
+    counters: &[ShardCounters],
+    reactor: &mut dyn Reactor,
+    deliveries: &mut Vec<(usize, u64, Vec<u8>)>,
+) {
+    if let Some(stream) = up.stream.take() {
+        let _ = reactor.deregister(os_handle(&stream));
+    }
+    table.mark_dead(idx);
+    let total = up.pending.len();
+    for (pos, (tok, seq)) in up.pending.drain(..).enumerate() {
+        counters[idx].shard_down_errors.fetch_add(1, Ordering::Relaxed);
+        deliveries.push((
+            tok,
+            seq,
+            error_frame_bytes(
+                ERR_SHARD_DOWN,
+                &format!(
+                    "request #{seq}: shard {} failed with the request in \
+                     flight (position {} of {total} on that shard); the \
+                     shard is quarantined until a health probe succeeds",
+                    up.addr,
+                    pos + 1,
+                ),
+            ),
+        ));
+    }
+    up.decoder = FrameDecoder::new();
+    up.outbuf.clear();
+    up.outpos = 0;
+}
+
+#[cfg(all(test, not(rtopk_model_check)))]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect()
+    }
+
+    #[test]
+    fn weight_one_tenants_are_sticky() {
+        let a = addrs(4);
+        let alive = vec![true; 4];
+        let first = allocate_shard("t", 1, &a, &alive, 0).unwrap();
+        for ctr in 1..32 {
+            assert_eq!(
+                allocate_shard("t", 1, &a, &alive, ctr),
+                Some(first),
+                "weight-1 tenant must stay on its rendezvous winner"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_spreads_across_exactly_weight_shards() {
+        let a = addrs(4);
+        let alive = vec![true; 4];
+        let mut seen = std::collections::HashSet::new();
+        for ctr in 0..32 {
+            seen.insert(allocate_shard("heavy", 3, &a, &alive, ctr).unwrap());
+        }
+        assert_eq!(seen.len(), 3, "weight 3 → exactly 3 shards: {seen:?}");
+        // weight past the shard count uses everything
+        let mut all = std::collections::HashSet::new();
+        for ctr in 0..32 {
+            all.insert(allocate_shard("huge", 100, &a, &alive, ctr).unwrap());
+        }
+        assert_eq!(all.len(), 4);
+    }
+
+    #[test]
+    fn dead_shards_are_excluded_and_allocation_is_stable_otherwise() {
+        let a = addrs(4);
+        let alive = vec![true; 4];
+        let sticky = allocate_shard("t", 1, &a, &alive, 0).unwrap();
+        // kill a shard the tenant does not use: allocation unchanged
+        let mut partial = vec![true; 4];
+        let other = (sticky + 1) % 4;
+        partial[other] = false;
+        assert_eq!(allocate_shard("t", 1, &a, &partial, 0), Some(sticky));
+        // kill the tenant's shard: it moves, deterministically
+        let mut gone = vec![true; 4];
+        gone[sticky] = false;
+        let moved = allocate_shard("t", 1, &a, &gone, 0).unwrap();
+        assert_ne!(moved, sticky);
+        assert_eq!(allocate_shard("t", 1, &a, &gone, 5), Some(moved));
+        // nothing alive: no allocation
+        assert_eq!(allocate_shard("t", 1, &a, &[false; 4], 0), None);
+    }
+
+    #[test]
+    fn different_tenants_land_on_different_rendezvous_winners() {
+        // not guaranteed per pair, but across many tenants the
+        // rendezvous ranking must actually spread load
+        let a = addrs(4);
+        let alive = vec![true; 4];
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..64 {
+            let t = format!("tenant-{i}");
+            seen.insert(allocate_shard(&t, 1, &a, &alive, 0).unwrap());
+        }
+        assert_eq!(seen.len(), 4, "64 tenants must cover all 4 shards");
+    }
+}

@@ -1,0 +1,235 @@
+//! `rtopk listen`: the readiness-loop TCP server feeding the in-process
+//! [`TopKService`].
+//!
+//! One thread owns everything: the listener, every accepted
+//! connection's state machine, and the reactor. Request execution is
+//! the service's worker pool; the loop only shuttles bytes, so a 1 ms
+//! reactor tick bounds the added reply latency. Per-connection
+//! interest follows the state machine: READ drops while a buffer is at
+//! its cap (backpressure), WRITE is registered only while the write
+//! buffer holds bytes (level-triggered POLLOUT would otherwise spin
+//! the loop hot).
+
+use crate::config::NetConfig;
+use crate::coordinator::wire::ERR_OVERLOAD;
+use crate::coordinator::TopKService;
+use crate::net::conn::{ConnLimits, Connection};
+use crate::net::reactor::{new_reactor, os_handle, Event, READ, WRITE};
+use crate::net::{error_frame_bytes, NetStats};
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Reactor tick: the loop wakes at least this often to pump completed
+/// tickets toward their sockets and to observe the shutdown flag.
+const TICK: Duration = Duration::from_millis(1);
+
+const LISTENER_TOKEN: usize = 0;
+
+/// A running server. Dropping the handle leaks the loop thread;
+/// call [`ServerHandle::shutdown`] for an orderly stop (tests and the
+/// bench also use it as an abrupt "kill this worker": connections are
+/// dropped, not drained).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves the port when `[net] bind` used 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> Arc<NetStats> {
+        self.stats.clone()
+    }
+
+    /// Stop the loop and join its thread. In-flight requests are
+    /// cancelled via the connection drop path — from a client's view
+    /// this is indistinguishable from a killed worker process.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Block the calling thread for the server's lifetime (the CLI
+    /// foreground path).
+    pub fn join(mut self) {
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind, register the net probe on the service's telemetry hub, and
+/// spawn the socket loop.
+pub fn serve(
+    svc: Arc<TopKService>,
+    cfg: &NetConfig,
+) -> io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.bind)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let stats = Arc::new(NetStats::default());
+    svc.metrics().set_net_probe(stats.clone());
+    let stop = Arc::new(AtomicBool::new(false));
+    let loop_stats = stats.clone();
+    let loop_stop = stop.clone();
+    let cfg = cfg.clone();
+    let thread = std::thread::Builder::new()
+        .name("rtopk-net".to_string())
+        .spawn(move || socket_loop(listener, svc, cfg, loop_stats, loop_stop))?;
+    Ok(ServerHandle { addr, stats, stop, thread: Some(thread) })
+}
+
+/// One accepted connection as the loop tracks it.
+struct Tracked {
+    stream: TcpStream,
+    conn: Connection,
+    /// interest currently registered with the reactor
+    interest: u8,
+}
+
+fn socket_loop(
+    listener: TcpListener,
+    svc: Arc<TopKService>,
+    cfg: NetConfig,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+) {
+    let limits = ConnLimits {
+        read_buf_bytes: cfg.read_buf_bytes.max(1),
+        write_buf_bytes: cfg.write_buf_bytes.max(1),
+        max_inflight: cfg.max_inflight_per_conn.max(1),
+    };
+    let mut reactor = new_reactor();
+    if reactor
+        .register(os_handle(&listener), LISTENER_TOKEN, READ)
+        .is_err()
+    {
+        return;
+    }
+    let mut conns: HashMap<usize, Tracked> = HashMap::new();
+    let mut next_token = LISTENER_TOKEN + 1;
+    let mut events: Vec<Event> = Vec::new();
+
+    while !stop.load(Ordering::Acquire) {
+        if reactor.wait(TICK, &mut events).is_err() {
+            break;
+        }
+        for ev in &events {
+            if ev.token == LISTENER_TOKEN {
+                accept_ready(
+                    &listener, &svc, &stats, limits, &cfg, &mut conns,
+                    &mut next_token, reactor.as_mut(),
+                );
+            } else if let Some(t) = conns.get_mut(&ev.token) {
+                if ev.readable {
+                    t.conn.on_readable(&mut t.stream);
+                }
+                if ev.writable {
+                    t.conn.on_writable(&mut t.stream);
+                }
+            }
+        }
+        // every tick, every connection: tickets resolve on worker
+        // threads, not on socket readiness, so pumping cannot wait for
+        // an event
+        let mut finished: Vec<usize> = Vec::new();
+        for (&token, t) in conns.iter_mut() {
+            t.conn.pump();
+            if t.conn.wants_write() {
+                // opportunistic flush: most replies fit the socket
+                // buffer, no need to wait a tick for POLLOUT
+                t.conn.on_writable(&mut t.stream);
+            }
+            if t.conn.finished() {
+                finished.push(token);
+                continue;
+            }
+            let want = (if t.conn.wants_read() { READ } else { 0 })
+                | (if t.conn.wants_write() { WRITE } else { 0 });
+            if want != t.interest {
+                if reactor
+                    .reregister(os_handle(&t.stream), token, want)
+                    .is_ok()
+                {
+                    t.interest = want;
+                }
+            }
+        }
+        for token in finished {
+            if let Some(t) = conns.remove(&token) {
+                let _ = reactor.deregister(os_handle(&t.stream));
+                stats.conn_closed();
+                // dropping Tracked closes the socket and (via the
+                // Connection drop) cancels anything still in flight
+            }
+        }
+    }
+    // loop exit: deregister and drop everything; Connection::drop
+    // cancels remaining tickets so the service never waits on us
+    for (_, t) in conns.drain() {
+        let _ = reactor.deregister(os_handle(&t.stream));
+        stats.conn_closed();
+    }
+    let _ = reactor.deregister(os_handle(&listener));
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_ready(
+    listener: &TcpListener,
+    svc: &Arc<TopKService>,
+    stats: &Arc<NetStats>,
+    limits: ConnLimits,
+    cfg: &NetConfig,
+    conns: &mut HashMap<usize, Tracked>,
+    next_token: &mut usize,
+    reactor: &mut dyn crate::net::reactor::Reactor,
+) {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                if conns.len() >= cfg.max_connections.max(1) {
+                    // one best-effort overload frame, then close: an
+                    // answered refusal beats a silent RST
+                    let bytes = error_frame_bytes(
+                        ERR_OVERLOAD,
+                        &format!(
+                            "server at max_connections ({})",
+                            cfg.max_connections
+                        ),
+                    );
+                    let _ = stream.write_all(&bytes);
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                let token = *next_token;
+                *next_token += 1;
+                if reactor.register(os_handle(&stream), token, READ).is_err() {
+                    continue;
+                }
+                conns.insert(token, Tracked {
+                    stream,
+                    conn: Connection::new(svc.clone(), stats.clone(), limits),
+                    interest: READ,
+                });
+                stats.conn_opened();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! Loopback end-to-end suite for the network serving layer: real TCP
+//! sockets against `net::serve` and `net::serve_router`, exercising the
+//! protocol contract (FIFO replies, positioned errors), the
+//! backpressure chain, connection-scoped cancellation, and shard-death
+//! accountability.
+//!
+//! Gated off the model-check cfg: these tests open real sockets and
+//! spawn real I/O threads, which the model checker's virtualized
+//! primitives cannot schedule.
+#![cfg(not(rtopk_model_check))]
+
+use rtopk::config::{NetConfig, ServeConfig, TenantConfig, TenantsConfig};
+use rtopk::coordinator::wire::{
+    self, ErrorFrame, Frame, FrameDecoder, ERR_REQUEST, ERR_SHARD_DOWN,
+};
+use rtopk::coordinator::{SubmitRequest, TopKService};
+use rtopk::net;
+use rtopk::topk::types::Mode;
+use rtopk::topk::verify::is_exact;
+use rtopk::util::matrix::RowMatrix;
+use rtopk::util::rng::Rng;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn loopback() -> NetConfig {
+    NetConfig { bind: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+fn cpu_service(cfg: &ServeConfig) -> Arc<TopKService> {
+    Arc::new(TopKService::cpu_only(cfg).expect("cpu-only service"))
+}
+
+fn submit_frame(x: RowMatrix, k: usize, mode: Mode) -> Vec<u8> {
+    wire::encode(&Frame::Submit(SubmitRequest::new(x, k).mode(mode)))
+        .expect("encode submit")
+}
+
+/// Read exactly `n` reply frames off a blocking stream.
+fn read_replies(stream: &mut TcpStream, n: usize) -> Vec<Frame> {
+    let mut dec = FrameDecoder::new();
+    let mut out = Vec::with_capacity(n);
+    let mut chunk = [0u8; 16 * 1024];
+    while out.len() < n {
+        match dec.next().expect("well-formed reply stream") {
+            Some(f) => out.push(f),
+            None => {
+                let read = stream.read(&mut chunk).expect("read replies");
+                assert!(read > 0, "peer closed with {} replies owed", n - out.len());
+                dec.feed(&chunk[..read]);
+            }
+        }
+    }
+    out
+}
+
+/// Spin (bounded) until `pred` holds — socket loops run on 1 ms ticks,
+/// so cross-thread effects land shortly after the wire does.
+fn eventually(what: &str, mut pred: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !pred() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn socket_round_trip_returns_fifo_exact_results() {
+    let svc = cpu_service(&ServeConfig { workers: 1, ..Default::default() });
+    let server = net::serve(svc.clone(), &loopback()).expect("serve");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+
+    let mut rng = Rng::seed_from(7);
+    let mats: Vec<RowMatrix> =
+        (0..3).map(|_| RowMatrix::random_normal(8, 32, &mut rng)).collect();
+    for x in &mats {
+        stream
+            .write_all(&submit_frame(x.clone(), 4, Mode::EXACT))
+            .expect("send");
+    }
+    let replies = read_replies(&mut stream, 3);
+    for (i, (frame, x)) in replies.into_iter().zip(&mats).enumerate() {
+        match frame {
+            Frame::Result(res) => {
+                assert!(is_exact(x, &res), "reply #{i} must be exact top-k");
+            }
+            other => panic!("reply #{i}: expected a result, got {other:?}"),
+        }
+    }
+    let gauges = server.stats().gauges();
+    assert_eq!(gauges.frames_in, 3);
+    assert_eq!(gauges.frames_out, 3);
+    assert_eq!(gauges.decode_errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn approx_mode_round_trips_over_the_wire() {
+    // the tag-3 (recall contract) mode variant must survive the full
+    // network path: encode -> decode -> admission -> plan -> reply
+    let svc = cpu_service(&ServeConfig { workers: 1, ..Default::default() });
+    let server = net::serve(svc.clone(), &loopback()).expect("serve");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+
+    let mut rng = Rng::seed_from(11);
+    let x = RowMatrix::random_normal(32, 128, &mut rng);
+    stream
+        .write_all(&submit_frame(x, 16, Mode::Approx { recall_milli: 950 }))
+        .expect("send");
+    match read_replies(&mut stream, 1).remove(0) {
+        Frame::Result(res) => {
+            assert_eq!(res.k, 16);
+            assert_eq!(res.indices.len(), 32 * 16);
+        }
+        other => panic!("expected a result, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn invalid_request_gets_positioned_error_and_connection_survives() {
+    let svc = cpu_service(&ServeConfig { workers: 1, ..Default::default() });
+    let server = net::serve(svc.clone(), &loopback()).expect("serve");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+
+    let mut rng = Rng::seed_from(13);
+    // k > cols: refused at validation with a positioned error frame
+    let bad = RowMatrix::random_normal(4, 8, &mut rng);
+    let good = RowMatrix::random_normal(4, 8, &mut rng);
+    stream.write_all(&submit_frame(bad, 64, Mode::EXACT)).expect("send");
+    stream
+        .write_all(&submit_frame(good.clone(), 4, Mode::EXACT))
+        .expect("send");
+    let replies = read_replies(&mut stream, 2);
+    match &replies[0] {
+        Frame::Error(ErrorFrame { code, msg }) => {
+            assert_eq!(*code, ERR_REQUEST);
+            assert!(!msg.is_empty());
+        }
+        other => panic!("expected an error frame, got {other:?}"),
+    }
+    match &replies[1] {
+        Frame::Result(res) => assert!(is_exact(&good, res)),
+        other => panic!("connection must survive a bad request: {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn mid_frame_disconnect_cancels_in_flight_tickets() {
+    // a huge tile budget + long batching window parks the request in
+    // the batcher, so it is provably in flight when the client vanishes
+    let svc = cpu_service(&ServeConfig {
+        workers: 1,
+        max_batch_rows: 1 << 30,
+        max_wait_us: 5_000_000,
+        ..Default::default()
+    });
+    let server = net::serve(svc.clone(), &loopback()).expect("serve");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+
+    let mut rng = Rng::seed_from(17);
+    let a = RowMatrix::random_normal(8, 32, &mut rng);
+    let b = RowMatrix::random_normal(8, 32, &mut rng);
+    let frame_a = submit_frame(a, 4, Mode::EXACT);
+    let frame_b = submit_frame(b, 4, Mode::EXACT);
+    stream.write_all(&frame_a).expect("send a");
+    // half of frame B: the decoder must hold it as need-more, and the
+    // disconnect must cancel ticket A without a decode error
+    stream.write_all(&frame_b[..frame_b.len() / 2]).expect("send half b");
+    eventually("request admitted", || {
+        svc.load_snapshot().in_flight_requests >= 1
+    });
+    drop(stream);
+
+    eventually("disconnect cancels the parked ticket", || {
+        svc.load_snapshot().cancelled_total >= 1
+    });
+    let snap = svc.load_snapshot();
+    assert_eq!(snap.in_flight_rows, 0, "cancelled load must release quota");
+    assert_eq!(
+        server.stats().gauges().decode_errors,
+        0,
+        "a half frame at EOF is a dead transport, not a protocol error"
+    );
+    eventually("connection reaped", || {
+        server.stats().gauges().open_connections == 0
+    });
+    server.shutdown();
+}
+
+#[test]
+fn slow_reader_backpressure_bounds_decoding_and_preserves_replies() {
+    // small write buffer + small in-flight cap: a reader that stalls
+    // must stall the server's decode loop (bounded memory), and every
+    // reply must still arrive, in order, once the reader resumes
+    let rows = 64usize;
+    let cols = 512usize;
+    let k = 256usize;
+    let n = 20usize;
+    let svc = cpu_service(&ServeConfig { workers: 2, ..Default::default() });
+    let net_cfg = NetConfig {
+        bind: "127.0.0.1:0".to_string(),
+        write_buf_bytes: 64 * 1024, // one ~512 KiB result overflows it
+        max_inflight_per_conn: 2,
+        ..NetConfig::default()
+    };
+    let server = net::serve(svc.clone(), &net_cfg).expect("serve");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+
+    let mut rng = Rng::seed_from(19);
+    let mats: Vec<RowMatrix> = (0..n)
+        .map(|_| RowMatrix::random_normal(rows, cols, &mut rng))
+        .collect();
+    for x in &mats {
+        stream
+            .write_all(&submit_frame(x.clone(), k, Mode::EXACT))
+            .expect("send");
+    }
+    // stall: do not read. The server can hold at most the in-flight
+    // cap plus what the write cap admits; the rest stays undecoded.
+    eventually("decode pauses at the backpressure bound", || {
+        server.stats().gauges().frames_in >= 2
+    });
+    std::thread::sleep(Duration::from_millis(300));
+    let stalled = server.stats().gauges().frames_in;
+    assert!(
+        stalled < n as u64,
+        "backpressure must keep the server from decoding all {n} frames \
+         while the client refuses to read (decoded {stalled})"
+    );
+
+    // resume reading: everything arrives, FIFO, exact
+    let replies = read_replies(&mut stream, n);
+    for (i, (frame, x)) in replies.into_iter().zip(&mats).enumerate() {
+        match frame {
+            Frame::Result(res) => {
+                assert!(is_exact(x, &res), "reply #{i} exact after stall")
+            }
+            other => panic!("reply #{i}: {other:?}"),
+        }
+    }
+    assert_eq!(server.stats().gauges().frames_out, n as u64);
+    server.shutdown();
+}
+
+#[test]
+fn ping_is_answered_out_of_band() {
+    let svc = cpu_service(&ServeConfig { workers: 1, ..Default::default() });
+    let server = net::serve(svc.clone(), &loopback()).expect("serve");
+    let mut stream = TcpStream::connect(server.addr()).expect("connect");
+    stream.write_all(&wire::encode_ping(0xFEED)).expect("send ping");
+    match read_replies(&mut stream, 1).remove(0) {
+        Frame::Pong(nonce) => assert_eq!(nonce, 0xFEED),
+        other => panic!("expected pong, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn shard_death_yields_positioned_errors_for_every_in_flight_request() {
+    // two real workers behind a router; one is killed with requests
+    // parked on it (long batching window), and every affected request
+    // must get a positioned shard-down error naming the dead shard
+    let worker_cfg = ServeConfig {
+        workers: 1,
+        max_batch_rows: 1 << 30,
+        max_wait_us: 2_000_000,
+        ..Default::default()
+    };
+    let w1 = cpu_service(&worker_cfg);
+    let w2 = cpu_service(&worker_cfg);
+    let h1 = net::serve(w1.clone(), &loopback()).expect("worker 1");
+    let h2 = net::serve(w2.clone(), &loopback()).expect("worker 2");
+    let router_cfg = NetConfig {
+        bind: "127.0.0.1:0".to_string(),
+        shards: vec![h1.addr().to_string(), h2.addr().to_string()],
+        health_cadence_ms: 50,
+        health_timeout_ms: 100,
+        ..NetConfig::default()
+    };
+    // weight 2: the test tenant round-robins across both shards
+    let weights: HashMap<String, u64> =
+        [("spread".to_string(), 2u64)].into_iter().collect();
+    let router = net::serve_router(&router_cfg, weights).expect("router");
+    let mut stream = TcpStream::connect(router.addr()).expect("connect");
+
+    let mut rng = Rng::seed_from(23);
+    let n = 6usize;
+    for _ in 0..n {
+        let x = RowMatrix::random_normal(8, 32, &mut rng);
+        let req =
+            SubmitRequest::new(x, 4).mode(Mode::EXACT).tenant("spread");
+        stream
+            .write_all(&wire::encode(&Frame::Submit(req)).expect("encode"))
+            .expect("send");
+    }
+    // both workers hold half the wave parked; kill one abruptly
+    eventually("both shards loaded", || {
+        w1.load_snapshot().in_flight_requests >= 1
+            && w2.load_snapshot().in_flight_requests >= 1
+    });
+    let killed = h2.addr().to_string();
+    h2.shutdown();
+
+    let replies = read_replies(&mut stream, n);
+    let mut results = 0usize;
+    let mut positioned = 0usize;
+    for frame in replies {
+        match frame {
+            Frame::Result(_) => results += 1,
+            Frame::Error(ErrorFrame { code, msg }) => {
+                assert_eq!(code, ERR_SHARD_DOWN, "{msg}");
+                assert!(
+                    msg.contains(&killed),
+                    "error must name the dead shard: {msg}"
+                );
+                assert!(
+                    msg.contains("request #"),
+                    "error must be positioned: {msg}"
+                );
+                positioned += 1;
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    assert_eq!(results + positioned, n, "every request answered");
+    assert!(positioned >= 1, "the killed shard held in-flight requests");
+    assert!(results >= 1, "the surviving shard still answers");
+
+    // after quarantine, new requests still get answers (rerouted to the
+    // survivor — never silence, never a stall on the dead shard)
+    let x = RowMatrix::random_normal(8, 32, &mut rng);
+    let req = SubmitRequest::new(x, 4).mode(Mode::EXACT).tenant("spread");
+    stream
+        .write_all(&wire::encode(&Frame::Submit(req)).expect("encode"))
+        .expect("send after death");
+    match read_replies(&mut stream, 1).remove(0) {
+        Frame::Result(_) => {}
+        Frame::Error(ErrorFrame { code, .. }) => {
+            // acceptable only as a positioned shard-down if the router
+            // had already committed the request to the dead shard
+            assert_eq!(code, ERR_SHARD_DOWN);
+        }
+        other => panic!("unexpected reply: {other:?}"),
+    }
+
+    router.shutdown();
+    h1.shutdown();
+}
